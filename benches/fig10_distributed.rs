@@ -1,0 +1,25 @@
+//! Bench: regenerate **Figures 10 + 11** (multi-host multi-GPU, 2-16 GPUs
+//! on the Bridges-like cluster: D-IrGL TWC/ALB and Lux; plus the 16-GPU
+//! comp/comm breakdown) and time the sweep.
+//!
+//! Expected shape: D-IrGL beats Lux everywhere; ALB ~ TWC on uk-s (hub
+//! below THRESHOLD), clearly ahead on rmat21/22 and twitter-s; breakdown
+//! shows the win is in the computation component.
+
+use alb_graph::apps::App;
+use alb_graph::metrics::bench::time_runs;
+use alb_graph::repro::{self, ReproConfig};
+
+fn main() {
+    let rc = ReproConfig { scale_delta: -2, ..ReproConfig::default() };
+    let apps = [App::Bfs, App::Cc, App::Pr];
+    let mut fig10 = String::new();
+    let mut fig11 = String::new();
+    let stats = time_runs("fig10+11/cluster-sweep", 2, || {
+        fig10 = repro::fig10(&rc, &apps).expect("fig10").render();
+        fig11 = repro::fig11(&rc, &apps).expect("fig11").render();
+    });
+    println!("--- Figure 10 (2-16 GPUs, simulated ms) ---\n{fig10}");
+    println!("--- Figure 11 (16-GPU breakdown) ---\n{fig11}");
+    println!("{}", stats.report());
+}

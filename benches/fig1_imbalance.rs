@@ -1,0 +1,21 @@
+//! Bench: regenerate **Figure 1** (thread-block load imbalance under TWC:
+//! sssp/rmat rounds 0-2; bfs on road vs rmat; bfs vs pr) and time it.
+//!
+//! Expected shape: early sssp/bfs rounds on rmat show imbalance factors
+//! >> 1 (one block owns the hub); road-s and pr stay near 1.
+
+use alb_graph::metrics::bench::time_runs;
+use alb_graph::repro::{self, ReproConfig};
+
+fn main() {
+    let rc = ReproConfig { scale_delta: -1, ..ReproConfig::default() };
+    let mut rendered = String::new();
+    let stats = time_runs("fig1/block-imbalance", 3, || {
+        rendered = repro::fig1(&rc).expect("fig1");
+    });
+    // The raw per-block vectors are long; print the summary lines only.
+    for line in rendered.lines().filter(|l| !l.trim_start().starts_with("blocks:")) {
+        println!("{line}");
+    }
+    println!("{}", stats.report());
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate **Figure 5** (per-block load distribution, TWC vs ALB,
+//! for bfs/sssp on rmat, cc on road, pr on rmat) and time it.
+//!
+//! Expected shape: under TWC one block carries the hub's edges; under ALB
+//! the LB kernel's edges are spread evenly and the TWC kernel keeps only
+//! the small-degree remainder; road/pr identical under both.
+
+use alb_graph::metrics::bench::time_runs;
+use alb_graph::repro::{self, ReproConfig};
+
+fn main() {
+    let rc = ReproConfig { scale_delta: -1, ..ReproConfig::default() };
+    let mut rendered = String::new();
+    let stats = time_runs("fig5/twc-vs-alb-distribution", 3, || {
+        rendered = repro::fig5(&rc).expect("fig5");
+    });
+    for line in rendered.lines().filter(|l| !l.trim_start().starts_with("blocks:")) {
+        println!("{line}");
+    }
+    println!("{}", stats.report());
+}

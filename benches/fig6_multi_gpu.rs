@@ -1,0 +1,25 @@
+//! Bench: regenerate **Figures 6 + 7** (single-host multi-GPU, 1-6 GPUs:
+//! execution time for the four frameworks, plus the 6-GPU comp/comm
+//! breakdown) and time the sweep.
+//!
+//! Expected shape: ALB fastest at every GPU count on rmat (except pr);
+//! the Fig 7 breakdown shows TWC's time is computation-dominated and ALB
+//! cuts exactly that component.
+
+use alb_graph::apps::App;
+use alb_graph::metrics::bench::time_runs;
+use alb_graph::repro::{self, ReproConfig};
+
+fn main() {
+    let rc = ReproConfig { scale_delta: -2, ..ReproConfig::default() };
+    let apps = [App::Bfs, App::Sssp, App::Pr];
+    let mut fig6 = String::new();
+    let mut fig7 = String::new();
+    let stats = time_runs("fig6+7/multi-gpu-sweep", 2, || {
+        fig6 = repro::fig6(&rc, &apps).expect("fig6").render();
+        fig7 = repro::fig7(&rc, &apps).expect("fig7").render();
+    });
+    println!("--- Figure 6 (1-6 GPUs, simulated ms) ---\n{fig6}");
+    println!("--- Figure 7 (6-GPU breakdown) ---\n{fig7}");
+    println!("{}", stats.report());
+}

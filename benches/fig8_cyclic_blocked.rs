@@ -1,0 +1,21 @@
+//! Bench: regenerate **Figure 8** (ALB with cyclic vs blocked edge
+//! distribution) and time it.
+//!
+//! Expected shape: cyclic wins everywhere (paper: up to 4x) — the win
+//! emerges from the cache model (aligned binary-search trajectories +
+//! coalesced edge reads), not from a hard-coded factor.
+
+use alb_graph::apps::App;
+use alb_graph::metrics::bench::time_runs;
+use alb_graph::repro::{self, ReproConfig};
+
+fn main() {
+    let rc = ReproConfig { scale_delta: -1, ..ReproConfig::default() };
+    let apps = [App::Bfs, App::Sssp, App::Cc];
+    let mut rendered = String::new();
+    let stats = time_runs("fig8/cyclic-vs-blocked", 3, || {
+        rendered = repro::fig8(&rc, &apps).expect("fig8").render();
+    });
+    println!("{rendered}");
+    println!("{}", stats.report());
+}

@@ -1,0 +1,20 @@
+//! Bench: regenerate **Figure 9** (IEC vs OEC partitioning under TWC and
+//! ALB on 4 GPUs) and time it.
+//!
+//! Expected shape: ALB wins under BOTH partitioning policies — inter-GPU
+//! partitioning cannot fix intra-GPU thread-block imbalance (§6.2).
+
+use alb_graph::apps::App;
+use alb_graph::metrics::bench::time_runs;
+use alb_graph::repro::{self, ReproConfig};
+
+fn main() {
+    let rc = ReproConfig { scale_delta: -2, ..ReproConfig::default() };
+    let apps = [App::Bfs, App::Sssp];
+    let mut rendered = String::new();
+    let stats = time_runs("fig9/iec-vs-oec", 3, || {
+        rendered = repro::fig9(&rc, &apps).expect("fig9").render();
+    });
+    println!("{rendered}");
+    println!("{}", stats.report());
+}

@@ -1,0 +1,72 @@
+//! Bench: the simulator/engine hot paths in isolation — the targets of the
+//! EXPERIMENTS.md §Perf optimization pass.
+//!
+//! Cases:
+//! * `inspector`   — ALB's threshold split + prefix build over a large
+//!                   active set (runs every round).
+//! * `twc-sim`     — per-thread TWC kernel accounting.
+//! * `lb-sim`      — LB kernel cache-model simulation (cyclic + blocked).
+//! * `engine-bfs`  — whole bfs run on rmat (end-to-end single GPU).
+//! * `partition`   — CVC partitioning of the rmat input.
+//! * `relax-apply` — native operator application (label updates).
+
+use alb_graph::apps::engine::{run, EngineConfig};
+use alb_graph::apps::App;
+use alb_graph::config::Framework;
+use alb_graph::gpu::{CostModel, GpuSpec, Simulator};
+use alb_graph::graph::gen::rmat::{self, RmatConfig};
+use alb_graph::graph::CsrGraph;
+use alb_graph::lb::{alb, Direction, Distribution};
+use alb_graph::metrics::bench::time_runs;
+use alb_graph::partition::{partition, Policy};
+
+fn main() {
+    let g = CsrGraph::from_edge_list(&rmat::generate(&RmatConfig::paper(16, 7)));
+    let spec = GpuSpec::default_sim();
+    let cost = CostModel::default();
+    let sim = Simulator::new(spec.clone(), cost);
+    let active: Vec<u32> = (0..g.num_vertices() as u32).collect();
+
+    let s = time_runs("hotpath/inspector", 10, || {
+        alb::inspect(&active, &g, Direction::Push, &spec, spec.huge_threshold())
+    });
+    println!("{}", s.report());
+
+    let sched_twc = alb::schedule(
+        &active, &g, Direction::Push, &spec, Distribution::Cyclic,
+        u64::MAX, // force everything through TWC
+        g.num_vertices() as u64,
+    );
+    let s = time_runs("hotpath/twc-sim", 10, || sim.simulate(&sched_twc, true));
+    println!("{}", s.report());
+
+    for dist in [Distribution::Cyclic, Distribution::Blocked] {
+        let sched = alb::schedule(
+            &active, &g, Direction::Push, &spec, dist,
+            spec.huge_threshold(), g.num_vertices() as u64,
+        );
+        let s = time_runs(&format!("hotpath/lb-sim-{dist:?}"), 10, || {
+            sim.simulate(&sched, true)
+        });
+        println!("{}", s.report());
+    }
+
+    let s = time_runs("hotpath/engine-bfs", 5, || {
+        let mut gg = g.clone();
+        let src = gg.max_out_degree_vertex();
+        let cfg: EngineConfig = Framework::DIrglAlb.engine_config(spec.clone());
+        run(App::Bfs, &mut gg, src, &cfg, None).unwrap()
+    });
+    println!("{}", s.report());
+
+    let s = time_runs("hotpath/partition-cvc-8", 5, || partition(&g, 8, Policy::Cvc));
+    println!("{}", s.report());
+
+    let s = time_runs("hotpath/engine-sssp", 5, || {
+        let mut gg = g.clone();
+        let src = gg.max_out_degree_vertex();
+        let cfg: EngineConfig = Framework::DIrglAlb.engine_config(spec.clone());
+        run(App::Sssp, &mut gg, src, &cfg, None).unwrap()
+    });
+    println!("{}", s.report());
+}

@@ -1,0 +1,20 @@
+//! Bench: regenerate **Table 2** (single-GPU execution time across
+//! Gunrock(TWC), Gunrock(LB), D-IrGL(TWC), D-IrGL(ALB); 4 inputs x 5 apps)
+//! and time the sweep.
+//!
+//! Expected shape vs the paper: ALB 3-5x over TWC on rmat push apps +
+//! kcore; parity (1.00x) on orkut-s / road-s / pr; Gunrock(LB) beats
+//! Gunrock(TWC) on rmat but pays overhead on balanced inputs.
+
+use alb_graph::metrics::bench::time_runs;
+use alb_graph::repro::{self, ReproConfig};
+
+fn main() {
+    let rc = ReproConfig { scale_delta: -1, ..ReproConfig::default() };
+    let mut rendered = String::new();
+    let stats = time_runs("table2/full-sweep", 3, || {
+        rendered = repro::table2(&rc).expect("table2").render();
+    });
+    println!("{rendered}");
+    println!("{}", stats.report());
+}

@@ -1,0 +1,101 @@
+//! Distributed-cluster scenario: the paper's Bridges experiments (§6.3) —
+//! run the full application suite across 16 simulated GPUs (8 hosts x 2),
+//! with Gluon-style BSP synchronization, and show
+//!
+//! 1. strong scaling 2 -> 16 GPUs,
+//! 2. the computation/communication breakdown (Fig. 11's accounting),
+//! 3. that per-GPU thread-block imbalance throttles the *whole cluster*
+//!    under TWC, and ALB recovers it,
+//! 4. the partitioning-policy interaction (Fig. 9: IEC vs OEC vs CVC).
+//!
+//! ```bash
+//! cargo run --release --example distributed_cluster
+//! ```
+
+use alb_graph::apps::App;
+use alb_graph::comm::NetworkModel;
+use alb_graph::config::Framework;
+use alb_graph::coordinator::{run_distributed, ClusterConfig};
+use alb_graph::gpu::GpuSpec;
+use alb_graph::graph::inputs;
+use alb_graph::metrics::Table;
+use alb_graph::partition::Policy;
+
+fn main() -> anyhow::Result<()> {
+    let spec = GpuSpec::default_sim();
+    let input = "rmat21";
+    let g = inputs::build(input, 0, 42).unwrap();
+    let src = inputs::source_vertex(input, &g);
+    println!(
+        "cluster workload: {input} ({} vertices, {} edges) on up to 16 GPUs\n",
+        g.num_vertices(),
+        g.num_edges()
+    );
+
+    // 1. Strong scaling, TWC vs ALB.
+    let mut t = Table::new(&["framework", "2 gpus", "4 gpus", "8 gpus", "16 gpus"]);
+    for fw in [Framework::DIrglTwc, Framework::DIrglAlb] {
+        let cfg = fw.engine_config(spec.clone());
+        let mut row = vec![fw.name().to_string()];
+        for k in [2u32, 4, 8, 16] {
+            let r = run_distributed(App::Sssp, &g, src, &cfg,
+                                    &ClusterConfig::bridges(k), None)?;
+            row.push(format!("{:.4}", r.ms(&spec)));
+        }
+        t.row(row);
+    }
+    println!("sssp strong scaling (simulated ms):\n{}", t.render());
+
+    // 2. Breakdown on 16 GPUs (Fig. 11 accounting).
+    let mut t = Table::new(&["app", "framework", "comp(ms)", "comm(ms)", "imbalance"]);
+    for app in [App::Bfs, App::Sssp, App::Cc] {
+        for fw in [Framework::DIrglTwc, Framework::DIrglAlb] {
+            let cfg = fw.engine_config(spec.clone());
+            let r = run_distributed(app, &g, src, &cfg,
+                                    &ClusterConfig::bridges(16), None)?;
+            // Per-GPU compute balance across the cluster.
+            let max = *r.per_gpu_comp.iter().max().unwrap() as f64;
+            let mean = r.per_gpu_comp.iter().sum::<u64>() as f64
+                / r.per_gpu_comp.len() as f64;
+            t.row(vec![
+                app.name().into(),
+                fw.name().into(),
+                format!("{:.4}", r.comp_ms(&spec)),
+                format!("{:.4}", r.comm_ms(&spec)),
+                format!("{:.2}", max / mean.max(1.0)),
+            ]);
+        }
+    }
+    println!("16-GPU breakdown:\n{}", t.render());
+
+    // 3. Partition-policy interaction (Fig. 9).
+    let mut t = Table::new(&["policy", "twc(ms)", "alb(ms)", "alb-speedup"]);
+    for policy in [Policy::Oec, Policy::Iec, Policy::Cvc] {
+        let cluster = ClusterConfig {
+            num_gpus: 8,
+            policy,
+            net: NetworkModel::cluster(2),
+        };
+        let twc = run_distributed(
+            App::Sssp, &g, src,
+            &Framework::DIrglTwc.engine_config(spec.clone()), &cluster, None,
+        )?;
+        let alb = run_distributed(
+            App::Sssp, &g, src,
+            &Framework::DIrglAlb.engine_config(spec.clone()), &cluster, None,
+        )?;
+        assert_eq!(twc.labels, alb.labels);
+        t.row(vec![
+            policy.name().into(),
+            format!("{:.4}", twc.ms(&spec)),
+            format!("{:.4}", alb.ms(&spec)),
+            format!("{:.2}x", twc.total_cycles as f64 / alb.total_cycles.max(1) as f64),
+        ]);
+    }
+    println!("partitioning policies, 8 GPUs (sssp):\n{}", t.render());
+    println!(
+        "expected shape: ALB wins regardless of partitioning policy — \
+         partitioning balances across GPUs, ALB balances within each GPU."
+    );
+    Ok(())
+}

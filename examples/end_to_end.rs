@@ -1,0 +1,103 @@
+//! End-to-end validation driver: proves the three layers compose.
+//!
+//! Loads the AOT-compiled JAX/Pallas kernels (Layer 1/2, built once by
+//! `make artifacts`) through the PJRT runtime, then runs ALL five paper
+//! applications on two real workloads (a paper-regime rmat graph and a road
+//! grid) with the LB-kernel hot path executing as compiled HLO. Every
+//! PJRT-computed result is checked against the pure-native engine, and the
+//! TWC-vs-ALB comparison is reported per app.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use alb_graph::apps::engine::{run, ComputeMode, EngineConfig};
+use alb_graph::apps::{App, ALL_APPS};
+use alb_graph::config::Framework;
+use alb_graph::gpu::GpuSpec;
+use alb_graph::graph::{inputs, CsrGraph};
+use alb_graph::metrics::Table;
+use alb_graph::runtime::PjrtRuntime;
+
+fn check_close(a: &[f32], b: &[f32], app: App) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let ok = if matches!(app, App::Pr) {
+            (x - y).abs() <= 1e-5 * x.abs().max(1.0)
+        } else {
+            x == y
+        };
+        assert!(ok, "{} label mismatch at {i}: pjrt {x} vs native {y}", app.name());
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let started = std::time::Instant::now();
+    // Layer 1/2: the AOT artifacts, compiled once onto the PJRT CPU client.
+    let rt = PjrtRuntime::load_default()?;
+    println!(
+        "PJRT runtime up: {} compiled kernels on '{}'",
+        rt.num_kernels(),
+        rt.platform()
+    );
+
+    let spec = GpuSpec::default_sim();
+    let mut table = Table::new(&[
+        "input", "app", "twc(ms)", "alb(ms)", "speedup", "lb-rounds", "engine",
+    ]);
+
+    for input in ["rmat18", "road-s"] {
+        let g0: CsrGraph = inputs::build(input, 0, 42).unwrap();
+        let src = inputs::source_vertex(input, &g0);
+        for app in ALL_APPS {
+            // Native reference run (TWC baseline) ...
+            let mut g = g0.clone();
+            let twc_cfg = Framework::DIrglTwc.engine_config(spec.clone());
+            let twc = run(app, &mut g, src, &twc_cfg, None)?;
+
+            // ... ALB with the numeric hot paths on the compiled kernels.
+            let mut g = g0.clone();
+            let mut alb_cfg: EngineConfig =
+                Framework::DIrglAlb.engine_config(spec.clone());
+            alb_cfg.compute = ComputeMode::Pjrt;
+            let alb = run(app, &mut g, src, &alb_cfg, Some(&rt))?;
+
+            // Cross-engine agreement: PJRT numerics == native numerics.
+            let mut g = g0.clone();
+            let mut native_cfg = alb_cfg.clone();
+            native_cfg.compute = ComputeMode::Native;
+            let native = run(app, &mut g, src, &native_cfg, None)?;
+            check_close(&alb.labels, &native.labels, app);
+            // And strategy-independence of the answer itself.
+            check_close(&twc.labels, &native.labels, app);
+
+            table.row(vec![
+                input.into(),
+                app.name().into(),
+                format!("{:.4}", twc.ms(&spec)),
+                format!("{:.4}", alb.ms(&spec)),
+                format!(
+                    "{:.2}x",
+                    twc.total_cycles as f64 / alb.total_cycles.max(1) as f64
+                ),
+                alb.rounds_with_lb().to_string(),
+                "pjrt".into(),
+            ]);
+            println!(
+                "  ok {input}/{}: {} rounds, labels verified vs native",
+                app.name(),
+                alb.rounds.len()
+            );
+        }
+    }
+
+    println!("\n{}", table.render());
+    println!(
+        "end-to-end complete in {:.1}s host time — all labels verified across \
+         native/PJRT engines and TWC/ALB strategies",
+        started.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

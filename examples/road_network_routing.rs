@@ -1,0 +1,92 @@
+//! Road-network routing scenario (the paper's road-USA input): shortest
+//! paths and reachability on a long-diameter, flat-degree graph.
+//!
+//! This is the regime where the *adaptivity* of ALB matters: there are no
+//! huge vertices, so a well-behaved balancer must add ~zero overhead over
+//! TWC — and the interesting systems trade-off moves to worklist policy
+//! (the paper's §6.1 Gunrock-vs-D-IrGL road-USA discussion): thousands of
+//! nearly-empty rounds make the dense |V|-scan dominate.
+//!
+//! ```bash
+//! cargo run --release --example road_network_routing
+//! ```
+
+use alb_graph::apps::engine::{run, EngineConfig};
+use alb_graph::apps::worklist::WorklistKind;
+use alb_graph::apps::App;
+use alb_graph::config::Framework;
+use alb_graph::gpu::GpuSpec;
+use alb_graph::graph::{inputs, props};
+use alb_graph::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    let spec = GpuSpec::default_sim();
+    let mut g = inputs::build("road-s", 0, 42).unwrap();
+    let p = props::compute(&mut g);
+    println!(
+        "road network: {} junctions, {} segments, max degree {}, diameter ~{}\n",
+        p.num_vertices, p.num_edges, p.max_dout, p.approx_diameter
+    );
+    let src = 0u32; // paper: road sources are vertex 0
+
+    // 1. ALB adds no overhead when there is nothing to balance.
+    let mut table = Table::new(&["app", "twc(ms)", "alb(ms)", "lb-rounds", "rounds"]);
+    for app in [App::Bfs, App::Sssp] {
+        let twc = run(app, &mut g.clone(), src,
+                      &Framework::DIrglTwc.engine_config(spec.clone()), None)?;
+        let alb = run(app, &mut g.clone(), src,
+                      &Framework::DIrglAlb.engine_config(spec.clone()), None)?;
+        assert_eq!(twc.labels, alb.labels);
+        assert_eq!(alb.rounds_with_lb(), 0, "ALB must stay dormant on roads");
+        table.row(vec![
+            app.name().into(),
+            format!("{:.4}", twc.ms(&spec)),
+            format!("{:.4}", alb.ms(&spec)),
+            alb.rounds_with_lb().to_string(),
+            alb.rounds.len().to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // 2. The worklist trade-off: sparse wins when active sets are tiny.
+    let mut table = Table::new(&["app", "dense-wl(ms)", "sparse-wl(ms)", "sparse-speedup"]);
+    for app in [App::Bfs, App::Sssp] {
+        let mk = |wl: WorklistKind| -> EngineConfig {
+            EngineConfig {
+                worklist: wl,
+                ..Framework::DIrglAlb.engine_config(spec.clone())
+            }
+        };
+        let dense = run(app, &mut g.clone(), src, &mk(WorklistKind::Dense), None)?;
+        let sparse = run(app, &mut g.clone(), src, &mk(WorklistKind::Sparse), None)?;
+        assert_eq!(dense.labels, sparse.labels);
+        table.row(vec![
+            app.name().into(),
+            format!("{:.4}", dense.ms(&spec)),
+            format!("{:.4}", sparse.ms(&spec)),
+            format!("{:.2}x", dense.total_cycles as f64 / sparse.total_cycles.max(1) as f64),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // 3. The routing answer itself: reachability + a sample route cost.
+    let sssp = run(App::Sssp, &mut g, src,
+                   &Framework::DIrglAlb.engine_config(spec.clone()), None)?;
+    let reachable = sssp.labels.iter().filter(|&&d| d < alb_graph::apps::INF).count();
+    let far = sssp
+        .labels
+        .iter()
+        .enumerate()
+        .filter(|(_, &d)| d < alb_graph::apps::INF)
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap();
+    println!(
+        "routing: {}/{} junctions reachable from depot 0; farthest junction {} \
+         at travel cost {}",
+        reachable,
+        g.num_vertices(),
+        far.0,
+        far.1
+    );
+    Ok(())
+}

@@ -1,0 +1,153 @@
+"""AOT pipeline: lower every Layer-2 round step to HLO *text* artifacts.
+
+HLO text — NOT ``lowered.compile().serialize()`` — is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the ``xla``
+crate's bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.
+(See /opt/xla-example/gen_hlo.py and its README.)
+
+Usage (from ``make artifacts``):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Writes one ``<name>.hlo.txt`` per (function, shape-variant) plus
+``manifest.json`` describing each artifact's I/O signature, which
+``rust/src/runtime/artifact.rs`` consumes to pick batch variants.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shape variants compiled ahead of time. The Rust runtime pads a request to
+# the smallest variant that fits (H = huge-vertex table size, B = edge batch,
+# S = destination-slot table, N = vertex tile).
+RELAX_VARIANTS = [(256, 2048), (1024, 8192)]        # (H, B)
+RELAX_MERGE_VARIANTS = [(256, 2048, 2048)]          # (H, B, S)
+PREFIX_VARIANTS = [256, 1024]                       # H (tile multiple of 256)
+VERTEX_VARIANTS = [4096, 16384]                     # N (tile mult of 1024)
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _entries():
+    """Yield (name, fn, arg_specs, meta) for every artifact."""
+    for h, b in RELAX_VARIANTS:
+        yield (
+            f"edge_relax_h{h}_b{b}",
+            model.relax_batch,
+            [
+                _spec((h,), jnp.int32),    # prefix
+                _spec((h,), jnp.float32),  # src_dist
+                _spec((b,), jnp.int32),    # edge_ids
+                _spec((b,), jnp.float32),  # weights
+                _spec((b,), jnp.int32),    # valid
+            ],
+            {"kind": "edge_relax", "h": h, "b": b,
+             "outputs": ["src_idx:i32", "candidate:f32"]},
+        )
+    for h, b, s in RELAX_MERGE_VARIANTS:
+        yield (
+            f"relax_merge_h{h}_b{b}_s{s}",
+            model.relax_batch_minmerge,
+            [
+                _spec((h,), jnp.int32),
+                _spec((h,), jnp.float32),
+                _spec((b,), jnp.int32),
+                _spec((b,), jnp.float32),
+                _spec((b,), jnp.int32),
+                _spec((b,), jnp.int32),    # dst_slot
+                _spec((s,), jnp.float32),  # cur_slot_dist
+            ],
+            {"kind": "relax_merge", "h": h, "b": b, "s": s,
+             "outputs": ["new_slot_dist:f32", "improved:i32"]},
+        )
+    for h in PREFIX_VARIANTS:
+        yield (
+            f"prefix_sum_h{h}",
+            model.inspect_prefix,
+            [_spec((h,), jnp.int32)],
+            {"kind": "prefix_sum", "h": h, "outputs": ["prefix:i32"]},
+        )
+    for n in VERTEX_VARIANTS:
+        yield (
+            f"binning_n{n}",
+            model.inspect_bins,
+            [
+                _spec((n,), jnp.int32),    # degrees
+                _spec((3,), jnp.int32),    # (warp, block, huge) cutoffs
+            ],
+            {"kind": "binning", "n": n, "outputs": ["bins:i32"]},
+        )
+        yield (
+            f"pr_pull_n{n}",
+            model.pr_round,
+            [
+                _spec((n,), jnp.float32),  # ranks
+                _spec((n,), jnp.int32),    # out_degree
+                _spec((1,), jnp.float32),  # damping
+            ],
+            {"kind": "pr_pull", "n": n, "outputs": ["contrib:f32"]},
+        )
+        yield (
+            f"kcore_n{n}",
+            model.kcore_round,
+            [
+                _spec((n,), jnp.int32),    # cur_degree
+                _spec((1,), jnp.int32),    # k
+            ],
+            {"kind": "kcore", "n": n, "outputs": ["alive:i32"]},
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for name, fn, specs, meta in _entries():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+            **meta,
+        }
+        manifest["artifacts"].append(entry)
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Layer-1 Pallas kernel: the ALB inspector's bin assignment.
+
+Classifies each active vertex by degree into thread / warp / CTA / huge
+(paper Fig. 3 lines 3-9) in one vectorized pass — the fused inspection the
+generated TWC kernel performs before pushing huge vertices to the LB
+worklist. Checked against ``ref.twc_bin``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 1024
+
+
+def _bin_kernel(deg_ref, cuts_ref, o_ref):
+    d = deg_ref[...].astype(jnp.int32)
+    warp, block, huge = cuts_ref[0], cuts_ref[1], cuts_ref[2]
+    o_ref[...] = jnp.where(
+        d >= huge, 3,
+        jnp.where(d >= block, 2, jnp.where(d >= warp, 1, 0))).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def twc_bin(degrees, cuts, *, tile: int = DEFAULT_TILE):
+    """i32[N] degrees, i32[3] (warp, block, huge) cutoffs -> i32[N] bins."""
+    (n,) = degrees.shape
+    if n % tile != 0:
+        raise ValueError(f"length {n} not a multiple of tile {tile}")
+    lane = lambda i: (i,)
+    whole = lambda i: (0,)
+    return pl.pallas_call(
+        _bin_kernel,
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((tile,), lane), pl.BlockSpec((3,), whole)],
+        out_specs=pl.BlockSpec((tile,), lane),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(degrees.astype(jnp.int32), cuts.astype(jnp.int32))

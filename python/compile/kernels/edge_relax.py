@@ -1,0 +1,101 @@
+"""Layer-1 Pallas kernel: the paper's LB ("load-balance") kernel body.
+
+The CUDA original (paper Figure 3, ``SSSP_LB``) gives each GPU thread a cyclic
+slice of the huge-vertex edge set; every thread binary-searches the prefix-sum
+worklist in global memory to recover its edge's source vertex, then applies the
+relaxation operator.
+
+TPU re-think (DESIGN.md §6 Hardware-Adaptation):
+
+* the edge batch is tiled ``(TILE,)`` per grid step via BlockSpec — the grid
+  plays the role of the threadblock sweep, and the *cyclic vs blocked* choice
+  lives entirely in how the host (Rust L3) fills ``edge_ids``, so one compiled
+  kernel serves both schedules;
+* the prefix-sum array and the huge-vertex labels are small (``H`` entries) and
+  are mapped whole into VMEM each step — the warp-coherent binary search
+  becomes one vectorized rank computation (``prefix <= eid`` compare plane,
+  reduced over the H axis), which is the natural 8x128-lane formulation;
+* ``atomicMin`` is deferred: the kernel returns per-edge candidates and the
+  host (or the L2 segment-min wrapper) merges them, keeping the kernel
+  deterministic.
+
+Checked against ``ref.edge_relax`` by ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+#: Lane-dimension tile for the edge batch. 8 * 128 keeps the compare plane
+#: (TILE x H) within a ~4 MiB VMEM budget for H <= 1024 (see DESIGN.md §7).
+DEFAULT_TILE = 1024
+
+
+def _relax_kernel(prefix_ref, src_dist_ref, eid_ref, weight_ref, valid_ref,
+                  src_out_ref, cand_out_ref):
+    """One grid step: relax TILE edges against the whole huge-vertex table."""
+    prefix = prefix_ref[...]
+    eid = eid_ref[...].astype(jnp.int32)
+    valid = valid_ref[...] != 0
+
+    # Vectorized "binary search": rank of eid in the inclusive prefix array.
+    # (TILE, H) compare plane lives in VMEM; reduction over H is lane-parallel.
+    src = jnp.sum(prefix[None, :] <= eid[:, None], axis=1).astype(jnp.int32)
+    src = jnp.where(valid, src, 0)
+
+    cand = jnp.take(src_dist_ref[...], src, axis=0) + weight_ref[...]
+    cand = jnp.where(valid, cand, ref.INF).astype(jnp.float32)
+
+    src_out_ref[...] = src
+    cand_out_ref[...] = cand
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def edge_relax(prefix, src_dist, edge_ids, weights, valid, *,
+               tile: int = DEFAULT_TILE):
+    """Relax a batch of distributed edges (paper's LB kernel).
+
+    Args:
+      prefix:   i32[H] inclusive prefix sum of huge-vertex out-degrees.
+      src_dist: f32[H] current labels of the huge vertices.
+      edge_ids: i32[B] edge ids in [0, prefix[-1]) — cyclic or blocked order.
+      weights:  f32[B] edge weights (1.0 for bfs hops, 0.0 for cc).
+      valid:    i32[B] nonzero where the lane carries a real edge.
+      tile:     lane tile; B must be a multiple of it.
+
+    Returns:
+      (src_idx i32[B], candidate f32[B]); padded lanes give (0, INF).
+    """
+    (b,) = edge_ids.shape
+    if b % tile != 0:
+        raise ValueError(f"batch {b} not a multiple of tile {tile}")
+    grid = (b // tile,)
+    whole = lambda i: (0,)  # full-array block, re-fetched each step
+    lane = lambda i: (i,)
+
+    return pl.pallas_call(
+        _relax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(prefix.shape, whole),
+            pl.BlockSpec(src_dist.shape, whole),
+            pl.BlockSpec((tile,), lane),
+            pl.BlockSpec((tile,), lane),
+            pl.BlockSpec((tile,), lane),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lane),
+            pl.BlockSpec((tile,), lane),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,  # CPU-PJRT target; Mosaic lowering is TPU-only
+    )(prefix, src_dist, edge_ids, weights, valid)

@@ -1,0 +1,71 @@
+"""Layer-1 Pallas kernels for the pull-style applications (pr, kcore).
+
+``pr_pull_contrib`` computes each vertex's damped contribution
+(rank / out_degree) — the value a pull-style pagerank round gathers from
+in-neighbors. ``kcore_alive`` is one filter step of k-core decomposition.
+
+Both are elementwise lane-tiled kernels: the interesting scheduling work for
+pull apps happens in the coordinator (no huge-bin trigger, per the paper —
+in-degree skew is low on RMAT), so the kernels are straight VPU element ops.
+
+Checked against ``ref.pr_pull_contrib`` / ``ref.kcore_alive``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 1024
+
+
+def _pr_kernel(rank_ref, deg_ref, damp_ref, o_ref):
+    deg = jnp.maximum(deg_ref[...].astype(jnp.float32), 1.0)
+    o_ref[...] = (damp_ref[0] * rank_ref[...] / deg).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def pr_pull_contrib(ranks, out_degree, damping, *, tile: int = DEFAULT_TILE):
+    """f32[N] ranks, i32[N] out-degrees, f32[1] damping -> f32[N] contribs."""
+    (n,) = ranks.shape
+    if n % tile != 0:
+        raise ValueError(f"length {n} not a multiple of tile {tile}")
+    lane = lambda i: (i,)
+    whole = lambda i: (0,)
+    return pl.pallas_call(
+        _pr_kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lane),
+            pl.BlockSpec((tile,), lane),
+            pl.BlockSpec((1,), whole),
+        ],
+        out_specs=pl.BlockSpec((tile,), lane),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(ranks, out_degree, damping)
+
+
+def _kcore_kernel(deg_ref, k_ref, o_ref):
+    o_ref[...] = (deg_ref[...] >= k_ref[0]).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def kcore_alive(cur_degree, k, *, tile: int = DEFAULT_TILE):
+    """i32[N] current degrees, i32[1] k -> i32[N] survival mask."""
+    (n,) = cur_degree.shape
+    if n % tile != 0:
+        raise ValueError(f"length {n} not a multiple of tile {tile}")
+    lane = lambda i: (i,)
+    whole = lambda i: (0,)
+    return pl.pallas_call(
+        _kcore_kernel,
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((tile,), lane), pl.BlockSpec((1,), whole)],
+        out_specs=pl.BlockSpec((tile,), lane),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(cur_degree.astype(jnp.int32), k)

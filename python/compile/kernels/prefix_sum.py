@@ -1,0 +1,51 @@
+"""Layer-1 Pallas kernel: the inspector's prefix sum (paper Fig. 3 line 31).
+
+``computePrefixSum(work, prefixWork)`` in the paper turns the huge-vertex
+degree worklist into the inclusive prefix array the LB kernel binary-searches.
+
+TPU formulation: a tiled scan — the grid walks lane tiles in order, a scalar
+carry rides in SMEM scratch between steps (grid steps execute sequentially on
+a TPU core, and in interpret mode, so the carry is well-defined).
+
+Checked against ``ref.prefix_sum``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TILE = 256
+
+
+def _scan_kernel(x_ref, o_ref, carry_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        carry_ref[0] = jnp.int32(0)
+
+    carry = carry_ref[0]
+    local = jnp.cumsum(x_ref[...].astype(jnp.int32), dtype=jnp.int32)
+    o_ref[...] = local + carry
+    carry_ref[0] = carry + local[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def prefix_sum(degrees, *, tile: int = DEFAULT_TILE):
+    """Inclusive prefix sum of i32[N] degrees; N must be a tile multiple."""
+    (n,) = degrees.shape
+    if n % tile != 0:
+        raise ValueError(f"length {n} not a multiple of tile {tile}")
+    lane = lambda i: (i,)
+    return pl.pallas_call(
+        _scan_kernel,
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((tile,), lane)],
+        out_specs=pl.BlockSpec((tile,), lane),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=True,
+    )(degrees.astype(jnp.int32))

@@ -1,0 +1,112 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package is
+checked elementwise against the function of the same name here (pytest +
+hypothesis sweeps in ``python/tests/``).
+
+Semantics mirror the paper's LB ("load-balance") kernel, Figure 3/4 of
+*An Adaptive Load Balancer For Graph Analytical Applications on GPUs*:
+
+* ``prefix_sum``      — the inspector's inclusive scan over huge-vertex degrees
+                        (paper line 31, ``computePrefixSum``).
+* ``edge_to_src``     — the executor's binary search: map a global edge id to
+                        the index of the huge vertex owning it (paper Figure 4).
+* ``edge_relax``      — the relaxation operator applied per distributed edge:
+                        candidate = dist(src) + weight  (min-plus semiring;
+                        weight 1 == bfs hop, weight 0 == cc label propagate).
+* ``pr_pull_contrib`` — pull-style pagerank per-vertex contribution
+                        (rank / out_degree, damped).
+* ``kcore_alive``     — one k-core filter step: vertex stays if its current
+                        degree >= k.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Sentinel "infinite" distance. f32-exact, survives +weight without overflow.
+#: Kept a plain Python float so Pallas kernels can close over it.
+INF = float(2.0**30)
+
+
+def prefix_sum(degrees: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive prefix sum of ``degrees`` (i32[N] -> i32[N]).
+
+    ``out[j] == degrees[:j+1].sum()``; ``out[-1]`` is the LB kernel's
+    ``total_edges``.
+    """
+    return jnp.cumsum(degrees.astype(jnp.int32), dtype=jnp.int32)
+
+
+def edge_to_src(prefix: jnp.ndarray, edge_ids: jnp.ndarray) -> jnp.ndarray:
+    """Map global edge ids to owning-vertex indices via the prefix array.
+
+    Vertex ``j`` owns edge ids ``[prefix[j-1], prefix[j])`` (with
+    ``prefix[-1] == 0``).  Equivalent to the paper's binary search on the
+    prefix-sum worklist; expressed as a rank computation (count of prefix
+    entries <= id), which is what the vectorized VMEM search computes.
+    """
+    eid = edge_ids.astype(jnp.int32)
+    # searchsorted-right: number of prefix ends that are <= eid.
+    return jnp.sum(prefix[None, :] <= eid[:, None], axis=1).astype(jnp.int32)
+
+
+def edge_relax(
+    prefix: jnp.ndarray,
+    src_dist: jnp.ndarray,
+    edge_ids: jnp.ndarray,
+    weights: jnp.ndarray,
+    valid: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The LB-kernel body: edge id -> (src index, candidate distance).
+
+    Args:
+      prefix:   i32[H]  inclusive prefix sum of huge-vertex out-degrees.
+      src_dist: f32[H]  current label (distance) of each huge vertex.
+      edge_ids: i32[B]  global edge ids assigned to this batch (any schedule —
+                cyclic / blocked is the caller's concern).
+      weights:  f32[B]  weight of each edge.
+      valid:    bool[B] mask; padded lanes yield (0, INF).
+
+    Returns:
+      (src_idx i32[B], candidate f32[B]) with candidate = src_dist[src] + w.
+    """
+    src = edge_to_src(prefix, edge_ids)
+    src = jnp.where(valid, src, 0).astype(jnp.int32)
+    cand = jnp.take(src_dist, src, axis=0) + weights
+    cand = jnp.where(valid, cand, INF).astype(jnp.float32)
+    return src, cand
+
+
+def pr_pull_contrib(
+    ranks: jnp.ndarray, out_degree: jnp.ndarray, damping: float = 0.85
+) -> jnp.ndarray:
+    """Per-vertex pull contribution: damping * rank / max(out_degree, 1)."""
+    deg = jnp.maximum(out_degree.astype(jnp.float32), 1.0)
+    return (damping * ranks / deg).astype(jnp.float32)
+
+
+def pr_update(
+    acc: jnp.ndarray, n: int, damping: float = 0.85
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """New rank from accumulated neighbor contributions + the residual used
+    for the convergence check."""
+    base = jnp.float32((1.0 - damping) / n)
+    new_rank = base + acc
+    return new_rank.astype(jnp.float32), jnp.abs(new_rank).astype(jnp.float32)
+
+
+def kcore_alive(cur_degree: jnp.ndarray, k: int) -> jnp.ndarray:
+    """k-core filter step: 1 if the vertex survives this round else 0."""
+    return (cur_degree.astype(jnp.int32) >= jnp.int32(k)).astype(jnp.int32)
+
+
+def twc_bin(degrees, warp_size: int, block_threads: int, huge: int):
+    """TWC + huge binning (paper Fig. 3 lines 3-9): 0 = thread bin
+    (< warp), 1 = warp bin (< block), 2 = CTA bin, 3 = huge (>= THRESHOLD).
+    """
+    d = degrees.astype(jnp.int32)
+    return jnp.where(
+        d >= jnp.int32(huge), 3,
+        jnp.where(d >= jnp.int32(block_threads), 2,
+                  jnp.where(d >= jnp.int32(warp_size), 1, 0))).astype(jnp.int32)

@@ -1,0 +1,86 @@
+"""Layer-2 JAX round-step functions, composed from the Layer-1 Pallas kernels.
+
+Each function here is a *whole round step* as the Rust coordinator consumes it:
+one jitted computation, lowered once by ``aot.py`` to an HLO-text artifact and
+executed from ``rust/src/runtime/`` via PJRT. Python never runs at request
+time.
+
+The split of the paper's round across layers:
+
+  Rust L3 (coordinator)    decides WHICH edges — inspector bins vertices,
+                           builds the cyclic/blocked edge-id schedule,
+                           owns worklists + CSR + labels.
+  JAX  L2 (this module)    the numeric round step over a fixed-shape batch:
+                           prefix-sum inspection, LB-kernel relaxation with
+                           per-destination-slot min-merge, pr/kcore steps.
+  Pallas L1 (kernels/)     the hot inner loops (vectorized search + relax,
+                           tiled scan, element ops).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import binning as _binning_k
+from .kernels import edge_relax as _edge_relax_k
+from .kernels import pr_pull as _pr_pull_k
+from .kernels import prefix_sum as _prefix_sum_k
+from .kernels import ref
+
+
+def inspect_prefix(degrees):
+    """Inspector phase: huge-vertex degrees i32[H] -> inclusive prefix i32[H].
+
+    ``prefix[-1]`` is ``total_edges`` (paper Fig. 3 line 14).
+    """
+    return (_prefix_sum_k.prefix_sum(degrees),)
+
+
+def relax_batch(prefix, src_dist, edge_ids, weights, valid):
+    """Executor phase: relax one fixed-shape batch of distributed edges.
+
+    Returns (src_idx i32[B], candidate f32[B]). The host applies the
+    atomicMin merge against its labels (it knows eid -> dst from CSR).
+    """
+    src, cand = _edge_relax_k.edge_relax(prefix, src_dist, edge_ids, weights,
+                                         valid)
+    return src, cand
+
+
+def relax_batch_minmerge(prefix, src_dist, edge_ids, weights, valid,
+                         dst_slot, cur_slot_dist):
+    """Relax + deterministic min-merge into destination *slots*.
+
+    ``dst_slot`` i32[B] maps each edge lane to a dense slot in [0, S); the
+    kernel's candidates are segment-min-reduced per slot and combined with the
+    slot's current distance. This is the deterministic TPU replacement for
+    CUDA ``atomicMin`` (DESIGN.md §6): the host picks S and the slot mapping
+    (typically dst vertices touched this batch), and gets back the merged
+    labels plus an "improved" mask for worklist pushes.
+
+    Returns (new_slot_dist f32[S], improved i32[S]).
+    """
+    (s,) = cur_slot_dist.shape
+    _, cand = _edge_relax_k.edge_relax(prefix, src_dist, edge_ids, weights,
+                                       valid)
+    seg_min = jnp.full((s,), ref.INF, jnp.float32).at[dst_slot].min(
+        jnp.where(valid != 0, cand, ref.INF))
+    new = jnp.minimum(cur_slot_dist, seg_min)
+    improved = (new < cur_slot_dist).astype(jnp.int32)
+    return new, improved
+
+
+def pr_round(ranks, out_degree, damping):
+    """Pull-style pagerank contributions for a tile of vertices."""
+    return (_pr_pull_k.pr_pull_contrib(ranks, out_degree, damping),)
+
+
+def kcore_round(cur_degree, k):
+    """One k-core filter step over a tile of vertices."""
+    return (_pr_pull_k.kcore_alive(cur_degree, k),)
+
+
+def inspect_bins(degrees, cuts):
+    """Inspector bin assignment for a tile of active vertices."""
+    return (_binning_k.twc_bin(degrees, cuts),)

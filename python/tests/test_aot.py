@@ -1,0 +1,60 @@
+"""AOT pipeline checks: manifest consistency + HLO-text lowering sanity.
+
+Full artifact regeneration is exercised by ``make artifacts``; here we verify
+the manifest the Rust runtime consumes matches what aot.py would emit, and
+that the HLO-text conversion produces parseable modules (entry computation,
+parameter count).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_entries_unique_names():
+    names = [name for name, *_ in aot._entries()]
+    assert len(names) == len(set(names))
+
+
+def test_entries_cover_all_kinds():
+    kinds = {meta["kind"] for *_, meta in aot._entries()}
+    assert kinds == {"edge_relax", "relax_merge", "prefix_sum", "pr_pull",
+                     "kcore", "binning"}
+
+
+def test_hlo_text_has_entry_and_params():
+    spec = jax.ShapeDtypeStruct((256,), jnp.int32)
+    lowered = jax.jit(model.inspect_prefix).lower(spec)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "parameter(0)" in text
+    # return_tuple=True: root is a tuple — required by the rust loader's
+    # to_tuple unwrapping.
+    assert "tuple" in text
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_manifest_matches_entries_and_files():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == "hlo-text"
+    on_disk = {a["name"]: a for a in manifest["artifacts"]}
+    expected = {name: (specs, meta) for name, _, specs, meta in
+                ((n, f, s, m) for n, f, s, m in aot._entries())}
+    assert set(on_disk) == set(expected)
+    for name, (specs, meta) in expected.items():
+        entry = on_disk[name]
+        assert entry["kind"] == meta["kind"]
+        assert [tuple(i["shape"]) for i in entry["inputs"]] == \
+            [s.shape for s in specs]
+        assert os.path.exists(os.path.join(ART, entry["file"]))

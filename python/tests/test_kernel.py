@@ -1,0 +1,206 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle in ref.py.
+
+Hypothesis sweeps shapes/values; fixed cases pin the paper-relevant regimes
+(one mega-degree vertex, all-equal degrees, empty batch padding).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import binning as bk
+from compile.kernels import edge_relax as ek
+from compile.kernels import pr_pull as pk
+from compile.kernels import prefix_sum as sk
+from compile.kernels import ref
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def _degrees_to_prefix(degs):
+    return np.cumsum(np.asarray(degs, np.int32)).astype(np.int32)
+
+
+# ---------------------------------------------------------------- prefix sum
+
+@given(
+    st.integers(min_value=1, max_value=4),
+    st.integers(min_value=0, max_value=2**20),
+    st.integers(min_value=0, max_value=12345),
+)
+def test_prefix_sum_matches_ref(tiles, hi, seed):
+    n = tiles * sk.DEFAULT_TILE
+    rng = np.random.default_rng(seed)
+    degs = rng.integers(0, max(hi, 1), size=n).astype(np.int32)
+    got = np.asarray(sk.prefix_sum(jnp.asarray(degs)))
+    want = np.asarray(ref.prefix_sum(jnp.asarray(degs)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_prefix_sum_carry_crosses_tiles():
+    n = 2 * sk.DEFAULT_TILE
+    degs = np.ones(n, np.int32)
+    got = np.asarray(sk.prefix_sum(jnp.asarray(degs)))
+    np.testing.assert_array_equal(got, np.arange(1, n + 1, dtype=np.int32))
+
+
+def test_prefix_sum_rejects_ragged():
+    with pytest.raises(ValueError):
+        sk.prefix_sum(jnp.zeros(sk.DEFAULT_TILE + 1, jnp.int32))
+
+
+# ---------------------------------------------------------------- edge relax
+
+def _relax_case(h, b, seed, max_deg=2048):
+    rng = np.random.default_rng(seed)
+    degs = rng.integers(1, max_deg, size=h).astype(np.int32)
+    prefix = _degrees_to_prefix(degs)
+    total = int(prefix[-1])
+    src_dist = rng.uniform(0.0, 100.0, size=h).astype(np.float32)
+    eids = rng.integers(0, total, size=b).astype(np.int32)
+    weights = rng.uniform(0.0, 10.0, size=b).astype(np.float32)
+    valid = (rng.random(b) < 0.9).astype(np.int32)
+    return prefix, src_dist, eids, weights, valid
+
+
+@given(st.integers(min_value=0, max_value=99999))
+def test_edge_relax_matches_ref(seed):
+    h, b = 256, ek.DEFAULT_TILE
+    prefix, src_dist, eids, weights, valid = _relax_case(h, b, seed)
+    args = tuple(map(jnp.asarray, (prefix, src_dist, eids, weights, valid)))
+    gs, gc = ek.edge_relax(*args)
+    ws, wc = ref.edge_relax(*args[:4], args[4] != 0)
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+    np.testing.assert_allclose(np.asarray(gc), np.asarray(wc), rtol=1e-6)
+
+
+def test_edge_relax_single_mega_vertex():
+    """Paper Fig 5a regime: one vertex owns every edge -> src is always 0."""
+    h, b = 256, ek.DEFAULT_TILE
+    degs = np.zeros(h, np.int32)
+    degs[0] = 10_000
+    prefix = _degrees_to_prefix(degs)
+    src_dist = np.full(h, 7.0, np.float32)
+    eids = np.arange(b, dtype=np.int32)
+    weights = np.ones(b, np.float32)
+    valid = np.ones(b, np.int32)
+    src, cand = ek.edge_relax(*map(jnp.asarray,
+                                   (prefix, src_dist, eids, weights, valid)))
+    assert np.all(np.asarray(src) == 0)
+    np.testing.assert_allclose(np.asarray(cand), 8.0)
+
+
+def test_edge_relax_boundaries_exact():
+    """Edge ids exactly at prefix boundaries belong to the *next* vertex."""
+    h, b = 256, ek.DEFAULT_TILE
+    degs = np.full(h, 4, np.int32)
+    prefix = _degrees_to_prefix(degs)
+    src_dist = np.arange(h, dtype=np.float32)
+    eids = np.zeros(b, np.int32)
+    eids[:6] = [0, 3, 4, 7, 8, 1023]
+    weights = np.zeros(b, np.float32)
+    valid = np.ones(b, np.int32)
+    src, cand = ek.edge_relax(*map(jnp.asarray,
+                                   (prefix, src_dist, eids, weights, valid)))
+    got = np.asarray(src)[:6]
+    np.testing.assert_array_equal(got, [0, 0, 1, 1, 2, 255])
+    np.testing.assert_allclose(np.asarray(cand)[:6], got.astype(np.float32))
+
+
+def test_edge_relax_invalid_lanes_are_inf():
+    h, b = 256, ek.DEFAULT_TILE
+    prefix, src_dist, eids, weights, _ = _relax_case(h, b, seed=1)
+    valid = np.zeros(b, np.int32)
+    src, cand = ek.edge_relax(*map(jnp.asarray,
+                                   (prefix, src_dist, eids, weights, valid)))
+    assert np.all(np.asarray(src) == 0)
+    assert np.all(np.asarray(cand) == float(ref.INF))
+
+
+def test_edge_relax_multi_tile_grid():
+    h, b = 256, 4 * ek.DEFAULT_TILE
+    prefix, src_dist, eids, weights, valid = _relax_case(h, b, seed=3)
+    args = tuple(map(jnp.asarray, (prefix, src_dist, eids, weights, valid)))
+    gs, gc = ek.edge_relax(*args)
+    ws, wc = ref.edge_relax(*args[:4], args[4] != 0)
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+    np.testing.assert_allclose(np.asarray(gc), np.asarray(wc), rtol=1e-6)
+
+
+def test_edge_relax_rejects_ragged_batch():
+    with pytest.raises(ValueError):
+        ek.edge_relax(
+            jnp.zeros(8, jnp.int32), jnp.zeros(8, jnp.float32),
+            jnp.zeros(100, jnp.int32), jnp.zeros(100, jnp.float32),
+            jnp.zeros(100, jnp.int32))
+
+
+# ------------------------------------------------------------------ pr_pull
+
+@given(st.integers(min_value=0, max_value=99999),
+       st.floats(min_value=0.5, max_value=0.99))
+def test_pr_pull_matches_ref(seed, damping):
+    n = pk.DEFAULT_TILE
+    rng = np.random.default_rng(seed)
+    ranks = rng.uniform(0.0, 1.0, size=n).astype(np.float32)
+    degs = rng.integers(0, 1000, size=n).astype(np.int32)
+    got = pk.pr_pull_contrib(jnp.asarray(ranks), jnp.asarray(degs),
+                             jnp.asarray([damping], jnp.float32))
+    want = ref.pr_pull_contrib(jnp.asarray(ranks), jnp.asarray(degs),
+                               damping)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_pr_pull_zero_degree_guard():
+    n = pk.DEFAULT_TILE
+    ranks = np.full(n, 0.5, np.float32)
+    degs = np.zeros(n, np.int32)
+    got = pk.pr_pull_contrib(jnp.asarray(ranks), jnp.asarray(degs),
+                             jnp.asarray([0.85], jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), 0.425)  # /max(deg,1)
+
+
+# -------------------------------------------------------------------- kcore
+
+@given(st.integers(min_value=0, max_value=99999),
+       st.integers(min_value=0, max_value=200))
+def test_kcore_matches_ref(seed, k):
+    n = pk.DEFAULT_TILE
+    rng = np.random.default_rng(seed)
+    degs = rng.integers(0, 300, size=n).astype(np.int32)
+    got = pk.kcore_alive(jnp.asarray(degs), jnp.asarray([k], jnp.int32))
+    want = ref.kcore_alive(jnp.asarray(degs), k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kcore_threshold_inclusive():
+    n = pk.DEFAULT_TILE
+    degs = np.full(n, 100, np.int32)
+    got = pk.kcore_alive(jnp.asarray(degs), jnp.asarray([100], jnp.int32))
+    assert np.all(np.asarray(got) == 1)
+
+
+# ------------------------------------------------------------------ binning
+
+@given(st.integers(min_value=0, max_value=99999))
+def test_binning_matches_ref(seed):
+    n = bk.DEFAULT_TILE
+    rng = np.random.default_rng(seed)
+    degs = rng.integers(0, 10_000, size=n).astype(np.int32)
+    cuts = jnp.asarray([32, 128, 3072], jnp.int32)
+    got = bk.twc_bin(jnp.asarray(degs), cuts)
+    want = ref.twc_bin(jnp.asarray(degs), 32, 128, 3072)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_binning_boundaries():
+    n = bk.DEFAULT_TILE
+    degs = np.zeros(n, np.int32)
+    degs[:8] = [0, 31, 32, 127, 128, 3071, 3072, 1 << 30]
+    cuts = jnp.asarray([32, 128, 3072], jnp.int32)
+    got = np.asarray(bk.twc_bin(jnp.asarray(degs), cuts))
+    np.testing.assert_array_equal(got[:8], [0, 0, 1, 1, 2, 2, 3, 3])

@@ -1,0 +1,104 @@
+"""L2 correctness: model.py round steps — semantics and shape contracts."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("ci", deadline=None, max_examples=15)
+settings.load_profile("ci")
+
+H, B, S = 256, 2048, 2048
+
+
+def _case(seed):
+    rng = np.random.default_rng(seed)
+    degs = rng.integers(1, 512, size=H).astype(np.int32)
+    prefix = np.cumsum(degs).astype(np.int32)
+    src_dist = rng.uniform(0.0, 50.0, size=H).astype(np.float32)
+    eids = rng.integers(0, int(prefix[-1]), size=B).astype(np.int32)
+    weights = rng.uniform(0.0, 5.0, size=B).astype(np.float32)
+    valid = (rng.random(B) < 0.95).astype(np.int32)
+    return prefix, src_dist, eids, weights, valid, rng
+
+
+@given(st.integers(min_value=0, max_value=9999))
+def test_relax_batch_matches_ref(seed):
+    prefix, src_dist, eids, weights, valid, _ = _case(seed)
+    src, cand = model.relax_batch(*map(jnp.asarray,
+                                       (prefix, src_dist, eids, weights,
+                                        valid)))
+    ws, wc = ref.edge_relax(jnp.asarray(prefix), jnp.asarray(src_dist),
+                            jnp.asarray(eids), jnp.asarray(weights),
+                            jnp.asarray(valid) != 0)
+    np.testing.assert_array_equal(np.asarray(src), np.asarray(ws))
+    np.testing.assert_allclose(np.asarray(cand), np.asarray(wc), rtol=1e-6)
+
+
+@given(st.integers(min_value=0, max_value=9999))
+def test_relax_merge_is_min_reduction(seed):
+    """relax_batch_minmerge == per-slot min of relax_batch candidates,
+    combined with the current slot distances."""
+    prefix, src_dist, eids, weights, valid, rng = _case(seed)
+    dst_slot = rng.integers(0, S, size=B).astype(np.int32)
+    cur = rng.uniform(0.0, 100.0, size=S).astype(np.float32)
+
+    new, improved = model.relax_batch_minmerge(
+        *map(jnp.asarray, (prefix, src_dist, eids, weights, valid,
+                           dst_slot, cur)))
+    new = np.asarray(new)
+    improved = np.asarray(improved)
+
+    _, cand = ref.edge_relax(jnp.asarray(prefix), jnp.asarray(src_dist),
+                             jnp.asarray(eids), jnp.asarray(weights),
+                             jnp.asarray(valid) != 0)
+    cand = np.asarray(cand)
+    want = cur.copy()
+    for i in range(B):
+        if valid[i]:
+            s = dst_slot[i]
+            want[s] = min(want[s], cand[i])
+    np.testing.assert_allclose(new, want, rtol=1e-6)
+    np.testing.assert_array_equal(improved, (want < cur).astype(np.int32))
+
+
+def test_relax_merge_no_valid_edges_is_identity():
+    prefix, src_dist, eids, weights, _, rng = _case(0)
+    valid = np.zeros(B, np.int32)
+    dst_slot = rng.integers(0, S, size=B).astype(np.int32)
+    cur = rng.uniform(0.0, 100.0, size=S).astype(np.float32)
+    new, improved = model.relax_batch_minmerge(
+        *map(jnp.asarray, (prefix, src_dist, eids, weights, valid,
+                           dst_slot, cur)))
+    np.testing.assert_allclose(np.asarray(new), cur)
+    assert np.all(np.asarray(improved) == 0)
+
+
+def test_inspect_prefix_total_edges():
+    degs = np.zeros(H, np.int32)
+    degs[:10] = 1000
+    (prefix,) = model.inspect_prefix(jnp.asarray(degs))
+    assert int(np.asarray(prefix)[-1]) == 10_000  # paper's total_edges
+
+
+def test_pr_round_conserves_scaling():
+    n = 4096
+    rng = np.random.default_rng(7)
+    ranks = rng.uniform(0.0, 1.0, size=n).astype(np.float32)
+    degs = np.ones(n, np.int32)
+    (contrib,) = model.pr_round(jnp.asarray(ranks), jnp.asarray(degs),
+                                jnp.asarray([0.85], jnp.float32))
+    np.testing.assert_allclose(np.asarray(contrib), 0.85 * ranks, rtol=1e-6)
+
+
+def test_kcore_round_mask():
+    n = 4096
+    degs = np.arange(n, dtype=np.int32) % 256
+    (alive,) = model.kcore_round(jnp.asarray(degs),
+                                 jnp.asarray([100], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(alive),
+                                  (degs % 256 >= 100).astype(np.int32))

@@ -1,0 +1,117 @@
+"""L1+L2 pipeline test: a complete LB round — inspect (prefix sum) ->
+distribute (cyclic / blocked edge ids) -> relax (vectorized search) ->
+min-merge — composed exactly the way the Rust engine drives the compiled
+artifacts, validated against a plain numpy evaluation of the same round.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+settings.register_profile("ci", deadline=None, max_examples=10)
+settings.load_profile("ci")
+
+H, B, S = 256, 2048, 2048
+INF = float(2.0**30)
+
+
+def _round_inputs(seed):
+    rng = np.random.default_rng(seed)
+    degs = np.zeros(H, np.int32)
+    nhuge = rng.integers(1, 8)
+    degs[:nhuge] = rng.integers(100, 250, size=nhuge)
+    src_dist = rng.uniform(0.0, 20.0, size=H).astype(np.float32)
+    return degs, src_dist, rng
+
+
+def _numpy_round(degs, src_dist, eids, weights, dst_slot, cur):
+    """Straight-line numpy evaluation of one LB round."""
+    prefix = np.cumsum(degs)
+    src = np.searchsorted(prefix, eids, side="right")
+    cand = src_dist[src] + weights
+    out = cur.copy()
+    for e, c in zip(dst_slot, cand):
+        out[e] = min(out[e], c)
+    return prefix, out
+
+
+@given(st.integers(min_value=0, max_value=9999),
+       st.sampled_from(["cyclic", "blocked"]))
+def test_full_lb_round_matches_numpy(seed, order):
+    degs, src_dist, rng = _round_inputs(seed)
+    total = int(degs.sum())
+    assert 0 < total <= B
+
+    # 1. Inspector: prefix sum through the Pallas scan kernel.
+    (prefix,) = model.inspect_prefix(jnp.asarray(degs))
+    prefix = np.asarray(prefix)
+    np.testing.assert_array_equal(prefix, np.cumsum(degs))
+
+    # 2. Distribution: the schedule order is the host's choice — the kernel
+    #    must be order-agnostic. p = a pretend thread count.
+    ids = np.arange(total, dtype=np.int32)
+    p = 37
+    if order == "cyclic":
+        ids = np.concatenate([ids[t::p] for t in range(p)])
+    else:
+        w = -(-total // p)
+        ids = np.concatenate([ids[t * w:(t + 1) * w] for t in range(p)])
+    eids = np.zeros(B, np.int32)
+    eids[:total] = ids
+    weights = rng.uniform(0.0, 4.0, size=B).astype(np.float32)
+    valid = np.zeros(B, np.int32)
+    valid[:total] = 1
+    dst_slot = rng.integers(0, S, size=B).astype(np.int32)
+    cur = rng.uniform(0.0, 30.0, size=S).astype(np.float32)
+
+    # 3+4. Relax + min-merge through the L2 round step.
+    new, improved = model.relax_batch_minmerge(
+        jnp.asarray(prefix.astype(np.int32)), jnp.asarray(src_dist),
+        jnp.asarray(eids), jnp.asarray(weights), jnp.asarray(valid),
+        jnp.asarray(dst_slot), jnp.asarray(cur))
+
+    _, want = _numpy_round(degs, src_dist, ids, weights[:total],
+                           dst_slot[:total], cur)
+    np.testing.assert_allclose(np.asarray(new), want, rtol=1e-6)
+    got_improved = np.asarray(improved)
+    np.testing.assert_array_equal(got_improved, (want < cur).astype(np.int32))
+
+
+def test_order_invariance_cyclic_equals_blocked():
+    """The two distributions must produce identical merged labels — they
+    differ in memory behaviour only (paper §4.1)."""
+    degs, src_dist, rng = _round_inputs(123)
+    total = int(degs.sum())
+    weights = rng.uniform(0.0, 4.0, size=total).astype(np.float32)
+    dst_slot = rng.integers(0, S, size=total).astype(np.int32)
+    cur = rng.uniform(0.0, 30.0, size=S).astype(np.float32)
+
+    outs = []
+    for order in ["cyclic", "blocked"]:
+        ids = np.arange(total, dtype=np.int32)
+        p = 64
+        if order == "cyclic":
+            perm = np.concatenate([np.arange(t, total, p) for t in range(p)])
+        else:
+            w = -(-total // p)
+            perm = np.concatenate(
+                [np.arange(t * w, min((t + 1) * w, total)) for t in range(p)])
+        eids = np.zeros(B, np.int32)
+        eids[:total] = ids[perm]
+        wts = np.zeros(B, np.float32)
+        wts[:total] = weights[perm]
+        slots = np.zeros(B, np.int32)
+        slots[:total] = dst_slot[perm]
+        valid = np.zeros(B, np.int32)
+        valid[:total] = 1
+        prefix = np.cumsum(degs).astype(np.int32)
+        new, _ = model.relax_batch_minmerge(
+            jnp.asarray(prefix), jnp.asarray(src_dist), jnp.asarray(eids),
+            jnp.asarray(wts), jnp.asarray(valid), jnp.asarray(slots),
+            jnp.asarray(cur))
+        outs.append(np.asarray(new))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-6)

@@ -1,0 +1,76 @@
+//! Breadth-first search (push-style): hop counts from a source.
+//! An instance of the min-plus relaxation with unit edge weights.
+
+use crate::graph::CsrGraph;
+
+use super::INF;
+
+/// Per-edge relax weight: every hop costs 1 regardless of edge weight.
+#[inline]
+pub fn relax_weight(_edge_weight: f32) -> f32 {
+    1.0
+}
+
+/// Initial labels: `src = 0`, everything else unreached.
+pub fn init_labels(n: usize, src: u32) -> Vec<f32> {
+    let mut l = vec![INF; n];
+    l[src as usize] = 0.0;
+    l
+}
+
+/// Serial reference BFS (oracle for engine tests).
+pub fn oracle(g: &CsrGraph, src: u32) -> Vec<f32> {
+    let mut dist = vec![INF; g.num_vertices()];
+    let mut q = std::collections::VecDeque::new();
+    dist[src as usize] = 0.0;
+    q.push_back(src);
+    while let Some(v) = q.pop_front() {
+        let d = dist[v as usize];
+        let (dsts, _) = g.out_edges(v);
+        for &u in dsts {
+            if dist[u as usize] >= INF {
+                dist[u as usize] = d + 1.0;
+                q.push_back(u);
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::EdgeList;
+
+    #[test]
+    fn oracle_on_diamond() {
+        let mut el = EdgeList::new(4);
+        el.push(0, 1, 9.0);
+        el.push(0, 2, 9.0);
+        el.push(1, 3, 9.0);
+        el.push(2, 3, 9.0);
+        let g = CsrGraph::from_edge_list(&el);
+        assert_eq!(oracle(&g, 0), vec![0.0, 1.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn unreachable_stays_inf() {
+        let mut el = EdgeList::new(3);
+        el.push(0, 1, 1.0);
+        let g = CsrGraph::from_edge_list(&el);
+        let d = oracle(&g, 0);
+        assert_eq!(d[2], INF);
+    }
+
+    #[test]
+    fn weight_is_ignored() {
+        assert_eq!(relax_weight(123.0), 1.0);
+    }
+
+    #[test]
+    fn init_labels_shape() {
+        let l = init_labels(5, 2);
+        assert_eq!(l[2], 0.0);
+        assert!(l.iter().enumerate().all(|(i, &x)| i == 2 || x == INF));
+    }
+}

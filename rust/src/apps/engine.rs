@@ -1,0 +1,922 @@
+//! The single-GPU round engine.
+//!
+//! Drives the paper's execution loop (Fig. 3 lines 26–34) on the simulated
+//! GPU: each round the configured [`Balancer`] turns the active set into a
+//! [`Schedule`], the [`Simulator`] prices the kernel launches (this is where
+//! the strategies differ), and the operator is applied to produce next
+//! round's active set (this part is strategy-independent, so every balancer
+//! converges to identical labels — asserted by tests).
+//!
+//! Operator application runs either natively or through the AOT-compiled
+//! JAX/Pallas kernels via [`PjrtRuntime`] (`compute = Pjrt`): the LB kernel's
+//! huge-vertex relaxation, pr's contribution kernel, and kcore's filter
+//! kernel all execute as compiled HLO — python never runs here.
+
+use anyhow::{anyhow, Result};
+
+use crate::apps::worklist::{NextWorklist, WorklistKind};
+use crate::apps::{bfs, cc, kcore, pr, sssp, App, INF};
+use crate::gpu::{CostModel, GpuSpec, KernelStats, Simulator};
+use crate::graph::CsrGraph;
+use crate::lb::{Balancer, Direction, Distribution};
+use crate::runtime::PjrtRuntime;
+
+/// How operators are computed. The schedule/simulation is identical either
+/// way; `Pjrt` routes the numeric hot paths through the compiled artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeMode {
+    Native,
+    Pjrt,
+}
+
+/// Per-run engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub balancer: Balancer,
+    pub worklist: WorklistKind,
+    pub spec: GpuSpec,
+    pub cost: CostModel,
+    pub compute: ComputeMode,
+    pub pr_tol: f32,
+    pub kcore_k: u32,
+    pub max_rounds: u32,
+    /// Direction-optimizing bfs (Beamer-style push/pull switching) — the
+    /// variant Gunrock reports in Table 2's parentheses. Off by default
+    /// (the paper's D-IrGL does not support it).
+    pub bfs_direction_opt: bool,
+    /// Delta-stepping sssp bucket width (§2.1 names delta-stepping as the
+    /// canonical data-driven sssp); `None` = chaotic relaxation.
+    pub sssp_delta: Option<f32>,
+    /// Retain per-block kernel stats per round (needed by Figures 1 & 5;
+    /// off by default to keep sweeps lean).
+    pub record_blocks: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            balancer: Balancer::Alb {
+                distribution: Distribution::Cyclic,
+                threshold: None,
+            },
+            worklist: WorklistKind::Dense,
+            spec: GpuSpec::default_sim(),
+            cost: CostModel::default(),
+            compute: ComputeMode::Native,
+            pr_tol: pr::DEFAULT_TOL,
+            kcore_k: kcore::DEFAULT_K,
+            max_rounds: 10_000,
+            bfs_direction_opt: false,
+            sssp_delta: None,
+            record_blocks: false,
+        }
+    }
+}
+
+/// One round's record.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: u32,
+    pub active: u64,
+    pub edges: u64,
+    pub cycles: u64,
+    /// Whether the LB kernel launched this round (ALB adaptivity signal).
+    pub lb_triggered: bool,
+    /// Per-block stats, when `record_blocks` is set.
+    pub kernels: Option<Vec<KernelStats>>,
+}
+
+/// A completed run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub app: App,
+    pub labels: Vec<f32>,
+    pub rounds: Vec<RoundRecord>,
+    pub total_cycles: u64,
+}
+
+impl RunResult {
+    /// Simulated execution time in milliseconds on `spec`.
+    pub fn ms(&self, spec: &GpuSpec) -> f64 {
+        spec.cycles_to_ms(self.total_cycles)
+    }
+
+    pub fn total_edges(&self) -> u64 {
+        self.rounds.iter().map(|r| r.edges).sum()
+    }
+
+    pub fn rounds_with_lb(&self) -> usize {
+        self.rounds.iter().filter(|r| r.lb_triggered).count()
+    }
+}
+
+/// Run `app` on `g` under `cfg`. `source` is used by bfs/sssp; `pjrt` must
+/// be `Some` when `cfg.compute == Pjrt`.
+pub fn run(
+    app: App,
+    g: &mut CsrGraph,
+    source: u32,
+    cfg: &EngineConfig,
+    pjrt: Option<&PjrtRuntime>,
+) -> Result<RunResult> {
+    if cfg.compute == ComputeMode::Pjrt && pjrt.is_none() {
+        return Err(anyhow!("compute=Pjrt requires a loaded PjrtRuntime"));
+    }
+    match app {
+        App::Bfs if cfg.bfs_direction_opt => run_bfs_dopt(g, source, cfg),
+        App::Sssp if cfg.sssp_delta.is_some() => {
+            run_sssp_delta(g, source, cfg, cfg.sssp_delta.unwrap())
+        }
+        App::Bfs | App::Sssp | App::Cc => run_push(app, g, source, cfg, pjrt),
+        App::Pr => run_pr(g, cfg, pjrt),
+        App::Kcore => run_kcore(g, cfg, pjrt),
+    }
+}
+
+/// Relax weight for one push app.
+#[inline]
+pub(crate) fn relax_weight(app: App, w: f32) -> f32 {
+    match app {
+        App::Bfs => bfs::relax_weight(w),
+        App::Sssp => sssp::relax_weight(w),
+        App::Cc => cc::relax_weight(w),
+        _ => unreachable!("not a push app"),
+    }
+}
+
+// ------------------------------------------------------------------- push
+
+fn run_push(
+    app: App,
+    g: &mut CsrGraph,
+    source: u32,
+    cfg: &EngineConfig,
+    pjrt: Option<&PjrtRuntime>,
+) -> Result<RunResult> {
+    let n = g.num_vertices();
+    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+    let mut labels = match app {
+        App::Bfs => bfs::init_labels(n, source),
+        App::Sssp => sssp::init_labels(n, source),
+        App::Cc => cc::init_labels(n),
+        _ => unreachable!(),
+    };
+    let mut active: Vec<u32> = match app {
+        App::Bfs | App::Sssp => vec![source],
+        App::Cc => (0..n as u32).collect(),
+        _ => unreachable!(),
+    };
+    let mut rounds = Vec::new();
+    let mut total_cycles = 0u64;
+    let mut next = NextWorklist::new(n);
+
+    for round in 0..cfg.max_rounds {
+        if active.is_empty() {
+            break;
+        }
+        let scan = cfg.worklist.scan_cost(n as u64, active.len() as u64);
+        let sched =
+            cfg.balancer
+                .schedule(&active, g, Direction::Push, &cfg.spec, scan);
+        let simr = sim.simulate(&sched, true);
+        total_cycles += simr.total_cycles;
+        rounds.push(RoundRecord {
+            round,
+            active: active.len() as u64,
+            edges: sched.total_edges(),
+            cycles: simr.total_cycles,
+            lb_triggered: sched.lb.is_some(),
+            kernels: cfg.record_blocks.then(|| simr.kernels.clone()),
+        });
+
+        // --- operator application ---
+        if let (ComputeMode::Pjrt, Some(rt), Some(lb)) =
+            (cfg.compute, pjrt, &sched.lb)
+        {
+            // Huge bin through the compiled LB kernel...
+            relax_huge_pjrt(rt, g, &lb.vertices, app, &mut labels, &mut next)?;
+            // ...the rest natively (TWC items are exactly active \ huge).
+            for item in &sched.twc {
+                relax_native(g, app, item.vertex, &mut labels, &mut next);
+            }
+        } else {
+            for &v in &active {
+                relax_native(g, app, v, &mut labels, &mut next);
+            }
+        }
+        active = next.take_sorted();
+    }
+    Ok(RunResult { app, labels, rounds, total_cycles })
+}
+
+#[inline]
+pub(crate) fn relax_native(
+    g: &CsrGraph,
+    app: App,
+    v: u32,
+    labels: &mut [f32],
+    next: &mut NextWorklist,
+) {
+    let dv = labels[v as usize];
+    if dv >= INF {
+        return;
+    }
+    let (dsts, ws) = g.out_edges(v);
+    for (&dst, &w) in dsts.iter().zip(ws) {
+        let cand = dv + relax_weight(app, w);
+        if cand < labels[dst as usize] {
+            labels[dst as usize] = cand;
+            next.push(dst);
+        }
+    }
+}
+
+/// Relax all edges of `huge` through the AOT LB kernel, in groups bounded by
+/// the largest compiled huge-table variant.
+pub(crate) fn relax_huge_pjrt(
+    rt: &PjrtRuntime,
+    g: &CsrGraph,
+    huge: &[u32],
+    app: App,
+    labels: &mut [f32],
+    next: &mut NextWorklist,
+) -> Result<()> {
+    let max_h = rt.max_relax_h().max(1);
+    for group in huge.chunks(max_h) {
+        // Prefix + source labels for this group (kernel inputs).
+        let mut prefix = Vec::with_capacity(group.len());
+        let mut src_dist = Vec::with_capacity(group.len());
+        let mut total = 0u64;
+        for &v in group {
+            total += g.out_degree(v);
+            prefix.push(u32::try_from(total).map_err(|_| {
+                anyhow!("huge group exceeds u32 edge space")
+            })?);
+            src_dist.push(labels[v as usize]);
+        }
+        // Flattened edge ids + relax weights + destinations (host knows the
+        // eid -> (dst, w) map from CSR; the kernel recovers eid -> src).
+        let mut eids = Vec::with_capacity(total as usize);
+        let mut weights = Vec::with_capacity(total as usize);
+        let mut dsts = Vec::with_capacity(total as usize);
+        let mut e = 0u32;
+        for &v in group {
+            let (d, w) = g.out_edges(v);
+            for (&dst, &wt) in d.iter().zip(w) {
+                eids.push(e);
+                weights.push(relax_weight(app, wt));
+                dsts.push(dst);
+                e += 1;
+            }
+        }
+        let (_src, cand) = rt.edge_relax(&prefix, &src_dist, &eids, &weights)?;
+        for (i, &c) in cand.iter().enumerate() {
+            // Skip relaxations from unreached sources (INF + w).
+            if c >= INF {
+                continue;
+            }
+            let dst = dsts[i] as usize;
+            if c < labels[dst] {
+                labels[dst] = c;
+                next.push(dsts[i]);
+            }
+        }
+    }
+    Ok(())
+}
+
+
+// --------------------------------------------------- direction-opt bfs
+
+/// Direction-optimizing bfs (Beamer-style): push from the frontier while it
+/// is small; switch to pull (each unvisited vertex scans in-edges for a
+/// visited parent, early-exit) when the frontier's out-edge volume exceeds
+/// a fraction of the unexplored edges. This is Gunrock's bfs variant that
+/// the paper quotes in Table 2's parentheses.
+fn run_bfs_dopt(
+    g: &mut CsrGraph,
+    source: u32,
+    cfg: &EngineConfig,
+) -> Result<RunResult> {
+    const ALPHA: u64 = 14; // Beamer's push->pull switch factor
+    const BETA: u64 = 24; //  pull->push switch factor
+
+    g.build_csc();
+    let n = g.num_vertices();
+    let m = g.num_edges() as u64;
+    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+    let mut labels = bfs::init_labels(n, source);
+    let mut frontier: Vec<u32> = vec![source];
+    let mut rounds = Vec::new();
+    let mut total_cycles = 0u64;
+    let mut explored = 0u64;
+    let mut pulling = false;
+
+    for round in 0..cfg.max_rounds {
+        if frontier.is_empty() {
+            break;
+        }
+        let mf: u64 = frontier.iter().map(|&v| g.out_degree(v)).sum();
+        let mu = m.saturating_sub(explored);
+        if !pulling && mf * ALPHA > mu {
+            pulling = true;
+        } else if pulling && (frontier.len() as u64) * BETA < n as u64 {
+            // Frontier shrank again -> switch back to push.
+            pulling = false;
+        }
+
+        let mut next = NextWorklist::new(n);
+        let (sched, simr);
+        if pulling {
+            // Pull round: every unvisited vertex scans its in-edges for a
+            // parent on the current frontier, early-exiting on the first
+            // hit. Work items carry the edges actually scanned, so the
+            // simulated cost reflects the early exit.
+            let cur_level: f32 = labels[frontier[0] as usize];
+            let mut items = Vec::new();
+            let mut scanned_total = 0u64;
+            for v in 0..n as u32 {
+                if labels[v as usize] < INF {
+                    continue;
+                }
+                let (srcs, _) = g.in_edges(v);
+                let mut scanned = 0u64;
+                for &u in srcs {
+                    scanned += 1;
+                    if labels[u as usize] == cur_level {
+                        labels[v as usize] = cur_level + 1.0;
+                        next.push(v);
+                        break;
+                    }
+                }
+                scanned_total += scanned;
+                items.push(crate::lb::VertexItem {
+                    vertex: v,
+                    degree: scanned,
+                    unit: crate::lb::twc::bin(scanned, &cfg.spec),
+                });
+            }
+            let scan = cfg.worklist.scan_cost(n as u64, items.len() as u64);
+            sched = crate::lb::Schedule {
+                twc: items,
+                lb: None,
+                scan_vertices: scan,
+                prefix_items: 0,
+            };
+            simr = sim.simulate(&sched, false);
+            explored += scanned_total;
+        } else {
+            let scan = cfg.worklist.scan_cost(n as u64, frontier.len() as u64);
+            sched = cfg
+                .balancer
+                .schedule(&frontier, g, Direction::Push, &cfg.spec, scan);
+            simr = sim.simulate(&sched, true);
+            for &v in &frontier {
+                relax_native(g, App::Bfs, v, &mut labels, &mut next);
+            }
+            explored += mf;
+        }
+        total_cycles += simr.total_cycles;
+        rounds.push(RoundRecord {
+            round,
+            active: frontier.len() as u64,
+            edges: sched.total_edges(),
+            cycles: simr.total_cycles,
+            lb_triggered: sched.lb.is_some(),
+            kernels: cfg.record_blocks.then(|| simr.kernels.clone()),
+        });
+        frontier = next.take_sorted();
+    }
+    Ok(RunResult { app: App::Bfs, labels, rounds, total_cycles })
+}
+
+// --------------------------------------------------- delta-stepping sssp
+
+/// Delta-stepping sssp (Meyer & Sanders; §2.1's canonical data-driven
+/// algorithm): settle distance buckets of width `delta` in order — light
+/// edges (w <= delta) relax iteratively within the bucket, heavy edges once
+/// when it settles. Each inner iteration is one simulated round.
+fn run_sssp_delta(
+    g: &mut CsrGraph,
+    source: u32,
+    cfg: &EngineConfig,
+    delta: f32,
+) -> Result<RunResult> {
+    assert!(delta > 0.0);
+    let n = g.num_vertices();
+    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+    let mut labels = sssp::init_labels(n, source);
+    let bucket_of = |d: f32| (d / delta) as usize;
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new()];
+    buckets[0].push(source);
+    let mut rounds = Vec::new();
+    let mut total_cycles = 0u64;
+    let mut round = 0u32;
+    let mut k = 0usize;
+
+    let requeue = |buckets: &mut Vec<Vec<u32>>, v: u32, d: f32| {
+        let b = bucket_of(d);
+        if b >= buckets.len() {
+            buckets.resize(b + 1, Vec::new());
+        }
+        buckets[b].push(v);
+    };
+
+    while k < buckets.len() && round < cfg.max_rounds {
+        let mut settled: Vec<u32> = Vec::new();
+        // Light phase: iterate until bucket k stops refilling.
+        loop {
+            let mut active: Vec<u32> = std::mem::take(&mut buckets[k]);
+            active.sort_unstable();
+            active.dedup();
+            active.retain(|&v| bucket_of(labels[v as usize]) == k);
+            if active.is_empty() || round >= cfg.max_rounds {
+                break;
+            }
+            let scan = cfg.worklist.scan_cost(n as u64, active.len() as u64);
+            let sched = cfg
+                .balancer
+                .schedule(&active, g, Direction::Push, &cfg.spec, scan);
+            let simr = sim.simulate(&sched, true);
+            total_cycles += simr.total_cycles;
+            rounds.push(RoundRecord {
+                round,
+                active: active.len() as u64,
+                edges: sched.total_edges(),
+                cycles: simr.total_cycles,
+                lb_triggered: sched.lb.is_some(),
+                kernels: cfg.record_blocks.then(|| simr.kernels.clone()),
+            });
+            round += 1;
+            for &v in &active {
+                let dv = labels[v as usize];
+                if dv >= INF {
+                    continue;
+                }
+                let (dsts, ws) = g.out_edges(v);
+                for (&dst, &w) in dsts.iter().zip(ws) {
+                    if w <= delta {
+                        let cand = dv + w;
+                        if cand < labels[dst as usize] {
+                            labels[dst as usize] = cand;
+                            requeue(&mut buckets, dst, cand);
+                        }
+                    }
+                }
+            }
+            settled.extend_from_slice(&active);
+        }
+        // Heavy phase: one pass over the settled vertices' heavy edges.
+        settled.sort_unstable();
+        settled.dedup();
+        if !settled.is_empty() && round < cfg.max_rounds {
+            let scan = cfg.worklist.scan_cost(n as u64, settled.len() as u64);
+            let sched = cfg
+                .balancer
+                .schedule(&settled, g, Direction::Push, &cfg.spec, scan);
+            let simr = sim.simulate(&sched, true);
+            total_cycles += simr.total_cycles;
+            rounds.push(RoundRecord {
+                round,
+                active: settled.len() as u64,
+                edges: sched.total_edges(),
+                cycles: simr.total_cycles,
+                lb_triggered: sched.lb.is_some(),
+                kernels: cfg.record_blocks.then(|| simr.kernels.clone()),
+            });
+            round += 1;
+            for &v in &settled {
+                let dv = labels[v as usize];
+                if dv >= INF {
+                    continue;
+                }
+                let (dsts, ws) = g.out_edges(v);
+                for (&dst, &w) in dsts.iter().zip(ws) {
+                    if w > delta {
+                        let cand = dv + w;
+                        if cand < labels[dst as usize] {
+                            labels[dst as usize] = cand;
+                            requeue(&mut buckets, dst, cand);
+                        }
+                    }
+                }
+            }
+        }
+        k += 1;
+    }
+    Ok(RunResult { app: App::Sssp, labels, rounds, total_cycles })
+}
+
+// --------------------------------------------------------------------- pr
+
+fn run_pr(
+    g: &mut CsrGraph,
+    cfg: &EngineConfig,
+    pjrt: Option<&PjrtRuntime>,
+) -> Result<RunResult> {
+    g.build_csc();
+    let n = g.num_vertices();
+    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+    let all: Vec<u32> = (0..n as u32).collect();
+    let out_deg: Vec<u32> =
+        (0..n as u32).map(|v| g.out_degree(v) as u32).collect();
+    let mut ranks = pr::init_ranks(n);
+    let mut rounds = Vec::new();
+    let mut total_cycles = 0u64;
+
+    for round in 0..cfg.max_rounds {
+        // Topology-driven: all vertices active, pull direction.
+        let scan = cfg.worklist.scan_cost(n as u64, n as u64);
+        let sched =
+            cfg.balancer.schedule(&all, g, Direction::Pull, &cfg.spec, scan);
+        let simr = sim.simulate(&sched, false);
+        total_cycles += simr.total_cycles;
+        rounds.push(RoundRecord {
+            round,
+            active: n as u64,
+            edges: sched.total_edges(),
+            cycles: simr.total_cycles,
+            lb_triggered: sched.lb.is_some(),
+            kernels: cfg.record_blocks.then(|| simr.kernels.clone()),
+        });
+
+        let contrib = match (cfg.compute, pjrt) {
+            (ComputeMode::Pjrt, Some(rt)) => {
+                // Tile through the compiled elementwise kernel.
+                let mut c = Vec::with_capacity(n);
+                let tile = 16_384.min(n.max(1));
+                for start in (0..n).step_by(tile) {
+                    let end = (start + tile).min(n);
+                    c.extend(rt.pr_pull(
+                        &ranks[start..end],
+                        &out_deg[start..end],
+                        pr::DAMPING,
+                    )?);
+                }
+                c
+            }
+            _ => pr::contributions(g, &ranks),
+        };
+        let (new_ranks, delta) = pr::pull_round(g, &ranks, &contrib);
+        ranks = new_ranks;
+        if delta < cfg.pr_tol {
+            break;
+        }
+    }
+    Ok(RunResult { app: App::Pr, labels: ranks, rounds, total_cycles })
+}
+
+// ------------------------------------------------------------------ kcore
+
+fn run_kcore(
+    g: &mut CsrGraph,
+    cfg: &EngineConfig,
+    pjrt: Option<&PjrtRuntime>,
+) -> Result<RunResult> {
+    g.build_csc();
+    let n = g.num_vertices();
+    let k = cfg.kcore_k;
+    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+    let mut deg: Vec<u32> = (0..n as u32).map(|v| g.in_degree(v) as u32).collect();
+    let mut alive = vec![true; n];
+    let mut rounds = Vec::new();
+    let mut total_cycles = 0u64;
+
+    // Round 0: the initial filter over all vertices (scan only, no edges).
+    let mut dying: Vec<u32> = {
+        let flags = survival(pjrt, cfg, &deg, k)?;
+        (0..n as u32).filter(|&v| !flags[v as usize]).collect()
+    };
+    for &v in &dying {
+        alive[v as usize] = false;
+    }
+    let scan0 = cfg.worklist.scan_cost(n as u64, n as u64);
+    let sched0 = crate::lb::Schedule {
+        twc: Vec::new(),
+        lb: None,
+        scan_vertices: scan0,
+        prefix_items: 0,
+    };
+    let simr0 = sim.simulate(&sched0, false);
+    total_cycles += simr0.total_cycles;
+    rounds.push(RoundRecord {
+        round: 0,
+        active: n as u64,
+        edges: 0,
+        cycles: simr0.total_cycles,
+        lb_triggered: false,
+        kernels: cfg.record_blocks.then(|| simr0.kernels.clone()),
+    });
+
+    let mut round = 1;
+    while !dying.is_empty() && round < cfg.max_rounds {
+        // Work this round: the dying vertices' out-edges (decrement push).
+        let scan = cfg.worklist.scan_cost(n as u64, dying.len() as u64);
+        let sched =
+            cfg.balancer
+                .schedule(&dying, g, Direction::Push, &cfg.spec, scan);
+        let simr = sim.simulate(&sched, true); // atomicSub per decrement
+        total_cycles += simr.total_cycles;
+        rounds.push(RoundRecord {
+            round,
+            active: dying.len() as u64,
+            edges: sched.total_edges(),
+            cycles: simr.total_cycles,
+            lb_triggered: sched.lb.is_some(),
+            kernels: cfg.record_blocks.then(|| simr.kernels.clone()),
+        });
+
+        // Decrement successors; collect candidates whose degree dropped.
+        let mut touched = Vec::new();
+        for &v in &dying {
+            let (dsts, _) = g.out_edges(v);
+            for &u in dsts {
+                if alive[u as usize] {
+                    deg[u as usize] -= 1;
+                    touched.push(u);
+                }
+            }
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        // Threshold test (compiled kernel in Pjrt mode).
+        let tdeg: Vec<u32> = touched.iter().map(|&u| deg[u as usize]).collect();
+        let flags = survival_list(pjrt, cfg, &tdeg, k)?;
+        let mut next = Vec::new();
+        for (i, &u) in touched.iter().enumerate() {
+            if !flags[i] && alive[u as usize] {
+                alive[u as usize] = false;
+                next.push(u);
+            }
+        }
+        dying = next;
+        round += 1;
+    }
+    let labels = alive.iter().map(|&a| if a { 1.0 } else { 0.0 }).collect();
+    Ok(RunResult { app: App::Kcore, labels, rounds, total_cycles })
+}
+
+/// Survival flags for a full degree array.
+fn survival(
+    pjrt: Option<&PjrtRuntime>,
+    cfg: &EngineConfig,
+    deg: &[u32],
+    k: u32,
+) -> Result<Vec<bool>> {
+    survival_list(pjrt, cfg, deg, k)
+}
+
+/// Survival flags for an arbitrary degree list, tiled through the kernel in
+/// Pjrt mode.
+fn survival_list(
+    pjrt: Option<&PjrtRuntime>,
+    cfg: &EngineConfig,
+    deg: &[u32],
+    k: u32,
+) -> Result<Vec<bool>> {
+    match (cfg.compute, pjrt) {
+        (ComputeMode::Pjrt, Some(rt)) if !deg.is_empty() => {
+            let mut out = Vec::with_capacity(deg.len());
+            let tile = 16_384.min(deg.len());
+            for start in (0..deg.len()).step_by(tile) {
+                let end = (start + tile).min(deg.len());
+                out.extend(rt.kcore_alive(&deg[start..end], k)?);
+            }
+            Ok(out)
+        }
+        _ => Ok(deg.iter().map(|&d| d >= k).collect()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::rmat::{self, RmatConfig};
+    use crate::graph::EdgeList;
+
+    fn rmat(scale: u32, seed: u64) -> CsrGraph {
+        CsrGraph::from_edge_list(&rmat::generate(&RmatConfig::paper(scale, seed)))
+    }
+
+    fn cfg_with(balancer: Balancer) -> EngineConfig {
+        EngineConfig { balancer, ..EngineConfig::default() }
+    }
+
+    fn all_balancers() -> Vec<Balancer> {
+        vec![
+            Balancer::Vertex,
+            Balancer::Twc,
+            Balancer::EdgeLb { distribution: Distribution::Cyclic },
+            Balancer::Alb { distribution: Distribution::Cyclic, threshold: None },
+            Balancer::Alb { distribution: Distribution::Blocked, threshold: None },
+        ]
+    }
+
+    #[test]
+    fn bfs_matches_oracle_under_every_balancer() {
+        let mut g = rmat(9, 1);
+        let src = g.max_out_degree_vertex();
+        let want = bfs::oracle(&g, src);
+        for b in all_balancers() {
+            let r = run(App::Bfs, &mut g, src, &cfg_with(b.clone()), None).unwrap();
+            assert_eq!(r.labels, want, "balancer {}", b.name());
+        }
+    }
+
+    #[test]
+    fn sssp_matches_oracle() {
+        let mut g = rmat(9, 2);
+        let src = g.max_out_degree_vertex();
+        let want = sssp::oracle(&g, src);
+        let r = run(App::Sssp, &mut g, src, &EngineConfig::default(), None).unwrap();
+        assert_eq!(r.labels, want);
+    }
+
+    #[test]
+    fn cc_matches_oracle() {
+        let mut g = rmat(8, 3);
+        let want = cc::oracle(&g);
+        let r = run(App::Cc, &mut g, 0, &EngineConfig::default(), None).unwrap();
+        assert_eq!(r.labels, want);
+    }
+
+    #[test]
+    fn pr_matches_oracle() {
+        let mut g = rmat(8, 4);
+        let cfg = EngineConfig { max_rounds: 100, ..EngineConfig::default() };
+        let r = run(App::Pr, &mut g.clone(), 0, &cfg, None).unwrap();
+        let (want, oracle_rounds) = pr::oracle(&mut g, cfg.pr_tol, 100);
+        assert_eq!(r.labels, want);
+        assert_eq!(r.rounds.len() as u32, oracle_rounds);
+    }
+
+    #[test]
+    fn kcore_matches_oracle() {
+        let mut g = rmat(8, 5);
+        let cfg = EngineConfig { kcore_k: 8, ..EngineConfig::default() };
+        let r = run(App::Kcore, &mut g.clone(), 0, &cfg, None).unwrap();
+        let (want, _) = kcore::oracle(&mut g, 8);
+        let got: Vec<bool> = r.labels.iter().map(|&x| x > 0.5).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn alb_faster_than_twc_on_skewed_input() {
+        // Table 2's headline: rmat push apps speed up under ALB.
+        let mut g = rmat(12, 6);
+        let src = g.max_out_degree_vertex();
+        let alb = run(App::Bfs, &mut g, src, &cfg_with(Balancer::Alb {
+            distribution: Distribution::Cyclic,
+            threshold: None,
+        }), None)
+        .unwrap();
+        let twc = run(App::Bfs, &mut g, src, &cfg_with(Balancer::Twc), None).unwrap();
+        assert_eq!(alb.labels, twc.labels);
+        assert!(
+            alb.total_cycles < twc.total_cycles,
+            "alb {} vs twc {}",
+            alb.total_cycles,
+            twc.total_cycles
+        );
+        assert!(alb.rounds_with_lb() > 0, "ALB must trigger on rmat");
+    }
+
+    #[test]
+    fn alb_stays_dormant_on_flat_degrees() {
+        // road-USA regime: no huge vertices, LB never launches.
+        let mut el = EdgeList::new(4096);
+        for v in 0..4095u32 {
+            el.push(v, v + 1, 1.0);
+        }
+        let mut g = CsrGraph::from_edge_list(&el);
+        let r = run(App::Bfs, &mut g, 0, &EngineConfig::default(), None).unwrap();
+        assert_eq!(r.rounds_with_lb(), 0);
+    }
+
+    #[test]
+    fn sparse_worklist_cheaper_when_few_active() {
+        // §6.1: the dense scan dominates on long-diameter graphs.
+        let mut el = EdgeList::new(8192);
+        for v in 0..8191u32 {
+            el.push(v, v + 1, 1.0);
+        }
+        let mut g = CsrGraph::from_edge_list(&el);
+        let dense = run(App::Bfs, &mut g, 0, &EngineConfig {
+            worklist: WorklistKind::Dense,
+            ..EngineConfig::default()
+        }, None)
+        .unwrap();
+        let sparse = run(App::Bfs, &mut g, 0, &EngineConfig {
+            worklist: WorklistKind::Sparse,
+            ..EngineConfig::default()
+        }, None)
+        .unwrap();
+        assert_eq!(dense.labels, sparse.labels);
+        assert!(sparse.total_cycles < dense.total_cycles);
+    }
+
+    #[test]
+    fn pjrt_mode_requires_runtime() {
+        let mut g = rmat(6, 7);
+        let cfg = EngineConfig { compute: ComputeMode::Pjrt, ..EngineConfig::default() };
+        assert!(run(App::Bfs, &mut g, 0, &cfg, None).is_err());
+    }
+
+    #[test]
+    fn record_blocks_attaches_kernel_stats() {
+        let mut g = rmat(7, 8);
+        let cfg = EngineConfig { record_blocks: true, ..EngineConfig::default() };
+        let src = g.max_out_degree_vertex();
+        let r = run(App::Bfs, &mut g, src, &cfg, None).unwrap();
+        assert!(r.rounds[0].kernels.is_some());
+    }
+
+
+    #[test]
+    fn direction_opt_bfs_matches_oracle() {
+        let mut g = rmat(11, 13);
+        let src = g.max_out_degree_vertex();
+        let want = bfs::oracle(&g, src);
+        let cfg = EngineConfig { bfs_direction_opt: true, ..EngineConfig::default() };
+        let r = run(App::Bfs, &mut g, src, &cfg, None).unwrap();
+        assert_eq!(r.labels, want);
+    }
+
+    #[test]
+    fn direction_opt_helps_on_power_law() {
+        // Big frontiers on rmat -> pull rounds with early exit beat pushing
+        // the whole frontier's edges (Gunrock's parenthetical Table 2 bfs).
+        let mut g = rmat(12, 14);
+        let src = g.max_out_degree_vertex();
+        let plain = run(App::Bfs, &mut g, src, &EngineConfig::default(), None).unwrap();
+        let cfg = EngineConfig { bfs_direction_opt: true, ..EngineConfig::default() };
+        let dopt = run(App::Bfs, &mut g, src, &cfg, None).unwrap();
+        assert_eq!(plain.labels, dopt.labels);
+        assert!(
+            dopt.total_cycles < plain.total_cycles,
+            "dopt {} vs plain {}",
+            dopt.total_cycles,
+            plain.total_cycles
+        );
+    }
+
+    #[test]
+    fn delta_stepping_matches_dijkstra() {
+        let mut g = rmat(10, 15);
+        let src = g.max_out_degree_vertex();
+        let want = sssp::oracle(&g, src);
+        for delta in [1.0f32, 10.0, 50.0, 1000.0] {
+            let cfg = EngineConfig {
+                sssp_delta: Some(delta),
+                max_rounds: 1_000_000,
+                ..EngineConfig::default()
+            };
+            let r = run(App::Sssp, &mut g, src, &cfg, None).unwrap();
+            assert_eq!(r.labels, want, "delta {delta}");
+        }
+    }
+
+    #[test]
+    fn delta_stepping_does_fewer_wasted_relaxations() {
+        // Bucketed ordering re-relaxes fewer edges than chaotic rounds on
+        // weighted graphs: total processed edges should not be larger.
+        let mut g = rmat(11, 16);
+        let src = g.max_out_degree_vertex();
+        let plain = run(App::Sssp, &mut g, src, &EngineConfig::default(), None).unwrap();
+        let cfg = EngineConfig {
+            sssp_delta: Some(25.0),
+            max_rounds: 1_000_000,
+            ..EngineConfig::default()
+        };
+        let ds = run(App::Sssp, &mut g, src, &cfg, None).unwrap();
+        assert_eq!(plain.labels, ds.labels);
+        assert!(ds.total_edges() > 0);
+    }
+
+    #[test]
+    fn enterprise_between_twc_and_alb() {
+        let mut g = rmat(12, 17);
+        let src = g.max_out_degree_vertex();
+        let t = run(App::Bfs, &mut g, src, &cfg_with(Balancer::Twc), None).unwrap();
+        let e = run(App::Bfs, &mut g, src, &cfg_with(Balancer::Enterprise), None).unwrap();
+        let a = run(App::Bfs, &mut g, src, &cfg_with(Balancer::Alb {
+            distribution: Distribution::Cyclic,
+            threshold: None,
+        }), None).unwrap();
+        assert_eq!(t.labels, e.labels);
+        assert_eq!(t.labels, a.labels);
+        assert!(e.total_cycles < t.total_cycles, "enterprise must beat TWC");
+        assert!(a.total_cycles <= e.total_cycles, "ALB must not lose to enterprise");
+    }
+
+    #[test]
+    fn run_result_accounting() {
+        let mut g = rmat(7, 9);
+        let src = g.max_out_degree_vertex();
+        let r = run(App::Bfs, &mut g, src, &EngineConfig::default(), None).unwrap();
+        assert!(r.total_cycles > 0);
+        assert_eq!(r.total_cycles, r.rounds.iter().map(|x| x.cycles).sum::<u64>());
+        assert!(r.ms(&GpuSpec::default_sim()) > 0.0);
+        assert!(r.total_edges() > 0);
+    }
+}

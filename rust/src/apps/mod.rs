@@ -1,0 +1,106 @@
+//! The five evaluated applications (paper §5) and the round engine.
+//!
+//! Push-style (operator reads the active vertex, updates out-neighbors):
+//! [`bfs`], [`sssp`], [`cc`] — all instances of the min-plus relaxation the
+//! LB kernel accelerates. Pull-style (operator reads in-neighbors, updates
+//! the active vertex): [`pr`], [`kcore`].
+//!
+//! [`engine`] drives rounds: strategy -> schedule -> simulated kernels ->
+//! operator application (native Rust or the AOT-compiled PJRT kernels).
+
+pub mod bfs;
+pub mod cc;
+pub mod engine;
+pub mod kcore;
+pub mod pr;
+pub mod sssp;
+pub mod worklist;
+
+use crate::lb::Direction;
+
+/// Label value standing in for "unreached" (2^30, f32-exact; shared with the
+/// Pallas kernels' `ref.INF`).
+pub const INF: f32 = 1_073_741_824.0;
+
+/// One of the paper's five applications.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum App {
+    Bfs,
+    Sssp,
+    Cc,
+    Pr,
+    Kcore,
+}
+
+/// All apps, in the paper's table order.
+pub const ALL_APPS: [App; 5] = [App::Bfs, App::Cc, App::Kcore, App::Pr, App::Sssp];
+
+impl App {
+    pub fn name(&self) -> &'static str {
+        match self {
+            App::Bfs => "bfs",
+            App::Sssp => "sssp",
+            App::Cc => "cc",
+            App::Pr => "pr",
+            App::Kcore => "kcore",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<App> {
+        match s {
+            "bfs" => Some(App::Bfs),
+            "sssp" => Some(App::Sssp),
+            "cc" => Some(App::Cc),
+            "pr" | "pagerank" => Some(App::Pr),
+            "kcore" | "k-core" => Some(App::Kcore),
+            _ => None,
+        }
+    }
+
+    /// §5: push for bfs/cc/sssp, pull for pr/kcore.
+    pub fn direction(&self) -> Direction {
+        match self {
+            App::Bfs | App::Sssp | App::Cc => Direction::Push,
+            App::Pr | App::Kcore => Direction::Pull,
+        }
+    }
+
+    pub fn is_push(&self) -> bool {
+        self.direction() == Direction::Push
+    }
+
+    /// Does this app need a source vertex?
+    pub fn needs_source(&self) -> bool {
+        matches!(self, App::Bfs | App::Sssp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for app in ALL_APPS {
+            assert_eq!(App::parse(app.name()), Some(app));
+        }
+        assert_eq!(App::parse("pagerank"), Some(App::Pr));
+        assert_eq!(App::parse("nope"), None);
+    }
+
+    #[test]
+    fn directions_match_paper() {
+        assert!(App::Bfs.is_push());
+        assert!(App::Sssp.is_push());
+        assert!(App::Cc.is_push());
+        assert!(!App::Pr.is_push());
+        assert!(!App::Kcore.is_push());
+    }
+
+    #[test]
+    fn sources() {
+        assert!(App::Bfs.needs_source());
+        assert!(App::Sssp.needs_source());
+        assert!(!App::Pr.needs_source());
+    }
+}

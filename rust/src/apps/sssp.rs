@@ -1,0 +1,88 @@
+//! Single-source shortest path (push-style): the paper's running example
+//! (Fig. 2). Data-driven Bellman-Ford / chaotic relaxation over the min-plus
+//! semiring with the graph's edge weights.
+
+use crate::graph::CsrGraph;
+
+use super::INF;
+
+/// Per-edge relax weight: the edge's own weight.
+#[inline]
+pub fn relax_weight(edge_weight: f32) -> f32 {
+    edge_weight
+}
+
+/// Initial labels: `src = 0`, everything else unreached.
+pub fn init_labels(n: usize, src: u32) -> Vec<f32> {
+    let mut l = vec![INF; n];
+    l[src as usize] = 0.0;
+    l
+}
+
+/// Serial reference Dijkstra (oracle for engine tests). Weights must be
+/// non-negative, which all generators guarantee.
+pub fn oracle(g: &CsrGraph, src: u32) -> Vec<f32> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut dist = vec![INF; g.num_vertices()];
+    let mut heap: BinaryHeap<Reverse<(u64, u32)>> = BinaryHeap::new();
+    dist[src as usize] = 0.0;
+    heap.push(Reverse((0, src)));
+    while let Some(Reverse((d_bits, v))) = heap.pop() {
+        let d = d_bits as f32;
+        if d > dist[v as usize] {
+            continue;
+        }
+        let (dsts, ws) = g.out_edges(v);
+        for (&u, &w) in dsts.iter().zip(ws) {
+            let cand = d + w;
+            if cand < dist[u as usize] {
+                dist[u as usize] = cand;
+                // Integer weights => exact f32 -> u64 keying.
+                heap.push(Reverse((cand as u64, u)));
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::EdgeList;
+
+    #[test]
+    fn oracle_prefers_cheaper_path() {
+        // 0 -> 1 (10), 0 -> 2 (1), 2 -> 1 (2): best 0->1 is 3.
+        let mut el = EdgeList::new(3);
+        el.push(0, 1, 10.0);
+        el.push(0, 2, 1.0);
+        el.push(2, 1, 2.0);
+        let g = CsrGraph::from_edge_list(&el);
+        assert_eq!(oracle(&g, 0), vec![0.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn weight_passthrough() {
+        assert_eq!(relax_weight(7.5), 7.5);
+    }
+
+    #[test]
+    fn disconnected_is_inf() {
+        let el = EdgeList::new(2);
+        let g = CsrGraph::from_edge_list(&el);
+        assert_eq!(oracle(&g, 0)[1], INF);
+    }
+
+    #[test]
+    fn oracle_matches_bfs_on_unit_weights() {
+        use crate::graph::gen::rmat::{self, RmatConfig};
+        let mut cfg = RmatConfig::paper(8, 3);
+        cfg.max_weight = 1;
+        let el = rmat::generate(&cfg);
+        let g = CsrGraph::from_edge_list(&el);
+        let s = oracle(&g, 0);
+        let b = crate::apps::bfs::oracle(&g, 0);
+        assert_eq!(s, b);
+    }
+}

@@ -1,0 +1,180 @@
+//! Gluon-like BSP communication substrate (paper §5; Dathathri et al. [8]).
+//!
+//! After each compute round the coordinator reconciles boundary vertices:
+//! **reduce** — changed mirror values flow to the master (min for the
+//! distance apps, sum for pagerank partials / kcore decrements) — then
+//! **broadcast** — updated master values flow back to every mirror.
+//!
+//! The substrate also prices each round's traffic on a latency+bandwidth
+//! network model with distinct intra-host (PCIe/NVLink-class) and
+//! inter-host (Omni-Path-class) links, reproducing the Momentum (single
+//! host) and Bridges (8 hosts x 2 GPUs) testbeds.
+
+/// Reduction operator applied at the master.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    /// Keep the minimum (bfs/sssp/cc labels).
+    Min,
+    /// Accumulate (pagerank partial sums, kcore degree decrements).
+    Sum,
+}
+
+/// Latency/bandwidth model per link class, in simulated GPU cycles.
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    /// GPUs per host: pairs within a host use the intra link.
+    pub gpus_per_host: u32,
+    /// Per-round fixed latency for any intra-host exchange.
+    pub intra_alpha_cycles: u64,
+    /// Bytes per cycle on the intra-host link.
+    pub intra_bytes_per_cycle: f64,
+    pub inter_alpha_cycles: u64,
+    pub inter_bytes_per_cycle: f64,
+}
+
+impl NetworkModel {
+    /// Momentum-like: 6 GPUs in one box (PCIe-class links only).
+    ///
+    /// Per-round fixed latencies (alpha) are scaled down by the same factor
+    /// as the bundled inputs, exactly like `CostModel::cycles_launch`
+    /// (DESIGN.md §5): what must be preserved is the latency:work ratio,
+    /// else round-synchronization cost swamps the scaled-down compute and
+    /// hides the comp-side effects Figures 7/10/11 exist to show.
+    /// Bandwidth terms are left unscaled — traffic volume shrinks with the
+    /// inputs by itself.
+    pub fn single_host() -> Self {
+        NetworkModel {
+            gpus_per_host: u32::MAX,
+            intra_alpha_cycles: 100,
+            intra_bytes_per_cycle: 12.0,
+            inter_alpha_cycles: 0,
+            inter_bytes_per_cycle: f64::INFINITY,
+        }
+    }
+
+    /// Bridges-like: 2 GPUs per host, Omni-Path between hosts.
+    pub fn cluster(gpus_per_host: u32) -> Self {
+        NetworkModel {
+            gpus_per_host,
+            intra_alpha_cycles: 100,
+            intra_bytes_per_cycle: 12.0,
+            inter_alpha_cycles: 500,
+            inter_bytes_per_cycle: 3.0,
+        }
+    }
+
+    /// Are GPUs `a` and `b` on the same host?
+    #[inline]
+    pub fn same_host(&self, a: u32, b: u32) -> bool {
+        a / self.gpus_per_host == b / self.gpus_per_host
+    }
+
+    /// Price one BSP exchange described by per-(src, dst) byte counts.
+    /// The round's comm time is the bottleneck GPU's traffic per class,
+    /// plus one latency term per class in use (messages within a round are
+    /// batched, as Gluon does).
+    pub fn round_cycles(&self, flows: &[(u32, u32, u64)]) -> u64 {
+        if flows.is_empty() {
+            return 0;
+        }
+        let ngpu = flows
+            .iter()
+            .map(|&(a, b, _)| a.max(b) + 1)
+            .max()
+            .unwrap_or(1) as usize;
+        let mut intra = vec![0u64; ngpu]; // per-GPU intra-host bytes
+        let mut inter = vec![0u64; ngpu];
+        let (mut any_intra, mut any_inter) = (false, false);
+        for &(src, dst, bytes) in flows {
+            if src == dst || bytes == 0 {
+                continue;
+            }
+            if self.same_host(src, dst) {
+                intra[src as usize] += bytes;
+                intra[dst as usize] += bytes;
+                any_intra = true;
+            } else {
+                inter[src as usize] += bytes;
+                inter[dst as usize] += bytes;
+                any_inter = true;
+            }
+        }
+        let mut cycles = 0u64;
+        if any_intra {
+            let worst = *intra.iter().max().unwrap();
+            cycles += self.intra_alpha_cycles
+                + (worst as f64 / self.intra_bytes_per_cycle) as u64;
+        }
+        if any_inter {
+            let worst = *inter.iter().max().unwrap();
+            cycles += self.inter_alpha_cycles
+                + (worst as f64 / self.inter_bytes_per_cycle) as u64;
+        }
+        cycles
+    }
+}
+
+/// Apply the reduce operator.
+#[inline]
+pub fn reduce(op: ReduceOp, master: f32, mirror: f32) -> f32 {
+    match op {
+        ReduceOp::Min => master.min(mirror),
+        ReduceOp::Sum => master + mirror,
+    }
+}
+
+/// Bytes on the wire for one vertex update (global id + f32 value).
+pub const BYTES_PER_UPDATE: u64 = 8;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_ops() {
+        assert_eq!(reduce(ReduceOp::Min, 3.0, 5.0), 3.0);
+        assert_eq!(reduce(ReduceOp::Min, 5.0, 3.0), 3.0);
+        assert_eq!(reduce(ReduceOp::Sum, 2.0, 3.5), 5.5);
+    }
+
+    #[test]
+    fn same_host_classification() {
+        let net = NetworkModel::cluster(2);
+        assert!(net.same_host(0, 1));
+        assert!(!net.same_host(1, 2));
+        assert!(net.same_host(14, 15));
+        let single = NetworkModel::single_host();
+        assert!(single.same_host(0, 5));
+    }
+
+    #[test]
+    fn empty_round_is_free() {
+        assert_eq!(NetworkModel::cluster(2).round_cycles(&[]), 0);
+        assert_eq!(NetworkModel::cluster(2).round_cycles(&[(0, 0, 100)]), 0);
+    }
+
+    #[test]
+    fn inter_host_costs_more_than_intra() {
+        let net = NetworkModel::cluster(2);
+        let intra = net.round_cycles(&[(0, 1, 1 << 20)]);
+        let inter = net.round_cycles(&[(0, 2, 1 << 20)]);
+        assert!(inter > 2 * intra, "inter {inter} intra {intra}");
+    }
+
+    #[test]
+    fn bottleneck_gpu_sets_the_time() {
+        let net = NetworkModel::cluster(8);
+        // GPU 0 receives from 3 peers; spread vs concentrated.
+        let spread = net.round_cycles(&[(1, 0, 1000), (2, 3, 1000), (4, 5, 1000)]);
+        let hot = net.round_cycles(&[(1, 0, 1000), (2, 0, 1000), (3, 0, 1000)]);
+        assert!(hot > spread);
+    }
+
+    #[test]
+    fn more_bytes_more_cycles() {
+        let net = NetworkModel::single_host();
+        let a = net.round_cycles(&[(0, 1, 1 << 10)]);
+        let b = net.round_cycles(&[(0, 1, 1 << 24)]);
+        assert!(b > a);
+    }
+}

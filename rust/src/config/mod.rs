@@ -1,0 +1,136 @@
+//! Run configuration: the *framework* presets the paper compares
+//! (Table 2 / Figures 6–11), expressed as (balancer, worklist) combinations
+//! inside our simulator — same substrate, only the strategy varies, which
+//! isolates the variable the paper studies.
+
+use crate::apps::engine::{ComputeMode, EngineConfig};
+use crate::apps::worklist::WorklistKind;
+use crate::gpu::{CostModel, GpuSpec};
+use crate::lb::{Balancer, Distribution};
+
+/// A framework under comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Framework {
+    /// D-IrGL with TWC only (no inter-block balancing) — the main baseline.
+    DIrglTwc,
+    /// D-IrGL with the paper's Adaptive Load Balancer — the contribution.
+    DIrglAlb,
+    /// Gunrock with its TWC policy (sparse explicit worklists).
+    GunrockTwc,
+    /// Gunrock with its static LB policy: all active edges split evenly
+    /// every round, chosen up front, never adaptive.
+    GunrockLb,
+    /// Lux-style: vertex-balanced executor without inter-block balancing.
+    Lux,
+}
+
+/// Frameworks in the paper's Table 2 column order.
+pub const TABLE2_FRAMEWORKS: [Framework; 4] = [
+    Framework::GunrockTwc,
+    Framework::GunrockLb,
+    Framework::DIrglTwc,
+    Framework::DIrglAlb,
+];
+
+impl Framework {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Framework::DIrglTwc => "d-irgl(twc)",
+            Framework::DIrglAlb => "d-irgl(alb)",
+            Framework::GunrockTwc => "gunrock(twc)",
+            Framework::GunrockLb => "gunrock(lb)",
+            Framework::Lux => "lux",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Framework> {
+        match s.to_ascii_lowercase().as_str() {
+            "d-irgl-twc" | "dirgl-twc" | "twc" => Some(Framework::DIrglTwc),
+            "d-irgl-alb" | "dirgl-alb" | "alb" => Some(Framework::DIrglAlb),
+            "gunrock-twc" => Some(Framework::GunrockTwc),
+            "gunrock-lb" | "gunrock" => Some(Framework::GunrockLb),
+            "lux" => Some(Framework::Lux),
+            _ => None,
+        }
+    }
+
+    /// The balancer/worklist combination this framework stands for.
+    pub fn engine_config(&self, spec: GpuSpec) -> EngineConfig {
+        let (balancer, worklist) = match self {
+            Framework::DIrglTwc => (Balancer::Twc, WorklistKind::Dense),
+            Framework::DIrglAlb => (
+                Balancer::Alb { distribution: Distribution::Cyclic, threshold: None },
+                WorklistKind::Dense,
+            ),
+            Framework::GunrockTwc => (Balancer::Twc, WorklistKind::Sparse),
+            Framework::GunrockLb => (
+                Balancer::EdgeLb { distribution: Distribution::Cyclic },
+                WorklistKind::Sparse,
+            ),
+            Framework::Lux => (Balancer::Vertex, WorklistKind::Dense),
+        };
+        EngineConfig {
+            balancer,
+            worklist,
+            spec,
+            cost: CostModel::default(),
+            compute: ComputeMode::Native,
+            max_rounds: 1_000_000,
+            ..EngineConfig::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for f in [
+            Framework::DIrglTwc,
+            Framework::DIrglAlb,
+            Framework::GunrockTwc,
+            Framework::GunrockLb,
+            Framework::Lux,
+        ] {
+            // name() contains punctuation; parse accepts the CLI spellings.
+            assert!(Framework::parse(match f {
+                Framework::DIrglTwc => "dirgl-twc",
+                Framework::DIrglAlb => "dirgl-alb",
+                Framework::GunrockTwc => "gunrock-twc",
+                Framework::GunrockLb => "gunrock-lb",
+                Framework::Lux => "lux",
+            })
+            .is_some());
+            let _ = f.name();
+        }
+        assert_eq!(Framework::parse("nope"), None);
+    }
+
+    #[test]
+    fn alb_preset_is_adaptive_cyclic_dense() {
+        let cfg = Framework::DIrglAlb.engine_config(GpuSpec::default_sim());
+        assert!(matches!(
+            cfg.balancer,
+            Balancer::Alb { distribution: Distribution::Cyclic, threshold: None }
+        ));
+        assert_eq!(cfg.worklist, WorklistKind::Dense);
+    }
+
+    #[test]
+    fn gunrock_uses_sparse_worklists() {
+        for f in [Framework::GunrockTwc, Framework::GunrockLb] {
+            assert_eq!(
+                f.engine_config(GpuSpec::default_sim()).worklist,
+                WorklistKind::Sparse
+            );
+        }
+    }
+
+    #[test]
+    fn lux_is_vertex_balanced() {
+        let cfg = Framework::Lux.engine_config(GpuSpec::default_sim());
+        assert_eq!(cfg.balancer, Balancer::Vertex);
+    }
+}

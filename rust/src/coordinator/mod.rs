@@ -1,0 +1,777 @@
+//! The distributed multi-GPU coordinator.
+//!
+//! Drives the bulk-synchronous execution the paper's multi-GPU evaluation
+//! (§6.2–6.3) uses: every round, each simulated GPU runs its local kernels
+//! on its partition (in parallel, one OS thread per GPU), then the
+//! Gluon-style sync ([`crate::comm`]) reconciles boundary vertices. Round
+//! time = slowest GPU's compute + non-overlapping communication — exactly
+//! the accounting behind Figures 6/7/10/11. Intra-GPU thread-block imbalance
+//! on *one* GPU therefore stalls the whole machine, which is why ALB's
+//! per-GPU fix shows up at cluster scale.
+
+use anyhow::{anyhow, Result};
+
+use crate::apps::engine::{self, ComputeMode, EngineConfig};
+use crate::apps::worklist::NextWorklist;
+use crate::apps::{pr, App, INF};
+use crate::comm::{NetworkModel, BYTES_PER_UPDATE};
+use crate::gpu::Simulator;
+use crate::graph::CsrGraph;
+use crate::lb::Direction;
+use crate::partition::{partition, DistGraph, Policy};
+use crate::runtime::PjrtRuntime;
+
+/// Cluster-level configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub num_gpus: u32,
+    pub policy: Policy,
+    pub net: NetworkModel,
+}
+
+impl ClusterConfig {
+    /// Momentum-like single host with `k` GPUs, CVC partitioning (§5).
+    pub fn single_host(k: u32) -> Self {
+        ClusterConfig {
+            num_gpus: k,
+            policy: Policy::Cvc,
+            net: NetworkModel::single_host(),
+        }
+    }
+
+    /// Bridges-like cluster: 2 GPUs per host.
+    pub fn bridges(k: u32) -> Self {
+        ClusterConfig {
+            num_gpus: k,
+            policy: Policy::Cvc,
+            net: NetworkModel::cluster(2),
+        }
+    }
+}
+
+/// One BSP round's record.
+#[derive(Debug, Clone)]
+pub struct DistRoundRecord {
+    pub round: u32,
+    /// Global active count entering the round.
+    pub active: u64,
+    /// Slowest GPU's compute cycles.
+    pub comp_cycles: u64,
+    /// Communication cycles (non-overlapping).
+    pub comm_cycles: u64,
+    pub comm_bytes: u64,
+    /// GPUs whose LB kernel launched this round.
+    pub lb_gpus: u32,
+}
+
+/// A completed distributed run.
+#[derive(Debug, Clone)]
+pub struct DistRunResult {
+    pub app: App,
+    /// Reconciled per-global-vertex labels (master values).
+    pub labels: Vec<f32>,
+    pub rounds: Vec<DistRoundRecord>,
+    pub total_cycles: u64,
+    pub comp_cycles: u64,
+    pub comm_cycles: u64,
+    /// Per-GPU total compute cycles (for balance reporting).
+    pub per_gpu_comp: Vec<u64>,
+}
+
+impl DistRunResult {
+    pub fn ms(&self, spec: &crate::gpu::GpuSpec) -> f64 {
+        spec.cycles_to_ms(self.total_cycles)
+    }
+
+    pub fn comp_ms(&self, spec: &crate::gpu::GpuSpec) -> f64 {
+        spec.cycles_to_ms(self.comp_cycles)
+    }
+
+    pub fn comm_ms(&self, spec: &crate::gpu::GpuSpec) -> f64 {
+        spec.cycles_to_ms(self.comm_cycles)
+    }
+}
+
+/// Run `app` on `g` across `cluster.num_gpus` simulated GPUs.
+pub fn run_distributed(
+    app: App,
+    g: &CsrGraph,
+    source: u32,
+    cfg: &EngineConfig,
+    cluster: &ClusterConfig,
+    pjrt: Option<&PjrtRuntime>,
+) -> Result<DistRunResult> {
+    if cfg.compute == ComputeMode::Pjrt && pjrt.is_none() {
+        return Err(anyhow!("compute=Pjrt requires a loaded PjrtRuntime"));
+    }
+    let dg = partition(g, cluster.num_gpus, cluster.policy);
+    match app {
+        App::Bfs | App::Sssp | App::Cc => {
+            run_push_dist(app, g, &dg, source, cfg, cluster, pjrt)
+        }
+        App::Pr => run_pr_dist(g, &dg, cfg, cluster, pjrt),
+        App::Kcore => run_kcore_dist(g, &dg, cfg, cluster),
+    }
+}
+
+// -------------------------------------------------------------------- push
+
+/// Output of one partition's local compute round.
+struct LocalRound {
+    cycles: u64,
+    #[allow(dead_code)] // recorded for debugging / future per-GPU reports
+    edges: u64,
+    lb: bool,
+    /// Changed (local id, new value) pairs.
+    changed: Vec<(u32, f32)>,
+}
+
+fn local_push_round(
+    app: App,
+    part: &CsrGraph,
+    active: &[u32],
+    labels: &mut [f32],
+    cfg: &EngineConfig,
+    pjrt: Option<&PjrtRuntime>,
+) -> Result<LocalRound> {
+    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+    let n = part.num_vertices();
+    let scan = cfg.worklist.scan_cost(n as u64, active.len() as u64);
+    let sched = cfg.balancer.schedule(active, part, Direction::Push, &cfg.spec, scan);
+    let simr = sim.simulate(&sched, true);
+
+    let mut next = NextWorklist::new(n);
+    if let (ComputeMode::Pjrt, Some(rt), Some(lb)) = (cfg.compute, pjrt, &sched.lb) {
+        engine::relax_huge_pjrt(rt, part, &lb.vertices, app, labels, &mut next)?;
+        for item in &sched.twc {
+            engine::relax_native(part, app, item.vertex, labels, &mut next);
+        }
+    } else {
+        for &v in active {
+            engine::relax_native(part, app, v, labels, &mut next);
+        }
+    }
+    let changed = next
+        .take_sorted()
+        .into_iter()
+        .map(|l| (l, labels[l as usize]))
+        .collect();
+    Ok(LocalRound {
+        cycles: simr.total_cycles,
+        edges: sched.total_edges(),
+        lb: sched.lb.is_some(),
+        changed,
+    })
+}
+
+fn run_push_dist(
+    app: App,
+    g: &CsrGraph,
+    dg: &DistGraph,
+    source: u32,
+    cfg: &EngineConfig,
+    cluster: &ClusterConfig,
+    pjrt: Option<&PjrtRuntime>,
+) -> Result<DistRunResult> {
+    let n = g.num_vertices();
+    let k = dg.num_parts();
+    // Reconciled master state.
+    let mut master: Vec<f32> = match app {
+        App::Cc => (0..n).map(|v| v as f32).collect(),
+        _ => {
+            let mut m = vec![INF; n];
+            m[source as usize] = 0.0;
+            m
+        }
+    };
+    // Per-partition local labels + active sets.
+    let mut labels: Vec<Vec<f32>> = dg
+        .parts
+        .iter()
+        .map(|p| p.l2g.iter().map(|&gid| master[gid as usize]).collect())
+        .collect();
+    let mut active: Vec<Vec<u32>> = dg
+        .parts
+        .iter()
+        .map(|p| match app {
+            App::Cc => (0..p.graph.num_vertices() as u32).collect(),
+            _ => dg.g2l[p.id as usize].get(&source).map(|&l| vec![l]).unwrap_or_default(),
+        })
+        .collect();
+
+    let mut rounds = Vec::new();
+    let (mut total, mut comp_total, mut comm_total) = (0u64, 0u64, 0u64);
+    let mut per_gpu_comp = vec![0u64; k];
+
+    for round in 0..cfg.max_rounds {
+        let global_active: u64 = active.iter().map(|a| a.len() as u64).sum();
+        if global_active == 0 {
+            break;
+        }
+        // --- parallel local compute ---
+        let results: Vec<LocalRound> = if pjrt.is_some() {
+            // PJRT client is not Sync: partitions run sequentially.
+            let mut out = Vec::with_capacity(k);
+            for (pi, part) in dg.parts.iter().enumerate() {
+                out.push(local_push_round(
+                    app, &part.graph, &active[pi], &mut labels[pi], cfg, pjrt,
+                )?);
+            }
+            out
+        } else {
+            let mut out: Vec<Option<LocalRound>> = (0..k).map(|_| None).collect();
+            std::thread::scope(|s| {
+                for ((part, act, lab), slot) in dg
+                    .parts
+                    .iter()
+                    .zip(&active)
+                    .zip(labels.iter_mut())
+                    .map(|((p, a), l)| (p, a, l))
+                    .zip(out.iter_mut())
+                {
+                    s.spawn(move || {
+                        *slot = Some(
+                            local_push_round(app, &part.graph, act, lab, cfg, None)
+                                .expect("native round cannot fail"),
+                        );
+                    });
+                }
+            });
+            out.into_iter().map(|o| o.unwrap()).collect()
+        };
+
+        let comp = results.iter().map(|r| r.cycles).max().unwrap_or(0);
+        for (pi, r) in results.iter().enumerate() {
+            per_gpu_comp[pi] += r.cycles;
+        }
+        let lb_gpus = results.iter().filter(|r| r.lb).count() as u32;
+
+        // --- Gluon sync: reduce (min to master) ---
+        let mut bytes = 0u64;
+        let mut flows: Vec<(u32, u32, u64)> = Vec::new();
+        let mut touched: Vec<u32> = Vec::new();
+        for (pi, r) in results.iter().enumerate() {
+            let part = &dg.parts[pi];
+            let mut to_owner = vec![0u64; k];
+            for &(l, val) in &r.changed {
+                let gid = part.l2g[l as usize];
+                let owner = dg.owner[gid as usize] as usize;
+                if val < master[gid as usize] {
+                    master[gid as usize] = val;
+                }
+                touched.push(gid);
+                if owner != pi {
+                    to_owner[owner] += BYTES_PER_UPDATE;
+                }
+            }
+            for (o, b) in to_owner.iter().enumerate() {
+                if *b > 0 {
+                    flows.push((pi as u32, o as u32, *b));
+                    bytes += *b;
+                }
+            }
+        }
+        touched.sort_unstable();
+        touched.dedup();
+
+        // --- broadcast (master to every stale copy) + activation ---
+        let mut bcast = vec![0u64; k * k];
+        let mut next_active: Vec<Vec<u32>> = vec![Vec::new(); k];
+        for &gid in &touched {
+            let owner = dg.owner[gid as usize] as usize;
+            let val = master[gid as usize];
+            for pi in 0..k {
+                if let Some(&l) = dg.g2l[pi].get(&gid) {
+                    if val < labels[pi][l as usize] {
+                        labels[pi][l as usize] = val;
+                        if owner != pi {
+                            bcast[owner * k + pi] += BYTES_PER_UPDATE;
+                        }
+                    }
+                    // A copy whose value just changed (here or locally) is
+                    // active next round if it has out-edges to relax.
+                    if labels[pi][l as usize] <= val
+                        && (labels[pi][l as usize] - val).abs() < f32::EPSILON
+                        && dg.parts[pi].graph.out_degree(l) > 0
+                    {
+                        next_active[pi].push(l);
+                    }
+                }
+            }
+        }
+        for o in 0..k {
+            for pi in 0..k {
+                let b = bcast[o * k + pi];
+                if b > 0 {
+                    flows.push((o as u32, pi as u32, b));
+                    bytes += b;
+                }
+            }
+        }
+        for a in next_active.iter_mut() {
+            a.sort_unstable();
+            a.dedup();
+        }
+        active = next_active;
+
+        let comm = cluster.net.round_cycles(&flows);
+        total += comp + comm;
+        comp_total += comp;
+        comm_total += comm;
+        rounds.push(DistRoundRecord {
+            round,
+            active: global_active,
+            comp_cycles: comp,
+            comm_cycles: comm,
+            comm_bytes: bytes,
+            lb_gpus,
+        });
+    }
+    Ok(DistRunResult {
+        app,
+        labels: master,
+        rounds,
+        total_cycles: total,
+        comp_cycles: comp_total,
+        comm_cycles: comm_total,
+        per_gpu_comp,
+    })
+}
+
+// ---------------------------------------------------------------------- pr
+
+fn run_pr_dist(
+    g: &CsrGraph,
+    dg: &DistGraph,
+    cfg: &EngineConfig,
+    cluster: &ClusterConfig,
+    pjrt: Option<&PjrtRuntime>,
+) -> Result<DistRunResult> {
+    let n = g.num_vertices();
+    let k = dg.num_parts();
+    let out_deg: Vec<u32> = (0..n as u32).map(|v| g.out_degree(v) as u32).collect();
+    let mut ranks = pr::init_ranks(n);
+    // Local CSC views for the pull traversal.
+    let mut parts: Vec<CsrGraph> = dg.parts.iter().map(|p| p.graph.clone()).collect();
+    for p in parts.iter_mut() {
+        p.build_csc();
+    }
+    let base = (1.0 - pr::DAMPING) / n as f32;
+
+    let mut rounds = Vec::new();
+    let (mut total, mut comp_total, mut comm_total) = (0u64, 0u64, 0u64);
+    let mut per_gpu_comp = vec![0u64; k];
+
+    for round in 0..cfg.max_rounds {
+        // Broadcast: every mirror refreshes its rank copy (topology-driven:
+        // all ranks move every round).
+        let mut flows: Vec<(u32, u32, u64)> = Vec::new();
+        let mut bytes = 0u64;
+        for (pi, p) in dg.parts.iter().enumerate() {
+            let b = p.num_mirrors() as u64 * BYTES_PER_UPDATE;
+            if b > 0 {
+                // All owners collectively feed this partition; attribute to
+                // the heaviest link pattern by splitting evenly.
+                flows.push((((pi + 1) % k) as u32, pi as u32, b));
+                bytes += b;
+            }
+        }
+
+        // Local compute: per-partition contribution gather.
+        let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+        let mut comp = 0u64;
+        let mut lb_gpus = 0u32;
+        let mut acc_global = vec![0f32; n];
+        for (pi, p) in dg.parts.iter().enumerate() {
+            let lg = &parts[pi];
+            let nl = lg.num_vertices();
+            let all: Vec<u32> = (0..nl as u32).collect();
+            let scan = cfg.worklist.scan_cost(nl as u64, nl as u64);
+            let sched = cfg.balancer.schedule(&all, lg, Direction::Pull, &cfg.spec, scan);
+            let simr = sim.simulate(&sched, false);
+            comp = comp.max(simr.total_cycles);
+            per_gpu_comp[pi] += simr.total_cycles;
+            lb_gpus += sched.lb.is_some() as u32;
+
+            // Contributions of local src copies (kernel in Pjrt mode).
+            let src_ranks: Vec<f32> =
+                p.l2g.iter().map(|&gid| ranks[gid as usize]).collect();
+            let src_degs: Vec<u32> =
+                p.l2g.iter().map(|&gid| out_deg[gid as usize]).collect();
+            let contrib: Vec<f32> = match (cfg.compute, pjrt) {
+                (ComputeMode::Pjrt, Some(rt)) => {
+                    let mut c = Vec::with_capacity(nl);
+                    let tile = 16_384.min(nl.max(1));
+                    for start in (0..nl).step_by(tile) {
+                        let end = (start + tile).min(nl);
+                        c.extend(rt.pr_pull(
+                            &src_ranks[start..end],
+                            &src_degs[start..end],
+                            pr::DAMPING,
+                        )?);
+                    }
+                    c
+                }
+                _ => src_ranks
+                    .iter()
+                    .zip(&src_degs)
+                    .map(|(&r, &d)| pr::DAMPING * r / d.max(1) as f32)
+                    .collect(),
+            };
+            // Pull along local in-edges; accumulate into the dst's global
+            // slot (reduce-add of the partial sums).
+            for lv in 0..nl as u32 {
+                let (srcs, _) = lg.in_edges(lv);
+                if srcs.is_empty() {
+                    continue;
+                }
+                let mut acc = 0f32;
+                for &lu in srcs {
+                    acc += contrib[lu as usize];
+                }
+                let gid = p.l2g[lv as usize];
+                acc_global[gid as usize] += acc;
+                // Partial sums on non-owner partitions travel to the master.
+                if dg.owner[gid as usize] as usize != pi {
+                    bytes += BYTES_PER_UPDATE;
+                }
+            }
+        }
+        // The reduce traffic: approximate per-partition aggregate flow.
+        if k > 1 {
+            flows.push((1, 0, bytes / k as u64));
+        }
+
+        let mut delta = 0f32;
+        for v in 0..n {
+            let new_rank = base + acc_global[v];
+            delta = delta.max((new_rank - ranks[v]).abs());
+            ranks[v] = new_rank;
+        }
+
+        let comm = cluster.net.round_cycles(&flows);
+        total += comp + comm;
+        comp_total += comp;
+        comm_total += comm;
+        rounds.push(DistRoundRecord {
+            round,
+            active: n as u64,
+            comp_cycles: comp,
+            comm_cycles: comm,
+            comm_bytes: bytes,
+            lb_gpus,
+        });
+        if delta < cfg.pr_tol {
+            break;
+        }
+    }
+    Ok(DistRunResult {
+        app: App::Pr,
+        labels: ranks,
+        rounds,
+        total_cycles: total,
+        comp_cycles: comp_total,
+        comm_cycles: comm_total,
+        per_gpu_comp,
+    })
+}
+
+// ------------------------------------------------------------------- kcore
+
+fn run_kcore_dist(
+    g: &CsrGraph,
+    dg: &DistGraph,
+    cfg: &EngineConfig,
+    cluster: &ClusterConfig,
+) -> Result<DistRunResult> {
+    let n = g.num_vertices();
+    let k_parts = dg.num_parts();
+    let k = cfg.kcore_k;
+    let mut g2 = g.clone();
+    g2.build_csc();
+    let mut deg: Vec<u32> = (0..n as u32).map(|v| g2.in_degree(v) as u32).collect();
+    let mut alive = vec![true; n];
+    let parts: Vec<CsrGraph> = dg.parts.iter().map(|p| p.graph.clone()).collect();
+    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+
+    let mut dying: Vec<u32> =
+        (0..n as u32).filter(|&v| (deg[v as usize]) < k).collect();
+    for &v in &dying {
+        alive[v as usize] = false;
+    }
+
+    let mut rounds = Vec::new();
+    let (mut total, mut comp_total, mut comm_total) = (0u64, 0u64, 0u64);
+    let mut per_gpu_comp = vec![0u64; k_parts];
+    let mut round = 0u32;
+
+    while !dying.is_empty() && round < cfg.max_rounds {
+        // Per-partition: local copies of dying vertices drive in-edge scans.
+        let mut comp = 0u64;
+        let mut lb_gpus = 0u32;
+        let mut decr = vec![0u32; n];
+        let mut bytes = 0u64;
+        let mut flows: Vec<(u32, u32, u64)> = Vec::new();
+        for (pi, _p) in dg.parts.iter().enumerate() {
+            let lg = &parts[pi];
+            let local_dying: Vec<u32> = dying
+                .iter()
+                .filter_map(|&gv| dg.g2l[pi].get(&gv).copied())
+                .collect();
+            if local_dying.is_empty() {
+                continue;
+            }
+            let scan = cfg
+                .worklist
+                .scan_cost(lg.num_vertices() as u64, local_dying.len() as u64);
+            let sched =
+                cfg.balancer.schedule(&local_dying, lg, Direction::Push, &cfg.spec, scan);
+            let simr = sim.simulate(&sched, true);
+            comp = comp.max(simr.total_cycles);
+            per_gpu_comp[pi] += simr.total_cycles;
+            lb_gpus += sched.lb.is_some() as u32;
+
+            let mut remote = 0u64;
+            for &lv in &local_dying {
+                let (dsts, _) = lg.out_edges(lv);
+                for &lu in dsts {
+                    let gid = dg.parts[pi].l2g[lu as usize];
+                    if alive[gid as usize] {
+                        decr[gid as usize] += 1;
+                        if dg.owner[gid as usize] as usize != pi {
+                            remote += BYTES_PER_UPDATE;
+                        }
+                    }
+                }
+            }
+            if remote > 0 {
+                flows.push((pi as u32, ((pi + 1) % k_parts) as u32, remote));
+                bytes += remote;
+            }
+        }
+
+        let mut next = Vec::new();
+        for v in 0..n {
+            if alive[v] && decr[v] > 0 {
+                deg[v] -= decr[v].min(deg[v]);
+                if deg[v] < k {
+                    alive[v] = false;
+                    next.push(v as u32);
+                }
+            }
+        }
+        let comm = cluster.net.round_cycles(&flows);
+        total += comp + comm;
+        comp_total += comp;
+        comm_total += comm;
+        rounds.push(DistRoundRecord {
+            round,
+            active: dying.len() as u64,
+            comp_cycles: comp,
+            comm_cycles: comm,
+            comm_bytes: bytes,
+            lb_gpus,
+        });
+        dying = next;
+        round += 1;
+    }
+    let labels = alive.iter().map(|&a| if a { 1.0 } else { 0.0 }).collect();
+    Ok(DistRunResult {
+        app: App::Kcore,
+        labels,
+        rounds,
+        total_cycles: total,
+        comp_cycles: comp_total,
+        comm_cycles: comm_total,
+        per_gpu_comp,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{bfs, cc, kcore, sssp};
+    use crate::graph::gen::rmat::{self, RmatConfig};
+
+    fn test_graph(scale: u32, seed: u64) -> CsrGraph {
+        CsrGraph::from_edge_list(&rmat::generate(&RmatConfig::paper(scale, seed)))
+    }
+
+    fn cfg() -> EngineConfig {
+        EngineConfig { max_rounds: 100_000, ..EngineConfig::default() }
+    }
+
+    #[test]
+    fn dist_bfs_matches_oracle_all_policies_and_sizes() {
+        let g = test_graph(9, 21);
+        let src = g.max_out_degree_vertex();
+        let want = bfs::oracle(&g, src);
+        for policy in [Policy::Oec, Policy::Iec, Policy::Cvc] {
+            for k in [1u32, 2, 4] {
+                let cluster = ClusterConfig {
+                    num_gpus: k,
+                    policy,
+                    net: NetworkModel::single_host(),
+                };
+                let r = run_distributed(App::Bfs, &g, src, &cfg(), &cluster, None)
+                    .unwrap();
+                assert_eq!(r.labels, want, "{policy:?} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn dist_sssp_matches_oracle() {
+        let g = test_graph(9, 22);
+        let src = g.max_out_degree_vertex();
+        let want = sssp::oracle(&g, src);
+        let r = run_distributed(
+            App::Sssp,
+            &g,
+            src,
+            &cfg(),
+            &ClusterConfig::single_host(4),
+            None,
+        )
+        .unwrap();
+        assert_eq!(r.labels, want);
+    }
+
+    #[test]
+    fn dist_cc_matches_oracle() {
+        let g = test_graph(8, 23);
+        let want = cc::oracle(&g);
+        let r = run_distributed(
+            App::Cc,
+            &g,
+            0,
+            &cfg(),
+            &ClusterConfig::single_host(3),
+            None,
+        )
+        .unwrap();
+        assert_eq!(r.labels, want);
+    }
+
+    #[test]
+    fn dist_pr_matches_oracle_within_fp_tolerance() {
+        let mut g = test_graph(8, 24);
+        let c = EngineConfig { max_rounds: 100, ..EngineConfig::default() };
+        let r = run_distributed(
+            App::Pr,
+            &g,
+            0,
+            &c,
+            &ClusterConfig::single_host(4),
+            None,
+        )
+        .unwrap();
+        let (want, _) = pr::oracle(&mut g, c.pr_tol, 100);
+        for (a, b) in r.labels.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dist_kcore_matches_oracle() {
+        let mut g = test_graph(8, 25);
+        let c = EngineConfig { kcore_k: 8, max_rounds: 100_000, ..EngineConfig::default() };
+        let r = run_distributed(
+            App::Kcore,
+            &g,
+            0,
+            &c,
+            &ClusterConfig::single_host(4),
+            None,
+        )
+        .unwrap();
+        let (want, _) = kcore::oracle(&mut g, 8);
+        let got: Vec<bool> = r.labels.iter().map(|&x| x > 0.5).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn single_gpu_has_no_comm() {
+        let g = test_graph(8, 26);
+        let src = g.max_out_degree_vertex();
+        let r = run_distributed(
+            App::Bfs,
+            &g,
+            src,
+            &cfg(),
+            &ClusterConfig::single_host(1),
+            None,
+        )
+        .unwrap();
+        assert_eq!(r.comm_cycles, 0);
+        assert!(r.rounds.iter().all(|x| x.comm_bytes == 0));
+    }
+
+    #[test]
+    fn multi_gpu_communicates() {
+        let g = test_graph(9, 27);
+        let src = g.max_out_degree_vertex();
+        let r = run_distributed(
+            App::Bfs,
+            &g,
+            src,
+            &cfg(),
+            &ClusterConfig::single_host(4),
+            None,
+        )
+        .unwrap();
+        assert!(r.comm_cycles > 0);
+        assert!(r.rounds.iter().any(|x| x.comm_bytes > 0));
+    }
+
+    #[test]
+    fn cluster_comm_costs_more_than_single_host() {
+        let g = test_graph(9, 28);
+        let src = g.max_out_degree_vertex();
+        let single = run_distributed(
+            App::Bfs, &g, src, &cfg(), &ClusterConfig::single_host(4), None,
+        )
+        .unwrap();
+        let cluster = run_distributed(
+            App::Bfs, &g, src, &cfg(), &ClusterConfig::bridges(4), None,
+        )
+        .unwrap();
+        assert_eq!(single.labels, cluster.labels);
+        assert!(cluster.comm_cycles > single.comm_cycles);
+    }
+
+    #[test]
+    fn more_gpus_reduce_per_round_compute() {
+        let g = test_graph(11, 29);
+        let src = g.max_out_degree_vertex();
+        let one = run_distributed(
+            App::Bfs, &g, src, &cfg(), &ClusterConfig::single_host(1), None,
+        )
+        .unwrap();
+        let four = run_distributed(
+            App::Bfs, &g, src, &cfg(), &ClusterConfig::single_host(4), None,
+        )
+        .unwrap();
+        assert_eq!(one.labels, four.labels);
+        // Compute shrinks with more GPUs (comm is extra, but this asserts
+        // the partitioned work itself spreads).
+        assert!(four.comp_cycles < one.comp_cycles * 2);
+    }
+
+    #[test]
+    fn timing_identity_holds() {
+        let g = test_graph(9, 30);
+        let r = run_distributed(
+            App::Bfs,
+            &g,
+            g.max_out_degree_vertex(),
+            &cfg(),
+            &ClusterConfig::single_host(2),
+            None,
+        )
+        .unwrap();
+        assert_eq!(r.total_cycles, r.comp_cycles + r.comm_cycles);
+        let sum: u64 = r.rounds.iter().map(|x| x.comp_cycles + x.comm_cycles).sum();
+        assert_eq!(r.total_cycles, sum);
+    }
+}

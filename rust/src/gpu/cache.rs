@@ -1,0 +1,162 @@
+//! Set-associative LRU cache model.
+//!
+//! Exists to make the paper's §4.1 locality argument *emerge* rather than be
+//! hard-coded: in the cyclic distribution, the 32 lanes of a warp binary-
+//! search for consecutive edge ids, so their probe trajectories touch the
+//! same prefix-array cache lines (hits); in the blocked distribution the
+//! lanes search ids separated by `edges_per_thread`, touching scattered
+//! lines (misses). The LB-kernel simulator pushes every (deduplicated) probe
+//! through this model and charges hit/miss cycles accordingly.
+
+/// A set-associative cache with LRU replacement, tracking line tags only.
+///
+/// Storage is one flat `Vec<u64>` with `assoc` consecutive slots per set
+/// (MRU last, `u64::MAX` = empty); `access` is a short in-place scan +
+/// rotate — this sits on the LB-kernel simulator's innermost loop (§Perf),
+/// so no per-set allocation or element shifting through `Vec::remove`.
+#[derive(Debug, Clone)]
+pub struct CacheSim {
+    /// `slots[set * assoc .. (set+1) * assoc]`, most-recently-used last.
+    slots: Vec<u64>,
+    num_sets: u64,
+    assoc: usize,
+    line_bytes: u64,
+    hits: u64,
+    misses: u64,
+}
+
+const EMPTY: u64 = u64::MAX;
+
+impl CacheSim {
+    /// `capacity_kb` total, `line_bytes` per line, `assoc` ways.
+    pub fn new(capacity_kb: u32, line_bytes: u32, assoc: u32) -> Self {
+        let lines = (capacity_kb as u64 * 1024) / line_bytes as u64;
+        let num_sets = (lines / assoc as u64).max(1);
+        CacheSim {
+            slots: vec![EMPTY; (num_sets * assoc as u64) as usize],
+            num_sets,
+            assoc: assoc as usize,
+            line_bytes: line_bytes as u64,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Access a byte address; returns `true` on hit. Updates LRU state.
+    #[inline]
+    pub fn access(&mut self, addr: u64) -> bool {
+        let line = addr / self.line_bytes;
+        let set = (line % self.num_sets) as usize * self.assoc;
+        let ways = &mut self.slots[set..set + self.assoc];
+        // MRU is the last slot; scan backwards so the hot line hits first.
+        for pos in (0..ways.len()).rev() {
+            if ways[pos] == line {
+                ways[pos..].rotate_left(1);
+                self.hits += 1;
+                return true;
+            }
+        }
+        // Miss: evict LRU (slot 0) by shifting everything down one.
+        ways.rotate_left(1);
+        ways[self.assoc - 1] = line;
+        self.misses += 1;
+        false
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_access_misses_second_hits() {
+        let mut c = CacheSim::new(16, 64, 4);
+        assert!(!c.access(0));
+        assert!(c.access(0));
+        assert!(c.access(63)); // same line
+        assert!(!c.access(64)); // next line
+        assert_eq!(c.hits(), 2);
+        assert_eq!(c.misses(), 2);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        // 1 set x 2 ways: capacity 2 lines.
+        let mut c = CacheSim::new(0, 64, 2);
+        assert_eq!(c.num_sets, 1);
+        c.access(0); // line 0
+        c.access(64); // line 1
+        c.access(0); // refresh line 0
+        c.access(128); // evicts line 1 (LRU)
+        assert!(c.access(0), "line 0 must survive");
+        assert!(!c.access(64), "line 1 must have been evicted");
+    }
+
+    #[test]
+    fn distinct_sets_do_not_conflict() {
+        let mut c = CacheSim::new(16, 64, 1);
+        // Lines mapping to different sets coexist even at assoc 1.
+        assert!(!c.access(0));
+        assert!(!c.access(64));
+        assert!(c.access(0));
+        assert!(c.access(64));
+    }
+
+    #[test]
+    fn sequential_trajectories_hit_like_cyclic_warps() {
+        // Two consecutive binary searches over the same array share their
+        // root-side probes -> high hit rate. This is the cyclic-distribution
+        // effect the paper relies on.
+        let mut c = CacheSim::new(16, 128, 4);
+        let probes = |target: u64| {
+            // binary search probe addresses over a 1024-entry u64 array
+            let (mut lo, mut hi) = (0u64, 1024u64);
+            let mut v = Vec::new();
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                v.push(mid * 8);
+                if mid < target {
+                    lo = mid + 1;
+                } else {
+                    hi = mid;
+                }
+            }
+            v
+        };
+        for a in probes(500) {
+            c.access(a);
+        }
+        c.reset_stats();
+        for a in probes(501) {
+            c.access(a);
+        }
+        assert!(
+            c.hits() >= 8,
+            "neighboring searches must mostly hit: {} hits {} misses",
+            c.hits(),
+            c.misses()
+        );
+    }
+
+    #[test]
+    fn reset_stats_clears_counts_not_state() {
+        let mut c = CacheSim::new(16, 64, 4);
+        c.access(0);
+        c.reset_stats();
+        assert_eq!(c.misses(), 0);
+        assert!(c.access(0), "cached line survives stats reset");
+    }
+}

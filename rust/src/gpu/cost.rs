@@ -1,0 +1,84 @@
+//! Cycle-level cost model for the simulated GPU.
+//!
+//! Constants are calibrated to the relative magnitudes that matter for the
+//! paper's comparisons (memory miss >> hit >> ALU; kernel launch >> per-edge
+//! work), not to any specific silicon. EXPERIMENTS.md records a sensitivity
+//! note: the reproduced *ratios* are stable across +-2x perturbation of
+//! these values because every strategy is charged through the same model.
+
+
+/// Cycle costs charged by the kernel simulator.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Processing one edge: neighbor load + label compare/compute.
+    pub cycles_edge: u64,
+    /// Extra cost per push-style update (atomicMin + worklist push amortized).
+    pub cycles_atomic: u64,
+    /// L1 cache hit (binary-search probe that coalesces).
+    pub cycles_mem_hit: u64,
+    /// Cache miss to global memory.
+    pub cycles_mem_miss: u64,
+    /// Kernel launch overhead (per launched kernel).
+    pub cycles_launch: u64,
+    /// Scanning one vertex of a worklist (dense scans all |V|, sparse only
+    /// the active ones — the Gunrock-vs-D-IrGL road-USA effect, §6.1).
+    pub cycles_scan_vertex: u64,
+    /// Prefix-sum cost per huge vertex (inspector overhead).
+    pub cycles_prefix_per_item: u64,
+    /// Cap on warp-steps fully simulated per LB kernel; beyond this the
+    /// cache model samples uniformly and extrapolates.
+    pub lb_warp_step_sample_cap: u64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            cycles_edge: 4,
+            cycles_atomic: 8,
+            // Memory probes are charged at BANDWIDTH cost, not latency: a
+            // GPU hides miss latency under thousands of resident warps, so
+            // what a miss really costs the kernel is its 128 B line of
+            // HBM traffic (~12 cycles at ~10 B/cycle/SM). Hits cost an L1
+            // access. Charging latency (~100s of cycles) would overstate
+            // every search-heavy strategy by an order of magnitude.
+            cycles_mem_hit: 2,
+            cycles_mem_miss: 12,
+            // A real launch is ~3-10k cycles, but the bundled inputs are
+            // ~1000x smaller than the paper's: the launch:work ratio — the
+            // quantity that decides whether a second (LB) kernel launch pays
+            // off — is what must be preserved, so launch scales down with
+            // the inputs. `CostModel::paper_scale()` keeps the raw value for
+            // paper-sized runs.
+            cycles_launch: 100,
+            cycles_scan_vertex: 1,
+            cycles_prefix_per_item: 2,
+            lb_warp_step_sample_cap: 1 << 14,
+        }
+    }
+}
+
+impl CostModel {
+    /// Unscaled launch cost, for paper-sized inputs (rmat23+, 26k+ threads).
+    pub fn paper_scale() -> Self {
+        CostModel { cycles_launch: 3000, ..CostModel::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_orderings_hold() {
+        let c = CostModel::default();
+        assert!(c.cycles_mem_miss > c.cycles_mem_hit);
+        assert!(c.cycles_launch >= c.cycles_edge * 25);
+        assert!(c.cycles_atomic >= c.cycles_edge);
+    }
+
+    #[test]
+    fn paper_scale_restores_launch() {
+        assert_eq!(CostModel::paper_scale().cycles_launch, 3000);
+        assert_eq!(CostModel::paper_scale().cycles_edge, 4);
+    }
+}

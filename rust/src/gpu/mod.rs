@@ -1,0 +1,16 @@
+//! The simulated GPU: SIMT execution model, cycle cost model, cache model,
+//! and the kernel simulator that executes load-balancer schedules.
+//!
+//! This is the hardware substitution for the paper's K80 / GTX 1080 / P100
+//! testbeds (DESIGN.md §1): per-thread-block work accounting and bottleneck
+//! timing reproduce the quantities the paper's evaluation plots.
+
+pub mod cache;
+pub mod cost;
+pub mod model;
+pub mod sim;
+
+pub use cache::CacheSim;
+pub use cost::CostModel;
+pub use model::GpuSpec;
+pub use sim::{KernelStats, RoundSim, Simulator};

@@ -1,0 +1,167 @@
+//! The simulated GPU: SIMT hierarchy sizes and hardware presets.
+//!
+//! Substitutes for the paper's physical K80 / GTX 1080 / P100 (DESIGN.md §1).
+//! The quantity that drives every result in the paper is the *thread
+//! hierarchy*: how many thread blocks exist (inter-block imbalance is the
+//! problem ALB solves), how many threads a block and a warp hold (TWC's
+//! binning boundaries), and the total launched thread count (the paper's
+//! huge-degree THRESHOLD, 26,624 on their setup).
+
+
+/// Dimensions and memory parameters of one simulated GPU.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Thread blocks launched per kernel (all resident: one wave).
+    pub num_blocks: u32,
+    pub threads_per_block: u32,
+    pub warp_size: u32,
+    /// Clock used to convert cycles to reported milliseconds.
+    pub clock_ghz: f64,
+    /// Per-SM L1/texture cache modeled for the LB binary search.
+    pub l1_kb: u32,
+    pub cache_line_bytes: u32,
+    pub cache_assoc: u32,
+}
+
+impl GpuSpec {
+    /// Laptop-scale default: small enough that the bundled inputs exhibit
+    /// the paper's imbalance regimes (hub degree >> total threads).
+    pub fn default_sim() -> Self {
+        GpuSpec {
+            name: "sim-default".into(),
+            num_blocks: 24,
+            threads_per_block: 128,
+            warp_size: 32,
+            clock_ghz: 1.0,
+            l1_kb: 24,
+            cache_line_bytes: 128,
+            cache_assoc: 4,
+        }
+    }
+
+    /// Paper-faithful K80 preset: 26,624 launched threads (104 blocks x 256),
+    /// the THRESHOLD quoted in §6.3.
+    pub fn k80_like() -> Self {
+        GpuSpec {
+            name: "k80-like".into(),
+            num_blocks: 104,
+            threads_per_block: 256,
+            warp_size: 32,
+            clock_ghz: 0.82,
+            l1_kb: 48,
+            cache_line_bytes: 128,
+            cache_assoc: 4,
+        }
+    }
+
+    /// GTX 1080-like preset (Momentum's consumer cards).
+    pub fn gtx1080_like() -> Self {
+        GpuSpec {
+            name: "gtx1080-like".into(),
+            num_blocks: 80,
+            threads_per_block: 256,
+            warp_size: 32,
+            clock_ghz: 1.6,
+            l1_kb: 48,
+            cache_line_bytes: 128,
+            cache_assoc: 4,
+        }
+    }
+
+    /// P100-like preset (Bridges' cards).
+    pub fn p100_like() -> Self {
+        GpuSpec {
+            name: "p100-like".into(),
+            num_blocks: 112,
+            threads_per_block: 256,
+            warp_size: 32,
+            clock_ghz: 1.3,
+            l1_kb: 64,
+            cache_line_bytes: 128,
+            cache_assoc: 4,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "sim-default" => Some(Self::default_sim()),
+            "k80-like" => Some(Self::k80_like()),
+            "gtx1080-like" => Some(Self::gtx1080_like()),
+            "p100-like" => Some(Self::p100_like()),
+            _ => None,
+        }
+    }
+
+    #[inline]
+    pub fn total_threads(&self) -> u64 {
+        self.num_blocks as u64 * self.threads_per_block as u64
+    }
+
+    #[inline]
+    pub fn warps_per_block(&self) -> u32 {
+        self.threads_per_block / self.warp_size
+    }
+
+    #[inline]
+    pub fn total_warps(&self) -> u64 {
+        self.num_blocks as u64 * self.warps_per_block() as u64
+    }
+
+    /// The paper's huge-vertex THRESHOLD: the launched thread count (§4.2).
+    #[inline]
+    pub fn huge_threshold(&self) -> u64 {
+        self.total_threads()
+    }
+
+    /// Convert simulated cycles to reported milliseconds.
+    #[inline]
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.clock_ghz * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k80_matches_paper_thread_count() {
+        assert_eq!(GpuSpec::k80_like().total_threads(), 26_624);
+    }
+
+    #[test]
+    fn hierarchy_arithmetic() {
+        let s = GpuSpec::default_sim();
+        assert_eq!(s.warps_per_block(), 4);
+        assert_eq!(s.total_warps(), 96);
+        assert_eq!(s.total_threads(), 3072);
+        assert_eq!(s.huge_threshold(), 3072);
+    }
+
+    #[test]
+    fn cycles_to_ms_uses_clock() {
+        let s = GpuSpec { clock_ghz: 2.0, ..GpuSpec::default_sim() };
+        assert!((s.cycles_to_ms(2_000_000) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn presets_resolvable_by_name() {
+        for n in ["sim-default", "k80-like", "gtx1080-like", "p100-like"] {
+            assert!(GpuSpec::by_name(n).is_some());
+        }
+        assert!(GpuSpec::by_name("h100").is_none());
+    }
+
+    #[test]
+    fn threads_per_block_multiple_of_warp() {
+        for s in [
+            GpuSpec::default_sim(),
+            GpuSpec::k80_like(),
+            GpuSpec::gtx1080_like(),
+            GpuSpec::p100_like(),
+        ] {
+            assert_eq!(s.threads_per_block % s.warp_size, 0);
+        }
+    }
+}

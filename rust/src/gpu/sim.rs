@@ -1,0 +1,582 @@
+//! The kernel simulator: executes a [`Schedule`] on a [`GpuSpec`] and
+//! returns per-thread-block cycle and edge counts.
+//!
+//! Modeling decisions (DESIGN.md §5):
+//!
+//! * All launched blocks are resident (one wave); a kernel finishes when its
+//!   slowest block does: `kernel_cycles = launch + max_b block_cycles[b]`.
+//! * Within a block, warps execute concurrently; within a warp, a lane's
+//!   work is serial. So `block_cycles = max over its threads` of the cycles
+//!   charged to that thread (thread-bin work) + its warp's shared work
+//!   (warp-bin items) + the block's shared work (CTA-bin items).
+//! * TWC work items are assigned round-robin over the matching unit class in
+//!   worklist order — exactly the strided `for (src = tid; ...)` loop of the
+//!   paper's generated code.
+//! * The LB kernel charges every thread `ceil(total_edges/p)` relaxations
+//!   plus the binary-search probes, which go through the set-associative
+//!   cache model so cyclic/blocked genuinely diverge via locality.
+
+use crate::gpu::cache::CacheSim;
+use crate::gpu::cost::CostModel;
+use crate::gpu::model::GpuSpec;
+use crate::lb::schedule::{Distribution, LbLaunch, Schedule, Unit, VertexItem};
+
+
+/// Per-kernel simulation result.
+#[derive(Debug, Clone)]
+pub struct KernelStats {
+    pub label: String,
+    /// Edges processed by each thread block (the paper's Figures 1 and 5).
+    pub block_edges: Vec<u64>,
+    /// Modeled cycles per block.
+    pub block_cycles: Vec<u64>,
+    /// Launch overhead + slowest block.
+    pub kernel_cycles: u64,
+    pub total_edges: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl KernelStats {
+    /// Load-imbalance factor: max block edges / mean block edges.
+    pub fn imbalance_factor(&self) -> f64 {
+        let max = *self.block_edges.iter().max().unwrap_or(&0) as f64;
+        let sum: u64 = self.block_edges.iter().sum();
+        let mean = sum as f64 / self.block_edges.len().max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+/// One round's simulation: the launched kernels plus worklist management.
+#[derive(Debug, Clone)]
+pub struct RoundSim {
+    pub kernels: Vec<KernelStats>,
+    /// Worklist scan + inspector prefix-sum cycles.
+    pub overhead_cycles: u64,
+    /// Total modeled cycles for the round.
+    pub total_cycles: u64,
+}
+
+/// Executes schedules against a fixed GPU + cost model.
+#[derive(Debug, Clone)]
+pub struct Simulator {
+    pub spec: GpuSpec,
+    pub cost: CostModel,
+}
+
+impl Simulator {
+    pub fn new(spec: GpuSpec, cost: CostModel) -> Self {
+        Simulator { spec, cost }
+    }
+
+    /// Simulate one round. `push` charges atomic-update cost per edge
+    /// (push-style operators write remote labels; pull-style do not).
+    pub fn simulate(&self, sched: &Schedule, push: bool) -> RoundSim {
+        let mut kernels = Vec::with_capacity(2);
+        kernels.push(self.sim_twc(&sched.twc, push));
+        if let Some(lb) = &sched.lb {
+            if lb.total_edges() > 0 {
+                kernels.push(self.sim_lb(lb, push));
+            }
+        }
+        let scan = sched
+            .scan_vertices
+            .div_ceil(self.spec.total_threads())
+            * self.cost.cycles_scan_vertex;
+        // The inspector's prefix sum is itself a parallel scan kernel
+        // (paper Fig. 3 line 31, `computePrefixSum`): charged as one launch
+        // plus up+down sweeps over the items, spread across all threads.
+        let prefix = if sched.prefix_items > 0 {
+            self.cost.cycles_launch
+                + sched.prefix_items.div_ceil(self.spec.total_threads())
+                    * self.cost.cycles_prefix_per_item
+                    * 2
+        } else {
+            0
+        };
+        let overhead_cycles = scan + prefix;
+        let total_cycles =
+            kernels.iter().map(|k| k.kernel_cycles).sum::<u64>() + overhead_cycles;
+        RoundSim { kernels, overhead_cycles, total_cycles }
+    }
+
+    /// Per-edge processing cost for this operator class.
+    #[inline]
+    fn edge_cost(&self, push: bool) -> u64 {
+        self.cost.cycles_edge + if push { self.cost.cycles_atomic } else { 0 }
+    }
+
+    /// TWC kernel: exact per-thread accounting of the three bins.
+    fn sim_twc(&self, items: &[VertexItem], push: bool) -> KernelStats {
+        let s = &self.spec;
+        let nb = s.num_blocks as usize;
+        let tpb = s.threads_per_block as usize;
+        let wpb = s.warps_per_block() as usize;
+        let nthreads = nb * tpb;
+        let nwarps = nb * wpb;
+        let warp = s.warp_size as u64;
+        let ec = self.edge_cost(push);
+
+        let mut thread_c = vec![0u64; nthreads];
+        let mut warp_c = vec![0u64; nwarps];
+        let mut cta_c = vec![0u64; nb];
+        let mut block_edges = vec![0u64; nb];
+        let (mut ti, mut wi, mut bi) = (0usize, 0usize, 0usize);
+        let mut total_edges = 0u64;
+
+        for item in items {
+            total_edges += item.degree;
+            match item.unit {
+                Unit::Thread => {
+                    let t = ti % nthreads;
+                    thread_c[t] += item.degree * ec;
+                    block_edges[t / tpb] += item.degree;
+                    ti += 1;
+                }
+                Unit::Warp => {
+                    let w = wi % nwarps;
+                    warp_c[w] += item.degree.div_ceil(warp) * ec;
+                    block_edges[w / wpb] += item.degree;
+                    wi += 1;
+                }
+                Unit::Block => {
+                    let b = bi % nb;
+                    cta_c[b] += item.degree.div_ceil(tpb as u64) * ec;
+                    block_edges[b] += item.degree;
+                    bi += 1;
+                }
+            }
+        }
+
+        let mut block_cycles = vec![0u64; nb];
+        for b in 0..nb {
+            let mut worst = 0u64;
+            for t in b * tpb..(b + 1) * tpb {
+                let w = t / s.warp_size as usize;
+                let c = thread_c[t] + warp_c[w] + cta_c[b];
+                worst = worst.max(c);
+            }
+            block_cycles[b] = worst;
+        }
+        let kernel_cycles =
+            self.cost.cycles_launch + block_cycles.iter().max().copied().unwrap_or(0);
+        KernelStats {
+            label: "twc".into(),
+            block_edges,
+            block_cycles,
+            kernel_cycles,
+            total_edges,
+            cache_hits: 0,
+            cache_misses: 0,
+        }
+    }
+
+    /// LB kernel: even edge split + cache-modeled binary search.
+    fn sim_lb(&self, lb: &LbLaunch, push: bool) -> KernelStats {
+        let s = &self.spec;
+        let nb = s.num_blocks as usize;
+        let tpb = s.threads_per_block as u64;
+        let p = s.total_threads();
+        let total = lb.total_edges();
+        let w = total.div_ceil(p); // edges per thread (paper line 15)
+        let ec = self.edge_cost(push);
+
+        // --- binary-search cost via the cache model (sampled warps) ---
+        let warp_lanes = s.warp_size as u64;
+        let nwarps = s.total_warps();
+        let total_warp_steps = nwarps.saturating_mul(w);
+        let cap = self.cost.lb_warp_step_sample_cap.max(1);
+        // Sample whole warps so intra-warp cache state stays faithful.
+        let warps_to_sim = if total_warp_steps <= cap {
+            nwarps
+        } else {
+            (cap / w.max(1)).clamp(1, nwarps)
+        };
+        let warp_stride = (nwarps / warps_to_sim).max(1);
+
+        let mut sim_search_cycles = 0u64;
+        let (mut hits, mut misses) = (0u64, 0u64);
+        let mut simulated = 0u64;
+        let line_bytes = s.cache_line_bytes as u64;
+        let do_search = lb.search;
+        // Scratch buffers reused across steps (§Perf: zero allocation in
+        // the per-step loop, and adjacent lanes with identical search
+        // trajectories — the dominant cyclic case — are compressed before
+        // the sort instead of after, cutting the sort input ~16x).
+        let mut line_buf: Vec<u64> = Vec::with_capacity(s.warp_size as usize * 24);
+        let mut widx = 0u64;
+        while widx < nwarps && simulated < warps_to_sim {
+            let mut cache =
+                CacheSim::new(s.l1_kb, s.cache_line_bytes, s.cache_assoc);
+            for j in 0..w {
+                line_buf.clear();
+                // Identical-trajectory compression: a binary search's probe
+                // path depends only on which prefix *segment* the edge id
+                // lands in, so a lane whose eid falls in the previous
+                // lane's segment contributes no new lines (the sort+dedup
+                // below would drop them anyway). In the cyclic layout,
+                // consecutive lanes nearly always share a segment, so one
+                // search per step does the work of 32 (§Perf).
+                let (mut seg_lo, mut seg_hi) = (u64::MAX, u64::MAX);
+                let mut lanes_active = 0u64;
+                for lane in 0..warp_lanes {
+                    let t = widx * warp_lanes + lane;
+                    let eid = match lb.distribution {
+                        Distribution::Cyclic => t + j * p,
+                        Distribution::Blocked => t * w + j,
+                    };
+                    if eid >= total {
+                        continue;
+                    }
+                    lanes_active += 1;
+                    if do_search && !(seg_lo <= eid && eid < seg_hi) {
+                        let idx = probe_lines(&lb.prefix, eid, line_bytes, &mut line_buf);
+                        seg_lo = if idx == 0 { 0 } else { lb.prefix[idx - 1] };
+                        seg_hi = lb.prefix[idx];
+                    }
+                    // Edge-data touch (col_idx + weight, 8 B at eid) in an
+                    // address region disjoint from the prefix array.
+                    line_buf.push(EDGE_REGION + (eid * 8) / line_bytes);
+                }
+                if lanes_active == 0 {
+                    continue;
+                }
+                // Coalescing: lanes touching the same line in the same
+                // lockstep issue one transaction; prefix probes go through
+                // the per-SM cache (aligned trajectories -> hits — the
+                // cyclic case), edge-data lines amortize across each lane's
+                // contiguous walk. One coalesced edge transaction per step
+                // is already priced into `cycles_edge`, so the first
+                // edge-region line is free.
+                line_buf.sort_unstable();
+                line_buf.dedup();
+                let mut first_edge = true;
+                for &line in &line_buf {
+                    let hit = cache.access(line * line_bytes);
+                    if line >= EDGE_REGION && first_edge {
+                        first_edge = false;
+                        continue; // the baseline coalesced transaction
+                    }
+                    sim_search_cycles += if hit {
+                        self.cost.cycles_mem_hit
+                    } else {
+                        self.cost.cycles_mem_miss
+                    };
+                }
+            }
+            hits += cache.hits();
+            misses += cache.misses();
+            simulated += 1;
+            widx += warp_stride;
+        }
+        let search_per_warp = if simulated > 0 {
+            sim_search_cycles / simulated
+        } else {
+            0
+        };
+        // Extrapolate sampled hit/miss counts to the full launch.
+        let scale = nwarps as f64 / simulated.max(1) as f64;
+        hits = (hits as f64 * scale) as u64;
+        misses = (misses as f64 * scale) as u64;
+
+        // --- per-block edges and cycles ---
+        let mut block_edges = vec![0u64; nb];
+        for b in 0..nb as u64 {
+            let mut edges = 0u64;
+            for t in b * tpb..(b + 1) * tpb {
+                edges += match lb.distribution {
+                    Distribution::Cyclic => {
+                        if t < total {
+                            (total - t).div_ceil(p)
+                        } else {
+                            0
+                        }
+                    }
+                    Distribution::Blocked => {
+                        let lo = t * w;
+                        if lo < total {
+                            w.min(total - lo)
+                        } else {
+                            0
+                        }
+                    }
+                };
+            }
+            block_edges[b as usize] = edges;
+        }
+        let block_cycles: Vec<u64> = (0..nb)
+            .map(|_| w * ec + search_per_warp)
+            .collect();
+        // Enterprise-style grid launches pay one launch per processed
+        // vertex (no shared prefix kernel); the searched LB kernel is one
+        // launch total.
+        let launches = if lb.search { 1 } else { lb.vertices.len().max(1) as u64 };
+        let kernel_cycles = launches * self.cost.cycles_launch
+            + block_cycles.iter().max().copied().unwrap_or(0);
+        KernelStats {
+            label: "lb".into(),
+            block_edges,
+            block_cycles,
+            kernel_cycles,
+            total_edges: total,
+            cache_hits: hits,
+            cache_misses: misses,
+        }
+    }
+}
+
+
+/// Line-id offset separating the edge-data region from the prefix array in
+/// the LB-kernel cache simulation.
+const EDGE_REGION: u64 = 1 << 40;
+
+
+/// Collect the cache-line ids a binary search for `eid` touches in the
+/// inclusive prefix array (`u64` entries) and return the owner index.
+/// Mirrors `ref.edge_to_src`'s semantics: first index with `prefix[i] > eid`.
+#[inline]
+fn probe_lines(prefix: &[u64], eid: u64, line_bytes: u64, out: &mut Vec<u64>) -> usize {
+    let (mut lo, mut hi) = (0usize, prefix.len());
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        out.push((mid as u64 * 8) / line_bytes);
+        if prefix[mid] <= eid {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> Simulator {
+        Simulator::new(GpuSpec::default_sim(), CostModel::default())
+    }
+
+    fn thread_items(n: usize, deg: u64) -> Vec<VertexItem> {
+        (0..n)
+            .map(|v| VertexItem { vertex: v as u32, degree: deg, unit: Unit::Thread })
+            .collect()
+    }
+
+    #[test]
+    fn empty_schedule_costs_one_launch() {
+        let s = sim();
+        let r = s.simulate(
+            &Schedule { twc: vec![], lb: None, scan_vertices: 0, prefix_items: 0 },
+            true,
+        );
+        assert_eq!(r.kernels.len(), 1);
+        assert_eq!(r.total_cycles, s.cost.cycles_launch);
+    }
+
+    #[test]
+    fn single_cta_item_loads_one_block() {
+        let s = sim();
+        let items = vec![VertexItem { vertex: 0, degree: 100_000, unit: Unit::Block }];
+        let r = s.simulate(
+            &Schedule { twc: items, lb: None, scan_vertices: 0, prefix_items: 0 },
+            true,
+        );
+        let k = &r.kernels[0];
+        assert_eq!(k.block_edges[0], 100_000);
+        assert!(k.block_edges[1..].iter().all(|&e| e == 0));
+        assert!(k.imbalance_factor() > 10.0);
+    }
+
+    #[test]
+    fn lb_launch_balances_blocks() {
+        let s = sim();
+        let lb = LbLaunch {
+            vertices: vec![0],
+            prefix: vec![100_000],
+            distribution: Distribution::Cyclic,
+            search: true,
+        };
+        let r = s.simulate(
+            &Schedule { twc: vec![], lb: Some(lb), scan_vertices: 0, prefix_items: 1 },
+            true,
+        );
+        let k = r.kernels.iter().find(|k| k.label == "lb").unwrap();
+        assert_eq!(k.block_edges.iter().sum::<u64>(), 100_000);
+        let max = *k.block_edges.iter().max().unwrap();
+        let min = *k.block_edges.iter().min().unwrap();
+        assert!(max - min <= s.spec.threads_per_block as u64, "max {max} min {min}");
+        assert!(k.imbalance_factor() < 1.05);
+    }
+
+    #[test]
+    fn lb_beats_single_cta_on_hub() {
+        // The paper's core claim at kernel granularity: distributing a huge
+        // vertex's edges across all blocks beats one CTA walking them.
+        let s = sim();
+        let hub = 1_000_000u64;
+        let cta = s.simulate(
+            &Schedule {
+                twc: vec![VertexItem { vertex: 0, degree: hub, unit: Unit::Block }],
+                lb: None,
+                scan_vertices: 0,
+                prefix_items: 0,
+            },
+            true,
+        );
+        let lb = s.simulate(
+            &Schedule {
+                twc: vec![],
+                lb: Some(LbLaunch {
+                    vertices: vec![0],
+                    prefix: vec![hub],
+                    distribution: Distribution::Cyclic,
+                    search: true,
+                }),
+                scan_vertices: 0,
+                prefix_items: 1,
+            },
+            true,
+        );
+        assert!(
+            lb.total_cycles * 3 < cta.total_cycles,
+            "lb {} vs cta {}",
+            lb.total_cycles,
+            cta.total_cycles
+        );
+    }
+
+    #[test]
+    fn cyclic_cheaper_than_blocked() {
+        // Paper §4.1/Fig 8: cyclic's coalesced binary searches must come out
+        // faster through the cache model, not by fiat.
+        let s = sim();
+        let prefix: Vec<u64> = (1..=512u64).map(|i| i * 2000).collect();
+        let mk = |d| {
+            Schedule {
+                twc: vec![],
+                lb: Some(LbLaunch {
+                    vertices: (0..512).collect(),
+                    prefix: prefix.clone(),
+                    distribution: d,
+                    search: true,
+                }),
+                scan_vertices: 0,
+                prefix_items: 512,
+            }
+        };
+        let cyc = s.simulate(&mk(Distribution::Cyclic), true);
+        let blk = s.simulate(&mk(Distribution::Blocked), true);
+        assert!(
+            cyc.total_cycles < blk.total_cycles,
+            "cyclic {} must beat blocked {}",
+            cyc.total_cycles,
+            blk.total_cycles
+        );
+    }
+
+    #[test]
+    fn push_costs_more_than_pull() {
+        let s = sim();
+        let sched = Schedule {
+            twc: thread_items(1000, 8),
+            lb: None,
+            scan_vertices: 0,
+            prefix_items: 0,
+        };
+        let push = s.simulate(&sched, true);
+        let pull = s.simulate(&sched, false);
+        assert!(push.total_cycles > pull.total_cycles);
+    }
+
+    #[test]
+    fn thread_items_round_robin_evenly() {
+        let s = sim();
+        let n = s.spec.total_threads() as usize * 2; // two per thread
+        let r = s.simulate(
+            &Schedule { twc: thread_items(n, 5), lb: None, scan_vertices: 0, prefix_items: 0 },
+            false,
+        );
+        let k = &r.kernels[0];
+        let per_block = 2 * 5 * s.spec.threads_per_block as u64;
+        assert!(k.block_edges.iter().all(|&e| e == per_block));
+        assert!(k.imbalance_factor() <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn warp_items_split_degree_across_lanes() {
+        let s = sim();
+        let deg = 320u64;
+        let r = s.simulate(
+            &Schedule {
+                twc: vec![VertexItem { vertex: 0, degree: deg, unit: Unit::Warp }],
+                lb: None,
+                scan_vertices: 0,
+                prefix_items: 0,
+            },
+            false,
+        );
+        let k = &r.kernels[0];
+        // warp processes 320 edges over 32 lanes -> 10 serial edge slots
+        let expect = deg.div_ceil(32) * s.cost.cycles_edge;
+        assert_eq!(
+            k.kernel_cycles,
+            s.cost.cycles_launch + expect
+        );
+    }
+
+    #[test]
+    fn scan_cost_scales_with_vertices() {
+        let s = sim();
+        let small = s.simulate(
+            &Schedule { twc: vec![], lb: None, scan_vertices: 1, prefix_items: 0 },
+            false,
+        );
+        let big = s.simulate(
+            &Schedule {
+                twc: vec![],
+                lb: None,
+                scan_vertices: 100 * s.spec.total_threads(),
+                prefix_items: 0,
+            },
+            false,
+        );
+        assert!(big.total_cycles > small.total_cycles);
+    }
+
+    #[test]
+    fn lb_block_edges_exact_for_blocked_tail() {
+        let s = sim();
+        let total = s.spec.total_threads() * 3 + 17; // ragged tail
+        let lb = LbLaunch {
+            vertices: vec![0],
+            prefix: vec![total],
+            distribution: Distribution::Blocked,
+            search: true,
+        };
+        let r = s.simulate(
+            &Schedule { twc: vec![], lb: Some(lb), scan_vertices: 0, prefix_items: 1 },
+            false,
+        );
+        let k = r.kernels.iter().find(|k| k.label == "lb").unwrap();
+        assert_eq!(k.block_edges.iter().sum::<u64>(), total);
+    }
+
+    #[test]
+    fn imbalance_factor_of_uniform_is_one() {
+        let k = KernelStats {
+            label: "x".into(),
+            block_edges: vec![5, 5, 5, 5],
+            block_cycles: vec![1, 1, 1, 1],
+            kernel_cycles: 1,
+            total_edges: 20,
+            cache_hits: 0,
+            cache_misses: 0,
+        };
+        assert!((k.imbalance_factor() - 1.0).abs() < 1e-12);
+    }
+}

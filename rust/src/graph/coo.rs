@@ -1,0 +1,128 @@
+//! Edge-list (COO) representation — the generators' output format and the
+//! input to the CSR builder. Kept separate from CSR because the paper's
+//! discussion (§3.1) of edge-based balancing hinges on the COO-vs-CSR space
+//! trade-off: COO stores both endpoints per edge, CSR does not.
+
+use super::rng::Rng;
+
+/// One directed, weighted edge.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Edge {
+    pub src: u32,
+    pub dst: u32,
+    pub weight: f32,
+}
+
+/// A graph as a bag of directed edges plus a vertex-count bound.
+#[derive(Debug, Clone, Default)]
+pub struct EdgeList {
+    pub num_vertices: u32,
+    pub edges: Vec<Edge>,
+}
+
+impl EdgeList {
+    pub fn new(num_vertices: u32) -> Self {
+        EdgeList { num_vertices, edges: Vec::new() }
+    }
+
+    pub fn push(&mut self, src: u32, dst: u32, weight: f32) {
+        debug_assert!(src < self.num_vertices && dst < self.num_vertices);
+        self.edges.push(Edge { src, dst, weight });
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Add the reverse of every edge (used to build undirected inputs like
+    /// the orkut analogue). Weights are preserved.
+    pub fn symmetrize(&mut self) {
+        let fwd = self.edges.clone();
+        self.edges.reserve(fwd.len());
+        for e in fwd {
+            self.edges.push(Edge { src: e.dst, dst: e.src, weight: e.weight });
+        }
+    }
+
+    /// Remove duplicate (src, dst) pairs, keeping the smallest weight.
+    /// Self-loops are kept iff `keep_self_loops`.
+    pub fn dedup(&mut self, keep_self_loops: bool) {
+        self.edges.retain(|e| keep_self_loops || e.src != e.dst);
+        self.edges.sort_unstable_by_key(|e| ((e.src as u64) << 32) | e.dst as u64);
+        self.edges.dedup_by(|a, b| {
+            if a.src == b.src && a.dst == b.dst {
+                b.weight = b.weight.min(a.weight);
+                true
+            } else {
+                false
+            }
+        });
+    }
+
+    /// Assign uniform-random integer weights in `[1, max_w]` (the standard
+    /// sssp workload prep; bfs ignores weights, cc uses 0-cost propagation).
+    pub fn randomize_weights(&mut self, max_w: u32, rng: &mut Rng) {
+        for e in &mut self.edges {
+            e.weight = (1 + rng.gen_range(max_w as u64)) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> EdgeList {
+        let mut el = EdgeList::new(4);
+        el.push(0, 1, 1.0);
+        el.push(0, 2, 2.0);
+        el.push(2, 3, 3.0);
+        el
+    }
+
+    #[test]
+    fn push_and_count() {
+        let el = tiny();
+        assert_eq!(el.num_edges(), 3);
+        assert_eq!(el.edges[1], Edge { src: 0, dst: 2, weight: 2.0 });
+    }
+
+    #[test]
+    fn symmetrize_doubles_edges() {
+        let mut el = tiny();
+        el.symmetrize();
+        assert_eq!(el.num_edges(), 6);
+        assert!(el.edges.iter().any(|e| e.src == 1 && e.dst == 0));
+        assert!(el.edges.iter().any(|e| e.src == 3 && e.dst == 2));
+    }
+
+    #[test]
+    fn dedup_keeps_min_weight() {
+        let mut el = EdgeList::new(3);
+        el.push(0, 1, 5.0);
+        el.push(0, 1, 2.0);
+        el.push(1, 1, 1.0); // self loop
+        el.dedup(false);
+        assert_eq!(el.num_edges(), 1);
+        assert_eq!(el.edges[0].weight, 2.0);
+    }
+
+    #[test]
+    fn dedup_can_keep_self_loops() {
+        let mut el = EdgeList::new(2);
+        el.push(1, 1, 1.0);
+        el.dedup(true);
+        assert_eq!(el.num_edges(), 1);
+    }
+
+    #[test]
+    fn randomize_weights_in_range() {
+        let mut el = tiny();
+        let mut rng = Rng::new(3);
+        el.randomize_weights(8, &mut rng);
+        for e in &el.edges {
+            assert!((1.0..=8.0).contains(&e.weight));
+            assert_eq!(e.weight.fract(), 0.0);
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Compressed-sparse-row graph — the runtime representation.
+//!
+//! Matches the paper's storage decision (§4.1): the graph stays in CSR (plus
+//! an optional CSC view for pull-style operators); the LB kernel recovers an
+//! edge's endpoints from its global edge id with a binary search over the
+//! huge-vertex prefix array instead of materializing COO.
+
+use super::coo::EdgeList;
+
+/// CSR graph with out-edges; optionally carries the transposed (CSC) view
+/// for pull-style applications (pagerank, k-core).
+#[derive(Debug, Clone)]
+pub struct CsrGraph {
+    /// `row_offsets[v]..row_offsets[v+1]` indexes `col_idx`/`weights`.
+    pub row_offsets: Vec<u64>,
+    /// Destination vertex of each out-edge.
+    pub col_idx: Vec<u32>,
+    /// Weight of each out-edge.
+    pub weights: Vec<f32>,
+    /// Transposed view (in-edges), built on demand.
+    pub csc: Option<Box<CscView>>,
+}
+
+/// The in-edge (CSC) view: `in_offsets[v]..in_offsets[v+1]` indexes
+/// `in_src`/`in_weights`, giving vertex `v`'s in-neighbors.
+#[derive(Debug, Clone)]
+pub struct CscView {
+    pub in_offsets: Vec<u64>,
+    pub in_src: Vec<u32>,
+    pub in_weights: Vec<f32>,
+}
+
+impl CsrGraph {
+    /// Build from an edge list (counting sort by source; stable within a
+    /// source in input order).
+    pub fn from_edge_list(el: &EdgeList) -> Self {
+        let n = el.num_vertices as usize;
+        let m = el.edges.len();
+        let mut counts = vec![0u64; n + 1];
+        for e in &el.edges {
+            counts[e.src as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let row_offsets = counts.clone();
+        let mut cursor = counts;
+        let mut col_idx = vec![0u32; m];
+        let mut weights = vec![0f32; m];
+        for e in &el.edges {
+            let p = cursor[e.src as usize] as usize;
+            col_idx[p] = e.dst;
+            weights[p] = e.weight;
+            cursor[e.src as usize] += 1;
+        }
+        CsrGraph { row_offsets, col_idx, weights, csc: None }
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.row_offsets.len() - 1
+    }
+
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    #[inline]
+    pub fn out_degree(&self, v: u32) -> u64 {
+        self.row_offsets[v as usize + 1] - self.row_offsets[v as usize]
+    }
+
+    /// Out-neighbors of `v` as parallel (dst, weight) slices.
+    #[inline]
+    pub fn out_edges(&self, v: u32) -> (&[u32], &[f32]) {
+        let lo = self.row_offsets[v as usize] as usize;
+        let hi = self.row_offsets[v as usize + 1] as usize;
+        (&self.col_idx[lo..hi], &self.weights[lo..hi])
+    }
+
+    /// Global edge-id range owned by `v` (the LB kernel's CSR <-> edge-id map).
+    #[inline]
+    pub fn edge_range(&self, v: u32) -> std::ops::Range<u64> {
+        self.row_offsets[v as usize]..self.row_offsets[v as usize + 1]
+    }
+
+    /// Destination and weight of global edge id `e`.
+    #[inline]
+    pub fn edge(&self, e: u64) -> (u32, f32) {
+        (self.col_idx[e as usize], self.weights[e as usize])
+    }
+
+    /// Build (and cache) the transposed view. Idempotent.
+    pub fn build_csc(&mut self) {
+        if self.csc.is_some() {
+            return;
+        }
+        let n = self.num_vertices();
+        let m = self.num_edges();
+        let mut counts = vec![0u64; n + 1];
+        for &d in &self.col_idx {
+            counts[d as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let in_offsets = counts.clone();
+        let mut cursor = counts;
+        let mut in_src = vec![0u32; m];
+        let mut in_weights = vec![0f32; m];
+        for v in 0..n as u32 {
+            let (dsts, ws) = {
+                let lo = self.row_offsets[v as usize] as usize;
+                let hi = self.row_offsets[v as usize + 1] as usize;
+                (&self.col_idx[lo..hi], &self.weights[lo..hi])
+            };
+            for (&d, &w) in dsts.iter().zip(ws) {
+                let p = cursor[d as usize] as usize;
+                in_src[p] = v;
+                in_weights[p] = w;
+                cursor[d as usize] += 1;
+            }
+        }
+        self.csc = Some(Box::new(CscView { in_offsets, in_src, in_weights }));
+    }
+
+    #[inline]
+    pub fn in_degree(&self, v: u32) -> u64 {
+        let c = self.csc.as_ref().expect("build_csc() first");
+        c.in_offsets[v as usize + 1] - c.in_offsets[v as usize]
+    }
+
+    /// In-neighbors of `v` as parallel (src, weight) slices.
+    #[inline]
+    pub fn in_edges(&self, v: u32) -> (&[u32], &[f32]) {
+        let c = self.csc.as_ref().expect("build_csc() first");
+        let lo = c.in_offsets[v as usize] as usize;
+        let hi = c.in_offsets[v as usize + 1] as usize;
+        (&c.in_src[lo..hi], &c.in_weights[lo..hi])
+    }
+
+    /// Highest-out-degree vertex (the paper's bfs/sssp source on power-law
+    /// inputs).
+    pub fn max_out_degree_vertex(&self) -> u32 {
+        (0..self.num_vertices() as u32)
+            .max_by_key(|&v| self.out_degree(v))
+            .unwrap_or(0)
+    }
+
+    /// In-memory size estimate in bytes (CSR arrays only), for Table 1.
+    pub fn size_bytes(&self) -> u64 {
+        (self.row_offsets.len() * 8 + self.col_idx.len() * 4
+            + self.weights.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::coo::EdgeList;
+
+    fn diamond() -> CsrGraph {
+        // 0 -> {1, 2}, 1 -> 3, 2 -> 3
+        let mut el = EdgeList::new(4);
+        el.push(0, 1, 1.0);
+        el.push(0, 2, 2.0);
+        el.push(1, 3, 3.0);
+        el.push(2, 3, 4.0);
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn build_counts() {
+        let g = diamond();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.out_degree(0), 2);
+        assert_eq!(g.out_degree(3), 0);
+    }
+
+    #[test]
+    fn out_edges_contents() {
+        let g = diamond();
+        let (dsts, ws) = g.out_edges(0);
+        assert_eq!(dsts, &[1, 2]);
+        assert_eq!(ws, &[1.0, 2.0]);
+        let (dsts, _) = g.out_edges(3);
+        assert!(dsts.is_empty());
+    }
+
+    #[test]
+    fn edge_range_and_lookup_agree() {
+        let g = diamond();
+        let r = g.edge_range(2);
+        assert_eq!(r, 3..4);
+        assert_eq!(g.edge(3), (3, 4.0));
+    }
+
+    #[test]
+    fn csc_transpose_roundtrip() {
+        let mut g = diamond();
+        g.build_csc();
+        assert_eq!(g.in_degree(3), 2);
+        assert_eq!(g.in_degree(0), 0);
+        let (srcs, ws) = g.in_edges(3);
+        assert_eq!(srcs, &[1, 2]);
+        assert_eq!(ws, &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn csc_preserves_edge_count() {
+        let mut g = diamond();
+        g.build_csc();
+        let c = g.csc.as_ref().unwrap();
+        assert_eq!(c.in_src.len(), g.num_edges());
+        assert_eq!(*c.in_offsets.last().unwrap(), g.num_edges() as u64);
+    }
+
+    #[test]
+    fn build_csc_idempotent() {
+        let mut g = diamond();
+        g.build_csc();
+        let before = g.csc.as_ref().unwrap().in_src.clone();
+        g.build_csc();
+        assert_eq!(g.csc.as_ref().unwrap().in_src, before);
+    }
+
+    #[test]
+    fn max_out_degree_vertex_found() {
+        let g = diamond();
+        assert_eq!(g.max_out_degree_vertex(), 0);
+    }
+
+    #[test]
+    fn empty_vertex_graph() {
+        let el = EdgeList::new(3);
+        let g = CsrGraph::from_edge_list(&el);
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.out_degree(1), 0);
+    }
+
+    #[test]
+    fn size_bytes_counts_arrays() {
+        let g = diamond();
+        assert_eq!(g.size_bytes(), (5 * 8 + 4 * 4 + 4 * 4) as u64);
+    }
+}

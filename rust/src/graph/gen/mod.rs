@@ -1,0 +1,6 @@
+//! Graph generators: R-MAT (paper's rmat23–27), road grids (road-USA),
+//! and configuration-model power-law graphs (orkut / twitter40 / uk2007).
+
+pub mod powerlaw;
+pub mod rmat;
+pub mod road;

@@ -1,0 +1,124 @@
+//! Road-network generator — the road-USA analogue.
+//!
+//! Paper Table 1 characterizes road-USA as: E/V = 2, max degree 9, huge
+//! diameter (6261), uniform low degrees. We reproduce that regime with a
+//! W x H grid: each cell connects to its right/down neighbors (both
+//! directions, so E/V ~= 4 before trimming) plus a sparse sprinkle of
+//! diagonal "shortcut" streets, capped so no vertex exceeds degree 8.
+//! Weights are small integers (road segment lengths).
+
+use crate::graph::coo::EdgeList;
+use crate::graph::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct RoadConfig {
+    pub width: u32,
+    pub height: u32,
+    /// Probability a cell gets a diagonal edge pair.
+    pub diagonal_p: f64,
+    /// Probability an axis edge is dropped (models missing street links and
+    /// brings E/V down toward the road-USA ratio).
+    pub drop_p: f64,
+    pub max_weight: u32,
+    pub seed: u64,
+}
+
+impl RoadConfig {
+    /// road-USA-like defaults at a given side length.
+    pub fn paper(side: u32, seed: u64) -> Self {
+        RoadConfig {
+            width: side,
+            height: side,
+            diagonal_p: 0.05,
+            drop_p: 0.25,
+            max_weight: 1000,
+            seed,
+        }
+    }
+}
+
+/// Generate a bidirected grid road network.
+pub fn generate(cfg: &RoadConfig) -> EdgeList {
+    let n = cfg.width as u64 * cfg.height as u64;
+    assert!(n <= u32::MAX as u64, "grid too large");
+    let mut rng = Rng::new(cfg.seed);
+    let mut el = EdgeList::new(n as u32);
+    let id = |x: u32, y: u32| y * cfg.width + x;
+    let both = |el: &mut EdgeList, a: u32, b: u32, rng: &mut Rng| {
+        let w = (1 + rng.gen_range(cfg.max_weight as u64)) as f32;
+        el.push(a, b, w);
+        el.push(b, a, w);
+    };
+    for y in 0..cfg.height {
+        for x in 0..cfg.width {
+            let v = id(x, y);
+            if x + 1 < cfg.width && !rng.gen_bool(cfg.drop_p) {
+                both(&mut el, v, id(x + 1, y), &mut rng);
+            }
+            if y + 1 < cfg.height && !rng.gen_bool(cfg.drop_p) {
+                both(&mut el, v, id(x, y + 1), &mut rng);
+            }
+            if x + 1 < cfg.width && y + 1 < cfg.height && rng.gen_bool(cfg.diagonal_p)
+            {
+                both(&mut el, v, id(x + 1, y + 1), &mut rng);
+            }
+        }
+    }
+    el
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::CsrGraph;
+
+    #[test]
+    fn degree_is_bounded_like_road_usa() {
+        let el = generate(&RoadConfig::paper(64, 1));
+        let g = CsrGraph::from_edge_list(&el);
+        let max_d = (0..g.num_vertices() as u32).map(|v| g.out_degree(v)).max().unwrap();
+        assert!(max_d <= 9, "road max degree {max_d} > 9");
+    }
+
+    #[test]
+    fn edge_ratio_near_paper() {
+        let el = generate(&RoadConfig::paper(128, 2));
+        let ratio = el.num_edges() as f64 / el.num_vertices as f64;
+        assert!((1.5..4.0).contains(&ratio), "E/V = {ratio}");
+    }
+
+    #[test]
+    fn edges_are_symmetric() {
+        let el = generate(&RoadConfig::paper(32, 3));
+        let mut set = std::collections::HashSet::new();
+        for e in &el.edges {
+            set.insert((e.src, e.dst));
+        }
+        for e in &el.edges {
+            assert!(set.contains(&(e.dst, e.src)));
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = generate(&RoadConfig::paper(32, 9));
+        let b = generate(&RoadConfig::paper(32, 9));
+        assert!(a.edges.iter().zip(&b.edges).all(|(x, y)| x == y));
+    }
+
+    #[test]
+    fn grid_is_locally_connected() {
+        // Neighbor ids only differ by +-1, +-W, or +-(W+1).
+        let cfg = RoadConfig::paper(16, 4);
+        let el = generate(&cfg);
+        for e in &el.edges {
+            let d = (e.src as i64 - e.dst as i64).unsigned_abs();
+            assert!(
+                d == 1 || d == cfg.width as u64 || d == cfg.width as u64 + 1,
+                "non-local edge {} -> {}",
+                e.src,
+                e.dst
+            );
+        }
+    }
+}

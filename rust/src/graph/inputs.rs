@@ -1,0 +1,174 @@
+//! Named input presets — the paper's Table 1 graphs, reproduced at
+//! simulation scale.
+//!
+//! The paper's inputs are up to 3.7 B edges on 16 data-center GPUs; this
+//! repository targets a laptop-scale simulator, so each preset reproduces its
+//! paper counterpart's *regime* (the properties the evaluation actually
+//! depends on) rather than its absolute size:
+//!
+//! | preset      | paper input | regime preserved                                     |
+//! |-------------|-------------|------------------------------------------------------|
+//! | `rmat18`    | rmat23      | out-hub >> THRESHOLD, in-degree flat, E/V = 16       |
+//! | `rmat20`    | rmat25      | same, 4x larger                                      |
+//! | `orkut-s`   | orkut       | power-law but max Dout < THRESHOLD, high E/V, sym.   |
+//! | `road-s`    | road-USA    | max deg <= 9, E/V ~ 2.4, huge diameter               |
+//! | `rmat21`    | rmat26      | multi-GPU scale hub graph                            |
+//! | `rmat22`    | rmat27      | same, 2x larger                                      |
+//! | `twitter-s` | twitter40   | directed power-law, hub >> THRESHOLD                 |
+//! | `uk-s`      | uk2007      | high E/V, max Dout just *below* THRESHOLD            |
+//!
+//! `--scale-delta` on the CLI shifts every preset up or down in lockstep.
+
+use super::coo::EdgeList;
+use super::csr::CsrGraph;
+use super::gen::{powerlaw, rmat, road};
+
+/// All preset names, in Table 1 order.
+pub const ALL_INPUTS: [&str; 8] = [
+    "rmat18", "rmat20", "orkut-s", "road-s", "rmat21", "rmat22", "twitter-s",
+    "uk-s",
+];
+
+/// Single-host (Momentum / Table 2) inputs.
+pub const SINGLE_HOST_INPUTS: [&str; 4] = ["rmat18", "rmat20", "orkut-s", "road-s"];
+
+/// Multi-host (Bridges / Fig 10) inputs.
+pub const MULTI_HOST_INPUTS: [&str; 4] = ["rmat21", "rmat22", "twitter-s", "uk-s"];
+
+/// The paper input each preset stands in for.
+pub fn paper_name(preset: &str) -> &'static str {
+    match preset {
+        "rmat18" => "rmat23",
+        "rmat20" => "rmat25",
+        "orkut-s" => "orkut",
+        "road-s" => "road-USA",
+        "rmat21" => "rmat26",
+        "rmat22" => "rmat27",
+        "twitter-s" => "twitter40",
+        "uk-s" => "uk2007",
+        _ => "?",
+    }
+}
+
+/// Generate a preset input. `scale_delta` shifts the size exponent
+/// (+1 ~= 2x vertices); `seed` keys the generator streams.
+pub fn generate(name: &str, scale_delta: i32, seed: u64) -> Option<EdgeList> {
+    let sc = |base: u32| (base as i64 + scale_delta as i64).max(6) as u32;
+    let nv = |base: u32| {
+        let shifted = (base as i64) << scale_delta.max(0);
+        (shifted >> (-scale_delta).max(0)).max(1 << 6) as u32
+    };
+    let el = match name {
+        "rmat18" => rmat::generate(&rmat::RmatConfig::paper(sc(14), seed)),
+        "rmat20" => rmat::generate(&rmat::RmatConfig::paper(sc(16), seed ^ 1)),
+        "rmat21" => rmat::generate(&rmat::RmatConfig::paper(sc(17), seed ^ 2)),
+        "rmat22" => rmat::generate(&rmat::RmatConfig::paper(sc(18), seed ^ 3)),
+        "orkut-s" => powerlaw::generate(&powerlaw::PowerLawConfig {
+            num_vertices: nv(40_000),
+            avg_degree: 60,
+            alpha: 2.2,
+            max_degree: 900, // below THRESHOLD: ALB must stay dormant
+            symmetric: true,
+            max_weight: 100,
+            seed: seed ^ 4,
+        }),
+        "road-s" => road::generate(&road::RoadConfig::paper(
+            1 << sc(8).min(12),
+            seed ^ 5,
+        )),
+        "twitter-s" => powerlaw::generate(&powerlaw::PowerLawConfig {
+            num_vertices: nv(120_000),
+            avg_degree: 35,
+            alpha: 1.9,
+            max_degree: 60_000, // hub >> THRESHOLD: ALB triggers
+            symmetric: false,
+            max_weight: 100,
+            seed: seed ^ 6,
+        }),
+        "uk-s" => powerlaw::generate(&powerlaw::PowerLawConfig {
+            num_vertices: nv(100_000),
+            avg_degree: 35,
+            alpha: 2.1,
+            max_degree: 600, // paper: max Dout < launched threads
+            symmetric: false,
+            max_weight: 100,
+            seed: seed ^ 7,
+        }),
+        _ => return None,
+    };
+    Some(el)
+}
+
+/// Generate + build CSR in one step.
+pub fn build(name: &str, scale_delta: i32, seed: u64) -> Option<CsrGraph> {
+    generate(name, scale_delta, seed).map(|el| CsrGraph::from_edge_list(&el))
+}
+
+/// The paper's bfs/sssp source policy: highest out-degree vertex, except
+/// road networks where it is vertex 0 (§5).
+pub fn source_vertex(name: &str, g: &CsrGraph) -> u32 {
+    if name.starts_with("road") {
+        0
+    } else {
+        g.max_out_degree_vertex()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_generate() {
+        for name in ALL_INPUTS {
+            let el = generate(name, -4, 1).unwrap_or_else(|| panic!("{name}"));
+            assert!(el.num_edges() > 0, "{name} empty");
+        }
+    }
+
+    #[test]
+    fn unknown_preset_is_none() {
+        assert!(generate("nope", 0, 1).is_none());
+    }
+
+    #[test]
+    fn road_source_is_zero() {
+        let g = build("road-s", -4, 1).unwrap();
+        assert_eq!(source_vertex("road-s", &g), 0);
+    }
+
+    #[test]
+    fn rmat_source_is_hub() {
+        let g = build("rmat18", -4, 1).unwrap();
+        let s = source_vertex("rmat18", &g);
+        assert_eq!(g.out_degree(s), (0..g.num_vertices() as u32).map(|v| g.out_degree(v)).max().unwrap());
+    }
+
+    #[test]
+    fn orkut_hub_below_threshold_regime() {
+        let g = build("orkut-s", 0, 1).unwrap();
+        let max_d = (0..g.num_vertices() as u32).map(|v| g.out_degree(v)).max().unwrap();
+        assert!(max_d < 1024, "orkut-s hub {max_d} must stay under THRESHOLD");
+    }
+
+    #[test]
+    fn rmat_hub_above_threshold_regime() {
+        let g = build("rmat18", 0, 1).unwrap();
+        let max_d = (0..g.num_vertices() as u32).map(|v| g.out_degree(v)).max().unwrap();
+        assert!(max_d >= 1024, "rmat18 hub {max_d} must exceed THRESHOLD");
+    }
+
+    #[test]
+    fn scale_delta_changes_size() {
+        let small = generate("rmat18", -4, 1).unwrap();
+        let big = generate("rmat18", -2, 1).unwrap();
+        assert!(big.num_vertices > small.num_vertices);
+    }
+
+    #[test]
+    fn paper_names_complete() {
+        for name in ALL_INPUTS {
+            assert_ne!(paper_name(name), "?");
+        }
+    }
+}

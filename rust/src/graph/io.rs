@@ -1,0 +1,159 @@
+//! Binary graph serialization (`.albg`) so generated inputs can be shared
+//! across runs and benches without regeneration.
+//!
+//! Format (little-endian): magic `ALBG` + u32 version, u64 n, u64 m,
+//! `(n+1) x u64` row offsets, `m x u32` column indices, `m x f32` weights.
+
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::csr::CsrGraph;
+
+const MAGIC: &[u8; 4] = b"ALBG";
+const VERSION: u32 = 1;
+
+/// Write a CSR graph (out-edges only; CSC is rebuilt on load when needed).
+pub fn save(g: &CsrGraph, path: &Path) -> io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    let n = (g.row_offsets.len() - 1) as u64;
+    let m = g.col_idx.len() as u64;
+    w.write_all(&n.to_le_bytes())?;
+    w.write_all(&m.to_le_bytes())?;
+    for &o in &g.row_offsets {
+        w.write_all(&o.to_le_bytes())?;
+    }
+    for &c in &g.col_idx {
+        w.write_all(&c.to_le_bytes())?;
+    }
+    for &x in &g.weights {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    w.flush()
+}
+
+/// Load a `.albg` file.
+pub fn load(path: &Path) -> io::Result<CsrGraph> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic"));
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("unsupported version {version}"),
+        ));
+    }
+    let n = read_u64(&mut r)? as usize;
+    let m = read_u64(&mut r)? as usize;
+    let mut row_offsets = Vec::with_capacity(n + 1);
+    for _ in 0..=n {
+        row_offsets.push(read_u64(&mut r)?);
+    }
+    if row_offsets.last().copied() != Some(m as u64) {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "offset/m mismatch"));
+    }
+    let mut col_idx = Vec::with_capacity(m);
+    for _ in 0..m {
+        col_idx.push(read_u32(&mut r)?);
+    }
+    let mut weights = Vec::with_capacity(m);
+    for _ in 0..m {
+        weights.push(f32::from_le_bytes(read4(&mut r)?));
+    }
+    Ok(CsrGraph { row_offsets, col_idx, weights, csc: None })
+}
+
+fn read4<R: Read>(r: &mut R) -> io::Result<[u8; 4]> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(b)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    Ok(u32::from_le_bytes(read4(r)?))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::coo::EdgeList;
+    use crate::graph::gen::rmat::{self, RmatConfig};
+
+    /// Unique temp path that cleans itself up on drop (no tempfile crate in
+    /// the vendored set).
+    struct TmpPath(std::path::PathBuf);
+    impl TmpPath {
+        fn new(tag: &str) -> Self {
+            let p = std::env::temp_dir().join(format!(
+                "albg-test-{tag}-{}-{:?}",
+                std::process::id(),
+                std::thread::current().id()
+            ));
+            TmpPath(p)
+        }
+        fn path(&self) -> &Path {
+            &self.0
+        }
+    }
+    impl Drop for TmpPath {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_file(&self.0);
+        }
+    }
+
+    #[test]
+    fn roundtrip_small() {
+        let mut el = EdgeList::new(3);
+        el.push(0, 1, 1.5);
+        el.push(1, 2, 2.5);
+        let g = CsrGraph::from_edge_list(&el);
+        let tmp = TmpPath::new("small");
+        save(&g, tmp.path()).unwrap();
+        let g2 = load(tmp.path()).unwrap();
+        assert_eq!(g.row_offsets, g2.row_offsets);
+        assert_eq!(g.col_idx, g2.col_idx);
+        assert_eq!(g.weights, g2.weights);
+    }
+
+    #[test]
+    fn roundtrip_rmat() {
+        let el = rmat::generate(&RmatConfig::paper(8, 1));
+        let g = CsrGraph::from_edge_list(&el);
+        let tmp = TmpPath::new("rmat");
+        save(&g, tmp.path()).unwrap();
+        let g2 = load(tmp.path()).unwrap();
+        assert_eq!(g.col_idx, g2.col_idx);
+        assert_eq!(g.weights, g2.weights);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let tmp = TmpPath::new("magic");
+        std::fs::write(tmp.path(), b"NOPE0000000000000000").unwrap();
+        assert!(load(tmp.path()).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut el = EdgeList::new(3);
+        el.push(0, 1, 1.0);
+        let g = CsrGraph::from_edge_list(&el);
+        let tmp = TmpPath::new("trunc");
+        save(&g, tmp.path()).unwrap();
+        let bytes = std::fs::read(tmp.path()).unwrap();
+        std::fs::write(tmp.path(), &bytes[..bytes.len() - 3]).unwrap();
+        assert!(load(tmp.path()).is_err());
+    }
+}

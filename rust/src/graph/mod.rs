@@ -1,0 +1,16 @@
+//! Graph substrate: COO/CSR representations, generators (R-MAT, road,
+//! power-law), property extraction (Table 1), binary I/O, and the
+//! deterministic RNG every stochastic component shares.
+
+pub mod coo;
+pub mod csr;
+pub mod gen;
+pub mod inputs;
+pub mod io;
+pub mod props;
+pub mod rng;
+
+pub use coo::{Edge, EdgeList};
+pub use csr::CsrGraph;
+pub use props::GraphProps;
+pub use rng::Rng;

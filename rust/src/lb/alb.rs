@@ -1,0 +1,206 @@
+//! The paper's Adaptive Load Balancer (§4).
+//!
+//! Inspector–executor, per round:
+//!
+//! 1. **Inspect** (fused into the TWC kernel in the generated code, Fig. 3
+//!    lines 3–9): each active vertex with `degree >= THRESHOLD` goes to the
+//!    *huge* worklist; the rest are TWC-binned as usual. THRESHOLD defaults
+//!    to the launched thread count (§4.2 — the experimentally-found sweet
+//!    spot; 26,624 on the paper's GPUs).
+//! 2. **Prefix-sum** the huge degrees (Fig. 3 line 31).
+//! 3. **Execute**: if the huge worklist is non-empty, launch the LB kernel —
+//!    `total_edges / nthreads` edges per thread, cyclic by default (§4.1) —
+//!    alongside the TWC kernel for the remaining vertices.
+//!
+//! Adaptivity is the point: when no vertex crosses the threshold (road-USA,
+//! orkut, uk2007, or pr's flat in-degrees) the LB kernel is never launched
+//! and the only cost over plain TWC is the threshold compare.
+
+use crate::graph::CsrGraph;
+use crate::gpu::GpuSpec;
+use crate::lb::schedule::{Distribution, LbLaunch, Schedule, VertexItem};
+use crate::lb::{degree, twc, Direction};
+
+/// Outcome of the inspector phase — exposed for tests and metrics.
+#[derive(Debug, Clone)]
+pub struct Inspection {
+    pub huge: Vec<u32>,
+    pub prefix: Vec<u64>,
+    pub rest: Vec<VertexItem>,
+}
+
+/// Split the active set at `threshold` (paper Fig. 3 lines 3–9 + line 31).
+pub fn inspect(
+    active: &[u32],
+    g: &CsrGraph,
+    dir: Direction,
+    spec: &GpuSpec,
+    threshold: u64,
+) -> Inspection {
+    let mut huge = Vec::new();
+    let mut prefix = Vec::new();
+    let mut rest = Vec::with_capacity(active.len());
+    let mut run = 0u64;
+    for &v in active {
+        let d = degree(g, v, dir);
+        if d >= threshold {
+            run += d;
+            huge.push(v);
+            prefix.push(run);
+        } else {
+            rest.push(VertexItem { vertex: v, degree: d, unit: twc::bin(d, spec) });
+        }
+    }
+    Inspection { huge, prefix, rest }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn schedule(
+    active: &[u32],
+    g: &CsrGraph,
+    dir: Direction,
+    spec: &GpuSpec,
+    distribution: Distribution,
+    threshold: u64,
+    scan_vertices: u64,
+) -> Schedule {
+    let ins = inspect(active, g, dir, spec, threshold);
+    let prefix_items = ins.huge.len() as u64;
+    // Benefit check (§4): only pay the LB launch when the huge bin is
+    // non-empty; otherwise this degenerates to plain TWC.
+    let lb = if ins.huge.is_empty() {
+        None
+    } else {
+        Some(LbLaunch { vertices: ins.huge, prefix: ins.prefix, distribution, search: true })
+    };
+    Schedule { twc: ins.rest, lb, scan_vertices, prefix_items }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::{CostModel, Simulator};
+    use crate::graph::EdgeList;
+    use crate::lb::schedule::Unit;
+
+    /// hub (degree 500k) + mid (degree 200) + 1000 leaves (degree 1).
+    fn skewed() -> CsrGraph {
+        let n = 60_000u32;
+        let mut el = EdgeList::new(n);
+        for i in 0..500_000u32 {
+            el.push(0, 2 + (i % (n - 2)), 1.0);
+        }
+        for i in 0..200u32 {
+            el.push(1, 2 + i, 1.0);
+        }
+        for v in 2..1_002u32 {
+            el.push(v, 0, 1.0);
+        }
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn inspector_splits_at_threshold() {
+        let g = skewed();
+        let spec = GpuSpec::default_sim(); // threshold 3072
+        let active: Vec<u32> = (0..1_002).collect();
+        let ins = inspect(&active, &g, Direction::Push, &spec, spec.huge_threshold());
+        assert_eq!(ins.huge, vec![0]);
+        assert_eq!(ins.prefix, vec![500_000]);
+        assert_eq!(ins.rest.len(), 1_001);
+        assert!(ins.rest.iter().all(|i| i.degree < 3072));
+    }
+
+    #[test]
+    fn threshold_zero_routes_everything_to_lb() {
+        // §4.2: threshold 0 puts all vertices in the huge bin.
+        let g = skewed();
+        let spec = GpuSpec::default_sim();
+        let s = schedule(&[0, 1, 2], &g, Direction::Push, &spec,
+                         Distribution::Cyclic, 0, 0);
+        assert!(s.twc.is_empty());
+        assert_eq!(s.lb.unwrap().vertices, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn threshold_above_max_degree_is_plain_twc() {
+        // §4.2: threshold > max degree -> no huge bin, no LB kernel.
+        let g = skewed();
+        let spec = GpuSpec::default_sim();
+        let s = schedule(&[0, 1, 2], &g, Direction::Push, &spec,
+                         Distribution::Cyclic, u64::MAX, 0);
+        assert!(s.lb.is_none());
+        assert_eq!(s.twc.len(), 3);
+        assert_eq!(s.prefix_items, 0);
+    }
+
+    #[test]
+    fn adaptive_no_overhead_when_balanced() {
+        // Road-USA regime: no huge vertices -> identical kernels to TWC.
+        let mut el = EdgeList::new(1000);
+        for v in 0..999u32 {
+            el.push(v, v + 1, 1.0);
+        }
+        let g = CsrGraph::from_edge_list(&el);
+        let spec = GpuSpec::default_sim();
+        let active: Vec<u32> = (0..1000).collect();
+        let alb = schedule(&active, &g, Direction::Push, &spec,
+                           Distribution::Cyclic, spec.huge_threshold(), 1000);
+        let plain = twc::schedule(&active, &g, Direction::Push, &spec, 1000);
+        assert!(alb.lb.is_none());
+        assert_eq!(alb.twc.len(), plain.twc.len());
+        let sim = Simulator::new(spec, CostModel::default());
+        assert_eq!(
+            sim.simulate(&alb, true).total_cycles,
+            sim.simulate(&plain, true).total_cycles
+        );
+    }
+
+    #[test]
+    fn alb_beats_twc_on_hub_rounds() {
+        // The headline effect (Table 2 rmat rows): same active set, the hub
+        // splits across blocks instead of serializing one CTA.
+        let g = skewed();
+        let spec = GpuSpec::default_sim();
+        let active: Vec<u32> = (0..1_002).collect();
+        let sim = Simulator::new(spec.clone(), CostModel::default());
+        let alb = schedule(&active, &g, Direction::Push, &spec,
+                           Distribution::Cyclic, spec.huge_threshold(), 0);
+        let plain = twc::schedule(&active, &g, Direction::Push, &spec, 0);
+        let t_alb = sim.simulate(&alb, true).total_cycles;
+        let t_twc = sim.simulate(&plain, true).total_cycles;
+        assert!(
+            t_alb * 2 < t_twc,
+            "ALB {t_alb} must be well under TWC {t_twc}"
+        );
+    }
+
+    #[test]
+    fn work_conservation_under_split() {
+        let g = skewed();
+        let spec = GpuSpec::default_sim();
+        let active: Vec<u32> = (0..1_002).collect();
+        let want: u64 = active.iter().map(|&v| g.out_degree(v)).sum();
+        let s = schedule(&active, &g, Direction::Push, &spec,
+                         Distribution::Cyclic, spec.huge_threshold(), 0);
+        assert_eq!(s.total_edges(), want);
+    }
+
+    #[test]
+    fn huge_prefix_is_inclusive_cumsum() {
+        let g = skewed();
+        let spec = GpuSpec::default_sim();
+        let ins = inspect(&[0, 1], &g, Direction::Push, &spec, 150);
+        assert_eq!(ins.huge, vec![0, 1]);
+        assert_eq!(ins.prefix, vec![500_000, 500_200]);
+    }
+
+    #[test]
+    fn rest_items_keep_twc_units() {
+        let g = skewed();
+        let spec = GpuSpec::default_sim();
+        let ins = inspect(&[1, 2], &g, Direction::Push, &spec, 3072);
+        assert_eq!(ins.rest[0].unit, Unit::Block); // degree 200 >= 128
+        assert_eq!(ins.rest[1].unit, Unit::Thread); // degree 1
+    }
+}

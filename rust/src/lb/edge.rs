@@ -1,0 +1,93 @@
+//! Edge-based LB over the whole active set — Gunrock's "LB" policy (§3.3).
+//!
+//! Every round, *all* active vertices' edges are evenly distributed across
+//! all threads, regardless of whether the round is imbalanced. Perfect
+//! block balance, but the prefix sum spans every active vertex and every
+//! edge pays the binary-search cost — the non-adaptive overhead the paper's
+//! Table 2 surfaces on balanced inputs (and which ALB avoids by splitting
+//! only the huge bin).
+
+use crate::graph::CsrGraph;
+use crate::lb::schedule::{Distribution, LbLaunch, Schedule};
+use crate::lb::{degree, Direction};
+
+pub fn schedule(
+    active: &[u32],
+    g: &CsrGraph,
+    dir: Direction,
+    distribution: Distribution,
+    scan_vertices: u64,
+) -> Schedule {
+    let mut prefix = Vec::with_capacity(active.len());
+    let mut run = 0u64;
+    for &v in active {
+        run += degree(g, v, dir);
+        prefix.push(run);
+    }
+    let lb = if run > 0 {
+        Some(LbLaunch { vertices: active.to_vec(), prefix, distribution, search: true })
+    } else {
+        None
+    };
+    Schedule { twc: Vec::new(), lb, scan_vertices, prefix_items: active.len() as u64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::{CostModel, GpuSpec, Simulator};
+    use crate::graph::EdgeList;
+
+    fn chain_with_hub() -> CsrGraph {
+        let mut el = EdgeList::new(50_002);
+        for i in 0..50_000u32 {
+            el.push(0, 2 + (i % 50_000), 1.0); // hub
+        }
+        el.push(1, 0, 1.0);
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn prefix_covers_all_active_edges() {
+        let g = chain_with_hub();
+        let s = schedule(&[0, 1], &g, Direction::Push, Distribution::Cyclic, 2);
+        let lb = s.lb.as_ref().unwrap();
+        assert_eq!(lb.prefix, vec![50_000, 50_001]);
+        assert_eq!(s.total_edges(), 50_001);
+        assert_eq!(s.prefix_items, 2);
+    }
+
+    #[test]
+    fn no_launch_when_no_edges() {
+        let mut el = EdgeList::new(4);
+        el.push(0, 1, 1.0);
+        let g = CsrGraph::from_edge_list(&el);
+        let s = schedule(&[2, 3], &g, Direction::Push, Distribution::Cyclic, 2);
+        assert!(s.lb.is_none());
+    }
+
+    #[test]
+    fn always_balanced_even_on_hub() {
+        let g = chain_with_hub();
+        let spec = GpuSpec::default_sim();
+        let s = schedule(&[0, 1], &g, Direction::Push, Distribution::Cyclic, 0);
+        let sim = Simulator::new(spec, CostModel::default());
+        let r = sim.simulate(&s, true);
+        let k = r.kernels.iter().find(|k| k.label == "lb").unwrap();
+        assert!(k.imbalance_factor() < 1.1);
+    }
+
+    #[test]
+    fn pays_prefix_overhead_proportional_to_active() {
+        // The non-adaptivity cost: big active set of tiny vertices still
+        // builds a big prefix array.
+        let mut el = EdgeList::new(10_000);
+        for v in 0..9_999u32 {
+            el.push(v, v + 1, 1.0);
+        }
+        let g = CsrGraph::from_edge_list(&el);
+        let active: Vec<u32> = (0..9_999).collect();
+        let s = schedule(&active, &g, Direction::Push, Distribution::Cyclic, 0);
+        assert_eq!(s.prefix_items, 9_999);
+    }
+}

@@ -1,0 +1,134 @@
+//! Enterprise-style load balancing (paper §3.3; Liu & Huang [18]).
+//!
+//! Enterprise adds a fourth bin to TWC: vertices with *extremely large*
+//! degree are processed by **all CTAs on the GPU**, one kernel launch per
+//! such vertex. Unlike ALB's LB kernel there is no prefix-sum/binary-search
+//! machinery — each launch handles a single source vertex, so every thread
+//! knows its source implicitly — but the policy is static (no benefit
+//! check; the paper notes Enterprise only applies it to bfs) and each hub
+//! pays its own kernel launch.
+//!
+//! Modeled as an [`LbLaunch`] with `search: false` and per-vertex launch
+//! accounting in the simulator.
+
+use crate::graph::CsrGraph;
+use crate::gpu::GpuSpec;
+use crate::lb::schedule::{Distribution, LbLaunch, Schedule, VertexItem};
+use crate::lb::{degree, twc, Direction};
+
+/// Degree bound for the "extremely large" bin. Enterprise used a fixed
+/// multiple of the block size; we follow ALB's convention (launched
+/// threads) so the two strategies split the same vertices and differ only
+/// in the *mechanism*.
+pub fn schedule(
+    active: &[u32],
+    g: &CsrGraph,
+    dir: Direction,
+    spec: &GpuSpec,
+    scan_vertices: u64,
+) -> Schedule {
+    let threshold = spec.huge_threshold();
+    let mut huge = Vec::new();
+    let mut prefix = Vec::new();
+    let mut rest = Vec::with_capacity(active.len());
+    let mut run = 0u64;
+    for &v in active {
+        let d = degree(g, v, dir);
+        if d >= threshold {
+            run += d;
+            huge.push(v);
+            prefix.push(run);
+        } else {
+            rest.push(VertexItem { vertex: v, degree: d, unit: twc::bin(d, spec) });
+        }
+    }
+    let lb = if huge.is_empty() {
+        None
+    } else {
+        Some(LbLaunch {
+            vertices: huge,
+            prefix,
+            distribution: Distribution::Blocked,
+            // One launch per hub, no edge-id search (single known source).
+            search: false,
+        })
+    };
+    Schedule { twc: rest, lb, scan_vertices, prefix_items: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::{CostModel, Simulator};
+    use crate::graph::EdgeList;
+
+    fn two_hubs() -> CsrGraph {
+        let n = 20_000u32;
+        let mut el = EdgeList::new(n);
+        for i in 0..8_000u32 {
+            el.push(0, 2 + (i % (n - 2)), 1.0);
+        }
+        for i in 0..5_000u32 {
+            el.push(1, 2 + (i % (n - 2)), 1.0);
+        }
+        for v in 2..100u32 {
+            el.push(v, 0, 1.0);
+        }
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn hubs_go_to_grid_bin_without_search() {
+        let g = two_hubs();
+        let spec = GpuSpec::default_sim();
+        let active: Vec<u32> = (0..100).collect();
+        let s = schedule(&active, &g, Direction::Push, &spec, 0);
+        let lb = s.lb.as_ref().unwrap();
+        assert_eq!(lb.vertices, vec![0, 1]);
+        assert!(!lb.search);
+        assert_eq!(s.prefix_items, 0, "no prefix-sum kernel in Enterprise");
+    }
+
+    #[test]
+    fn work_conserved() {
+        let g = two_hubs();
+        let spec = GpuSpec::default_sim();
+        let active: Vec<u32> = (0..100).collect();
+        let want: u64 = active.iter().map(|&v| g.out_degree(v)).sum();
+        assert_eq!(schedule(&active, &g, Direction::Push, &spec, 0).total_edges(), want);
+    }
+
+    #[test]
+    fn per_hub_launch_makes_it_costlier_than_alb() {
+        // Same split as ALB, but N hubs -> N launches + no shared prefix:
+        // ALB should win when several hubs are active in one round.
+        let g = two_hubs();
+        let spec = GpuSpec::default_sim();
+        let active: Vec<u32> = (0..100).collect();
+        let sim = Simulator::new(spec.clone(), CostModel::default());
+        let ent = sim.simulate(&schedule(&active, &g, Direction::Push, &spec, 0), true);
+        let alb = sim.simulate(
+            &crate::lb::alb::schedule(
+                &active, &g, Direction::Push, &spec,
+                Distribution::Cyclic, spec.huge_threshold(), 0,
+            ),
+            true,
+        );
+        assert!(ent.total_cycles > alb.total_cycles,
+                "enterprise {} vs alb {}", ent.total_cycles, alb.total_cycles);
+    }
+
+    #[test]
+    fn still_beats_plain_twc_on_hubs() {
+        let g = two_hubs();
+        let spec = GpuSpec::default_sim();
+        let active: Vec<u32> = (0..100).collect();
+        let sim = Simulator::new(spec.clone(), CostModel::default());
+        let ent = sim.simulate(&schedule(&active, &g, Direction::Push, &spec, 0), true);
+        let twc = sim.simulate(
+            &twc::schedule(&active, &g, Direction::Push, &spec, 0),
+            true,
+        );
+        assert!(ent.total_cycles < twc.total_cycles);
+    }
+}

@@ -1,0 +1,154 @@
+//! Load-balancing strategies (paper §3–§4).
+//!
+//! Each strategy maps the round's active vertices to a [`Schedule`] — the
+//! kernel launches the simulated GPU executes. Implemented strategies:
+//!
+//! * [`vertex`]   — vertex-based: every active vertex to one thread (§3.1);
+//! * [`twc`]      — Thread-Warp-CTA binning by degree (§3.2, Merrill et al.);
+//! * [`edge`]     — edge-based LB over *all* active edges every round —
+//!                  Gunrock's "LB" policy (§3.3);
+//! * [`alb`]      — **the paper's contribution**: TWC plus a runtime
+//!                  inspector that routes huge-degree vertices (degree >=
+//!                  launched threads) to an even, cyclic edge distribution
+//!                  across all thread blocks (§4).
+
+pub mod alb;
+pub mod edge;
+pub mod enterprise;
+pub mod schedule;
+pub mod twc;
+pub mod vertex;
+
+
+use crate::graph::CsrGraph;
+use crate::gpu::GpuSpec;
+pub use schedule::{Distribution, LbLaunch, Schedule, Unit, VertexItem};
+
+/// Which edge set an operator traverses (push reads out-edges, pull reads
+/// in-edges) — binning uses the matching degree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    Push,
+    Pull,
+}
+
+/// Degree of `v` along `dir` (Pull requires the CSC view to be built).
+#[inline]
+pub fn degree(g: &CsrGraph, v: u32, dir: Direction) -> u64 {
+    match dir {
+        Direction::Push => g.out_degree(v),
+        Direction::Pull => g.in_degree(v),
+    }
+}
+
+/// A load-balancing policy, selectable per run (CLI `--balancer`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Balancer {
+    /// One thread per active vertex.
+    Vertex,
+    /// Thread/Warp/CTA degree binning, no inter-block balancing.
+    Twc,
+    /// Gunrock-style static LB: all active edges evenly split every round.
+    EdgeLb { distribution: Distribution },
+    /// The paper's adaptive balancer. `threshold`: degree bound for the
+    /// huge bin (default = launched threads, §4.2).
+    Alb { distribution: Distribution, threshold: Option<u64> },
+    /// Enterprise-style (§3.3, [18]): TWC + an "extremely large" bin
+    /// processed by all CTAs, one launch per hub, no search.
+    Enterprise,
+}
+
+impl Balancer {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Balancer::Vertex => "vertex",
+            Balancer::Twc => "twc",
+            Balancer::EdgeLb { .. } => "edge-lb",
+            Balancer::Alb { .. } => "alb",
+            Balancer::Enterprise => "enterprise",
+        }
+    }
+
+    /// Build the round schedule. `scan_vertices` is the worklist-discovery
+    /// cost the engine charges (dense: |V|; sparse: |active|).
+    pub fn schedule(
+        &self,
+        active: &[u32],
+        g: &CsrGraph,
+        dir: Direction,
+        spec: &GpuSpec,
+        scan_vertices: u64,
+    ) -> Schedule {
+        match self {
+            Balancer::Vertex => vertex::schedule(active, g, dir, scan_vertices),
+            Balancer::Twc => twc::schedule(active, g, dir, spec, scan_vertices),
+            Balancer::EdgeLb { distribution } => {
+                edge::schedule(active, g, dir, *distribution, scan_vertices)
+            }
+            Balancer::Alb { distribution, threshold } => alb::schedule(
+                active,
+                g,
+                dir,
+                spec,
+                *distribution,
+                threshold.unwrap_or_else(|| spec.huge_threshold()),
+                scan_vertices,
+            ),
+            Balancer::Enterprise => {
+                enterprise::schedule(active, g, dir, spec, scan_vertices)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::EdgeList;
+
+    fn star(deg: u32) -> CsrGraph {
+        let mut el = EdgeList::new(deg + 1);
+        for i in 1..=deg {
+            el.push(0, i, 1.0);
+        }
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn degree_direction_dispatch() {
+        let mut g = star(5);
+        g.build_csc();
+        assert_eq!(degree(&g, 0, Direction::Push), 5);
+        assert_eq!(degree(&g, 0, Direction::Pull), 0);
+        assert_eq!(degree(&g, 3, Direction::Pull), 1);
+    }
+
+    #[test]
+    fn balancer_names() {
+        assert_eq!(Balancer::Twc.name(), "twc");
+        assert_eq!(
+            Balancer::Alb { distribution: Distribution::Cyclic, threshold: None }.name(),
+            "alb"
+        );
+    }
+
+    #[test]
+    fn every_balancer_covers_all_edges() {
+        // Work conservation: whatever the strategy, the schedule must account
+        // for exactly the active vertices' edges.
+        let g = star(2000);
+        let spec = GpuSpec::default_sim();
+        let active: Vec<u32> = (0..g.num_vertices() as u32).collect();
+        let total: u64 = active.iter().map(|&v| g.out_degree(v)).sum();
+        for b in [
+            Balancer::Vertex,
+            Balancer::Twc,
+            Balancer::EdgeLb { distribution: Distribution::Cyclic },
+            Balancer::Alb { distribution: Distribution::Cyclic, threshold: Some(100) },
+            Balancer::Enterprise,
+        ] {
+            let s = b.schedule(&active, &g, Direction::Push, &spec, 0);
+            assert_eq!(s.total_edges(), total, "{}", b.name());
+        }
+    }
+}

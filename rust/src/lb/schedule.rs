@@ -1,0 +1,128 @@
+//! Schedule types — the contract between load-balancing strategies
+//! ([`crate::lb`]) and the kernel simulator ([`crate::gpu::sim`]).
+//!
+//! A round's schedule names up to two kernel launches, mirroring the paper's
+//! generated code (Fig. 3): the TWC kernel (always launched — it doubles as
+//! the inspector) and the LB kernel (launched only when the huge worklist is
+//! non-empty).
+
+
+/// Which level of the thread hierarchy processes a vertex's edges (TWC bins).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Unit {
+    /// Small bin: one thread walks all edges serially.
+    Thread,
+    /// Medium bin: a warp's 32 lanes split the edges.
+    Warp,
+    /// Large bin: the whole thread block (CTA) splits the edges.
+    Block,
+}
+
+/// One vertex's work assignment in the TWC kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct VertexItem {
+    pub vertex: u32,
+    pub degree: u64,
+    pub unit: Unit,
+}
+
+/// How the LB kernel spreads edges across threads (paper Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Distribution {
+    /// Thread `t` takes edges `t, t+p, t+2p, ...` — consecutive lanes search
+    /// consecutive edge ids (cache-friendly; the paper's winner).
+    Cyclic,
+    /// Thread `t` takes a contiguous chunk `[t*w, (t+1)*w)`.
+    Blocked,
+}
+
+/// The LB kernel launch: every edge of the `huge` vertices, distributed
+/// evenly across all launched threads.
+#[derive(Debug, Clone)]
+pub struct LbLaunch {
+    /// Vertices whose edges are being distributed (paper's huge bin — or all
+    /// active vertices for Gunrock-style static LB).
+    pub vertices: Vec<u32>,
+    /// Inclusive prefix sum of their out-degrees; `prefix.last()` =
+    /// total_edges (paper Fig. 3 line 14).
+    pub prefix: Vec<u64>,
+    pub distribution: Distribution,
+    /// Whether threads recover sources by binary search (ALB / Gunrock-LB).
+    /// Enterprise-style grid launches (`false`) process one known vertex
+    /// per launch: no search, but one kernel launch *per vertex*.
+    pub search: bool,
+}
+
+impl LbLaunch {
+    pub fn total_edges(&self) -> u64 {
+        self.prefix.last().copied().unwrap_or(0)
+    }
+}
+
+/// One round's kernel launches plus worklist-management accounting.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// TWC kernel work items, in worklist order.
+    pub twc: Vec<VertexItem>,
+    /// LB kernel, if the strategy triggered it this round.
+    pub lb: Option<LbLaunch>,
+    /// Vertices scanned to discover the active set (dense worklists scan
+    /// |V|, sparse scan |active| — the §6.1 road-USA effect).
+    pub scan_vertices: u64,
+    /// Items run through the inspector's prefix sum this round.
+    pub prefix_items: u64,
+}
+
+impl Schedule {
+    /// Total edges this schedule will process (TWC + LB).
+    pub fn total_edges(&self) -> u64 {
+        let twc: u64 = self.twc.iter().map(|i| i.degree).sum();
+        twc + self.lb.as_ref().map_or(0, |l| l.total_edges())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lb_total_edges_from_prefix() {
+        let lb = LbLaunch {
+            vertices: vec![1, 2],
+            prefix: vec![10, 25],
+            distribution: Distribution::Cyclic,
+            search: true,
+        };
+        assert_eq!(lb.total_edges(), 25);
+    }
+
+    #[test]
+    fn empty_lb_is_zero() {
+        let lb = LbLaunch {
+            vertices: vec![],
+            prefix: vec![],
+            distribution: Distribution::Blocked,
+            search: true,
+        };
+        assert_eq!(lb.total_edges(), 0);
+    }
+
+    #[test]
+    fn schedule_total_combines_kernels() {
+        let s = Schedule {
+            twc: vec![
+                VertexItem { vertex: 0, degree: 3, unit: Unit::Thread },
+                VertexItem { vertex: 1, degree: 40, unit: Unit::Warp },
+            ],
+            lb: Some(LbLaunch {
+                vertices: vec![2],
+                prefix: vec![100],
+                distribution: Distribution::Cyclic,
+                search: true,
+            }),
+            scan_vertices: 10,
+            prefix_items: 1,
+        };
+        assert_eq!(s.total_edges(), 143);
+    }
+}

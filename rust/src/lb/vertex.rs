@@ -1,0 +1,72 @@
+//! Vertex-based load distribution (§3.1): every active vertex is handed to
+//! exactly one thread, which walks all its edges serially. The baseline that
+//! collapses on power-law degree distributions (and what Lux-style
+//! frameworks approximate at the intra-GPU level).
+
+use crate::graph::CsrGraph;
+use crate::lb::schedule::{Schedule, Unit, VertexItem};
+use crate::lb::{degree, Direction};
+
+pub fn schedule(
+    active: &[u32],
+    g: &CsrGraph,
+    dir: Direction,
+    scan_vertices: u64,
+) -> Schedule {
+    let twc = active
+        .iter()
+        .map(|&v| VertexItem { vertex: v, degree: degree(g, v, dir), unit: Unit::Thread })
+        .collect();
+    Schedule { twc, lb: None, scan_vertices, prefix_items: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::{CostModel, GpuSpec, Simulator};
+    use crate::graph::EdgeList;
+
+    fn hub_plus_leaves() -> CsrGraph {
+        // vertex 0: degree 10_000; vertices 1..=100: degree 1
+        let mut el = EdgeList::new(10_101);
+        for i in 0..10_000 {
+            el.push(0, 101 + i, 1.0);
+        }
+        for v in 1..=100 {
+            el.push(v, 0, 1.0);
+        }
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn all_items_are_thread_level() {
+        let g = hub_plus_leaves();
+        let s = schedule(&[0, 1, 2], &g, Direction::Push, 3);
+        assert!(s.twc.iter().all(|i| i.unit == Unit::Thread));
+        assert!(s.lb.is_none());
+        assert_eq!(s.twc[0].degree, 10_000);
+    }
+
+    #[test]
+    fn hub_serializes_on_one_thread() {
+        // The §3.1 failure mode: one thread walks 10k edges while the rest
+        // of the GPU idles — kernel time ~ hub degree.
+        let g = hub_plus_leaves();
+        let active: Vec<u32> = (0..101).collect();
+        let s = schedule(&active, &g, Direction::Push, 0);
+        let sim = Simulator::new(GpuSpec::default_sim(), CostModel::default());
+        let r = sim.simulate(&s, true);
+        let k = &r.kernels[0];
+        let per_edge = sim.cost.cycles_edge + sim.cost.cycles_atomic;
+        assert!(k.kernel_cycles >= 10_000 * per_edge);
+        assert!(k.imbalance_factor() > 5.0);
+    }
+
+    #[test]
+    fn empty_active_set() {
+        let g = hub_plus_leaves();
+        let s = schedule(&[], &g, Direction::Push, 0);
+        assert!(s.twc.is_empty());
+        assert_eq!(s.total_edges(), 0);
+    }
+}

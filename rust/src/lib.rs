@@ -1,0 +1,39 @@
+//! # alb-graph — Adaptive Load Balancer for Graph Analytics
+//!
+//! A from-scratch reproduction of *"An Adaptive Load Balancer For Graph
+//! Analytical Applications on GPUs"* (Jatala et al., 2019) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The paper's contribution — the **ALB** inspector/executor that detects
+//! thread-block load imbalance at runtime and redistributes the edges of
+//! *huge*-degree vertices cyclically across all thread blocks — lives in
+//! [`lb::alb`]. Everything it needs is built here too:
+//!
+//! * [`graph`] — CSR substrate, RMAT / road / power-law generators, props, I/O;
+//! * [`gpu`] — the SIMT execution-model simulator (blocks, warps, threads,
+//!   set-associative cache, cycle cost model) that substitutes for the
+//!   paper's K80/GTX1080/P100 GPUs;
+//! * [`lb`] — every load-balancing strategy the paper evaluates (vertex,
+//!   edge, TWC, Gunrock-style static LB) plus ALB itself;
+//! * [`apps`] — bfs, sssp, cc, pagerank, k-core with the round engine;
+//! * [`partition`] — CuSP-like OEC / IEC / CVC partitioning;
+//! * [`comm`] — Gluon-like BSP reduce/broadcast with a network cost model;
+//! * [`coordinator`] — the multi-GPU (and multi-host) driver;
+//! * [`runtime`] — the PJRT client that loads the AOT-compiled JAX/Pallas
+//!   kernels (`artifacts/*.hlo.txt`) onto the request path;
+//! * [`metrics`], [`config`] — reporting and run configuration.
+//!
+//! See `DESIGN.md` for the paper → module map and `EXPERIMENTS.md` for the
+//! reproduced tables and figures.
+
+pub mod apps;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod gpu;
+pub mod graph;
+pub mod lb;
+pub mod metrics;
+pub mod partition;
+pub mod repro;
+pub mod runtime;

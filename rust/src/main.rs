@@ -1,0 +1,416 @@
+//! `alb` — the launcher for the ALB graph-analytics framework.
+//!
+//! Subcommands:
+//!
+//! ```text
+//! alb props  [--input <name>] [--scale-delta D] [--seed S]
+//! alb gen    --input <name> --out <file.albg> [--scale-delta D] [--seed S]
+//! alb run    --app <bfs|sssp|cc|pr|kcore> --input <name|file.albg>
+//!            [--framework <dirgl-twc|dirgl-alb|gunrock-twc|gunrock-lb|lux>]
+//!            [--gpus K] [--policy <oec|iec|cvc>] [--engine <native|pjrt>]
+//!            [--gpu-spec <sim-default|k80-like|gtx1080-like|p100-like>]
+//!            [--distribution <cyclic|blocked>] [--threshold T]
+//!            [--balancer <vertex|twc|edge-lb|alb|enterprise>]
+//!            [--direction-opt true] [--delta W] [--kcore-k K]
+//!            [--scale-delta D] [--seed S] [--json <out.json>]
+//! alb repro  <table1|fig1|table2|fig5|fig6|fig7|fig8|fig9|fig10|fig11|all>
+//!            [--out results] [--scale-delta D] [--quick]
+//! ```
+//!
+//! Argument parsing is hand-rolled on std (the offline vendored crate set
+//! has no clap); see `Args`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use alb_graph::apps::engine::{self, ComputeMode, EngineConfig};
+use alb_graph::apps::App;
+use alb_graph::comm::NetworkModel;
+use alb_graph::config::Framework;
+use alb_graph::coordinator::{run_distributed, ClusterConfig};
+use alb_graph::gpu::GpuSpec;
+use alb_graph::graph::{inputs, io, props, CsrGraph};
+use alb_graph::lb::{Balancer, Distribution};
+use alb_graph::metrics::{Json, Table};
+use alb_graph::partition::Policy;
+use alb_graph::repro::{self, ReproConfig};
+use alb_graph::runtime::PjrtRuntime;
+
+/// Tiny std-only flag parser: `--key value` pairs plus positionals.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if key == "quick" {
+                    flags.insert("quick".into(), "true".into());
+                    i += 1;
+                    continue;
+                }
+                let val = argv
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn get_i32(&self, key: &str, default: i32) -> Result<i32> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn load_graph(input: &str, scale_delta: i32, seed: u64) -> Result<CsrGraph> {
+    if input.ends_with(".albg") {
+        return io::load(Path::new(input)).with_context(|| format!("load {input}"));
+    }
+    inputs::build(input, scale_delta, seed)
+        .ok_or_else(|| anyhow!("unknown input preset {input} (and not a .albg file)"))
+}
+
+fn cmd_props(args: &Args) -> Result<()> {
+    let delta = args.get_i32("scale-delta", 0)?;
+    let seed = args.get_u64("seed", 42)?;
+    let names: Vec<&str> = match args.get("input") {
+        Some(one) => vec![one],
+        None => inputs::ALL_INPUTS.to_vec(),
+    };
+    let mut t = Table::new(&[
+        "input", "paper", "|V|", "|E|", "E/V", "maxDout", "maxDin", "diam",
+        "size(MB)",
+    ]);
+    for name in names {
+        let mut g = load_graph(name, delta, seed)?;
+        let p = props::compute(&mut g);
+        t.row(vec![
+            name.to_string(),
+            inputs::paper_name(name).to_string(),
+            p.num_vertices.to_string(),
+            p.num_edges.to_string(),
+            format!("{:.0}", p.avg_degree),
+            p.max_dout.to_string(),
+            p.max_din.to_string(),
+            p.approx_diameter.to_string(),
+            format!("{:.1}", p.size_bytes as f64 / 1e6),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let input = args.get("input").ok_or_else(|| anyhow!("--input required"))?;
+    let out = args.get("out").ok_or_else(|| anyhow!("--out required"))?;
+    let delta = args.get_i32("scale-delta", 0)?;
+    let seed = args.get_u64("seed", 42)?;
+    let g = load_graph(input, delta, seed)?;
+    io::save(&g, Path::new(out))?;
+    println!(
+        "wrote {out}: {} vertices, {} edges",
+        g.num_vertices(),
+        g.num_edges()
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let app = App::parse(args.get("app").ok_or_else(|| anyhow!("--app required"))?)
+        .ok_or_else(|| anyhow!("unknown app"))?;
+    let input = args.get("input").ok_or_else(|| anyhow!("--input required"))?;
+    let delta = args.get_i32("scale-delta", 0)?;
+    let seed = args.get_u64("seed", 42)?;
+    let spec = GpuSpec::by_name(&args.get_or("gpu-spec", "sim-default"))
+        .ok_or_else(|| anyhow!("unknown --gpu-spec"))?;
+    let fw = Framework::parse(&args.get_or("framework", "dirgl-alb"))
+        .ok_or_else(|| anyhow!("unknown --framework"))?;
+    let gpus = args.get_u64("gpus", 1)? as u32;
+    let policy = Policy::parse(&args.get_or("policy", "cvc"))
+        .ok_or_else(|| anyhow!("unknown --policy"))?;
+    let gpus_per_host = args.get_u64("gpus-per-host", u32::MAX as u64)? as u32;
+
+    let mut cfg: EngineConfig = fw.engine_config(spec.clone());
+    if let Some(d) = args.get("distribution") {
+        let dist = match d {
+            "cyclic" => Distribution::Cyclic,
+            "blocked" => Distribution::Blocked,
+            _ => bail!("--distribution cyclic|blocked"),
+        };
+        cfg.balancer = match cfg.balancer {
+            Balancer::Alb { threshold, .. } => {
+                Balancer::Alb { distribution: dist, threshold }
+            }
+            Balancer::EdgeLb { .. } => Balancer::EdgeLb { distribution: dist },
+            other => other,
+        };
+    }
+    if let Some(t) = args.get("threshold") {
+        let th: u64 = t.parse()?;
+        if let Balancer::Alb { distribution, .. } = cfg.balancer {
+            cfg.balancer = Balancer::Alb { distribution, threshold: Some(th) };
+        }
+    }
+    if let Some(k) = args.get("kcore-k") {
+        cfg.kcore_k = k.parse()?;
+    }
+    if let Some(b) = args.get("balancer") {
+        cfg.balancer = match b {
+            "vertex" => Balancer::Vertex,
+            "twc" => Balancer::Twc,
+            "edge-lb" => Balancer::EdgeLb { distribution: Distribution::Cyclic },
+            "alb" => Balancer::Alb { distribution: Distribution::Cyclic, threshold: None },
+            "enterprise" => Balancer::Enterprise,
+            other => bail!("unknown --balancer {other}"),
+        };
+    }
+    if args.get("direction-opt").map(|v| v == "true" || v == "1") == Some(true) {
+        cfg.bfs_direction_opt = true;
+    }
+    if let Some(d) = args.get("delta") {
+        cfg.sssp_delta = Some(d.parse()?);
+    }
+
+    let pjrt_runtime;
+    let pjrt = match args.get_or("engine", "native").as_str() {
+        "native" => None,
+        "pjrt" => {
+            cfg.compute = ComputeMode::Pjrt;
+            pjrt_runtime = PjrtRuntime::load_default()?;
+            eprintln!(
+                "pjrt: {} kernels on {}",
+                pjrt_runtime.num_kernels(),
+                pjrt_runtime.platform()
+            );
+            Some(&pjrt_runtime)
+        }
+        other => bail!("--engine native|pjrt (got {other})"),
+    };
+
+    let mut g = load_graph(input, delta, seed)?;
+    let src = inputs::source_vertex(input, &g);
+    let started = std::time::Instant::now();
+
+    let mut report = Json::obj()
+        .set("app", app.name())
+        .set("input", input)
+        .set("framework", fw.name())
+        .set("gpu_spec", spec.name.as_str())
+        .set("gpus", gpus)
+        .set("seed", seed);
+
+    if gpus <= 1 {
+        let r = engine::run(app, &mut g, src, &cfg, pjrt)?;
+        println!(
+            "{} on {} [{}]: {:.1} simulated ms, {} rounds, {} edges, LB in {} rounds ({} host ms)",
+            app.name(),
+            input,
+            fw.name(),
+            r.ms(&spec),
+            r.rounds.len(),
+            r.total_edges(),
+            r.rounds_with_lb(),
+            started.elapsed().as_millis(),
+        );
+        report = report
+            .set("simulated_ms", r.ms(&spec))
+            .set("rounds", r.rounds.len())
+            .set("edges", r.total_edges())
+            .set("lb_rounds", r.rounds_with_lb());
+    } else {
+        let cluster = ClusterConfig {
+            num_gpus: gpus,
+            policy,
+            net: if gpus_per_host == u32::MAX {
+                NetworkModel::single_host()
+            } else {
+                NetworkModel::cluster(gpus_per_host)
+            },
+        };
+        let r = run_distributed(app, &g, src, &cfg, &cluster, pjrt)?;
+        println!(
+            "{} on {} [{}] x{} GPUs ({}): {:.1} simulated ms (comp {:.1} + comm {:.1}), {} rounds ({} host ms)",
+            app.name(),
+            input,
+            fw.name(),
+            gpus,
+            policy.name(),
+            r.ms(&spec),
+            r.comp_ms(&spec),
+            r.comm_ms(&spec),
+            r.rounds.len(),
+            started.elapsed().as_millis(),
+        );
+        report = report
+            .set("simulated_ms", r.ms(&spec))
+            .set("comp_ms", r.comp_ms(&spec))
+            .set("comm_ms", r.comm_ms(&spec))
+            .set("rounds", r.rounds.len())
+            .set("policy", policy.name());
+    }
+
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.to_string_pretty())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow!("repro needs an experiment name or 'all'"))?;
+    let out_dir = PathBuf::from(args.get_or("out", "results"));
+    std::fs::create_dir_all(&out_dir)?;
+    let mut rc = if args.get("quick").is_some() {
+        ReproConfig::quick()
+    } else {
+        ReproConfig::default()
+    };
+    rc.scale_delta = args.get_i32("scale-delta", rc.scale_delta)?;
+    rc.seed = args.get_u64("seed", rc.seed)?;
+
+    let apps_all = alb_graph::apps::ALL_APPS;
+    let push_apps = [App::Bfs, App::Sssp, App::Cc];
+    let emit = |name: &str, body: String| -> Result<()> {
+        let path = out_dir.join(format!("{name}.txt"));
+        std::fs::write(&path, &body)?;
+        println!("### {name}\n{body}");
+        Ok(())
+    };
+
+    let all = what == "all";
+    let mut matched = all;
+    if all || what == "table1" {
+        emit("table1", repro::table1(&rc)?.render())?;
+        matched = true;
+    }
+    if all || what == "fig1" {
+        emit("fig1", repro::fig1(&rc)?)?;
+        matched = true;
+    }
+    if all || what == "table2" {
+        emit("table2", repro::table2(&rc)?.render())?;
+        matched = true;
+    }
+    if all || what == "fig5" {
+        emit("fig5", repro::fig5(&rc)?)?;
+        matched = true;
+    }
+    if all || what == "fig6" {
+        emit("fig6", repro::fig6(&rc, &apps_all)?.render())?;
+        matched = true;
+    }
+    if all || what == "fig7" {
+        emit("fig7", repro::fig7(&rc, &apps_all)?.render())?;
+        matched = true;
+    }
+    if all || what == "fig8" {
+        emit("fig8", repro::fig8(&rc, &push_apps)?.render())?;
+        matched = true;
+    }
+    if all || what == "fig9" {
+        emit("fig9", repro::fig9(&rc, &push_apps)?.render())?;
+        matched = true;
+    }
+    if all || what == "fig10" {
+        emit("fig10", repro::fig10(&rc, &apps_all)?.render())?;
+        matched = true;
+    }
+    if all || what == "fig11" {
+        emit("fig11", repro::fig11(&rc, &apps_all)?.render())?;
+        matched = true;
+    }
+    if all || what == "ablation-gpu" {
+        emit(
+            "ablation_gpu",
+            repro::ablation_gpu(&rc, &[App::Bfs, App::Sssp])?.render(),
+        )?;
+        matched = true;
+    }
+    if all || what == "ablation-threshold" {
+        emit(
+            "ablation_threshold",
+            repro::ablation_threshold(&rc, &[App::Bfs, App::Sssp])?.render(),
+        )?;
+        matched = true;
+    }
+    if !matched {
+        bail!("unknown experiment {what}");
+    }
+    Ok(())
+}
+
+fn usage() {
+    eprintln!(
+        "alb — Adaptive Load Balancer for graph analytics (paper reproduction)\n\
+         usage: alb <props|gen|run|repro> [flags]\n\
+         see `rust/src/main.rs` header or README.md for full flag lists"
+    );
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        usage();
+        return ExitCode::FAILURE;
+    };
+    let args = match Args::parse(&argv[1..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd.as_str() {
+        "props" => cmd_props(&args),
+        "gen" => cmd_gen(&args),
+        "run" => cmd_run(&args),
+        "repro" => cmd_repro(&args),
+        _ => {
+            usage();
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Minimal benchmarking harness (the vendored crate set has no criterion).
+//!
+//! Each `benches/*.rs` binary drives one paper table/figure through
+//! [`time_runs`]: warmup + N timed repetitions, reporting min/mean/max host
+//! time alongside the experiment's own simulated-ms output.
+
+use std::time::Instant;
+
+/// Timing summary for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u32,
+    pub min_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<40} {:>3} iters  min {:>9.2} ms  mean {:>9.2} ms  max {:>9.2} ms",
+            self.name, self.iters, self.min_ms, self.mean_ms, self.max_ms
+        )
+    }
+}
+
+/// Run `f` once for warmup then `iters` timed times.
+pub fn time_runs<T>(name: &str, iters: u32, mut f: impl FnMut() -> T) -> BenchStats {
+    let _warmup = f();
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let _ = f();
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    BenchStats { name: name.to_string(), iters, min_ms: min, mean_ms: mean, max_ms: max }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_sane() {
+        let s = time_runs("noop", 3, || 1 + 1);
+        assert_eq!(s.iters, 3);
+        assert!(s.min_ms <= s.mean_ms && s.mean_ms <= s.max_ms);
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let s = time_runs("xyz", 2, || ());
+        assert!(s.report().contains("xyz"));
+    }
+}

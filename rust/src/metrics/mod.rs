@@ -1,0 +1,52 @@
+//! Reporting: a dependency-free JSON writer and fixed-width table printer
+//! used by the CLI, the repro harness, and EXPERIMENTS.md generation.
+
+pub mod bench;
+pub mod json;
+pub mod table;
+
+pub use json::Json;
+pub use table::Table;
+
+/// Load-imbalance summary over per-block edge counts (the quantity the
+/// paper's Figures 1 and 5 plot).
+#[derive(Debug, Clone)]
+pub struct Imbalance {
+    pub max: u64,
+    pub mean: f64,
+    pub factor: f64,
+}
+
+pub fn imbalance(block_edges: &[u64]) -> Imbalance {
+    let max = block_edges.iter().copied().max().unwrap_or(0);
+    let sum: u64 = block_edges.iter().sum();
+    let mean = sum as f64 / block_edges.len().max(1) as f64;
+    let factor = if mean > 0.0 { max as f64 / mean } else { 1.0 };
+    Imbalance { max, mean, factor }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imbalance_uniform() {
+        let i = imbalance(&[10, 10, 10]);
+        assert_eq!(i.max, 10);
+        assert!((i.factor - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_skewed() {
+        let i = imbalance(&[100, 0, 0, 0]);
+        assert_eq!(i.max, 100);
+        assert!((i.factor - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_empty() {
+        let i = imbalance(&[]);
+        assert_eq!(i.max, 0);
+        assert!((i.factor - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,356 @@
+//! CuSP-like streaming graph partitioner (paper §5; Hoang et al. [13]).
+//!
+//! Splits a global graph into per-GPU partitions under three policies:
+//!
+//! * **OEC** (outgoing edge cut): vertices are assigned to owners by
+//!   contiguous ranges balanced on *out*-degree; a partition holds every
+//!   out-edge of its masters. Remote destinations appear as read/write
+//!   *mirrors* (reduced back to masters after each round).
+//! * **IEC** (incoming edge cut): ranges balanced on *in*-degree; a
+//!   partition holds every in-edge of its masters; remote sources are
+//!   read-only mirrors (refreshed by broadcast).
+//! * **CVC** (cartesian vertex cut — the paper's default for multi-GPU
+//!   runs): owners form a `pr x pc` grid; edge `(u, v)` goes to the
+//!   partition at (row of u's owner, column of v's owner), bounding both
+//!   mirror fan-in and fan-out.
+//!
+//! Every partition gets a local CSR (local ids: masters first, then
+//! mirrors), plus the local<->global maps the Gluon-style communication
+//! layer ([`crate::comm`]) uses.
+
+use std::collections::HashMap;
+
+use crate::graph::{CsrGraph, EdgeList};
+
+/// Partitioning policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Oec,
+    Iec,
+    Cvc,
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Oec => "oec",
+            Policy::Iec => "iec",
+            Policy::Cvc => "cvc",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "oec" => Some(Policy::Oec),
+            "iec" => Some(Policy::Iec),
+            "cvc" => Some(Policy::Cvc),
+            _ => None,
+        }
+    }
+}
+
+/// One GPU's partition.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub id: u32,
+    /// Local CSR over local ids.
+    pub graph: CsrGraph,
+    /// local id -> global id (masters first, then mirrors).
+    pub l2g: Vec<u32>,
+    /// Local ids `[0, num_masters)` are masters owned by this partition.
+    pub num_masters: usize,
+}
+
+impl Partition {
+    pub fn num_mirrors(&self) -> usize {
+        self.l2g.len() - self.num_masters
+    }
+
+    /// Global ids of this partition's mirrors.
+    pub fn mirror_globals(&self) -> &[u32] {
+        &self.l2g[self.num_masters..]
+    }
+}
+
+/// The partitioned graph plus ownership metadata.
+#[derive(Debug, Clone)]
+pub struct DistGraph {
+    pub policy: Policy,
+    pub num_global: u32,
+    /// Owner partition of each global vertex.
+    pub owner: Vec<u32>,
+    pub parts: Vec<Partition>,
+    /// Per-partition global->local maps.
+    pub g2l: Vec<HashMap<u32, u32>>,
+}
+
+impl DistGraph {
+    pub fn num_parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Total mirrors across partitions (replication overhead metric).
+    pub fn total_mirrors(&self) -> usize {
+        self.parts.iter().map(|p| p.num_mirrors()).sum()
+    }
+}
+
+/// Assign contiguous owner ranges balanced by `weight(v)` (degree).
+fn balanced_ranges(weights: &[u64], k: u32) -> Vec<u32> {
+    let total: u64 = weights.iter().sum();
+    let per = total.div_ceil(k as u64).max(1);
+    let mut owner = vec![0u32; weights.len()];
+    let mut acc = 0u64;
+    let mut cur = 0u32;
+    for (v, &w) in weights.iter().enumerate() {
+        owner[v] = cur;
+        acc += w;
+        if acc >= per * (cur as u64 + 1) && cur + 1 < k {
+            cur += 1;
+        }
+    }
+    owner
+}
+
+/// Grid shape for CVC: the most square `pr x pc = k` factorization.
+pub fn cvc_grid(k: u32) -> (u32, u32) {
+    let mut best = (1, k);
+    let mut r = 1;
+    while r * r <= k {
+        if k % r == 0 {
+            best = (r, k / r);
+        }
+        r += 1;
+    }
+    best
+}
+
+/// Partition `g` into `k` parts.
+pub fn partition(g: &CsrGraph, k: u32, policy: Policy) -> DistGraph {
+    assert!(k >= 1);
+    let n = g.num_vertices();
+    // Owner assignment.
+    let owner = match policy {
+        Policy::Oec | Policy::Cvc => {
+            let w: Vec<u64> = (0..n as u32).map(|v| g.out_degree(v) + 1).collect();
+            balanced_ranges(&w, k)
+        }
+        Policy::Iec => {
+            let mut counts = vec![1u64; n];
+            for &d in &g.col_idx {
+                counts[d as usize] += 1;
+            }
+            balanced_ranges(&counts, k)
+        }
+    };
+    let (rows, cols) = cvc_grid(k);
+
+    // Edge -> partition assignment.
+    let mut edge_lists: Vec<Vec<(u32, u32, f32)>> = vec![Vec::new(); k as usize];
+    for u in 0..n as u32 {
+        let (dsts, ws) = g.out_edges(u);
+        for (&v, &w) in dsts.iter().zip(ws) {
+            let p = match policy {
+                Policy::Oec => owner[u as usize],
+                Policy::Iec => owner[v as usize],
+                Policy::Cvc => {
+                    let r = owner[u as usize] % rows;
+                    let c = owner[v as usize] % cols;
+                    r * cols + c
+                }
+            };
+            edge_lists[p as usize].push((u, v, w));
+        }
+    }
+
+    // Build per-partition local graphs. A dense scratch map (global id ->
+    // local id, reset per partition) keeps edge remapping O(1) per edge —
+    // the public g2l HashMap is only built once per local vertex (§Perf:
+    // replaced per-edge HashMap lookups and a sort-based mirror dedup).
+    let mut parts = Vec::with_capacity(k as usize);
+    let mut g2l_all = Vec::with_capacity(k as usize);
+    let mut dense = vec![u32::MAX; n];
+    let mut is_mirror = vec![false; n];
+    for pid in 0..k {
+        let edges = &edge_lists[pid as usize];
+        // Mark mirrors: non-owned endpoints of local edges.
+        for &(u, v, _) in edges {
+            if owner[u as usize] != pid {
+                is_mirror[u as usize] = true;
+            }
+            if owner[v as usize] != pid {
+                is_mirror[v as usize] = true;
+            }
+        }
+        // Local vertex set: own masters first (so every owned vertex exists
+        // locally even if isolated), then mirrors in sorted global order
+        // (the 0..n scan yields them sorted for free).
+        let mut locals: Vec<u32> =
+            (0..n as u32).filter(|&v| owner[v as usize] == pid).collect();
+        let num_masters = locals.len();
+        for v in 0..n as u32 {
+            if is_mirror[v as usize] {
+                locals.push(v);
+                is_mirror[v as usize] = false; // reset for the next pass
+            }
+        }
+        let l2g = locals;
+        let mut g2l = HashMap::with_capacity(l2g.len());
+        for (l, &gid) in l2g.iter().enumerate() {
+            dense[gid as usize] = l as u32;
+            g2l.insert(gid, l as u32);
+        }
+        let mut el = EdgeList::new(l2g.len() as u32);
+        el.edges.reserve(edges.len());
+        for &(u, v, w) in edges {
+            el.push(dense[u as usize], dense[v as usize], w);
+        }
+        for &gid in &l2g {
+            dense[gid as usize] = u32::MAX; // reset scratch
+        }
+        parts.push(Partition {
+            id: pid,
+            graph: CsrGraph::from_edge_list(&el),
+            l2g,
+            num_masters,
+        });
+        g2l_all.push(g2l);
+    }
+    DistGraph { policy, num_global: n as u32, owner, parts, g2l: g2l_all }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::rmat::{self, RmatConfig};
+
+    fn test_graph() -> CsrGraph {
+        CsrGraph::from_edge_list(&rmat::generate(&RmatConfig::paper(9, 11)))
+    }
+
+    fn check_invariants(g: &CsrGraph, dg: &DistGraph) {
+        // 1. every global vertex has exactly one owner, and appears as a
+        //    master in exactly that partition.
+        let mut master_count = vec![0u32; g.num_vertices()];
+        for p in &dg.parts {
+            for (l, &gid) in p.l2g.iter().enumerate() {
+                if l < p.num_masters {
+                    assert_eq!(dg.owner[gid as usize], p.id);
+                    master_count[gid as usize] += 1;
+                }
+            }
+        }
+        assert!(master_count.iter().all(|&c| c == 1));
+        // 2. edges are preserved exactly (as a multiset, global ids).
+        let mut want: Vec<(u32, u32, u32)> = Vec::new();
+        for u in 0..g.num_vertices() as u32 {
+            let (d, w) = g.out_edges(u);
+            for (&v, &x) in d.iter().zip(w) {
+                want.push((u, v, x as u32));
+            }
+        }
+        want.sort_unstable();
+        let mut got: Vec<(u32, u32, u32)> = Vec::new();
+        for p in &dg.parts {
+            for lu in 0..p.graph.num_vertices() as u32 {
+                let (d, w) = p.graph.out_edges(lu);
+                for (&lv, &x) in d.iter().zip(w) {
+                    got.push((p.l2g[lu as usize], p.l2g[lv as usize], x as u32));
+                }
+            }
+        }
+        got.sort_unstable();
+        assert_eq!(want, got);
+        // 3. l2g/g2l inverse.
+        for (pi, p) in dg.parts.iter().enumerate() {
+            for (l, &gid) in p.l2g.iter().enumerate() {
+                assert_eq!(dg.g2l[pi][&gid], l as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn oec_invariants() {
+        let g = test_graph();
+        check_invariants(&g, &partition(&g, 4, Policy::Oec));
+    }
+
+    #[test]
+    fn iec_invariants() {
+        let g = test_graph();
+        check_invariants(&g, &partition(&g, 4, Policy::Iec));
+    }
+
+    #[test]
+    fn cvc_invariants() {
+        let g = test_graph();
+        check_invariants(&g, &partition(&g, 4, Policy::Cvc));
+        check_invariants(&g, &partition(&g, 6, Policy::Cvc));
+    }
+
+    #[test]
+    fn single_partition_is_whole_graph() {
+        let g = test_graph();
+        let dg = partition(&g, 1, Policy::Oec);
+        assert_eq!(dg.parts.len(), 1);
+        assert_eq!(dg.parts[0].num_masters, g.num_vertices());
+        assert_eq!(dg.parts[0].graph.num_edges(), g.num_edges());
+        assert_eq!(dg.total_mirrors(), 0);
+    }
+
+    #[test]
+    fn oec_masters_hold_their_out_edges() {
+        let g = test_graph();
+        let dg = partition(&g, 4, Policy::Oec);
+        for p in &dg.parts {
+            for lu in 0..p.graph.num_vertices() as u32 {
+                if p.graph.out_degree(lu) > 0 {
+                    // Only masters have out-edges under OEC.
+                    assert!((lu as usize) < p.num_masters);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn iec_masters_hold_their_in_edges() {
+        let g = test_graph();
+        let dg = partition(&g, 4, Policy::Iec);
+        for p in &dg.parts {
+            for lu in 0..p.graph.num_vertices() as u32 {
+                let (dsts, _) = p.graph.out_edges(lu);
+                for &lv in dsts {
+                    assert!((lv as usize) < p.num_masters);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oec_balances_out_edges() {
+        let g = test_graph();
+        let dg = partition(&g, 4, Policy::Oec);
+        let loads: Vec<usize> =
+            dg.parts.iter().map(|p| p.graph.num_edges()).collect();
+        let max = *loads.iter().max().unwrap() as f64;
+        let mean = g.num_edges() as f64 / 4.0;
+        assert!(max / mean < 2.0, "edge balance {loads:?}");
+    }
+
+    #[test]
+    fn cvc_grid_shapes() {
+        assert_eq!(cvc_grid(1), (1, 1));
+        assert_eq!(cvc_grid(4), (2, 2));
+        assert_eq!(cvc_grid(6), (2, 3));
+        assert_eq!(cvc_grid(16), (4, 4));
+        assert_eq!(cvc_grid(7), (1, 7));
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(Policy::parse("oec"), Some(Policy::Oec));
+        assert_eq!(Policy::parse("iec"), Some(Policy::Iec));
+        assert_eq!(Policy::parse("cvc"), Some(Policy::Cvc));
+        assert_eq!(Policy::parse("x"), None);
+    }
+}

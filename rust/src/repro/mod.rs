@@ -1,0 +1,539 @@
+//! The reproduction harness: regenerates every table and figure from the
+//! paper's evaluation (§6) on the simulated testbed.
+//!
+//! Each `table*` / `fig*` function returns the rendered text (and data rows)
+//! that `alb repro <exp>` prints and writes under `results/`. DESIGN.md §4
+//! maps each experiment to the paper's and EXPERIMENTS.md records the
+//! measured-vs-paper comparison.
+
+use anyhow::Result;
+
+use crate::apps::engine::{self, EngineConfig};
+use crate::apps::App;
+use crate::comm::NetworkModel;
+use crate::config::{Framework, TABLE2_FRAMEWORKS};
+use crate::coordinator::{run_distributed, ClusterConfig};
+use crate::gpu::GpuSpec;
+use crate::graph::{inputs, props, CsrGraph};
+use crate::lb::{Balancer, Distribution};
+use crate::metrics::table::ms;
+use crate::metrics::Table;
+use crate::partition::Policy;
+
+/// Shared experiment parameters.
+#[derive(Debug, Clone)]
+pub struct ReproConfig {
+    /// Shifts every input preset's size exponent.
+    pub scale_delta: i32,
+    pub seed: u64,
+    pub spec: GpuSpec,
+}
+
+impl Default for ReproConfig {
+    fn default() -> Self {
+        ReproConfig { scale_delta: 0, seed: 42, spec: GpuSpec::default_sim() }
+    }
+}
+
+impl ReproConfig {
+    /// Smaller inputs for quick checks / benches.
+    pub fn quick() -> Self {
+        ReproConfig { scale_delta: -3, ..ReproConfig::default() }
+    }
+
+    fn graph(&self, name: &str) -> CsrGraph {
+        inputs::build(name, self.scale_delta, self.seed)
+            .unwrap_or_else(|| panic!("unknown input {name}"))
+    }
+
+    fn engine_cfg(&self, fw: Framework) -> EngineConfig {
+        fw.engine_config(self.spec.clone())
+    }
+}
+
+fn source_for(name: &str, g: &CsrGraph) -> u32 {
+    inputs::source_vertex(name, g)
+}
+
+/// Run one (input, app, framework) single-GPU cell; returns simulated ms.
+pub fn run_cell(
+    rc: &ReproConfig,
+    input: &str,
+    app: App,
+    fw: Framework,
+) -> Result<f64> {
+    let mut g = rc.graph(input);
+    let src = source_for(input, &g);
+    let cfg = rc.engine_cfg(fw);
+    let r = engine::run(app, &mut g, src, &cfg, None)?;
+    Ok(r.ms(&rc.spec))
+}
+
+// ----------------------------------------------------------------- Table 1
+
+/// Table 1: input properties.
+pub fn table1(rc: &ReproConfig) -> Result<Table> {
+    let mut t = Table::new(&[
+        "input", "paper", "|V|", "|E|", "E/V", "maxDout", "maxDin", "diam",
+        "size(MB)",
+    ]);
+    for name in inputs::ALL_INPUTS {
+        let mut g = rc.graph(name);
+        let p = props::compute(&mut g);
+        t.row(vec![
+            name.to_string(),
+            inputs::paper_name(name).to_string(),
+            p.num_vertices.to_string(),
+            p.num_edges.to_string(),
+            format!("{:.0}", p.avg_degree),
+            p.max_dout.to_string(),
+            p.max_din.to_string(),
+            p.approx_diameter.to_string(),
+            format!("{:.1}", p.size_bytes as f64 / 1e6),
+        ]);
+    }
+    Ok(t)
+}
+
+// ----------------------------------------------------------------- Figure 1
+
+/// Per-block edge counts for chosen rounds of a run.
+pub struct BlockProfile {
+    pub label: String,
+    /// (round, kernel label, per-block edges).
+    pub rounds: Vec<(u32, String, Vec<u64>)>,
+}
+
+/// Record per-block distributions for `keep_rounds` rounds of (input, app)
+/// under `balancer`.
+pub fn block_profile(
+    rc: &ReproConfig,
+    input: &str,
+    app: App,
+    fw: Framework,
+    keep_rounds: &[u32],
+) -> Result<BlockProfile> {
+    let mut g = rc.graph(input);
+    let src = source_for(input, &g);
+    let mut cfg = rc.engine_cfg(fw);
+    cfg.record_blocks = true;
+    let r = engine::run(app, &mut g, src, &cfg, None)?;
+    let mut rounds = Vec::new();
+    for rec in &r.rounds {
+        if keep_rounds.contains(&rec.round) {
+            if let Some(kernels) = &rec.kernels {
+                for k in kernels {
+                    rounds.push((rec.round, k.label.clone(), k.block_edges.clone()));
+                }
+            }
+        }
+    }
+    Ok(BlockProfile {
+        label: format!("{}/{}/{}", input, app.name(), fw.name()),
+        rounds,
+    })
+}
+
+fn render_profile(p: &BlockProfile) -> String {
+    let mut out = format!("== {} ==\n", p.label);
+    for (round, kernel, edges) in &p.rounds {
+        let total: u64 = edges.iter().sum();
+        let max = edges.iter().max().copied().unwrap_or(0);
+        let imb = crate::metrics::imbalance(edges);
+        out.push_str(&format!(
+            "round {round} kernel {kernel}: total {total} max-block {max} imbalance {:.2}\n  blocks: {:?}\n",
+            imb.factor, edges
+        ));
+    }
+    out
+}
+
+/// Figure 1: thread-block load imbalance under TWC across rounds, apps, and
+/// inputs. Returns rendered text.
+pub fn fig1(rc: &ReproConfig) -> Result<String> {
+    let mut out = String::new();
+    // (a) sssp on rmat20 (paper rmat25), rounds 0-2, D-IrGL (TWC).
+    out.push_str(&render_profile(&block_profile(
+        rc, "rmat20", App::Sssp, Framework::DIrglTwc, &[0, 1, 2],
+    )?));
+    // (b) bfs: road-s vs rmat18, round with the largest active set.
+    out.push_str(&render_profile(&block_profile(
+        rc, "road-s", App::Bfs, Framework::DIrglTwc, &[1, 2],
+    )?));
+    out.push_str(&render_profile(&block_profile(
+        rc, "rmat18", App::Bfs, Framework::DIrglTwc, &[0, 1],
+    )?));
+    // (c) bfs (push) vs pr (pull) on rmat18.
+    out.push_str(&render_profile(&block_profile(
+        rc, "rmat18", App::Pr, Framework::DIrglTwc, &[0, 1],
+    )?));
+    Ok(out)
+}
+
+// ----------------------------------------------------------------- Table 2
+
+/// Table 2: single-GPU execution time (simulated ms) for the four
+/// frameworks across single-host inputs and all five apps.
+pub fn table2(rc: &ReproConfig) -> Result<Table> {
+    let mut t = Table::new(&[
+        "input", "app", "gunrock(twc)", "gunrock(lb)", "d-irgl(twc)",
+        "d-irgl(alb)", "alb-speedup",
+    ]);
+    for input in inputs::SINGLE_HOST_INPUTS {
+        for app in crate::apps::ALL_APPS {
+            // The paper omits Gunrock pr/kcore (unsupported/incorrect).
+            let mut cells = Vec::new();
+            for fw in TABLE2_FRAMEWORKS {
+                let skip_gunrock = matches!(
+                    fw,
+                    Framework::GunrockTwc | Framework::GunrockLb
+                ) && matches!(app, App::Pr | App::Kcore);
+                if skip_gunrock {
+                    cells.push("-".to_string());
+                } else {
+                    cells.push(ms(run_cell(rc, input, app, fw)?));
+                }
+            }
+            let twc: f64 = cells[2].parse().unwrap_or(f64::NAN);
+            let alb: f64 = cells[3].parse().unwrap_or(f64::NAN);
+            let speedup = if alb > 0.0 { twc / alb } else { f64::NAN };
+            let mut row = vec![input.to_string(), app.name().to_string()];
+            row.extend(cells);
+            row.push(format!("{speedup:.2}x"));
+            t.row(row);
+        }
+    }
+    Ok(t)
+}
+
+// ----------------------------------------------------------------- Figure 5
+
+/// Figure 5: per-block load distribution, D-IrGL (TWC) vs D-IrGL (ALB), for
+/// the paper's four configurations.
+pub fn fig5(rc: &ReproConfig) -> Result<String> {
+    let mut out = String::new();
+    let configs: [(&str, App, &[u32]); 4] = [
+        ("rmat18", App::Bfs, &[0]),   // 5a/5b
+        ("rmat18", App::Sssp, &[1]),  // 5c/5d
+        ("road-s", App::Cc, &[1]),    // 5e/5f
+        ("rmat18", App::Pr, &[0]),    // 5g/5h
+    ];
+    for (input, app, rounds) in configs {
+        for fw in [Framework::DIrglTwc, Framework::DIrglAlb] {
+            out.push_str(&render_profile(&block_profile(rc, input, app, fw, rounds)?));
+        }
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------- Figures 6, 7, 8, 9
+
+/// One multi-GPU cell.
+pub fn run_dist_cell(
+    rc: &ReproConfig,
+    input: &str,
+    app: App,
+    fw: Framework,
+    cluster: &ClusterConfig,
+) -> Result<crate::coordinator::DistRunResult> {
+    let g = rc.graph(input);
+    let src = source_for(input, &g);
+    let cfg = rc.engine_cfg(fw);
+    run_distributed(app, &g, src, &cfg, cluster, None)
+}
+
+/// Figure 6: execution time on 1-6 GPUs (Momentum-like), four frameworks.
+pub fn fig6(rc: &ReproConfig, apps: &[App]) -> Result<Table> {
+    let mut t = Table::new(&[
+        "input", "app", "framework", "1", "2", "3", "4", "5", "6",
+    ]);
+    for input in ["rmat18", "rmat20"] {
+        for &app in apps {
+            for fw in TABLE2_FRAMEWORKS {
+                if matches!(fw, Framework::GunrockTwc | Framework::GunrockLb)
+                    && matches!(app, App::Pr | App::Kcore)
+                {
+                    continue;
+                }
+                let mut row = vec![
+                    input.to_string(),
+                    app.name().to_string(),
+                    fw.name().to_string(),
+                ];
+                for k in 1..=6u32 {
+                    let r = run_dist_cell(
+                        rc, input, app, fw, &ClusterConfig::single_host(k),
+                    )?;
+                    row.push(ms(r.ms(&rc.spec)));
+                }
+                t.row(row);
+            }
+        }
+    }
+    Ok(t)
+}
+
+/// Figure 7: computation / communication breakdown on 6 GPUs.
+pub fn fig7(rc: &ReproConfig, apps: &[App]) -> Result<Table> {
+    breakdown(rc, apps, &["rmat18", "rmat20"], &ClusterConfig::single_host(6))
+}
+
+/// Figure 11: breakdown on 16 GPUs of the Bridges-like cluster.
+pub fn fig11(rc: &ReproConfig, apps: &[App]) -> Result<Table> {
+    breakdown(
+        rc,
+        apps,
+        &["rmat21", "rmat22", "twitter-s", "uk-s"],
+        &ClusterConfig::bridges(16),
+    )
+}
+
+fn breakdown(
+    rc: &ReproConfig,
+    apps: &[App],
+    ins: &[&str],
+    cluster: &ClusterConfig,
+) -> Result<Table> {
+    let mut t = Table::new(&[
+        "input", "app", "framework", "comp(ms)", "comm(ms)", "total(ms)",
+    ]);
+    for input in ins {
+        for &app in apps {
+            for fw in [Framework::DIrglTwc, Framework::DIrglAlb] {
+                let r = run_dist_cell(rc, input, app, fw, cluster)?;
+                t.row(vec![
+                    input.to_string(),
+                    app.name().to_string(),
+                    fw.name().to_string(),
+                    ms(r.comp_ms(&rc.spec)),
+                    ms(r.comm_ms(&rc.spec)),
+                    ms(r.ms(&rc.spec)),
+                ]);
+            }
+        }
+    }
+    Ok(t)
+}
+
+/// Figure 8: ALB with cyclic vs blocked distribution (1 and 4 GPUs).
+pub fn fig8(rc: &ReproConfig, apps: &[App]) -> Result<Table> {
+    let mut t = Table::new(&[
+        "input", "app", "gpus", "cyclic(ms)", "blocked(ms)", "cyclic-speedup",
+    ]);
+    for input in ["rmat18", "rmat20"] {
+        for &app in apps {
+            for k in [1u32, 4] {
+                let cell = |d: Distribution| -> Result<f64> {
+                    let g = rc.graph(input);
+                    let src = source_for(input, &g);
+                    let mut cfg = rc.engine_cfg(Framework::DIrglAlb);
+                    cfg.balancer = Balancer::Alb { distribution: d, threshold: None };
+                    let r = run_distributed(
+                        app, &g, src, &cfg, &ClusterConfig::single_host(k), None,
+                    )?;
+                    Ok(r.ms(&rc.spec))
+                };
+                let cyc = cell(Distribution::Cyclic)?;
+                let blk = cell(Distribution::Blocked)?;
+                t.row(vec![
+                    input.to_string(),
+                    app.name().to_string(),
+                    k.to_string(),
+                    ms(cyc),
+                    ms(blk),
+                    format!("{:.2}x", blk / cyc),
+                ]);
+            }
+        }
+    }
+    Ok(t)
+}
+
+/// Figure 9: IEC vs OEC partitioning under TWC and ALB (4 GPUs).
+pub fn fig9(rc: &ReproConfig, apps: &[App]) -> Result<Table> {
+    let mut t = Table::new(&[
+        "input", "app", "policy", "twc(ms)", "alb(ms)", "alb-speedup",
+    ]);
+    for input in ["rmat18", "rmat20"] {
+        for &app in apps {
+            for policy in [Policy::Iec, Policy::Oec] {
+                let cluster = ClusterConfig {
+                    num_gpus: 4,
+                    policy,
+                    net: NetworkModel::single_host(),
+                };
+                let twc = run_dist_cell(rc, input, app, Framework::DIrglTwc, &cluster)?
+                    .ms(&rc.spec);
+                let alb = run_dist_cell(rc, input, app, Framework::DIrglAlb, &cluster)?
+                    .ms(&rc.spec);
+                t.row(vec![
+                    input.to_string(),
+                    app.name().to_string(),
+                    policy.name().to_string(),
+                    ms(twc),
+                    ms(alb),
+                    format!("{:.2}x", twc / alb),
+                ]);
+            }
+        }
+    }
+    Ok(t)
+}
+
+// ---------------------------------------------------------------- Figure 10
+
+/// Figure 10: 2-16 GPUs on the Bridges-like cluster; D-IrGL (TWC/ALB) and
+/// Lux (cc and pr only, as in the paper).
+pub fn fig10(rc: &ReproConfig, apps: &[App]) -> Result<Table> {
+    let mut t = Table::new(&[
+        "input", "app", "framework", "2", "4", "8", "16",
+    ]);
+    for input in inputs::MULTI_HOST_INPUTS {
+        for &app in apps {
+            for fw in [Framework::DIrglTwc, Framework::DIrglAlb, Framework::Lux] {
+                // Paper runs Lux only for cc and pr.
+                if fw == Framework::Lux && !matches!(app, App::Cc | App::Pr) {
+                    continue;
+                }
+                let mut row = vec![
+                    input.to_string(),
+                    app.name().to_string(),
+                    fw.name().to_string(),
+                ];
+                for k in [2u32, 4, 8, 16] {
+                    let r = run_dist_cell(rc, input, app, fw, &ClusterConfig::bridges(k))?;
+                    row.push(ms(r.ms(&rc.spec)));
+                }
+                t.row(row);
+            }
+        }
+    }
+    Ok(t)
+}
+
+// ----------------------------------------------------------- Ablation §4.2
+
+/// Threshold ablation (paper §4.2): sweep the huge-bin degree threshold
+/// from 0 (everything through the LB kernel, max balance, max search
+/// overhead) past the launched-thread count (the paper's sweet spot) to
+/// effectively-infinite (plain TWC). The paper argues the sweet spot sits
+/// at THRESHOLD = launched threads; this regenerates that analysis.
+pub fn ablation_threshold(rc: &ReproConfig, apps: &[App]) -> Result<Table> {
+    let p = rc.spec.total_threads();
+    let thresholds: Vec<(String, u64)> = vec![
+        ("0".into(), 0),
+        ("p/16".into(), p / 16),
+        ("p/4".into(), p / 4),
+        ("p (paper)".into(), p),
+        ("4p".into(), 4 * p),
+        ("16p".into(), 16 * p),
+        ("inf (twc)".into(), u64::MAX),
+    ];
+    let mut t = Table::new(&["input", "app", "threshold", "ms", "lb-rounds"]);
+    for input in ["rmat18", "rmat20"] {
+        for &app in apps {
+            for (label, th) in &thresholds {
+                let mut g = rc.graph(input);
+                let src = source_for(input, &g);
+                let mut cfg = rc.engine_cfg(Framework::DIrglAlb);
+                cfg.balancer = Balancer::Alb {
+                    distribution: Distribution::Cyclic,
+                    threshold: Some(*th),
+                };
+                let r = engine::run(app, &mut g, src, &cfg, None)?;
+                t.row(vec![
+                    input.to_string(),
+                    app.name().to_string(),
+                    label.clone(),
+                    ms(r.ms(&rc.spec)),
+                    r.rounds_with_lb().to_string(),
+                ]);
+            }
+        }
+    }
+    Ok(t)
+}
+
+/// GPU-spec ablation: the ALB-vs-TWC comparison across hardware presets.
+/// THRESHOLD tracks each spec's launched-thread count, so the adaptive
+/// behaviour must be preserved on every GPU — including the paper-faithful
+/// K80 preset with its 26,624 threads.
+pub fn ablation_gpu(rc: &ReproConfig, apps: &[App]) -> Result<Table> {
+    let mut t = Table::new(&[
+        "gpu", "threads", "app", "twc(ms)", "alb(ms)", "speedup",
+    ]);
+    for spec in [
+        GpuSpec::default_sim(),
+        GpuSpec::k80_like(),
+        GpuSpec::gtx1080_like(),
+        GpuSpec::p100_like(),
+    ] {
+        for &app in apps {
+            let rc2 = ReproConfig { spec: spec.clone(), ..rc.clone() };
+            let twc = run_cell(&rc2, "rmat20", app, Framework::DIrglTwc)?;
+            let alb = run_cell(&rc2, "rmat20", app, Framework::DIrglAlb)?;
+            t.row(vec![
+                spec.name.clone(),
+                spec.total_threads().to_string(),
+                app.name().to_string(),
+                ms(twc),
+                ms(alb),
+                format!("{:.2}x", twc / alb),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> ReproConfig {
+        ReproConfig { scale_delta: -6, seed: 7, ..ReproConfig::default() }
+    }
+
+    #[test]
+    fn table1_has_all_inputs() {
+        let t = table1(&quick()).unwrap();
+        assert_eq!(t.num_rows(), 8);
+    }
+
+    #[test]
+    fn table2_shape_and_speedups() {
+        let rc = quick();
+        let t = table2(&rc).unwrap();
+        assert_eq!(t.num_rows(), 4 * 5);
+        let rendered = t.render();
+        assert!(rendered.contains("rmat18"));
+        assert!(rendered.contains("kcore"));
+    }
+
+    #[test]
+    fn fig1_reports_imbalance() {
+        let out = fig1(&quick()).unwrap();
+        assert!(out.contains("sssp"));
+        assert!(out.contains("imbalance"));
+    }
+
+    #[test]
+    fn fig5_contains_both_frameworks() {
+        let out = fig5(&quick()).unwrap();
+        assert!(out.contains("d-irgl(twc)"));
+        assert!(out.contains("d-irgl(alb)"));
+    }
+
+    #[test]
+    fn fig8_cyclic_wins_overall() {
+        let rc = quick();
+        let t = fig8(&rc, &[App::Bfs]).unwrap();
+        assert_eq!(t.num_rows(), 4);
+    }
+
+    #[test]
+    fn run_cell_smoke() {
+        let rc = quick();
+        let ms = run_cell(&rc, "rmat18", App::Bfs, Framework::DIrglAlb).unwrap();
+        assert!(ms > 0.0);
+    }
+}

@@ -1,0 +1,138 @@
+//! Artifact discovery: map the AOT outputs in `artifacts/` to typed kernel
+//! variants the runtime can select by shape.
+//!
+//! Shape metadata is encoded in the artifact file names by `aot.py`
+//! (`edge_relax_h{H}_b{B}.hlo.txt`, `prefix_sum_h{H}.hlo.txt`,
+//! `pr_pull_n{N}.hlo.txt`, `kcore_n{N}.hlo.txt`,
+//! `relax_merge_h{H}_b{B}_s{S}.hlo.txt`), which keeps the Rust side free of
+//! a JSON dependency; `manifest.json` stays the human-readable description.
+
+use std::path::{Path, PathBuf};
+
+/// One compiled-ahead-of-time kernel variant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// (H, B): huge-table size, edge-batch size.
+    EdgeRelax { h: usize, b: usize },
+    /// (H, B, S): adds destination-slot table size.
+    RelaxMerge { h: usize, b: usize, s: usize },
+    /// H: scan length.
+    PrefixSum { h: usize },
+    /// N: vertex tile.
+    PrPull { n: usize },
+    /// N: vertex tile.
+    Kcore { n: usize },
+    /// N: vertex tile (inspector bin assignment).
+    Binning { n: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub kind: ArtifactKind,
+    pub path: PathBuf,
+}
+
+/// Parse one artifact file name; `None` for unrelated files.
+pub fn parse_name(name: &str) -> Option<ArtifactKind> {
+    let stem = name.strip_suffix(".hlo.txt")?;
+    let nums = |s: &str, prefix: &str| -> Option<Vec<usize>> {
+        let rest = s.strip_prefix(prefix)?;
+        rest.split('_')
+            .map(|tok| {
+                tok.trim_start_matches(|c: char| c.is_ascii_alphabetic())
+                    .parse::<usize>()
+                    .ok()
+            })
+            .collect()
+    };
+    if let Some(v) = nums(stem, "edge_relax_") {
+        if let [h, b] = v[..] {
+            return Some(ArtifactKind::EdgeRelax { h, b });
+        }
+    }
+    if let Some(v) = nums(stem, "relax_merge_") {
+        if let [h, b, s] = v[..] {
+            return Some(ArtifactKind::RelaxMerge { h, b, s });
+        }
+    }
+    if let Some(v) = nums(stem, "prefix_sum_") {
+        if let [h] = v[..] {
+            return Some(ArtifactKind::PrefixSum { h });
+        }
+    }
+    if let Some(v) = nums(stem, "pr_pull_") {
+        if let [n] = v[..] {
+            return Some(ArtifactKind::PrPull { n });
+        }
+    }
+    if let Some(v) = nums(stem, "kcore_") {
+        if let [n] = v[..] {
+            return Some(ArtifactKind::Kcore { n });
+        }
+    }
+    if let Some(v) = nums(stem, "binning_") {
+        if let [n] = v[..] {
+            return Some(ArtifactKind::Binning { n });
+        }
+    }
+    None
+}
+
+/// Scan a directory for artifacts.
+pub fn discover(dir: &Path) -> std::io::Result<Vec<Artifact>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(kind) = parse_name(&name) {
+            out.push(Artifact { kind, path: entry.path() });
+        }
+    }
+    out.sort_by_key(|a| a.path.clone());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind() {
+        assert_eq!(
+            parse_name("edge_relax_h256_b2048.hlo.txt"),
+            Some(ArtifactKind::EdgeRelax { h: 256, b: 2048 })
+        );
+        assert_eq!(
+            parse_name("relax_merge_h256_b2048_s2048.hlo.txt"),
+            Some(ArtifactKind::RelaxMerge { h: 256, b: 2048, s: 2048 })
+        );
+        assert_eq!(
+            parse_name("prefix_sum_h1024.hlo.txt"),
+            Some(ArtifactKind::PrefixSum { h: 1024 })
+        );
+        assert_eq!(parse_name("pr_pull_n4096.hlo.txt"), Some(ArtifactKind::PrPull { n: 4096 }));
+        assert_eq!(parse_name("kcore_n16384.hlo.txt"), Some(ArtifactKind::Kcore { n: 16384 }));
+        assert_eq!(parse_name("binning_n4096.hlo.txt"), Some(ArtifactKind::Binning { n: 4096 }));
+    }
+
+    #[test]
+    fn ignores_unrelated_files() {
+        assert_eq!(parse_name("manifest.json"), None);
+        assert_eq!(parse_name("notes.txt"), None);
+        assert_eq!(parse_name("edge_relax_weird.hlo.txt"), None);
+    }
+
+    #[test]
+    fn discover_finds_generated_artifacts() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let arts = discover(&dir).unwrap();
+        assert!(arts.iter().any(|a| matches!(a.kind, ArtifactKind::EdgeRelax { .. })));
+        assert!(arts.iter().any(|a| matches!(a.kind, ArtifactKind::PrefixSum { .. })));
+        assert!(arts.iter().any(|a| matches!(a.kind, ArtifactKind::PrPull { .. })));
+    }
+}

@@ -1,0 +1,185 @@
+//! Cross-module integration: inputs -> partitioner -> engines -> oracles,
+//! plus CLI smoke tests against the built binary.
+
+use std::process::Command;
+
+use alb_graph::apps::engine::{run, EngineConfig};
+use alb_graph::apps::{bfs, cc, kcore, pr, sssp, App};
+use alb_graph::config::Framework;
+use alb_graph::coordinator::{run_distributed, ClusterConfig};
+use alb_graph::gpu::GpuSpec;
+use alb_graph::graph::inputs;
+
+const DELTA: i32 = -4; // small but non-trivial inputs for CI
+
+#[test]
+fn every_app_matches_oracle_on_every_input() {
+    for input in inputs::ALL_INPUTS {
+        let g0 = inputs::build(input, DELTA, 3).unwrap();
+        let src = inputs::source_vertex(input, &g0);
+        let cfg = EngineConfig { max_rounds: 1_000_000, ..EngineConfig::default() };
+
+        let r = run(App::Bfs, &mut g0.clone(), src, &cfg, None).unwrap();
+        assert_eq!(r.labels, bfs::oracle(&g0, src), "bfs {input}");
+
+        let r = run(App::Sssp, &mut g0.clone(), src, &cfg, None).unwrap();
+        assert_eq!(r.labels, sssp::oracle(&g0, src), "sssp {input}");
+
+        let r = run(App::Cc, &mut g0.clone(), src, &cfg, None).unwrap();
+        assert_eq!(r.labels, cc::oracle(&g0), "cc {input}");
+
+        let r = run(App::Kcore, &mut g0.clone(), src, &cfg, None).unwrap();
+        let (want, _) = kcore::oracle(&mut g0.clone(), cfg.kcore_k);
+        let got: Vec<bool> = r.labels.iter().map(|&x| x > 0.5).collect();
+        assert_eq!(got, want, "kcore {input}");
+
+        let prcfg = EngineConfig { max_rounds: 100, ..cfg.clone() };
+        let r = run(App::Pr, &mut g0.clone(), src, &prcfg, None).unwrap();
+        let (want, _) = pr::oracle(&mut g0.clone(), prcfg.pr_tol, 100);
+        assert_eq!(r.labels, want, "pr {input}");
+    }
+}
+
+#[test]
+fn frameworks_agree_on_answers_not_on_time() {
+    let g0 = inputs::build("rmat18", DELTA, 9).unwrap();
+    let src = inputs::source_vertex("rmat18", &g0);
+    let spec = GpuSpec::default_sim();
+    let mut labels: Vec<Vec<f32>> = Vec::new();
+    let mut cycles: Vec<u64> = Vec::new();
+    for fw in [
+        Framework::DIrglTwc,
+        Framework::DIrglAlb,
+        Framework::GunrockTwc,
+        Framework::GunrockLb,
+        Framework::Lux,
+    ] {
+        let cfg = fw.engine_config(spec.clone());
+        let r = run(App::Bfs, &mut g0.clone(), src, &cfg, None).unwrap();
+        labels.push(r.labels);
+        cycles.push(r.total_cycles);
+    }
+    for l in &labels[1..] {
+        assert_eq!(*l, labels[0]);
+    }
+    // Timing must differ between at least some frameworks (they are
+    // different strategies, not aliases).
+    assert!(cycles.iter().any(|&c| c != cycles[0]));
+}
+
+#[test]
+fn distributed_agrees_with_single_for_all_apps() {
+    let g = inputs::build("rmat18", DELTA, 11).unwrap();
+    let src = inputs::source_vertex("rmat18", &g);
+    let cfg = EngineConfig { max_rounds: 1_000_000, ..EngineConfig::default() };
+    for app in [App::Bfs, App::Sssp, App::Cc, App::Kcore] {
+        let single = run(app, &mut g.clone(), src, &cfg, None).unwrap();
+        for k in [2u32, 3, 6] {
+            let dist = run_distributed(app, &g, src, &cfg,
+                                       &ClusterConfig::single_host(k), None)
+                .unwrap();
+            assert_eq!(dist.labels, single.labels, "{} k={k}", app.name());
+        }
+    }
+    // pr with fp tolerance.
+    let prcfg = EngineConfig { max_rounds: 100, ..cfg };
+    let single = run(App::Pr, &mut g.clone(), src, &prcfg, None).unwrap();
+    let dist = run_distributed(App::Pr, &g, src, &prcfg,
+                               &ClusterConfig::single_host(4), None)
+        .unwrap();
+    for (a, b) in dist.labels.iter().zip(&single.labels) {
+        assert!((a - b).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn alb_end_to_end_speedup_on_paper_regime() {
+    // The headline claim at integration level, default-scale rmat.
+    let g = inputs::build("rmat18", 0, 42).unwrap();
+    let src = inputs::source_vertex("rmat18", &g);
+    let spec = GpuSpec::default_sim();
+    let twc = run(App::Bfs, &mut g.clone(), src,
+                  &Framework::DIrglTwc.engine_config(spec.clone()), None)
+        .unwrap();
+    let alb = run(App::Bfs, &mut g.clone(), src,
+                  &Framework::DIrglAlb.engine_config(spec.clone()), None)
+        .unwrap();
+    let speedup = twc.total_cycles as f64 / alb.total_cycles as f64;
+    assert!(speedup > 1.5, "expected paper-shaped speedup, got {speedup:.2}x");
+    // And dormancy on the road input.
+    let g = inputs::build("road-s", DELTA, 42).unwrap();
+    let alb_road = run(App::Bfs, &mut g.clone(), 0,
+                       &Framework::DIrglAlb.engine_config(spec.clone()), None)
+        .unwrap();
+    let twc_road = run(App::Bfs, &mut g.clone(), 0,
+                       &Framework::DIrglTwc.engine_config(spec), None)
+        .unwrap();
+    assert_eq!(alb_road.rounds_with_lb(), 0);
+    assert_eq!(alb_road.total_cycles, twc_road.total_cycles);
+}
+
+// ------------------------------------------------------------- CLI smoke
+
+fn alb_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_alb"))
+}
+
+#[test]
+fn cli_props_runs() {
+    let out = alb_bin()
+        .args(["props", "--input", "rmat18", "--scale-delta", "-5"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("rmat18"));
+    assert!(stdout.contains("maxDout"));
+}
+
+#[test]
+fn cli_run_single_and_multi() {
+    let out = alb_bin()
+        .args(["run", "--app", "bfs", "--input", "rmat18", "--scale-delta",
+               "-5", "--framework", "dirgl-alb"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = alb_bin()
+        .args(["run", "--app", "sssp", "--input", "rmat18", "--scale-delta",
+               "-5", "--gpus", "4", "--policy", "oec"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("comp"));
+}
+
+#[test]
+fn cli_gen_roundtrip_and_json() {
+    let dir = std::env::temp_dir();
+    let graph_path = dir.join(format!("alb-cli-{}.albg", std::process::id()));
+    let json_path = dir.join(format!("alb-cli-{}.json", std::process::id()));
+    let out = alb_bin()
+        .args(["gen", "--input", "road-s", "--scale-delta", "-5", "--out",
+               graph_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let out = alb_bin()
+        .args(["run", "--app", "bfs", "--input", graph_path.to_str().unwrap(),
+               "--json", json_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let js = std::fs::read_to_string(&json_path).unwrap();
+    assert!(js.contains("\"simulated_ms\""));
+    let _ = std::fs::remove_file(graph_path);
+    let _ = std::fs::remove_file(json_path);
+}
+
+#[test]
+fn cli_rejects_unknown_args() {
+    assert!(!alb_bin().args(["run", "--app", "nope", "--input", "rmat18"])
+        .output().unwrap().status.success());
+    assert!(!alb_bin().args(["frobnicate"]).output().unwrap().status.success());
+    assert!(!alb_bin().args(["repro", "fig99"]).output().unwrap().status.success());
+}

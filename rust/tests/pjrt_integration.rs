@@ -1,0 +1,186 @@
+//! PJRT integration: the AOT-compiled JAX/Pallas kernels loaded and
+//! executed from Rust, checked against the native implementations.
+//!
+//! Requires `make artifacts` (skipped with a notice otherwise).
+
+use alb_graph::apps::engine::{run, ComputeMode, EngineConfig};
+use alb_graph::apps::{App, ALL_APPS};
+use alb_graph::config::Framework;
+use alb_graph::gpu::GpuSpec;
+use alb_graph::graph::gen::rmat::{self, RmatConfig};
+use alb_graph::graph::CsrGraph;
+use alb_graph::runtime::{PjrtRuntime, INF};
+
+fn runtime() -> Option<PjrtRuntime> {
+    match PjrtRuntime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP pjrt tests: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn loads_all_artifact_kinds() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.num_kernels() >= 5, "expected all kernel variants compiled");
+    assert_eq!(rt.platform(), "cpu");
+    assert!(rt.max_relax_h() >= 256);
+}
+
+#[test]
+fn edge_relax_matches_reference_semantics() {
+    let Some(rt) = runtime() else { return };
+    // Three huge vertices with degrees 5, 3, 2 -> prefix [5, 8, 10].
+    let prefix = [5u32, 8, 10];
+    let src_dist = [10.0f32, 20.0, 30.0];
+    let edge_ids: Vec<u32> = (0..10).collect();
+    let weights = vec![1.0f32; 10];
+    let (src, cand) = rt.edge_relax(&prefix, &src_dist, &edge_ids, &weights).unwrap();
+    assert_eq!(src, vec![0, 0, 0, 0, 0, 1, 1, 1, 2, 2]);
+    let want: Vec<f32> = src.iter().map(|&s| src_dist[s as usize] + 1.0).collect();
+    assert_eq!(cand, want);
+}
+
+#[test]
+fn edge_relax_batches_larger_than_variant() {
+    let Some(rt) = runtime() else { return };
+    // 5000 edges forces multiple kernel invocations (b = 2048).
+    let prefix = [5000u32];
+    let src_dist = [7.0f32];
+    let edge_ids: Vec<u32> = (0..5000).collect();
+    let weights: Vec<f32> = (0..5000).map(|i| (i % 10) as f32).collect();
+    let (src, cand) = rt.edge_relax(&prefix, &src_dist, &edge_ids, &weights).unwrap();
+    assert_eq!(src.len(), 5000);
+    assert!(src.iter().all(|&s| s == 0));
+    for (i, &c) in cand.iter().enumerate() {
+        assert_eq!(c, 7.0 + (i % 10) as f32);
+    }
+}
+
+#[test]
+fn edge_relax_infinite_source_stays_infinite() {
+    let Some(rt) = runtime() else { return };
+    let prefix = [4u32];
+    let src_dist = [INF];
+    let edge_ids = [0u32, 1, 2, 3];
+    let weights = [1.0f32; 4];
+    let (_, cand) = rt.edge_relax(&prefix, &src_dist, &edge_ids, &weights).unwrap();
+    assert!(cand.iter().all(|&c| c >= INF));
+}
+
+#[test]
+fn prefix_sum_matches_cumsum() {
+    let Some(rt) = runtime() else { return };
+    let degs: Vec<u32> = (1..=200).collect();
+    let got = rt.prefix_sum(&degs).unwrap();
+    let mut run = 0u64;
+    for (i, &d) in degs.iter().enumerate() {
+        run += d as u64;
+        assert_eq!(got[i], run);
+    }
+}
+
+#[test]
+fn pr_pull_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let ranks: Vec<f32> = (0..1000).map(|i| (i as f32 + 1.0) / 1000.0).collect();
+    let degs: Vec<u32> = (0..1000).map(|i| i % 17).collect();
+    let got = rt.pr_pull(&ranks, &degs, 0.85).unwrap();
+    for i in 0..1000 {
+        let want = 0.85 * ranks[i] / (degs[i].max(1) as f32);
+        assert!((got[i] - want).abs() < 1e-6, "{i}: {} vs {want}", got[i]);
+    }
+}
+
+#[test]
+fn kcore_alive_matches_threshold() {
+    let Some(rt) = runtime() else { return };
+    let degs: Vec<u32> = (0..500).collect();
+    let alive = rt.kcore_alive(&degs, 100).unwrap();
+    for (i, &a) in alive.iter().enumerate() {
+        assert_eq!(a, i >= 100);
+    }
+}
+
+#[test]
+fn twc_bin_matches_native_binning() {
+    let Some(rt) = runtime() else { return };
+    let degs: Vec<u32> = vec![0, 31, 32, 127, 128, 3071, 3072, 1 << 20];
+    let bins = rt.twc_bin(&degs, [32, 128, 3072]).unwrap();
+    assert_eq!(bins, vec![0, 0, 1, 1, 2, 2, 3, 3]);
+    // Against the Rust-side TWC binning for sub-huge degrees.
+    use alb_graph::lb::schedule::Unit;
+    use alb_graph::lb::twc::bin;
+    let spec = GpuSpec::default_sim();
+    for (i, &d) in degs.iter().enumerate() {
+        if (d as u64) < spec.huge_threshold() {
+            let want = match bin(d as u64, &spec) {
+                Unit::Thread => 0,
+                Unit::Warp => 1,
+                Unit::Block => 2,
+            };
+            assert_eq!(bins[i], want, "degree {d}");
+        } else {
+            assert_eq!(bins[i], 3, "degree {d} must be huge");
+        }
+    }
+}
+
+#[test]
+fn engine_pjrt_equals_native_for_every_app() {
+    let Some(rt) = runtime() else { return };
+    let el = rmat::generate(&RmatConfig::paper(10, 5));
+    let g0 = CsrGraph::from_edge_list(&el);
+    let spec = GpuSpec::default_sim();
+    let src = g0.max_out_degree_vertex();
+    for app in ALL_APPS {
+        let mut cfg: EngineConfig = Framework::DIrglAlb.engine_config(spec.clone());
+        cfg.compute = ComputeMode::Pjrt;
+        let mut g = g0.clone();
+        let pjrt_r = run(app, &mut g, src, &cfg, Some(&rt)).unwrap();
+        cfg.compute = ComputeMode::Native;
+        let mut g = g0.clone();
+        let native_r = run(app, &mut g, src, &cfg, None).unwrap();
+        if app == App::Pr {
+            for (a, b) in pjrt_r.labels.iter().zip(&native_r.labels) {
+                assert!((a - b).abs() < 1e-5, "pr {a} vs {b}");
+            }
+        } else {
+            assert_eq!(pjrt_r.labels, native_r.labels, "app {}", app.name());
+        }
+    }
+}
+
+#[test]
+fn engine_pjrt_actually_exercises_lb_kernel() {
+    let Some(rt) = runtime() else { return };
+    let el = rmat::generate(&RmatConfig::paper(11, 6));
+    let mut g = CsrGraph::from_edge_list(&el);
+    let spec = GpuSpec::default_sim();
+    let src = g.max_out_degree_vertex();
+    assert!(g.out_degree(src) >= spec.huge_threshold(),
+            "input must have a huge vertex for this test");
+    let mut cfg: EngineConfig = Framework::DIrglAlb.engine_config(spec);
+    cfg.compute = ComputeMode::Pjrt;
+    let r = run(App::Bfs, &mut g, src, &cfg, Some(&rt)).unwrap();
+    assert!(r.rounds_with_lb() > 0, "LB kernel must have run via PJRT");
+}
+
+#[test]
+fn distributed_pjrt_smoke() {
+    use alb_graph::coordinator::{run_distributed, ClusterConfig};
+    let Some(rt) = runtime() else { return };
+    let el = rmat::generate(&RmatConfig::paper(9, 8));
+    let g = CsrGraph::from_edge_list(&el);
+    let src = g.max_out_degree_vertex();
+    let mut cfg: EngineConfig =
+        Framework::DIrglAlb.engine_config(GpuSpec::default_sim());
+    cfg.compute = ComputeMode::Pjrt;
+    let r = run_distributed(App::Bfs, &g, src, &cfg,
+                            &ClusterConfig::single_host(2), Some(&rt))
+        .unwrap();
+    let want = alb_graph::apps::bfs::oracle(&g, src);
+    assert_eq!(r.labels, want);
+}
