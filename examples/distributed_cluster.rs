@@ -15,10 +15,10 @@
 use alb_graph::apps::App;
 use alb_graph::comm::NetworkModel;
 use alb_graph::config::Framework;
-use alb_graph::coordinator::{run_distributed, ClusterConfig};
+use alb_graph::coordinator::{run_distributed, ClusterConfig, ExecMode};
 use alb_graph::gpu::GpuSpec;
 use alb_graph::graph::inputs;
-use alb_graph::metrics::Table;
+use alb_graph::metrics::{gpu_loads, Table};
 use alb_graph::partition::Policy;
 
 fn main() -> anyhow::Result<()> {
@@ -46,8 +46,12 @@ fn main() -> anyhow::Result<()> {
     }
     println!("sssp strong scaling (simulated ms):\n{}", t.render());
 
-    // 2. Breakdown on 16 GPUs (Fig. 11 accounting).
-    let mut t = Table::new(&["app", "framework", "comp(ms)", "comm(ms)", "imbalance"]);
+    // 2. Breakdown on 16 GPUs (Fig. 11 accounting), with the host
+    //    wall-clock each simulated GPU's threads actually spent.
+    let mut t = Table::new(&[
+        "app", "framework", "comp(ms)", "comm(ms)", "imbalance", "threads",
+        "wall(ms)",
+    ]);
     for app in [App::Bfs, App::Sssp, App::Cc] {
         for fw in [Framework::DIrglTwc, Framework::DIrglAlb] {
             let cfg = fw.engine_config(spec.clone());
@@ -57,12 +61,18 @@ fn main() -> anyhow::Result<()> {
             let max = *r.per_gpu_comp.iter().max().unwrap() as f64;
             let mean = r.per_gpu_comp.iter().sum::<u64>() as f64
                 / r.per_gpu_comp.len() as f64;
+            let wall: f64 = gpu_loads(&r.per_gpu_comp, &r.per_gpu_wall_ns)
+                .iter()
+                .map(|l| l.wall_ms())
+                .sum();
             t.row(vec![
                 app.name().into(),
                 fw.name().into(),
                 format!("{:.4}", r.comp_ms(&spec)),
                 format!("{:.4}", r.comm_ms(&spec)),
                 format!("{:.2}", max / mean.max(1.0)),
+                r.num_threads().to_string(),
+                format!("{wall:.2}"),
             ]);
         }
     }
@@ -75,6 +85,7 @@ fn main() -> anyhow::Result<()> {
             num_gpus: 8,
             policy,
             net: NetworkModel::cluster(2),
+            exec: ExecMode::Parallel,
         };
         let twc = run_distributed(
             App::Sssp, &g, src,

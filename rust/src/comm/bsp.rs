@@ -1,0 +1,149 @@
+//! The BSP superstep executor: fork one task per simulated GPU, run them on
+//! their own OS threads, and **barrier** before the Gluon-style reduce /
+//! broadcast begins.
+//!
+//! This makes the bulk-synchronous structure of the coordinator explicit:
+//! a round is `superstep(compute tasks) -> reduce -> broadcast`, and the
+//! join performed by [`superstep`] *is* the barrier separating local compute
+//! from communication — no partition's updates are reconciled while another
+//! partition is still computing.
+//!
+//! Determinism: results are collected **by partition index**, never by
+//! completion order, and every reduction downstream folds them in that
+//! order. [`ExecMode::Sequential`] runs the same closures inline on the
+//! caller's thread — the reference the parallel path must match bit-for-bit
+//! (asserted by `rust/tests/parity.rs`).
+
+use std::thread;
+
+/// How per-round per-GPU tasks execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// One scoped OS thread per simulated GPU (the default).
+    #[default]
+    Parallel,
+    /// In partition order on the calling thread — the determinism reference.
+    Sequential,
+}
+
+impl ExecMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Parallel => "parallel",
+            ExecMode::Sequential => "sequential",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        match s {
+            "parallel" | "par" => Some(ExecMode::Parallel),
+            "sequential" | "seq" => Some(ExecMode::Sequential),
+            _ => None,
+        }
+    }
+}
+
+/// Run one compute task per partition and return their results indexed by
+/// partition. Returning from this function is the BSP barrier: every worker
+/// thread has been joined (scoped threads cannot outlive the scope), so the
+/// caller may safely reduce/broadcast shared state.
+pub fn superstep<T, F>(mode: ExecMode, tasks: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    // A single task has nobody to overlap with; inline it to spare the
+    // spawn. (Sequential mode is the bit-exact reference for parity tests.)
+    if mode == ExecMode::Sequential || tasks.len() <= 1 {
+        return tasks.into_iter().map(|f| f()).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..tasks.len()).map(|_| None).collect();
+    thread::scope(|s| {
+        for (task, slot) in tasks.into_iter().zip(out.iter_mut()) {
+            s.spawn(move || *slot = Some(task()));
+        }
+        // scope join == barrier
+    });
+    out.into_iter()
+        .map(|r| r.expect("superstep worker finished"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::thread::ThreadId;
+
+    fn tasks(n: usize) -> Vec<impl FnOnce() -> (usize, ThreadId) + Send> {
+        (0..n)
+            .map(|i| move || (i * i, thread::current().id()))
+            .collect()
+    }
+
+    #[test]
+    fn results_are_ordered_by_partition_index() {
+        for mode in [ExecMode::Parallel, ExecMode::Sequential] {
+            let got = superstep(mode, tasks(16));
+            for (i, (val, _)) in got.iter().enumerate() {
+                assert_eq!(*val, i * i, "{mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_mode_uses_distinct_os_threads() {
+        let got = superstep(ExecMode::Parallel, tasks(4));
+        let ids: HashSet<ThreadId> = got.iter().map(|(_, id)| *id).collect();
+        assert!(ids.len() >= 2, "expected >= 2 worker threads, saw {}", ids.len());
+        assert!(!ids.contains(&thread::current().id()));
+    }
+
+    #[test]
+    fn sequential_mode_stays_on_the_caller() {
+        let got = superstep(ExecMode::Sequential, tasks(4));
+        for (_, id) in &got {
+            assert_eq!(*id, thread::current().id());
+        }
+    }
+
+    #[test]
+    fn single_task_runs_inline_even_in_parallel_mode() {
+        let got = superstep(ExecMode::Parallel, tasks(1));
+        assert_eq!(got[0].0, 0);
+        assert_eq!(got[0].1, thread::current().id());
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let a = superstep(ExecMode::Parallel, tasks(9));
+        let b = superstep(ExecMode::Sequential, tasks(9));
+        let va: Vec<usize> = a.into_iter().map(|(v, _)| v).collect();
+        let vb: Vec<usize> = b.into_iter().map(|(v, _)| v).collect();
+        assert_eq!(va, vb);
+    }
+
+    #[test]
+    fn superstep_is_a_barrier() {
+        // Every worker increments before superstep returns.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<_> = (0..8)
+            .map(|_| {
+                let c = &counter;
+                move || c.fetch_add(1, Ordering::SeqCst)
+            })
+            .collect();
+        let _ = superstep(ExecMode::Parallel, tasks);
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn exec_mode_parse_roundtrip() {
+        for m in [ExecMode::Parallel, ExecMode::Sequential] {
+            assert_eq!(ExecMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(ExecMode::parse("seq"), Some(ExecMode::Sequential));
+        assert_eq!(ExecMode::parse("nope"), None);
+    }
+}

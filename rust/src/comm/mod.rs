@@ -9,6 +9,14 @@
 //! network model with distinct intra-host (PCIe/NVLink-class) and
 //! inter-host (Omni-Path-class) links, reproducing the Momentum (single
 //! host) and Bridges (8 hosts x 2 GPUs) testbeds.
+//!
+//! [`bsp`] holds the superstep executor: per-GPU compute tasks forked onto
+//! OS threads with an explicit barrier (the scope join) before the reduce /
+//! broadcast phases run.
+
+pub mod bsp;
+
+pub use bsp::{superstep, ExecMode};
 
 /// Reduction operator applied at the master.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -2,24 +2,38 @@
 //!
 //! Drives the bulk-synchronous execution the paper's multi-GPU evaluation
 //! (§6.2–6.3) uses: every round, each simulated GPU runs its local kernels
-//! on its partition (in parallel, one OS thread per GPU), then the
-//! Gluon-style sync ([`crate::comm`]) reconciles boundary vertices. Round
-//! time = slowest GPU's compute + non-overlapping communication — exactly
-//! the accounting behind Figures 6/7/10/11. Intra-GPU thread-block imbalance
-//! on *one* GPU therefore stalls the whole machine, which is why ALB's
-//! per-GPU fix shows up at cluster scale.
+//! on its partition — **concurrently, one OS thread per GPU**, through
+//! [`crate::comm::bsp::superstep`] — then the scope join barriers the round
+//! and the Gluon-style sync ([`crate::comm`]) reconciles boundary vertices.
+//! Round time = slowest GPU's compute + non-overlapping communication —
+//! exactly the accounting behind Figures 6/7/10/11. Intra-GPU thread-block
+//! imbalance on *one* GPU therefore stalls the whole machine, which is why
+//! ALB's per-GPU fix shows up at cluster scale.
+//!
+//! Determinism: per-GPU results are collected by partition index and every
+//! reduce/broadcast folds them in that order, so a parallel run is
+//! bit-identical to the [`ExecMode::Sequential`] reference (asserted by
+//! `rust/tests/parity.rs`). Alongside the modeled cycles, the coordinator
+//! records real per-GPU host wall-clock and the set of OS threads that
+//! executed rounds.
+
+use std::collections::HashSet;
+use std::thread::ThreadId;
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::apps::engine::{self, ComputeMode, EngineConfig};
 use crate::apps::worklist::NextWorklist;
 use crate::apps::{pr, App, INF};
-use crate::comm::{NetworkModel, BYTES_PER_UPDATE};
+use crate::comm::{self, NetworkModel, BYTES_PER_UPDATE};
 use crate::gpu::Simulator;
 use crate::graph::CsrGraph;
 use crate::lb::Direction;
-use crate::partition::{partition, DistGraph, Policy};
+use crate::partition::{partition, DistGraph, Partition, Policy};
 use crate::runtime::PjrtRuntime;
+
+pub use crate::comm::bsp::ExecMode;
 
 /// Cluster-level configuration.
 #[derive(Debug, Clone)]
@@ -27,6 +41,9 @@ pub struct ClusterConfig {
     pub num_gpus: u32,
     pub policy: Policy,
     pub net: NetworkModel,
+    /// How per-round GPU tasks execute (parallel threads vs the sequential
+    /// reference). Output is identical either way.
+    pub exec: ExecMode,
 }
 
 impl ClusterConfig {
@@ -36,6 +53,7 @@ impl ClusterConfig {
             num_gpus: k,
             policy: Policy::Cvc,
             net: NetworkModel::single_host(),
+            exec: ExecMode::Parallel,
         }
     }
 
@@ -45,12 +63,19 @@ impl ClusterConfig {
             num_gpus: k,
             policy: Policy::Cvc,
             net: NetworkModel::cluster(2),
+            exec: ExecMode::Parallel,
         }
+    }
+
+    /// Same cluster with a different execution mode.
+    pub fn with_exec(mut self, exec: ExecMode) -> Self {
+        self.exec = exec;
+        self
     }
 }
 
 /// One BSP round's record.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct DistRoundRecord {
     pub round: u32,
     /// Global active count entering the round.
@@ -76,6 +101,12 @@ pub struct DistRunResult {
     pub comm_cycles: u64,
     /// Per-GPU total compute cycles (for balance reporting).
     pub per_gpu_comp: Vec<u64>,
+    /// Per-GPU host wall-clock (ns) actually spent in local rounds —
+    /// measured time alongside the modeled cycles.
+    pub per_gpu_wall_ns: Vec<u64>,
+    /// OS threads that executed local rounds (>= 2 distinct ids when a
+    /// multi-partition run uses [`ExecMode::Parallel`]).
+    pub threads: HashSet<ThreadId>,
 }
 
 impl DistRunResult {
@@ -89,6 +120,57 @@ impl DistRunResult {
 
     pub fn comm_ms(&self, spec: &crate::gpu::GpuSpec) -> f64 {
         spec.cycles_to_ms(self.comm_cycles)
+    }
+
+    /// Distinct OS threads that ran local compute.
+    pub fn num_threads(&self) -> usize {
+        self.threads.len()
+    }
+}
+
+/// Mutable accounting shared by the per-app drivers.
+struct RunAccounting {
+    rounds: Vec<DistRoundRecord>,
+    total: u64,
+    comp_total: u64,
+    comm_total: u64,
+    per_gpu_comp: Vec<u64>,
+    per_gpu_wall_ns: Vec<u64>,
+    threads: HashSet<ThreadId>,
+}
+
+impl RunAccounting {
+    fn new(k: usize) -> Self {
+        RunAccounting {
+            rounds: Vec::new(),
+            total: 0,
+            comp_total: 0,
+            comm_total: 0,
+            per_gpu_comp: vec![0; k],
+            per_gpu_wall_ns: vec![0; k],
+            threads: HashSet::new(),
+        }
+    }
+
+    fn record_round(&mut self, rec: DistRoundRecord) {
+        self.total += rec.comp_cycles + rec.comm_cycles;
+        self.comp_total += rec.comp_cycles;
+        self.comm_total += rec.comm_cycles;
+        self.rounds.push(rec);
+    }
+
+    fn finish(self, app: App, labels: Vec<f32>) -> DistRunResult {
+        DistRunResult {
+            app,
+            labels,
+            rounds: self.rounds,
+            total_cycles: self.total,
+            comp_cycles: self.comp_total,
+            comm_cycles: self.comm_total,
+            per_gpu_comp: self.per_gpu_comp,
+            per_gpu_wall_ns: self.per_gpu_wall_ns,
+            threads: self.threads,
+        }
     }
 }
 
@@ -124,6 +206,10 @@ struct LocalRound {
     lb: bool,
     /// Changed (local id, new value) pairs.
     changed: Vec<(u32, f32)>,
+    /// Host wall-clock spent in this round, nanoseconds.
+    wall_ns: u64,
+    /// OS thread the round ran on.
+    thread: ThreadId,
 }
 
 fn local_push_round(
@@ -134,6 +220,7 @@ fn local_push_round(
     cfg: &EngineConfig,
     pjrt: Option<&PjrtRuntime>,
 ) -> Result<LocalRound> {
+    let t0 = Instant::now();
     let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
     let n = part.num_vertices();
     let scan = cfg.worklist.scan_cost(n as u64, active.len() as u64);
@@ -161,6 +248,8 @@ fn local_push_round(
         edges: sched.total_edges(),
         lb: sched.lb.is_some(),
         changed,
+        wall_ns: t0.elapsed().as_nanos() as u64,
+        thread: std::thread::current().id(),
     })
 }
 
@@ -199,18 +288,16 @@ fn run_push_dist(
         })
         .collect();
 
-    let mut rounds = Vec::new();
-    let (mut total, mut comp_total, mut comm_total) = (0u64, 0u64, 0u64);
-    let mut per_gpu_comp = vec![0u64; k];
+    let mut acct = RunAccounting::new(k);
 
     for round in 0..cfg.max_rounds {
         let global_active: u64 = active.iter().map(|a| a.len() as u64).sum();
         if global_active == 0 {
             break;
         }
-        // --- parallel local compute ---
+        // --- local compute (one task per GPU; superstep join = barrier) ---
         let results: Vec<LocalRound> = if pjrt.is_some() {
-            // PJRT client is not Sync: partitions run sequentially.
+            // The PJRT client is not Sync: partitions run sequentially.
             let mut out = Vec::with_capacity(k);
             for (pi, part) in dg.parts.iter().enumerate() {
                 out.push(local_push_round(
@@ -219,30 +306,26 @@ fn run_push_dist(
             }
             out
         } else {
-            let mut out: Vec<Option<LocalRound>> = (0..k).map(|_| None).collect();
-            std::thread::scope(|s| {
-                for ((part, act, lab), slot) in dg
-                    .parts
-                    .iter()
-                    .zip(&active)
-                    .zip(labels.iter_mut())
-                    .map(|((p, a), l)| (p, a, l))
-                    .zip(out.iter_mut())
-                {
-                    s.spawn(move || {
-                        *slot = Some(
-                            local_push_round(app, &part.graph, act, lab, cfg, None)
-                                .expect("native round cannot fail"),
-                        );
-                    });
-                }
-            });
-            out.into_iter().map(|o| o.unwrap()).collect()
+            let tasks: Vec<_> = dg
+                .parts
+                .iter()
+                .zip(&active)
+                .zip(labels.iter_mut())
+                .map(|((part, act), lab)| {
+                    move || {
+                        local_push_round(app, &part.graph, act, lab, cfg, None)
+                            .expect("native round cannot fail")
+                    }
+                })
+                .collect();
+            comm::superstep(cluster.exec, tasks)
         };
 
         let comp = results.iter().map(|r| r.cycles).max().unwrap_or(0);
         for (pi, r) in results.iter().enumerate() {
-            per_gpu_comp[pi] += r.cycles;
+            acct.per_gpu_comp[pi] += r.cycles;
+            acct.per_gpu_wall_ns[pi] += r.wall_ns;
+            acct.threads.insert(r.thread);
         }
         let lb_gpus = results.iter().filter(|r| r.lb).count() as u32;
 
@@ -315,10 +398,7 @@ fn run_push_dist(
         active = next_active;
 
         let comm = cluster.net.round_cycles(&flows);
-        total += comp + comm;
-        comp_total += comp;
-        comm_total += comm;
-        rounds.push(DistRoundRecord {
+        acct.record_round(DistRoundRecord {
             round,
             active: global_active,
             comp_cycles: comp,
@@ -327,18 +407,95 @@ fn run_push_dist(
             lb_gpus,
         });
     }
-    Ok(DistRunResult {
-        app,
-        labels: master,
-        rounds,
-        total_cycles: total,
-        comp_cycles: comp_total,
-        comm_cycles: comm_total,
-        per_gpu_comp,
-    })
+    Ok(acct.finish(app, master))
 }
 
 // ---------------------------------------------------------------------- pr
+
+/// One partition's pagerank round output.
+struct PrLocal {
+    cycles: u64,
+    lb: bool,
+    wall_ns: u64,
+    thread: ThreadId,
+    /// (global id, partial rank mass pulled into it), in local-vertex order.
+    acc: Vec<(u32, f32)>,
+    /// Bytes of partial sums travelling to remote masters.
+    remote_bytes: u64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn local_pr_round(
+    pi: usize,
+    part: &Partition,
+    lg: &CsrGraph,
+    ranks: &[f32],
+    out_deg: &[u32],
+    owner: &[u32],
+    cfg: &EngineConfig,
+    pjrt: Option<&PjrtRuntime>,
+) -> Result<PrLocal> {
+    let t0 = Instant::now();
+    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+    let nl = lg.num_vertices();
+    let all: Vec<u32> = (0..nl as u32).collect();
+    let scan = cfg.worklist.scan_cost(nl as u64, nl as u64);
+    let sched = cfg.balancer.schedule(&all, lg, Direction::Pull, &cfg.spec, scan);
+    let simr = sim.simulate(&sched, false);
+
+    // Contributions of local src copies (kernel in Pjrt mode).
+    let src_ranks: Vec<f32> = part.l2g.iter().map(|&gid| ranks[gid as usize]).collect();
+    let src_degs: Vec<u32> = part.l2g.iter().map(|&gid| out_deg[gid as usize]).collect();
+    let contrib: Vec<f32> = match (cfg.compute, pjrt) {
+        (ComputeMode::Pjrt, Some(rt)) => {
+            let mut c = Vec::with_capacity(nl);
+            let tile = 16_384.min(nl.max(1));
+            for start in (0..nl).step_by(tile) {
+                let end = (start + tile).min(nl);
+                c.extend(rt.pr_pull(
+                    &src_ranks[start..end],
+                    &src_degs[start..end],
+                    pr::DAMPING,
+                )?);
+            }
+            c
+        }
+        _ => src_ranks
+            .iter()
+            .zip(&src_degs)
+            .map(|(&r, &d)| pr::DAMPING * r / d.max(1) as f32)
+            .collect(),
+    };
+    // Pull along local in-edges; emit per-dst partial sums in local order so
+    // the coordinator's merge (partition order, then local order) reproduces
+    // the sequential reference bit-for-bit.
+    let mut acc = Vec::new();
+    let mut remote_bytes = 0u64;
+    for lv in 0..nl as u32 {
+        let (srcs, _) = lg.in_edges(lv);
+        if srcs.is_empty() {
+            continue;
+        }
+        let mut sum = 0f32;
+        for &lu in srcs {
+            sum += contrib[lu as usize];
+        }
+        let gid = part.l2g[lv as usize];
+        acc.push((gid, sum));
+        // Partial sums on non-owner partitions travel to the master.
+        if owner[gid as usize] as usize != pi {
+            remote_bytes += BYTES_PER_UPDATE;
+        }
+    }
+    Ok(PrLocal {
+        cycles: simr.total_cycles,
+        lb: sched.lb.is_some(),
+        wall_ns: t0.elapsed().as_nanos() as u64,
+        thread: std::thread::current().id(),
+        acc,
+        remote_bytes,
+    })
+}
 
 fn run_pr_dist(
     g: &CsrGraph,
@@ -358,9 +515,7 @@ fn run_pr_dist(
     }
     let base = (1.0 - pr::DAMPING) / n as f32;
 
-    let mut rounds = Vec::new();
-    let (mut total, mut comp_total, mut comm_total) = (0u64, 0u64, 0u64);
-    let mut per_gpu_comp = vec![0u64; k];
+    let mut acct = RunAccounting::new(k);
 
     for round in 0..cfg.max_rounds {
         // Broadcast: every mirror refreshes its rank copy (topology-driven:
@@ -377,65 +532,50 @@ fn run_pr_dist(
             }
         }
 
-        // Local compute: per-partition contribution gather.
-        let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+        // Local compute: per-partition contribution gather, one GPU per
+        // thread; the superstep join barriers before the reduce below.
+        let locals: Vec<PrLocal> = if pjrt.is_some() {
+            let mut out = Vec::with_capacity(k);
+            for (pi, p) in dg.parts.iter().enumerate() {
+                out.push(local_pr_round(
+                    pi, p, &parts[pi], &ranks, &out_deg, &dg.owner, cfg, pjrt,
+                )?);
+            }
+            out
+        } else {
+            let (ranks_ref, out_deg_ref) = (&ranks, &out_deg);
+            let (owner_ref, parts_ref) = (&dg.owner, &parts);
+            let tasks: Vec<_> = dg
+                .parts
+                .iter()
+                .enumerate()
+                .map(|(pi, p)| {
+                    move || {
+                        local_pr_round(
+                            pi, p, &parts_ref[pi], ranks_ref, out_deg_ref,
+                            owner_ref, cfg, None,
+                        )
+                        .expect("native pr round cannot fail")
+                    }
+                })
+                .collect();
+            comm::superstep(cluster.exec, tasks)
+        };
+
+        // Reduce: fold partial sums in partition order (deterministic).
         let mut comp = 0u64;
         let mut lb_gpus = 0u32;
         let mut acc_global = vec![0f32; n];
-        for (pi, p) in dg.parts.iter().enumerate() {
-            let lg = &parts[pi];
-            let nl = lg.num_vertices();
-            let all: Vec<u32> = (0..nl as u32).collect();
-            let scan = cfg.worklist.scan_cost(nl as u64, nl as u64);
-            let sched = cfg.balancer.schedule(&all, lg, Direction::Pull, &cfg.spec, scan);
-            let simr = sim.simulate(&sched, false);
-            comp = comp.max(simr.total_cycles);
-            per_gpu_comp[pi] += simr.total_cycles;
-            lb_gpus += sched.lb.is_some() as u32;
-
-            // Contributions of local src copies (kernel in Pjrt mode).
-            let src_ranks: Vec<f32> =
-                p.l2g.iter().map(|&gid| ranks[gid as usize]).collect();
-            let src_degs: Vec<u32> =
-                p.l2g.iter().map(|&gid| out_deg[gid as usize]).collect();
-            let contrib: Vec<f32> = match (cfg.compute, pjrt) {
-                (ComputeMode::Pjrt, Some(rt)) => {
-                    let mut c = Vec::with_capacity(nl);
-                    let tile = 16_384.min(nl.max(1));
-                    for start in (0..nl).step_by(tile) {
-                        let end = (start + tile).min(nl);
-                        c.extend(rt.pr_pull(
-                            &src_ranks[start..end],
-                            &src_degs[start..end],
-                            pr::DAMPING,
-                        )?);
-                    }
-                    c
-                }
-                _ => src_ranks
-                    .iter()
-                    .zip(&src_degs)
-                    .map(|(&r, &d)| pr::DAMPING * r / d.max(1) as f32)
-                    .collect(),
-            };
-            // Pull along local in-edges; accumulate into the dst's global
-            // slot (reduce-add of the partial sums).
-            for lv in 0..nl as u32 {
-                let (srcs, _) = lg.in_edges(lv);
-                if srcs.is_empty() {
-                    continue;
-                }
-                let mut acc = 0f32;
-                for &lu in srcs {
-                    acc += contrib[lu as usize];
-                }
-                let gid = p.l2g[lv as usize];
-                acc_global[gid as usize] += acc;
-                // Partial sums on non-owner partitions travel to the master.
-                if dg.owner[gid as usize] as usize != pi {
-                    bytes += BYTES_PER_UPDATE;
-                }
+        for (pi, r) in locals.iter().enumerate() {
+            comp = comp.max(r.cycles);
+            acct.per_gpu_comp[pi] += r.cycles;
+            acct.per_gpu_wall_ns[pi] += r.wall_ns;
+            acct.threads.insert(r.thread);
+            lb_gpus += r.lb as u32;
+            for &(gid, sum) in &r.acc {
+                acc_global[gid as usize] += sum;
             }
+            bytes += r.remote_bytes;
         }
         // The reduce traffic: approximate per-partition aggregate flow.
         if k > 1 {
@@ -450,10 +590,7 @@ fn run_pr_dist(
         }
 
         let comm = cluster.net.round_cycles(&flows);
-        total += comp + comm;
-        comp_total += comp;
-        comm_total += comm;
-        rounds.push(DistRoundRecord {
+        acct.record_round(DistRoundRecord {
             round,
             active: n as u64,
             comp_cycles: comp,
@@ -465,18 +602,76 @@ fn run_pr_dist(
             break;
         }
     }
-    Ok(DistRunResult {
-        app: App::Pr,
-        labels: ranks,
-        rounds,
-        total_cycles: total,
-        comp_cycles: comp_total,
-        comm_cycles: comm_total,
-        per_gpu_comp,
-    })
+    Ok(acct.finish(App::Pr, ranks))
 }
 
 // ------------------------------------------------------------------- kcore
+
+/// One partition's k-core round output.
+struct KcoreLocal {
+    cycles: u64,
+    lb: bool,
+    wall_ns: u64,
+    thread: ThreadId,
+    /// Global ids losing one in-degree (repeats = multiple dying preds).
+    hits: Vec<u32>,
+    remote_bytes: u64,
+}
+
+fn local_kcore_round(
+    pi: usize,
+    part: &Partition,
+    dying: &[u32],
+    g2l: &std::collections::HashMap<u32, u32>,
+    alive: &[bool],
+    owner: &[u32],
+    cfg: &EngineConfig,
+) -> KcoreLocal {
+    let t0 = Instant::now();
+    let thread = std::thread::current().id();
+    let lg = &part.graph;
+    let local_dying: Vec<u32> =
+        dying.iter().filter_map(|&gv| g2l.get(&gv).copied()).collect();
+    if local_dying.is_empty() {
+        return KcoreLocal {
+            cycles: 0,
+            lb: false,
+            wall_ns: t0.elapsed().as_nanos() as u64,
+            thread,
+            hits: Vec::new(),
+            remote_bytes: 0,
+        };
+    }
+    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+    let scan = cfg
+        .worklist
+        .scan_cost(lg.num_vertices() as u64, local_dying.len() as u64);
+    let sched = cfg.balancer.schedule(&local_dying, lg, Direction::Push, &cfg.spec, scan);
+    let simr = sim.simulate(&sched, true);
+
+    let mut hits = Vec::new();
+    let mut remote_bytes = 0u64;
+    for &lv in &local_dying {
+        let (dsts, _) = lg.out_edges(lv);
+        for &lu in dsts {
+            let gid = part.l2g[lu as usize];
+            if alive[gid as usize] {
+                hits.push(gid);
+                if owner[gid as usize] as usize != pi {
+                    remote_bytes += BYTES_PER_UPDATE;
+                }
+            }
+        }
+    }
+    KcoreLocal {
+        cycles: simr.total_cycles,
+        lb: sched.lb.is_some(),
+        wall_ns: t0.elapsed().as_nanos() as u64,
+        thread,
+        hits,
+        remote_bytes,
+    }
+}
 
 fn run_kcore_dist(
     g: &CsrGraph,
@@ -491,8 +686,6 @@ fn run_kcore_dist(
     g2.build_csc();
     let mut deg: Vec<u32> = (0..n as u32).map(|v| g2.in_degree(v) as u32).collect();
     let mut alive = vec![true; n];
-    let parts: Vec<CsrGraph> = dg.parts.iter().map(|p| p.graph.clone()).collect();
-    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
 
     let mut dying: Vec<u32> =
         (0..n as u32).filter(|&v| (deg[v as usize]) < k).collect();
@@ -500,53 +693,47 @@ fn run_kcore_dist(
         alive[v as usize] = false;
     }
 
-    let mut rounds = Vec::new();
-    let (mut total, mut comp_total, mut comm_total) = (0u64, 0u64, 0u64);
-    let mut per_gpu_comp = vec![0u64; k_parts];
+    let mut acct = RunAccounting::new(k_parts);
     let mut round = 0u32;
 
     while !dying.is_empty() && round < cfg.max_rounds {
-        // Per-partition: local copies of dying vertices drive in-edge scans.
+        // Per-partition: local copies of dying vertices drive out-edge
+        // decrement scans — one GPU per thread, barrier at the join.
+        let locals: Vec<KcoreLocal> = {
+            let (dying_ref, alive_ref, owner_ref) = (&dying, &alive, &dg.owner);
+            let tasks: Vec<_> = dg
+                .parts
+                .iter()
+                .enumerate()
+                .map(|(pi, p)| {
+                    let g2l = &dg.g2l[pi];
+                    move || {
+                        local_kcore_round(
+                            pi, p, dying_ref, g2l, alive_ref, owner_ref, cfg,
+                        )
+                    }
+                })
+                .collect();
+            comm::superstep(cluster.exec, tasks)
+        };
+
         let mut comp = 0u64;
         let mut lb_gpus = 0u32;
         let mut decr = vec![0u32; n];
         let mut bytes = 0u64;
         let mut flows: Vec<(u32, u32, u64)> = Vec::new();
-        for (pi, _p) in dg.parts.iter().enumerate() {
-            let lg = &parts[pi];
-            let local_dying: Vec<u32> = dying
-                .iter()
-                .filter_map(|&gv| dg.g2l[pi].get(&gv).copied())
-                .collect();
-            if local_dying.is_empty() {
-                continue;
+        for (pi, r) in locals.iter().enumerate() {
+            comp = comp.max(r.cycles);
+            acct.per_gpu_comp[pi] += r.cycles;
+            acct.per_gpu_wall_ns[pi] += r.wall_ns;
+            acct.threads.insert(r.thread);
+            lb_gpus += r.lb as u32;
+            for &gid in &r.hits {
+                decr[gid as usize] += 1;
             }
-            let scan = cfg
-                .worklist
-                .scan_cost(lg.num_vertices() as u64, local_dying.len() as u64);
-            let sched =
-                cfg.balancer.schedule(&local_dying, lg, Direction::Push, &cfg.spec, scan);
-            let simr = sim.simulate(&sched, true);
-            comp = comp.max(simr.total_cycles);
-            per_gpu_comp[pi] += simr.total_cycles;
-            lb_gpus += sched.lb.is_some() as u32;
-
-            let mut remote = 0u64;
-            for &lv in &local_dying {
-                let (dsts, _) = lg.out_edges(lv);
-                for &lu in dsts {
-                    let gid = dg.parts[pi].l2g[lu as usize];
-                    if alive[gid as usize] {
-                        decr[gid as usize] += 1;
-                        if dg.owner[gid as usize] as usize != pi {
-                            remote += BYTES_PER_UPDATE;
-                        }
-                    }
-                }
-            }
-            if remote > 0 {
-                flows.push((pi as u32, ((pi + 1) % k_parts) as u32, remote));
-                bytes += remote;
+            if r.remote_bytes > 0 {
+                flows.push((pi as u32, ((pi + 1) % k_parts) as u32, r.remote_bytes));
+                bytes += r.remote_bytes;
             }
         }
 
@@ -561,10 +748,7 @@ fn run_kcore_dist(
             }
         }
         let comm = cluster.net.round_cycles(&flows);
-        total += comp + comm;
-        comp_total += comp;
-        comm_total += comm;
-        rounds.push(DistRoundRecord {
+        acct.record_round(DistRoundRecord {
             round,
             active: dying.len() as u64,
             comp_cycles: comp,
@@ -576,15 +760,7 @@ fn run_kcore_dist(
         round += 1;
     }
     let labels = alive.iter().map(|&a| if a { 1.0 } else { 0.0 }).collect();
-    Ok(DistRunResult {
-        app: App::Kcore,
-        labels,
-        rounds,
-        total_cycles: total,
-        comp_cycles: comp_total,
-        comm_cycles: comm_total,
-        per_gpu_comp,
-    })
+    Ok(acct.finish(App::Kcore, labels))
 }
 
 #[cfg(test)]
@@ -609,9 +785,8 @@ mod tests {
         for policy in [Policy::Oec, Policy::Iec, Policy::Cvc] {
             for k in [1u32, 2, 4] {
                 let cluster = ClusterConfig {
-                    num_gpus: k,
                     policy,
-                    net: NetworkModel::single_host(),
+                    ..ClusterConfig::single_host(k)
                 };
                 let r = run_distributed(App::Bfs, &g, src, &cfg(), &cluster, None)
                     .unwrap();
@@ -773,5 +948,45 @@ mod tests {
         assert_eq!(r.total_cycles, r.comp_cycles + r.comm_cycles);
         let sum: u64 = r.rounds.iter().map(|x| x.comp_cycles + x.comm_cycles).sum();
         assert_eq!(r.total_cycles, sum);
+    }
+
+    #[test]
+    fn parallel_rounds_run_on_multiple_os_threads() {
+        // Acceptance gate: >= 2 distinct worker threads execute partition
+        // rounds, and none of them is the coordinating thread.
+        let g = test_graph(9, 31);
+        let src = g.max_out_degree_vertex();
+        let r = run_distributed(
+            App::Bfs, &g, src, &cfg(), &ClusterConfig::single_host(4), None,
+        )
+        .unwrap();
+        assert!(
+            r.num_threads() >= 2,
+            "expected >= 2 OS threads, saw {}",
+            r.num_threads()
+        );
+        assert!(!r.threads.contains(&std::thread::current().id()));
+    }
+
+    #[test]
+    fn sequential_mode_stays_on_one_thread() {
+        let g = test_graph(8, 32);
+        let src = g.max_out_degree_vertex();
+        let cluster = ClusterConfig::single_host(4).with_exec(ExecMode::Sequential);
+        let r = run_distributed(App::Bfs, &g, src, &cfg(), &cluster, None).unwrap();
+        assert_eq!(r.num_threads(), 1);
+        assert!(r.threads.contains(&std::thread::current().id()));
+    }
+
+    #[test]
+    fn wall_clock_recorded_per_gpu() {
+        let g = test_graph(9, 33);
+        let src = g.max_out_degree_vertex();
+        let r = run_distributed(
+            App::Bfs, &g, src, &cfg(), &ClusterConfig::single_host(4), None,
+        )
+        .unwrap();
+        assert_eq!(r.per_gpu_wall_ns.len(), 4);
+        assert!(r.per_gpu_wall_ns.iter().sum::<u64>() > 0);
     }
 }

@@ -62,11 +62,23 @@ pub struct RoundSim {
 }
 
 /// Executes schedules against a fixed GPU + cost model.
+///
+/// Holds only owned, immutable configuration, so it is `Send + Sync`: the
+/// multi-GPU coordinator runs one simulation per partition on its own OS
+/// thread every round (`comm::bsp::superstep`). The compile-time assertion
+/// below keeps that property from regressing silently.
 #[derive(Debug, Clone)]
 pub struct Simulator {
     pub spec: GpuSpec,
     pub cost: CostModel,
 }
+
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Simulator>();
+    assert_send_sync::<KernelStats>();
+    assert_send_sync::<RoundSim>();
+};
 
 impl Simulator {
     pub fn new(spec: GpuSpec, cost: CostModel) -> Self {

@@ -17,14 +17,23 @@
 //!   edge, TWC, Gunrock-style static LB) plus ALB itself;
 //! * [`apps`] — bfs, sssp, cc, pagerank, k-core with the round engine;
 //! * [`partition`] — CuSP-like OEC / IEC / CVC partitioning;
-//! * [`comm`] — Gluon-like BSP reduce/broadcast with a network cost model;
-//! * [`coordinator`] — the multi-GPU (and multi-host) driver;
+//! * [`comm`] — Gluon-like BSP reduce/broadcast with a network cost model,
+//!   plus the superstep executor ([`comm::bsp`]) that forks one OS thread
+//!   per simulated GPU and barriers before each sync phase;
+//! * [`coordinator`] — the multi-GPU (and multi-host) driver: parallel per
+//!   round, bit-identical to its sequential reference mode;
 //! * [`runtime`] — the PJRT client that loads the AOT-compiled JAX/Pallas
-//!   kernels (`artifacts/*.hlo.txt`) onto the request path;
+//!   kernels (`artifacts/*.hlo.txt`) onto the request path (behind the
+//!   `xla` cargo feature; an API-identical stub is built otherwise);
 //! * [`metrics`], [`config`] — reporting and run configuration.
 //!
-//! See `DESIGN.md` for the paper → module map and `EXPERIMENTS.md` for the
-//! reproduced tables and figures.
+//! The crate builds from the repository-root `Cargo.toml` (library and
+//! `alb` binary here under `rust/`, benches under `benches/`, examples
+//! under `examples/`, with the offline `anyhow` shim in `vendor/`).
+//!
+//! See `DESIGN.md` (repository root) for the paper → module map and
+//! build/run instructions, and `EXPERIMENTS.md` for how every table and
+//! figure is regenerated and recorded.
 
 pub mod apps;
 pub mod comm;

@@ -8,6 +8,7 @@
 //! alb run    --app <bfs|sssp|cc|pr|kcore> --input <name|file.albg>
 //!            [--framework <dirgl-twc|dirgl-alb|gunrock-twc|gunrock-lb|lux>]
 //!            [--gpus K] [--policy <oec|iec|cvc>] [--engine <native|pjrt>]
+//!            [--exec <parallel|sequential>]
 //!            [--gpu-spec <sim-default|k80-like|gtx1080-like|p100-like>]
 //!            [--distribution <cyclic|blocked>] [--threshold T]
 //!            [--balancer <vertex|twc|edge-lb|alb|enterprise>]
@@ -30,7 +31,7 @@ use alb_graph::apps::engine::{self, ComputeMode, EngineConfig};
 use alb_graph::apps::App;
 use alb_graph::comm::NetworkModel;
 use alb_graph::config::Framework;
-use alb_graph::coordinator::{run_distributed, ClusterConfig};
+use alb_graph::coordinator::{run_distributed, ClusterConfig, ExecMode};
 use alb_graph::gpu::GpuSpec;
 use alb_graph::graph::{inputs, io, props, CsrGraph};
 use alb_graph::lb::{Balancer, Distribution};
@@ -161,6 +162,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     let policy = Policy::parse(&args.get_or("policy", "cvc"))
         .ok_or_else(|| anyhow!("unknown --policy"))?;
     let gpus_per_host = args.get_u64("gpus-per-host", u32::MAX as u64)? as u32;
+    let exec = ExecMode::parse(&args.get_or("exec", "parallel"))
+        .ok_or_else(|| anyhow!("--exec parallel|sequential"))?;
 
     let mut cfg: EngineConfig = fw.engine_config(spec.clone());
     if let Some(d) = args.get("distribution") {
@@ -250,6 +253,9 @@ fn cmd_run(args: &Args) -> Result<()> {
             .set("edges", r.total_edges())
             .set("lb_rounds", r.rounds_with_lb());
     } else {
+        // The PJRT client is not Sync: the coordinator runs partitions
+        // sequentially whenever a runtime is attached, whatever --exec says.
+        let effective_exec = if pjrt.is_some() { ExecMode::Sequential } else { exec };
         let cluster = ClusterConfig {
             num_gpus: gpus,
             policy,
@@ -258,27 +264,38 @@ fn cmd_run(args: &Args) -> Result<()> {
             } else {
                 NetworkModel::cluster(gpus_per_host)
             },
+            exec: effective_exec,
         };
         let r = run_distributed(app, &g, src, &cfg, &cluster, pjrt)?;
         println!(
-            "{} on {} [{}] x{} GPUs ({}): {:.1} simulated ms (comp {:.1} + comm {:.1}), {} rounds ({} host ms)",
+            "{} on {} [{}] x{} GPUs ({}, {} exec on {} threads): {:.1} simulated ms (comp {:.1} + comm {:.1}), {} rounds ({} host ms)",
             app.name(),
             input,
             fw.name(),
             gpus,
             policy.name(),
+            effective_exec.name(),
+            r.num_threads(),
             r.ms(&spec),
             r.comp_ms(&spec),
             r.comm_ms(&spec),
             r.rounds.len(),
             started.elapsed().as_millis(),
         );
+        let wall_ms: Vec<Json> = r
+            .per_gpu_wall_ns
+            .iter()
+            .map(|&ns| Json::Num(ns as f64 / 1e6))
+            .collect();
         report = report
             .set("simulated_ms", r.ms(&spec))
             .set("comp_ms", r.comp_ms(&spec))
             .set("comm_ms", r.comm_ms(&spec))
             .set("rounds", r.rounds.len())
-            .set("policy", policy.name());
+            .set("policy", policy.name())
+            .set("exec", effective_exec.name())
+            .set("os_threads", r.num_threads())
+            .set("per_gpu_wall_ms", Json::Arr(wall_ms));
     }
 
     if let Some(path) = args.get("json") {

@@ -25,6 +25,31 @@ pub fn imbalance(block_edges: &[u64]) -> Imbalance {
     Imbalance { max, mean, factor }
 }
 
+/// One simulated GPU's utilisation: modeled cycles next to the host
+/// wall-clock its rounds actually took (the coordinator records both).
+#[derive(Debug, Clone)]
+pub struct GpuLoad {
+    pub gpu: usize,
+    pub comp_cycles: u64,
+    pub wall_ns: u64,
+}
+
+impl GpuLoad {
+    pub fn wall_ms(&self) -> f64 {
+        self.wall_ns as f64 / 1e6
+    }
+}
+
+/// Zip the coordinator's per-GPU modeled cycles with measured wall-clock.
+pub fn gpu_loads(comp_cycles: &[u64], wall_ns: &[u64]) -> Vec<GpuLoad> {
+    comp_cycles
+        .iter()
+        .zip(wall_ns)
+        .enumerate()
+        .map(|(gpu, (&comp_cycles, &wall_ns))| GpuLoad { gpu, comp_cycles, wall_ns })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -48,5 +73,14 @@ mod tests {
         let i = imbalance(&[]);
         assert_eq!(i.max, 0);
         assert!((i.factor - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gpu_loads_zip_by_index() {
+        let loads = gpu_loads(&[10, 20], &[1_000_000, 2_500_000]);
+        assert_eq!(loads.len(), 2);
+        assert_eq!(loads[1].gpu, 1);
+        assert_eq!(loads[1].comp_cycles, 20);
+        assert!((loads[1].wall_ms() - 2.5).abs() < 1e-12);
     }
 }

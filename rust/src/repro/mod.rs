@@ -10,7 +10,6 @@ use anyhow::Result;
 
 use crate::apps::engine::{self, EngineConfig};
 use crate::apps::App;
-use crate::comm::NetworkModel;
 use crate::config::{Framework, TABLE2_FRAMEWORKS};
 use crate::coordinator::{run_distributed, ClusterConfig};
 use crate::gpu::GpuSpec;
@@ -358,9 +357,8 @@ pub fn fig9(rc: &ReproConfig, apps: &[App]) -> Result<Table> {
         for &app in apps {
             for policy in [Policy::Iec, Policy::Oec] {
                 let cluster = ClusterConfig {
-                    num_gpus: 4,
                     policy,
-                    net: NetworkModel::single_host(),
+                    ..ClusterConfig::single_host(4)
                 };
                 let twc = run_dist_cell(rc, input, app, Framework::DIrglTwc, &cluster)?
                     .ms(&rc.spec);

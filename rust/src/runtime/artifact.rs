@@ -32,6 +32,19 @@ pub struct Artifact {
     pub path: PathBuf,
 }
 
+/// Stable cache key for a compiled kernel variant (the runtime's executable
+/// map is keyed by this).
+pub fn kernel_key(kind: &ArtifactKind) -> String {
+    match kind {
+        ArtifactKind::EdgeRelax { h, b } => format!("edge_relax_{h}_{b}"),
+        ArtifactKind::RelaxMerge { h, b, s } => format!("relax_merge_{h}_{b}_{s}"),
+        ArtifactKind::PrefixSum { h } => format!("prefix_sum_{h}"),
+        ArtifactKind::PrPull { n } => format!("pr_pull_{n}"),
+        ArtifactKind::Kcore { n } => format!("kcore_{n}"),
+        ArtifactKind::Binning { n } => format!("binning_{n}"),
+    }
+}
+
 /// Parse one artifact file name; `None` for unrelated files.
 pub fn parse_name(name: &str) -> Option<ArtifactKind> {
     let stem = name.strip_suffix(".hlo.txt")?;
@@ -114,6 +127,15 @@ mod tests {
         assert_eq!(parse_name("pr_pull_n4096.hlo.txt"), Some(ArtifactKind::PrPull { n: 4096 }));
         assert_eq!(parse_name("kcore_n16384.hlo.txt"), Some(ArtifactKind::Kcore { n: 16384 }));
         assert_eq!(parse_name("binning_n4096.hlo.txt"), Some(ArtifactKind::Binning { n: 4096 }));
+    }
+
+    #[test]
+    fn kernel_key_is_stable() {
+        assert_eq!(
+            kernel_key(&ArtifactKind::EdgeRelax { h: 256, b: 2048 }),
+            "edge_relax_256_2048"
+        );
+        assert_eq!(kernel_key(&ArtifactKind::PrefixSum { h: 1024 }), "prefix_sum_1024");
     }
 
     #[test]

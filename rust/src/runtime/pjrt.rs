@@ -1,0 +1,279 @@
+//! The real PJRT-backed runtime (requires the `xla` feature **and** the
+//! unvendored `xla` bindings crate added to `[dependencies]`).
+//!
+//! HLO *text* (not serialized protos — see `python/compile/aot.py`) is parsed
+//! by `HloModuleProto::from_text_file`, compiled once per variant on the PJRT
+//! CPU client, and cached. The engine calls [`PjrtRuntime::edge_relax`] with
+//! whatever batch it has; the runtime pads to the smallest compiled variant.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::{discover, kernel_key, ArtifactKind};
+use super::INF;
+
+/// Compiled kernel cache keyed by variant.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// (H, B) variants available for `edge_relax`, ascending.
+    relax_variants: Vec<(usize, usize)>,
+    /// H variants for `prefix_sum`, ascending.
+    prefix_variants: Vec<usize>,
+    /// N variants for `pr_pull` / `kcore`, ascending.
+    vertex_variants: Vec<usize>,
+}
+
+impl PjrtRuntime {
+    /// Load and compile every artifact in `dir` on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let mut execs = HashMap::new();
+        let mut relax_variants = Vec::new();
+        let mut prefix_variants = Vec::new();
+        let mut vertex_variants = Vec::new();
+        for art in discover(dir).with_context(|| format!("scan {dir:?}"))? {
+            let proto = xla::HloModuleProto::from_text_file(
+                art.path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {:?}: {e:?}", art.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {:?}: {e:?}", art.path))?;
+            match art.kind {
+                ArtifactKind::EdgeRelax { h, b } => relax_variants.push((h, b)),
+                ArtifactKind::PrefixSum { h } => prefix_variants.push(h),
+                ArtifactKind::PrPull { n } => vertex_variants.push(n),
+                _ => {}
+            }
+            execs.insert(kernel_key(&art.kind), exe);
+        }
+        if execs.is_empty() {
+            return Err(anyhow!("no artifacts in {dir:?}; run `make artifacts`"));
+        }
+        relax_variants.sort_unstable();
+        prefix_variants.sort_unstable();
+        vertex_variants.sort_unstable();
+        Ok(PjrtRuntime { client, execs, relax_variants, prefix_variants, vertex_variants })
+    }
+
+    /// Default artifact location relative to the crate root.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn num_kernels(&self) -> usize {
+        self.execs.len()
+    }
+
+    fn exec(&self, k: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.execs.get(k).ok_or_else(|| anyhow!("kernel {k} not loaded"))
+    }
+
+    /// Pick the smallest (H, B) relax variant fitting `h` huge vertices.
+    fn pick_relax(&self, h: usize) -> Option<(usize, usize)> {
+        self.relax_variants.iter().copied().find(|&(vh, _)| vh >= h)
+    }
+
+    /// Largest compiled huge-table size (callers split bigger tables).
+    pub fn max_relax_h(&self) -> usize {
+        self.relax_variants.iter().map(|&(h, _)| h).max().unwrap_or(0)
+    }
+
+    /// Run the LB-kernel relaxation over a batch of huge-vertex edges.
+    ///
+    /// * `prefix`: inclusive prefix sums of the huge vertices' degrees.
+    /// * `src_dist`: current labels of the huge vertices.
+    /// * `edge_ids`: edge ids in `[0, prefix.last())`, any schedule order.
+    /// * `weights`: per-edge relax weight.
+    ///
+    /// Returns `(src_idx, candidate)` per edge, exactly
+    /// `python/compile/kernels/ref.py::edge_relax`.
+    pub fn edge_relax(
+        &self,
+        prefix: &[u32],
+        src_dist: &[f32],
+        edge_ids: &[u32],
+        weights: &[f32],
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        assert_eq!(prefix.len(), src_dist.len());
+        assert_eq!(edge_ids.len(), weights.len());
+        let (h, b) = self
+            .pick_relax(prefix.len())
+            .ok_or_else(|| anyhow!("huge table {} exceeds compiled variants", prefix.len()))?;
+        let exe = self.exec(&kernel_key(&ArtifactKind::EdgeRelax { h, b }))?;
+
+        // Pad the huge table: padded prefix entries repeat the total so the
+        // searchsorted rank of any real edge id is unchanged.
+        let total = prefix.last().copied().unwrap_or(0);
+        let mut p = vec![0i32; h];
+        let mut d = vec![0f32; h];
+        for i in 0..h {
+            p[i] = if i < prefix.len() { prefix[i] as i32 } else { total as i32 };
+            d[i] = if i < src_dist.len() { src_dist[i] } else { INF };
+        }
+        let p_lit = xla::Literal::vec1(&p);
+        let d_lit = xla::Literal::vec1(&d);
+
+        let mut src_out = Vec::with_capacity(edge_ids.len());
+        let mut cand_out = Vec::with_capacity(edge_ids.len());
+        for chunk_start in (0..edge_ids.len()).step_by(b) {
+            let chunk = &edge_ids[chunk_start..(chunk_start + b).min(edge_ids.len())];
+            let wchunk = &weights[chunk_start..chunk_start + chunk.len()];
+            let mut eids = vec![0i32; b];
+            let mut ws = vec![0f32; b];
+            let mut valid = vec![0i32; b];
+            for (i, (&e, &w)) in chunk.iter().zip(wchunk).enumerate() {
+                eids[i] = e as i32;
+                ws[i] = w;
+                valid[i] = 1;
+            }
+            let args = [
+                p_lit.clone(),
+                d_lit.clone(),
+                xla::Literal::vec1(&eids),
+                xla::Literal::vec1(&ws),
+                xla::Literal::vec1(&valid),
+            ];
+            let result = exe
+                .execute::<xla::Literal>(&args)
+                .map_err(|e| anyhow!("execute edge_relax: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch: {e:?}"))?;
+            let (src, cand) =
+                result.to_tuple2().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            let src: Vec<i32> = src.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            let cand: Vec<f32> = cand.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            src_out.extend_from_slice(&src[..chunk.len()]);
+            cand_out.extend_from_slice(&cand[..chunk.len()]);
+        }
+        Ok((src_out, cand_out))
+    }
+
+    /// Inclusive prefix sum (the inspector's scan) via the Pallas kernel.
+    pub fn prefix_sum(&self, degrees: &[u32]) -> Result<Vec<u64>> {
+        let h = self
+            .prefix_variants
+            .iter()
+            .copied()
+            .find(|&vh| vh >= degrees.len())
+            .ok_or_else(|| anyhow!("scan length {} exceeds variants", degrees.len()))?;
+        let exe = self.exec(&kernel_key(&ArtifactKind::PrefixSum { h }))?;
+        let mut x = vec![0i32; h];
+        for (i, &d) in degrees.iter().enumerate() {
+            x[i] = d as i32;
+        }
+        let result = exe
+            .execute::<xla::Literal>(&[xla::Literal::vec1(&x)])
+            .map_err(|e| anyhow!("execute prefix_sum: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let out: Vec<i32> = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?
+            .to_vec()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        Ok(out[..degrees.len()].iter().map(|&v| v as u64).collect())
+    }
+
+    /// Pull-pagerank per-vertex contributions via the Pallas kernel.
+    pub fn pr_pull(&self, ranks: &[f32], out_degree: &[u32], damping: f32) -> Result<Vec<f32>> {
+        assert_eq!(ranks.len(), out_degree.len());
+        let n = self
+            .vertex_variants
+            .iter()
+            .copied()
+            .find(|&vn| vn >= ranks.len())
+            .ok_or_else(|| anyhow!("tile {} exceeds variants", ranks.len()))?;
+        let exe = self.exec(&kernel_key(&ArtifactKind::PrPull { n }))?;
+        let mut r = vec![0f32; n];
+        let mut d = vec![0i32; n];
+        r[..ranks.len()].copy_from_slice(ranks);
+        for (i, &x) in out_degree.iter().enumerate() {
+            d[i] = x as i32;
+        }
+        let result = exe
+            .execute::<xla::Literal>(&[
+                xla::Literal::vec1(&r),
+                xla::Literal::vec1(&d),
+                xla::Literal::vec1(&[damping]),
+            ])
+            .map_err(|e| anyhow!("execute pr_pull: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let out: Vec<f32> = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?
+            .to_vec()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        Ok(out[..ranks.len()].to_vec())
+    }
+
+    /// Inspector bin assignment via the Pallas kernel: degrees ->
+    /// 0 (thread) / 1 (warp) / 2 (CTA) / 3 (huge), given the
+    /// (warp, block, huge) cutoffs.
+    pub fn twc_bin(&self, degrees: &[u32], cuts: [u32; 3]) -> Result<Vec<i32>> {
+        let n = self
+            .vertex_variants
+            .iter()
+            .copied()
+            .find(|&vn| vn >= degrees.len())
+            .ok_or_else(|| anyhow!("tile {} exceeds variants", degrees.len()))?;
+        let exe = self.exec(&kernel_key(&ArtifactKind::Binning { n }))?;
+        let mut d = vec![0i32; n];
+        for (i, &x) in degrees.iter().enumerate() {
+            d[i] = x as i32;
+        }
+        let c = [cuts[0] as i32, cuts[1] as i32, cuts[2] as i32];
+        let result = exe
+            .execute::<xla::Literal>(&[
+                xla::Literal::vec1(&d),
+                xla::Literal::vec1(&c),
+            ])
+            .map_err(|e| anyhow!("execute binning: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let out: Vec<i32> = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?
+            .to_vec()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        Ok(out[..degrees.len()].to_vec())
+    }
+
+    /// One k-core filter step via the Pallas kernel.
+    pub fn kcore_alive(&self, cur_degree: &[u32], k: u32) -> Result<Vec<bool>> {
+        let n = self
+            .vertex_variants
+            .iter()
+            .copied()
+            .find(|&vn| vn >= cur_degree.len())
+            .ok_or_else(|| anyhow!("tile {} exceeds variants", cur_degree.len()))?;
+        let exe = self.exec(&kernel_key(&ArtifactKind::Kcore { n }))?;
+        let mut d = vec![0i32; n];
+        for (i, &x) in cur_degree.iter().enumerate() {
+            d[i] = x as i32;
+        }
+        let result = exe
+            .execute::<xla::Literal>(&[
+                xla::Literal::vec1(&d),
+                xla::Literal::vec1(&[k as i32]),
+            ])
+            .map_err(|e| anyhow!("execute kcore: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let out: Vec<i32> = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?
+            .to_vec()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        Ok(out[..cur_degree.len()].iter().map(|&v| v != 0).collect())
+    }
+}

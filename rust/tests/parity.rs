@@ -1,0 +1,132 @@
+//! Parity gates.
+//!
+//! 1. **Load-balancer parity**: vertex, edge, TWC, and ALB schedules are
+//!    *performance* strategies — they must never change answers. BFS and
+//!    SSSP labels must be identical across all of them on every bundled
+//!    input preset.
+//! 2. **Coordinator determinism**: the parallel multi-GPU coordinator must
+//!    be bit-identical to the single-threaded sequential reference — same
+//!    labels, same modeled cycles, same per-round records — while actually
+//!    using multiple OS threads.
+
+use alb_graph::apps::engine::{run, EngineConfig};
+use alb_graph::apps::App;
+use alb_graph::coordinator::{run_distributed, ClusterConfig, ExecMode};
+use alb_graph::graph::inputs;
+use alb_graph::lb::{Balancer, Distribution};
+
+const DELTA: i32 = -4; // small but non-trivial inputs for CI
+
+fn parity_balancers() -> Vec<Balancer> {
+    vec![
+        Balancer::Vertex,
+        Balancer::EdgeLb { distribution: Distribution::Cyclic },
+        Balancer::Twc,
+        Balancer::Alb { distribution: Distribution::Cyclic, threshold: None },
+    ]
+}
+
+#[test]
+fn vertex_edge_twc_alb_agree_on_every_input() {
+    for input in inputs::ALL_INPUTS {
+        let g0 = inputs::build(input, DELTA, 13).unwrap();
+        let src = inputs::source_vertex(input, &g0);
+        for app in [App::Bfs, App::Sssp] {
+            let mut reference: Option<Vec<f32>> = None;
+            for balancer in parity_balancers() {
+                let name = balancer.name();
+                let cfg = EngineConfig {
+                    balancer,
+                    max_rounds: 1_000_000,
+                    ..EngineConfig::default()
+                };
+                let r = run(app, &mut g0.clone(), src, &cfg, None).unwrap();
+                if reference.is_none() {
+                    reference = Some(r.labels);
+                } else {
+                    let want = reference.as_ref().unwrap();
+                    assert_eq!(
+                        &r.labels, want,
+                        "{} labels diverge under {name} on {input}",
+                        app.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_coordinator_bit_identical_to_sequential_reference() {
+    let input = "rmat18";
+    let g = inputs::build(input, DELTA, 17).unwrap();
+    let src = inputs::source_vertex(input, &g);
+    for app in [App::Bfs, App::Sssp, App::Cc, App::Pr, App::Kcore] {
+        let cfg = EngineConfig {
+            max_rounds: if app == App::Pr { 100 } else { 1_000_000 },
+            ..EngineConfig::default()
+        };
+        for k in [2u32, 4] {
+            let par = run_distributed(
+                app,
+                &g,
+                src,
+                &cfg,
+                &ClusterConfig::single_host(k),
+                None,
+            )
+            .unwrap();
+            let seq = run_distributed(
+                app,
+                &g,
+                src,
+                &cfg,
+                &ClusterConfig::single_host(k).with_exec(ExecMode::Sequential),
+                None,
+            )
+            .unwrap();
+            // Bit-exact labels — even pagerank's f32 sums, because the
+            // parallel reduce folds partials in partition order.
+            assert_eq!(par.labels, seq.labels, "{} k={k} labels", app.name());
+            assert_eq!(
+                par.total_cycles,
+                seq.total_cycles,
+                "{} k={k} cycles",
+                app.name()
+            );
+            assert_eq!(par.rounds, seq.rounds, "{} k={k} round records", app.name());
+            assert_eq!(par.per_gpu_comp, seq.per_gpu_comp, "{} k={k}", app.name());
+        }
+    }
+}
+
+#[test]
+fn parallel_coordinator_actually_uses_threads() {
+    let g = inputs::build("rmat18", DELTA, 19).unwrap();
+    let src = inputs::source_vertex("rmat18", &g);
+    let cfg = EngineConfig { max_rounds: 1_000_000, ..EngineConfig::default() };
+    let par = run_distributed(
+        App::Bfs,
+        &g,
+        src,
+        &cfg,
+        &ClusterConfig::single_host(4),
+        None,
+    )
+    .unwrap();
+    assert!(
+        par.num_threads() >= 2,
+        "parallel mode must fan out to >= 2 OS threads, saw {}",
+        par.num_threads()
+    );
+    let seq = run_distributed(
+        App::Bfs,
+        &g,
+        src,
+        &cfg,
+        &ClusterConfig::single_host(4).with_exec(ExecMode::Sequential),
+        None,
+    )
+    .unwrap();
+    assert_eq!(seq.num_threads(), 1, "sequential reference must stay inline");
+}

@@ -185,9 +185,8 @@ fn prop_bfs_converges_to_oracle_everywhere() {
         let policy = [Policy::Oec, Policy::Iec, Policy::Cvc]
             [rng.gen_range(3) as usize];
         let cluster = ClusterConfig {
-            num_gpus: k,
             policy,
-            net: alb_graph::comm::NetworkModel::cluster(2),
+            ..ClusterConfig::bridges(k)
         };
         let r = run_distributed(App::Bfs, &g, src, &EngineConfig::default(),
                                 &cluster, None)

@@ -1,0 +1,203 @@
+//! A small, dependency-free, offline stand-in for the `anyhow` crate.
+//!
+//! The workspace builds in environments with no crates.io access, so this
+//! path dependency provides exactly the subset of anyhow's API the codebase
+//! uses: [`Error`], [`Result`], the [`Context`] extension trait, and the
+//! [`anyhow!`] / [`bail!`] macros. Swapping in the real crate later is a
+//! one-line `Cargo.toml` change — no call sites need to move.
+//!
+//! Differences from upstream anyhow (none of which the codebase relies on):
+//! `Error` stores its cause chain as rendered strings rather than boxed
+//! `dyn Error` values, and `Display` always prints the full `": "`-joined
+//! chain (upstream prints only the outermost message unless `{:#}` is used).
+
+use core::fmt;
+
+/// An error: an outermost message plus a chain of rendered causes.
+pub struct Error {
+    /// `chain[0]` is the outermost context; later entries are causes.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(mut self, ctx: impl fmt::Display) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The context/cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, msg) in self.chain.iter().enumerate() {
+            if i > 0 {
+                f.write_str(": ")?;
+            }
+            f.write_str(msg)?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like upstream anyhow: any std error converts via `?`. `Error` itself
+// deliberately does NOT implement `std::error::Error`, which is what keeps
+// this blanket impl coherent with `impl<T> From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>`, defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = core::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for core::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error { chain: vec![ctx.to_string(), e.to_string()] })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { chain: vec![f().to_string(), e.to_string()] })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or a printable
+/// value — `anyhow!("...")`, `anyhow!("{x} failed: {e:?}", ...)`.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $($arg:tt)*)?) => {
+        $crate::Error::msg(::std::fmt::format(::core::format_args!($fmt $(, $($arg)*)?)))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_joins_chain() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::msg("inner").context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("outer"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("inner"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: core::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading config").unwrap_err();
+        assert_eq!(e.to_string(), "loading config: missing");
+
+        let n: Option<u32> = None;
+        let e = n.with_context(|| format!("slot {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "slot 3");
+        assert_eq!(Some(7).context("never used").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let x = 5;
+        assert_eq!(anyhow!("plain").to_string(), "plain");
+        assert_eq!(anyhow!("x = {x}").to_string(), "x = 5");
+        assert_eq!(anyhow!("x = {}, y = {}", x, 6).to_string(), "x = 5, y = 6");
+        assert_eq!(anyhow!(String::from("owned")).to_string(), "owned");
+
+        fn bails(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flag was {flag}");
+            }
+            Ok(1)
+        }
+        assert_eq!(bails(false).unwrap(), 1);
+        assert_eq!(bails(true).unwrap_err().to_string(), "flag was true");
+    }
+
+    #[test]
+    fn chain_iterates_outermost_first() {
+        let e = Error::msg("c").context("b").context("a");
+        let parts: Vec<&str> = e.chain().collect();
+        assert_eq!(parts, vec!["a", "b", "c"]);
+    }
+}
