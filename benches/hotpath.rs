@@ -1,72 +1,230 @@
 //! Bench: the simulator/engine hot paths in isolation — the targets of the
 //! EXPERIMENTS.md §Perf optimization pass.
 //!
+//! Every optimized case is measured next to its `-ref` twin, the preserved
+//! fresh-allocation implementation (`Balancer::schedule`,
+//! `Simulator::simulate_reference`, `engine::run_push_reference`) that
+//! matches the pre-optimization hot path — so the reported speedups are
+//! measured in-binary and machine-independent, and the two paths are
+//! asserted bit-identical before timing.
+//!
 //! Cases:
-//! * `inspector`   — ALB's threshold split + prefix build over a large
-//!                   active set (runs every round).
-//! * `twc-sim`     — per-thread TWC kernel accounting.
-//! * `lb-sim`      — LB kernel cache-model simulation (cyclic + blocked).
-//! * `engine-bfs`  — whole bfs run on rmat (end-to-end single GPU).
-//! * `partition`   — CVC partitioning of the rmat input.
-//! * `relax-apply` — native operator application (label updates).
+//! * `inspector[-ref]`    — ALB's threshold split + prefix build.
+//! * `twc-sim[-ref]`      — per-thread TWC kernel accounting.
+//! * `lb-sim-*[-ref]`     — LB kernel cache-model simulation.
+//! * `frontier[-ref]`     — bitmap drain vs sort+dedup next-worklist.
+//! * `engine-bfs[-ref]`   — whole bfs run on rmat (end-to-end single GPU).
+//! * `engine-sssp[-ref]`  — whole sssp run on rmat.
+//! * `partition-cvc-8`    — CVC partitioning of the rmat input.
+//!
+//! Flags (after `--` under `cargo bench --bench hotpath`):
+//! * `--out <path>`             write the results as BENCH-json.
+//! * `--check <baseline.json>`  fail if `engine-bfs` mean regresses more
+//!                              than `--max-regress` percent vs the file.
+//! * `--max-regress <pct>`      regression tolerance (default 25).
+//! * `--require-speedup <x>`    fail unless both engine speedups >= x.
 
-use alb_graph::apps::engine::{run, EngineConfig};
+use alb_graph::apps::engine::{run, run_push_reference, EngineConfig};
+use alb_graph::apps::worklist::NextWorklist;
 use alb_graph::apps::App;
 use alb_graph::config::Framework;
-use alb_graph::gpu::{CostModel, GpuSpec, Simulator};
+use alb_graph::gpu::{CostModel, GpuSpec, SimScratch, Simulator};
 use alb_graph::graph::gen::rmat::{self, RmatConfig};
 use alb_graph::graph::CsrGraph;
 use alb_graph::lb::{alb, Direction, Distribution};
-use alb_graph::metrics::bench::time_runs;
+use alb_graph::metrics::bench::{mean_of, read_json, time_runs, write_json, BenchStats};
 use alb_graph::partition::{partition, Policy};
 
+fn arg_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let out_path = arg_value(&args, "--out");
+    let check_path = arg_value(&args, "--check");
+    let max_regress: f64 = arg_value(&args, "--max-regress")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(25.0);
+    let require_speedup: Option<f64> =
+        arg_value(&args, "--require-speedup").and_then(|s| s.parse().ok());
+
     let g = CsrGraph::from_edge_list(&rmat::generate(&RmatConfig::paper(16, 7)));
     let spec = GpuSpec::default_sim();
     let cost = CostModel::default();
     let sim = Simulator::new(spec.clone(), cost);
     let active: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    let mut cases: Vec<BenchStats> = Vec::new();
+    let mut push = |s: BenchStats| {
+        println!("{}", s.report());
+        cases.push(s);
+    };
 
-    let s = time_runs("hotpath/inspector", 10, || {
+    // --- inspector ---
+    let mut ins = alb::Inspection::default();
+    push(time_runs("hotpath/inspector", 10, || {
+        alb::inspect_into(&active, &g, Direction::Push, &spec,
+                          spec.huge_threshold(), &mut ins);
+        ins.huge.len()
+    }));
+    push(time_runs("hotpath/inspector-ref", 10, || {
         alb::inspect(&active, &g, Direction::Push, &spec, spec.huge_threshold())
-    });
-    println!("{}", s.report());
+            .huge
+            .len()
+    }));
 
+    // --- TWC kernel simulation ---
     let sched_twc = alb::schedule(
         &active, &g, Direction::Push, &spec, Distribution::Cyclic,
         u64::MAX, // force everything through TWC
         g.num_vertices() as u64,
     );
-    let s = time_runs("hotpath/twc-sim", 10, || sim.simulate(&sched_twc, true));
-    println!("{}", s.report());
+    let mut scratch = SimScratch::new();
+    push(time_runs("hotpath/twc-sim", 10, || {
+        sim.simulate_into(&sched_twc, true, &mut scratch);
+        scratch.round.total_cycles
+    }));
+    push(time_runs("hotpath/twc-sim-ref", 10, || {
+        sim.simulate_reference(&sched_twc, true).total_cycles
+    }));
 
+    // --- LB kernel simulation (both distributions) ---
     for dist in [Distribution::Cyclic, Distribution::Blocked] {
         let sched = alb::schedule(
             &active, &g, Direction::Push, &spec, dist,
             spec.huge_threshold(), g.num_vertices() as u64,
         );
-        let s = time_runs(&format!("hotpath/lb-sim-{dist:?}"), 10, || {
-            sim.simulate(&sched, true)
-        });
-        println!("{}", s.report());
+        assert_eq!(
+            sim.simulate(&sched, true),
+            sim.simulate_reference(&sched, true),
+            "optimized and reference simulations diverge ({dist:?})"
+        );
+        push(time_runs(&format!("hotpath/lb-sim-{dist:?}"), 10, || {
+            sim.simulate_into(&sched, true, &mut scratch);
+            scratch.round.total_cycles
+        }));
+        push(time_runs(&format!("hotpath/lb-sim-{dist:?}-ref"), 10, || {
+            sim.simulate_reference(&sched, true).total_cycles
+        }));
     }
 
-    let s = time_runs("hotpath/engine-bfs", 5, || {
-        let mut gg = g.clone();
-        let src = gg.max_out_degree_vertex();
-        let cfg: EngineConfig = Framework::DIrglAlb.engine_config(spec.clone());
-        run(App::Bfs, &mut gg, src, &cfg, None).unwrap()
-    });
-    println!("{}", s.report());
+    // --- frontier generation ---
+    let pushes: Vec<u32> = {
+        // Deterministic duplicate-heavy push stream.
+        let n = g.num_vertices() as u64;
+        let mut x = 88172645463325252u64;
+        (0..400_000)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                (x % n) as u32
+            })
+            .collect()
+    };
+    let mut wl = NextWorklist::new(g.num_vertices());
+    let mut drained: Vec<u32> = Vec::new();
+    push(time_runs("hotpath/frontier", 10, || {
+        for &v in &pushes {
+            wl.push(v);
+        }
+        wl.take_sorted_into(&mut drained);
+        drained.len()
+    }));
+    push(time_runs("hotpath/frontier-ref", 10, || {
+        let mut next: Vec<u32> = Vec::new();
+        let mut flags = vec![false; g.num_vertices()];
+        for &v in &pushes {
+            if !flags[v as usize] {
+                flags[v as usize] = true;
+                next.push(v);
+            }
+        }
+        next.sort_unstable();
+        next.len()
+    }));
 
-    let s = time_runs("hotpath/partition-cvc-8", 5, || partition(&g, 8, Policy::Cvc));
-    println!("{}", s.report());
-
-    let s = time_runs("hotpath/engine-sssp", 5, || {
+    // --- end-to-end engines ---
+    let src = g.max_out_degree_vertex();
+    let cfg: EngineConfig = Framework::DIrglAlb.engine_config(spec.clone());
+    for (app, name) in [(App::Bfs, "engine-bfs"), (App::Sssp, "engine-sssp")] {
+        let hot = run(app, &mut g.clone(), src, &cfg, None).unwrap();
+        let golden = run_push_reference(app, &mut g.clone(), src, &cfg).unwrap();
+        assert_eq!(hot, golden, "hot path and reference diverge on {name}");
+        // Clone once outside the timed region (push runs never mutate the
+        // graph) so the O(V+E) copy does not dilute the measured ratio.
         let mut gg = g.clone();
-        let src = gg.max_out_degree_vertex();
-        let cfg: EngineConfig = Framework::DIrglAlb.engine_config(spec.clone());
-        run(App::Sssp, &mut gg, src, &cfg, None).unwrap()
-    });
-    println!("{}", s.report());
+        push(time_runs(&format!("hotpath/{name}"), 5, || {
+            run(app, &mut gg, src, &cfg, None).unwrap().total_cycles
+        }));
+        let mut gg = g.clone();
+        push(time_runs(&format!("hotpath/{name}-ref"), 5, || {
+            run_push_reference(app, &mut gg, src, &cfg).unwrap().total_cycles
+        }));
+    }
+
+    push(time_runs("hotpath/partition-cvc-8", 5, || partition(&g, 8, Policy::Cvc)));
+
+    // --- speedups (ref mean / optimized mean, measured in this binary) ---
+    let speedup = |name: &str| -> f64 {
+        let new = mean_of(&cases, &format!("hotpath/{name}")).unwrap_or(f64::NAN);
+        let old = mean_of(&cases, &format!("hotpath/{name}-ref")).unwrap_or(f64::NAN);
+        old / new
+    };
+    let metrics: Vec<(&str, f64)> = vec![
+        ("speedup_engine_bfs", speedup("engine-bfs")),
+        ("speedup_engine_sssp", speedup("engine-sssp")),
+        ("speedup_lb_sim_cyclic", speedup("lb-sim-Cyclic")),
+        ("speedup_frontier", speedup("frontier")),
+    ];
+    for (k, v) in &metrics {
+        println!("{k:<24} {v:.2}x");
+    }
+
+    if let Some(path) = &out_path {
+        write_json(path, "hotpath", &cases, &metrics).unwrap();
+        println!("wrote {path}");
+    }
+
+    let mut failed = false;
+    if let Some(base_path) = &check_path {
+        match read_json(base_path) {
+            Ok(base) => {
+                let now = mean_of(&cases, "hotpath/engine-bfs").unwrap_or(f64::NAN);
+                if let Some(then) = mean_of(&base, "hotpath/engine-bfs") {
+                    let limit = then * (1.0 + max_regress / 100.0);
+                    if now > limit {
+                        eprintln!(
+                            "REGRESSION: engine-bfs mean {now:.2} ms exceeds \
+                             baseline {then:.2} ms by more than {max_regress}%"
+                        );
+                        failed = true;
+                    } else {
+                        println!(
+                            "check ok: engine-bfs {now:.2} ms vs baseline \
+                             {then:.2} ms (limit {limit:.2} ms)"
+                        );
+                    }
+                } else {
+                    println!("check skipped: baseline has no engine-bfs case");
+                }
+            }
+            Err(e) => {
+                eprintln!("cannot read baseline {base_path}: {e}");
+                failed = true;
+            }
+        }
+    }
+    if let Some(need) = require_speedup {
+        for name in ["engine-bfs", "engine-sssp"] {
+            let s = speedup(name);
+            if s.is_nan() || s < need {
+                eprintln!("SPEEDUP GATE: {name} {s:.2}x < required {need:.2}x");
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
 }

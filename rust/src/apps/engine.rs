@@ -2,23 +2,32 @@
 //!
 //! Drives the paper's execution loop (Fig. 3 lines 26–34) on the simulated
 //! GPU: each round the configured [`Balancer`] turns the active set into a
-//! [`Schedule`], the [`Simulator`] prices the kernel launches (this is where
-//! the strategies differ), and the operator is applied to produce next
-//! round's active set (this part is strategy-independent, so every balancer
-//! converges to identical labels — asserted by tests).
+//! [`crate::lb::Schedule`], the [`Simulator`] prices the kernel launches
+//! (this is where the strategies differ), and the operator is applied to
+//! produce next round's active set (this part is strategy-independent, so
+//! every balancer converges to identical labels — asserted by tests).
 //!
 //! Operator application runs either natively or through the AOT-compiled
 //! JAX/Pallas kernels via [`PjrtRuntime`] (`compute = Pjrt`): the LB kernel's
 //! huge-vertex relaxation, pr's contribution kernel, and kcore's filter
 //! kernel all execute as compiled HLO — python never runs here.
+//!
+//! Hot-path memory discipline (DESIGN.md §8): every driver owns one
+//! [`RoundScratch`] for the whole run and threads it through
+//! `Balancer::schedule_into` → `Simulator::simulate_into` → the bitmap
+//! frontier drain, so steady-state rounds perform zero heap allocations
+//! (asserted by `rust/tests/alloc.rs`). [`run_push_reference`] preserves
+//! the fresh-allocation implementation as the golden reference
+//! (`rust/tests/parity.rs`) and the pre-optimization baseline
+//! (`benches/hotpath.rs`).
 
 use anyhow::{anyhow, Result};
 
 use crate::apps::worklist::{NextWorklist, WorklistKind};
 use crate::apps::{bfs, cc, kcore, pr, sssp, App, INF};
-use crate::gpu::{CostModel, GpuSpec, KernelStats, Simulator};
+use crate::gpu::{CostModel, GpuSpec, KernelStats, SimScratch, Simulator};
 use crate::graph::CsrGraph;
-use crate::lb::{Balancer, Direction, Distribution};
+use crate::lb::{Balancer, Direction, Distribution, ScheduleScratch};
 use crate::runtime::PjrtRuntime;
 
 /// How operators are computed. The schedule/simulation is identical either
@@ -74,7 +83,7 @@ impl Default for EngineConfig {
 }
 
 /// One round's record.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RoundRecord {
     pub round: u32,
     pub active: u64,
@@ -87,7 +96,7 @@ pub struct RoundRecord {
 }
 
 /// A completed run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunResult {
     pub app: App,
     pub labels: Vec<f32>,
@@ -107,6 +116,35 @@ impl RunResult {
 
     pub fn rounds_with_lb(&self) -> usize {
         self.rounds.iter().filter(|r| r.lb_triggered).count()
+    }
+}
+
+/// The reusable per-round buffer arena (DESIGN.md §8): schedule buffers,
+/// simulator accounting arrays, and the bitmap frontier, all owned for the
+/// duration of one run (the multi-GPU coordinator owns one per simulated
+/// GPU, used only by that GPU's BSP thread). Ownership contract: callees
+/// never retain references into the scratch across rounds — each round
+/// overwrites `sched.sched`/`sim.round` in place, and `active` is refilled
+/// by draining `next`.
+#[derive(Debug, Default)]
+pub struct RoundScratch {
+    pub sched: ScheduleScratch,
+    pub sim: SimScratch,
+    pub next: NextWorklist,
+    /// Current frontier, refilled from `next`'s drain each round.
+    pub active: Vec<u32>,
+}
+
+impl RoundScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A scratch whose frontier bitmap covers `n` vertices.
+    pub fn for_vertices(n: usize) -> Self {
+        let mut s = Self::default();
+        s.next.resize_for(n);
+        s
     }
 }
 
@@ -161,52 +199,63 @@ fn run_push(
         App::Cc => cc::init_labels(n),
         _ => unreachable!(),
     };
-    let mut active: Vec<u32> = match app {
+    let mut scratch = RoundScratch::for_vertices(n);
+    scratch.active = match app {
         App::Bfs | App::Sssp => vec![source],
         App::Cc => (0..n as u32).collect(),
         _ => unreachable!(),
     };
     let mut rounds = Vec::new();
     let mut total_cycles = 0u64;
-    let mut next = NextWorklist::new(n);
 
     for round in 0..cfg.max_rounds {
-        if active.is_empty() {
+        if scratch.active.is_empty() {
             break;
         }
-        let scan = cfg.worklist.scan_cost(n as u64, active.len() as u64);
-        let sched =
-            cfg.balancer
-                .schedule(&active, g, Direction::Push, &cfg.spec, scan);
-        let simr = sim.simulate(&sched, true);
-        total_cycles += simr.total_cycles;
+        let scan = cfg.worklist.scan_cost(n as u64, scratch.active.len() as u64);
+        cfg.balancer.schedule_into(
+            &scratch.active, g, Direction::Push, &cfg.spec, scan,
+            &mut scratch.sched,
+        );
+        sim.simulate_into(&scratch.sched.sched, true, &mut scratch.sim);
+        let cycles = scratch.sim.round.total_cycles;
+        total_cycles += cycles;
         rounds.push(RoundRecord {
             round,
-            active: active.len() as u64,
-            edges: sched.total_edges(),
-            cycles: simr.total_cycles,
-            lb_triggered: sched.lb.is_some(),
-            kernels: cfg.record_blocks.then(|| simr.kernels.clone()),
+            active: scratch.active.len() as u64,
+            edges: scratch.sched.sched.total_edges(),
+            cycles,
+            lb_triggered: scratch.sched.sched.lb.is_some(),
+            kernels: record_kernels(cfg, &mut scratch.sim),
         });
 
         // --- operator application ---
         if let (ComputeMode::Pjrt, Some(rt), Some(lb)) =
-            (cfg.compute, pjrt, &sched.lb)
+            (cfg.compute, pjrt, &scratch.sched.sched.lb)
         {
             // Huge bin through the compiled LB kernel...
-            relax_huge_pjrt(rt, g, &lb.vertices, app, &mut labels, &mut next)?;
+            relax_huge_pjrt(rt, g, &lb.vertices, app, &mut labels, &mut scratch.next)?;
             // ...the rest natively (TWC items are exactly active \ huge).
-            for item in &sched.twc {
-                relax_native(g, app, item.vertex, &mut labels, &mut next);
+            for item in &scratch.sched.sched.twc {
+                relax_native(g, app, item.vertex, &mut labels, &mut scratch.next);
             }
         } else {
-            for &v in &active {
-                relax_native(g, app, v, &mut labels, &mut next);
+            for &v in &scratch.active {
+                relax_native(g, app, v, &mut labels, &mut scratch.next);
             }
         }
-        active = next.take_sorted();
+        scratch.next.take_sorted_into(&mut scratch.active);
     }
     Ok(RunResult { app, labels, rounds, total_cycles })
+}
+
+/// Take the round's kernel stats out of the scratch when `record_blocks` is
+/// set — a move, not a clone: the stats leave the simulator's recycling
+/// pool and live in the [`RoundRecord`] (stat-retaining runs re-allocate
+/// next round by design; lean runs allocate nothing here).
+#[inline]
+fn record_kernels(cfg: &EngineConfig, sim: &mut SimScratch) -> Option<Vec<KernelStats>> {
+    cfg.record_blocks.then(|| std::mem::take(&mut sim.round.kernels))
 }
 
 #[inline]
@@ -285,6 +334,89 @@ pub(crate) fn relax_huge_pjrt(
     Ok(())
 }
 
+// --------------------------------------------------- reference (golden)
+
+/// The golden fresh-allocation reference for the push apps: identical
+/// labels, per-round records, and total cycles to [`run`]'s scratch-reuse
+/// hot path (asserted by `rust/tests/parity.rs`), implemented with the
+/// legacy allocating APIs — [`Balancer::schedule`],
+/// [`Simulator::simulate_reference`], and a per-round `Vec` +
+/// `sort_unstable` + `dedup` frontier. Doubles as the pre-optimization
+/// baseline in `benches/hotpath.rs`; not a hot path.
+#[doc(hidden)]
+pub fn run_push_reference(
+    app: App,
+    g: &mut CsrGraph,
+    source: u32,
+    cfg: &EngineConfig,
+) -> Result<RunResult> {
+    let n = g.num_vertices();
+    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+    let mut labels = match app {
+        App::Bfs => bfs::init_labels(n, source),
+        App::Sssp => sssp::init_labels(n, source),
+        App::Cc => cc::init_labels(n),
+        _ => return Err(anyhow!("reference engine covers push apps only")),
+    };
+    let mut active: Vec<u32> = match app {
+        App::Bfs | App::Sssp => vec![source],
+        App::Cc => (0..n as u32).collect(),
+        _ => unreachable!(),
+    };
+    // The historical flag-array next-worklist: per-run flags, a freshly
+    // grown item list every round, and a per-round sort.
+    let mut flags = vec![false; n];
+    let mut rounds = Vec::new();
+    let mut total_cycles = 0u64;
+
+    for round in 0..cfg.max_rounds {
+        if active.is_empty() {
+            break;
+        }
+        let scan = cfg.worklist.scan_cost(n as u64, active.len() as u64);
+        let sched =
+            cfg.balancer
+                .schedule(&active, g, Direction::Push, &cfg.spec, scan);
+        let simr = sim.simulate_reference(&sched, true);
+        total_cycles += simr.total_cycles;
+        rounds.push(RoundRecord {
+            round,
+            active: active.len() as u64,
+            edges: sched.total_edges(),
+            cycles: simr.total_cycles,
+            lb_triggered: sched.lb.is_some(),
+            kernels: cfg.record_blocks.then(|| simr.kernels.clone()),
+        });
+
+        // Operator application with push-time flag dedup (the bitmap drain
+        // produces the same sorted unique set).
+        let mut next: Vec<u32> = Vec::new();
+        for &v in &active {
+            let dv = labels[v as usize];
+            if dv >= INF {
+                continue;
+            }
+            let (dsts, ws) = g.out_edges(v);
+            for (&dst, &w) in dsts.iter().zip(ws) {
+                let cand = dv + relax_weight(app, w);
+                if cand < labels[dst as usize] {
+                    labels[dst as usize] = cand;
+                    if !flags[dst as usize] {
+                        flags[dst as usize] = true;
+                        next.push(dst);
+                    }
+                }
+            }
+        }
+        for &v in &next {
+            flags[v as usize] = false;
+        }
+        next.sort_unstable();
+        active = next;
+    }
+    Ok(RunResult { app, labels, rounds, total_cycles })
+}
+
 
 // --------------------------------------------------- direction-opt bfs
 
@@ -306,34 +438,33 @@ fn run_bfs_dopt(
     let m = g.num_edges() as u64;
     let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
     let mut labels = bfs::init_labels(n, source);
-    let mut frontier: Vec<u32> = vec![source];
+    let mut scratch = RoundScratch::for_vertices(n);
+    scratch.active = vec![source];
     let mut rounds = Vec::new();
     let mut total_cycles = 0u64;
     let mut explored = 0u64;
     let mut pulling = false;
 
     for round in 0..cfg.max_rounds {
-        if frontier.is_empty() {
+        if scratch.active.is_empty() {
             break;
         }
-        let mf: u64 = frontier.iter().map(|&v| g.out_degree(v)).sum();
+        let mf: u64 = scratch.active.iter().map(|&v| g.out_degree(v)).sum();
         let mu = m.saturating_sub(explored);
         if !pulling && mf * ALPHA > mu {
             pulling = true;
-        } else if pulling && (frontier.len() as u64) * BETA < n as u64 {
+        } else if pulling && (scratch.active.len() as u64) * BETA < n as u64 {
             // Frontier shrank again -> switch back to push.
             pulling = false;
         }
 
-        let mut next = NextWorklist::new(n);
-        let (sched, simr);
         if pulling {
             // Pull round: every unvisited vertex scans its in-edges for a
             // parent on the current frontier, early-exiting on the first
             // hit. Work items carry the edges actually scanned, so the
             // simulated cost reflects the early exit.
-            let cur_level: f32 = labels[frontier[0] as usize];
-            let mut items = Vec::new();
+            let cur_level: f32 = labels[scratch.active[0] as usize];
+            scratch.sched.reset();
             let mut scanned_total = 0u64;
             for v in 0..n as u32 {
                 if labels[v as usize] < INF {
@@ -345,47 +476,46 @@ fn run_bfs_dopt(
                     scanned += 1;
                     if labels[u as usize] == cur_level {
                         labels[v as usize] = cur_level + 1.0;
-                        next.push(v);
+                        scratch.next.push(v);
                         break;
                     }
                 }
                 scanned_total += scanned;
-                items.push(crate::lb::VertexItem {
+                scratch.sched.sched.twc.push(crate::lb::VertexItem {
                     vertex: v,
                     degree: scanned,
                     unit: crate::lb::twc::bin(scanned, &cfg.spec),
                 });
             }
-            let scan = cfg.worklist.scan_cost(n as u64, items.len() as u64);
-            sched = crate::lb::Schedule {
-                twc: items,
-                lb: None,
-                scan_vertices: scan,
-                prefix_items: 0,
-            };
-            simr = sim.simulate(&sched, false);
+            let items = scratch.sched.sched.twc.len() as u64;
+            scratch.sched.sched.scan_vertices =
+                cfg.worklist.scan_cost(n as u64, items);
+            sim.simulate_into(&scratch.sched.sched, false, &mut scratch.sim);
             explored += scanned_total;
         } else {
-            let scan = cfg.worklist.scan_cost(n as u64, frontier.len() as u64);
-            sched = cfg
-                .balancer
-                .schedule(&frontier, g, Direction::Push, &cfg.spec, scan);
-            simr = sim.simulate(&sched, true);
-            for &v in &frontier {
-                relax_native(g, App::Bfs, v, &mut labels, &mut next);
+            let scan =
+                cfg.worklist.scan_cost(n as u64, scratch.active.len() as u64);
+            cfg.balancer.schedule_into(
+                &scratch.active, g, Direction::Push, &cfg.spec, scan,
+                &mut scratch.sched,
+            );
+            sim.simulate_into(&scratch.sched.sched, true, &mut scratch.sim);
+            for &v in &scratch.active {
+                relax_native(g, App::Bfs, v, &mut labels, &mut scratch.next);
             }
             explored += mf;
         }
-        total_cycles += simr.total_cycles;
+        let cycles = scratch.sim.round.total_cycles;
+        total_cycles += cycles;
         rounds.push(RoundRecord {
             round,
-            active: frontier.len() as u64,
-            edges: sched.total_edges(),
-            cycles: simr.total_cycles,
-            lb_triggered: sched.lb.is_some(),
-            kernels: cfg.record_blocks.then(|| simr.kernels.clone()),
+            active: scratch.active.len() as u64,
+            edges: scratch.sched.sched.total_edges(),
+            cycles,
+            lb_triggered: scratch.sched.sched.lb.is_some(),
+            kernels: record_kernels(cfg, &mut scratch.sim),
         });
-        frontier = next.take_sorted();
+        scratch.next.take_sorted_into(&mut scratch.active);
     }
     Ok(RunResult { app: App::Bfs, labels, rounds, total_cycles })
 }
@@ -409,6 +539,7 @@ fn run_sssp_delta(
     let bucket_of = |d: f32| (d / delta) as usize;
     let mut buckets: Vec<Vec<u32>> = vec![Vec::new()];
     buckets[0].push(source);
+    let mut scratch = RoundScratch::for_vertices(n);
     let mut rounds = Vec::new();
     let mut total_cycles = 0u64;
     let mut round = 0u32;
@@ -434,18 +565,19 @@ fn run_sssp_delta(
                 break;
             }
             let scan = cfg.worklist.scan_cost(n as u64, active.len() as u64);
-            let sched = cfg
-                .balancer
-                .schedule(&active, g, Direction::Push, &cfg.spec, scan);
-            let simr = sim.simulate(&sched, true);
-            total_cycles += simr.total_cycles;
+            cfg.balancer.schedule_into(
+                &active, g, Direction::Push, &cfg.spec, scan, &mut scratch.sched,
+            );
+            sim.simulate_into(&scratch.sched.sched, true, &mut scratch.sim);
+            let cycles = scratch.sim.round.total_cycles;
+            total_cycles += cycles;
             rounds.push(RoundRecord {
                 round,
                 active: active.len() as u64,
-                edges: sched.total_edges(),
-                cycles: simr.total_cycles,
-                lb_triggered: sched.lb.is_some(),
-                kernels: cfg.record_blocks.then(|| simr.kernels.clone()),
+                edges: scratch.sched.sched.total_edges(),
+                cycles,
+                lb_triggered: scratch.sched.sched.lb.is_some(),
+                kernels: record_kernels(cfg, &mut scratch.sim),
             });
             round += 1;
             for &v in &active {
@@ -471,18 +603,19 @@ fn run_sssp_delta(
         settled.dedup();
         if !settled.is_empty() && round < cfg.max_rounds {
             let scan = cfg.worklist.scan_cost(n as u64, settled.len() as u64);
-            let sched = cfg
-                .balancer
-                .schedule(&settled, g, Direction::Push, &cfg.spec, scan);
-            let simr = sim.simulate(&sched, true);
-            total_cycles += simr.total_cycles;
+            cfg.balancer.schedule_into(
+                &settled, g, Direction::Push, &cfg.spec, scan, &mut scratch.sched,
+            );
+            sim.simulate_into(&scratch.sched.sched, true, &mut scratch.sim);
+            let cycles = scratch.sim.round.total_cycles;
+            total_cycles += cycles;
             rounds.push(RoundRecord {
                 round,
                 active: settled.len() as u64,
-                edges: sched.total_edges(),
-                cycles: simr.total_cycles,
-                lb_triggered: sched.lb.is_some(),
-                kernels: cfg.record_blocks.then(|| simr.kernels.clone()),
+                edges: scratch.sched.sched.total_edges(),
+                cycles,
+                lb_triggered: scratch.sched.sched.lb.is_some(),
+                kernels: record_kernels(cfg, &mut scratch.sim),
             });
             round += 1;
             for &v in &settled {
@@ -521,23 +654,26 @@ fn run_pr(
     let out_deg: Vec<u32> =
         (0..n as u32).map(|v| g.out_degree(v) as u32).collect();
     let mut ranks = pr::init_ranks(n);
+    let mut scratch = RoundScratch::for_vertices(n);
     let mut rounds = Vec::new();
     let mut total_cycles = 0u64;
 
     for round in 0..cfg.max_rounds {
         // Topology-driven: all vertices active, pull direction.
         let scan = cfg.worklist.scan_cost(n as u64, n as u64);
-        let sched =
-            cfg.balancer.schedule(&all, g, Direction::Pull, &cfg.spec, scan);
-        let simr = sim.simulate(&sched, false);
-        total_cycles += simr.total_cycles;
+        cfg.balancer.schedule_into(
+            &all, g, Direction::Pull, &cfg.spec, scan, &mut scratch.sched,
+        );
+        sim.simulate_into(&scratch.sched.sched, false, &mut scratch.sim);
+        let cycles = scratch.sim.round.total_cycles;
+        total_cycles += cycles;
         rounds.push(RoundRecord {
             round,
             active: n as u64,
-            edges: sched.total_edges(),
-            cycles: simr.total_cycles,
-            lb_triggered: sched.lb.is_some(),
-            kernels: cfg.record_blocks.then(|| simr.kernels.clone()),
+            edges: scratch.sched.sched.total_edges(),
+            cycles,
+            lb_triggered: scratch.sched.sched.lb.is_some(),
+            kernels: record_kernels(cfg, &mut scratch.sim),
         });
 
         let contrib = match (cfg.compute, pjrt) {
@@ -579,6 +715,7 @@ fn run_kcore(
     let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
     let mut deg: Vec<u32> = (0..n as u32).map(|v| g.in_degree(v) as u32).collect();
     let mut alive = vec![true; n];
+    let mut scratch = RoundScratch::for_vertices(n);
     let mut rounds = Vec::new();
     let mut total_cycles = 0u64;
 
@@ -590,40 +727,38 @@ fn run_kcore(
     for &v in &dying {
         alive[v as usize] = false;
     }
-    let scan0 = cfg.worklist.scan_cost(n as u64, n as u64);
-    let sched0 = crate::lb::Schedule {
-        twc: Vec::new(),
-        lb: None,
-        scan_vertices: scan0,
-        prefix_items: 0,
-    };
-    let simr0 = sim.simulate(&sched0, false);
-    total_cycles += simr0.total_cycles;
+    scratch.sched.reset();
+    scratch.sched.sched.scan_vertices =
+        cfg.worklist.scan_cost(n as u64, n as u64);
+    sim.simulate_into(&scratch.sched.sched, false, &mut scratch.sim);
+    let cycles0 = scratch.sim.round.total_cycles;
+    total_cycles += cycles0;
     rounds.push(RoundRecord {
         round: 0,
         active: n as u64,
         edges: 0,
-        cycles: simr0.total_cycles,
+        cycles: cycles0,
         lb_triggered: false,
-        kernels: cfg.record_blocks.then(|| simr0.kernels.clone()),
+        kernels: record_kernels(cfg, &mut scratch.sim),
     });
 
     let mut round = 1;
     while !dying.is_empty() && round < cfg.max_rounds {
         // Work this round: the dying vertices' out-edges (decrement push).
         let scan = cfg.worklist.scan_cost(n as u64, dying.len() as u64);
-        let sched =
-            cfg.balancer
-                .schedule(&dying, g, Direction::Push, &cfg.spec, scan);
-        let simr = sim.simulate(&sched, true); // atomicSub per decrement
-        total_cycles += simr.total_cycles;
+        cfg.balancer.schedule_into(
+            &dying, g, Direction::Push, &cfg.spec, scan, &mut scratch.sched,
+        );
+        sim.simulate_into(&scratch.sched.sched, true, &mut scratch.sim); // atomicSub per decrement
+        let cycles = scratch.sim.round.total_cycles;
+        total_cycles += cycles;
         rounds.push(RoundRecord {
             round,
             active: dying.len() as u64,
-            edges: sched.total_edges(),
-            cycles: simr.total_cycles,
-            lb_triggered: sched.lb.is_some(),
-            kernels: cfg.record_blocks.then(|| simr.kernels.clone()),
+            edges: scratch.sched.sched.total_edges(),
+            cycles,
+            lb_triggered: scratch.sched.sched.lb.is_some(),
+            kernels: record_kernels(cfg, &mut scratch.sim),
         });
 
         // Decrement successors; collect candidates whose degree dropped.
@@ -829,8 +964,31 @@ mod tests {
         let src = g.max_out_degree_vertex();
         let r = run(App::Bfs, &mut g, src, &cfg, None).unwrap();
         assert!(r.rounds[0].kernels.is_some());
+        // Every round carries its own stats (the move out of the scratch
+        // must not leave later rounds empty).
+        for rec in &r.rounds {
+            let ks = rec.kernels.as_ref().unwrap();
+            assert!(!ks.is_empty(), "round {} lost its kernel stats", rec.round);
+            assert_eq!(ks[0].label, "twc");
+        }
     }
 
+    #[test]
+    fn reference_engine_matches_hot_path() {
+        // The fresh-allocation golden reference and the scratch-reuse
+        // engine must agree bit-for-bit: labels, per-round records, total.
+        let mut g = rmat(10, 12);
+        let src = g.max_out_degree_vertex();
+        for app in [App::Bfs, App::Sssp, App::Cc] {
+            for b in all_balancers() {
+                let cfg = cfg_with(b);
+                let hot = run(app, &mut g.clone(), src, &cfg, None).unwrap();
+                let golden =
+                    run_push_reference(app, &mut g.clone(), src, &cfg).unwrap();
+                assert_eq!(hot, golden, "{}", app.name());
+            }
+        }
+    }
 
     #[test]
     fn direction_opt_bfs_matches_oracle() {

@@ -29,50 +29,111 @@ impl WorklistKind {
 }
 
 /// Deduplicating active-set builder for the *next* round: push-style
-/// operators activate the same destination many times; the flag array keeps
-/// the worklist a set (matching `WL.push` + the dense-flag semantics).
+/// operators activate the same destination many times; the dense bitmap
+/// keeps the worklist a set (matching `WL.push` + the dense-flag semantics).
+///
+/// §Perf (DESIGN.md §8): membership is one bit per vertex, and draining is
+/// a counting pass over the touched word range — ascending bit order *is*
+/// sorted order, so the per-round `sort_unstable` + `dedup` of the old
+/// explicit-list implementation disappears while the output stays
+/// bit-identical. The struct is reused across rounds (the engine's
+/// `RoundScratch` owns one); steady-state pushes and drains allocate
+/// nothing.
 #[derive(Debug)]
 pub struct NextWorklist {
-    flags: Vec<bool>,
-    items: Vec<u32>,
+    /// Dense membership bitmap, bit `v` = vertex `v` activated.
+    words: Vec<u64>,
+    /// Number of set bits.
+    len: usize,
+    /// Touched word range: `lo..hi` bounds the counting pass so tiny
+    /// frontiers on huge graphs do not rescan the whole bitmap.
+    lo: usize,
+    hi: usize,
+}
+
+impl Default for NextWorklist {
+    /// Route through [`new`](Self::new) so the empty sentinel (`lo =
+    /// usize::MAX`) holds — a derived default (`lo = 0`) would silently
+    /// defeat the touched-range optimization on the first drain.
+    fn default() -> Self {
+        NextWorklist::new(0)
+    }
 }
 
 impl NextWorklist {
     pub fn new(num_vertices: usize) -> Self {
-        NextWorklist { flags: vec![false; num_vertices], items: Vec::new() }
+        NextWorklist {
+            words: vec![0; num_vertices.div_ceil(64)],
+            len: 0,
+            lo: usize::MAX,
+            hi: 0,
+        }
+    }
+
+    /// Grow (never shrink) to cover `num_vertices`.
+    pub fn resize_for(&mut self, num_vertices: usize) {
+        let nw = num_vertices.div_ceil(64);
+        if self.words.len() < nw {
+            self.words.resize(nw, 0);
+        }
     }
 
     /// Add vertex `v`; idempotent.
     #[inline]
     pub fn push(&mut self, v: u32) {
-        let f = &mut self.flags[v as usize];
-        if !*f {
-            *f = true;
-            self.items.push(v);
+        let w = (v >> 6) as usize;
+        let bit = 1u64 << (v & 63);
+        let word = &mut self.words[w];
+        if *word & bit == 0 {
+            *word |= bit;
+            self.len += 1;
+            self.lo = self.lo.min(w);
+            self.hi = self.hi.max(w + 1);
         }
     }
 
     pub fn len(&self) -> usize {
-        self.items.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.items.is_empty()
+        self.len == 0
     }
 
     pub fn contains(&self, v: u32) -> bool {
-        self.flags[v as usize]
+        self.words[(v >> 6) as usize] & (1u64 << (v & 63)) != 0
     }
 
-    /// Drain into a sorted active list, resetting for reuse. Sorting keeps
-    /// round order deterministic regardless of push order.
+    /// Drain into a sorted active list, resetting for reuse.
     pub fn take_sorted(&mut self) -> Vec<u32> {
-        let mut items = std::mem::take(&mut self.items);
-        for &v in &items {
-            self.flags[v as usize] = false;
+        let mut out = Vec::with_capacity(self.len);
+        self.take_sorted_into(&mut out);
+        out
+    }
+
+    /// Drain into `out` (cleared first) in ascending vertex order,
+    /// resetting for reuse. The counting pass walks only the touched word
+    /// range and zeroes it on the way out.
+    pub fn take_sorted_into(&mut self, out: &mut Vec<u32>) {
+        out.clear();
+        out.reserve(self.len);
+        if self.len > 0 {
+            for wi in self.lo..self.hi {
+                let mut word = self.words[wi];
+                if word == 0 {
+                    continue;
+                }
+                self.words[wi] = 0;
+                let base = (wi as u32) << 6;
+                while word != 0 {
+                    out.push(base + word.trailing_zeros());
+                    word &= word - 1;
+                }
+            }
         }
-        items.sort_unstable();
-        items
+        self.len = 0;
+        self.lo = usize::MAX;
+        self.hi = 0;
     }
 }
 
@@ -114,5 +175,49 @@ mod tests {
     fn empty_take() {
         let mut wl = NextWorklist::new(4);
         assert!(wl.take_sorted().is_empty());
+    }
+
+    #[test]
+    fn take_sorted_into_reuses_buffer_and_matches_sort_dedup() {
+        // The bitmap drain must equal the legacy sort+dedup bit-for-bit.
+        let n = 5000usize;
+        let mut wl = NextWorklist::new(n);
+        let mut out = Vec::new();
+        // Deterministic pseudo-random pushes with duplicates.
+        let mut x = 12345u64;
+        for round in 0..5 {
+            let mut reference: Vec<u32> = Vec::new();
+            for _ in 0..800 {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(round + 1);
+                let v = (x >> 33) as u32 % n as u32;
+                wl.push(v);
+                reference.push(v);
+            }
+            reference.sort_unstable();
+            reference.dedup();
+            assert_eq!(wl.len(), reference.len());
+            wl.take_sorted_into(&mut out);
+            assert_eq!(out, reference, "round {round}");
+            assert!(wl.is_empty());
+        }
+    }
+
+    #[test]
+    fn word_boundaries_drain_in_order() {
+        let mut wl = NextWorklist::new(200);
+        for v in [63u32, 64, 127, 128, 0, 199, 65] {
+            wl.push(v);
+        }
+        assert_eq!(wl.take_sorted(), vec![0, 63, 64, 65, 127, 128, 199]);
+    }
+
+    #[test]
+    fn resize_for_grows_only() {
+        let mut wl = NextWorklist::new(64);
+        wl.resize_for(1000);
+        wl.push(999);
+        assert!(wl.contains(999));
+        wl.resize_for(10); // no shrink: 999 still representable
+        assert!(wl.contains(999));
     }
 }

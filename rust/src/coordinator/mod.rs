@@ -16,6 +16,13 @@
 //! `rust/tests/parity.rs`). Alongside the modeled cycles, the coordinator
 //! records real per-GPU host wall-clock and the set of OS threads that
 //! executed rounds.
+//!
+//! Hot-path memory discipline (DESIGN.md §8): the coordinator owns one
+//! [`RoundScratch`] arena per simulated GPU for the whole run; each round,
+//! partition `i`'s BSP thread borrows arena `i` exclusively (the tasks zip
+//! `scratches.iter_mut()`), so local rounds reuse their schedule buffers,
+//! simulator accounting arrays, and bitmap frontier across rounds instead
+//! of reallocating them — without any cross-thread sharing.
 
 use std::collections::HashSet;
 use std::thread::ThreadId;
@@ -23,8 +30,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::apps::engine::{self, ComputeMode, EngineConfig};
-use crate::apps::worklist::NextWorklist;
+use crate::apps::engine::{self, ComputeMode, EngineConfig, RoundScratch};
 use crate::apps::{pr, App, INF};
 use crate::comm::{self, NetworkModel, BYTES_PER_UPDATE};
 use crate::gpu::Simulator;
@@ -212,41 +218,50 @@ struct LocalRound {
     thread: ThreadId,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn local_push_round(
     app: App,
     part: &CsrGraph,
     active: &[u32],
     labels: &mut [f32],
     cfg: &EngineConfig,
+    sim: &Simulator,
+    scratch: &mut RoundScratch,
     pjrt: Option<&PjrtRuntime>,
 ) -> Result<LocalRound> {
     let t0 = Instant::now();
-    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
     let n = part.num_vertices();
     let scan = cfg.worklist.scan_cost(n as u64, active.len() as u64);
-    let sched = cfg.balancer.schedule(active, part, Direction::Push, &cfg.spec, scan);
-    let simr = sim.simulate(&sched, true);
+    cfg.balancer.schedule_into(
+        active, part, Direction::Push, &cfg.spec, scan, &mut scratch.sched,
+    );
+    sim.simulate_into(&scratch.sched.sched, true, &mut scratch.sim);
 
-    let mut next = NextWorklist::new(n);
-    if let (ComputeMode::Pjrt, Some(rt), Some(lb)) = (cfg.compute, pjrt, &sched.lb) {
-        engine::relax_huge_pjrt(rt, part, &lb.vertices, app, labels, &mut next)?;
-        for item in &sched.twc {
-            engine::relax_native(part, app, item.vertex, labels, &mut next);
+    if let (ComputeMode::Pjrt, Some(rt), Some(lb)) =
+        (cfg.compute, pjrt, &scratch.sched.sched.lb)
+    {
+        engine::relax_huge_pjrt(rt, part, &lb.vertices, app, labels, &mut scratch.next)?;
+        for item in &scratch.sched.sched.twc {
+            engine::relax_native(part, app, item.vertex, labels, &mut scratch.next);
         }
     } else {
         for &v in active {
-            engine::relax_native(part, app, v, labels, &mut next);
+            engine::relax_native(part, app, v, labels, &mut scratch.next);
         }
     }
-    let changed = next
-        .take_sorted()
-        .into_iter()
-        .map(|l| (l, labels[l as usize]))
+    // Drain the bitmap frontier through the scratch's reusable buffer; the
+    // (local id, value) pairs themselves cross the BSP barrier, so they are
+    // owned by the result.
+    scratch.next.take_sorted_into(&mut scratch.active);
+    let changed = scratch
+        .active
+        .iter()
+        .map(|&l| (l, labels[l as usize]))
         .collect();
     Ok(LocalRound {
-        cycles: simr.total_cycles,
-        edges: sched.total_edges(),
-        lb: sched.lb.is_some(),
+        cycles: scratch.sim.round.total_cycles,
+        edges: scratch.sched.sched.total_edges(),
+        lb: scratch.sched.sched.lb.is_some(),
         changed,
         wall_ns: t0.elapsed().as_nanos() as u64,
         thread: std::thread::current().id(),
@@ -289,6 +304,15 @@ fn run_push_dist(
         .collect();
 
     let mut acct = RunAccounting::new(k);
+    // One simulator (Sync, shared) + one scratch arena per simulated GPU,
+    // living across rounds; arena i is only ever borrowed by partition i's
+    // BSP task.
+    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+    let mut scratches: Vec<RoundScratch> = dg
+        .parts
+        .iter()
+        .map(|p| RoundScratch::for_vertices(p.graph.num_vertices()))
+        .collect();
 
     for round in 0..cfg.max_rounds {
         let global_active: u64 = active.iter().map(|a| a.len() as u64).sum();
@@ -301,20 +325,26 @@ fn run_push_dist(
             let mut out = Vec::with_capacity(k);
             for (pi, part) in dg.parts.iter().enumerate() {
                 out.push(local_push_round(
-                    app, &part.graph, &active[pi], &mut labels[pi], cfg, pjrt,
+                    app, &part.graph, &active[pi], &mut labels[pi], cfg, &sim,
+                    &mut scratches[pi], pjrt,
                 )?);
             }
             out
         } else {
+            let sim_ref = &sim;
             let tasks: Vec<_> = dg
                 .parts
                 .iter()
                 .zip(&active)
                 .zip(labels.iter_mut())
-                .map(|((part, act), lab)| {
+                .zip(scratches.iter_mut())
+                .map(|(((part, act), lab), scratch)| {
                     move || {
-                        local_push_round(app, &part.graph, act, lab, cfg, None)
-                            .expect("native round cannot fail")
+                        local_push_round(
+                            app, &part.graph, act, lab, cfg, sim_ref, scratch,
+                            None,
+                        )
+                        .expect("native round cannot fail")
                     }
                 })
                 .collect();
@@ -429,19 +459,22 @@ fn local_pr_round(
     pi: usize,
     part: &Partition,
     lg: &CsrGraph,
+    all: &[u32],
     ranks: &[f32],
     out_deg: &[u32],
     owner: &[u32],
     cfg: &EngineConfig,
+    sim: &Simulator,
+    scratch: &mut RoundScratch,
     pjrt: Option<&PjrtRuntime>,
 ) -> Result<PrLocal> {
     let t0 = Instant::now();
-    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
     let nl = lg.num_vertices();
-    let all: Vec<u32> = (0..nl as u32).collect();
     let scan = cfg.worklist.scan_cost(nl as u64, nl as u64);
-    let sched = cfg.balancer.schedule(&all, lg, Direction::Pull, &cfg.spec, scan);
-    let simr = sim.simulate(&sched, false);
+    cfg.balancer.schedule_into(
+        all, lg, Direction::Pull, &cfg.spec, scan, &mut scratch.sched,
+    );
+    sim.simulate_into(&scratch.sched.sched, false, &mut scratch.sim);
 
     // Contributions of local src copies (kernel in Pjrt mode).
     let src_ranks: Vec<f32> = part.l2g.iter().map(|&gid| ranks[gid as usize]).collect();
@@ -488,8 +521,8 @@ fn local_pr_round(
         }
     }
     Ok(PrLocal {
-        cycles: simr.total_cycles,
-        lb: sched.lb.is_some(),
+        cycles: scratch.sim.round.total_cycles,
+        lb: scratch.sched.sched.lb.is_some(),
         wall_ns: t0.elapsed().as_nanos() as u64,
         thread: std::thread::current().id(),
         acc,
@@ -516,6 +549,18 @@ fn run_pr_dist(
     let base = (1.0 - pr::DAMPING) / n as f32;
 
     let mut acct = RunAccounting::new(k);
+    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+    let mut scratches: Vec<RoundScratch> = dg
+        .parts
+        .iter()
+        .map(|p| RoundScratch::for_vertices(p.graph.num_vertices()))
+        .collect();
+    // Topology-driven: every local vertex is active every round.
+    let alls: Vec<Vec<u32>> = dg
+        .parts
+        .iter()
+        .map(|p| (0..p.graph.num_vertices() as u32).collect())
+        .collect();
 
     for round in 0..cfg.max_rounds {
         // Broadcast: every mirror refreshes its rank copy (topology-driven:
@@ -538,22 +583,25 @@ fn run_pr_dist(
             let mut out = Vec::with_capacity(k);
             for (pi, p) in dg.parts.iter().enumerate() {
                 out.push(local_pr_round(
-                    pi, p, &parts[pi], &ranks, &out_deg, &dg.owner, cfg, pjrt,
+                    pi, p, &parts[pi], &alls[pi], &ranks, &out_deg, &dg.owner,
+                    cfg, &sim, &mut scratches[pi], pjrt,
                 )?);
             }
             out
         } else {
             let (ranks_ref, out_deg_ref) = (&ranks, &out_deg);
             let (owner_ref, parts_ref) = (&dg.owner, &parts);
+            let (alls_ref, sim_ref) = (&alls, &sim);
             let tasks: Vec<_> = dg
                 .parts
                 .iter()
                 .enumerate()
-                .map(|(pi, p)| {
+                .zip(scratches.iter_mut())
+                .map(|((pi, p), scratch)| {
                     move || {
                         local_pr_round(
-                            pi, p, &parts_ref[pi], ranks_ref, out_deg_ref,
-                            owner_ref, cfg, None,
+                            pi, p, &parts_ref[pi], &alls_ref[pi], ranks_ref,
+                            out_deg_ref, owner_ref, cfg, sim_ref, scratch, None,
                         )
                         .expect("native pr round cannot fail")
                     }
@@ -618,6 +666,7 @@ struct KcoreLocal {
     remote_bytes: u64,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn local_kcore_round(
     pi: usize,
     part: &Partition,
@@ -626,13 +675,18 @@ fn local_kcore_round(
     alive: &[bool],
     owner: &[u32],
     cfg: &EngineConfig,
+    sim: &Simulator,
+    scratch: &mut RoundScratch,
 ) -> KcoreLocal {
     let t0 = Instant::now();
     let thread = std::thread::current().id();
     let lg = &part.graph;
-    let local_dying: Vec<u32> =
-        dying.iter().filter_map(|&gv| g2l.get(&gv).copied()).collect();
-    if local_dying.is_empty() {
+    // Reuse the scratch's frontier buffer for the local dying list.
+    scratch.active.clear();
+    scratch
+        .active
+        .extend(dying.iter().filter_map(|&gv| g2l.get(&gv).copied()));
+    if scratch.active.is_empty() {
         return KcoreLocal {
             cycles: 0,
             lb: false,
@@ -642,16 +696,17 @@ fn local_kcore_round(
             remote_bytes: 0,
         };
     }
-    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
     let scan = cfg
         .worklist
-        .scan_cost(lg.num_vertices() as u64, local_dying.len() as u64);
-    let sched = cfg.balancer.schedule(&local_dying, lg, Direction::Push, &cfg.spec, scan);
-    let simr = sim.simulate(&sched, true);
+        .scan_cost(lg.num_vertices() as u64, scratch.active.len() as u64);
+    cfg.balancer.schedule_into(
+        &scratch.active, lg, Direction::Push, &cfg.spec, scan, &mut scratch.sched,
+    );
+    sim.simulate_into(&scratch.sched.sched, true, &mut scratch.sim);
 
     let mut hits = Vec::new();
     let mut remote_bytes = 0u64;
-    for &lv in &local_dying {
+    for &lv in &scratch.active {
         let (dsts, _) = lg.out_edges(lv);
         for &lu in dsts {
             let gid = part.l2g[lu as usize];
@@ -664,8 +719,8 @@ fn local_kcore_round(
         }
     }
     KcoreLocal {
-        cycles: simr.total_cycles,
-        lb: sched.lb.is_some(),
+        cycles: scratch.sim.round.total_cycles,
+        lb: scratch.sched.sched.lb.is_some(),
         wall_ns: t0.elapsed().as_nanos() as u64,
         thread,
         hits,
@@ -694,6 +749,12 @@ fn run_kcore_dist(
     }
 
     let mut acct = RunAccounting::new(k_parts);
+    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+    let mut scratches: Vec<RoundScratch> = dg
+        .parts
+        .iter()
+        .map(|p| RoundScratch::for_vertices(p.graph.num_vertices()))
+        .collect();
     let mut round = 0u32;
 
     while !dying.is_empty() && round < cfg.max_rounds {
@@ -701,15 +762,18 @@ fn run_kcore_dist(
         // decrement scans — one GPU per thread, barrier at the join.
         let locals: Vec<KcoreLocal> = {
             let (dying_ref, alive_ref, owner_ref) = (&dying, &alive, &dg.owner);
+            let sim_ref = &sim;
             let tasks: Vec<_> = dg
                 .parts
                 .iter()
                 .enumerate()
-                .map(|(pi, p)| {
+                .zip(scratches.iter_mut())
+                .map(|((pi, p), scratch)| {
                     let g2l = &dg.g2l[pi];
                     move || {
                         local_kcore_round(
                             pi, p, dying_ref, g2l, alive_ref, owner_ref, cfg,
+                            sim_ref, scratch,
                         )
                     }
                 })

@@ -27,16 +27,23 @@ pub struct CacheSim {
 
 const EMPTY: u64 = u64::MAX;
 
+/// Geometry derivation shared by [`CacheSim::new`] and
+/// [`CacheSim::matches`]: `(num_sets, assoc, line_bytes)`.
+fn geometry(capacity_kb: u32, line_bytes: u32, assoc: u32) -> (u64, usize, u64) {
+    let lines = (capacity_kb as u64 * 1024) / line_bytes as u64;
+    let num_sets = (lines / assoc as u64).max(1);
+    (num_sets, assoc as usize, line_bytes as u64)
+}
+
 impl CacheSim {
     /// `capacity_kb` total, `line_bytes` per line, `assoc` ways.
     pub fn new(capacity_kb: u32, line_bytes: u32, assoc: u32) -> Self {
-        let lines = (capacity_kb as u64 * 1024) / line_bytes as u64;
-        let num_sets = (lines / assoc as u64).max(1);
+        let (num_sets, assoc, line_bytes) = geometry(capacity_kb, line_bytes, assoc);
         CacheSim {
-            slots: vec![EMPTY; (num_sets * assoc as u64) as usize],
+            slots: vec![EMPTY; num_sets as usize * assoc],
             num_sets,
-            assoc: assoc as usize,
-            line_bytes: line_bytes as u64,
+            assoc,
+            line_bytes,
             hits: 0,
             misses: 0,
         }
@@ -74,6 +81,23 @@ impl CacheSim {
     pub fn reset_stats(&mut self) {
         self.hits = 0;
         self.misses = 0;
+    }
+
+    /// Invalidate every line and zero the counters — equivalent to a fresh
+    /// `CacheSim` of the same geometry. Lets the LB-kernel simulator keep
+    /// one pooled instance per scratch instead of allocating per sampled
+    /// warp (§Perf).
+    pub fn reset_all(&mut self) {
+        self.slots.fill(EMPTY);
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    /// Whether this cache has the geometry `new(capacity_kb, line_bytes,
+    /// assoc)` would produce (pooled instances are rebuilt on mismatch).
+    pub fn matches(&self, capacity_kb: u32, line_bytes: u32, assoc: u32) -> bool {
+        (self.num_sets, self.assoc, self.line_bytes)
+            == geometry(capacity_kb, line_bytes, assoc)
     }
 }
 
@@ -158,5 +182,17 @@ mod tests {
         c.reset_stats();
         assert_eq!(c.misses(), 0);
         assert!(c.access(0), "cached line survives stats reset");
+    }
+
+    #[test]
+    fn reset_all_equals_fresh_cache() {
+        let mut c = CacheSim::new(16, 64, 4);
+        c.access(0);
+        c.access(64);
+        c.reset_all();
+        assert_eq!(c.hits() + c.misses(), 0);
+        assert!(!c.access(0), "lines must be invalidated");
+        assert!(c.matches(16, 64, 4));
+        assert!(!c.matches(16, 128, 4));
     }
 }

@@ -28,6 +28,14 @@ pub struct CostModel {
     /// Cap on warp-steps fully simulated per LB kernel; beyond this the
     /// cache model samples uniformly and extrapolates.
     pub lb_warp_step_sample_cap: u64,
+    /// Charge the round's kernels back-to-back instead of concurrently.
+    /// ALB launches the LB kernel *alongside* the TWC kernel (paper §4,
+    /// separate streams), so the default charges a round
+    /// `scan + max(twc, prefix + lb)` — the prefix sum must finish before
+    /// the LB launch but overlaps TWC. `true` restores the historical
+    /// serial accounting (`scan + twc + prefix + lb`) so pre-existing
+    /// `repro` numbers can be regenerated deliberately.
+    pub serial_kernels: bool,
 }
 
 impl Default for CostModel {
@@ -53,6 +61,7 @@ impl Default for CostModel {
             cycles_scan_vertex: 1,
             cycles_prefix_per_item: 2,
             lb_warp_step_sample_cap: 1 << 14,
+            serial_kernels: false,
         }
     }
 }
@@ -61,6 +70,11 @@ impl CostModel {
     /// Unscaled launch cost, for paper-sized inputs (rmat23+, 26k+ threads).
     pub fn paper_scale() -> Self {
         CostModel { cycles_launch: 3000, ..CostModel::default() }
+    }
+
+    /// The historical serial-kernel accounting (see `serial_kernels`).
+    pub fn serial() -> Self {
+        CostModel { serial_kernels: true, ..CostModel::default() }
     }
 }
 
@@ -80,5 +94,11 @@ mod tests {
     fn paper_scale_restores_launch() {
         assert_eq!(CostModel::paper_scale().cycles_launch, 3000);
         assert_eq!(CostModel::paper_scale().cycles_edge, 4);
+    }
+
+    #[test]
+    fn concurrent_kernels_are_the_default() {
+        assert!(!CostModel::default().serial_kernels);
+        assert!(CostModel::serial().serial_kernels);
     }
 }

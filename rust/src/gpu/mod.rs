@@ -13,4 +13,4 @@ pub mod sim;
 pub use cache::CacheSim;
 pub use cost::CostModel;
 pub use model::GpuSpec;
-pub use sim::{KernelStats, RoundSim, Simulator};
+pub use sim::{KernelStats, RoundSim, SimScratch, Simulator};

@@ -15,6 +15,21 @@
 //! * The LB kernel charges every thread `ceil(total_edges/p)` relaxations
 //!   plus the binary-search probes, which go through the set-associative
 //!   cache model so cyclic/blocked genuinely diverge via locality.
+//! * ALB launches the LB kernel *alongside* the TWC kernel (paper §4,
+//!   separate streams), so by default a round costs
+//!   `scan + max(twc, prefix + lb)`: the inspector's prefix sum gates only
+//!   the LB launch and overlaps TWC. [`CostModel::serial_kernels`] restores
+//!   the historical back-to-back accounting (`scan + twc + prefix + lb`).
+//!
+//! Hot-path memory discipline (DESIGN.md §8): the engine calls
+//! [`Simulator::simulate_into`] with a per-run [`SimScratch`] that keeps the
+//! per-thread/warp/CTA accounting arrays, the probe-line buffer, the pooled
+//! cache model, and the recycled [`KernelStats`] across rounds — the steady
+//! state allocates nothing. [`Simulator::simulate`] wraps it for one-shot
+//! callers, and [`Simulator::simulate_reference`] preserves the
+//! fresh-allocation, lane-by-lane implementation as the golden reference
+//! (`rust/tests/parity.rs`) and the pre-optimization baseline
+//! (`benches/hotpath.rs`).
 
 use crate::gpu::cache::CacheSim;
 use crate::gpu::cost::CostModel;
@@ -23,9 +38,9 @@ use crate::lb::schedule::{Distribution, LbLaunch, Schedule, Unit, VertexItem};
 
 
 /// Per-kernel simulation result.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct KernelStats {
-    pub label: String,
+    pub label: &'static str,
     /// Edges processed by each thread block (the paper's Figures 1 and 5).
     pub block_edges: Vec<u64>,
     /// Modeled cycles per block.
@@ -39,10 +54,15 @@ pub struct KernelStats {
 
 impl KernelStats {
     /// Load-imbalance factor: max block edges / mean block edges.
+    /// An empty kernel (no launched blocks recorded) is perfectly balanced
+    /// by definition: `1.0`, never `0/0`.
     pub fn imbalance_factor(&self) -> f64 {
+        if self.block_edges.is_empty() {
+            return 1.0;
+        }
         let max = *self.block_edges.iter().max().unwrap_or(&0) as f64;
         let sum: u64 = self.block_edges.iter().sum();
-        let mean = sum as f64 / self.block_edges.len().max(1) as f64;
+        let mean = sum as f64 / self.block_edges.len() as f64;
         if mean == 0.0 {
             1.0
         } else {
@@ -52,13 +72,75 @@ impl KernelStats {
 }
 
 /// One round's simulation: the launched kernels plus worklist management.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RoundSim {
     pub kernels: Vec<KernelStats>,
     /// Worklist scan + inspector prefix-sum cycles.
     pub overhead_cycles: u64,
-    /// Total modeled cycles for the round.
+    /// Total modeled cycles for the round. Under the default concurrent
+    /// accounting this is `scan + max(twc, prefix + lb)`, NOT the sum of
+    /// `kernels[*].kernel_cycles` plus `overhead_cycles`.
     pub total_cycles: u64,
+}
+
+/// Reusable per-round simulation buffers (DESIGN.md §8) — one per engine
+/// run; the multi-GPU coordinator owns one per simulated GPU, used only by
+/// that GPU's BSP thread. All vectors retain their capacity between rounds
+/// and the finished [`KernelStats`] are recycled through a pool, so
+/// steady-state rounds perform zero heap allocations (asserted by
+/// `rust/tests/alloc.rs`).
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    thread_c: Vec<u64>,
+    warp_c: Vec<u64>,
+    cta_c: Vec<u64>,
+    line_buf: Vec<u64>,
+    cache: Option<CacheSim>,
+    /// Output of the latest [`Simulator::simulate_into`] call.
+    pub round: RoundSim,
+    /// Recycled kernel stats (keeps the block arrays' capacity).
+    pool: Vec<KernelStats>,
+}
+
+impl SimScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Move last round's kernels back into the pool and zero the summary.
+    fn recycle(&mut self) {
+        while let Some(k) = self.round.kernels.pop() {
+            self.pool.push(k);
+        }
+        self.round.overhead_cycles = 0;
+        self.round.total_cycles = 0;
+    }
+
+    /// A cleared [`KernelStats`], from the pool when possible.
+    fn fresh_kernel(&mut self, label: &'static str) -> KernelStats {
+        let mut k = self.pool.pop().unwrap_or_default();
+        k.label = label;
+        k.block_edges.clear();
+        k.block_cycles.clear();
+        k.kernel_cycles = 0;
+        k.total_edges = 0;
+        k.cache_hits = 0;
+        k.cache_misses = 0;
+        k
+    }
+
+    /// Make sure the pooled cache model exists with `spec`'s geometry
+    /// (rebuilt only when the geometry changes).
+    fn ensure_cache(&mut self, spec: &GpuSpec) {
+        let ok = matches!(
+            &self.cache,
+            Some(c) if c.matches(spec.l1_kb, spec.cache_line_bytes, spec.cache_assoc)
+        );
+        if !ok {
+            self.cache =
+                Some(CacheSim::new(spec.l1_kb, spec.cache_line_bytes, spec.cache_assoc));
+        }
+    }
 }
 
 /// Executes schedules against a fixed GPU + cost model.
@@ -75,9 +157,11 @@ pub struct Simulator {
 
 const _: () = {
     const fn assert_send_sync<T: Send + Sync>() {}
+    const fn assert_send<T: Send>() {}
     assert_send_sync::<Simulator>();
     assert_send_sync::<KernelStats>();
     assert_send_sync::<RoundSim>();
+    assert_send::<SimScratch>();
 };
 
 impl Simulator {
@@ -85,16 +169,56 @@ impl Simulator {
         Simulator { spec, cost }
     }
 
-    /// Simulate one round. `push` charges atomic-update cost per edge
-    /// (push-style operators write remote labels; pull-style do not).
+    /// Simulate one round into freshly-allocated buffers. Convenience
+    /// wrapper over [`simulate_into`](Self::simulate_into) for tests and
+    /// one-shot callers.
     pub fn simulate(&self, sched: &Schedule, push: bool) -> RoundSim {
-        let mut kernels = Vec::with_capacity(2);
-        kernels.push(self.sim_twc(&sched.twc, push));
+        let mut scratch = SimScratch::new();
+        self.simulate_into(sched, push, &mut scratch);
+        scratch.round
+    }
+
+    /// Simulate one round into `scratch.round`, reusing every buffer from
+    /// the previous round. `push` charges atomic-update cost per edge
+    /// (push-style operators write remote labels; pull-style do not).
+    pub fn simulate_into(&self, sched: &Schedule, push: bool, scratch: &mut SimScratch) {
+        scratch.recycle();
+        let twc = self.sim_twc_into(&sched.twc, push, scratch);
+        scratch.round.kernels.push(twc);
         if let Some(lb) = &sched.lb {
             if lb.total_edges() > 0 {
-                kernels.push(self.sim_lb(lb, push));
+                let k = self.sim_lb_into(lb, push, scratch);
+                scratch.round.kernels.push(k);
             }
         }
+        let (overhead, total) = self.combine(&scratch.round.kernels, sched);
+        scratch.round.overhead_cycles = overhead;
+        scratch.round.total_cycles = total;
+    }
+
+    /// The golden fresh-allocation reference: same modeled cycles as
+    /// [`simulate_into`] (asserted by `rust/tests/parity.rs` and the unit
+    /// tests below), implemented with per-call allocations and the
+    /// lane-by-lane LB cache walk. Used by the parity gates and as the
+    /// pre-optimization baseline in `benches/hotpath.rs`; not a hot path.
+    pub fn simulate_reference(&self, sched: &Schedule, push: bool) -> RoundSim {
+        let mut kernels = Vec::with_capacity(2);
+        kernels.push(self.sim_twc_ref(&sched.twc, push));
+        if let Some(lb) = &sched.lb {
+            if lb.total_edges() > 0 {
+                kernels.push(self.sim_lb_ref(lb, push));
+            }
+        }
+        let (overhead_cycles, total_cycles) = self.combine(&kernels, sched);
+        RoundSim { kernels, overhead_cycles, total_cycles }
+    }
+
+    /// Fold kernel times + worklist overheads into the round total.
+    ///
+    /// Concurrent (default): the TWC kernel and the prefix-sum→LB chain run
+    /// on separate streams, so the round is their max plus the scan. Serial
+    /// ([`CostModel::serial_kernels`]): the historical back-to-back sum.
+    fn combine(&self, kernels: &[KernelStats], sched: &Schedule) -> (u64, u64) {
         let scan = sched
             .scan_vertices
             .div_ceil(self.spec.total_threads())
@@ -110,10 +234,14 @@ impl Simulator {
         } else {
             0
         };
-        let overhead_cycles = scan + prefix;
-        let total_cycles =
-            kernels.iter().map(|k| k.kernel_cycles).sum::<u64>() + overhead_cycles;
-        RoundSim { kernels, overhead_cycles, total_cycles }
+        let twc_cycles = kernels.first().map_or(0, |k| k.kernel_cycles);
+        let lb_cycles = kernels.get(1).map_or(0, |k| k.kernel_cycles);
+        let kernel_total = if self.cost.serial_kernels {
+            twc_cycles + prefix + lb_cycles
+        } else {
+            twc_cycles.max(prefix + lb_cycles)
+        };
+        (scan + prefix, scan + kernel_total)
     }
 
     /// Per-edge processing cost for this operator class.
@@ -122,8 +250,259 @@ impl Simulator {
         self.cost.cycles_edge + if push { self.cost.cycles_atomic } else { 0 }
     }
 
-    /// TWC kernel: exact per-thread accounting of the three bins.
-    fn sim_twc(&self, items: &[VertexItem], push: bool) -> KernelStats {
+    /// TWC kernel: exact per-thread accounting of the three bins, into the
+    /// scratch's reused arrays.
+    fn sim_twc_into(
+        &self,
+        items: &[VertexItem],
+        push: bool,
+        scratch: &mut SimScratch,
+    ) -> KernelStats {
+        let s = &self.spec;
+        let nb = s.num_blocks as usize;
+        let tpb = s.threads_per_block as usize;
+        let wpb = s.warps_per_block() as usize;
+        let nthreads = nb * tpb;
+        let nwarps = nb * wpb;
+        let warp = s.warp_size as u64;
+        let ec = self.edge_cost(push);
+
+        let mut k = scratch.fresh_kernel("twc");
+        let thread_c = &mut scratch.thread_c;
+        let warp_c = &mut scratch.warp_c;
+        let cta_c = &mut scratch.cta_c;
+        thread_c.clear();
+        thread_c.resize(nthreads, 0);
+        warp_c.clear();
+        warp_c.resize(nwarps, 0);
+        cta_c.clear();
+        cta_c.resize(nb, 0);
+        k.block_edges.resize(nb, 0);
+
+        let (mut ti, mut wi, mut bi) = (0usize, 0usize, 0usize);
+        for item in items {
+            k.total_edges += item.degree;
+            match item.unit {
+                Unit::Thread => {
+                    let t = ti % nthreads;
+                    thread_c[t] += item.degree * ec;
+                    k.block_edges[t / tpb] += item.degree;
+                    ti += 1;
+                }
+                Unit::Warp => {
+                    let w = wi % nwarps;
+                    warp_c[w] += item.degree.div_ceil(warp) * ec;
+                    k.block_edges[w / wpb] += item.degree;
+                    wi += 1;
+                }
+                Unit::Block => {
+                    let b = bi % nb;
+                    cta_c[b] += item.degree.div_ceil(tpb as u64) * ec;
+                    k.block_edges[b] += item.degree;
+                    bi += 1;
+                }
+            }
+        }
+
+        k.block_cycles.resize(nb, 0);
+        for b in 0..nb {
+            let mut worst = 0u64;
+            for t in b * tpb..(b + 1) * tpb {
+                let w = t / s.warp_size as usize;
+                let c = thread_c[t] + warp_c[w] + cta_c[b];
+                worst = worst.max(c);
+            }
+            k.block_cycles[b] = worst;
+        }
+        k.kernel_cycles =
+            self.cost.cycles_launch + k.block_cycles.iter().max().copied().unwrap_or(0);
+        k
+    }
+
+    /// LB kernel: even edge split + cache-modeled binary search, into the
+    /// scratch's reused buffers. The cyclic distribution takes a
+    /// segment-jumping fast path that reproduces the lane-by-lane walk's
+    /// probe sequence and line set exactly (asserted against
+    /// [`simulate_reference`] by the tests below): within one warp step the
+    /// lane edge ids are consecutive, so the probe path re-searches only at
+    /// prefix-segment boundaries and the touched edge-data lines form one
+    /// contiguous range.
+    fn sim_lb_into(&self, lb: &LbLaunch, push: bool, scratch: &mut SimScratch) -> KernelStats {
+        let s = &self.spec;
+        let nb = s.num_blocks as usize;
+        let tpb = s.threads_per_block as u64;
+        let p = s.total_threads();
+        let total = lb.total_edges();
+        let w = total.div_ceil(p); // edges per thread (paper line 15)
+        let ec = self.edge_cost(push);
+
+        // --- binary-search cost via the cache model (sampled warps) ---
+        let warp_lanes = s.warp_size as u64;
+        let nwarps = s.total_warps();
+        let total_warp_steps = nwarps.saturating_mul(w);
+        let cap = self.cost.lb_warp_step_sample_cap.max(1);
+        // Sample whole warps so intra-warp cache state stays faithful.
+        let warps_to_sim = if total_warp_steps <= cap {
+            nwarps
+        } else {
+            (cap / w.max(1)).clamp(1, nwarps)
+        };
+        let warp_stride = (nwarps / warps_to_sim).max(1);
+
+        let mut k = scratch.fresh_kernel("lb");
+        scratch.ensure_cache(s);
+        // Split borrows: the cache and the line buffer live in different
+        // scratch fields.
+        let SimScratch { line_buf, cache, .. } = scratch;
+        let cache = cache.as_mut().expect("built by ensure_cache");
+
+        let mut sim_search_cycles = 0u64;
+        let (mut hits, mut misses) = (0u64, 0u64);
+        let mut simulated = 0u64;
+        let line_bytes = s.cache_line_bytes as u64;
+        let do_search = lb.search;
+        let mut widx = 0u64;
+        while widx < nwarps && simulated < warps_to_sim {
+            cache.reset_all();
+            for j in 0..w {
+                line_buf.clear();
+                match lb.distribution {
+                    Distribution::Cyclic => {
+                        // Fast path: this step's active edge ids are the
+                        // contiguous range [start, end) — identical probe
+                        // trajectories compress to one search per prefix
+                        // segment, and the edge-data lines are one run.
+                        let start = widx * warp_lanes + j * p;
+                        if start >= total {
+                            continue;
+                        }
+                        let end = (start + warp_lanes).min(total);
+                        if do_search {
+                            let mut eid = start;
+                            while eid < end {
+                                let idx =
+                                    probe_lines(&lb.prefix, eid, line_bytes, line_buf);
+                                // Next search happens at the first edge id
+                                // beyond this source's segment (the lane
+                                // that leaves the segment re-searches).
+                                eid = lb.prefix[idx];
+                            }
+                        }
+                        let lo = (start * 8) / line_bytes;
+                        let hi = ((end - 1) * 8) / line_bytes;
+                        for line in lo..=hi {
+                            line_buf.push(EDGE_REGION + line);
+                        }
+                    }
+                    Distribution::Blocked => {
+                        // Lane-by-lane walk with identical-trajectory
+                        // compression: a lane whose eid falls in the
+                        // previous lane's prefix segment contributes no new
+                        // probe lines (the sort+dedup below would drop them
+                        // anyway).
+                        let (mut seg_lo, mut seg_hi) = (u64::MAX, u64::MAX);
+                        let mut lanes_active = 0u64;
+                        for lane in 0..warp_lanes {
+                            let t = widx * warp_lanes + lane;
+                            let eid = t * w + j;
+                            if eid >= total {
+                                continue;
+                            }
+                            lanes_active += 1;
+                            if do_search && !(seg_lo <= eid && eid < seg_hi) {
+                                let idx =
+                                    probe_lines(&lb.prefix, eid, line_bytes, line_buf);
+                                seg_lo = if idx == 0 { 0 } else { lb.prefix[idx - 1] };
+                                seg_hi = lb.prefix[idx];
+                            }
+                            // Edge-data touch (col_idx + weight, 8 B at eid)
+                            // in a region disjoint from the prefix array.
+                            line_buf.push(EDGE_REGION + (eid * 8) / line_bytes);
+                        }
+                        if lanes_active == 0 {
+                            continue;
+                        }
+                    }
+                }
+                // Coalescing: lanes touching the same line in the same
+                // lockstep issue one transaction; prefix probes go through
+                // the per-SM cache (aligned trajectories -> hits — the
+                // cyclic case), edge-data lines amortize across each lane's
+                // contiguous walk. One coalesced edge transaction per step
+                // is already priced into `cycles_edge`, so the first
+                // edge-region line is free.
+                line_buf.sort_unstable();
+                line_buf.dedup();
+                let mut first_edge = true;
+                for &line in line_buf.iter() {
+                    let hit = cache.access(line * line_bytes);
+                    if line >= EDGE_REGION && first_edge {
+                        first_edge = false;
+                        continue; // the baseline coalesced transaction
+                    }
+                    sim_search_cycles += if hit {
+                        self.cost.cycles_mem_hit
+                    } else {
+                        self.cost.cycles_mem_miss
+                    };
+                }
+            }
+            hits += cache.hits();
+            misses += cache.misses();
+            simulated += 1;
+            widx += warp_stride;
+        }
+        let search_per_warp = if simulated > 0 {
+            sim_search_cycles / simulated
+        } else {
+            0
+        };
+        // Extrapolate sampled hit/miss counts to the full launch.
+        let scale = nwarps as f64 / simulated.max(1) as f64;
+        k.cache_hits = (hits as f64 * scale) as u64;
+        k.cache_misses = (misses as f64 * scale) as u64;
+
+        // --- per-block edges and cycles ---
+        k.block_edges.resize(nb, 0);
+        for b in 0..nb as u64 {
+            let mut edges = 0u64;
+            for t in b * tpb..(b + 1) * tpb {
+                edges += match lb.distribution {
+                    Distribution::Cyclic => {
+                        if t < total {
+                            (total - t).div_ceil(p)
+                        } else {
+                            0
+                        }
+                    }
+                    Distribution::Blocked => {
+                        let lo = t * w;
+                        if lo < total {
+                            w.min(total - lo)
+                        } else {
+                            0
+                        }
+                    }
+                };
+            }
+            k.block_edges[b as usize] = edges;
+        }
+        k.block_cycles.resize(nb, 0);
+        k.block_cycles.fill(w * ec + search_per_warp);
+        // Enterprise-style grid launches pay one launch per processed
+        // vertex (no shared prefix kernel); the searched LB kernel is one
+        // launch total.
+        let launches = if lb.search { 1 } else { lb.vertices.len().max(1) as u64 };
+        k.kernel_cycles = launches * self.cost.cycles_launch
+            + k.block_cycles.iter().max().copied().unwrap_or(0);
+        k.total_edges = total;
+        k
+    }
+
+    // ------------------------------------------------ reference (golden)
+
+    /// TWC kernel, fresh-allocation reference implementation.
+    fn sim_twc_ref(&self, items: &[VertexItem], push: bool) -> KernelStats {
         let s = &self.spec;
         let nb = s.num_blocks as usize;
         let tpb = s.threads_per_block as usize;
@@ -177,7 +556,7 @@ impl Simulator {
         let kernel_cycles =
             self.cost.cycles_launch + block_cycles.iter().max().copied().unwrap_or(0);
         KernelStats {
-            label: "twc".into(),
+            label: "twc",
             block_edges,
             block_cycles,
             kernel_cycles,
@@ -187,22 +566,20 @@ impl Simulator {
         }
     }
 
-    /// LB kernel: even edge split + cache-modeled binary search.
-    fn sim_lb(&self, lb: &LbLaunch, push: bool) -> KernelStats {
+    /// LB kernel, fresh-allocation lane-by-lane reference implementation.
+    fn sim_lb_ref(&self, lb: &LbLaunch, push: bool) -> KernelStats {
         let s = &self.spec;
         let nb = s.num_blocks as usize;
         let tpb = s.threads_per_block as u64;
         let p = s.total_threads();
         let total = lb.total_edges();
-        let w = total.div_ceil(p); // edges per thread (paper line 15)
+        let w = total.div_ceil(p);
         let ec = self.edge_cost(push);
 
-        // --- binary-search cost via the cache model (sampled warps) ---
         let warp_lanes = s.warp_size as u64;
         let nwarps = s.total_warps();
         let total_warp_steps = nwarps.saturating_mul(w);
         let cap = self.cost.lb_warp_step_sample_cap.max(1);
-        // Sample whole warps so intra-warp cache state stays faithful.
         let warps_to_sim = if total_warp_steps <= cap {
             nwarps
         } else {
@@ -215,10 +592,6 @@ impl Simulator {
         let mut simulated = 0u64;
         let line_bytes = s.cache_line_bytes as u64;
         let do_search = lb.search;
-        // Scratch buffers reused across steps (§Perf: zero allocation in
-        // the per-step loop, and adjacent lanes with identical search
-        // trajectories — the dominant cyclic case — are compressed before
-        // the sort instead of after, cutting the sort input ~16x).
         let mut line_buf: Vec<u64> = Vec::with_capacity(s.warp_size as usize * 24);
         let mut widx = 0u64;
         while widx < nwarps && simulated < warps_to_sim {
@@ -226,13 +599,6 @@ impl Simulator {
                 CacheSim::new(s.l1_kb, s.cache_line_bytes, s.cache_assoc);
             for j in 0..w {
                 line_buf.clear();
-                // Identical-trajectory compression: a binary search's probe
-                // path depends only on which prefix *segment* the edge id
-                // lands in, so a lane whose eid falls in the previous
-                // lane's segment contributes no new lines (the sort+dedup
-                // below would drop them anyway). In the cyclic layout,
-                // consecutive lanes nearly always share a segment, so one
-                // search per step does the work of 32 (§Perf).
                 let (mut seg_lo, mut seg_hi) = (u64::MAX, u64::MAX);
                 let mut lanes_active = 0u64;
                 for lane in 0..warp_lanes {
@@ -250,20 +616,11 @@ impl Simulator {
                         seg_lo = if idx == 0 { 0 } else { lb.prefix[idx - 1] };
                         seg_hi = lb.prefix[idx];
                     }
-                    // Edge-data touch (col_idx + weight, 8 B at eid) in an
-                    // address region disjoint from the prefix array.
                     line_buf.push(EDGE_REGION + (eid * 8) / line_bytes);
                 }
                 if lanes_active == 0 {
                     continue;
                 }
-                // Coalescing: lanes touching the same line in the same
-                // lockstep issue one transaction; prefix probes go through
-                // the per-SM cache (aligned trajectories -> hits — the
-                // cyclic case), edge-data lines amortize across each lane's
-                // contiguous walk. One coalesced edge transaction per step
-                // is already priced into `cycles_edge`, so the first
-                // edge-region line is free.
                 line_buf.sort_unstable();
                 line_buf.dedup();
                 let mut first_edge = true;
@@ -271,7 +628,7 @@ impl Simulator {
                     let hit = cache.access(line * line_bytes);
                     if line >= EDGE_REGION && first_edge {
                         first_edge = false;
-                        continue; // the baseline coalesced transaction
+                        continue;
                     }
                     sim_search_cycles += if hit {
                         self.cost.cycles_mem_hit
@@ -290,12 +647,10 @@ impl Simulator {
         } else {
             0
         };
-        // Extrapolate sampled hit/miss counts to the full launch.
         let scale = nwarps as f64 / simulated.max(1) as f64;
         hits = (hits as f64 * scale) as u64;
         misses = (misses as f64 * scale) as u64;
 
-        // --- per-block edges and cycles ---
         let mut block_edges = vec![0u64; nb];
         for b in 0..nb as u64 {
             let mut edges = 0u64;
@@ -323,14 +678,11 @@ impl Simulator {
         let block_cycles: Vec<u64> = (0..nb)
             .map(|_| w * ec + search_per_warp)
             .collect();
-        // Enterprise-style grid launches pay one launch per processed
-        // vertex (no shared prefix kernel); the searched LB kernel is one
-        // launch total.
         let launches = if lb.search { 1 } else { lb.vertices.len().max(1) as u64 };
         let kernel_cycles = launches * self.cost.cycles_launch
             + block_cycles.iter().max().copied().unwrap_or(0);
         KernelStats {
-            label: "lb".into(),
+            label: "lb",
             block_edges,
             block_cycles,
             kernel_cycles,
@@ -581,7 +933,7 @@ mod tests {
     #[test]
     fn imbalance_factor_of_uniform_is_one() {
         let k = KernelStats {
-            label: "x".into(),
+            label: "x",
             block_edges: vec![5, 5, 5, 5],
             block_cycles: vec![1, 1, 1, 1],
             kernel_cycles: 1,
@@ -590,5 +942,192 @@ mod tests {
             cache_misses: 0,
         };
         assert!((k.imbalance_factor() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_factor_of_empty_kernel_is_one() {
+        // No recorded blocks (or all-zero blocks) must never produce NaN.
+        let empty = KernelStats { label: "x", ..KernelStats::default() };
+        assert_eq!(empty.imbalance_factor(), 1.0);
+        let zeros = KernelStats {
+            label: "x",
+            block_edges: vec![0, 0, 0],
+            ..KernelStats::default()
+        };
+        assert_eq!(zeros.imbalance_factor(), 1.0);
+        assert!(!empty.imbalance_factor().is_nan());
+    }
+
+    // ----------------------- scratch-reuse + reference parity gates
+
+    /// A few structurally-different schedules covering both kernels, both
+    /// distributions, search on/off, ragged tails, and empty cases.
+    fn assorted_schedules(s: &Simulator) -> Vec<Schedule> {
+        let p = s.spec.total_threads();
+        let mut out = vec![
+            Schedule { twc: vec![], lb: None, scan_vertices: 7, prefix_items: 0 },
+            Schedule {
+                twc: thread_items(777, 3),
+                lb: None,
+                scan_vertices: 777,
+                prefix_items: 0,
+            },
+            Schedule {
+                twc: vec![
+                    VertexItem { vertex: 0, degree: 100, unit: Unit::Warp },
+                    VertexItem { vertex: 1, degree: 9_000, unit: Unit::Block },
+                ],
+                lb: None,
+                scan_vertices: 2,
+                prefix_items: 0,
+            },
+        ];
+        for dist in [Distribution::Cyclic, Distribution::Blocked] {
+            for search in [true, false] {
+                let prefix: Vec<u64> = (1..=100u64).map(|i| i * 977).collect();
+                out.push(Schedule {
+                    twc: thread_items(50, 2),
+                    lb: Some(LbLaunch {
+                        vertices: (0..100).collect(),
+                        prefix,
+                        distribution: dist,
+                        search,
+                    }),
+                    scan_vertices: 150,
+                    prefix_items: if search { 100 } else { 0 },
+                });
+            }
+            // Ragged tail: total not divisible by p, fewer edges than
+            // threads in the last step.
+            out.push(Schedule {
+                twc: vec![],
+                lb: Some(LbLaunch {
+                    vertices: vec![0, 1],
+                    prefix: vec![p * 2 + 13, p * 2 + 14],
+                    distribution: dist,
+                    search: true,
+                }),
+                scan_vertices: 0,
+                prefix_items: 2,
+            });
+        }
+        out
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_simulation() {
+        // One scratch threaded through many structurally-different rounds
+        // must reproduce the freshly-allocated runs bit-for-bit.
+        let s = sim();
+        let mut scratch = SimScratch::new();
+        for push in [true, false] {
+            for sched in assorted_schedules(&s) {
+                let fresh = s.simulate(&sched, push);
+                s.simulate_into(&sched, push, &mut scratch);
+                assert_eq!(scratch.round, fresh, "push={push}");
+            }
+        }
+    }
+
+    #[test]
+    fn reference_matches_optimized_simulation() {
+        // The lane-by-lane fresh-allocation reference and the optimized
+        // scratch path are the same model: identical kernels, cycles, and
+        // cache counts on every assorted schedule.
+        let s = sim();
+        for push in [true, false] {
+            for sched in assorted_schedules(&s) {
+                let opt = s.simulate(&sched, push);
+                let r = s.simulate_reference(&sched, push);
+                assert_eq!(opt, r, "push={push}");
+            }
+        }
+    }
+
+    #[test]
+    fn reference_matches_on_k80_geometry() {
+        // Re-run the parity gate on the paper-faithful geometry so the
+        // cyclic fast path is exercised with 26,624 threads too.
+        let s = Simulator::new(GpuSpec::k80_like(), CostModel::default());
+        for sched in assorted_schedules(&s) {
+            assert_eq!(s.simulate(&sched, true), s.simulate_reference(&sched, true));
+        }
+    }
+
+    #[test]
+    fn concurrent_rounds_cost_launch_plus_max() {
+        // With both kernels launched, the default accounting charges
+        // scan + max(twc, prefix + lb); serial restores the historical sum.
+        let spec = GpuSpec::default_sim();
+        let conc = Simulator::new(spec.clone(), CostModel::default());
+        let ser = Simulator::new(spec, CostModel::serial());
+        let sched = Schedule {
+            twc: vec![VertexItem { vertex: 0, degree: 50_000, unit: Unit::Block }],
+            lb: Some(LbLaunch {
+                vertices: vec![1],
+                prefix: vec![200_000],
+                distribution: Distribution::Cyclic,
+                search: true,
+            }),
+            scan_vertices: 0,
+            prefix_items: 1,
+        };
+        let c = conc.simulate(&sched, true);
+        let s = ser.simulate(&sched, true);
+        // Kernels themselves are identical; only the fold differs.
+        assert_eq!(c.kernels, s.kernels);
+        assert_eq!(c.overhead_cycles, s.overhead_cycles);
+        let twc = c.kernels[0].kernel_cycles;
+        let lb = c.kernels[1].kernel_cycles;
+        let prefix = c.overhead_cycles; // scan_vertices = 0
+        assert_eq!(c.total_cycles, twc.max(prefix + lb));
+        assert_eq!(s.total_cycles, twc + prefix + lb);
+        assert!(c.total_cycles < s.total_cycles);
+    }
+
+    #[test]
+    fn concurrent_equals_serial_on_single_kernel_rounds() {
+        // No LB launch -> the two accountings agree (TWC-only strategies
+        // are unaffected by the concurrency fix).
+        let spec = GpuSpec::default_sim();
+        let conc = Simulator::new(spec.clone(), CostModel::default());
+        let ser = Simulator::new(spec, CostModel::serial());
+        let sched = Schedule {
+            twc: thread_items(500, 9),
+            lb: None,
+            scan_vertices: 500,
+            prefix_items: 0,
+        };
+        assert_eq!(
+            conc.simulate(&sched, true).total_cycles,
+            ser.simulate(&sched, true).total_cycles
+        );
+    }
+
+    #[test]
+    fn scratch_pool_recycles_kernel_stats() {
+        let s = sim();
+        let mut scratch = SimScratch::new();
+        let sched = Schedule {
+            twc: thread_items(10, 4),
+            lb: Some(LbLaunch {
+                vertices: vec![0],
+                prefix: vec![50_000],
+                distribution: Distribution::Cyclic,
+                search: true,
+            }),
+            scan_vertices: 10,
+            prefix_items: 1,
+        };
+        s.simulate_into(&sched, true, &mut scratch);
+        assert_eq!(scratch.round.kernels.len(), 2);
+        let caps: Vec<usize> =
+            scratch.round.kernels.iter().map(|k| k.block_edges.capacity()).collect();
+        s.simulate_into(&sched, true, &mut scratch);
+        // Same kernels come back out of the pool: no capacity regrowth.
+        let caps2: Vec<usize> =
+            scratch.round.kernels.iter().map(|k| k.block_edges.capacity()).collect();
+        assert_eq!(caps, caps2);
+        assert!(scratch.pool.is_empty(), "both pooled kernels back in use");
     }
 }

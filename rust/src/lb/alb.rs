@@ -18,28 +18,33 @@
 
 use crate::graph::CsrGraph;
 use crate::gpu::GpuSpec;
-use crate::lb::schedule::{Distribution, LbLaunch, Schedule, VertexItem};
+use crate::lb::schedule::{
+    Distribution, LbLaunch, Schedule, ScheduleScratch, VertexItem,
+};
 use crate::lb::{degree, twc, Direction};
 
 /// Outcome of the inspector phase — exposed for tests and metrics.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Inspection {
     pub huge: Vec<u32>,
     pub prefix: Vec<u64>,
     pub rest: Vec<VertexItem>,
 }
 
-/// Split the active set at `threshold` (paper Fig. 3 lines 3–9 + line 31).
-pub fn inspect(
+/// The threshold split itself, writing into caller-owned buffers (cleared
+/// first) — shared by [`inspect_into`] and [`schedule_into`] so the two
+/// stay semantically identical.
+#[allow(clippy::too_many_arguments)]
+fn split_into(
     active: &[u32],
     g: &CsrGraph,
     dir: Direction,
     spec: &GpuSpec,
     threshold: u64,
-) -> Inspection {
-    let mut huge = Vec::new();
-    let mut prefix = Vec::new();
-    let mut rest = Vec::with_capacity(active.len());
+    huge: &mut Vec<u32>,
+    prefix: &mut Vec<u64>,
+    rest: &mut Vec<VertexItem>,
+) {
     let mut run = 0u64;
     for &v in active {
         let d = degree(g, v, dir);
@@ -51,7 +56,38 @@ pub fn inspect(
             rest.push(VertexItem { vertex: v, degree: d, unit: twc::bin(d, spec) });
         }
     }
-    Inspection { huge, prefix, rest }
+}
+
+/// Split the active set at `threshold` (paper Fig. 3 lines 3–9 + line 31).
+pub fn inspect(
+    active: &[u32],
+    g: &CsrGraph,
+    dir: Direction,
+    spec: &GpuSpec,
+    threshold: u64,
+) -> Inspection {
+    let mut ins = Inspection::default();
+    ins.rest.reserve(active.len());
+    inspect_into(active, g, dir, spec, threshold, &mut ins);
+    ins
+}
+
+/// [`inspect`] into a caller-owned, reusable [`Inspection`] (cleared first).
+pub fn inspect_into(
+    active: &[u32],
+    g: &CsrGraph,
+    dir: Direction,
+    spec: &GpuSpec,
+    threshold: u64,
+    ins: &mut Inspection,
+) {
+    ins.huge.clear();
+    ins.prefix.clear();
+    ins.rest.clear();
+    split_into(
+        active, g, dir, spec, threshold,
+        &mut ins.huge, &mut ins.prefix, &mut ins.rest,
+    );
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -64,16 +100,41 @@ pub fn schedule(
     threshold: u64,
     scan_vertices: u64,
 ) -> Schedule {
-    let ins = inspect(active, g, dir, spec, threshold);
-    let prefix_items = ins.huge.len() as u64;
+    let mut scratch = ScheduleScratch::new();
+    schedule_into(
+        active, g, dir, spec, distribution, threshold, scan_vertices,
+        &mut scratch,
+    );
+    scratch.sched
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn schedule_into(
+    active: &[u32],
+    g: &CsrGraph,
+    dir: Direction,
+    spec: &GpuSpec,
+    distribution: Distribution,
+    threshold: u64,
+    scan_vertices: u64,
+    out: &mut ScheduleScratch,
+) {
+    out.reset();
+    let (mut huge, mut prefix) = out.lb_buffers();
+    split_into(
+        active, g, dir, spec, threshold,
+        &mut huge, &mut prefix, &mut out.sched.twc,
+    );
+    out.sched.prefix_items = huge.len() as u64;
+    out.sched.scan_vertices = scan_vertices;
     // Benefit check (§4): only pay the LB launch when the huge bin is
     // non-empty; otherwise this degenerates to plain TWC.
-    let lb = if ins.huge.is_empty() {
-        None
+    if huge.is_empty() {
+        out.restore_lb_buffers(huge, prefix);
     } else {
-        Some(LbLaunch { vertices: ins.huge, prefix: ins.prefix, distribution, search: true })
-    };
-    Schedule { twc: ins.rest, lb, scan_vertices, prefix_items }
+        out.sched.lb =
+            Some(LbLaunch { vertices: huge, prefix, distribution, search: true });
+    }
 }
 
 #[cfg(test)]

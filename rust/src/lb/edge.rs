@@ -8,7 +8,7 @@
 //! only the huge bin).
 
 use crate::graph::CsrGraph;
-use crate::lb::schedule::{Distribution, LbLaunch, Schedule};
+use crate::lb::schedule::{Distribution, LbLaunch, Schedule, ScheduleScratch};
 use crate::lb::{degree, Direction};
 
 pub fn schedule(
@@ -18,18 +18,35 @@ pub fn schedule(
     distribution: Distribution,
     scan_vertices: u64,
 ) -> Schedule {
-    let mut prefix = Vec::with_capacity(active.len());
+    let mut scratch = ScheduleScratch::new();
+    schedule_into(active, g, dir, distribution, scan_vertices, &mut scratch);
+    scratch.sched
+}
+
+pub fn schedule_into(
+    active: &[u32],
+    g: &CsrGraph,
+    dir: Direction,
+    distribution: Distribution,
+    scan_vertices: u64,
+    out: &mut ScheduleScratch,
+) {
+    out.reset();
+    let (mut vertices, mut prefix) = out.lb_buffers();
     let mut run = 0u64;
     for &v in active {
         run += degree(g, v, dir);
         prefix.push(run);
     }
-    let lb = if run > 0 {
-        Some(LbLaunch { vertices: active.to_vec(), prefix, distribution, search: true })
+    if run > 0 {
+        vertices.extend_from_slice(active);
+        out.sched.lb =
+            Some(LbLaunch { vertices, prefix, distribution, search: true });
     } else {
-        None
-    };
-    Schedule { twc: Vec::new(), lb, scan_vertices, prefix_items: active.len() as u64 }
+        out.restore_lb_buffers(vertices, prefix);
+    }
+    out.sched.scan_vertices = scan_vertices;
+    out.sched.prefix_items = active.len() as u64;
 }
 
 #[cfg(test)]

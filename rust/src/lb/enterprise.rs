@@ -13,7 +13,9 @@
 
 use crate::graph::CsrGraph;
 use crate::gpu::GpuSpec;
-use crate::lb::schedule::{Distribution, LbLaunch, Schedule, VertexItem};
+use crate::lb::schedule::{
+    Distribution, LbLaunch, Schedule, ScheduleScratch, VertexItem,
+};
 use crate::lb::{degree, twc, Direction};
 
 /// Degree bound for the "extremely large" bin. Enterprise used a fixed
@@ -27,10 +29,22 @@ pub fn schedule(
     spec: &GpuSpec,
     scan_vertices: u64,
 ) -> Schedule {
+    let mut scratch = ScheduleScratch::new();
+    schedule_into(active, g, dir, spec, scan_vertices, &mut scratch);
+    scratch.sched
+}
+
+pub fn schedule_into(
+    active: &[u32],
+    g: &CsrGraph,
+    dir: Direction,
+    spec: &GpuSpec,
+    scan_vertices: u64,
+    out: &mut ScheduleScratch,
+) {
+    out.reset();
     let threshold = spec.huge_threshold();
-    let mut huge = Vec::new();
-    let mut prefix = Vec::new();
-    let mut rest = Vec::with_capacity(active.len());
+    let (mut huge, mut prefix) = out.lb_buffers();
     let mut run = 0u64;
     for &v in active {
         let d = degree(g, v, dir);
@@ -39,21 +53,25 @@ pub fn schedule(
             huge.push(v);
             prefix.push(run);
         } else {
-            rest.push(VertexItem { vertex: v, degree: d, unit: twc::bin(d, spec) });
+            out.sched.twc.push(VertexItem {
+                vertex: v,
+                degree: d,
+                unit: twc::bin(d, spec),
+            });
         }
     }
-    let lb = if huge.is_empty() {
-        None
+    if huge.is_empty() {
+        out.restore_lb_buffers(huge, prefix);
     } else {
-        Some(LbLaunch {
+        out.sched.lb = Some(LbLaunch {
             vertices: huge,
             prefix,
             distribution: Distribution::Blocked,
             // One launch per hub, no edge-id search (single known source).
             search: false,
-        })
-    };
-    Schedule { twc: rest, lb, scan_vertices, prefix_items: 0 }
+        });
+    }
+    out.sched.scan_vertices = scan_vertices;
 }
 
 #[cfg(test)]

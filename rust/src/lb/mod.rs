@@ -22,7 +22,9 @@ pub mod vertex;
 
 use crate::graph::CsrGraph;
 use crate::gpu::GpuSpec;
-pub use schedule::{Distribution, LbLaunch, Schedule, Unit, VertexItem};
+pub use schedule::{
+    Distribution, LbLaunch, Schedule, ScheduleScratch, Unit, VertexItem,
+};
 
 /// Which edge set an operator traverses (push reads out-edges, pull reads
 /// in-edges) — binning uses the matching degree.
@@ -69,8 +71,10 @@ impl Balancer {
         }
     }
 
-    /// Build the round schedule. `scan_vertices` is the worklist-discovery
-    /// cost the engine charges (dense: |V|; sparse: |active|).
+    /// Build the round schedule into freshly-allocated buffers. Convenience
+    /// wrapper over [`schedule_into`](Self::schedule_into) for tests and
+    /// one-shot callers; the engine's hot loop uses `schedule_into` with a
+    /// per-run [`ScheduleScratch`] so the steady state allocates nothing.
     pub fn schedule(
         &self,
         active: &[u32],
@@ -79,13 +83,34 @@ impl Balancer {
         spec: &GpuSpec,
         scan_vertices: u64,
     ) -> Schedule {
+        let mut scratch = ScheduleScratch::new();
+        self.schedule_into(active, g, dir, spec, scan_vertices, &mut scratch);
+        scratch.sched
+    }
+
+    /// Build the round schedule into caller-owned buffers (`out` is reset
+    /// first). `scan_vertices` is the worklist-discovery cost the engine
+    /// charges (dense: |V|; sparse: |active|).
+    pub fn schedule_into(
+        &self,
+        active: &[u32],
+        g: &CsrGraph,
+        dir: Direction,
+        spec: &GpuSpec,
+        scan_vertices: u64,
+        out: &mut ScheduleScratch,
+    ) {
         match self {
-            Balancer::Vertex => vertex::schedule(active, g, dir, scan_vertices),
-            Balancer::Twc => twc::schedule(active, g, dir, spec, scan_vertices),
-            Balancer::EdgeLb { distribution } => {
-                edge::schedule(active, g, dir, *distribution, scan_vertices)
+            Balancer::Vertex => {
+                vertex::schedule_into(active, g, dir, scan_vertices, out)
             }
-            Balancer::Alb { distribution, threshold } => alb::schedule(
+            Balancer::Twc => {
+                twc::schedule_into(active, g, dir, spec, scan_vertices, out)
+            }
+            Balancer::EdgeLb { distribution } => {
+                edge::schedule_into(active, g, dir, *distribution, scan_vertices, out)
+            }
+            Balancer::Alb { distribution, threshold } => alb::schedule_into(
                 active,
                 g,
                 dir,
@@ -93,9 +118,10 @@ impl Balancer {
                 *distribution,
                 threshold.unwrap_or_else(|| spec.huge_threshold()),
                 scan_vertices,
+                out,
             ),
             Balancer::Enterprise => {
-                enterprise::schedule(active, g, dir, spec, scan_vertices)
+                enterprise::schedule_into(active, g, dir, spec, scan_vertices, out)
             }
         }
     }

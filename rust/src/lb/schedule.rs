@@ -60,7 +60,7 @@ impl LbLaunch {
 }
 
 /// One round's kernel launches plus worklist-management accounting.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Schedule {
     /// TWC kernel work items, in worklist order.
     pub twc: Vec<VertexItem>,
@@ -78,6 +78,56 @@ impl Schedule {
     pub fn total_edges(&self) -> u64 {
         let twc: u64 = self.twc.iter().map(|i| i.degree).sum();
         twc + self.lb.as_ref().map_or(0, |l| l.total_edges())
+    }
+}
+
+/// Reusable schedule buffers (DESIGN.md §8): the engine owns one of these
+/// per run (the coordinator: one per simulated GPU) and every
+/// [`crate::lb::Balancer::schedule_into`] call refills `sched` in place.
+/// When a round triggers the LB kernel, its `vertices`/`prefix` vecs live
+/// inside `sched.lb`; [`reset`](ScheduleScratch::reset) recovers them into
+/// the spares, so the steady state allocates nothing once capacities warm.
+#[derive(Debug, Default)]
+pub struct ScheduleScratch {
+    pub sched: Schedule,
+    spare_vertices: Vec<u32>,
+    spare_prefix: Vec<u64>,
+}
+
+impl ScheduleScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Clear for the next round, recovering the LB buffers' capacity.
+    pub fn reset(&mut self) {
+        self.sched.twc.clear();
+        self.sched.scan_vertices = 0;
+        self.sched.prefix_items = 0;
+        if let Some(lb) = self.sched.lb.take() {
+            self.spare_vertices = lb.vertices;
+            self.spare_vertices.clear();
+            self.spare_prefix = lb.prefix;
+            self.spare_prefix.clear();
+        }
+    }
+
+    /// Hand out the (empty, capacity-retaining) LB buffers for a strategy
+    /// to fill. A strategy that ends up not launching the LB kernel must
+    /// give them back via [`restore_lb_buffers`](Self::restore_lb_buffers).
+    pub fn lb_buffers(&mut self) -> (Vec<u32>, Vec<u64>) {
+        (
+            std::mem::take(&mut self.spare_vertices),
+            std::mem::take(&mut self.spare_prefix),
+        )
+    }
+
+    /// Return unused LB buffers so their capacity survives to next round.
+    pub fn restore_lb_buffers(&mut self, mut vertices: Vec<u32>, mut prefix: Vec<u64>) {
+        vertices.clear();
+        prefix.clear();
+        self.spare_vertices = vertices;
+        self.spare_prefix = prefix;
     }
 }
 
@@ -105,6 +155,29 @@ mod tests {
             search: true,
         };
         assert_eq!(lb.total_edges(), 0);
+    }
+
+    #[test]
+    fn scratch_reset_recovers_lb_capacity() {
+        let mut s = ScheduleScratch::new();
+        let (mut v, mut p) = s.lb_buffers();
+        v.extend_from_slice(&[1, 2, 3]);
+        p.extend_from_slice(&[10, 20, 30]);
+        let vcap = v.capacity();
+        s.sched.lb = Some(LbLaunch {
+            vertices: v,
+            prefix: p,
+            distribution: Distribution::Cyclic,
+            search: true,
+        });
+        s.sched.twc.push(VertexItem { vertex: 9, degree: 5, unit: Unit::Thread });
+        s.reset();
+        assert!(s.sched.twc.is_empty());
+        assert!(s.sched.lb.is_none());
+        let (v2, p2) = s.lb_buffers();
+        assert!(v2.is_empty() && p2.is_empty());
+        assert!(v2.capacity() >= vcap, "capacity must survive reset");
+        s.restore_lb_buffers(v2, p2);
     }
 
     #[test]

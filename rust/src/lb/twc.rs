@@ -8,7 +8,7 @@
 
 use crate::graph::CsrGraph;
 use crate::gpu::GpuSpec;
-use crate::lb::schedule::{Schedule, Unit, VertexItem};
+use crate::lb::schedule::{Schedule, ScheduleScratch, Unit, VertexItem};
 use crate::lb::{degree, Direction};
 
 /// Bin one degree per the TWC thresholds.
@@ -30,14 +30,25 @@ pub fn schedule(
     spec: &GpuSpec,
     scan_vertices: u64,
 ) -> Schedule {
-    let twc = active
-        .iter()
-        .map(|&v| {
-            let d = degree(g, v, dir);
-            VertexItem { vertex: v, degree: d, unit: bin(d, spec) }
-        })
-        .collect();
-    Schedule { twc, lb: None, scan_vertices, prefix_items: 0 }
+    let mut scratch = ScheduleScratch::new();
+    schedule_into(active, g, dir, spec, scan_vertices, &mut scratch);
+    scratch.sched
+}
+
+pub fn schedule_into(
+    active: &[u32],
+    g: &CsrGraph,
+    dir: Direction,
+    spec: &GpuSpec,
+    scan_vertices: u64,
+    out: &mut ScheduleScratch,
+) {
+    out.reset();
+    out.sched.twc.extend(active.iter().map(|&v| {
+        let d = degree(g, v, dir);
+        VertexItem { vertex: v, degree: d, unit: bin(d, spec) }
+    }));
+    out.sched.scan_vertices = scan_vertices;
 }
 
 #[cfg(test)]

@@ -4,7 +4,7 @@
 //! frameworks approximate at the intra-GPU level).
 
 use crate::graph::CsrGraph;
-use crate::lb::schedule::{Schedule, Unit, VertexItem};
+use crate::lb::schedule::{Schedule, ScheduleScratch, Unit, VertexItem};
 use crate::lb::{degree, Direction};
 
 pub fn schedule(
@@ -13,11 +13,25 @@ pub fn schedule(
     dir: Direction,
     scan_vertices: u64,
 ) -> Schedule {
-    let twc = active
-        .iter()
-        .map(|&v| VertexItem { vertex: v, degree: degree(g, v, dir), unit: Unit::Thread })
-        .collect();
-    Schedule { twc, lb: None, scan_vertices, prefix_items: 0 }
+    let mut scratch = ScheduleScratch::new();
+    schedule_into(active, g, dir, scan_vertices, &mut scratch);
+    scratch.sched
+}
+
+pub fn schedule_into(
+    active: &[u32],
+    g: &CsrGraph,
+    dir: Direction,
+    scan_vertices: u64,
+    out: &mut ScheduleScratch,
+) {
+    out.reset();
+    out.sched.twc.extend(active.iter().map(|&v| VertexItem {
+        vertex: v,
+        degree: degree(g, v, dir),
+        unit: Unit::Thread,
+    }));
+    out.sched.scan_vertices = scan_vertices;
 }
 
 #[cfg(test)]

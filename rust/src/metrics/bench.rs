@@ -3,8 +3,18 @@
 //! Each `benches/*.rs` binary drives one paper table/figure through
 //! [`time_runs`]: warmup + N timed repetitions, reporting min/mean/max host
 //! time alongside the experiment's own simulated-ms output.
+//!
+//! Results can be persisted as machine-readable JSON (`BENCH_*.json`, the
+//! repo's perf trajectory) via [`write_json`] and read back by
+//! [`read_json`] — the reader is a line scanner matched to our own
+//! [`crate::metrics::Json`] writer's deterministic, sorted-key output, so
+//! CI can diff a fresh run against the committed baseline without a JSON
+//! dependency.
 
+use std::io;
 use std::time::Instant;
+
+use crate::metrics::Json;
 
 /// Timing summary for one benchmark case.
 #[derive(Debug, Clone)]
@@ -40,6 +50,102 @@ pub fn time_runs<T>(name: &str, iters: u32, mut f: impl FnMut() -> T) -> BenchSt
     BenchStats { name: name.to_string(), iters, min_ms: min, mean_ms: mean, max_ms: max }
 }
 
+/// Mean host ms of the named case, if present.
+pub fn mean_of(cases: &[BenchStats], name: &str) -> Option<f64> {
+    cases.iter().find(|c| c.name == name).map(|c| c.mean_ms)
+}
+
+/// Build the `BENCH_*.json` document: the timed cases plus free-form
+/// numeric metrics (speedups, ratios) at the top level.
+pub fn to_json(bench: &str, cases: &[BenchStats], metrics: &[(&str, f64)]) -> Json {
+    let case_objs: Vec<Json> = cases
+        .iter()
+        .map(|c| {
+            Json::obj()
+                .set("name", c.name.as_str())
+                .set("iters", c.iters)
+                .set("min_ms", c.min_ms)
+                .set("mean_ms", c.mean_ms)
+                .set("max_ms", c.max_ms)
+        })
+        .collect();
+    let mut doc = Json::obj()
+        .set("bench", bench)
+        .set("cases", Json::Arr(case_objs));
+    for (k, v) in metrics {
+        doc = doc.set(k, *v);
+    }
+    doc
+}
+
+/// Write the bench document to `path` (pretty-printed, trailing newline).
+pub fn write_json(
+    path: &str,
+    bench: &str,
+    cases: &[BenchStats],
+    metrics: &[(&str, f64)],
+) -> io::Result<()> {
+    let mut s = to_json(bench, cases, metrics).to_string_pretty();
+    s.push('\n');
+    std::fs::write(path, s)
+}
+
+/// Read the timed cases back out of a `BENCH_*.json` file produced by
+/// [`write_json`]. Line scanner, not a general JSON parser: it relies on
+/// the writer's one-key-per-line, sorted-key layout (within a case object
+/// the keys arrive `iters`, `max_ms`, `mean_ms`, `min_ms`, `name` — `name`
+/// closes the record).
+pub fn read_json(path: &str) -> io::Result<Vec<BenchStats>> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(parse_cases(&text))
+}
+
+fn parse_cases(text: &str) -> Vec<BenchStats> {
+    let mut out = Vec::new();
+    let (mut iters, mut min_ms, mut mean_ms, mut max_ms) = (0u32, 0f64, 0f64, 0f64);
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        let Some((key, value)) = line.split_once(':') else { continue };
+        let key = key.trim().trim_matches('"');
+        let value = value.trim();
+        match key {
+            "iters" => iters = value.parse().unwrap_or(0),
+            "min_ms" => min_ms = value.parse().unwrap_or(0.0),
+            "mean_ms" => mean_ms = value.parse().unwrap_or(0.0),
+            "max_ms" => max_ms = value.parse().unwrap_or(0.0),
+            "name" => {
+                out.push(BenchStats {
+                    name: value.trim_matches('"').to_string(),
+                    iters,
+                    min_ms,
+                    mean_ms,
+                    max_ms,
+                });
+                (iters, min_ms, mean_ms, max_ms) = (0, 0.0, 0.0, 0.0);
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// A top-level numeric metric (e.g. `speedup_engine_bfs`) from a
+/// `BENCH_*.json` file, if present. Case objects also contain numeric keys,
+/// so only keys outside the known case fields are considered.
+pub fn read_metric(path: &str, key: &str) -> Option<f64> {
+    let text = std::fs::read_to_string(path).ok()?;
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        let Some((k, v)) = line.split_once(':') else { continue };
+        if k.trim().trim_matches('"') == key
+            && !matches!(key, "iters" | "min_ms" | "mean_ms" | "max_ms")
+        {
+            return v.trim().parse().ok();
+        }
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -55,5 +161,43 @@ mod tests {
     fn report_contains_name() {
         let s = time_runs("xyz", 2, || ());
         assert!(s.report().contains("xyz"));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_cases_and_metrics() {
+        let cases = vec![
+            BenchStats {
+                name: "hotpath/engine-bfs".into(),
+                iters: 5,
+                min_ms: 1.25,
+                mean_ms: 2.0,
+                max_ms: 3.5,
+            },
+            BenchStats {
+                name: "hotpath/engine-sssp".into(),
+                iters: 3,
+                min_ms: 10.0,
+                mean_ms: 11.5,
+                max_ms: 13.0,
+            },
+        ];
+        let path = std::env::temp_dir().join(format!(
+            "alb-bench-roundtrip-{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        write_json(&path, "hotpath", &cases, &[("speedup_engine_bfs", 2.5)])
+            .unwrap();
+        let got = read_json(&path).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].name, "hotpath/engine-bfs");
+        assert_eq!(got[0].iters, 5);
+        assert!((got[0].mean_ms - 2.0).abs() < 1e-12);
+        assert!((got[1].max_ms - 13.0).abs() < 1e-12);
+        assert_eq!(mean_of(&got, "hotpath/engine-sssp"), Some(11.5));
+        assert_eq!(mean_of(&got, "missing"), None);
+        assert_eq!(read_metric(&path, "speedup_engine_bfs"), Some(2.5));
+        assert_eq!(read_metric(&path, "not_there"), None);
+        let _ = std::fs::remove_file(&path);
     }
 }

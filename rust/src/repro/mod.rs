@@ -122,7 +122,7 @@ pub fn block_profile(
         if keep_rounds.contains(&rec.round) {
             if let Some(kernels) = &rec.kernels {
                 for k in kernels {
-                    rounds.push((rec.round, k.label.clone(), k.block_edges.clone()));
+                    rounds.push((rec.round, k.label.to_string(), k.block_edges.clone()));
                 }
             }
         }

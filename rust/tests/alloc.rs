@@ -1,0 +1,147 @@
+//! Zero-allocation gate for the steady-state engine round loop.
+//!
+//! A thread-local counting allocator wraps the system allocator; the test
+//! warms a [`RoundScratch`] arena with a few rounds, then drives the exact
+//! engine round body — `Balancer::schedule_into` →
+//! `Simulator::simulate_into` → native relaxation → bitmap frontier drain —
+//! repeatedly and asserts the measuring thread performs **zero** heap
+//! allocations once capacities have warmed (ISSUE 2 acceptance; DESIGN.md
+//! §8). Counting is per-thread, so the harness running other test threads
+//! concurrently cannot pollute the count.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use alb_graph::apps::engine::RoundScratch;
+use alb_graph::gpu::{CostModel, GpuSpec, Simulator};
+use alb_graph::graph::{CsrGraph, EdgeList};
+use alb_graph::lb::{Balancer, Direction, Distribution};
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs_on_this_thread() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+/// A graph whose hub crosses the default huge threshold (3072 launched
+/// threads), so the round exercises the full ALB path: inspector split, LB
+/// launch buffers, cache-modeled LB simulation, and TWC binning.
+fn hub_graph() -> CsrGraph {
+    let n = 20_000u32;
+    let mut el = EdgeList::new(n);
+    for i in 0..8_000u32 {
+        el.push(0, 1 + (i % (n - 1)), 1.0);
+    }
+    for v in 1..4_000u32 {
+        el.push(v, (v * 7) % n, 1.0);
+    }
+    CsrGraph::from_edge_list(&el)
+}
+
+#[test]
+fn steady_state_engine_round_loop_is_allocation_free() {
+    let g = hub_graph();
+    let n = g.num_vertices();
+    let spec = GpuSpec::default_sim();
+    let sim = Simulator::new(spec.clone(), CostModel::default());
+    let active: Vec<u32> = (0..4_000).collect();
+
+    for balancer in [
+        Balancer::Alb { distribution: Distribution::Cyclic, threshold: None },
+        Balancer::Alb { distribution: Distribution::Blocked, threshold: None },
+        Balancer::Twc,
+        Balancer::EdgeLb { distribution: Distribution::Cyclic },
+        Balancer::Vertex,
+        Balancer::Enterprise,
+    ] {
+        let mut scratch = RoundScratch::for_vertices(n);
+        let mut labels = vec![f32::INFINITY; n];
+
+        // One full engine round body, exactly as `run_push` executes it.
+        let round = |labels: &mut Vec<f32>, scratch: &mut RoundScratch| {
+            // Reset labels so every iteration relaxes the same edges and
+            // produces the same frontier (fill: no allocation).
+            labels.fill(f32::INFINITY);
+            for &v in &active {
+                labels[v as usize] = 0.0;
+            }
+            balancer.schedule_into(
+                &active, &g, Direction::Push, &spec, n as u64,
+                &mut scratch.sched,
+            );
+            sim.simulate_into(&scratch.sched.sched, true, &mut scratch.sim);
+            for &v in &active {
+                let dv = labels[v as usize];
+                let (dsts, ws) = g.out_edges(v);
+                for (&dst, &w) in dsts.iter().zip(ws) {
+                    // sssp-style relaxation: candidate = source + weight.
+                    let cand = dv + w;
+                    if cand < labels[dst as usize] {
+                        labels[dst as usize] = cand;
+                        scratch.next.push(dst);
+                    }
+                }
+            }
+            scratch.next.take_sorted_into(&mut scratch.active);
+            scratch.active.len()
+        };
+
+        // Warm the arena: first rounds grow every buffer to capacity.
+        let warm = round(&mut labels, &mut scratch);
+        assert!(warm > 0, "warmup must produce a frontier");
+        for _ in 0..2 {
+            round(&mut labels, &mut scratch);
+        }
+
+        // Steady state: zero allocations on this thread across many rounds.
+        let before = allocs_on_this_thread();
+        for _ in 0..10 {
+            round(&mut labels, &mut scratch);
+        }
+        let after = allocs_on_this_thread();
+        assert_eq!(
+            after - before,
+            0,
+            "steady-state rounds allocated under {}",
+            balancer.name()
+        );
+    }
+}
+
+#[test]
+fn counting_allocator_actually_counts() {
+    // Sanity for the gate itself: an allocation on this thread is visible.
+    let before = allocs_on_this_thread();
+    let v: Vec<u64> = Vec::with_capacity(1024);
+    std::hint::black_box(&v);
+    let after = allocs_on_this_thread();
+    assert!(after > before, "allocation not observed ({before} -> {after})");
+}

@@ -8,8 +8,14 @@
 //!    be bit-identical to the single-threaded sequential reference — same
 //!    labels, same modeled cycles, same per-round records — while actually
 //!    using multiple OS threads.
+//! 3. **Scratch-reuse golden parity**: the zero-allocation hot path
+//!    (`RoundScratch` arenas, bitmap frontier, pooled simulator buffers)
+//!    must be bit-identical — labels, per-round records, total cycles, and
+//!    `DistRunResult` — to the freshly-allocated reference
+//!    (`run_push_reference` / `Simulator::simulate_reference`) on every
+//!    input preset and balancer.
 
-use alb_graph::apps::engine::{run, EngineConfig};
+use alb_graph::apps::engine::{run, run_push_reference, EngineConfig};
 use alb_graph::apps::App;
 use alb_graph::coordinator::{run_distributed, ClusterConfig, ExecMode};
 use alb_graph::graph::inputs;
@@ -23,6 +29,20 @@ fn parity_balancers() -> Vec<Balancer> {
         Balancer::EdgeLb { distribution: Distribution::Cyclic },
         Balancer::Twc,
         Balancer::Alb { distribution: Distribution::Cyclic, threshold: None },
+    ]
+}
+
+/// Every strategy, including the ones parity_balancers leaves out (blocked
+/// distributions, Enterprise) — the scratch-reuse gate must hold for all.
+fn all_balancers() -> Vec<Balancer> {
+    vec![
+        Balancer::Vertex,
+        Balancer::Twc,
+        Balancer::EdgeLb { distribution: Distribution::Cyclic },
+        Balancer::EdgeLb { distribution: Distribution::Blocked },
+        Balancer::Alb { distribution: Distribution::Cyclic, threshold: None },
+        Balancer::Alb { distribution: Distribution::Blocked, threshold: None },
+        Balancer::Enterprise,
     ]
 }
 
@@ -97,6 +117,72 @@ fn parallel_coordinator_bit_identical_to_sequential_reference() {
             assert_eq!(par.rounds, seq.rounds, "{} k={k} round records", app.name());
             assert_eq!(par.per_gpu_comp, seq.per_gpu_comp, "{} k={k}", app.name());
         }
+    }
+}
+
+#[test]
+fn scratch_reuse_bit_identical_to_fresh_alloc_reference() {
+    // The golden gate for the zero-allocation refactor: on every bundled
+    // input preset and every balancer, the scratch-reuse engine must equal
+    // the freshly-allocated reference bit-for-bit — labels, every
+    // per-round record (active/edges/cycles/lb_triggered), and the total.
+    for input in inputs::ALL_INPUTS {
+        let g0 = inputs::build(input, DELTA, 23).unwrap();
+        let src = inputs::source_vertex(input, &g0);
+        for app in [App::Bfs, App::Sssp] {
+            for balancer in all_balancers() {
+                let name = balancer.name();
+                let cfg = EngineConfig {
+                    balancer,
+                    max_rounds: 1_000_000,
+                    ..EngineConfig::default()
+                };
+                let hot = run(app, &mut g0.clone(), src, &cfg, None).unwrap();
+                let golden =
+                    run_push_reference(app, &mut g0.clone(), src, &cfg).unwrap();
+                assert_eq!(
+                    hot, golden,
+                    "{} under {name} on {input} diverges from the \
+                     fresh-allocation reference",
+                    app.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn per_gpu_scratch_arenas_keep_dist_runs_bit_identical() {
+    // DistRunResult leg of the golden gate: per-GPU arenas living across
+    // rounds on parallel BSP threads must reproduce the sequential
+    // reference exactly, for every balancer (not just the default).
+    let input = "rmat18";
+    let g = inputs::build(input, DELTA, 29).unwrap();
+    let src = inputs::source_vertex(input, &g);
+    for balancer in all_balancers() {
+        let name = balancer.name();
+        let cfg = EngineConfig {
+            balancer,
+            max_rounds: 1_000_000,
+            ..EngineConfig::default()
+        };
+        let par = run_distributed(
+            App::Sssp, &g, src, &cfg, &ClusterConfig::single_host(3), None,
+        )
+        .unwrap();
+        let seq = run_distributed(
+            App::Sssp,
+            &g,
+            src,
+            &cfg,
+            &ClusterConfig::single_host(3).with_exec(ExecMode::Sequential),
+            None,
+        )
+        .unwrap();
+        assert_eq!(par.labels, seq.labels, "{name} labels");
+        assert_eq!(par.total_cycles, seq.total_cycles, "{name} cycles");
+        assert_eq!(par.rounds, seq.rounds, "{name} rounds");
+        assert_eq!(par.per_gpu_comp, seq.per_gpu_comp, "{name} per-gpu");
     }
 }
 

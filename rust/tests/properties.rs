@@ -248,6 +248,7 @@ fn prop_alb_vs_twc_ordering_stable_under_cost_perturbation() {
             cycles_scan_vertex: perturb(&mut rng, base.cycles_scan_vertex),
             cycles_prefix_per_item: perturb(&mut rng, base.cycles_prefix_per_item),
             lb_warp_step_sample_cap: base.lb_warp_step_sample_cap,
+            serial_kernels: base.serial_kernels,
         };
         let mk = |b: Balancer| EngineConfig {
             balancer: b,
