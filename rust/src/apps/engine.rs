@@ -20,11 +20,19 @@
 //! the fresh-allocation implementation as the golden reference
 //! (`rust/tests/parity.rs`) and the pre-optimization baseline
 //! (`benches/hotpath.rs`).
+//!
+//! Intra-GPU parallel simulation (DESIGN.md §9): each run owns one
+//! [`exec::Pool`] of [`EngineConfig::sim_threads`] lanes and drives the
+//! kernel simulation and the ALB inspector's probe pass through the pooled
+//! entry points (`simulate_into_pooled` / `schedule_into_pooled`) — output
+//! is bit-identical to `sim_threads = 1` for any pool width
+//! (`rust/tests/parity.rs`).
 
 use anyhow::{anyhow, Result};
 
 use crate::apps::worklist::{NextWorklist, WorklistKind};
 use crate::apps::{bfs, cc, kcore, pr, sssp, App, INF};
+use crate::exec::{self, Pool};
 use crate::gpu::{CostModel, GpuSpec, KernelStats, SimScratch, Simulator};
 use crate::graph::CsrGraph;
 use crate::lb::{Balancer, Direction, Distribution, ScheduleScratch};
@@ -59,6 +67,13 @@ pub struct EngineConfig {
     /// Retain per-block kernel stats per round (needed by Figures 1 & 5;
     /// off by default to keep sweeps lean).
     pub record_blocks: bool,
+    /// Worker-pool lanes for the intra-GPU parallel simulation
+    /// (DESIGN.md §9): `1` = the historical sequential block walk on the
+    /// calling thread. Defaults to [`exec::default_threads`] (the
+    /// `ALB_SIM_THREADS` env override, else available parallelism).
+    /// Output is bit-identical for any value. The multi-GPU coordinator
+    /// sizes its single shared pool from this too.
+    pub sim_threads: usize,
 }
 
 impl Default for EngineConfig {
@@ -78,6 +93,7 @@ impl Default for EngineConfig {
             bfs_direction_opt: false,
             sssp_delta: None,
             record_blocks: false,
+            sim_threads: exec::default_threads(),
         }
     }
 }
@@ -160,14 +176,17 @@ pub fn run(
     if cfg.compute == ComputeMode::Pjrt && pjrt.is_none() {
         return Err(anyhow!("compute=Pjrt requires a loaded PjrtRuntime"));
     }
+    // One worker pool per run (DESIGN.md §9); `sim_threads = 1` spawns
+    // nothing and every pooled entry point takes the sequential path.
+    let pool = Pool::new(cfg.sim_threads.max(1));
     match app {
-        App::Bfs if cfg.bfs_direction_opt => run_bfs_dopt(g, source, cfg),
+        App::Bfs if cfg.bfs_direction_opt => run_bfs_dopt(g, source, cfg, &pool),
         App::Sssp if cfg.sssp_delta.is_some() => {
-            run_sssp_delta(g, source, cfg, cfg.sssp_delta.unwrap())
+            run_sssp_delta(g, source, cfg, cfg.sssp_delta.unwrap(), &pool)
         }
-        App::Bfs | App::Sssp | App::Cc => run_push(app, g, source, cfg, pjrt),
-        App::Pr => run_pr(g, cfg, pjrt),
-        App::Kcore => run_kcore(g, cfg, pjrt),
+        App::Bfs | App::Sssp | App::Cc => run_push(app, g, source, cfg, pjrt, &pool),
+        App::Pr => run_pr(g, cfg, pjrt, &pool),
+        App::Kcore => run_kcore(g, cfg, pjrt, &pool),
     }
 }
 
@@ -190,6 +209,7 @@ fn run_push(
     source: u32,
     cfg: &EngineConfig,
     pjrt: Option<&PjrtRuntime>,
+    pool: &Pool,
 ) -> Result<RunResult> {
     let n = g.num_vertices();
     let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
@@ -213,11 +233,11 @@ fn run_push(
             break;
         }
         let scan = cfg.worklist.scan_cost(n as u64, scratch.active.len() as u64);
-        cfg.balancer.schedule_into(
+        cfg.balancer.schedule_into_pooled(
             &scratch.active, g, Direction::Push, &cfg.spec, scan,
-            &mut scratch.sched,
+            &mut scratch.sched, pool,
         );
-        sim.simulate_into(&scratch.sched.sched, true, &mut scratch.sim);
+        sim.simulate_into_pooled(&scratch.sched.sched, true, &mut scratch.sim, pool);
         let cycles = scratch.sim.round.total_cycles;
         total_cycles += cycles;
         rounds.push(RoundRecord {
@@ -429,6 +449,7 @@ fn run_bfs_dopt(
     g: &mut CsrGraph,
     source: u32,
     cfg: &EngineConfig,
+    pool: &Pool,
 ) -> Result<RunResult> {
     const ALPHA: u64 = 14; // Beamer's push->pull switch factor
     const BETA: u64 = 24; //  pull->push switch factor
@@ -490,16 +511,16 @@ fn run_bfs_dopt(
             let items = scratch.sched.sched.twc.len() as u64;
             scratch.sched.sched.scan_vertices =
                 cfg.worklist.scan_cost(n as u64, items);
-            sim.simulate_into(&scratch.sched.sched, false, &mut scratch.sim);
+            sim.simulate_into_pooled(&scratch.sched.sched, false, &mut scratch.sim, pool);
             explored += scanned_total;
         } else {
             let scan =
                 cfg.worklist.scan_cost(n as u64, scratch.active.len() as u64);
-            cfg.balancer.schedule_into(
+            cfg.balancer.schedule_into_pooled(
                 &scratch.active, g, Direction::Push, &cfg.spec, scan,
-                &mut scratch.sched,
+                &mut scratch.sched, pool,
             );
-            sim.simulate_into(&scratch.sched.sched, true, &mut scratch.sim);
+            sim.simulate_into_pooled(&scratch.sched.sched, true, &mut scratch.sim, pool);
             for &v in &scratch.active {
                 relax_native(g, App::Bfs, v, &mut labels, &mut scratch.next);
             }
@@ -531,6 +552,7 @@ fn run_sssp_delta(
     source: u32,
     cfg: &EngineConfig,
     delta: f32,
+    pool: &Pool,
 ) -> Result<RunResult> {
     assert!(delta > 0.0);
     let n = g.num_vertices();
@@ -565,10 +587,11 @@ fn run_sssp_delta(
                 break;
             }
             let scan = cfg.worklist.scan_cost(n as u64, active.len() as u64);
-            cfg.balancer.schedule_into(
+            cfg.balancer.schedule_into_pooled(
                 &active, g, Direction::Push, &cfg.spec, scan, &mut scratch.sched,
+                pool,
             );
-            sim.simulate_into(&scratch.sched.sched, true, &mut scratch.sim);
+            sim.simulate_into_pooled(&scratch.sched.sched, true, &mut scratch.sim, pool);
             let cycles = scratch.sim.round.total_cycles;
             total_cycles += cycles;
             rounds.push(RoundRecord {
@@ -603,10 +626,11 @@ fn run_sssp_delta(
         settled.dedup();
         if !settled.is_empty() && round < cfg.max_rounds {
             let scan = cfg.worklist.scan_cost(n as u64, settled.len() as u64);
-            cfg.balancer.schedule_into(
+            cfg.balancer.schedule_into_pooled(
                 &settled, g, Direction::Push, &cfg.spec, scan, &mut scratch.sched,
+                pool,
             );
-            sim.simulate_into(&scratch.sched.sched, true, &mut scratch.sim);
+            sim.simulate_into_pooled(&scratch.sched.sched, true, &mut scratch.sim, pool);
             let cycles = scratch.sim.round.total_cycles;
             total_cycles += cycles;
             rounds.push(RoundRecord {
@@ -646,6 +670,7 @@ fn run_pr(
     g: &mut CsrGraph,
     cfg: &EngineConfig,
     pjrt: Option<&PjrtRuntime>,
+    pool: &Pool,
 ) -> Result<RunResult> {
     g.build_csc();
     let n = g.num_vertices();
@@ -661,10 +686,10 @@ fn run_pr(
     for round in 0..cfg.max_rounds {
         // Topology-driven: all vertices active, pull direction.
         let scan = cfg.worklist.scan_cost(n as u64, n as u64);
-        cfg.balancer.schedule_into(
-            &all, g, Direction::Pull, &cfg.spec, scan, &mut scratch.sched,
+        cfg.balancer.schedule_into_pooled(
+            &all, g, Direction::Pull, &cfg.spec, scan, &mut scratch.sched, pool,
         );
-        sim.simulate_into(&scratch.sched.sched, false, &mut scratch.sim);
+        sim.simulate_into_pooled(&scratch.sched.sched, false, &mut scratch.sim, pool);
         let cycles = scratch.sim.round.total_cycles;
         total_cycles += cycles;
         rounds.push(RoundRecord {
@@ -708,6 +733,7 @@ fn run_kcore(
     g: &mut CsrGraph,
     cfg: &EngineConfig,
     pjrt: Option<&PjrtRuntime>,
+    pool: &Pool,
 ) -> Result<RunResult> {
     g.build_csc();
     let n = g.num_vertices();
@@ -730,7 +756,7 @@ fn run_kcore(
     scratch.sched.reset();
     scratch.sched.sched.scan_vertices =
         cfg.worklist.scan_cost(n as u64, n as u64);
-    sim.simulate_into(&scratch.sched.sched, false, &mut scratch.sim);
+    sim.simulate_into_pooled(&scratch.sched.sched, false, &mut scratch.sim, pool);
     let cycles0 = scratch.sim.round.total_cycles;
     total_cycles += cycles0;
     rounds.push(RoundRecord {
@@ -746,10 +772,11 @@ fn run_kcore(
     while !dying.is_empty() && round < cfg.max_rounds {
         // Work this round: the dying vertices' out-edges (decrement push).
         let scan = cfg.worklist.scan_cost(n as u64, dying.len() as u64);
-        cfg.balancer.schedule_into(
-            &dying, g, Direction::Push, &cfg.spec, scan, &mut scratch.sched,
+        cfg.balancer.schedule_into_pooled(
+            &dying, g, Direction::Push, &cfg.spec, scan, &mut scratch.sched, pool,
         );
-        sim.simulate_into(&scratch.sched.sched, true, &mut scratch.sim); // atomicSub per decrement
+        // atomicSub per decrement
+        sim.simulate_into_pooled(&scratch.sched.sched, true, &mut scratch.sim, pool);
         let cycles = scratch.sim.round.total_cycles;
         total_cycles += cycles;
         rounds.push(RoundRecord {
@@ -970,6 +997,27 @@ mod tests {
             let ks = rec.kernels.as_ref().unwrap();
             assert!(!ks.is_empty(), "round {} lost its kernel stats", rec.round);
             assert_eq!(ks[0].label, "twc");
+        }
+    }
+
+    #[test]
+    fn sim_threads_do_not_change_results() {
+        // §9 determinism at engine granularity: labels, per-round records,
+        // and totals are bit-identical for any pool width.
+        let mut g = rmat(10, 18);
+        let src = g.max_out_degree_vertex();
+        let base = run(
+            App::Bfs,
+            &mut g.clone(),
+            src,
+            &EngineConfig { sim_threads: 1, ..EngineConfig::default() },
+            None,
+        )
+        .unwrap();
+        for threads in [2usize, 4, 7] {
+            let cfg = EngineConfig { sim_threads: threads, ..EngineConfig::default() };
+            let r = run(App::Bfs, &mut g.clone(), src, &cfg, None).unwrap();
+            assert_eq!(r, base, "sim_threads={threads}");
         }
     }
 

@@ -1,12 +1,19 @@
-//! The BSP superstep executor: fork one task per simulated GPU, run them on
-//! their own OS threads, and **barrier** before the Gluon-style reduce /
-//! broadcast begins.
+//! The BSP superstep executor: dispatch one compute task per simulated GPU
+//! onto the shared [`crate::exec::Pool`] and **barrier** before the
+//! Gluon-style reduce / broadcast begins.
 //!
 //! This makes the bulk-synchronous structure of the coordinator explicit:
-//! a round is `superstep(compute tasks) -> reduce -> broadcast`, and the
-//! join performed by [`superstep`] *is* the barrier separating local compute
-//! from communication — no partition's updates are reconciled while another
-//! partition is still computing.
+//! a round is `superstep(compute tasks) -> reduce -> broadcast`, and
+//! [`superstep`]'s return *is* the barrier separating local compute from
+//! communication — the pool's job-completion wait guarantees no partition's
+//! updates are reconciled while another partition is still computing.
+//!
+//! Since PR 3 the per-GPU tasks are pool tasks, not dedicated OS threads:
+//! the coordinator owns ONE pool, GPU tasks run on it (the submitting
+//! thread participates), and a GPU task's own intra-GPU parallel simulation
+//! (`Simulator::simulate_into_pooled`, DESIGN.md §9) nests onto the *same*
+//! pool — so a run never oversubscribes the host with per-GPU threads times
+//! per-simulation workers.
 //!
 //! Determinism: results are collected **by partition index**, never by
 //! completion order, and every reduction downstream folds them in that
@@ -14,12 +21,15 @@
 //! caller's thread — the reference the parallel path must match bit-for-bit
 //! (asserted by `rust/tests/parity.rs`).
 
-use std::thread;
+use std::sync::Mutex;
+
+use crate::exec::Pool;
 
 /// How per-round per-GPU tasks execute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ExecMode {
-    /// One scoped OS thread per simulated GPU (the default).
+    /// Tasks dispatched onto the shared worker pool (the default). With a
+    /// 1-thread pool this degenerates to the sequential walk.
     #[default]
     Parallel,
     /// In partition order on the calling thread — the determinism reference.
@@ -41,31 +51,61 @@ impl ExecMode {
             _ => None,
         }
     }
+
+    /// [`parse`](Self::parse) with a CLI-grade error that echoes the bad
+    /// value and lists every accepted spelling, so `alb run --exec bogus`
+    /// fails with actionable output instead of a bare "unknown".
+    pub fn parse_or_usage(s: &str) -> Result<ExecMode, String> {
+        ExecMode::parse(s).ok_or_else(|| {
+            format!(
+                "unknown --exec value '{s}' (valid: parallel, par, \
+                 sequential, seq)"
+            )
+        })
+    }
+}
+
+/// One result slot of an in-flight superstep: the not-yet-run task, then
+/// its output. Each slot's mutex is taken by exactly one pool task.
+struct Slot<F, T> {
+    task: Option<F>,
+    result: Option<T>,
 }
 
 /// Run one compute task per partition and return their results indexed by
-/// partition. Returning from this function is the BSP barrier: every worker
-/// thread has been joined (scoped threads cannot outlive the scope), so the
-/// caller may safely reduce/broadcast shared state.
-pub fn superstep<T, F>(mode: ExecMode, tasks: Vec<F>) -> Vec<T>
+/// partition. Returning from this function is the BSP barrier: the pool's
+/// completion wait has observed every task finish, so the caller may safely
+/// reduce/broadcast shared state. The submitting thread participates in
+/// executing tasks (see [`Pool::run`]).
+pub fn superstep<T, F>(mode: ExecMode, pool: &Pool, tasks: Vec<F>) -> Vec<T>
 where
     T: Send,
     F: FnOnce() -> T + Send,
 {
-    // A single task has nobody to overlap with; inline it to spare the
-    // spawn. (Sequential mode is the bit-exact reference for parity tests.)
-    if mode == ExecMode::Sequential || tasks.len() <= 1 {
+    // A single task has nobody to overlap with, and a 1-thread pool has
+    // nobody to hand tasks to; inline either case. (Sequential mode is the
+    // bit-exact reference for parity tests.)
+    if mode == ExecMode::Sequential || tasks.len() <= 1 || pool.threads() <= 1 {
         return tasks.into_iter().map(|f| f()).collect();
     }
-    let mut out: Vec<Option<T>> = (0..tasks.len()).map(|_| None).collect();
-    thread::scope(|s| {
-        for (task, slot) in tasks.into_iter().zip(out.iter_mut()) {
-            s.spawn(move || *slot = Some(task()));
+    let slots: Vec<Mutex<Slot<F, T>>> = tasks
+        .into_iter()
+        .map(|f| Mutex::new(Slot { task: Some(f), result: None }))
+        .collect();
+    pool.run(slots.len(), &|i| {
+        let mut s = slots[i].lock().unwrap();
+        if let Some(task) = s.task.take() {
+            s.result = Some(task());
         }
-        // scope join == barrier
     });
-    out.into_iter()
-        .map(|r| r.expect("superstep worker finished"))
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("superstep slot lock cannot be poisoned")
+                .result
+                .expect("superstep task finished")
+        })
         .collect()
 }
 
@@ -73,18 +113,25 @@ where
 mod tests {
     use super::*;
     use std::collections::HashSet;
-    use std::thread::ThreadId;
+    use std::thread::{self, ThreadId};
+    use std::time::Duration;
 
     fn tasks(n: usize) -> Vec<impl FnOnce() -> (usize, ThreadId) + Send> {
         (0..n)
-            .map(|i| move || (i * i, thread::current().id()))
+            .map(|i| {
+                move || {
+                    thread::sleep(Duration::from_millis(1));
+                    (i * i, thread::current().id())
+                }
+            })
             .collect()
     }
 
     #[test]
     fn results_are_ordered_by_partition_index() {
+        let pool = Pool::new(4);
         for mode in [ExecMode::Parallel, ExecMode::Sequential] {
-            let got = superstep(mode, tasks(16));
+            let got = superstep(mode, &pool, tasks(16));
             for (i, (val, _)) in got.iter().enumerate() {
                 assert_eq!(*val, i * i, "{mode:?}");
             }
@@ -92,16 +139,19 @@ mod tests {
     }
 
     #[test]
-    fn parallel_mode_uses_distinct_os_threads() {
-        let got = superstep(ExecMode::Parallel, tasks(4));
+    fn parallel_mode_uses_multiple_os_threads() {
+        // With the caller participating, a 4-lane pool spreads 64 sleepy
+        // tasks over >= 2 distinct threads.
+        let pool = Pool::new(4);
+        let got = superstep(ExecMode::Parallel, &pool, tasks(64));
         let ids: HashSet<ThreadId> = got.iter().map(|(_, id)| *id).collect();
         assert!(ids.len() >= 2, "expected >= 2 worker threads, saw {}", ids.len());
-        assert!(!ids.contains(&thread::current().id()));
     }
 
     #[test]
     fn sequential_mode_stays_on_the_caller() {
-        let got = superstep(ExecMode::Sequential, tasks(4));
+        let pool = Pool::new(4);
+        let got = superstep(ExecMode::Sequential, &pool, tasks(4));
         for (_, id) in &got {
             assert_eq!(*id, thread::current().id());
         }
@@ -109,15 +159,26 @@ mod tests {
 
     #[test]
     fn single_task_runs_inline_even_in_parallel_mode() {
-        let got = superstep(ExecMode::Parallel, tasks(1));
+        let pool = Pool::new(4);
+        let got = superstep(ExecMode::Parallel, &pool, tasks(1));
         assert_eq!(got[0].0, 0);
         assert_eq!(got[0].1, thread::current().id());
     }
 
     #[test]
+    fn one_thread_pool_runs_inline_even_in_parallel_mode() {
+        let pool = Pool::new(1);
+        let got = superstep(ExecMode::Parallel, &pool, tasks(4));
+        for (_, id) in &got {
+            assert_eq!(*id, thread::current().id());
+        }
+    }
+
+    #[test]
     fn parallel_matches_sequential() {
-        let a = superstep(ExecMode::Parallel, tasks(9));
-        let b = superstep(ExecMode::Sequential, tasks(9));
+        let pool = Pool::new(3);
+        let a = superstep(ExecMode::Parallel, &pool, tasks(9));
+        let b = superstep(ExecMode::Sequential, &pool, tasks(9));
         let va: Vec<usize> = a.into_iter().map(|(v, _)| v).collect();
         let vb: Vec<usize> = b.into_iter().map(|(v, _)| v).collect();
         assert_eq!(va, vb);
@@ -125,8 +186,9 @@ mod tests {
 
     #[test]
     fn superstep_is_a_barrier() {
-        // Every worker increments before superstep returns.
+        // Every task increments before superstep returns.
         use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = Pool::new(4);
         let counter = AtomicUsize::new(0);
         let tasks: Vec<_> = (0..8)
             .map(|_| {
@@ -134,7 +196,7 @@ mod tests {
                 move || c.fetch_add(1, Ordering::SeqCst)
             })
             .collect();
-        let _ = superstep(ExecMode::Parallel, tasks);
+        let _ = superstep(ExecMode::Parallel, &pool, tasks);
         assert_eq!(counter.load(Ordering::SeqCst), 8);
     }
 
@@ -145,5 +207,14 @@ mod tests {
         }
         assert_eq!(ExecMode::parse("seq"), Some(ExecMode::Sequential));
         assert_eq!(ExecMode::parse("nope"), None);
+    }
+
+    #[test]
+    fn exec_mode_parse_or_usage_names_valid_values() {
+        assert_eq!(ExecMode::parse_or_usage("par"), Ok(ExecMode::Parallel));
+        let e = ExecMode::parse_or_usage("bogus").unwrap_err();
+        assert!(e.contains("bogus"), "{e}");
+        assert!(e.contains("parallel"), "{e}");
+        assert!(e.contains("sequential"), "{e}");
     }
 }

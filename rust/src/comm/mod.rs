@@ -10,9 +10,9 @@
 //! inter-host (Omni-Path-class) links, reproducing the Momentum (single
 //! host) and Bridges (8 hosts x 2 GPUs) testbeds.
 //!
-//! [`bsp`] holds the superstep executor: per-GPU compute tasks forked onto
-//! OS threads with an explicit barrier (the scope join) before the reduce /
-//! broadcast phases run.
+//! [`bsp`] holds the superstep executor: per-GPU compute tasks dispatched
+//! onto the shared [`crate::exec::Pool`] with an explicit barrier (the
+//! pool's job-completion wait) before the reduce / broadcast phases run.
 
 pub mod bsp;
 

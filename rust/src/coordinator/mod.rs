@@ -2,9 +2,13 @@
 //!
 //! Drives the bulk-synchronous execution the paper's multi-GPU evaluation
 //! (§6.2–6.3) uses: every round, each simulated GPU runs its local kernels
-//! on its partition — **concurrently, one OS thread per GPU**, through
-//! [`crate::comm::bsp::superstep`] — then the scope join barriers the round
-//! and the Gluon-style sync ([`crate::comm`]) reconciles boundary vertices.
+//! on its partition — **concurrently, as tasks on ONE shared
+//! [`crate::exec::Pool`]**, through [`crate::comm::bsp::superstep`] — then
+//! the superstep barrier ends the round and the Gluon-style sync
+//! ([`crate::comm`]) reconciles boundary vertices. Each GPU task's own
+//! kernel simulation nests onto the *same* pool (DESIGN.md §9), so a run
+//! uses exactly `sim_threads` lanes however many GPUs it simulates — no
+//! per-GPU thread spawning, no oversubscription.
 //! Round time = slowest GPU's compute + non-overlapping communication —
 //! exactly the accounting behind Figures 6/7/10/11. Intra-GPU thread-block
 //! imbalance on *one* GPU therefore stalls the whole machine, which is why
@@ -15,14 +19,15 @@
 //! bit-identical to the [`ExecMode::Sequential`] reference (asserted by
 //! `rust/tests/parity.rs`). Alongside the modeled cycles, the coordinator
 //! records real per-GPU host wall-clock and the set of OS threads that
-//! executed rounds.
+//! executed rounds (the submitting thread participates in the pool, so it
+//! may appear in that set).
 //!
 //! Hot-path memory discipline (DESIGN.md §8): the coordinator owns one
 //! [`RoundScratch`] arena per simulated GPU for the whole run; each round,
-//! partition `i`'s BSP thread borrows arena `i` exclusively (the tasks zip
+//! partition `i`'s BSP task borrows arena `i` exclusively (the tasks zip
 //! `scratches.iter_mut()`), so local rounds reuse their schedule buffers,
 //! simulator accounting arrays, and bitmap frontier across rounds instead
-//! of reallocating them — without any cross-thread sharing.
+//! of reallocating them — without any cross-task sharing.
 
 use std::collections::HashSet;
 use std::thread::ThreadId;
@@ -33,6 +38,7 @@ use anyhow::{anyhow, Result};
 use crate::apps::engine::{self, ComputeMode, EngineConfig, RoundScratch};
 use crate::apps::{pr, App, INF};
 use crate::comm::{self, NetworkModel, BYTES_PER_UPDATE};
+use crate::exec::Pool;
 use crate::gpu::Simulator;
 use crate::graph::CsrGraph;
 use crate::lb::Direction;
@@ -110,8 +116,9 @@ pub struct DistRunResult {
     /// Per-GPU host wall-clock (ns) actually spent in local rounds —
     /// measured time alongside the modeled cycles.
     pub per_gpu_wall_ns: Vec<u64>,
-    /// OS threads that executed local rounds (>= 2 distinct ids when a
-    /// multi-partition run uses [`ExecMode::Parallel`]).
+    /// OS threads that executed local rounds. Under [`ExecMode::Parallel`]
+    /// with a multi-lane pool this reaches >= 2 distinct ids, and may
+    /// include the coordinating thread (the pool submitter participates).
     pub threads: HashSet<ThreadId>,
 }
 
@@ -193,12 +200,16 @@ pub fn run_distributed(
         return Err(anyhow!("compute=Pjrt requires a loaded PjrtRuntime"));
     }
     let dg = partition(g, cluster.num_gpus, cluster.policy);
+    // ONE pool shared by every simulated GPU for the whole run: superstep
+    // dispatches the per-GPU round tasks onto it, and each task's kernel
+    // simulation nests onto the same pool (DESIGN.md §9).
+    let pool = Pool::new(cfg.sim_threads.max(1));
     match app {
         App::Bfs | App::Sssp | App::Cc => {
-            run_push_dist(app, g, &dg, source, cfg, cluster, pjrt)
+            run_push_dist(app, g, &dg, source, cfg, cluster, pjrt, &pool)
         }
-        App::Pr => run_pr_dist(g, &dg, cfg, cluster, pjrt),
-        App::Kcore => run_kcore_dist(g, &dg, cfg, cluster),
+        App::Pr => run_pr_dist(g, &dg, cfg, cluster, pjrt, &pool),
+        App::Kcore => run_kcore_dist(g, &dg, cfg, cluster, &pool),
     }
 }
 
@@ -228,14 +239,15 @@ fn local_push_round(
     sim: &Simulator,
     scratch: &mut RoundScratch,
     pjrt: Option<&PjrtRuntime>,
+    pool: &Pool,
 ) -> Result<LocalRound> {
     let t0 = Instant::now();
     let n = part.num_vertices();
     let scan = cfg.worklist.scan_cost(n as u64, active.len() as u64);
-    cfg.balancer.schedule_into(
-        active, part, Direction::Push, &cfg.spec, scan, &mut scratch.sched,
+    cfg.balancer.schedule_into_pooled(
+        active, part, Direction::Push, &cfg.spec, scan, &mut scratch.sched, pool,
     );
-    sim.simulate_into(&scratch.sched.sched, true, &mut scratch.sim);
+    sim.simulate_into_pooled(&scratch.sched.sched, true, &mut scratch.sim, pool);
 
     if let (ComputeMode::Pjrt, Some(rt), Some(lb)) =
         (cfg.compute, pjrt, &scratch.sched.sched.lb)
@@ -268,6 +280,7 @@ fn local_push_round(
     })
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_push_dist(
     app: App,
     g: &CsrGraph,
@@ -276,6 +289,7 @@ fn run_push_dist(
     cfg: &EngineConfig,
     cluster: &ClusterConfig,
     pjrt: Option<&PjrtRuntime>,
+    pool: &Pool,
 ) -> Result<DistRunResult> {
     let n = g.num_vertices();
     let k = dg.num_parts();
@@ -319,14 +333,14 @@ fn run_push_dist(
         if global_active == 0 {
             break;
         }
-        // --- local compute (one task per GPU; superstep join = barrier) ---
+        // --- local compute (one pool task per GPU; superstep = barrier) ---
         let results: Vec<LocalRound> = if pjrt.is_some() {
             // The PJRT client is not Sync: partitions run sequentially.
             let mut out = Vec::with_capacity(k);
             for (pi, part) in dg.parts.iter().enumerate() {
                 out.push(local_push_round(
                     app, &part.graph, &active[pi], &mut labels[pi], cfg, &sim,
-                    &mut scratches[pi], pjrt,
+                    &mut scratches[pi], pjrt, pool,
                 )?);
             }
             out
@@ -342,13 +356,13 @@ fn run_push_dist(
                     move || {
                         local_push_round(
                             app, &part.graph, act, lab, cfg, sim_ref, scratch,
-                            None,
+                            None, pool,
                         )
                         .expect("native round cannot fail")
                     }
                 })
                 .collect();
-            comm::superstep(cluster.exec, tasks)
+            comm::superstep(cluster.exec, pool, tasks)
         };
 
         let comp = results.iter().map(|r| r.cycles).max().unwrap_or(0);
@@ -467,14 +481,15 @@ fn local_pr_round(
     sim: &Simulator,
     scratch: &mut RoundScratch,
     pjrt: Option<&PjrtRuntime>,
+    pool: &Pool,
 ) -> Result<PrLocal> {
     let t0 = Instant::now();
     let nl = lg.num_vertices();
     let scan = cfg.worklist.scan_cost(nl as u64, nl as u64);
-    cfg.balancer.schedule_into(
-        all, lg, Direction::Pull, &cfg.spec, scan, &mut scratch.sched,
+    cfg.balancer.schedule_into_pooled(
+        all, lg, Direction::Pull, &cfg.spec, scan, &mut scratch.sched, pool,
     );
-    sim.simulate_into(&scratch.sched.sched, false, &mut scratch.sim);
+    sim.simulate_into_pooled(&scratch.sched.sched, false, &mut scratch.sim, pool);
 
     // Contributions of local src copies (kernel in Pjrt mode).
     let src_ranks: Vec<f32> = part.l2g.iter().map(|&gid| ranks[gid as usize]).collect();
@@ -536,6 +551,7 @@ fn run_pr_dist(
     cfg: &EngineConfig,
     cluster: &ClusterConfig,
     pjrt: Option<&PjrtRuntime>,
+    pool: &Pool,
 ) -> Result<DistRunResult> {
     let n = g.num_vertices();
     let k = dg.num_parts();
@@ -584,7 +600,7 @@ fn run_pr_dist(
             for (pi, p) in dg.parts.iter().enumerate() {
                 out.push(local_pr_round(
                     pi, p, &parts[pi], &alls[pi], &ranks, &out_deg, &dg.owner,
-                    cfg, &sim, &mut scratches[pi], pjrt,
+                    cfg, &sim, &mut scratches[pi], pjrt, pool,
                 )?);
             }
             out
@@ -602,12 +618,13 @@ fn run_pr_dist(
                         local_pr_round(
                             pi, p, &parts_ref[pi], &alls_ref[pi], ranks_ref,
                             out_deg_ref, owner_ref, cfg, sim_ref, scratch, None,
+                            pool,
                         )
                         .expect("native pr round cannot fail")
                     }
                 })
                 .collect();
-            comm::superstep(cluster.exec, tasks)
+            comm::superstep(cluster.exec, pool, tasks)
         };
 
         // Reduce: fold partial sums in partition order (deterministic).
@@ -677,6 +694,7 @@ fn local_kcore_round(
     cfg: &EngineConfig,
     sim: &Simulator,
     scratch: &mut RoundScratch,
+    pool: &Pool,
 ) -> KcoreLocal {
     let t0 = Instant::now();
     let thread = std::thread::current().id();
@@ -699,10 +717,11 @@ fn local_kcore_round(
     let scan = cfg
         .worklist
         .scan_cost(lg.num_vertices() as u64, scratch.active.len() as u64);
-    cfg.balancer.schedule_into(
+    cfg.balancer.schedule_into_pooled(
         &scratch.active, lg, Direction::Push, &cfg.spec, scan, &mut scratch.sched,
+        pool,
     );
-    sim.simulate_into(&scratch.sched.sched, true, &mut scratch.sim);
+    sim.simulate_into_pooled(&scratch.sched.sched, true, &mut scratch.sim, pool);
 
     let mut hits = Vec::new();
     let mut remote_bytes = 0u64;
@@ -733,6 +752,7 @@ fn run_kcore_dist(
     dg: &DistGraph,
     cfg: &EngineConfig,
     cluster: &ClusterConfig,
+    pool: &Pool,
 ) -> Result<DistRunResult> {
     let n = g.num_vertices();
     let k_parts = dg.num_parts();
@@ -773,12 +793,12 @@ fn run_kcore_dist(
                     move || {
                         local_kcore_round(
                             pi, p, dying_ref, g2l, alive_ref, owner_ref, cfg,
-                            sim_ref, scratch,
+                            sim_ref, scratch, pool,
                         )
                     }
                 })
                 .collect();
-            comm::superstep(cluster.exec, tasks)
+            comm::superstep(cluster.exec, pool, tasks)
         };
 
         let mut comp = 0u64;
@@ -1016,12 +1036,14 @@ mod tests {
 
     #[test]
     fn parallel_rounds_run_on_multiple_os_threads() {
-        // Acceptance gate: >= 2 distinct worker threads execute partition
-        // rounds, and none of them is the coordinating thread.
+        // Acceptance gate: with an explicit multi-lane pool, >= 2 distinct
+        // OS threads execute partition rounds. The coordinating thread may
+        // be among them — the pool submitter participates.
         let g = test_graph(9, 31);
         let src = g.max_out_degree_vertex();
+        let c = EngineConfig { sim_threads: 4, ..cfg() };
         let r = run_distributed(
-            App::Bfs, &g, src, &cfg(), &ClusterConfig::single_host(4), None,
+            App::Bfs, &g, src, &c, &ClusterConfig::single_host(4), None,
         )
         .unwrap();
         assert!(
@@ -1029,7 +1051,6 @@ mod tests {
             "expected >= 2 OS threads, saw {}",
             r.num_threads()
         );
-        assert!(!r.threads.contains(&std::thread::current().id()));
     }
 
     #[test]

@@ -1,0 +1,499 @@
+//! The shared intra-process execution substrate (DESIGN.md §9).
+//!
+//! [`Pool`] is a persistent worker pool — std-only, consistent with the §7
+//! offline policy — that the round engine and the multi-GPU coordinator use
+//! to parallelize the *simulation itself*: the kernel simulator's block and
+//! warp walks split into fixed contiguous chunks and run as pool tasks
+//! ([`crate::gpu::sim`]), the ALB inspector's threshold probe pass splits the
+//! active set the same way ([`crate::lb::alb`]), and the BSP superstep
+//! dispatches whole per-GPU rounds onto the *same* pool
+//! ([`crate::comm::bsp::superstep`]) so a multi-GPU run never oversubscribes
+//! the host with nested spawning.
+//!
+//! Design points:
+//!
+//! * **Caller participation.** [`Pool::run`] enqueues a job and then claims
+//!   task indices itself alongside the workers, so a pool of `t` threads is
+//!   the caller plus `t - 1` spawned workers and `Pool::new(1)` spawns
+//!   nothing — `--sim-threads 1` is bit-for-bit the historical sequential
+//!   walk on the calling thread.
+//! * **Reentrancy.** A task may itself call [`Pool::run`] on the same pool
+//!   (a per-GPU BSP task parallelizing its kernel simulation): the nested
+//!   job is pushed onto the shared queue, the nesting caller participates in
+//!   its own job, and idle workers help — no nested spawning, no deadlock
+//!   (leaf tasks always complete).
+//! * **Determinism is the callers' contract, made easy.** Tasks write to
+//!   per-chunk slots and callers fold the slots in chunk order after `run`
+//!   returns, so results are bit-identical for *any* worker count and any
+//!   scheduling (asserted across `sim_threads ∈ {1, 2, 4, 7}` by
+//!   `rust/tests/parity.rs`).
+//! * **Steady-state zero allocation** (§8): `run` keeps the job on the
+//!   caller's stack and the queue reuses its capacity, so a warmed round
+//!   loop performs no heap allocation on the submitting thread
+//!   (`rust/tests/alloc.rs`).
+//!
+//! Safety: the queue stores raw pointers to stack-owned [`Job`]s with a
+//! lifetime-erased task closure. The protocol that keeps this sound is
+//! documented on [`Pool::run`]; the short version is that `run` cannot
+//! return (or unwind) before every claimed task has finished and the job has
+//! been deregistered under the queue lock.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Upper bound on pool lanes. Beyond this, thread-spawn cost and scheduler
+/// churn can only hurt a simulation whose chunk count is bounded by blocks
+/// and sampled warps — and a typo'd huge `--sim-threads` value must fail at
+/// parse time, not abort mid-run when an OS thread spawn fails.
+pub const MAX_THREADS: usize = 512;
+
+/// A persistent worker pool; see the module docs.
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers sleep here when no job has claimable tasks.
+    work: Condvar,
+    /// Submitters sleep here while workers drain their job's last tasks.
+    done: Condvar,
+}
+
+struct State {
+    /// Jobs with (possibly) unclaimed task indices, in submission order.
+    /// Exhausted entries are pruned lazily by workers and eagerly by the
+    /// submitter before [`Pool::run`] returns.
+    jobs: Vec<JobPtr>,
+    shutdown: bool,
+}
+
+/// Pointer to a [`Job`] living on some submitter's stack. Only dereferenced
+/// while that submitter is blocked inside [`Pool::run`] (see the liveness
+/// protocol there).
+#[derive(Clone, Copy, PartialEq, Eq)]
+struct JobPtr(*const Job);
+
+// SAFETY: the pointee is kept alive by the Pool::run protocol; the pointer
+// itself is just an address.
+unsafe impl Send for JobPtr {}
+
+/// One `Pool::run` invocation: `n` tasks dispatched through a lifetime-
+/// erased closure, plus claim/completion accounting.
+struct Job {
+    /// The task body. Valid until `pending` reaches zero (the submitter
+    /// owns the closure and cannot leave `run` earlier).
+    f: *const (dyn Fn(usize) + Sync),
+    n: usize,
+    /// Next unclaimed task index; values `>= n` mean exhausted.
+    next: AtomicUsize,
+    /// Claimed-or-unclaimed tasks not yet finished. `run` returns only
+    /// after this hits zero.
+    pending: AtomicUsize,
+    /// Set when a worker's task panicked (the submitter re-raises).
+    panicked: AtomicBool,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("threads", &self.threads).finish()
+    }
+}
+
+impl Pool {
+    /// A pool of `threads` total execution lanes: the calling thread plus
+    /// `threads - 1` spawned workers, clamped to `1..=`[`MAX_THREADS`].
+    /// `Pool::new(1)` (and `new(0)`) spawns nothing and every
+    /// [`run`](Self::run) executes inline.
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.clamp(1, MAX_THREADS);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { jobs: Vec::new(), shutdown: false }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|wi| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("alb-exec-{wi}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn exec::Pool worker")
+            })
+            .collect();
+        Pool { shared, workers, threads }
+    }
+
+    /// Total execution lanes (caller + spawned workers).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute tasks `f(0) .. f(n-1)` to completion, in parallel with the
+    /// caller participating. Returns (or unwinds) only after every task has
+    /// finished, so `f` may borrow locals and write to per-task slots the
+    /// caller reads afterwards.
+    ///
+    /// # Liveness / safety protocol
+    ///
+    /// The job lives on this stack frame and the queue holds a raw pointer
+    /// to it, so the following invariants keep workers' dereferences valid:
+    ///
+    /// 1. A worker discovers the job and claims a task index under the
+    ///    queue lock; the submitter deregisters the job under the same lock,
+    ///    *after* `pending` reached zero — so a job found in the queue is
+    ///    alive for the duration of the claim.
+    /// 2. A claimed-but-unfinished task keeps `pending > 0`, which keeps
+    ///    the submitter blocked (job alive) until the worker's completion
+    ///    decrement — the worker's last touch of the job.
+    /// 3. On unwind (a panicking task), the drop guard performs the same
+    ///    claim-drain + wait + deregister before the frame dies.
+    pub fn run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        if self.workers.is_empty() || n == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        // Erase the borrow's lifetime for storage in the queue; sound per
+        // the protocol above.
+        let f_ptr: *const (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                &'static (dyn Fn(usize) + Sync),
+            >(f)
+        };
+        let job = Job {
+            f: f_ptr,
+            n,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(n),
+            panicked: AtomicBool::new(false),
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.jobs.push(JobPtr(&job));
+            self.shared.work.notify_all();
+        }
+        {
+            // Drains, waits, and deregisters on scope exit — normal or
+            // unwinding (invariant 3).
+            let _guard = JobGuard { shared: &self.shared, job: &job };
+            loop {
+                let i = job.next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // Decrements `pending` even if f unwinds, so the guard's
+                // wait cannot deadlock on our own in-flight task.
+                let _p = PendingGuard { shared: &self.shared, job: &job };
+                f(i);
+            }
+        }
+        if job.panicked.load(Ordering::Acquire) {
+            panic!("exec::Pool worker task panicked");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Decrement one finished (or abandoned) task; wake the submitter on zero.
+fn finish_one(shared: &Shared, job: &Job) {
+    if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+        // Lock the state mutex so the wake cannot slip between the
+        // submitter's pending check and its condvar wait.
+        let _st = shared.state.lock().unwrap();
+        shared.done.notify_all();
+    }
+}
+
+/// Completion guard for one task execution on the submitting thread.
+struct PendingGuard<'a> {
+    shared: &'a Shared,
+    job: &'a Job,
+}
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        finish_one(self.shared, self.job);
+    }
+}
+
+/// End-of-job guard: claims (without running) any tasks left unclaimed,
+/// waits for workers' in-flight tasks, and deregisters the job — on both
+/// the normal and the unwinding exit path of [`Pool::run`].
+struct JobGuard<'a> {
+    shared: &'a Shared,
+    job: &'a Job,
+}
+
+impl Drop for JobGuard<'_> {
+    fn drop(&mut self) {
+        // On the normal path every index is already claimed and this loop
+        // exits immediately; on unwind it abandons the remainder so
+        // `pending` can drain.
+        loop {
+            let i = self.job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.job.n {
+                break;
+            }
+            finish_one(self.shared, self.job);
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        while self.job.pending.load(Ordering::Acquire) > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        let addr: *const Job = self.job;
+        st.jobs.retain(|&p| p != JobPtr(addr));
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        // Find a claimable task under the state lock (see Pool::run's
+        // invariant 1), pruning exhausted jobs along the way.
+        let claimed: Option<(JobPtr, usize)> = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                let mut found: Option<(JobPtr, usize)> = None;
+                st.jobs.retain(|&ptr| {
+                    let JobPtr(p) = ptr;
+                    // SAFETY: the job is still registered, so its
+                    // submitter is blocked in Pool::run (invariant 1).
+                    let job = unsafe { &*p };
+                    if found.is_none() {
+                        let i = job.next.fetch_add(1, Ordering::Relaxed);
+                        if i < job.n {
+                            found = Some((ptr, i));
+                            return i + 1 < job.n;
+                        }
+                        false
+                    } else {
+                        job.next.load(Ordering::Relaxed) < job.n
+                    }
+                });
+                if found.is_some() {
+                    break found;
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        if let Some((JobPtr(p), i)) = claimed {
+            // SAFETY: task `i`'s pending slot is not yet released, so the
+            // submitter is still blocked and the job + closure are alive
+            // (invariant 2).
+            let job = unsafe { &*p };
+            let f = unsafe { &*job.f };
+            if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+                job.panicked.store(true, Ordering::Release);
+            }
+            finish_one(shared, job);
+        }
+    }
+}
+
+/// Default pool width: the `ALB_SIM_THREADS` environment override when set
+/// to a positive integer (the CI sequential-reference leg exports `1`),
+/// otherwise the host's available parallelism. Clamped to [`MAX_THREADS`].
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("ALB_SIM_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n.min(MAX_THREADS);
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(MAX_THREADS)
+}
+
+/// Parse a `--sim-threads` CLI value. `None` (flag absent) resolves to
+/// [`default_threads`]; `0`, values above [`MAX_THREADS`], and non-numbers
+/// are errors that name the valid range, so `alb run --sim-threads 0` (or
+/// a typo'd `10000000`) fails loudly instead of silently misconfiguring
+/// the pool or aborting mid-run on thread-spawn failure.
+pub fn parse_threads(arg: Option<&str>) -> Result<usize, String> {
+    match arg {
+        None => Ok(default_threads()),
+        Some(s) => match s.parse::<usize>() {
+            Ok(0) => Err(format!(
+                "--sim-threads 0 is invalid: need an integer in \
+                 1..={MAX_THREADS} (1 = the sequential reference walk; \
+                 default = available parallelism, or the ALB_SIM_THREADS \
+                 env override)"
+            )),
+            Ok(v) if v > MAX_THREADS => Err(format!(
+                "--sim-threads {v} is too large: need an integer in \
+                 1..={MAX_THREADS} (the simulation's chunk count is bounded \
+                 by blocks and sampled warps — more lanes cannot help)"
+            )),
+            Ok(v) => Ok(v),
+            Err(_) => Err(format!(
+                "--sim-threads '{s}' is not a number: need an integer in \
+                 1..={MAX_THREADS} (1 = the sequential reference walk; \
+                 default = available parallelism, or the ALB_SIM_THREADS \
+                 env override)"
+            )),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::AtomicU64;
+    use std::thread::ThreadId;
+    use std::time::Duration;
+
+    #[test]
+    fn single_thread_pool_runs_inline_in_order() {
+        let pool = Pool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let order = Mutex::new(Vec::new());
+        let me = std::thread::current().id();
+        let tid = Mutex::new(None::<ThreadId>);
+        pool.run(5, &|i| {
+            order.lock().unwrap().push(i);
+            *tid.lock().unwrap() = Some(std::thread::current().id());
+        });
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(tid.lock().unwrap().unwrap(), me);
+    }
+
+    #[test]
+    fn every_index_runs_exactly_once() {
+        let pool = Pool::new(4);
+        let n = 257;
+        let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        for _ in 0..10 {
+            pool.run(n, &|i| {
+                counts[i].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 10, "index {i}");
+        }
+    }
+
+    #[test]
+    fn run_is_a_barrier() {
+        let pool = Pool::new(3);
+        let done = AtomicUsize::new(0);
+        pool.run(16, &|_| {
+            std::thread::sleep(Duration::from_millis(1));
+            done.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(done.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn workers_actually_join_the_job() {
+        let pool = Pool::new(4);
+        let ids = Mutex::new(HashSet::new());
+        pool.run(64, &|_| {
+            std::thread::sleep(Duration::from_millis(2));
+            ids.lock().unwrap().insert(std::thread::current().id());
+        });
+        let ids = ids.lock().unwrap();
+        assert!(ids.len() >= 2, "expected >= 2 threads, saw {}", ids.len());
+    }
+
+    #[test]
+    fn nested_run_on_the_same_pool_completes() {
+        // A task calling Pool::run on its own pool (the coordinator's
+        // per-GPU rounds parallelizing their kernel simulation) must not
+        // deadlock or lose tasks.
+        let pool = Pool::new(3);
+        let leaf = AtomicUsize::new(0);
+        pool.run(3, &|_| {
+            pool.run(5, &|_| {
+                leaf.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(leaf.load(Ordering::SeqCst), 15);
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_task() {
+        let pool = Pool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the submitter");
+        // The pool stays usable afterwards.
+        let ok = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn zero_tasks_is_a_no_op() {
+        let pool = Pool::new(2);
+        pool.run(0, &|_| panic!("must not run"));
+    }
+
+    #[test]
+    fn parse_threads_accepts_positive_integers() {
+        assert_eq!(parse_threads(Some("1")), Ok(1));
+        assert_eq!(parse_threads(Some("7")), Ok(7));
+        assert!(parse_threads(None).unwrap() >= 1);
+    }
+
+    #[test]
+    fn parse_threads_rejects_zero_garbage_and_huge_with_guidance() {
+        let e = parse_threads(Some("0")).unwrap_err();
+        assert!(e.contains("1..=512"), "{e}");
+        assert!(e.contains("--sim-threads 0"), "{e}");
+        let e = parse_threads(Some("many")).unwrap_err();
+        assert!(e.contains("many"), "{e}");
+        assert!(e.contains("1..=512"), "{e}");
+        let e = parse_threads(Some("10000000")).unwrap_err();
+        assert!(e.contains("too large"), "{e}");
+        assert!(e.contains("1..=512"), "{e}");
+        assert_eq!(parse_threads(Some("512")), Ok(MAX_THREADS));
+    }
+
+    #[test]
+    fn pool_width_is_clamped() {
+        let p = Pool::new(0);
+        assert_eq!(p.threads(), 1);
+        assert!(default_threads() <= MAX_THREADS);
+        assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

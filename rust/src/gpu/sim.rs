@@ -30,7 +30,21 @@
 //! fresh-allocation, lane-by-lane implementation as the golden reference
 //! (`rust/tests/parity.rs`) and the pre-optimization baseline
 //! (`benches/hotpath.rs`).
+//!
+//! Intra-GPU parallel simulation (DESIGN.md §9):
+//! [`Simulator::simulate_into_pooled`] splits the block and warp walks into
+//! fixed contiguous chunks and runs them as [`crate::exec::Pool`] tasks.
+//! Each chunk simulates into its own [`SimScratch`] arena slot (per-chunk
+//! cache model, line buffer, and partial-result fields — §8's zero-
+//! allocation discipline survives) and the caller folds per-block results
+//! **in block order**, so the output is bit-identical to the sequential
+//! walk for any worker count. The per-warp and per-block bodies
+//! ([`Simulator`]'s `lb_warp` / `twc_block_chunk` / `lb_block_edges_chunk`)
+//! are shared verbatim between the two paths so they cannot drift.
 
+use std::sync::Mutex;
+
+use crate::exec::Pool;
 use crate::gpu::cache::CacheSim;
 use crate::gpu::cost::CostModel;
 use crate::gpu::model::GpuSpec;
@@ -100,11 +114,41 @@ pub struct SimScratch {
     pub round: RoundSim,
     /// Recycled kernel stats (keeps the block arrays' capacity).
     pool: Vec<KernelStats>,
+    /// Per-chunk worker arenas + partial results for
+    /// [`Simulator::simulate_into_pooled`] (DESIGN.md §9). A chunk index is
+    /// touched by exactly one pool task per phase; the mutex exists to
+    /// satisfy the shared-closure aliasing rules, not for contention.
+    chunks: Vec<Mutex<ChunkSim>>,
+}
+
+/// One chunk's arena and partial results for the pooled simulation: its own
+/// cache model + probe-line buffer (so sampled warps never share mutable
+/// state across chunks) and the chunk's per-block / per-warp outputs, folded
+/// by the caller in chunk order. All buffers retain capacity across rounds
+/// (§8).
+#[derive(Debug, Default)]
+struct ChunkSim {
+    block_cycles: Vec<u64>,
+    block_edges: Vec<u64>,
+    line_buf: Vec<u64>,
+    cache: Option<CacheSim>,
+    search_cycles: u64,
+    hits: u64,
+    misses: u64,
+    simulated: u64,
 }
 
 impl SimScratch {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Grow the chunk-arena list to at least `n` slots (capacities and the
+    /// per-chunk cache models persist across rounds).
+    fn ensure_chunks(&mut self, n: usize) {
+        while self.chunks.len() < n {
+            self.chunks.push(Mutex::new(ChunkSim::default()));
+        }
     }
 
     /// Move last round's kernels back into the pool and zero the summary.
@@ -132,23 +176,31 @@ impl SimScratch {
     /// Make sure the pooled cache model exists with `spec`'s geometry
     /// (rebuilt only when the geometry changes).
     fn ensure_cache(&mut self, spec: &GpuSpec) {
-        let ok = matches!(
-            &self.cache,
-            Some(c) if c.matches(spec.l1_kb, spec.cache_line_bytes, spec.cache_assoc)
-        );
-        if !ok {
-            self.cache =
-                Some(CacheSim::new(spec.l1_kb, spec.cache_line_bytes, spec.cache_assoc));
-        }
+        ensure_cache_slot(&mut self.cache, spec);
+    }
+}
+
+/// Ensure `slot` holds a cache model with `spec`'s geometry (rebuilt only on
+/// geometry change) — shared by the scratch's sequential instance and the
+/// per-chunk arenas.
+fn ensure_cache_slot(slot: &mut Option<CacheSim>, spec: &GpuSpec) {
+    let ok = matches!(
+        slot,
+        Some(c) if c.matches(spec.l1_kb, spec.cache_line_bytes, spec.cache_assoc)
+    );
+    if !ok {
+        *slot = Some(CacheSim::new(spec.l1_kb, spec.cache_line_bytes, spec.cache_assoc));
     }
 }
 
 /// Executes schedules against a fixed GPU + cost model.
 ///
 /// Holds only owned, immutable configuration, so it is `Send + Sync`: the
-/// multi-GPU coordinator runs one simulation per partition on its own OS
-/// thread every round (`comm::bsp::superstep`). The compile-time assertion
-/// below keeps that property from regressing silently.
+/// multi-GPU coordinator runs one simulation per partition as a shared-pool
+/// task every round (`comm::bsp::superstep`), and the pooled simulation's
+/// chunk closures capture `&Simulator` across worker threads. The
+/// compile-time assertion below keeps that property from regressing
+/// silently.
 #[derive(Debug, Clone)]
 pub struct Simulator {
     pub spec: GpuSpec,
@@ -188,6 +240,37 @@ impl Simulator {
         if let Some(lb) = &sched.lb {
             if lb.total_edges() > 0 {
                 let k = self.sim_lb_into(lb, push, scratch);
+                scratch.round.kernels.push(k);
+            }
+        }
+        let (overhead, total) = self.combine(&scratch.round.kernels, sched);
+        scratch.round.overhead_cycles = overhead;
+        scratch.round.total_cycles = total;
+    }
+
+    /// [`simulate_into`](Self::simulate_into) with the block and warp walks
+    /// split into fixed contiguous chunks on `pool` (DESIGN.md §9). Output
+    /// is **bit-identical to the sequential walk for any pool width**:
+    /// chunks write per-block values into per-chunk arena slots that are
+    /// folded in block order, and the only cross-chunk combines are exact
+    /// u64 sums. A 1-thread pool takes the sequential path unchanged.
+    pub fn simulate_into_pooled(
+        &self,
+        sched: &Schedule,
+        push: bool,
+        scratch: &mut SimScratch,
+        pool: &Pool,
+    ) {
+        if pool.threads() <= 1 {
+            self.simulate_into(sched, push, scratch);
+            return;
+        }
+        scratch.recycle();
+        let twc = self.sim_twc_pooled(&sched.twc, push, scratch, pool);
+        scratch.round.kernels.push(twc);
+        if let Some(lb) = &sched.lb {
+            if lb.total_edges() > 0 {
+                let k = self.sim_lb_pooled(lb, push, scratch, pool);
                 scratch.round.kernels.push(k);
             }
         }
@@ -250,14 +333,17 @@ impl Simulator {
         self.cost.cycles_edge + if push { self.cost.cycles_atomic } else { 0 }
     }
 
-    /// TWC kernel: exact per-thread accounting of the three bins, into the
-    /// scratch's reused arrays.
-    fn sim_twc_into(
+    /// TWC phase 1: exact per-unit round-robin accounting into the
+    /// scratch's thread/warp/CTA bins plus per-block edge totals. Stays
+    /// sequential even under the pool — the round-robin counters are an
+    /// order-dependent walk of the worklist.
+    fn twc_bins_into(
         &self,
         items: &[VertexItem],
         push: bool,
         scratch: &mut SimScratch,
-    ) -> KernelStats {
+        k: &mut KernelStats,
+    ) {
         let s = &self.spec;
         let nb = s.num_blocks as usize;
         let tpb = s.threads_per_block as usize;
@@ -267,7 +353,6 @@ impl Simulator {
         let warp = s.warp_size as u64;
         let ec = self.edge_cost(push);
 
-        let mut k = scratch.fresh_kernel("twc");
         let thread_c = &mut scratch.thread_c;
         let warp_c = &mut scratch.warp_c;
         let cta_c = &mut scratch.cta_c;
@@ -303,168 +388,243 @@ impl Simulator {
                 }
             }
         }
+    }
 
-        k.block_cycles.resize(nb, 0);
-        for b in 0..nb {
+    /// `simulate_chunk`, TWC leg (DESIGN.md §9): the per-block bottleneck
+    /// reduction for blocks `[b0, b1)`, one value per block in block order
+    /// into `out` (cleared first). Pure per-block arithmetic — shared by
+    /// the sequential walk (one chunk covering every block) and the pooled
+    /// chunks, so the two cannot drift.
+    fn twc_block_chunk(
+        &self,
+        thread_c: &[u64],
+        warp_c: &[u64],
+        cta_c: &[u64],
+        b0: usize,
+        b1: usize,
+        out: &mut Vec<u64>,
+    ) {
+        let tpb = self.spec.threads_per_block as usize;
+        let ws = self.spec.warp_size as usize;
+        out.clear();
+        for b in b0..b1 {
             let mut worst = 0u64;
             for t in b * tpb..(b + 1) * tpb {
-                let w = t / s.warp_size as usize;
+                let w = t / ws;
                 let c = thread_c[t] + warp_c[w] + cta_c[b];
                 worst = worst.max(c);
             }
-            k.block_cycles[b] = worst;
+            out.push(worst);
+        }
+    }
+
+    /// TWC kernel: exact per-thread accounting of the three bins, into the
+    /// scratch's reused arrays.
+    fn sim_twc_into(
+        &self,
+        items: &[VertexItem],
+        push: bool,
+        scratch: &mut SimScratch,
+    ) -> KernelStats {
+        let mut k = scratch.fresh_kernel("twc");
+        self.twc_bins_into(items, push, scratch, &mut k);
+        let nb = self.spec.num_blocks as usize;
+        let SimScratch { thread_c, warp_c, cta_c, .. } = scratch;
+        self.twc_block_chunk(thread_c, warp_c, cta_c, 0, nb, &mut k.block_cycles);
+        k.kernel_cycles =
+            self.cost.cycles_launch + k.block_cycles.iter().max().copied().unwrap_or(0);
+        k
+    }
+
+    /// TWC kernel with the per-block bottleneck walk chunked onto the pool;
+    /// bit-identical to [`sim_twc_into`](Self::sim_twc_into).
+    fn sim_twc_pooled(
+        &self,
+        items: &[VertexItem],
+        push: bool,
+        scratch: &mut SimScratch,
+        pool: &Pool,
+    ) -> KernelStats {
+        let mut k = scratch.fresh_kernel("twc");
+        self.twc_bins_into(items, push, scratch, &mut k);
+        let nb = self.spec.num_blocks as usize;
+        let nchunks = pool.threads().min(nb).max(1);
+        let per = nb.div_ceil(nchunks);
+        scratch.ensure_chunks(nchunks);
+        {
+            let SimScratch { thread_c, warp_c, cta_c, chunks, .. } = &*scratch;
+            let chunks = &chunks[..nchunks];
+            pool.run(nchunks, &|ci| {
+                let b0 = (ci * per).min(nb);
+                let b1 = ((ci + 1) * per).min(nb);
+                let mut c = chunks[ci].lock().unwrap();
+                self.twc_block_chunk(thread_c, warp_c, cta_c, b0, b1, &mut c.block_cycles);
+            });
+        }
+        // Fold per-block results in block (= chunk) order.
+        k.block_cycles.clear();
+        for m in &scratch.chunks[..nchunks] {
+            k.block_cycles.extend_from_slice(&m.lock().unwrap().block_cycles);
         }
         k.kernel_cycles =
             self.cost.cycles_launch + k.block_cycles.iter().max().copied().unwrap_or(0);
         k
     }
 
-    /// LB kernel: even edge split + cache-modeled binary search, into the
-    /// scratch's reused buffers. The cyclic distribution takes a
-    /// segment-jumping fast path that reproduces the lane-by-lane walk's
-    /// probe sequence and line set exactly (asserted against
-    /// [`simulate_reference`] by the tests below): within one warp step the
-    /// lane edge ids are consecutive, so the probe path re-searches only at
-    /// prefix-segment boundaries and the touched edge-data lines form one
-    /// contiguous range.
-    fn sim_lb_into(&self, lb: &LbLaunch, push: bool, scratch: &mut SimScratch) -> KernelStats {
-        let s = &self.spec;
-        let nb = s.num_blocks as usize;
-        let tpb = s.threads_per_block as u64;
-        let p = s.total_threads();
-        let total = lb.total_edges();
-        let w = total.div_ceil(p); // edges per thread (paper line 15)
-        let ec = self.edge_cost(push);
-
-        // --- binary-search cost via the cache model (sampled warps) ---
-        let warp_lanes = s.warp_size as u64;
-        let nwarps = s.total_warps();
+    /// Warp-sampling geometry for an LB launch of `total` edges:
+    /// `(w, warp_stride, n_sampled)` — edges per thread (paper line 15),
+    /// stride between sampled warps, and how many warps the walk simulates
+    /// (whole warps, so intra-warp cache state stays faithful).
+    fn lb_sampling(&self, total: u64) -> (u64, u64, u64) {
+        let p = self.spec.total_threads();
+        let w = total.div_ceil(p);
+        let nwarps = self.spec.total_warps();
         let total_warp_steps = nwarps.saturating_mul(w);
         let cap = self.cost.lb_warp_step_sample_cap.max(1);
-        // Sample whole warps so intra-warp cache state stays faithful.
         let warps_to_sim = if total_warp_steps <= cap {
             nwarps
         } else {
             (cap / w.max(1)).clamp(1, nwarps)
         };
-        let warp_stride = (nwarps / warps_to_sim).max(1);
+        let warp_stride = (nwarps / warps_to_sim.max(1)).max(1);
+        // The walk stops at the earlier of the sample budget and the end of
+        // the warp range: sampled warp `j` is warp `j * warp_stride`.
+        let n_sampled = warps_to_sim.min(nwarps.div_ceil(warp_stride));
+        (w, warp_stride, n_sampled)
+    }
 
-        let mut k = scratch.fresh_kernel("lb");
-        scratch.ensure_cache(s);
-        // Split borrows: the cache and the line buffer live in different
-        // scratch fields.
-        let SimScratch { line_buf, cache, .. } = scratch;
-        let cache = cache.as_mut().expect("built by ensure_cache");
-
-        let mut sim_search_cycles = 0u64;
-        let (mut hits, mut misses) = (0u64, 0u64);
-        let mut simulated = 0u64;
+    /// `simulate_chunk`, LB leg (DESIGN.md §9): one sampled warp's LB-kernel
+    /// walk. Resets `cache` (each sampled warp starts cold, exactly like the
+    /// sequential walk), replays warp `widx`'s `w` lockstep steps through
+    /// the cache model, and returns the warp's modeled search cycles; the
+    /// caller reads the warp's hit/miss counts off `cache` afterwards.
+    /// Shared verbatim by the sequential and pooled paths.
+    ///
+    /// The cyclic distribution takes a segment-jumping fast path that
+    /// reproduces the lane-by-lane walk's probe sequence and line set
+    /// exactly (asserted against [`Simulator::simulate_reference`] by the
+    /// tests below): within one warp step the lane edge ids are
+    /// consecutive, so the probe path re-searches only at prefix-segment
+    /// boundaries and the touched edge-data lines form one contiguous
+    /// range.
+    fn lb_warp(
+        &self,
+        lb: &LbLaunch,
+        widx: u64,
+        w: u64,
+        cache: &mut CacheSim,
+        line_buf: &mut Vec<u64>,
+    ) -> u64 {
+        let s = &self.spec;
+        let p = s.total_threads();
+        let total = lb.total_edges();
+        let warp_lanes = s.warp_size as u64;
         let line_bytes = s.cache_line_bytes as u64;
         let do_search = lb.search;
-        let mut widx = 0u64;
-        while widx < nwarps && simulated < warps_to_sim {
-            cache.reset_all();
-            for j in 0..w {
-                line_buf.clear();
-                match lb.distribution {
-                    Distribution::Cyclic => {
-                        // Fast path: this step's active edge ids are the
-                        // contiguous range [start, end) — identical probe
-                        // trajectories compress to one search per prefix
-                        // segment, and the edge-data lines are one run.
-                        let start = widx * warp_lanes + j * p;
-                        if start >= total {
-                            continue;
-                        }
-                        let end = (start + warp_lanes).min(total);
-                        if do_search {
-                            let mut eid = start;
-                            while eid < end {
-                                let idx =
-                                    probe_lines(&lb.prefix, eid, line_bytes, line_buf);
-                                // Next search happens at the first edge id
-                                // beyond this source's segment (the lane
-                                // that leaves the segment re-searches).
-                                eid = lb.prefix[idx];
-                            }
-                        }
-                        let lo = (start * 8) / line_bytes;
-                        let hi = ((end - 1) * 8) / line_bytes;
-                        for line in lo..=hi {
-                            line_buf.push(EDGE_REGION + line);
+        let mut sim_search_cycles = 0u64;
+        cache.reset_all();
+        for j in 0..w {
+            line_buf.clear();
+            match lb.distribution {
+                Distribution::Cyclic => {
+                    // Fast path: this step's active edge ids are the
+                    // contiguous range [start, end) — identical probe
+                    // trajectories compress to one search per prefix
+                    // segment, and the edge-data lines are one run.
+                    let start = widx * warp_lanes + j * p;
+                    if start >= total {
+                        continue;
+                    }
+                    let end = (start + warp_lanes).min(total);
+                    if do_search {
+                        let mut eid = start;
+                        while eid < end {
+                            let idx =
+                                probe_lines(&lb.prefix, eid, line_bytes, line_buf);
+                            // Next search happens at the first edge id
+                            // beyond this source's segment (the lane
+                            // that leaves the segment re-searches).
+                            eid = lb.prefix[idx];
                         }
                     }
-                    Distribution::Blocked => {
-                        // Lane-by-lane walk with identical-trajectory
-                        // compression: a lane whose eid falls in the
-                        // previous lane's prefix segment contributes no new
-                        // probe lines (the sort+dedup below would drop them
-                        // anyway).
-                        let (mut seg_lo, mut seg_hi) = (u64::MAX, u64::MAX);
-                        let mut lanes_active = 0u64;
-                        for lane in 0..warp_lanes {
-                            let t = widx * warp_lanes + lane;
-                            let eid = t * w + j;
-                            if eid >= total {
-                                continue;
-                            }
-                            lanes_active += 1;
-                            if do_search && !(seg_lo <= eid && eid < seg_hi) {
-                                let idx =
-                                    probe_lines(&lb.prefix, eid, line_bytes, line_buf);
-                                seg_lo = if idx == 0 { 0 } else { lb.prefix[idx - 1] };
-                                seg_hi = lb.prefix[idx];
-                            }
-                            // Edge-data touch (col_idx + weight, 8 B at eid)
-                            // in a region disjoint from the prefix array.
-                            line_buf.push(EDGE_REGION + (eid * 8) / line_bytes);
-                        }
-                        if lanes_active == 0 {
-                            continue;
-                        }
+                    let lo = (start * 8) / line_bytes;
+                    let hi = ((end - 1) * 8) / line_bytes;
+                    for line in lo..=hi {
+                        line_buf.push(EDGE_REGION + line);
                     }
                 }
-                // Coalescing: lanes touching the same line in the same
-                // lockstep issue one transaction; prefix probes go through
-                // the per-SM cache (aligned trajectories -> hits — the
-                // cyclic case), edge-data lines amortize across each lane's
-                // contiguous walk. One coalesced edge transaction per step
-                // is already priced into `cycles_edge`, so the first
-                // edge-region line is free.
-                line_buf.sort_unstable();
-                line_buf.dedup();
-                let mut first_edge = true;
-                for &line in line_buf.iter() {
-                    let hit = cache.access(line * line_bytes);
-                    if line >= EDGE_REGION && first_edge {
-                        first_edge = false;
-                        continue; // the baseline coalesced transaction
+                Distribution::Blocked => {
+                    // Lane-by-lane walk with identical-trajectory
+                    // compression: a lane whose eid falls in the
+                    // previous lane's prefix segment contributes no new
+                    // probe lines (the sort+dedup below would drop them
+                    // anyway).
+                    let (mut seg_lo, mut seg_hi) = (u64::MAX, u64::MAX);
+                    let mut lanes_active = 0u64;
+                    for lane in 0..warp_lanes {
+                        let t = widx * warp_lanes + lane;
+                        let eid = t * w + j;
+                        if eid >= total {
+                            continue;
+                        }
+                        lanes_active += 1;
+                        if do_search && !(seg_lo <= eid && eid < seg_hi) {
+                            let idx =
+                                probe_lines(&lb.prefix, eid, line_bytes, line_buf);
+                            seg_lo = if idx == 0 { 0 } else { lb.prefix[idx - 1] };
+                            seg_hi = lb.prefix[idx];
+                        }
+                        // Edge-data touch (col_idx + weight, 8 B at eid)
+                        // in a region disjoint from the prefix array.
+                        line_buf.push(EDGE_REGION + (eid * 8) / line_bytes);
                     }
-                    sim_search_cycles += if hit {
-                        self.cost.cycles_mem_hit
-                    } else {
-                        self.cost.cycles_mem_miss
-                    };
+                    if lanes_active == 0 {
+                        continue;
+                    }
                 }
             }
-            hits += cache.hits();
-            misses += cache.misses();
-            simulated += 1;
-            widx += warp_stride;
+            // Coalescing: lanes touching the same line in the same
+            // lockstep issue one transaction; prefix probes go through
+            // the per-SM cache (aligned trajectories -> hits — the
+            // cyclic case), edge-data lines amortize across each lane's
+            // contiguous walk. One coalesced edge transaction per step
+            // is already priced into `cycles_edge`, so the first
+            // edge-region line is free.
+            line_buf.sort_unstable();
+            line_buf.dedup();
+            let mut first_edge = true;
+            for &line in line_buf.iter() {
+                let hit = cache.access(line * line_bytes);
+                if line >= EDGE_REGION && first_edge {
+                    first_edge = false;
+                    continue; // the baseline coalesced transaction
+                }
+                sim_search_cycles += if hit {
+                    self.cost.cycles_mem_hit
+                } else {
+                    self.cost.cycles_mem_miss
+                };
+            }
         }
-        let search_per_warp = if simulated > 0 {
-            sim_search_cycles / simulated
-        } else {
-            0
-        };
-        // Extrapolate sampled hit/miss counts to the full launch.
-        let scale = nwarps as f64 / simulated.max(1) as f64;
-        k.cache_hits = (hits as f64 * scale) as u64;
-        k.cache_misses = (misses as f64 * scale) as u64;
+        sim_search_cycles
+    }
 
-        // --- per-block edges and cycles ---
-        k.block_edges.resize(nb, 0);
-        for b in 0..nb as u64 {
+    /// `simulate_chunk`'s LB per-block edge tally for blocks `[b0, b1)`:
+    /// pure per-block arithmetic, one value per block in block order into
+    /// `out` (cleared first).
+    fn lb_block_edges_chunk(
+        &self,
+        lb: &LbLaunch,
+        w: u64,
+        b0: usize,
+        b1: usize,
+        out: &mut Vec<u64>,
+    ) {
+        let tpb = self.spec.threads_per_block as u64;
+        let p = self.spec.total_threads();
+        let total = lb.total_edges();
+        out.clear();
+        for b in b0 as u64..b1 as u64 {
             let mut edges = 0u64;
             for t in b * tpb..(b + 1) * tpb {
                 edges += match lb.distribution {
@@ -485,17 +645,152 @@ impl Simulator {
                     }
                 };
             }
-            k.block_edges[b as usize] = edges;
+            out.push(edges);
         }
-        k.block_cycles.resize(nb, 0);
-        k.block_cycles.fill(w * ec + search_per_warp);
+    }
+
+    /// Shared epilogue of the sequential and pooled LB kernels: fold the
+    /// sampled-warp partials into the kernel's cycle/cache accounting and
+    /// per-block cycles (the per-block edge tally is already shared via
+    /// [`lb_block_edges_chunk`](Self::lb_block_edges_chunk)). One
+    /// implementation so the cost accounting cannot drift between the two
+    /// paths.
+    #[allow(clippy::too_many_arguments)]
+    fn lb_finish(
+        &self,
+        k: &mut KernelStats,
+        lb: &LbLaunch,
+        w: u64,
+        ec: u64,
+        sim_search_cycles: u64,
+        hits: u64,
+        misses: u64,
+        simulated: u64,
+    ) {
+        let nb = self.spec.num_blocks as usize;
+        let nwarps = self.spec.total_warps();
+        let search_per_warp = if simulated > 0 {
+            sim_search_cycles / simulated
+        } else {
+            0
+        };
+        // Extrapolate sampled hit/miss counts to the full launch.
+        let scale = nwarps as f64 / simulated.max(1) as f64;
+        k.cache_hits = (hits as f64 * scale) as u64;
+        k.cache_misses = (misses as f64 * scale) as u64;
+        k.block_cycles.clear();
+        k.block_cycles.resize(nb, w * ec + search_per_warp);
         // Enterprise-style grid launches pay one launch per processed
         // vertex (no shared prefix kernel); the searched LB kernel is one
         // launch total.
         let launches = if lb.search { 1 } else { lb.vertices.len().max(1) as u64 };
         k.kernel_cycles = launches * self.cost.cycles_launch
             + k.block_cycles.iter().max().copied().unwrap_or(0);
-        k.total_edges = total;
+        k.total_edges = lb.total_edges();
+    }
+
+    /// LB kernel: even edge split + cache-modeled binary search, into the
+    /// scratch's reused buffers (the per-warp body lives in
+    /// [`lb_warp`](Self::lb_warp)).
+    fn sim_lb_into(&self, lb: &LbLaunch, push: bool, scratch: &mut SimScratch) -> KernelStats {
+        let s = &self.spec;
+        let nb = s.num_blocks as usize;
+        let (w, warp_stride, n_sampled) = self.lb_sampling(lb.total_edges());
+        let ec = self.edge_cost(push);
+
+        let mut k = scratch.fresh_kernel("lb");
+        scratch.ensure_cache(s);
+        // Split borrows: the cache and the line buffer live in different
+        // scratch fields.
+        let SimScratch { line_buf, cache, .. } = scratch;
+        let cache = cache.as_mut().expect("built by ensure_cache");
+
+        let mut sim_search_cycles = 0u64;
+        let (mut hits, mut misses) = (0u64, 0u64);
+        for j in 0..n_sampled {
+            sim_search_cycles += self.lb_warp(lb, j * warp_stride, w, cache, line_buf);
+            hits += cache.hits();
+            misses += cache.misses();
+        }
+        self.lb_block_edges_chunk(lb, w, 0, nb, &mut k.block_edges);
+        self.lb_finish(&mut k, lb, w, ec, sim_search_cycles, hits, misses, n_sampled);
+        k
+    }
+
+    /// LB kernel with the sampled-warp walk and the per-block edge tally
+    /// chunked onto the pool; bit-identical to
+    /// [`sim_lb_into`](Self::sim_lb_into) — chunk partials are exact u64
+    /// sums and per-block values fold in block order.
+    fn sim_lb_pooled(
+        &self,
+        lb: &LbLaunch,
+        push: bool,
+        scratch: &mut SimScratch,
+        pool: &Pool,
+    ) -> KernelStats {
+        let s = &self.spec;
+        let nb = s.num_blocks as usize;
+        let (w, warp_stride, n_sampled) = self.lb_sampling(lb.total_edges());
+        let ec = self.edge_cost(push);
+        let mut k = scratch.fresh_kernel("lb");
+
+        let wchunks = pool.threads().min(n_sampled.max(1) as usize).max(1);
+        let per_w = n_sampled.div_ceil(wchunks as u64).max(1);
+        let bchunks = pool.threads().min(nb).max(1);
+        let per_b = nb.div_ceil(bchunks);
+        scratch.ensure_chunks(wchunks.max(bchunks));
+
+        // --- warp sampling, chunked over the sampled-warp list ---
+        {
+            let chunks = &scratch.chunks[..wchunks];
+            pool.run(wchunks, &|ci| {
+                let mut c = chunks[ci].lock().unwrap();
+                let c = &mut *c;
+                c.search_cycles = 0;
+                c.hits = 0;
+                c.misses = 0;
+                c.simulated = 0;
+                ensure_cache_slot(&mut c.cache, s);
+                let ChunkSim { cache, line_buf, search_cycles, hits, misses, simulated, .. } =
+                    c;
+                let cache = cache.as_mut().expect("built by ensure_cache_slot");
+                let lo = ci as u64 * per_w;
+                let hi = (lo + per_w).min(n_sampled);
+                for j in lo..hi {
+                    *search_cycles += self.lb_warp(lb, j * warp_stride, w, cache, line_buf);
+                    *hits += cache.hits();
+                    *misses += cache.misses();
+                    *simulated += 1;
+                }
+            });
+        }
+        // Fold the warp partials in chunk order (exact integer sums).
+        let (mut sim_search_cycles, mut hits, mut misses, mut simulated) =
+            (0u64, 0u64, 0u64, 0u64);
+        for m in &scratch.chunks[..wchunks] {
+            let c = m.lock().unwrap();
+            sim_search_cycles += c.search_cycles;
+            hits += c.hits;
+            misses += c.misses;
+            simulated += c.simulated;
+        }
+
+        // --- per-block edges, chunked over contiguous block ranges ---
+        {
+            let chunks = &scratch.chunks[..bchunks];
+            pool.run(bchunks, &|ci| {
+                let b0 = (ci * per_b).min(nb);
+                let b1 = ((ci + 1) * per_b).min(nb);
+                let mut c = chunks[ci].lock().unwrap();
+                self.lb_block_edges_chunk(lb, w, b0, b1, &mut c.block_edges);
+            });
+        }
+        k.block_edges.clear();
+        for m in &scratch.chunks[..bchunks] {
+            k.block_edges.extend_from_slice(&m.lock().unwrap().block_edges);
+        }
+
+        self.lb_finish(&mut k, lb, w, ec, sim_search_cycles, hits, misses, simulated);
         k
     }
 
@@ -1052,6 +1347,66 @@ mod tests {
         for sched in assorted_schedules(&s) {
             assert_eq!(s.simulate(&sched, true), s.simulate_reference(&sched, true));
         }
+    }
+
+    #[test]
+    fn pooled_simulation_bit_identical_across_pool_widths() {
+        // The §9 determinism contract: the chunked pool walk must equal the
+        // golden reference bit-for-bit for any worker count, on both GPU
+        // geometries, across every assorted schedule (both kernels, both
+        // distributions, ragged tails, empty rounds).
+        for spec in [GpuSpec::default_sim(), GpuSpec::k80_like()] {
+            let s = Simulator::new(spec, CostModel::default());
+            let cases: Vec<(Schedule, bool, RoundSim)> = [true, false]
+                .into_iter()
+                .flat_map(|push| {
+                    assorted_schedules(&s).into_iter().map(move |sched| (sched, push))
+                })
+                .map(|(sched, push)| {
+                    let want = s.simulate_reference(&sched, push);
+                    (sched, push, want)
+                })
+                .collect();
+            for threads in [1usize, 2, 3, 7] {
+                let pool = Pool::new(threads);
+                let mut scratch = SimScratch::new();
+                for (sched, push, want) in &cases {
+                    s.simulate_into_pooled(sched, *push, &mut scratch, &pool);
+                    assert_eq!(
+                        &scratch.round, want,
+                        "threads={threads} push={push} spec={}",
+                        s.spec.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_chunk_arenas_persist_across_rounds() {
+        // One scratch threaded through many pooled rounds keeps its chunk
+        // arenas (no regrowth of the chunk list once warmed).
+        let s = sim();
+        let pool = Pool::new(4);
+        let mut scratch = SimScratch::new();
+        let sched = Schedule {
+            twc: thread_items(100, 4),
+            lb: Some(LbLaunch {
+                vertices: vec![0],
+                prefix: vec![200_000],
+                distribution: Distribution::Cyclic,
+                search: true,
+            }),
+            scan_vertices: 100,
+            prefix_items: 1,
+        };
+        s.simulate_into_pooled(&sched, true, &mut scratch, &pool);
+        let nchunks = scratch.chunks.len();
+        assert!(nchunks >= 1 && nchunks <= pool.threads());
+        for _ in 0..5 {
+            s.simulate_into_pooled(&sched, true, &mut scratch, &pool);
+        }
+        assert_eq!(scratch.chunks.len(), nchunks, "chunk arenas must be reused");
     }
 
     #[test]

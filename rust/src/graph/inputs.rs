@@ -159,6 +159,21 @@ mod tests {
     }
 
     #[test]
+    fn rmat22_hub_above_threshold_at_bench_scale() {
+        // The hotpath bench's sim-par-rmat22 case runs this preset at
+        // delta 0 / seed 7 and needs the hub to cross the sim-default
+        // THRESHOLD (3072 launched threads) so the LB kernel — the
+        // parallelized block/warp walk (DESIGN.md §9) — actually launches
+        // where the speedup is measured.
+        let g = build("rmat22", 0, 7).unwrap();
+        let max_d = (0..g.num_vertices() as u32).map(|v| g.out_degree(v)).max().unwrap();
+        assert!(
+            max_d >= 3072,
+            "rmat22 hub {max_d} must exceed the sim-default THRESHOLD"
+        );
+    }
+
+    #[test]
     fn scale_delta_changes_size() {
         let small = generate("rmat18", -4, 1).unwrap();
         let big = generate("rmat18", -2, 1).unwrap();

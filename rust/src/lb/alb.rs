@@ -16,12 +16,17 @@
 //! orkut, uk2007, or pr's flat in-degrees) the LB kernel is never launched
 //! and the only cost over plain TWC is the threshold compare.
 
+use crate::exec::Pool;
 use crate::graph::CsrGraph;
 use crate::gpu::GpuSpec;
 use crate::lb::schedule::{
-    Distribution, LbLaunch, Schedule, ScheduleScratch, VertexItem,
+    Distribution, LbLaunch, Schedule, ScheduleScratch, SplitChunk, VertexItem,
 };
 use crate::lb::{degree, twc, Direction};
+
+/// Below this many active vertices the pooled split falls back to the
+/// sequential walk — the threshold probe is too cheap to farm out.
+const PAR_SPLIT_MIN: usize = 2048;
 
 /// Outcome of the inspector phase — exposed for tests and metrics.
 #[derive(Debug, Clone, Default)]
@@ -129,6 +134,74 @@ pub fn schedule_into(
     out.sched.scan_vertices = scan_vertices;
     // Benefit check (§4): only pay the LB launch when the huge bin is
     // non-empty; otherwise this degenerates to plain TWC.
+    if huge.is_empty() {
+        out.restore_lb_buffers(huge, prefix);
+    } else {
+        out.sched.lb =
+            Some(LbLaunch { vertices: huge, prefix, distribution, search: true });
+    }
+}
+
+/// [`schedule_into`] with the inspector's threshold probe pass split into
+/// fixed contiguous chunks of the active set on `pool` (DESIGN.md §9).
+/// Each chunk probes degrees into its own [`SplitChunk`] buffers; the fold
+/// appends huge/rest lists in chunk (= active) order and rebases each
+/// chunk's local degree prefix by the running total, so the schedule is
+/// bit-identical to the sequential split for any pool width. Small active
+/// sets and 1-thread pools take the sequential path unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn schedule_into_pooled(
+    active: &[u32],
+    g: &CsrGraph,
+    dir: Direction,
+    spec: &GpuSpec,
+    distribution: Distribution,
+    threshold: u64,
+    scan_vertices: u64,
+    out: &mut ScheduleScratch,
+    pool: &Pool,
+) {
+    if pool.threads() <= 1 || active.len() < PAR_SPLIT_MIN {
+        schedule_into(
+            active, g, dir, spec, distribution, threshold, scan_vertices, out,
+        );
+        return;
+    }
+    out.reset();
+    let nchunks = pool.threads().min(active.len()).max(1);
+    let per = active.len().div_ceil(nchunks);
+    out.ensure_split_chunks(nchunks);
+    {
+        let chunks = &out.split_chunks[..nchunks];
+        pool.run(nchunks, &|ci| {
+            let lo = (ci * per).min(active.len());
+            let hi = ((ci + 1) * per).min(active.len());
+            let mut c = chunks[ci].lock().unwrap();
+            let c: &mut SplitChunk = &mut c;
+            c.huge.clear();
+            c.prefix.clear();
+            c.rest.clear();
+            split_into(
+                &active[lo..hi], g, dir, spec, threshold,
+                &mut c.huge, &mut c.prefix, &mut c.rest,
+            );
+        });
+    }
+    // Fold in chunk (= active) order, rebasing each chunk's local prefix.
+    let (mut huge, mut prefix) = out.lb_buffers();
+    let ScheduleScratch { sched, split_chunks, .. } = out;
+    let mut offset = 0u64;
+    for m in &split_chunks[..nchunks] {
+        let c = m.lock().unwrap();
+        huge.extend_from_slice(&c.huge);
+        for &p in &c.prefix {
+            prefix.push(p + offset);
+        }
+        offset += c.prefix.last().copied().unwrap_or(0);
+        sched.twc.extend_from_slice(&c.rest);
+    }
+    sched.prefix_items = huge.len() as u64;
+    sched.scan_vertices = scan_vertices;
     if huge.is_empty() {
         out.restore_lb_buffers(huge, prefix);
     } else {
@@ -263,5 +336,59 @@ mod tests {
         let ins = inspect(&[1, 2], &g, Direction::Push, &spec, 3072);
         assert_eq!(ins.rest[0].unit, Unit::Block); // degree 200 >= 128
         assert_eq!(ins.rest[1].unit, Unit::Thread); // degree 1
+    }
+
+    #[test]
+    fn pooled_split_matches_sequential_for_any_pool_width() {
+        // §9 determinism: the chunked probe pass must produce the same
+        // schedule as the sequential split — same huge order, same rebased
+        // prefix, same TWC items — for any pool width and threshold,
+        // including thresholds that spread huge vertices across chunks
+        // (threshold 1: every active vertex with an edge is huge, so the
+        // prefix rebase is exercised at every chunk boundary).
+        let g = skewed();
+        let spec = GpuSpec::default_sim();
+        let active: Vec<u32> = (0..g.num_vertices() as u32).collect();
+        assert!(active.len() >= super::PAR_SPLIT_MIN);
+        for threshold in [1u64, 150, spec.huge_threshold(), u64::MAX] {
+            let mut want = ScheduleScratch::new();
+            schedule_into(
+                &active, &g, Direction::Push, &spec, Distribution::Cyclic,
+                threshold, 9, &mut want,
+            );
+            for threads in [1usize, 2, 3, 7] {
+                let pool = Pool::new(threads);
+                let mut got = ScheduleScratch::new();
+                schedule_into_pooled(
+                    &active, &g, Direction::Push, &spec, Distribution::Cyclic,
+                    threshold, 9, &mut got, &pool,
+                );
+                assert_eq!(
+                    got.sched, want.sched,
+                    "threads={threads} threshold={threshold}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_split_small_frontier_takes_sequential_path() {
+        // Below PAR_SPLIT_MIN the pooled entry point must still produce the
+        // identical schedule (it delegates to the sequential walk).
+        let g = skewed();
+        let spec = GpuSpec::default_sim();
+        let active: Vec<u32> = (0..100).collect();
+        let pool = Pool::new(4);
+        let mut got = ScheduleScratch::new();
+        schedule_into_pooled(
+            &active, &g, Direction::Push, &spec, Distribution::Cyclic,
+            150, 0, &mut got, &pool,
+        );
+        let mut want = ScheduleScratch::new();
+        schedule_into(
+            &active, &g, Direction::Push, &spec, Distribution::Cyclic,
+            150, 0, &mut want,
+        );
+        assert_eq!(got.sched, want.sched);
     }
 }

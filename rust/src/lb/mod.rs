@@ -88,6 +88,37 @@ impl Balancer {
         scratch.sched
     }
 
+    /// [`schedule_into`](Self::schedule_into) with the ALB inspector's
+    /// threshold probe pass chunked onto the shared worker pool
+    /// (DESIGN.md §9); every other strategy delegates to the sequential
+    /// walk unchanged. Output is bit-identical for any pool width.
+    #[allow(clippy::too_many_arguments)]
+    pub fn schedule_into_pooled(
+        &self,
+        active: &[u32],
+        g: &CsrGraph,
+        dir: Direction,
+        spec: &GpuSpec,
+        scan_vertices: u64,
+        out: &mut ScheduleScratch,
+        pool: &crate::exec::Pool,
+    ) {
+        match self {
+            Balancer::Alb { distribution, threshold } => alb::schedule_into_pooled(
+                active,
+                g,
+                dir,
+                spec,
+                *distribution,
+                threshold.unwrap_or_else(|| spec.huge_threshold()),
+                scan_vertices,
+                out,
+                pool,
+            ),
+            _ => self.schedule_into(active, g, dir, spec, scan_vertices, out),
+        }
+    }
+
     /// Build the round schedule into caller-owned buffers (`out` is reset
     /// first). `scan_vertices` is the worklist-discovery cost the engine
     /// charges (dense: |V|; sparse: |active|).

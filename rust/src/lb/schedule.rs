@@ -6,6 +6,8 @@
 //! the inspector) and the LB kernel (launched only when the huge worklist is
 //! non-empty).
 
+use std::sync::Mutex;
+
 
 /// Which level of the thread hierarchy processes a vertex's edges (TWC bins).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -19,7 +21,7 @@ pub enum Unit {
 }
 
 /// One vertex's work assignment in the TWC kernel.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct VertexItem {
     pub vertex: u32,
     pub degree: u64,
@@ -38,7 +40,7 @@ pub enum Distribution {
 
 /// The LB kernel launch: every edge of the `huge` vertices, distributed
 /// evenly across all launched threads.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LbLaunch {
     /// Vertices whose edges are being distributed (paper's huge bin — or all
     /// active vertices for Gunrock-style static LB).
@@ -60,7 +62,7 @@ impl LbLaunch {
 }
 
 /// One round's kernel launches plus worklist-management accounting.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Schedule {
     /// TWC kernel work items, in worklist order.
     pub twc: Vec<VertexItem>,
@@ -92,11 +94,33 @@ pub struct ScheduleScratch {
     pub sched: Schedule,
     spare_vertices: Vec<u32>,
     spare_prefix: Vec<u64>,
+    /// Per-chunk buffers for the pooled ALB inspector split (DESIGN.md §9).
+    /// A chunk index is written by exactly one pool task per round; the
+    /// mutex satisfies the shared-closure aliasing rules and is never
+    /// contended. Capacities persist across rounds (§8).
+    pub(crate) split_chunks: Vec<Mutex<SplitChunk>>,
+}
+
+/// One contiguous active-range chunk of the ALB inspector's threshold probe
+/// pass: the chunk's huge vertices, their *chunk-local* inclusive degree
+/// prefix (rebased by the fold), and the TWC-binned rest.
+#[derive(Debug, Default)]
+pub(crate) struct SplitChunk {
+    pub huge: Vec<u32>,
+    pub prefix: Vec<u64>,
+    pub rest: Vec<VertexItem>,
 }
 
 impl ScheduleScratch {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Grow the split-chunk list to at least `n` slots (capacities persist).
+    pub(crate) fn ensure_split_chunks(&mut self, n: usize) {
+        while self.split_chunks.len() < n {
+            self.split_chunks.push(Mutex::new(SplitChunk::default()));
+        }
     }
 
     /// Clear for the next round, recovering the LB buffers' capacity.

@@ -17,9 +17,13 @@
 //!   edge, TWC, Gunrock-style static LB) plus ALB itself;
 //! * [`apps`] — bfs, sssp, cc, pagerank, k-core with the round engine;
 //! * [`partition`] — CuSP-like OEC / IEC / CVC partitioning;
+//! * [`exec`] — the shared worker pool (std-only) that parallelizes the
+//!   simulation itself: kernel block/warp walks, the ALB inspector's probe
+//!   pass, and the per-GPU BSP tasks all run as chunked tasks on one pool;
 //! * [`comm`] — Gluon-like BSP reduce/broadcast with a network cost model,
-//!   plus the superstep executor ([`comm::bsp`]) that forks one OS thread
-//!   per simulated GPU and barriers before each sync phase;
+//!   plus the superstep executor ([`comm::bsp`]) that dispatches one task
+//!   per simulated GPU onto the shared pool and barriers before each sync
+//!   phase;
 //! * [`coordinator`] — the multi-GPU (and multi-host) driver: parallel per
 //!   round, bit-identical to its sequential reference mode;
 //! * [`runtime`] — the PJRT client that loads the AOT-compiled JAX/Pallas
@@ -39,6 +43,7 @@ pub mod apps;
 pub mod comm;
 pub mod config;
 pub mod coordinator;
+pub mod exec;
 pub mod gpu;
 pub mod graph;
 pub mod lb;

@@ -8,7 +8,7 @@
 //! alb run    --app <bfs|sssp|cc|pr|kcore> --input <name|file.albg>
 //!            [--framework <dirgl-twc|dirgl-alb|gunrock-twc|gunrock-lb|lux>]
 //!            [--gpus K] [--policy <oec|iec|cvc>] [--engine <native|pjrt>]
-//!            [--exec <parallel|sequential>]
+//!            [--exec <parallel|sequential>] [--sim-threads N]
 //!            [--gpu-spec <sim-default|k80-like|gtx1080-like|p100-like>]
 //!            [--distribution <cyclic|blocked>] [--threshold T]
 //!            [--balancer <vertex|twc|edge-lb|alb|enterprise>]
@@ -162,10 +162,16 @@ fn cmd_run(args: &Args) -> Result<()> {
     let policy = Policy::parse(&args.get_or("policy", "cvc"))
         .ok_or_else(|| anyhow!("unknown --policy"))?;
     let gpus_per_host = args.get_u64("gpus-per-host", u32::MAX as u64)? as u32;
-    let exec = ExecMode::parse(&args.get_or("exec", "parallel"))
-        .ok_or_else(|| anyhow!("--exec parallel|sequential"))?;
+    let exec = ExecMode::parse_or_usage(&args.get_or("exec", "parallel"))
+        .map_err(|e| anyhow!(e))?;
+    // Intra-GPU simulation pool width (DESIGN.md §9): default = available
+    // parallelism (or ALB_SIM_THREADS), 1 = the sequential reference walk,
+    // 0 / garbage = a loud error naming the valid range.
+    let sim_threads =
+        alb_graph::exec::parse_threads(args.get("sim-threads")).map_err(|e| anyhow!(e))?;
 
     let mut cfg: EngineConfig = fw.engine_config(spec.clone());
+    cfg.sim_threads = sim_threads;
     if let Some(d) = args.get("distribution") {
         let dist = match d {
             "cyclic" => Distribution::Cyclic,
@@ -232,7 +238,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         .set("framework", fw.name())
         .set("gpu_spec", spec.name.as_str())
         .set("gpus", gpus)
-        .set("seed", seed);
+        .set("seed", seed)
+        .set("sim_threads", cfg.sim_threads);
 
     if gpus <= 1 {
         let r = engine::run(app, &mut g, src, &cfg, pjrt)?;

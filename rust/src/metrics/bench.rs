@@ -55,6 +55,16 @@ pub fn mean_of(cases: &[BenchStats], name: &str) -> Option<f64> {
     cases.iter().find(|c| c.name == name).map(|c| c.mean_ms)
 }
 
+/// In-binary speedup of `optimized` over `reference` (reference mean /
+/// optimized mean) — the machine-independent ratio the `speedup_*` metrics
+/// record (e.g. `speedup_sim_parallel` = 1-thread mean / pooled mean).
+/// `NaN` when either case is missing.
+pub fn speedup(cases: &[BenchStats], optimized: &str, reference: &str) -> f64 {
+    let new = mean_of(cases, optimized).unwrap_or(f64::NAN);
+    let old = mean_of(cases, reference).unwrap_or(f64::NAN);
+    old / new
+}
+
 /// Build the `BENCH_*.json` document: the timed cases plus free-form
 /// numeric metrics (speedups, ratios) at the top level.
 pub fn to_json(bench: &str, cases: &[BenchStats], metrics: &[(&str, f64)]) -> Json {
@@ -196,6 +206,9 @@ mod tests {
         assert!((got[1].max_ms - 13.0).abs() < 1e-12);
         assert_eq!(mean_of(&got, "hotpath/engine-sssp"), Some(11.5));
         assert_eq!(mean_of(&got, "missing"), None);
+        let s = speedup(&got, "hotpath/engine-bfs", "hotpath/engine-sssp");
+        assert!((s - 5.75).abs() < 1e-12, "{s}");
+        assert!(speedup(&got, "hotpath/engine-bfs", "missing").is_nan());
         assert_eq!(read_metric(&path, "speedup_engine_bfs"), Some(2.5));
         assert_eq!(read_metric(&path, "not_there"), None);
         let _ = std::fs::remove_file(&path);

@@ -13,6 +13,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
 use alb_graph::apps::engine::RoundScratch;
+use alb_graph::exec::Pool;
 use alb_graph::gpu::{CostModel, GpuSpec, Simulator};
 use alb_graph::graph::{CsrGraph, EdgeList};
 use alb_graph::lb::{Balancer, Direction, Distribution};
@@ -131,6 +132,80 @@ fn steady_state_engine_round_loop_is_allocation_free() {
             after - before,
             0,
             "steady-state rounds allocated under {}",
+            balancer.name()
+        );
+    }
+}
+
+#[test]
+fn steady_state_pooled_round_loop_is_allocation_free() {
+    // DESIGN.md §9 + §8: with the worker pool enabled, the per-chunk
+    // arenas (chunk cache models, line buffers, partial-result vectors)
+    // and the stack-resident pool jobs keep the steady-state round loop
+    // allocation-free on the submitting thread. Workers' warmup growth of
+    // chunk buffers happens in the warm rounds; afterwards every chunk
+    // slot is at capacity no matter which thread claims it. The active
+    // set (4000) exceeds the pooled-split threshold, so the ALB inspector's
+    // parallel probe pass is exercised too.
+    let g = hub_graph();
+    let n = g.num_vertices();
+    let spec = GpuSpec::default_sim();
+    let sim = Simulator::new(spec.clone(), CostModel::default());
+    let active: Vec<u32> = (0..4_000).collect();
+    let pool = Pool::new(4);
+
+    for balancer in [
+        Balancer::Alb { distribution: Distribution::Cyclic, threshold: None },
+        Balancer::Alb { distribution: Distribution::Blocked, threshold: None },
+        Balancer::Twc,
+        Balancer::EdgeLb { distribution: Distribution::Cyclic },
+        Balancer::Vertex,
+        Balancer::Enterprise,
+    ] {
+        let mut scratch = RoundScratch::for_vertices(n);
+        let mut labels = vec![f32::INFINITY; n];
+
+        // The engine round body, on the pooled entry points.
+        let round = |labels: &mut Vec<f32>, scratch: &mut RoundScratch| {
+            labels.fill(f32::INFINITY);
+            for &v in &active {
+                labels[v as usize] = 0.0;
+            }
+            balancer.schedule_into_pooled(
+                &active, &g, Direction::Push, &spec, n as u64,
+                &mut scratch.sched, &pool,
+            );
+            sim.simulate_into_pooled(&scratch.sched.sched, true, &mut scratch.sim, &pool);
+            for &v in &active {
+                let dv = labels[v as usize];
+                let (dsts, ws) = g.out_edges(v);
+                for (&dst, &w) in dsts.iter().zip(ws) {
+                    let cand = dv + w;
+                    if cand < labels[dst as usize] {
+                        labels[dst as usize] = cand;
+                        scratch.next.push(dst);
+                    }
+                }
+            }
+            scratch.next.take_sorted_into(&mut scratch.active);
+            scratch.active.len()
+        };
+
+        let warm = round(&mut labels, &mut scratch);
+        assert!(warm > 0, "warmup must produce a frontier");
+        for _ in 0..2 {
+            round(&mut labels, &mut scratch);
+        }
+
+        let before = allocs_on_this_thread();
+        for _ in 0..10 {
+            round(&mut labels, &mut scratch);
+        }
+        let after = allocs_on_this_thread();
+        assert_eq!(
+            after - before,
+            0,
+            "steady-state pooled rounds allocated under {}",
             balancer.name()
         );
     }

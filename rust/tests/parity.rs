@@ -14,6 +14,10 @@
 //!    `DistRunResult` — to the freshly-allocated reference
 //!    (`run_push_reference` / `Simulator::simulate_reference`) on every
 //!    input preset and balancer.
+//! 4. **Parallel-simulation determinism (DESIGN.md §9)**: the intra-GPU
+//!    worker-pool simulation must be bit-identical — labels, cycles,
+//!    per-round records, and `DistRunResult` — across
+//!    `sim_threads ∈ {1, 2, 4, 7}` on every input preset and balancer.
 
 use alb_graph::apps::engine::{run, run_push_reference, EngineConfig};
 use alb_graph::apps::App;
@@ -190,7 +194,13 @@ fn per_gpu_scratch_arenas_keep_dist_runs_bit_identical() {
 fn parallel_coordinator_actually_uses_threads() {
     let g = inputs::build("rmat18", DELTA, 19).unwrap();
     let src = inputs::source_vertex("rmat18", &g);
-    let cfg = EngineConfig { max_rounds: 1_000_000, ..EngineConfig::default() };
+    // Pin the pool width: the env-driven default may be 1 on the CI leg
+    // that exercises the sequential reference (ALB_SIM_THREADS=1).
+    let cfg = EngineConfig {
+        max_rounds: 1_000_000,
+        sim_threads: 4,
+        ..EngineConfig::default()
+    };
     let par = run_distributed(
         App::Bfs,
         &g,
@@ -215,4 +225,74 @@ fn parallel_coordinator_actually_uses_threads() {
     )
     .unwrap();
     assert_eq!(seq.num_threads(), 1, "sequential reference must stay inline");
+}
+
+#[test]
+fn pooled_simulation_bit_identical_across_sim_threads_on_all_inputs() {
+    // §9 acceptance gate, engine leg: labels, per-round records (active /
+    // edges / cycles / lb_triggered / kernel stats), and total cycles are
+    // bit-identical across pool widths on every bundled input preset and
+    // every balancer. sim_threads=1 is the sequential reference walk.
+    for input in inputs::ALL_INPUTS {
+        let g0 = inputs::build(input, DELTA, 37).unwrap();
+        let src = inputs::source_vertex(input, &g0);
+        for balancer in all_balancers() {
+            let name = balancer.name();
+            let base_cfg = EngineConfig {
+                balancer,
+                max_rounds: 1_000_000,
+                sim_threads: 1,
+                ..EngineConfig::default()
+            };
+            let base = run(App::Bfs, &mut g0.clone(), src, &base_cfg, None).unwrap();
+            for threads in [2usize, 4, 7] {
+                let cfg = EngineConfig { sim_threads: threads, ..base_cfg.clone() };
+                let r = run(App::Bfs, &mut g0.clone(), src, &cfg, None).unwrap();
+                assert_eq!(
+                    r, base,
+                    "{input} under {name} diverges at sim_threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pooled_simulation_bit_identical_across_sim_threads_distributed() {
+    // §9 acceptance gate, DistRunResult leg: one shared pool across all
+    // simulated GPUs must reproduce the 1-thread run exactly — labels,
+    // total/comp/comm cycles, per-round records, per-GPU compute.
+    let input = "rmat18";
+    let g = inputs::build(input, DELTA, 41).unwrap();
+    let src = inputs::source_vertex(input, &g);
+    for balancer in all_balancers() {
+        let name = balancer.name();
+        let base_cfg = EngineConfig {
+            balancer,
+            max_rounds: 1_000_000,
+            sim_threads: 1,
+            ..EngineConfig::default()
+        };
+        let base = run_distributed(
+            App::Sssp, &g, src, &base_cfg, &ClusterConfig::single_host(3), None,
+        )
+        .unwrap();
+        for threads in [2usize, 4, 7] {
+            let cfg = EngineConfig { sim_threads: threads, ..base_cfg.clone() };
+            let r = run_distributed(
+                App::Sssp, &g, src, &cfg, &ClusterConfig::single_host(3), None,
+            )
+            .unwrap();
+            assert_eq!(r.labels, base.labels, "{name} labels threads={threads}");
+            assert_eq!(
+                r.total_cycles, base.total_cycles,
+                "{name} cycles threads={threads}"
+            );
+            assert_eq!(r.rounds, base.rounds, "{name} rounds threads={threads}");
+            assert_eq!(
+                r.per_gpu_comp, base.per_gpu_comp,
+                "{name} per-gpu threads={threads}"
+            );
+        }
+    }
 }
