@@ -21,6 +21,9 @@
 //!                          loop dominates; their ratio is
 //!                          `speedup_sim_parallel`.
 //! * `partition-cvc-8`    — CVC partitioning of the rmat input.
+//! * `dist-superstep`     — whole 4-GPU CVC bfs through the coordinator's
+//!                          schedule-driven exchange; records per-round
+//!                          comm bytes (total / intra / inter) as metrics.
 //!
 //! Flags (after `--` under `cargo bench --bench hotpath`):
 //! * `--out <path>`             write the results as BENCH-json.
@@ -40,6 +43,7 @@ use alb_graph::apps::engine::{run, run_push_reference, EngineConfig};
 use alb_graph::apps::worklist::NextWorklist;
 use alb_graph::apps::App;
 use alb_graph::config::Framework;
+use alb_graph::coordinator::{run_distributed, ClusterConfig};
 use alb_graph::exec::Pool;
 use alb_graph::gpu::{CostModel, GpuSpec, SimScratch, Simulator};
 use alb_graph::graph::gen::rmat::{self, RmatConfig};
@@ -180,6 +184,25 @@ fn main() {
 
     push(time_runs("hotpath/partition-cvc-8", 5, || partition(&g, 8, Policy::Cvc)));
 
+    // --- distributed superstep (ISSUE 4: schedule-driven exchange) ---
+    // A whole 4-GPU CVC bfs through the coordinator: per-GPU supersteps on
+    // the shared pool plus the plan-driven reduce/broadcast. The recorded
+    // comm metrics come from the exchange's actual byte counts, so the
+    // perf trajectory tracks wire volume alongside host time.
+    let cluster = ClusterConfig::single_host(4);
+    let dist = run_distributed(App::Bfs, &g, src, &cfg, &cluster, None).unwrap();
+    let dist_rounds = dist.rounds.len().max(1) as f64;
+    // All three comm metrics are per-round averages so they stay mutually
+    // comparable and independent of round count.
+    let dist_bytes_per_round = dist.comm_bytes as f64 / dist_rounds;
+    let dist_intra_per_round = dist.comm_bytes_intra as f64 / dist_rounds;
+    let dist_inter_per_round = dist.comm_bytes_inter as f64 / dist_rounds;
+    push(time_runs("hotpath/dist-superstep", 5, || {
+        run_distributed(App::Bfs, &g, src, &cfg, &cluster, None)
+            .unwrap()
+            .total_cycles
+    }));
+
     // --- intra-GPU parallel simulation (DESIGN.md §9) ---
     // An all-active ALB round on the power-law presets whose hubs force the
     // LB kernel, so the simulator's block/warp walks dominate. The pooled
@@ -245,9 +268,18 @@ fn main() {
         ("speedup_sim_parallel_rmat22", sim_par("rmat22")),
         ("speedup_sim_parallel", speedup_sim_parallel),
         ("sim_parallel_threads", par_threads as f64),
+        ("dist_comm_bytes_per_round", dist_bytes_per_round),
+        ("dist_comm_bytes_intra_per_round", dist_intra_per_round),
+        ("dist_comm_bytes_inter_per_round", dist_inter_per_round),
+        ("dist_rounds", dist_rounds),
     ];
     for (k, v) in &metrics {
-        println!("{k:<28} {v:.2}x");
+        // Only the speedup_* entries are ratios; the rest are plain counts.
+        if k.starts_with("speedup_") {
+            println!("{k:<34} {v:.2}x");
+        } else {
+            println!("{k:<34} {v:.2}");
+        }
     }
 
     if let Some(path) = &out_path {
@@ -262,11 +294,16 @@ fn main() {
                 // An empty baseline must never silently disarm the gate.
                 eprintln!(
                     "EMPTY BASELINE: {base_path} has no timed cases, so the \
-                     >{max_regress}% regression gate cannot run. Seed it by \
-                     committing a real run — download BENCH_hotpath.ci.json \
-                     from the bench-smoke CI artifact (or run `cargo bench \
-                     --bench hotpath -- --out BENCH_hotpath.json` on the CI \
-                     runner class) and commit it as {base_path}."
+                     >{max_regress}% regression gate cannot run.\n\
+                     To seed it, commit exactly one artifact:\n\
+                     1. open any CI run's `bench-smoke (hotpath)` job and \
+                     download the artifact named `BENCH_hotpath` (it \
+                     contains `BENCH_hotpath.ci.json`, written by this \
+                     binary's --out);\n\
+                     2. `mv BENCH_hotpath.ci.json {base_path}`\n\
+                     3. `git add {base_path}` and commit.\n\
+                     (Equivalently, run `cargo bench --bench hotpath -- \
+                     --out {base_path}` on the CI runner class.)"
                 );
                 failed = true;
             }

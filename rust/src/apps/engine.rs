@@ -554,11 +554,26 @@ fn run_sssp_delta(
     delta: f32,
     pool: &Pool,
 ) -> Result<RunResult> {
-    assert!(delta > 0.0);
+    assert!(
+        delta > 0.0 && delta.is_finite(),
+        "sssp_delta must be positive and finite"
+    );
+    // Bucket-index clamp (ISSUE 4 bugfix): `(d / delta) as usize` saturates
+    // for unreached (>= INF) labels and for huge distance/delta ratios, and
+    // the saturated index used to drive `buckets.resize(usize::MAX + 1)` —
+    // a capacity-overflow panic (or an OOM for merely-huge finite ratios).
+    // Distances past TAIL_BUCKET * delta share one clamped tail bucket;
+    // unreached labels map to a sentinel that never matches a real bucket.
+    const TAIL_BUCKET: usize = 1 << 16;
     let n = g.num_vertices();
     let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
     let mut labels = sssp::init_labels(n, source);
-    let bucket_of = |d: f32| (d / delta) as usize;
+    let bucket_of = |d: f32| -> usize {
+        if d >= INF {
+            return usize::MAX; // unreached: member of no bucket
+        }
+        ((d / delta) as u64).min(TAIL_BUCKET as u64) as usize
+    };
     let mut buckets: Vec<Vec<u32>> = vec![Vec::new()];
     buckets[0].push(source);
     let mut scratch = RoundScratch::for_vertices(n);
@@ -569,6 +584,9 @@ fn run_sssp_delta(
 
     let requeue = |buckets: &mut Vec<Vec<u32>>, v: u32, d: f32| {
         let b = bucket_of(d);
+        if b > TAIL_BUCKET {
+            return; // unreached sentinel (defensive): nothing to schedule
+        }
         if b >= buckets.len() {
             buckets.resize(b + 1, Vec::new());
         }
@@ -658,6 +676,16 @@ fn run_sssp_delta(
                     }
                 }
             }
+        }
+        if round >= cfg.max_rounds {
+            break;
+        }
+        if !buckets[k].is_empty() {
+            // A heavy relaxation normally lands in a bucket > k (w > delta
+            // implies cand crosses the next boundary), so this re-entry
+            // only fires when the clamped tail bucket refilled itself —
+            // re-settle it instead of advancing past pending work.
+            continue;
         }
         k += 1;
     }
@@ -1080,6 +1108,56 @@ mod tests {
             let r = run(App::Sssp, &mut g, src, &cfg, None).unwrap();
             assert_eq!(r.labels, want, "delta {delta}");
         }
+    }
+
+    #[test]
+    fn delta_stepping_survives_tiny_delta_on_disconnected_graph() {
+        // Regression (ISSUE 4): with a tiny delta, every distance/delta
+        // ratio saturates the `as usize` cast; pre-fix the requeue resized
+        // the bucket array toward usize::MAX and panicked with "capacity
+        // overflow" (or OOM'd on merely-huge finite ratios). The clamp
+        // folds far distances into one tail bucket that is re-settled
+        // until drained, and the unreached component stays at INF.
+        let mut el = EdgeList::new(64);
+        for v in 0..31u32 {
+            el.push(v, v + 1, 100.0); // weighted path, reached component
+        }
+        for v in 33..63u32 {
+            el.push(v, v + 1, 1.0); // disconnected from the source
+        }
+        let mut g = CsrGraph::from_edge_list(&el);
+        let want = sssp::oracle(&g, 0);
+        assert!(want.iter().any(|&d| d >= INF), "graph must be disconnected");
+        for delta in [1e-30f32, 1e-6, 0.5] {
+            let cfg = EngineConfig {
+                sssp_delta: Some(delta),
+                max_rounds: 1_000_000,
+                ..EngineConfig::default()
+            };
+            let r = run(App::Sssp, &mut g, 0, &cfg, None).unwrap();
+            assert_eq!(r.labels, want, "delta {delta}");
+        }
+    }
+
+    #[test]
+    fn delta_stepping_clamped_tail_still_matches_dijkstra() {
+        // A long weighted chain whose far distances overflow the clamp
+        // boundary (TAIL_BUCKET * delta): the tail bucket must re-settle
+        // itself instead of dropping pending heavy requeues.
+        let n = 512u32;
+        let mut el = EdgeList::new(n);
+        for v in 0..n - 1 {
+            el.push(v, v + 1, 100.0);
+        }
+        let mut g = CsrGraph::from_edge_list(&el);
+        let want = sssp::oracle(&g, 0);
+        let cfg = EngineConfig {
+            sssp_delta: Some(1e-4),
+            max_rounds: 1_000_000,
+            ..EngineConfig::default()
+        };
+        let r = run(App::Sssp, &mut g, 0, &cfg, None).unwrap();
+        assert_eq!(r.labels, want);
     }
 
     #[test]

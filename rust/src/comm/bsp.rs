@@ -3,10 +3,15 @@
 //! Gluon-style reduce / broadcast begins.
 //!
 //! This makes the bulk-synchronous structure of the coordinator explicit:
-//! a round is `superstep(compute tasks) -> reduce -> broadcast`, and
-//! [`superstep`]'s return *is* the barrier separating local compute from
-//! communication — the pool's job-completion wait guarantees no partition's
-//! updates are reconciled while another partition is still computing.
+//! a round is `superstep_mut(per-GPU states) -> reduce -> broadcast`, and
+//! [`superstep_mut`]'s return *is* the barrier separating local compute
+//! from communication — the pool's job-completion wait guarantees no
+//! partition's updates are reconciled while another partition is still
+//! computing. Since ISSUE 4 the coordinator uses the in-place
+//! [`superstep_mut`] (task `i` owns state `i` exclusively; no per-round
+//! task vector, result slots, or payload Vecs — DESIGN.md §10);
+//! [`superstep`] remains as the owned-results variant for callers whose
+//! tasks *produce* values rather than mutate per-partition state.
 //!
 //! Since PR 3 the per-GPU tasks are pool tasks, not dedicated OS threads:
 //! the coordinator owns ONE pool, GPU tasks run on it (the submitting
@@ -65,6 +70,49 @@ impl ExecMode {
     }
 }
 
+/// Mutable base pointer of a slice whose elements are handed out to pool
+/// tasks one per index. Sync because [`crate::exec::Pool::run`] claims each
+/// index exactly once, so no element is ever aliased.
+struct DisjointMut<S>(*mut S);
+
+// SAFETY: see the claim-exactly-once argument on `superstep_mut`.
+unsafe impl<S: Send> Sync for DisjointMut<S> {}
+
+/// Run one compute task per partition **in place**: task `i` gets exclusive
+/// `&mut` access to `states[i]` and writes its results there, so a warmed
+/// round performs no allocation on the submitting thread (no task vector,
+/// no result slots, no per-round payload Vecs — DESIGN.md §8/§10).
+/// Returning is the BSP barrier, exactly as with [`superstep`].
+///
+/// Determinism: the caller folds `states` by index after the barrier, never
+/// by completion order. [`ExecMode::Sequential`] (and a 1-lane pool, and a
+/// single task) runs inline on the caller's thread in index order — the
+/// bit-exact reference the parallel path must match.
+pub fn superstep_mut<S: Send>(
+    mode: ExecMode,
+    pool: &Pool,
+    states: &mut [S],
+    f: &(dyn Fn(usize, &mut S) + Sync),
+) {
+    let n = states.len();
+    if mode == ExecMode::Sequential || n <= 1 || pool.threads() <= 1 {
+        for (i, s) in states.iter_mut().enumerate() {
+            f(i, s);
+        }
+        return;
+    }
+    let base = DisjointMut(states.as_mut_ptr());
+    pool.run(n, &|i| {
+        // SAFETY: `Pool::run` hands out each index in `0..n` exactly once
+        // (a single atomic claim counter; the end-of-job guard only claims
+        // leftovers on unwind, without running them), so `states[i]` is
+        // mutably borrowed by exactly one task, and the slice outlives the
+        // call because the submitter blocks until every task finishes.
+        let s = unsafe { &mut *base.0.add(i) };
+        f(i, s);
+    });
+}
+
 /// One result slot of an in-flight superstep: the not-yet-run task, then
 /// its output. Each slot's mutex is taken by exactly one pool task.
 struct Slot<F, T> {
@@ -77,6 +125,10 @@ struct Slot<F, T> {
 /// completion wait has observed every task finish, so the caller may safely
 /// reduce/broadcast shared state. The submitting thread participates in
 /// executing tasks (see [`Pool::run`]).
+///
+/// The coordinator's round loop uses the allocation-free in-place
+/// [`superstep_mut`] instead (ISSUE 4); this variant is kept for callers
+/// whose tasks return owned values.
 pub fn superstep<T, F>(mode: ExecMode, pool: &Pool, tasks: Vec<F>) -> Vec<T>
 where
     T: Send,
@@ -197,6 +249,52 @@ mod tests {
             })
             .collect();
         let _ = superstep(ExecMode::Parallel, &pool, tasks);
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn superstep_mut_runs_every_state_in_place() {
+        let pool = Pool::new(4);
+        for mode in [ExecMode::Parallel, ExecMode::Sequential] {
+            let mut states: Vec<(usize, ThreadId)> =
+                (0..16).map(|_| (0, thread::current().id())).collect();
+            superstep_mut(mode, &pool, &mut states, &|i, s| {
+                thread::sleep(Duration::from_millis(1));
+                *s = (i * i + 1, thread::current().id());
+            });
+            for (i, (val, _)) in states.iter().enumerate() {
+                assert_eq!(*val, i * i + 1, "{mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn superstep_mut_parallel_spreads_over_threads_sequential_stays_inline() {
+        let pool = Pool::new(4);
+        let mut states: Vec<ThreadId> =
+            (0..64).map(|_| thread::current().id()).collect();
+        superstep_mut(ExecMode::Parallel, &pool, &mut states, &|_, s| {
+            thread::sleep(Duration::from_millis(1));
+            *s = thread::current().id();
+        });
+        let ids: HashSet<ThreadId> = states.iter().copied().collect();
+        assert!(ids.len() >= 2, "expected >= 2 threads, saw {}", ids.len());
+
+        superstep_mut(ExecMode::Sequential, &pool, &mut states, &|_, s| {
+            *s = thread::current().id();
+        });
+        assert!(states.iter().all(|&id| id == thread::current().id()));
+    }
+
+    #[test]
+    fn superstep_mut_is_a_barrier() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = Pool::new(4);
+        let counter = AtomicUsize::new(0);
+        let mut states = vec![(); 8];
+        superstep_mut(ExecMode::Parallel, &pool, &mut states, &|_, _| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
         assert_eq!(counter.load(Ordering::SeqCst), 8);
     }
 

@@ -1,0 +1,663 @@
+//! Precomputed mirror/master exchange schedules (paper §5; ISSUE 4).
+//!
+//! The Gluon substrate's whole point is that boundary synchronization is
+//! *structured*: which vertices a partition mirrors, and where each mirror's
+//! master lives, is fixed at partition time. This module materializes that
+//! structure once — dense index lists per (mirror-holder, owner) pair plus a
+//! master-side fan-out CSR — so every BSP round drives reduce / broadcast by
+//! walking flat arrays instead of the per-round `g2l` HashMap lookups and
+//! freshly-allocated `changed: Vec<(u32, f32)>` payloads the coordinator
+//! used before.
+//!
+//! Round protocol for the min-reduce apps (bfs / sssp / cc):
+//!
+//! 1. **Compute** — each partition relaxes locally; the bitmap frontier
+//!    drains the changed local ids into its persistent
+//!    [`PartState::changed`] buffer.
+//! 2. **Reduce** ([`ExchangePlan::reduce_min`]) — changed ids seed an
+//!    updated-bitmask; for every pair schedule, the *set* mirror positions
+//!    ship their value to the master side (min-applied), and every shipped
+//!    position marks the master's `master_updated` bit. Only touched
+//!    boundary vertices cross the barrier — one `(local index, f32)` update
+//!    each, [`BYTES_PER_UPDATE`] on the wire.
+//! 3. **Broadcast** ([`ExchangePlan::broadcast_min`]) — updated masters
+//!    push their value back along the same schedules; a mirror copy that is
+//!    already current costs nothing. The same pass computes next round's
+//!    frontier: every copy of an updated master with local out-edges.
+//!
+//! Determinism: schedules are walked in (partition, peer, position) order
+//! and min is order-independent, so the exchange is bit-identical to the
+//! pre-rebuild central-master reconciliation — asserted against the
+//! preserved [`crate::coordinator::run_distributed_reference`] across every
+//! input × policy × app by `rust/tests/parity.rs`.
+//!
+//! Zero allocation (DESIGN.md §8): plans are immutable after construction;
+//! all per-round state ([`PartState`] buffers, bitmasks) is persistent and
+//! capacity-reusing, so steady-state supersteps allocate nothing on the
+//! submitting thread (`rust/tests/alloc.rs`).
+
+use crate::partition::DistGraph;
+
+use super::BYTES_PER_UPDATE;
+
+/// A (src, dst, bytes) traffic flow, priced by [`super::NetworkModel`].
+pub type Flow = (u32, u32, u64);
+
+/// One (mirror-holder, owner) pair's dense exchange schedule: position `p`
+/// pairs the holder-side mirror `mirror_locals[p]` with its master's local
+/// id `master_locals[p]` on partition `peer`.
+#[derive(Debug, Clone)]
+pub struct MirrorSchedule {
+    /// The owner partition these mirrors reduce to / refresh from.
+    pub peer: u32,
+    /// Holder-side local ids, ascending (mirrors sort by global id).
+    pub mirror_locals: Vec<u32>,
+    /// Owner-side master local ids, matching `mirror_locals` by position.
+    pub master_locals: Vec<u32>,
+}
+
+impl MirrorSchedule {
+    pub fn len(&self) -> usize {
+        self.mirror_locals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mirror_locals.is_empty()
+    }
+}
+
+/// One partition's precomputed exchange metadata.
+#[derive(Debug, Clone)]
+pub struct PartPlan {
+    pub num_masters: usize,
+    pub num_locals: usize,
+    /// Mirrors this partition holds, grouped by owner, ascending peer id;
+    /// under CVC the group count is bounded by the grid row/column sizes.
+    pub mirrors: Vec<MirrorSchedule>,
+    /// Bit `l` set when local vertex `l` has out-edges (activation filter).
+    has_out: Vec<u64>,
+    /// Master-side fan-out CSR: `fan_prefix[m]..fan_prefix[m + 1]` indexes
+    /// `fan_peer` / `fan_mirror_local` — every remote copy of master `m`.
+    fan_prefix: Vec<u32>,
+    fan_peer: Vec<u32>,
+    fan_mirror_local: Vec<u32>,
+}
+
+impl PartPlan {
+    /// Remote copies of master local `m`, as (holder partition, local id
+    /// there) pairs.
+    pub fn fan_of(&self, m: u32) -> impl Iterator<Item = (u32, u32)> + '_ {
+        let lo = self.fan_prefix[m as usize] as usize;
+        let hi = self.fan_prefix[m as usize + 1] as usize;
+        (lo..hi).map(move |i| (self.fan_peer[i], self.fan_mirror_local[i]))
+    }
+}
+
+/// The whole cluster's exchange schedules, fixed at partition time.
+#[derive(Debug, Clone)]
+pub struct ExchangePlan {
+    pub parts: Vec<PartPlan>,
+    /// Global id -> local id within the owner partition.
+    pub master_local: Vec<u32>,
+    /// Owner partition of each global vertex.
+    pub owner: Vec<u32>,
+}
+
+/// One partition's persistent exchange-side state: local labels plus the
+/// reusable buffers and bitmasks each round's sync walks. All buffers keep
+/// their capacity across rounds.
+#[derive(Debug, Clone)]
+pub struct PartState {
+    /// Local labels, masters first (the authoritative values), mirrors
+    /// after.
+    pub labels: Vec<f32>,
+    /// Current frontier (sorted local ids), rebuilt by the broadcast.
+    pub active: Vec<u32>,
+    /// Local ids whose label changed this round (sorted; filled by the
+    /// compute task's bitmap-frontier drain).
+    pub changed: Vec<u32>,
+    /// Bitmask over locals: changed this round (reduce input).
+    updated: Vec<u64>,
+    /// Bitmask over masters: master value touched this round (broadcast
+    /// input; the equivalent of the old coordinator's `touched` set).
+    master_updated: Vec<u64>,
+}
+
+/// Anything that can hand the exchange its [`PartState`] — the coordinator
+/// stores per-GPU compute scratch next to the exchange state in one struct
+/// and implements this; plain `Vec<PartState>` works too (tests).
+pub trait HasPartState {
+    fn part_state(&mut self) -> &mut PartState;
+}
+
+impl HasPartState for PartState {
+    fn part_state(&mut self) -> &mut PartState {
+        self
+    }
+}
+
+#[inline]
+fn set_bit(words: &mut [u64], i: u32) {
+    words[(i >> 6) as usize] |= 1u64 << (i & 63);
+}
+
+#[inline]
+fn test_bit(words: &[u64], i: u32) -> bool {
+    words[(i >> 6) as usize] & (1u64 << (i & 63)) != 0
+}
+
+/// Disjoint `&mut` access to two distinct slice elements.
+fn pair_mut<S>(states: &mut [S], a: usize, b: usize) -> (&mut S, &mut S) {
+    assert!(a != b, "exchange pair must span two partitions");
+    if a < b {
+        let (lo, hi) = states.split_at_mut(b);
+        (&mut lo[a], &mut hi[0])
+    } else {
+        let (lo, hi) = states.split_at_mut(a);
+        (&mut hi[0], &mut lo[b])
+    }
+}
+
+impl ExchangePlan {
+    /// Precompute every pair schedule and fan-out list from the partitioned
+    /// graph. Runs once per distributed run, at partition time.
+    pub fn new(dg: &DistGraph) -> ExchangePlan {
+        let n = dg.num_global as usize;
+        let k = dg.parts.len();
+        let mut master_local = vec![0u32; n];
+        for p in &dg.parts {
+            for (l, &gid) in p.l2g[..p.num_masters].iter().enumerate() {
+                master_local[gid as usize] = l as u32;
+            }
+        }
+        let mut parts = Vec::with_capacity(k);
+        // One k-sized grouping buffer shared by all partitions (a fresh one
+        // per partition would cost O(k^2) Vec setups at the degenerate
+        // k ~ |V| partition counts); entries are moved out per partition
+        // and only the touched owners are visited.
+        let mut by_owner: Vec<(Vec<u32>, Vec<u32>)> =
+            vec![(Vec::new(), Vec::new()); k];
+        let mut touched: Vec<usize> = Vec::new();
+        for p in &dg.parts {
+            // Group this partition's mirrors by owner; the l2g mirror
+            // section is sorted by global id, so each group's locals come
+            // out ascending.
+            for (off, &gid) in p.l2g[p.num_masters..].iter().enumerate() {
+                let l = (p.num_masters + off) as u32;
+                let o = dg.owner[gid as usize] as usize;
+                if by_owner[o].0.is_empty() {
+                    touched.push(o);
+                }
+                by_owner[o].0.push(l);
+                by_owner[o].1.push(master_local[gid as usize]);
+            }
+            touched.sort_unstable(); // schedules in ascending peer order
+            let mirrors: Vec<MirrorSchedule> = touched
+                .drain(..)
+                .map(|o| {
+                    let (mirror_locals, master_locals) =
+                        std::mem::take(&mut by_owner[o]);
+                    MirrorSchedule {
+                        peer: o as u32,
+                        mirror_locals,
+                        master_locals,
+                    }
+                })
+                .collect();
+            let nl = p.l2g.len();
+            let mut has_out = vec![0u64; nl.div_ceil(64)];
+            for l in 0..nl as u32 {
+                if p.graph.out_degree(l) > 0 {
+                    set_bit(&mut has_out, l);
+                }
+            }
+            parts.push(PartPlan {
+                num_masters: p.num_masters,
+                num_locals: nl,
+                mirrors,
+                has_out,
+                fan_prefix: vec![0],
+                fan_peer: Vec::new(),
+                fan_mirror_local: Vec::new(),
+            });
+        }
+        // Master-side fan-out CSR per owner, inverted from the schedules.
+        // One bucketing pass groups each (holder, schedule) pair under its
+        // owner, so construction is O(total mirrors + k), not a per-owner
+        // rescan of every partition's schedule list (which would go
+        // quadratic at the k ~ |V| degenerate partition counts).
+        let mut scheds_by_owner: Vec<Vec<(u32, usize)>> = vec![Vec::new(); k];
+        for (i, part) in parts.iter().enumerate() {
+            for (si, sched) in part.mirrors.iter().enumerate() {
+                scheds_by_owner[sched.peer as usize].push((i as u32, si));
+            }
+        }
+        for (j, owner_scheds) in scheds_by_owner.into_iter().enumerate() {
+            let nm = parts[j].num_masters;
+            let mut prefix = vec![0u32; nm + 1];
+            for &(i, si) in &owner_scheds {
+                for &ml in &parts[i as usize].mirrors[si].master_locals {
+                    prefix[ml as usize + 1] += 1;
+                }
+            }
+            for m in 0..nm {
+                prefix[m + 1] += prefix[m];
+            }
+            let total = prefix[nm] as usize;
+            let mut fan_peer = vec![0u32; total];
+            let mut fan_mirror_local = vec![0u32; total];
+            let mut cursor = prefix.clone();
+            // Holder partitions arrive in ascending order (the bucketing
+            // pass runs i ascending), preserving the fan order the k-core
+            // scatter's cycle parity relies on.
+            for &(i, si) in &owner_scheds {
+                let sched = &parts[i as usize].mirrors[si];
+                for (p2, &ml) in sched.master_locals.iter().enumerate() {
+                    let c = cursor[ml as usize] as usize;
+                    fan_peer[c] = i;
+                    fan_mirror_local[c] = sched.mirror_locals[p2];
+                    cursor[ml as usize] += 1;
+                }
+            }
+            parts[j].fan_prefix = prefix;
+            parts[j].fan_peer = fan_peer;
+            parts[j].fan_mirror_local = fan_mirror_local;
+        }
+        ExchangePlan {
+            parts,
+            master_local,
+            owner: dg.owner.clone(),
+        }
+    }
+
+    pub fn num_parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Fresh per-partition exchange states with correctly-sized labels and
+    /// bitmasks (labels start at 0.0; callers seed them).
+    pub fn new_states(&self) -> Vec<PartState> {
+        self.parts
+            .iter()
+            .map(|p| PartState {
+                labels: vec![0.0; p.num_locals],
+                active: Vec::new(),
+                changed: Vec::new(),
+                updated: vec![0; p.num_locals.div_ceil(64)],
+                master_updated: vec![0; p.num_masters.div_ceil(64)],
+            })
+            .collect()
+    }
+
+    /// Reduce phase: ship every *changed* mirror value to its master and
+    /// min it in; mark every touched master. Appends one flow per
+    /// (holder, owner) pair with traffic and returns the total bytes.
+    pub fn reduce_min<S: HasPartState>(
+        &self,
+        states: &mut [S],
+        flows: &mut Vec<Flow>,
+    ) -> u64 {
+        // Seed the per-round bitmasks from the changed lists.
+        for (i, s) in states.iter_mut().enumerate() {
+            let nm = self.parts[i].num_masters as u32;
+            let st = s.part_state();
+            st.updated.fill(0);
+            st.master_updated.fill(0);
+            for &l in &st.changed {
+                set_bit(&mut st.updated, l);
+                if l < nm {
+                    set_bit(&mut st.master_updated, l);
+                }
+            }
+        }
+        let mut total = 0u64;
+        for i in 0..states.len() {
+            for sched in &self.parts[i].mirrors {
+                let j = sched.peer as usize;
+                let (holder, owner) = pair_mut(states, i, j);
+                let src = holder.part_state();
+                let dst = owner.part_state();
+                let mut count = 0u64;
+                for (p, &ml) in sched.mirror_locals.iter().enumerate() {
+                    if test_bit(&src.updated, ml) {
+                        count += 1;
+                        let val = src.labels[ml as usize];
+                        let tl = sched.master_locals[p];
+                        if val < dst.labels[tl as usize] {
+                            dst.labels[tl as usize] = val;
+                        }
+                        // Touched even without improvement: every copy of a
+                        // changed vertex must re-sync and re-activate.
+                        set_bit(&mut dst.master_updated, tl);
+                    }
+                }
+                if count > 0 {
+                    let bytes = count * BYTES_PER_UPDATE;
+                    flows.push((i as u32, sched.peer, bytes));
+                    total += bytes;
+                }
+            }
+        }
+        total
+    }
+
+    /// Broadcast phase: updated masters push their value to every stale
+    /// mirror copy (a copy that is already current costs nothing on the
+    /// wire), and every copy of an updated master with local out-edges
+    /// enters the next frontier. Fills each partition's sorted
+    /// [`PartState::active`], appends per-pair flows, returns total bytes.
+    pub fn broadcast_min<S: HasPartState>(
+        &self,
+        states: &mut [S],
+        flows: &mut Vec<Flow>,
+    ) -> u64 {
+        // Masters re-activate themselves first (ascending bit scan).
+        for (i, s) in states.iter_mut().enumerate() {
+            let plan = &self.parts[i];
+            let st = s.part_state();
+            st.active.clear();
+            for wi in 0..st.master_updated.len() {
+                let mut word = st.master_updated[wi];
+                let base = (wi as u32) << 6;
+                while word != 0 {
+                    let l = base + word.trailing_zeros();
+                    if test_bit(&plan.has_out, l) {
+                        st.active.push(l);
+                    }
+                    word &= word - 1;
+                }
+            }
+        }
+        let mut total = 0u64;
+        for i in 0..states.len() {
+            for sched in &self.parts[i].mirrors {
+                let j = sched.peer as usize;
+                let (holder, owner) = pair_mut(states, i, j);
+                let hs = holder.part_state();
+                let os = owner.part_state();
+                let mut count = 0u64;
+                for (p, &tl) in sched.master_locals.iter().enumerate() {
+                    if test_bit(&os.master_updated, tl) {
+                        let val = os.labels[tl as usize];
+                        let m = sched.mirror_locals[p];
+                        if val < hs.labels[m as usize] {
+                            hs.labels[m as usize] = val;
+                            count += 1;
+                        }
+                        if test_bit(&self.parts[i].has_out, m) {
+                            hs.active.push(m);
+                        }
+                    }
+                }
+                if count > 0 {
+                    let bytes = count * BYTES_PER_UPDATE;
+                    flows.push((sched.peer, i as u32, bytes));
+                    total += bytes;
+                }
+            }
+            // Masters arrived ascending, then one ascending run per peer;
+            // one sort restores global order (the sets are disjoint, so no
+            // dedup is needed).
+            states[i].part_state().active.sort_unstable();
+        }
+        total
+    }
+
+    /// Scatter a master-side event list (ascending global ids) to every
+    /// local copy: the owner's master local plus each fan-out mirror.
+    /// `out[i]` receives partition `i`'s local ids in `gids` order — the
+    /// k-core driver's dense replacement for per-round `g2l` filtering.
+    pub fn scatter_globals(&self, gids: &[u32], out: &mut [Vec<u32>]) {
+        for o in out.iter_mut() {
+            o.clear();
+        }
+        for &gid in gids {
+            let j = self.owner[gid as usize] as usize;
+            let ml = self.master_local[gid as usize];
+            out[j].push(ml);
+            for (peer, mirror_l) in self.parts[j].fan_of(ml) {
+                out[peer as usize].push(mirror_l);
+            }
+        }
+    }
+
+    /// Constant per-pair flows of a topology-driven full mirror refresh
+    /// (pagerank's broadcast: every mirror re-reads its owner's rank each
+    /// round). Returns total bytes.
+    pub fn mirror_refresh_flows(&self, flows: &mut Vec<Flow>) -> u64 {
+        let mut total = 0u64;
+        for (i, p) in self.parts.iter().enumerate() {
+            for sched in &p.mirrors {
+                let bytes = sched.len() as u64 * BYTES_PER_UPDATE;
+                flows.push((sched.peer, i as u32, bytes));
+                total += bytes;
+            }
+        }
+        total
+    }
+
+    /// Total mirrors across the cluster (the full-refresh upper bound the
+    /// updated-only exchange must never exceed per phase).
+    pub fn total_mirrors(&self) -> usize {
+        self.parts
+            .iter()
+            .map(|p| p.mirrors.iter().map(MirrorSchedule::len).sum::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::rmat::{self, RmatConfig};
+    use crate::graph::{CsrGraph, EdgeList};
+    use crate::partition::{partition, Policy};
+
+    fn test_graph() -> CsrGraph {
+        CsrGraph::from_edge_list(&rmat::generate(&RmatConfig::paper(8, 77)))
+    }
+
+    fn policies() -> [Policy; 3] {
+        [Policy::Oec, Policy::Iec, Policy::Cvc]
+    }
+
+    #[test]
+    fn every_mirror_scheduled_exactly_once_with_correct_master() {
+        let g = test_graph();
+        for policy in policies() {
+            for k in [2u32, 3, 5] {
+                let dg = partition(&g, k, policy);
+                let plan = ExchangePlan::new(&dg);
+                for (i, p) in dg.parts.iter().enumerate() {
+                    let mut seen = vec![false; p.l2g.len()];
+                    for sched in &plan.parts[i].mirrors {
+                        let owner_part = &dg.parts[sched.peer as usize];
+                        for (pos, &ml) in
+                            sched.mirror_locals.iter().enumerate()
+                        {
+                            assert!(
+                                !seen[ml as usize],
+                                "{policy:?} k={k}: mirror scheduled twice"
+                            );
+                            seen[ml as usize] = true;
+                            let gid = p.l2g[ml as usize];
+                            assert_eq!(dg.owner[gid as usize], sched.peer);
+                            // Matching master local resolves the same gid.
+                            let tl = sched.master_locals[pos] as usize;
+                            assert_eq!(owner_part.l2g[tl], gid);
+                            assert!(tl < owner_part.num_masters);
+                        }
+                    }
+                    let scheduled =
+                        seen.iter().filter(|&&b| b).count();
+                    assert_eq!(
+                        scheduled,
+                        p.num_mirrors(),
+                        "{policy:?} k={k}: mirrors missed by the schedules"
+                    );
+                    assert!(
+                        seen[..p.num_masters].iter().all(|&b| !b),
+                        "{policy:?} k={k}: a master leaked into a schedule"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fan_out_inverts_the_schedules() {
+        let g = test_graph();
+        let dg = partition(&g, 4, Policy::Cvc);
+        let plan = ExchangePlan::new(&dg);
+        for (j, p) in dg.parts.iter().enumerate() {
+            for m in 0..p.num_masters as u32 {
+                let gid = p.l2g[m as usize];
+                for (peer, mirror_l) in plan.parts[j].fan_of(m) {
+                    assert_eq!(
+                        dg.parts[peer as usize].l2g[mirror_l as usize],
+                        gid
+                    );
+                }
+                // Fan size equals the number of partitions mirroring gid.
+                let holders = dg
+                    .parts
+                    .iter()
+                    .filter(|q| {
+                        q.id as usize != j
+                            && q.mirror_globals().binary_search(&gid).is_ok()
+                    })
+                    .count();
+                assert_eq!(plan.parts[j].fan_of(m).count(), holders);
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_globals_matches_g2l_filtering_in_order() {
+        // The dense scatter must reproduce the old per-round g2l walk
+        // EXACTLY, order included: for each partition, the local ids of
+        // the listed globals in list order. The k-core driver's cycle
+        // parity with the pre-rebuild reference depends on that order
+        // (schedules are order-sensitive), so this compares unsorted.
+        let g = test_graph();
+        for policy in policies() {
+            let dg = partition(&g, 3, policy);
+            let plan = ExchangePlan::new(&dg);
+            let n = g.num_vertices() as u32;
+            let gids: Vec<u32> = (0..n).filter(|v| v % 7 == 0).collect();
+            let mut out: Vec<Vec<u32>> = vec![Vec::new(); 3];
+            plan.scatter_globals(&gids, &mut out);
+            for (pi, got) in out.iter().enumerate() {
+                let want: Vec<u32> = gids
+                    .iter()
+                    .filter_map(|gv| dg.g2l[pi].get(gv).copied())
+                    .collect();
+                assert_eq!(*got, want, "{policy:?} part {pi}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_broadcast_syncs_all_copies_to_the_minimum() {
+        // Two-partition line graph under OEC: vertex in the middle is
+        // mirrored; a lower mirror value must flow to the master and back
+        // out to every copy, activating copies with out-edges.
+        let mut el = EdgeList::new(8);
+        for v in 0..7u32 {
+            el.push(v, v + 1, 1.0);
+        }
+        let g = CsrGraph::from_edge_list(&el);
+        let dg = partition(&g, 2, Policy::Oec);
+        let plan = ExchangePlan::new(&dg);
+        assert!(plan.total_mirrors() > 0, "line graph must create mirrors");
+        let mut states = plan.new_states();
+        for (pi, st) in states.iter_mut().enumerate() {
+            for (l, &gid) in dg.parts[pi].l2g.iter().enumerate() {
+                st.labels[l] = 100.0 + gid as f32;
+            }
+        }
+        // Pick any mirror on partition 0 or 1 and improve it locally.
+        let (pi, sched) = (0..2)
+            .find_map(|i| {
+                plan.parts[i].mirrors.first().map(|s| (i, s.clone()))
+            })
+            .expect("some partition holds a mirror");
+        let ml = sched.mirror_locals[0];
+        let owner = sched.peer as usize;
+        let tl = sched.master_locals[0] as usize;
+        let gid = dg.parts[pi].l2g[ml as usize];
+        states[pi].labels[ml as usize] = 5.0;
+        states[pi].changed.push(ml);
+        let mut flows = Vec::new();
+        let reduced = plan.reduce_min(&mut states, &mut flows);
+        assert_eq!(reduced, BYTES_PER_UPDATE);
+        assert_eq!(states[owner].labels[tl], 5.0, "master must take the min");
+        let bcast = plan.broadcast_min(&mut states, &mut flows);
+        // Every copy of gid now reads 5.0; only stale copies paid bytes.
+        for (qi, q) in dg.parts.iter().enumerate() {
+            if let Some(l) = q.local_of(gid) {
+                assert_eq!(states[qi].labels[l as usize], 5.0, "part {qi}");
+                // Copies with out-edges are (exactly the) next frontier.
+                let in_frontier =
+                    states[qi].active.binary_search(&l).is_ok();
+                assert_eq!(
+                    in_frontier,
+                    q.graph.out_degree(l) > 0,
+                    "part {qi} activation"
+                );
+            } else {
+                assert!(states[qi].active.is_empty());
+            }
+        }
+        // The improving mirror is already current, so the updated-only
+        // broadcast ships nothing back (the old full reconciliation also
+        // charged zero here — only stale copies ever pay).
+        assert_eq!(bcast, 0);
+        // Per-phase traffic stays under the full-refresh volume.
+        let full = plan.total_mirrors() as u64 * BYTES_PER_UPDATE;
+        assert!(reduced <= full && bcast <= full);
+    }
+
+    #[test]
+    fn unchanged_rounds_exchange_nothing() {
+        let g = test_graph();
+        let dg = partition(&g, 4, Policy::Cvc);
+        let plan = ExchangePlan::new(&dg);
+        let mut states = plan.new_states();
+        let mut flows = Vec::new();
+        assert_eq!(plan.reduce_min(&mut states, &mut flows), 0);
+        assert_eq!(plan.broadcast_min(&mut states, &mut flows), 0);
+        assert!(flows.is_empty());
+        assert!(states.iter().all(|s| s.active.is_empty()));
+    }
+
+    #[test]
+    fn single_partition_plan_is_trivial() {
+        let g = test_graph();
+        let dg = partition(&g, 1, Policy::Cvc);
+        let plan = ExchangePlan::new(&dg);
+        assert_eq!(plan.num_parts(), 1);
+        assert_eq!(plan.total_mirrors(), 0);
+        assert!(plan.parts[0].mirrors.is_empty());
+        let mut flows = Vec::new();
+        assert_eq!(plan.mirror_refresh_flows(&mut flows), 0);
+        assert!(flows.is_empty());
+    }
+
+    #[test]
+    fn mirror_refresh_flows_cover_every_pair_once() {
+        let g = test_graph();
+        let dg = partition(&g, 4, Policy::Cvc);
+        let plan = ExchangePlan::new(&dg);
+        let mut flows = Vec::new();
+        let total = plan.mirror_refresh_flows(&mut flows);
+        assert_eq!(
+            total,
+            plan.total_mirrors() as u64 * BYTES_PER_UPDATE
+        );
+        for &(src, dst, bytes) in &flows {
+            assert_ne!(src, dst);
+            assert!(bytes > 0);
+        }
+    }
+}

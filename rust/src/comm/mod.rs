@@ -13,10 +13,17 @@
 //! [`bsp`] holds the superstep executor: per-GPU compute tasks dispatched
 //! onto the shared [`crate::exec::Pool`] with an explicit barrier (the
 //! pool's job-completion wait) before the reduce / broadcast phases run.
+//!
+//! [`exchange`] holds the precomputed mirror/master schedules (ISSUE 4):
+//! dense per-pair index lists fixed at partition time that drive the
+//! reduce / broadcast phases through persistent buffers and an
+//! updated-only bitmask — no per-round `g2l` HashMap lookups, no per-round
+//! payload allocation, and only touched boundary vertices on the wire.
 
 pub mod bsp;
+pub mod exchange;
 
-pub use bsp::{superstep, ExecMode};
+pub use bsp::{superstep, superstep_mut, ExecMode};
 
 /// Reduction operator applied at the master.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -75,6 +82,26 @@ impl NetworkModel {
     #[inline]
     pub fn same_host(&self, a: u32, b: u32) -> bool {
         a / self.gpus_per_host == b / self.gpus_per_host
+    }
+
+    /// Split a flow list's traffic into (intra-host, inter-host) byte
+    /// totals — the wire-volume view of a round, surfaced per round in
+    /// `DistRoundRecord` and totaled in `DistRunResult` / the CLI JSON.
+    /// Self-flows and empty flows carry nothing, exactly as
+    /// [`round_cycles`](Self::round_cycles) prices them.
+    pub fn split_bytes(&self, flows: &[(u32, u32, u64)]) -> (u64, u64) {
+        let (mut intra, mut inter) = (0u64, 0u64);
+        for &(src, dst, bytes) in flows {
+            if src == dst || bytes == 0 {
+                continue;
+            }
+            if self.same_host(src, dst) {
+                intra += bytes;
+            } else {
+                inter += bytes;
+            }
+        }
+        (intra, inter)
     }
 
     /// Price one BSP exchange described by per-(src, dst) byte counts.
@@ -176,6 +203,20 @@ mod tests {
         let spread = net.round_cycles(&[(1, 0, 1000), (2, 3, 1000), (4, 5, 1000)]);
         let hot = net.round_cycles(&[(1, 0, 1000), (2, 0, 1000), (3, 0, 1000)]);
         assert!(hot > spread);
+    }
+
+    #[test]
+    fn split_bytes_classifies_by_host() {
+        let net = NetworkModel::cluster(2);
+        let flows = [
+            (0u32, 1u32, 100u64), // same host
+            (0, 2, 40),           // cross host
+            (3, 3, 999),          // self: free
+            (1, 0, 0),            // empty: free
+        ];
+        assert_eq!(net.split_bytes(&flows), (100, 40));
+        let single = NetworkModel::single_host();
+        assert_eq!(single.split_bytes(&flows), (140, 0));
     }
 
     #[test]

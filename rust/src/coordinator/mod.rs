@@ -3,31 +3,36 @@
 //! Drives the bulk-synchronous execution the paper's multi-GPU evaluation
 //! (§6.2–6.3) uses: every round, each simulated GPU runs its local kernels
 //! on its partition — **concurrently, as tasks on ONE shared
-//! [`crate::exec::Pool`]**, through [`crate::comm::bsp::superstep`] — then
-//! the superstep barrier ends the round and the Gluon-style sync
-//! ([`crate::comm`]) reconciles boundary vertices. Each GPU task's own
-//! kernel simulation nests onto the *same* pool (DESIGN.md §9), so a run
-//! uses exactly `sim_threads` lanes however many GPUs it simulates — no
-//! per-GPU thread spawning, no oversubscription.
+//! [`crate::exec::Pool`]**, through [`crate::comm::superstep_mut`] — then
+//! the superstep barrier ends the round and the Gluon-style sync runs over
+//! the **precomputed mirror/master schedules**
+//! ([`crate::comm::exchange::ExchangePlan`], DESIGN.md §10): reduce ships
+//! only this round's changed boundary values to their masters, broadcast
+//! returns updated master values to stale copies, and the same pass builds
+//! next round's frontier. There is no central reconciliation array and no
+//! per-round `g2l` HashMap lookup; every byte on the wire is counted from
+//! the schedules and split into intra-host vs inter-host traffic by
+//! [`NetworkModel::split_bytes`].
+//!
 //! Round time = slowest GPU's compute + non-overlapping communication —
 //! exactly the accounting behind Figures 6/7/10/11. Intra-GPU thread-block
 //! imbalance on *one* GPU therefore stalls the whole machine, which is why
 //! ALB's per-GPU fix shows up at cluster scale.
 //!
-//! Determinism: per-GPU results are collected by partition index and every
-//! reduce/broadcast folds them in that order, so a parallel run is
-//! bit-identical to the [`ExecMode::Sequential`] reference (asserted by
-//! `rust/tests/parity.rs`). Alongside the modeled cycles, the coordinator
-//! records real per-GPU host wall-clock and the set of OS threads that
-//! executed rounds (the submitting thread participates in the pool, so it
-//! may appear in that set).
+//! Determinism: per-GPU results live in per-partition state folded by
+//! partition index, and the exchange walks schedules in (partition, peer,
+//! position) order, so a parallel run is bit-identical to the
+//! [`ExecMode::Sequential`] reference (asserted by `rust/tests/parity.rs`),
+//! and the whole rebuilt sync is asserted bit-identical to the preserved
+//! pre-rebuild coordinator ([`run_distributed_reference`]) across every
+//! input × policy × app.
 //!
-//! Hot-path memory discipline (DESIGN.md §8): the coordinator owns one
-//! [`RoundScratch`] arena per simulated GPU for the whole run; each round,
-//! partition `i`'s BSP task borrows arena `i` exclusively (the tasks zip
-//! `scratches.iter_mut()`), so local rounds reuse their schedule buffers,
-//! simulator accounting arrays, and bitmap frontier across rounds instead
-//! of reallocating them — without any cross-task sharing.
+//! Hot-path memory discipline (DESIGN.md §8/§10): each simulated GPU owns
+//! one [`GpuPush`]-style state (exchange buffers + [`RoundScratch`] arena)
+//! for the whole run; [`crate::comm::superstep_mut`] hands task `i`
+//! exclusive `&mut` access to state `i` with no per-round task vector or
+//! result slots, so steady-state supersteps allocate nothing on the
+//! submitting thread (`rust/tests/alloc.rs`).
 
 use std::collections::HashSet;
 use std::thread::ThreadId;
@@ -37,7 +42,8 @@ use anyhow::{anyhow, Result};
 
 use crate::apps::engine::{self, ComputeMode, EngineConfig, RoundScratch};
 use crate::apps::{pr, App, INF};
-use crate::comm::{self, NetworkModel, BYTES_PER_UPDATE};
+use crate::comm::exchange::{ExchangePlan, Flow, HasPartState, PartState};
+use crate::comm::{superstep_mut, NetworkModel, BYTES_PER_UPDATE};
 use crate::exec::Pool;
 use crate::gpu::Simulator;
 use crate::graph::CsrGraph;
@@ -45,7 +51,10 @@ use crate::lb::Direction;
 use crate::partition::{partition, DistGraph, Partition, Policy};
 use crate::runtime::PjrtRuntime;
 
+mod reference;
+
 pub use crate::comm::bsp::ExecMode;
+pub use reference::run_distributed_reference;
 
 /// Cluster-level configuration.
 #[derive(Debug, Clone)]
@@ -96,7 +105,12 @@ pub struct DistRoundRecord {
     pub comp_cycles: u64,
     /// Communication cycles (non-overlapping).
     pub comm_cycles: u64,
+    /// Total bytes exchanged this round (= intra + inter).
     pub comm_bytes: u64,
+    /// Bytes over intra-host (PCIe/NVLink-class) links.
+    pub comm_bytes_intra: u64,
+    /// Bytes over inter-host (Omni-Path-class) links.
+    pub comm_bytes_inter: u64,
     /// GPUs whose LB kernel launched this round.
     pub lb_gpus: u32,
 }
@@ -111,6 +125,12 @@ pub struct DistRunResult {
     pub total_cycles: u64,
     pub comp_cycles: u64,
     pub comm_cycles: u64,
+    /// Total exchanged bytes across the run (= intra + inter).
+    pub comm_bytes: u64,
+    /// Exchanged bytes over intra-host links.
+    pub comm_bytes_intra: u64,
+    /// Exchanged bytes over inter-host links.
+    pub comm_bytes_inter: u64,
     /// Per-GPU total compute cycles (for balance reporting).
     pub per_gpu_comp: Vec<u64>,
     /// Per-GPU host wall-clock (ns) actually spent in local rounds —
@@ -147,6 +167,9 @@ struct RunAccounting {
     total: u64,
     comp_total: u64,
     comm_total: u64,
+    bytes_total: u64,
+    bytes_intra: u64,
+    bytes_inter: u64,
     per_gpu_comp: Vec<u64>,
     per_gpu_wall_ns: Vec<u64>,
     threads: HashSet<ThreadId>,
@@ -159,6 +182,9 @@ impl RunAccounting {
             total: 0,
             comp_total: 0,
             comm_total: 0,
+            bytes_total: 0,
+            bytes_intra: 0,
+            bytes_inter: 0,
             per_gpu_comp: vec![0; k],
             per_gpu_wall_ns: vec![0; k],
             threads: HashSet::new(),
@@ -169,6 +195,9 @@ impl RunAccounting {
         self.total += rec.comp_cycles + rec.comm_cycles;
         self.comp_total += rec.comp_cycles;
         self.comm_total += rec.comm_cycles;
+        self.bytes_total += rec.comm_bytes;
+        self.bytes_intra += rec.comm_bytes_intra;
+        self.bytes_inter += rec.comm_bytes_inter;
         self.rounds.push(rec);
     }
 
@@ -180,11 +209,46 @@ impl RunAccounting {
             total_cycles: self.total,
             comp_cycles: self.comp_total,
             comm_cycles: self.comm_total,
+            comm_bytes: self.bytes_total,
+            comm_bytes_intra: self.bytes_intra,
+            comm_bytes_inter: self.bytes_inter,
             per_gpu_comp: self.per_gpu_comp,
             per_gpu_wall_ns: self.per_gpu_wall_ns,
             threads: self.threads,
         }
     }
+}
+
+/// Plain per-round outputs of one GPU's local compute (all `Copy` — results
+/// cross the barrier inside the per-GPU state, never through fresh Vecs).
+#[derive(Clone, Copy)]
+struct RoundOut {
+    cycles: u64,
+    #[allow(dead_code)] // recorded for debugging / future per-GPU reports
+    edges: u64,
+    lb: bool,
+    /// Host wall-clock spent in this round, nanoseconds.
+    wall_ns: u64,
+    /// OS thread the round ran on.
+    thread: ThreadId,
+}
+
+impl RoundOut {
+    fn idle() -> RoundOut {
+        RoundOut {
+            cycles: 0,
+            edges: 0,
+            lb: false,
+            wall_ns: 0,
+            thread: std::thread::current().id(),
+        }
+    }
+}
+
+/// Price + split one round's flows.
+fn price(net: &NetworkModel, flows: &[Flow]) -> (u64, u64, u64) {
+    let (intra, inter) = net.split_bytes(flows);
+    (net.round_cycles(flows), intra, inter)
 }
 
 /// Run `app` on `g` across `cluster.num_gpus` simulated GPUs.
@@ -200,84 +264,103 @@ pub fn run_distributed(
         return Err(anyhow!("compute=Pjrt requires a loaded PjrtRuntime"));
     }
     let dg = partition(g, cluster.num_gpus, cluster.policy);
-    // ONE pool shared by every simulated GPU for the whole run: superstep
-    // dispatches the per-GPU round tasks onto it, and each task's kernel
-    // simulation nests onto the same pool (DESIGN.md §9).
+    if g.num_vertices() == 0 {
+        // Degenerate but well-formed: no vertices, no rounds, no labels.
+        return Ok(RunAccounting::new(dg.num_parts()).finish(app, Vec::new()));
+    }
+    // Exchange schedules are fixed at partition time (DESIGN.md §10).
+    let plan = ExchangePlan::new(&dg);
+    // ONE pool shared by every simulated GPU for the whole run: the
+    // superstep dispatches the per-GPU round tasks onto it, and each task's
+    // kernel simulation nests onto the same pool (DESIGN.md §9).
     let pool = Pool::new(cfg.sim_threads.max(1));
     match app {
         App::Bfs | App::Sssp | App::Cc => {
-            run_push_dist(app, g, &dg, source, cfg, cluster, pjrt, &pool)
+            run_push_dist(app, g, &dg, &plan, source, cfg, cluster, pjrt, &pool)
         }
-        App::Pr => run_pr_dist(g, &dg, cfg, cluster, pjrt, &pool),
-        App::Kcore => run_kcore_dist(g, &dg, cfg, cluster, &pool),
+        App::Pr => run_pr_dist(g, &dg, &plan, cfg, cluster, pjrt, &pool),
+        App::Kcore => run_kcore_dist(g, &dg, &plan, cfg, cluster, &pool),
     }
 }
 
 // -------------------------------------------------------------------- push
 
-/// Output of one partition's local compute round.
-struct LocalRound {
-    cycles: u64,
-    #[allow(dead_code)] // recorded for debugging / future per-GPU reports
-    edges: u64,
-    lb: bool,
-    /// Changed (local id, new value) pairs.
-    changed: Vec<(u32, f32)>,
-    /// Host wall-clock spent in this round, nanoseconds.
-    wall_ns: u64,
-    /// OS thread the round ran on.
-    thread: ThreadId,
+/// Everything one simulated GPU owns across a push-app run: the exchange
+/// side (labels, frontier, changed buffer, bitmasks) plus the compute
+/// scratch arena and the round's plain outputs.
+struct GpuPush {
+    st: PartState,
+    scratch: RoundScratch,
+    out: RoundOut,
 }
 
-#[allow(clippy::too_many_arguments)]
+impl HasPartState for GpuPush {
+    fn part_state(&mut self) -> &mut PartState {
+        &mut self.st
+    }
+}
+
+/// One partition's local compute round: schedule, simulate, relax, and
+/// drain the changed local ids into the persistent exchange buffer.
 fn local_push_round(
     app: App,
     part: &CsrGraph,
-    active: &[u32],
-    labels: &mut [f32],
     cfg: &EngineConfig,
     sim: &Simulator,
-    scratch: &mut RoundScratch,
     pjrt: Option<&PjrtRuntime>,
     pool: &Pool,
-) -> Result<LocalRound> {
+    s: &mut GpuPush,
+) -> Result<()> {
     let t0 = Instant::now();
     let n = part.num_vertices();
-    let scan = cfg.worklist.scan_cost(n as u64, active.len() as u64);
+    let scan = cfg.worklist.scan_cost(n as u64, s.st.active.len() as u64);
     cfg.balancer.schedule_into_pooled(
-        active, part, Direction::Push, &cfg.spec, scan, &mut scratch.sched, pool,
+        &s.st.active,
+        part,
+        Direction::Push,
+        &cfg.spec,
+        scan,
+        &mut s.scratch.sched,
+        pool,
     );
-    sim.simulate_into_pooled(&scratch.sched.sched, true, &mut scratch.sim, pool);
+    sim.simulate_into_pooled(&s.scratch.sched.sched, true, &mut s.scratch.sim, pool);
 
     if let (ComputeMode::Pjrt, Some(rt), Some(lb)) =
-        (cfg.compute, pjrt, &scratch.sched.sched.lb)
+        (cfg.compute, pjrt, &s.scratch.sched.sched.lb)
     {
-        engine::relax_huge_pjrt(rt, part, &lb.vertices, app, labels, &mut scratch.next)?;
-        for item in &scratch.sched.sched.twc {
-            engine::relax_native(part, app, item.vertex, labels, &mut scratch.next);
+        engine::relax_huge_pjrt(
+            rt,
+            part,
+            &lb.vertices,
+            app,
+            &mut s.st.labels,
+            &mut s.scratch.next,
+        )?;
+        for item in &s.scratch.sched.sched.twc {
+            engine::relax_native(
+                part,
+                app,
+                item.vertex,
+                &mut s.st.labels,
+                &mut s.scratch.next,
+            );
         }
     } else {
-        for &v in active {
-            engine::relax_native(part, app, v, labels, &mut scratch.next);
+        for &v in &s.st.active {
+            engine::relax_native(part, app, v, &mut s.st.labels, &mut s.scratch.next);
         }
     }
-    // Drain the bitmap frontier through the scratch's reusable buffer; the
-    // (local id, value) pairs themselves cross the BSP barrier, so they are
-    // owned by the result.
-    scratch.next.take_sorted_into(&mut scratch.active);
-    let changed = scratch
-        .active
-        .iter()
-        .map(|&l| (l, labels[l as usize]))
-        .collect();
-    Ok(LocalRound {
-        cycles: scratch.sim.round.total_cycles,
-        edges: scratch.sched.sched.total_edges(),
-        lb: scratch.sched.sched.lb.is_some(),
-        changed,
+    // The changed local ids cross the BSP barrier through the persistent
+    // per-partition buffer — no per-round payload allocation.
+    s.scratch.next.take_sorted_into(&mut s.st.changed);
+    s.out = RoundOut {
+        cycles: s.scratch.sim.round.total_cycles,
+        edges: s.scratch.sched.sched.total_edges(),
+        lb: s.scratch.sched.sched.lb.is_some(),
         wall_ns: t0.elapsed().as_nanos() as u64,
         thread: std::thread::current().id(),
-    })
+    };
+    Ok(())
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -285,6 +368,7 @@ fn run_push_dist(
     app: App,
     g: &CsrGraph,
     dg: &DistGraph,
+    plan: &ExchangePlan,
     source: u32,
     cfg: &EngineConfig,
     cluster: &ClusterConfig,
@@ -293,8 +377,8 @@ fn run_push_dist(
 ) -> Result<DistRunResult> {
     let n = g.num_vertices();
     let k = dg.num_parts();
-    // Reconciled master state.
-    let mut master: Vec<f32> = match app {
+    // Initial label of every global vertex, used to seed the local copies.
+    let init: Vec<f32> = match app {
         App::Cc => (0..n).map(|v| v as f32).collect(),
         _ => {
             let mut m = vec![INF; n];
@@ -302,175 +386,127 @@ fn run_push_dist(
             m
         }
     };
-    // Per-partition local labels + active sets.
-    let mut labels: Vec<Vec<f32>> = dg
+    let mut gpus: Vec<GpuPush> = dg
         .parts
         .iter()
-        .map(|p| p.l2g.iter().map(|&gid| master[gid as usize]).collect())
-        .collect();
-    let mut active: Vec<Vec<u32>> = dg
-        .parts
-        .iter()
-        .map(|p| match app {
-            App::Cc => (0..p.graph.num_vertices() as u32).collect(),
-            _ => dg.g2l[p.id as usize].get(&source).map(|&l| vec![l]).unwrap_or_default(),
+        .zip(plan.new_states())
+        .map(|(p, mut st)| {
+            for (l, &gid) in p.l2g.iter().enumerate() {
+                st.labels[l] = init[gid as usize];
+            }
+            GpuPush {
+                st,
+                scratch: RoundScratch::for_vertices(p.graph.num_vertices()),
+                out: RoundOut::idle(),
+            }
         })
         .collect();
+    // Initial frontier: every local copy of the source (bfs/sssp) or all
+    // locals (cc) — scattered through the plan, no g2l lookups.
+    match app {
+        App::Cc => {
+            for (s, p) in gpus.iter_mut().zip(&dg.parts) {
+                s.st.active = (0..p.graph.num_vertices() as u32).collect();
+            }
+        }
+        _ => {
+            let mut seed: Vec<Vec<u32>> = vec![Vec::new(); k];
+            plan.scatter_globals(&[source], &mut seed);
+            for (s, locs) in gpus.iter_mut().zip(seed) {
+                s.st.active = locs;
+            }
+        }
+    }
 
     let mut acct = RunAccounting::new(k);
-    // One simulator (Sync, shared) + one scratch arena per simulated GPU,
-    // living across rounds; arena i is only ever borrowed by partition i's
-    // BSP task.
     let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
-    let mut scratches: Vec<RoundScratch> = dg
-        .parts
-        .iter()
-        .map(|p| RoundScratch::for_vertices(p.graph.num_vertices()))
-        .collect();
+    let mut flows: Vec<Flow> = Vec::new();
 
     for round in 0..cfg.max_rounds {
-        let global_active: u64 = active.iter().map(|a| a.len() as u64).sum();
+        let global_active: u64 =
+            gpus.iter().map(|s| s.st.active.len() as u64).sum();
         if global_active == 0 {
             break;
         }
-        // --- local compute (one pool task per GPU; superstep = barrier) ---
-        let results: Vec<LocalRound> = if pjrt.is_some() {
+        // --- local compute (one pool task per GPU; the return of
+        // superstep_mut is the barrier) ---
+        if pjrt.is_some() {
             // The PJRT client is not Sync: partitions run sequentially.
-            let mut out = Vec::with_capacity(k);
-            for (pi, part) in dg.parts.iter().enumerate() {
-                out.push(local_push_round(
-                    app, &part.graph, &active[pi], &mut labels[pi], cfg, &sim,
-                    &mut scratches[pi], pjrt, pool,
-                )?);
+            for (pi, s) in gpus.iter_mut().enumerate() {
+                local_push_round(
+                    app, &dg.parts[pi].graph, cfg, &sim, pjrt, pool, s,
+                )?;
             }
-            out
         } else {
             let sim_ref = &sim;
-            let tasks: Vec<_> = dg
-                .parts
-                .iter()
-                .zip(&active)
-                .zip(labels.iter_mut())
-                .zip(scratches.iter_mut())
-                .map(|(((part, act), lab), scratch)| {
-                    move || {
-                        local_push_round(
-                            app, &part.graph, act, lab, cfg, sim_ref, scratch,
-                            None, pool,
-                        )
-                        .expect("native round cannot fail")
-                    }
-                })
-                .collect();
-            comm::superstep(cluster.exec, pool, tasks)
-        };
+            superstep_mut(cluster.exec, pool, &mut gpus, &|pi, s: &mut GpuPush| {
+                local_push_round(
+                    app, &dg.parts[pi].graph, cfg, sim_ref, None, pool, s,
+                )
+                .expect("native round cannot fail");
+            });
+        }
 
-        let comp = results.iter().map(|r| r.cycles).max().unwrap_or(0);
-        for (pi, r) in results.iter().enumerate() {
-            acct.per_gpu_comp[pi] += r.cycles;
-            acct.per_gpu_wall_ns[pi] += r.wall_ns;
-            acct.threads.insert(r.thread);
+        let mut comp = 0u64;
+        let mut lb_gpus = 0u32;
+        for (pi, s) in gpus.iter().enumerate() {
+            comp = comp.max(s.out.cycles);
+            acct.per_gpu_comp[pi] += s.out.cycles;
+            acct.per_gpu_wall_ns[pi] += s.out.wall_ns;
+            acct.threads.insert(s.out.thread);
+            lb_gpus += s.out.lb as u32;
         }
-        let lb_gpus = results.iter().filter(|r| r.lb).count() as u32;
 
-        // --- Gluon sync: reduce (min to master) ---
-        let mut bytes = 0u64;
-        let mut flows: Vec<(u32, u32, u64)> = Vec::new();
-        let mut touched: Vec<u32> = Vec::new();
-        for (pi, r) in results.iter().enumerate() {
-            let part = &dg.parts[pi];
-            let mut to_owner = vec![0u64; k];
-            for &(l, val) in &r.changed {
-                let gid = part.l2g[l as usize];
-                let owner = dg.owner[gid as usize] as usize;
-                if val < master[gid as usize] {
-                    master[gid as usize] = val;
-                }
-                touched.push(gid);
-                if owner != pi {
-                    to_owner[owner] += BYTES_PER_UPDATE;
-                }
-            }
-            for (o, b) in to_owner.iter().enumerate() {
-                if *b > 0 {
-                    flows.push((pi as u32, o as u32, *b));
-                    bytes += *b;
-                }
-            }
-        }
-        touched.sort_unstable();
-        touched.dedup();
+        // --- Gluon sync over the precomputed schedules: reduce changed
+        // mirrors to masters, broadcast updated masters to stale copies,
+        // and build next round's frontier in the same pass ---
+        flows.clear();
+        plan.reduce_min(&mut gpus, &mut flows);
+        plan.broadcast_min(&mut gpus, &mut flows);
 
-        // --- broadcast (master to every stale copy) + activation ---
-        let mut bcast = vec![0u64; k * k];
-        let mut next_active: Vec<Vec<u32>> = vec![Vec::new(); k];
-        for &gid in &touched {
-            let owner = dg.owner[gid as usize] as usize;
-            let val = master[gid as usize];
-            for pi in 0..k {
-                if let Some(&l) = dg.g2l[pi].get(&gid) {
-                    if val < labels[pi][l as usize] {
-                        labels[pi][l as usize] = val;
-                        if owner != pi {
-                            bcast[owner * k + pi] += BYTES_PER_UPDATE;
-                        }
-                    }
-                    // A copy whose value just changed (here or locally) is
-                    // active next round if it has out-edges to relax.
-                    if labels[pi][l as usize] <= val
-                        && (labels[pi][l as usize] - val).abs() < f32::EPSILON
-                        && dg.parts[pi].graph.out_degree(l) > 0
-                    {
-                        next_active[pi].push(l);
-                    }
-                }
-            }
-        }
-        for o in 0..k {
-            for pi in 0..k {
-                let b = bcast[o * k + pi];
-                if b > 0 {
-                    flows.push((o as u32, pi as u32, b));
-                    bytes += b;
-                }
-            }
-        }
-        for a in next_active.iter_mut() {
-            a.sort_unstable();
-            a.dedup();
-        }
-        active = next_active;
-
-        let comm = cluster.net.round_cycles(&flows);
+        let (comm, bytes_intra, bytes_inter) = price(&cluster.net, &flows);
         acct.record_round(DistRoundRecord {
             round,
             active: global_active,
             comp_cycles: comp,
             comm_cycles: comm,
-            comm_bytes: bytes,
+            comm_bytes: bytes_intra + bytes_inter,
+            comm_bytes_intra: bytes_intra,
+            comm_bytes_inter: bytes_inter,
             lb_gpus,
         });
     }
-    Ok(acct.finish(app, master))
+    // Assemble the global answer from the authoritative master values.
+    let mut labels = vec![0f32; n];
+    for (s, p) in gpus.iter().zip(&dg.parts) {
+        for (l, &gid) in p.l2g[..p.num_masters].iter().enumerate() {
+            labels[gid as usize] = s.st.labels[l];
+        }
+    }
+    Ok(acct.finish(app, labels))
 }
 
 // ---------------------------------------------------------------------- pr
 
-/// One partition's pagerank round output.
-struct PrLocal {
-    cycles: u64,
-    lb: bool,
-    wall_ns: u64,
-    thread: ThreadId,
-    /// (global id, partial rank mass pulled into it), in local-vertex order.
+/// One simulated GPU's pagerank state: compute scratch plus the persistent
+/// reduce payload (partial sums in local order) and per-peer flow counters.
+struct GpuPr {
+    scratch: RoundScratch,
+    out: RoundOut,
+    /// (global id, partial rank mass pulled into it), in local-vertex order
+    /// — the reduce payload, folded by the coordinator in partition order.
     acc: Vec<(u32, f32)>,
-    /// Bytes of partial sums travelling to remote masters.
-    remote_bytes: u64,
+    /// Damped contribution of each local src copy.
+    contrib: Vec<f32>,
+    /// Kernel input staging for Pjrt mode.
+    src_ranks: Vec<f32>,
+    src_degs: Vec<u32>,
+    /// Per-peer count of partial sums travelling to remote masters.
+    peer_updates: Vec<u64>,
 }
 
 #[allow(clippy::too_many_arguments)]
 fn local_pr_round(
-    pi: usize,
     part: &Partition,
     lg: &CsrGraph,
     all: &[u32],
@@ -479,46 +515,57 @@ fn local_pr_round(
     owner: &[u32],
     cfg: &EngineConfig,
     sim: &Simulator,
-    scratch: &mut RoundScratch,
     pjrt: Option<&PjrtRuntime>,
     pool: &Pool,
-) -> Result<PrLocal> {
+    s: &mut GpuPr,
+) -> Result<()> {
     let t0 = Instant::now();
     let nl = lg.num_vertices();
     let scan = cfg.worklist.scan_cost(nl as u64, nl as u64);
     cfg.balancer.schedule_into_pooled(
-        all, lg, Direction::Pull, &cfg.spec, scan, &mut scratch.sched, pool,
+        all,
+        lg,
+        Direction::Pull,
+        &cfg.spec,
+        scan,
+        &mut s.scratch.sched,
+        pool,
     );
-    sim.simulate_into_pooled(&scratch.sched.sched, false, &mut scratch.sim, pool);
+    sim.simulate_into_pooled(&s.scratch.sched.sched, false, &mut s.scratch.sim, pool);
 
-    // Contributions of local src copies (kernel in Pjrt mode).
-    let src_ranks: Vec<f32> = part.l2g.iter().map(|&gid| ranks[gid as usize]).collect();
-    let src_degs: Vec<u32> = part.l2g.iter().map(|&gid| out_deg[gid as usize]).collect();
-    let contrib: Vec<f32> = match (cfg.compute, pjrt) {
+    // Contributions of local src copies (kernel in Pjrt mode), into the
+    // persistent buffer.
+    s.contrib.clear();
+    match (cfg.compute, pjrt) {
         (ComputeMode::Pjrt, Some(rt)) => {
-            let mut c = Vec::with_capacity(nl);
+            s.src_ranks.clear();
+            s.src_degs.clear();
+            for &gid in &part.l2g {
+                s.src_ranks.push(ranks[gid as usize]);
+                s.src_degs.push(out_deg[gid as usize]);
+            }
             let tile = 16_384.min(nl.max(1));
             for start in (0..nl).step_by(tile) {
                 let end = (start + tile).min(nl);
-                c.extend(rt.pr_pull(
-                    &src_ranks[start..end],
-                    &src_degs[start..end],
+                s.contrib.extend(rt.pr_pull(
+                    &s.src_ranks[start..end],
+                    &s.src_degs[start..end],
                     pr::DAMPING,
                 )?);
             }
-            c
         }
-        _ => src_ranks
-            .iter()
-            .zip(&src_degs)
-            .map(|(&r, &d)| pr::DAMPING * r / d.max(1) as f32)
-            .collect(),
-    };
+        _ => {
+            s.contrib.extend(part.l2g.iter().map(|&gid| {
+                pr::DAMPING * ranks[gid as usize]
+                    / out_deg[gid as usize].max(1) as f32
+            }));
+        }
+    }
     // Pull along local in-edges; emit per-dst partial sums in local order so
     // the coordinator's merge (partition order, then local order) reproduces
     // the sequential reference bit-for-bit.
-    let mut acc = Vec::new();
-    let mut remote_bytes = 0u64;
+    s.acc.clear();
+    s.peer_updates.fill(0);
     for lv in 0..nl as u32 {
         let (srcs, _) = lg.in_edges(lv);
         if srcs.is_empty() {
@@ -526,28 +573,29 @@ fn local_pr_round(
         }
         let mut sum = 0f32;
         for &lu in srcs {
-            sum += contrib[lu as usize];
+            sum += s.contrib[lu as usize];
         }
         let gid = part.l2g[lv as usize];
-        acc.push((gid, sum));
-        // Partial sums on non-owner partitions travel to the master.
-        if owner[gid as usize] as usize != pi {
-            remote_bytes += BYTES_PER_UPDATE;
+        s.acc.push((gid, sum));
+        // Partial sums computed on mirror copies travel to the master.
+        if (lv as usize) >= part.num_masters {
+            s.peer_updates[owner[gid as usize] as usize] += 1;
         }
     }
-    Ok(PrLocal {
-        cycles: scratch.sim.round.total_cycles,
-        lb: scratch.sched.sched.lb.is_some(),
+    s.out = RoundOut {
+        cycles: s.scratch.sim.round.total_cycles,
+        edges: s.scratch.sched.sched.total_edges(),
+        lb: s.scratch.sched.sched.lb.is_some(),
         wall_ns: t0.elapsed().as_nanos() as u64,
         thread: std::thread::current().id(),
-        acc,
-        remote_bytes,
-    })
+    };
+    Ok(())
 }
 
 fn run_pr_dist(
     g: &CsrGraph,
     dg: &DistGraph,
+    plan: &ExchangePlan,
     cfg: &EngineConfig,
     cluster: &ClusterConfig,
     pjrt: Option<&PjrtRuntime>,
@@ -558,18 +606,27 @@ fn run_pr_dist(
     let out_deg: Vec<u32> = (0..n as u32).map(|v| g.out_degree(v) as u32).collect();
     let mut ranks = pr::init_ranks(n);
     // Local CSC views for the pull traversal.
-    let mut parts: Vec<CsrGraph> = dg.parts.iter().map(|p| p.graph.clone()).collect();
-    for p in parts.iter_mut() {
+    let mut parts_csc: Vec<CsrGraph> =
+        dg.parts.iter().map(|p| p.graph.clone()).collect();
+    for p in parts_csc.iter_mut() {
         p.build_csc();
     }
     let base = (1.0 - pr::DAMPING) / n as f32;
 
     let mut acct = RunAccounting::new(k);
     let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
-    let mut scratches: Vec<RoundScratch> = dg
+    let mut gpus: Vec<GpuPr> = dg
         .parts
         .iter()
-        .map(|p| RoundScratch::for_vertices(p.graph.num_vertices()))
+        .map(|p| GpuPr {
+            scratch: RoundScratch::for_vertices(p.graph.num_vertices()),
+            out: RoundOut::idle(),
+            acc: Vec::new(),
+            contrib: Vec::new(),
+            src_ranks: Vec::new(),
+            src_degs: Vec::new(),
+            peer_updates: vec![0; k],
+        })
         .collect();
     // Topology-driven: every local vertex is active every round.
     let alls: Vec<Vec<u32>> = dg
@@ -577,74 +634,56 @@ fn run_pr_dist(
         .iter()
         .map(|p| (0..p.graph.num_vertices() as u32).collect())
         .collect();
+    let mut acc_global = vec![0f32; n];
+    let mut flows: Vec<Flow> = Vec::new();
 
     for round in 0..cfg.max_rounds {
-        // Broadcast: every mirror refreshes its rank copy (topology-driven:
-        // all ranks move every round).
-        let mut flows: Vec<(u32, u32, u64)> = Vec::new();
-        let mut bytes = 0u64;
-        for (pi, p) in dg.parts.iter().enumerate() {
-            let b = p.num_mirrors() as u64 * BYTES_PER_UPDATE;
-            if b > 0 {
-                // All owners collectively feed this partition; attribute to
-                // the heaviest link pattern by splitting evenly.
-                flows.push((((pi + 1) % k) as u32, pi as u32, b));
-                bytes += b;
-            }
-        }
+        // Topology-driven broadcast: every mirror refreshes its rank copy
+        // from its owner — the per-pair volumes are schedule constants.
+        flows.clear();
+        plan.mirror_refresh_flows(&mut flows);
 
-        // Local compute: per-partition contribution gather, one GPU per
-        // thread; the superstep join barriers before the reduce below.
-        let locals: Vec<PrLocal> = if pjrt.is_some() {
-            let mut out = Vec::with_capacity(k);
-            for (pi, p) in dg.parts.iter().enumerate() {
-                out.push(local_pr_round(
-                    pi, p, &parts[pi], &alls[pi], &ranks, &out_deg, &dg.owner,
-                    cfg, &sim, &mut scratches[pi], pjrt, pool,
-                )?);
+        // Local compute: per-partition contribution gather; the return of
+        // superstep_mut barriers before the reduce below.
+        if pjrt.is_some() {
+            for (pi, s) in gpus.iter_mut().enumerate() {
+                local_pr_round(
+                    &dg.parts[pi], &parts_csc[pi], &alls[pi], &ranks, &out_deg,
+                    &dg.owner, cfg, &sim, pjrt, pool, s,
+                )?;
             }
-            out
         } else {
             let (ranks_ref, out_deg_ref) = (&ranks, &out_deg);
-            let (owner_ref, parts_ref) = (&dg.owner, &parts);
+            let (owner_ref, parts_ref) = (&dg.owner, &parts_csc);
             let (alls_ref, sim_ref) = (&alls, &sim);
-            let tasks: Vec<_> = dg
-                .parts
-                .iter()
-                .enumerate()
-                .zip(scratches.iter_mut())
-                .map(|((pi, p), scratch)| {
-                    move || {
-                        local_pr_round(
-                            pi, p, &parts_ref[pi], &alls_ref[pi], ranks_ref,
-                            out_deg_ref, owner_ref, cfg, sim_ref, scratch, None,
-                            pool,
-                        )
-                        .expect("native pr round cannot fail")
-                    }
-                })
-                .collect();
-            comm::superstep(cluster.exec, pool, tasks)
-        };
+            superstep_mut(cluster.exec, pool, &mut gpus, &|pi, s: &mut GpuPr| {
+                local_pr_round(
+                    &dg.parts[pi], &parts_ref[pi], &alls_ref[pi], ranks_ref,
+                    out_deg_ref, owner_ref, cfg, sim_ref, None, pool, s,
+                )
+                .expect("native pr round cannot fail");
+            });
+        }
 
-        // Reduce: fold partial sums in partition order (deterministic).
+        // Reduce: fold partial sums in partition order (deterministic), and
+        // price the per-pair partial-sum traffic from the counters.
         let mut comp = 0u64;
         let mut lb_gpus = 0u32;
-        let mut acc_global = vec![0f32; n];
-        for (pi, r) in locals.iter().enumerate() {
-            comp = comp.max(r.cycles);
-            acct.per_gpu_comp[pi] += r.cycles;
-            acct.per_gpu_wall_ns[pi] += r.wall_ns;
-            acct.threads.insert(r.thread);
-            lb_gpus += r.lb as u32;
-            for &(gid, sum) in &r.acc {
+        acc_global.fill(0.0);
+        for (pi, s) in gpus.iter().enumerate() {
+            comp = comp.max(s.out.cycles);
+            acct.per_gpu_comp[pi] += s.out.cycles;
+            acct.per_gpu_wall_ns[pi] += s.out.wall_ns;
+            acct.threads.insert(s.out.thread);
+            lb_gpus += s.out.lb as u32;
+            for &(gid, sum) in &s.acc {
                 acc_global[gid as usize] += sum;
             }
-            bytes += r.remote_bytes;
-        }
-        // The reduce traffic: approximate per-partition aggregate flow.
-        if k > 1 {
-            flows.push((1, 0, bytes / k as u64));
+            for (peer, &cnt) in s.peer_updates.iter().enumerate() {
+                if cnt > 0 {
+                    flows.push((pi as u32, peer as u32, cnt * BYTES_PER_UPDATE));
+                }
+            }
         }
 
         let mut delta = 0f32;
@@ -654,13 +693,15 @@ fn run_pr_dist(
             ranks[v] = new_rank;
         }
 
-        let comm = cluster.net.round_cycles(&flows);
+        let (comm, bytes_intra, bytes_inter) = price(&cluster.net, &flows);
         acct.record_round(DistRoundRecord {
             round,
             active: n as u64,
             comp_cycles: comp,
             comm_cycles: comm,
-            comm_bytes: bytes,
+            comm_bytes: bytes_intra + bytes_inter,
+            comm_bytes_intra: bytes_intra,
+            comm_bytes_inter: bytes_inter,
             lb_gpus,
         });
         if delta < cfg.pr_tol {
@@ -672,84 +713,84 @@ fn run_pr_dist(
 
 // ------------------------------------------------------------------- kcore
 
-/// One partition's k-core round output.
-struct KcoreLocal {
-    cycles: u64,
-    lb: bool,
-    wall_ns: u64,
-    thread: ThreadId,
-    /// Global ids losing one in-degree (repeats = multiple dying preds).
+/// One simulated GPU's k-core state: compute scratch plus the persistent
+/// hit list (local ids of alive successors) and per-peer flow counters.
+struct GpuKcore {
+    scratch: RoundScratch,
+    out: RoundOut,
+    /// Local ids losing one in-degree (repeats = multiple dying preds).
     hits: Vec<u32>,
-    remote_bytes: u64,
+    /// Per-peer count of decrements travelling to remote masters.
+    peer_updates: Vec<u64>,
 }
 
 #[allow(clippy::too_many_arguments)]
 fn local_kcore_round(
-    pi: usize,
     part: &Partition,
-    dying: &[u32],
-    g2l: &std::collections::HashMap<u32, u32>,
+    dying_local: &[u32],
     alive: &[bool],
     owner: &[u32],
     cfg: &EngineConfig,
     sim: &Simulator,
-    scratch: &mut RoundScratch,
     pool: &Pool,
-) -> KcoreLocal {
+    s: &mut GpuKcore,
+) {
     let t0 = Instant::now();
     let thread = std::thread::current().id();
-    let lg = &part.graph;
-    // Reuse the scratch's frontier buffer for the local dying list.
-    scratch.active.clear();
-    scratch
-        .active
-        .extend(dying.iter().filter_map(|&gv| g2l.get(&gv).copied()));
-    if scratch.active.is_empty() {
-        return KcoreLocal {
+    s.hits.clear();
+    s.peer_updates.fill(0);
+    if dying_local.is_empty() {
+        s.out = RoundOut {
             cycles: 0,
+            edges: 0,
             lb: false,
             wall_ns: t0.elapsed().as_nanos() as u64,
             thread,
-            hits: Vec::new(),
-            remote_bytes: 0,
         };
+        return;
     }
+    let lg = &part.graph;
     let scan = cfg
         .worklist
-        .scan_cost(lg.num_vertices() as u64, scratch.active.len() as u64);
+        .scan_cost(lg.num_vertices() as u64, dying_local.len() as u64);
     cfg.balancer.schedule_into_pooled(
-        &scratch.active, lg, Direction::Push, &cfg.spec, scan, &mut scratch.sched,
+        dying_local,
+        lg,
+        Direction::Push,
+        &cfg.spec,
+        scan,
+        &mut s.scratch.sched,
         pool,
     );
-    sim.simulate_into_pooled(&scratch.sched.sched, true, &mut scratch.sim, pool);
+    // atomicSub per decrement
+    sim.simulate_into_pooled(&s.scratch.sched.sched, true, &mut s.scratch.sim, pool);
 
-    let mut hits = Vec::new();
-    let mut remote_bytes = 0u64;
-    for &lv in &scratch.active {
+    for &lv in dying_local {
         let (dsts, _) = lg.out_edges(lv);
         for &lu in dsts {
             let gid = part.l2g[lu as usize];
             if alive[gid as usize] {
-                hits.push(gid);
-                if owner[gid as usize] as usize != pi {
-                    remote_bytes += BYTES_PER_UPDATE;
+                s.hits.push(lu);
+                // Decrements of mirror copies travel to the master.
+                if (lu as usize) >= part.num_masters {
+                    s.peer_updates[owner[gid as usize] as usize] += 1;
                 }
             }
         }
     }
-    KcoreLocal {
-        cycles: scratch.sim.round.total_cycles,
-        lb: scratch.sched.sched.lb.is_some(),
+    s.out = RoundOut {
+        cycles: s.scratch.sim.round.total_cycles,
+        edges: s.scratch.sched.sched.total_edges(),
+        lb: s.scratch.sched.sched.lb.is_some(),
         wall_ns: t0.elapsed().as_nanos() as u64,
         thread,
-        hits,
-        remote_bytes,
-    }
+    };
 }
 
 fn run_kcore_dist(
     g: &CsrGraph,
     dg: &DistGraph,
+    plan: &ExchangePlan,
     cfg: &EngineConfig,
     cluster: &ClusterConfig,
     pool: &Pool,
@@ -770,54 +811,55 @@ fn run_kcore_dist(
 
     let mut acct = RunAccounting::new(k_parts);
     let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
-    let mut scratches: Vec<RoundScratch> = dg
+    let mut gpus: Vec<GpuKcore> = dg
         .parts
         .iter()
-        .map(|p| RoundScratch::for_vertices(p.graph.num_vertices()))
+        .map(|p| GpuKcore {
+            scratch: RoundScratch::for_vertices(p.graph.num_vertices()),
+            out: RoundOut::idle(),
+            hits: Vec::new(),
+            peer_updates: vec![0; k_parts],
+        })
         .collect();
+    let mut dying_locals: Vec<Vec<u32>> = vec![Vec::new(); k_parts];
+    let mut decr = vec![0u32; n];
+    let mut flows: Vec<Flow> = Vec::new();
     let mut round = 0u32;
 
     while !dying.is_empty() && round < cfg.max_rounds {
-        // Per-partition: local copies of dying vertices drive out-edge
-        // decrement scans — one GPU per thread, barrier at the join.
-        let locals: Vec<KcoreLocal> = {
-            let (dying_ref, alive_ref, owner_ref) = (&dying, &alive, &dg.owner);
-            let sim_ref = &sim;
-            let tasks: Vec<_> = dg
-                .parts
-                .iter()
-                .enumerate()
-                .zip(scratches.iter_mut())
-                .map(|((pi, p), scratch)| {
-                    let g2l = &dg.g2l[pi];
-                    move || {
-                        local_kcore_round(
-                            pi, p, dying_ref, g2l, alive_ref, owner_ref, cfg,
-                            sim_ref, scratch, pool,
-                        )
-                    }
-                })
-                .collect();
-            comm::superstep(cluster.exec, pool, tasks)
-        };
+        // Master-side deaths propagate to every local copy through the
+        // precomputed fan-out schedules (no g2l lookups), keeping each
+        // partition's local dying list in global-id order.
+        plan.scatter_globals(&dying, &mut dying_locals);
+        {
+            let (alive_ref, owner_ref) = (&alive, &dg.owner);
+            let (dying_ref, sim_ref) = (&dying_locals, &sim);
+            superstep_mut(cluster.exec, pool, &mut gpus, &|pi, s: &mut GpuKcore| {
+                local_kcore_round(
+                    &dg.parts[pi], &dying_ref[pi], alive_ref, owner_ref, cfg,
+                    sim_ref, pool, s,
+                );
+            });
+        }
 
         let mut comp = 0u64;
         let mut lb_gpus = 0u32;
-        let mut decr = vec![0u32; n];
-        let mut bytes = 0u64;
-        let mut flows: Vec<(u32, u32, u64)> = Vec::new();
-        for (pi, r) in locals.iter().enumerate() {
-            comp = comp.max(r.cycles);
-            acct.per_gpu_comp[pi] += r.cycles;
-            acct.per_gpu_wall_ns[pi] += r.wall_ns;
-            acct.threads.insert(r.thread);
-            lb_gpus += r.lb as u32;
-            for &gid in &r.hits {
-                decr[gid as usize] += 1;
+        decr.fill(0);
+        flows.clear();
+        for (pi, s) in gpus.iter().enumerate() {
+            comp = comp.max(s.out.cycles);
+            acct.per_gpu_comp[pi] += s.out.cycles;
+            acct.per_gpu_wall_ns[pi] += s.out.wall_ns;
+            acct.threads.insert(s.out.thread);
+            lb_gpus += s.out.lb as u32;
+            let l2g = &dg.parts[pi].l2g;
+            for &lu in &s.hits {
+                decr[l2g[lu as usize] as usize] += 1;
             }
-            if r.remote_bytes > 0 {
-                flows.push((pi as u32, ((pi + 1) % k_parts) as u32, r.remote_bytes));
-                bytes += r.remote_bytes;
+            for (peer, &cnt) in s.peer_updates.iter().enumerate() {
+                if cnt > 0 {
+                    flows.push((pi as u32, peer as u32, cnt * BYTES_PER_UPDATE));
+                }
             }
         }
 
@@ -831,13 +873,15 @@ fn run_kcore_dist(
                 }
             }
         }
-        let comm = cluster.net.round_cycles(&flows);
+        let (comm, bytes_intra, bytes_inter) = price(&cluster.net, &flows);
         acct.record_round(DistRoundRecord {
             round,
             active: dying.len() as u64,
             comp_cycles: comp,
             comm_cycles: comm,
-            comm_bytes: bytes,
+            comm_bytes: bytes_intra + bytes_inter,
+            comm_bytes_intra: bytes_intra,
+            comm_bytes_inter: bytes_inter,
             lb_gpus,
         });
         dying = next;
@@ -852,6 +896,7 @@ mod tests {
     use super::*;
     use crate::apps::{bfs, cc, kcore, sssp};
     use crate::graph::gen::rmat::{self, RmatConfig};
+    use crate::graph::EdgeList;
 
     fn test_graph(scale: u32, seed: u64) -> CsrGraph {
         CsrGraph::from_edge_list(&rmat::generate(&RmatConfig::paper(scale, seed)))
@@ -934,7 +979,11 @@ mod tests {
     #[test]
     fn dist_kcore_matches_oracle() {
         let mut g = test_graph(8, 25);
-        let c = EngineConfig { kcore_k: 8, max_rounds: 100_000, ..EngineConfig::default() };
+        let c = EngineConfig {
+            kcore_k: 8,
+            max_rounds: 100_000,
+            ..EngineConfig::default()
+        };
         let r = run_distributed(
             App::Kcore,
             &g,
@@ -963,6 +1012,7 @@ mod tests {
         )
         .unwrap();
         assert_eq!(r.comm_cycles, 0);
+        assert_eq!(r.comm_bytes, 0);
         assert!(r.rounds.iter().all(|x| x.comm_bytes == 0));
     }
 
@@ -981,6 +1031,35 @@ mod tests {
         .unwrap();
         assert!(r.comm_cycles > 0);
         assert!(r.rounds.iter().any(|x| x.comm_bytes > 0));
+        // Single host: all traffic is intra-host by definition.
+        assert_eq!(r.comm_bytes_inter, 0);
+        assert_eq!(r.comm_bytes, r.comm_bytes_intra);
+        assert_eq!(
+            r.comm_bytes,
+            r.rounds.iter().map(|x| x.comm_bytes).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn cluster_splits_bytes_across_link_classes() {
+        // On a 2-GPUs-per-host cluster with 4 GPUs, a power-law graph's
+        // boundary traffic crosses both link classes, and the per-round
+        // split sums to the total.
+        let g = test_graph(9, 28);
+        let src = g.max_out_degree_vertex();
+        let r = run_distributed(
+            App::Bfs, &g, src, &cfg(), &ClusterConfig::bridges(4), None,
+        )
+        .unwrap();
+        assert!(r.comm_bytes_intra > 0, "expected intra-host traffic");
+        assert!(r.comm_bytes_inter > 0, "expected inter-host traffic");
+        assert_eq!(r.comm_bytes, r.comm_bytes_intra + r.comm_bytes_inter);
+        for rec in &r.rounds {
+            assert_eq!(
+                rec.comm_bytes,
+                rec.comm_bytes_intra + rec.comm_bytes_inter
+            );
+        }
     }
 
     #[test]
@@ -997,6 +1076,8 @@ mod tests {
         .unwrap();
         assert_eq!(single.labels, cluster.labels);
         assert!(cluster.comm_cycles > single.comm_cycles);
+        // Identical exchanges, different pricing: total bytes agree.
+        assert_eq!(single.comm_bytes, cluster.comm_bytes);
     }
 
     #[test]
@@ -1073,5 +1154,62 @@ mod tests {
         .unwrap();
         assert_eq!(r.per_gpu_wall_ns.len(), 4);
         assert!(r.per_gpu_wall_ns.iter().sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn degenerate_gpu_counts_match_oracle() {
+        // ISSUE 4 hardening: k == 1, k == |V| (every partition one master),
+        // and k == |V| + 3 (trailing empty partitions) all converge.
+        let mut el = EdgeList::new(61);
+        for v in 0..60u32 {
+            el.push(v, v + 1, 1.0);
+            el.push(v, (v * 7 + 3) % 61, 2.0);
+        }
+        let g = CsrGraph::from_edge_list(&el);
+        let n = g.num_vertices() as u32;
+        let want = bfs::oracle(&g, 0);
+        for k in [1u32, n, n + 3] {
+            for policy in [Policy::Oec, Policy::Iec, Policy::Cvc] {
+                let cluster = ClusterConfig {
+                    policy,
+                    ..ClusterConfig::single_host(k)
+                };
+                let r = run_distributed(App::Bfs, &g, 0, &cfg(), &cluster, None)
+                    .unwrap();
+                assert_eq!(r.labels, want, "{policy:?} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_graph_runs_to_empty_result() {
+        let g = CsrGraph::from_edge_list(&EdgeList::new(0));
+        let r = run_distributed(
+            App::Cc, &g, 0, &cfg(), &ClusterConfig::single_host(3), None,
+        )
+        .unwrap();
+        assert!(r.labels.is_empty());
+        assert!(r.rounds.is_empty());
+        assert_eq!(r.total_cycles, 0);
+    }
+
+    #[test]
+    fn exchange_matches_reference_on_small_graph() {
+        // In-module smoke of the big parity gate in rust/tests/parity.rs:
+        // labels and push-app round records must equal the preserved
+        // pre-rebuild coordinator.
+        let g = test_graph(9, 34);
+        let src = g.max_out_degree_vertex();
+        for app in [App::Bfs, App::Sssp, App::Cc] {
+            let cluster = ClusterConfig::single_host(4);
+            let new = run_distributed(app, &g, src, &cfg(), &cluster, None)
+                .unwrap();
+            let old =
+                run_distributed_reference(app, &g, src, &cfg(), &cluster)
+                    .unwrap();
+            assert_eq!(new.labels, old.labels, "{}", app.name());
+            assert_eq!(new.rounds, old.rounds, "{}", app.name());
+            assert_eq!(new.total_cycles, old.total_cycles, "{}", app.name());
+        }
     }
 }

@@ -1,0 +1,561 @@
+//! The preserved **pre-rebuild** coordinator: central `master: Vec<f32>`
+//! reconciliation plus per-round `g2l` HashMap lookups, exactly as the
+//! coordinator synchronized before the `comm::exchange` schedules (ISSUE 4).
+//!
+//! This is not a hot path — it exists as the golden reference the rebuilt
+//! exchange is asserted against (`rust/tests/parity.rs`): identical labels
+//! for every app, and for the push apps identical per-round records
+//! (compute cycles, comm cycles, and byte counts — the schedules ship
+//! exactly the updates the full reconciliation shipped). It runs
+//! sequentially on the calling thread and allocates freely per round, in
+//! the same spirit as [`crate::apps::engine::run_push_reference`].
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::apps::engine::{self, EngineConfig, RoundScratch};
+use crate::apps::{pr, App, INF};
+use crate::comm::BYTES_PER_UPDATE;
+use crate::gpu::Simulator;
+use crate::graph::CsrGraph;
+use crate::lb::Direction;
+use crate::partition::{partition, DistGraph, Partition};
+
+use super::{
+    price, ClusterConfig, DistRoundRecord, DistRunResult, RunAccounting,
+};
+
+/// Run `app` with the pre-rebuild reconciliation (sequential, native-only).
+#[doc(hidden)]
+pub fn run_distributed_reference(
+    app: App,
+    g: &CsrGraph,
+    source: u32,
+    cfg: &EngineConfig,
+    cluster: &ClusterConfig,
+) -> Result<DistRunResult> {
+    let dg = partition(g, cluster.num_gpus, cluster.policy);
+    if g.num_vertices() == 0 {
+        return Ok(RunAccounting::new(dg.num_parts()).finish(app, Vec::new()));
+    }
+    match app {
+        App::Bfs | App::Sssp | App::Cc => {
+            ref_push(app, g, &dg, source, cfg, cluster)
+        }
+        App::Pr => ref_pr(g, &dg, cfg, cluster),
+        App::Kcore => ref_kcore(g, &dg, cfg, cluster),
+    }
+}
+
+struct LocalRound {
+    cycles: u64,
+    lb: bool,
+    /// Changed (local id, new value) pairs — the freshly-allocated payload
+    /// the exchange rebuild replaced.
+    changed: Vec<(u32, f32)>,
+    wall_ns: u64,
+}
+
+fn local_push_round(
+    app: App,
+    part: &CsrGraph,
+    active: &[u32],
+    labels: &mut [f32],
+    cfg: &EngineConfig,
+    sim: &Simulator,
+    scratch: &mut RoundScratch,
+) -> LocalRound {
+    let t0 = Instant::now();
+    let n = part.num_vertices();
+    let scan = cfg.worklist.scan_cost(n as u64, active.len() as u64);
+    cfg.balancer.schedule_into(
+        active, part, Direction::Push, &cfg.spec, scan, &mut scratch.sched,
+    );
+    sim.simulate_into(&scratch.sched.sched, true, &mut scratch.sim);
+    for &v in active {
+        engine::relax_native(part, app, v, labels, &mut scratch.next);
+    }
+    scratch.next.take_sorted_into(&mut scratch.active);
+    let changed = scratch
+        .active
+        .iter()
+        .map(|&l| (l, labels[l as usize]))
+        .collect();
+    LocalRound {
+        cycles: scratch.sim.round.total_cycles,
+        lb: scratch.sched.sched.lb.is_some(),
+        changed,
+        wall_ns: t0.elapsed().as_nanos() as u64,
+    }
+}
+
+fn ref_push(
+    app: App,
+    g: &CsrGraph,
+    dg: &DistGraph,
+    source: u32,
+    cfg: &EngineConfig,
+    cluster: &ClusterConfig,
+) -> Result<DistRunResult> {
+    let n = g.num_vertices();
+    let k = dg.num_parts();
+    // Reconciled master state.
+    let mut master: Vec<f32> = match app {
+        App::Cc => (0..n).map(|v| v as f32).collect(),
+        _ => {
+            let mut m = vec![INF; n];
+            m[source as usize] = 0.0;
+            m
+        }
+    };
+    let mut labels: Vec<Vec<f32>> = dg
+        .parts
+        .iter()
+        .map(|p| p.l2g.iter().map(|&gid| master[gid as usize]).collect())
+        .collect();
+    let mut active: Vec<Vec<u32>> = dg
+        .parts
+        .iter()
+        .map(|p| match app {
+            App::Cc => (0..p.graph.num_vertices() as u32).collect(),
+            _ => dg.g2l[p.id as usize]
+                .get(&source)
+                .map(|&l| vec![l])
+                .unwrap_or_default(),
+        })
+        .collect();
+
+    let mut acct = RunAccounting::new(k);
+    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+    let mut scratches: Vec<RoundScratch> = dg
+        .parts
+        .iter()
+        .map(|p| RoundScratch::for_vertices(p.graph.num_vertices()))
+        .collect();
+    let me = std::thread::current().id();
+
+    for round in 0..cfg.max_rounds {
+        let global_active: u64 = active.iter().map(|a| a.len() as u64).sum();
+        if global_active == 0 {
+            break;
+        }
+        let mut results = Vec::with_capacity(k);
+        for (pi, part) in dg.parts.iter().enumerate() {
+            results.push(local_push_round(
+                app, &part.graph, &active[pi], &mut labels[pi], cfg, &sim,
+                &mut scratches[pi],
+            ));
+        }
+        let comp = results.iter().map(|r| r.cycles).max().unwrap_or(0);
+        for (pi, r) in results.iter().enumerate() {
+            acct.per_gpu_comp[pi] += r.cycles;
+            acct.per_gpu_wall_ns[pi] += r.wall_ns;
+            acct.threads.insert(me);
+        }
+        let lb_gpus = results.iter().filter(|r| r.lb).count() as u32;
+
+        // --- Gluon sync: reduce (min to master), every update through the
+        // central master array ---
+        let mut flows: Vec<(u32, u32, u64)> = Vec::new();
+        let mut touched: Vec<u32> = Vec::new();
+        for (pi, r) in results.iter().enumerate() {
+            let part = &dg.parts[pi];
+            let mut to_owner = vec![0u64; k];
+            for &(l, val) in &r.changed {
+                let gid = part.l2g[l as usize];
+                let owner = dg.owner[gid as usize] as usize;
+                if val < master[gid as usize] {
+                    master[gid as usize] = val;
+                }
+                touched.push(gid);
+                if owner != pi {
+                    to_owner[owner] += BYTES_PER_UPDATE;
+                }
+            }
+            for (o, b) in to_owner.iter().enumerate() {
+                if *b > 0 {
+                    flows.push((pi as u32, o as u32, *b));
+                }
+            }
+        }
+        touched.sort_unstable();
+        touched.dedup();
+
+        // --- broadcast (master to every stale copy) + activation, through
+        // the per-partition g2l HashMaps ---
+        let mut bcast = vec![0u64; k * k];
+        let mut next_active: Vec<Vec<u32>> = vec![Vec::new(); k];
+        for &gid in &touched {
+            let owner = dg.owner[gid as usize] as usize;
+            let val = master[gid as usize];
+            for pi in 0..k {
+                if let Some(&l) = dg.g2l[pi].get(&gid) {
+                    if val < labels[pi][l as usize] {
+                        labels[pi][l as usize] = val;
+                        if owner != pi {
+                            bcast[owner * k + pi] += BYTES_PER_UPDATE;
+                        }
+                    }
+                    // A copy whose value just changed (here or locally) is
+                    // active next round if it has out-edges to relax.
+                    if labels[pi][l as usize] <= val
+                        && (labels[pi][l as usize] - val).abs() < f32::EPSILON
+                        && dg.parts[pi].graph.out_degree(l) > 0
+                    {
+                        next_active[pi].push(l);
+                    }
+                }
+            }
+        }
+        for o in 0..k {
+            for pi in 0..k {
+                let b = bcast[o * k + pi];
+                if b > 0 {
+                    flows.push((o as u32, pi as u32, b));
+                }
+            }
+        }
+        for a in next_active.iter_mut() {
+            a.sort_unstable();
+            a.dedup();
+        }
+        active = next_active;
+
+        let (comm, bytes_intra, bytes_inter) = price(&cluster.net, &flows);
+        acct.record_round(DistRoundRecord {
+            round,
+            active: global_active,
+            comp_cycles: comp,
+            comm_cycles: comm,
+            comm_bytes: bytes_intra + bytes_inter,
+            comm_bytes_intra: bytes_intra,
+            comm_bytes_inter: bytes_inter,
+            lb_gpus,
+        });
+    }
+    Ok(acct.finish(app, master))
+}
+
+struct PrLocal {
+    cycles: u64,
+    lb: bool,
+    wall_ns: u64,
+    /// (global id, partial rank mass), in local-vertex order.
+    acc: Vec<(u32, f32)>,
+    remote_bytes: u64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn local_pr_round(
+    pi: usize,
+    part: &Partition,
+    lg: &CsrGraph,
+    all: &[u32],
+    ranks: &[f32],
+    out_deg: &[u32],
+    owner: &[u32],
+    cfg: &EngineConfig,
+    sim: &Simulator,
+    scratch: &mut RoundScratch,
+) -> PrLocal {
+    let t0 = Instant::now();
+    let nl = lg.num_vertices();
+    let scan = cfg.worklist.scan_cost(nl as u64, nl as u64);
+    cfg.balancer.schedule_into(
+        all, lg, Direction::Pull, &cfg.spec, scan, &mut scratch.sched,
+    );
+    sim.simulate_into(&scratch.sched.sched, false, &mut scratch.sim);
+
+    let src_ranks: Vec<f32> =
+        part.l2g.iter().map(|&gid| ranks[gid as usize]).collect();
+    let src_degs: Vec<u32> =
+        part.l2g.iter().map(|&gid| out_deg[gid as usize]).collect();
+    let contrib: Vec<f32> = src_ranks
+        .iter()
+        .zip(&src_degs)
+        .map(|(&r, &d)| pr::DAMPING * r / d.max(1) as f32)
+        .collect();
+    let mut acc = Vec::new();
+    let mut remote_bytes = 0u64;
+    for lv in 0..nl as u32 {
+        let (srcs, _) = lg.in_edges(lv);
+        if srcs.is_empty() {
+            continue;
+        }
+        let mut sum = 0f32;
+        for &lu in srcs {
+            sum += contrib[lu as usize];
+        }
+        let gid = part.l2g[lv as usize];
+        acc.push((gid, sum));
+        if owner[gid as usize] as usize != pi {
+            remote_bytes += BYTES_PER_UPDATE;
+        }
+    }
+    PrLocal {
+        cycles: scratch.sim.round.total_cycles,
+        lb: scratch.sched.sched.lb.is_some(),
+        wall_ns: t0.elapsed().as_nanos() as u64,
+        acc,
+        remote_bytes,
+    }
+}
+
+fn ref_pr(
+    g: &CsrGraph,
+    dg: &DistGraph,
+    cfg: &EngineConfig,
+    cluster: &ClusterConfig,
+) -> Result<DistRunResult> {
+    let n = g.num_vertices();
+    let k = dg.num_parts();
+    let out_deg: Vec<u32> = (0..n as u32).map(|v| g.out_degree(v) as u32).collect();
+    let mut ranks = pr::init_ranks(n);
+    let mut parts: Vec<CsrGraph> = dg.parts.iter().map(|p| p.graph.clone()).collect();
+    for p in parts.iter_mut() {
+        p.build_csc();
+    }
+    let base = (1.0 - pr::DAMPING) / n as f32;
+
+    let mut acct = RunAccounting::new(k);
+    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+    let mut scratches: Vec<RoundScratch> = dg
+        .parts
+        .iter()
+        .map(|p| RoundScratch::for_vertices(p.graph.num_vertices()))
+        .collect();
+    let alls: Vec<Vec<u32>> = dg
+        .parts
+        .iter()
+        .map(|p| (0..p.graph.num_vertices() as u32).collect())
+        .collect();
+    let me = std::thread::current().id();
+
+    for round in 0..cfg.max_rounds {
+        // Mirror-refresh broadcast with the historical coarse attribution.
+        let mut flows: Vec<(u32, u32, u64)> = Vec::new();
+        let mut bytes = 0u64;
+        for (pi, p) in dg.parts.iter().enumerate() {
+            let b = p.num_mirrors() as u64 * BYTES_PER_UPDATE;
+            if b > 0 {
+                flows.push((((pi + 1) % k) as u32, pi as u32, b));
+                bytes += b;
+            }
+        }
+
+        let mut locals = Vec::with_capacity(k);
+        for (pi, p) in dg.parts.iter().enumerate() {
+            locals.push(local_pr_round(
+                pi, p, &parts[pi], &alls[pi], &ranks, &out_deg, &dg.owner, cfg,
+                &sim, &mut scratches[pi],
+            ));
+        }
+
+        let mut comp = 0u64;
+        let mut lb_gpus = 0u32;
+        let mut acc_global = vec![0f32; n];
+        for (pi, r) in locals.iter().enumerate() {
+            comp = comp.max(r.cycles);
+            acct.per_gpu_comp[pi] += r.cycles;
+            acct.per_gpu_wall_ns[pi] += r.wall_ns;
+            acct.threads.insert(me);
+            lb_gpus += r.lb as u32;
+            for &(gid, sum) in &r.acc {
+                acc_global[gid as usize] += sum;
+            }
+            bytes += r.remote_bytes;
+        }
+        // The reduce traffic: historical approximate aggregate flow.
+        if k > 1 {
+            flows.push((1, 0, bytes / k as u64));
+        }
+
+        let mut delta = 0f32;
+        for v in 0..n {
+            let new_rank = base + acc_global[v];
+            delta = delta.max((new_rank - ranks[v]).abs());
+            ranks[v] = new_rank;
+        }
+
+        let comm = cluster.net.round_cycles(&flows);
+        let (bytes_intra, bytes_inter) = cluster.net.split_bytes(&flows);
+        acct.record_round(DistRoundRecord {
+            round,
+            active: n as u64,
+            comp_cycles: comp,
+            comm_cycles: comm,
+            // The historical record kept the true byte total even though
+            // the flow attribution was approximate.
+            comm_bytes: bytes,
+            comm_bytes_intra: bytes_intra,
+            comm_bytes_inter: bytes_inter,
+            lb_gpus,
+        });
+        if delta < cfg.pr_tol {
+            break;
+        }
+    }
+    Ok(acct.finish(App::Pr, ranks))
+}
+
+struct KcoreLocal {
+    cycles: u64,
+    lb: bool,
+    wall_ns: u64,
+    /// Global ids losing one in-degree (repeats = multiple dying preds).
+    hits: Vec<u32>,
+    remote_bytes: u64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn local_kcore_round(
+    pi: usize,
+    part: &Partition,
+    dying: &[u32],
+    g2l: &HashMap<u32, u32>,
+    alive: &[bool],
+    owner: &[u32],
+    cfg: &EngineConfig,
+    sim: &Simulator,
+    scratch: &mut RoundScratch,
+) -> KcoreLocal {
+    let t0 = Instant::now();
+    let lg = &part.graph;
+    scratch.active.clear();
+    scratch
+        .active
+        .extend(dying.iter().filter_map(|&gv| g2l.get(&gv).copied()));
+    if scratch.active.is_empty() {
+        return KcoreLocal {
+            cycles: 0,
+            lb: false,
+            wall_ns: t0.elapsed().as_nanos() as u64,
+            hits: Vec::new(),
+            remote_bytes: 0,
+        };
+    }
+    let scan = cfg
+        .worklist
+        .scan_cost(lg.num_vertices() as u64, scratch.active.len() as u64);
+    cfg.balancer.schedule_into(
+        &scratch.active, lg, Direction::Push, &cfg.spec, scan,
+        &mut scratch.sched,
+    );
+    sim.simulate_into(&scratch.sched.sched, true, &mut scratch.sim);
+
+    let mut hits = Vec::new();
+    let mut remote_bytes = 0u64;
+    for &lv in &scratch.active {
+        let (dsts, _) = lg.out_edges(lv);
+        for &lu in dsts {
+            let gid = part.l2g[lu as usize];
+            if alive[gid as usize] {
+                hits.push(gid);
+                if owner[gid as usize] as usize != pi {
+                    remote_bytes += BYTES_PER_UPDATE;
+                }
+            }
+        }
+    }
+    KcoreLocal {
+        cycles: scratch.sim.round.total_cycles,
+        lb: scratch.sched.sched.lb.is_some(),
+        wall_ns: t0.elapsed().as_nanos() as u64,
+        hits,
+        remote_bytes,
+    }
+}
+
+fn ref_kcore(
+    g: &CsrGraph,
+    dg: &DistGraph,
+    cfg: &EngineConfig,
+    cluster: &ClusterConfig,
+) -> Result<DistRunResult> {
+    let n = g.num_vertices();
+    let k_parts = dg.num_parts();
+    let k = cfg.kcore_k;
+    let mut g2 = g.clone();
+    g2.build_csc();
+    let mut deg: Vec<u32> = (0..n as u32).map(|v| g2.in_degree(v) as u32).collect();
+    let mut alive = vec![true; n];
+
+    let mut dying: Vec<u32> =
+        (0..n as u32).filter(|&v| (deg[v as usize]) < k).collect();
+    for &v in &dying {
+        alive[v as usize] = false;
+    }
+
+    let mut acct = RunAccounting::new(k_parts);
+    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+    let mut scratches: Vec<RoundScratch> = dg
+        .parts
+        .iter()
+        .map(|p| RoundScratch::for_vertices(p.graph.num_vertices()))
+        .collect();
+    let me = std::thread::current().id();
+    let mut round = 0u32;
+
+    while !dying.is_empty() && round < cfg.max_rounds {
+        let mut locals = Vec::with_capacity(k_parts);
+        for (pi, p) in dg.parts.iter().enumerate() {
+            locals.push(local_kcore_round(
+                pi, p, &dying, &dg.g2l[pi], &alive, &dg.owner, cfg, &sim,
+                &mut scratches[pi],
+            ));
+        }
+
+        let mut comp = 0u64;
+        let mut lb_gpus = 0u32;
+        let mut decr = vec![0u32; n];
+        let mut bytes = 0u64;
+        let mut flows: Vec<(u32, u32, u64)> = Vec::new();
+        for (pi, r) in locals.iter().enumerate() {
+            comp = comp.max(r.cycles);
+            acct.per_gpu_comp[pi] += r.cycles;
+            acct.per_gpu_wall_ns[pi] += r.wall_ns;
+            acct.threads.insert(me);
+            lb_gpus += r.lb as u32;
+            for &gid in &r.hits {
+                decr[gid as usize] += 1;
+            }
+            if r.remote_bytes > 0 {
+                flows.push((
+                    pi as u32,
+                    ((pi + 1) % k_parts) as u32,
+                    r.remote_bytes,
+                ));
+                bytes += r.remote_bytes;
+            }
+        }
+
+        let mut next = Vec::new();
+        for v in 0..n {
+            if alive[v] && decr[v] > 0 {
+                deg[v] -= decr[v].min(deg[v]);
+                if deg[v] < k {
+                    alive[v] = false;
+                    next.push(v as u32);
+                }
+            }
+        }
+        let comm = cluster.net.round_cycles(&flows);
+        let (bytes_intra, bytes_inter) = cluster.net.split_bytes(&flows);
+        acct.record_round(DistRoundRecord {
+            round,
+            active: dying.len() as u64,
+            comp_cycles: comp,
+            comm_cycles: comm,
+            comm_bytes: bytes,
+            comm_bytes_intra: bytes_intra,
+            comm_bytes_inter: bytes_inter,
+            lb_gpus,
+        });
+        dying = next;
+        round += 1;
+    }
+    let labels = alive.iter().map(|&a| if a { 1.0 } else { 0.0 }).collect();
+    Ok(acct.finish(App::Kcore, labels))
+}

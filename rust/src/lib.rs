@@ -21,9 +21,11 @@
 //!   simulation itself: kernel block/warp walks, the ALB inspector's probe
 //!   pass, and the per-GPU BSP tasks all run as chunked tasks on one pool;
 //! * [`comm`] — Gluon-like BSP reduce/broadcast with a network cost model,
-//!   plus the superstep executor ([`comm::bsp`]) that dispatches one task
-//!   per simulated GPU onto the shared pool and barriers before each sync
-//!   phase;
+//!   the superstep executor ([`comm::bsp`]) that dispatches one task per
+//!   simulated GPU onto the shared pool and barriers before each sync
+//!   phase, and the precomputed mirror/master exchange schedules
+//!   ([`comm::exchange`]) that drive reduce/broadcast through persistent
+//!   buffers with an updated-only bitmask;
 //! * [`coordinator`] — the multi-GPU (and multi-host) driver: parallel per
 //!   round, bit-identical to its sequential reference mode;
 //! * [`runtime`] — the PJRT client that loads the AOT-compiled JAX/Pallas

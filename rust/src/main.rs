@@ -298,6 +298,9 @@ fn cmd_run(args: &Args) -> Result<()> {
             .set("simulated_ms", r.ms(&spec))
             .set("comp_ms", r.comp_ms(&spec))
             .set("comm_ms", r.comm_ms(&spec))
+            .set("comm_bytes", r.comm_bytes)
+            .set("comm_bytes_intra", r.comm_bytes_intra)
+            .set("comm_bytes_inter", r.comm_bytes_inter)
             .set("rounds", r.rounds.len())
             .set("policy", policy.name())
             .set("exec", effective_exec.name())

@@ -70,6 +70,20 @@ impl Partition {
     pub fn mirror_globals(&self) -> &[u32] {
         &self.l2g[self.num_masters..]
     }
+
+    /// Local id of global `gid` in this partition, if present. Both the
+    /// master and the mirror sections of `l2g` are sorted by global id, so
+    /// two binary searches replace a `g2l` HashMap lookup on paths that
+    /// only need occasional resolution (run setup, tests).
+    pub fn local_of(&self, gid: u32) -> Option<u32> {
+        if let Ok(i) = self.l2g[..self.num_masters].binary_search(&gid) {
+            return Some(i as u32);
+        }
+        self.l2g[self.num_masters..]
+            .binary_search(&gid)
+            .ok()
+            .map(|i| (self.num_masters + i) as u32)
+    }
 }
 
 /// The partitioned graph plus ownership metadata.
@@ -96,7 +110,17 @@ impl DistGraph {
 }
 
 /// Assign contiguous owner ranges balanced by `weight(v)` (degree).
+///
+/// Degenerate-input contract (ISSUE 4): owners are monotone non-decreasing
+/// and always `< k`; an empty weight list yields an empty assignment; when
+/// `k > |V|` (or one mega-hub swallows the whole budget early) the trailing
+/// partitions simply own nothing — they come out of [`partition`] as
+/// well-formed empty partitions (0 masters, 0 mirrors, empty local CSR),
+/// which the coordinator drives like any other GPU.
 fn balanced_ranges(weights: &[u64], k: u32) -> Vec<u32> {
+    if weights.is_empty() {
+        return Vec::new();
+    }
     let total: u64 = weights.iter().sum();
     let per = total.div_ceil(k as u64).max(1);
     let mut owner = vec![0u32; weights.len()];
@@ -144,6 +168,7 @@ pub fn partition(g: &CsrGraph, k: u32, policy: Policy) -> DistGraph {
         }
     };
     let (rows, cols) = cvc_grid(k);
+    debug_assert_eq!(rows * cols, k);
 
     // Edge -> partition assignment.
     let mut edge_lists: Vec<Vec<(u32, u32, f32)>> = vec![Vec::new(); k as usize];
@@ -154,7 +179,12 @@ pub fn partition(g: &CsrGraph, k: u32, policy: Policy) -> DistGraph {
                 Policy::Oec => owner[u as usize],
                 Policy::Iec => owner[v as usize],
                 Policy::Cvc => {
-                    let r = owner[u as usize] % rows;
+                    // Partition id p sits at grid cell (p / cols, p % cols),
+                    // so the edge's cell must be derived the same way: row
+                    // of u's owner, column of v's owner (ISSUE 4 bugfix —
+                    // the old `owner % rows` row pick broke the row/column
+                    // locality CVC exists to guarantee).
+                    let r = owner[u as usize] / cols;
                     let c = owner[v as usize] % cols;
                     r * cols + c
                 }
@@ -344,6 +374,139 @@ mod tests {
         assert_eq!(cvc_grid(6), (2, 3));
         assert_eq!(cvc_grid(16), (4, 4));
         assert_eq!(cvc_grid(7), (1, 7));
+    }
+
+    /// ISSUE 4 property test: under CVC with `p = r * cols + c`, every
+    /// master's out-edges must land in its grid **row**, every master's
+    /// in-edges in its grid **column**, and the mirror fan-in/fan-out bound
+    /// follows: a vertex has copies in at most `rows + cols - 1` partitions.
+    /// Includes prime `k`, where the grid degenerates to `1 x k`.
+    #[test]
+    fn cvc_edges_respect_grid_rows_and_columns() {
+        let g = test_graph();
+        for k in [2u32, 4, 6, 7, 12] {
+            let dg = partition(&g, k, Policy::Cvc);
+            let (rows, cols) = cvc_grid(k);
+            for p in &dg.parts {
+                let (r, c) = (p.id / cols, p.id % cols);
+                for lu in 0..p.graph.num_vertices() as u32 {
+                    let (dsts, _) = p.graph.out_edges(lu);
+                    if dsts.is_empty() {
+                        continue;
+                    }
+                    let gu = p.l2g[lu as usize] as usize;
+                    assert_eq!(
+                        dg.owner[gu] / cols,
+                        r,
+                        "k={k}: src owner row escaped partition {}",
+                        p.id
+                    );
+                    for &lv in dsts {
+                        let gv = p.l2g[lv as usize] as usize;
+                        assert_eq!(
+                            dg.owner[gv] % cols,
+                            c,
+                            "k={k}: dst owner column escaped partition {}",
+                            p.id
+                        );
+                    }
+                }
+            }
+            // Fan bound: out-copies live in the owner's row (<= cols cells),
+            // in-copies in its column (<= rows cells), overlapping at the
+            // owner cell.
+            let mut copies = vec![0u32; g.num_vertices()];
+            for p in &dg.parts {
+                for &gid in &p.l2g {
+                    copies[gid as usize] += 1;
+                }
+            }
+            for (v, &cnt) in copies.iter().enumerate() {
+                assert!(
+                    cnt >= 1 && cnt <= rows + cols - 1,
+                    "k={k} ({rows}x{cols}): vertex {v} has {cnt} copies"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn local_of_inverts_l2g_without_hashmap() {
+        let g = test_graph();
+        let dg = partition(&g, 6, Policy::Cvc);
+        for p in &dg.parts {
+            for (l, &gid) in p.l2g.iter().enumerate() {
+                assert_eq!(p.local_of(gid), Some(l as u32));
+            }
+        }
+        // A global that is neither master nor mirror resolves to None.
+        for p in &dg.parts {
+            let held: std::collections::HashSet<u32> =
+                p.l2g.iter().copied().collect();
+            if let Some(absent) =
+                (0..g.num_vertices() as u32).find(|v| !held.contains(v))
+            {
+                assert_eq!(p.local_of(absent), None);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_graph_partitions_are_well_formed() {
+        let g = CsrGraph::from_edge_list(&EdgeList::new(0));
+        for policy in [Policy::Oec, Policy::Iec, Policy::Cvc] {
+            let dg = partition(&g, 4, policy);
+            assert_eq!(dg.parts.len(), 4, "{policy:?}");
+            for p in &dg.parts {
+                assert_eq!(p.num_masters, 0);
+                assert_eq!(p.num_mirrors(), 0);
+                assert_eq!(p.graph.num_vertices(), 0);
+                assert_eq!(p.graph.num_edges(), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn more_partitions_than_vertices_leaves_trailing_empties() {
+        // k > n: every vertex still mastered exactly once; the surplus
+        // partitions are empty but well-formed.
+        let mut el = EdgeList::new(5);
+        for v in 0..4u32 {
+            el.push(v, v + 1, 1.0);
+        }
+        let g = CsrGraph::from_edge_list(&el);
+        for policy in [Policy::Oec, Policy::Iec, Policy::Cvc] {
+            let dg = partition(&g, 8, policy);
+            check_invariants(&g, &dg);
+            assert_eq!(dg.parts.len(), 8, "{policy:?}");
+            let empties =
+                dg.parts.iter().filter(|p| p.l2g.is_empty()).count();
+            assert!(empties >= 3, "{policy:?}: expected trailing empties");
+        }
+    }
+
+    #[test]
+    fn mega_hub_keeps_every_partition_well_formed() {
+        // One vertex owns almost all edges: the hub's partition absorbs the
+        // weight budget immediately, later partitions own thin tails, and
+        // any trailing empty partitions must still be well-formed.
+        let n = 1024u32;
+        let mut el = EdgeList::new(n);
+        for i in 0..20_000u32 {
+            el.push(0, 1 + (i % (n - 1)), 1.0);
+        }
+        for v in 1..64u32 {
+            el.push(v, v + 1, 1.0);
+        }
+        let g = CsrGraph::from_edge_list(&el);
+        for policy in [Policy::Oec, Policy::Iec, Policy::Cvc] {
+            let dg = partition(&g, 4, policy);
+            check_invariants(&g, &dg);
+            // Owners monotone non-decreasing (contiguous ranges).
+            for w in dg.owner.windows(2) {
+                assert!(w[0] <= w[1], "{policy:?}: owners not contiguous");
+            }
+        }
     }
 
     #[test]

@@ -13,10 +13,13 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
 use alb_graph::apps::engine::RoundScratch;
+use alb_graph::comm::exchange::{ExchangePlan, Flow, HasPartState, PartState};
+use alb_graph::comm::{superstep_mut, ExecMode};
 use alb_graph::exec::Pool;
 use alb_graph::gpu::{CostModel, GpuSpec, Simulator};
 use alb_graph::graph::{CsrGraph, EdgeList};
 use alb_graph::lb::{Balancer, Direction, Distribution};
+use alb_graph::partition::{partition, Policy};
 
 struct CountingAlloc;
 
@@ -209,6 +212,118 @@ fn steady_state_pooled_round_loop_is_allocation_free() {
             balancer.name()
         );
     }
+}
+
+/// One simulated GPU's state for the distributed gate: the exchange side
+/// (labels / frontier / changed buffer / bitmasks) plus the compute arena —
+/// the same split the coordinator's `GpuPush` uses.
+struct DistGpu {
+    st: PartState,
+    scratch: RoundScratch,
+}
+
+impl HasPartState for DistGpu {
+    fn part_state(&mut self) -> &mut PartState {
+        &mut self.st
+    }
+}
+
+#[test]
+fn steady_state_distributed_superstep_is_allocation_free() {
+    // ISSUE 4 acceptance: a warmed BSP superstep — per-GPU compute tasks
+    // dispatched in place through `superstep_mut`, then the plan-driven
+    // reduce / broadcast over the precomputed mirror schedules — performs
+    // zero heap allocations on the submitting thread. The per-GPU payloads
+    // live in persistent `PartState` buffers (no per-round `changed` Vec),
+    // the frontier is rebuilt into a capacity-reusing buffer, and the flow
+    // list is cleared, not reallocated.
+    let g = hub_graph();
+    let dg = partition(&g, 4, Policy::Cvc);
+    let plan = ExchangePlan::new(&dg);
+    assert!(plan.total_mirrors() > 0, "partitioning must create mirrors");
+    let spec = GpuSpec::default_sim();
+    let sim = Simulator::new(spec.clone(), CostModel::default());
+    let balancer =
+        Balancer::Alb { distribution: Distribution::Cyclic, threshold: None };
+    let pool = Pool::new(4);
+
+    // Fixed per-partition frontier: every master, so boundary edges fire.
+    let fronts: Vec<Vec<u32>> = dg
+        .parts
+        .iter()
+        .map(|p| (0..p.num_masters as u32).collect())
+        .collect();
+    let mut gpus: Vec<DistGpu> = dg
+        .parts
+        .iter()
+        .zip(plan.new_states())
+        .map(|(p, st)| DistGpu {
+            st,
+            scratch: RoundScratch::for_vertices(p.graph.num_vertices()),
+        })
+        .collect();
+    let mut flows: Vec<Flow> = Vec::new();
+
+    let round = |gpus: &mut Vec<DistGpu>, flows: &mut Vec<Flow>| -> u64 {
+        // Reset labels + frontier so every superstep does identical work
+        // (fill / clear / extend: no allocation once warmed).
+        for (pi, s) in gpus.iter_mut().enumerate() {
+            s.st.labels.fill(f32::INFINITY);
+            s.st.active.clear();
+            s.st.active.extend_from_slice(&fronts[pi]);
+            for &l in &fronts[pi] {
+                s.st.labels[l as usize] = 0.0;
+            }
+        }
+        // Compute superstep: one in-place task per simulated GPU on the
+        // shared pool; returning is the BSP barrier.
+        superstep_mut(ExecMode::Parallel, &pool, gpus, &|pi, s: &mut DistGpu| {
+            let lg = &dg.parts[pi].graph;
+            let scan = lg.num_vertices() as u64;
+            balancer.schedule_into_pooled(
+                &s.st.active, lg, Direction::Push, &spec, scan,
+                &mut s.scratch.sched, &pool,
+            );
+            sim.simulate_into_pooled(
+                &s.scratch.sched.sched, true, &mut s.scratch.sim, &pool,
+            );
+            for &v in &s.st.active {
+                let dv = s.st.labels[v as usize];
+                let (dsts, ws) = lg.out_edges(v);
+                for (&dst, &w) in dsts.iter().zip(ws) {
+                    let cand = dv + w;
+                    if cand < s.st.labels[dst as usize] {
+                        s.st.labels[dst as usize] = cand;
+                        s.scratch.next.push(dst);
+                    }
+                }
+            }
+            s.scratch.next.take_sorted_into(&mut s.st.changed);
+        });
+        // Gluon sync over the precomputed schedules.
+        flows.clear();
+        plan.reduce_min(gpus, flows) + plan.broadcast_min(gpus, flows)
+    };
+
+    // Warm: first supersteps grow every buffer (including worker-claimed
+    // chunk arenas) to capacity.
+    let warm_bytes = round(&mut gpus, &mut flows);
+    assert!(warm_bytes > 0, "warmup superstep must exchange bytes");
+    for _ in 0..2 {
+        round(&mut gpus, &mut flows);
+    }
+
+    let before = allocs_on_this_thread();
+    for _ in 0..10 {
+        round(&mut gpus, &mut flows);
+    }
+    let after = allocs_on_this_thread();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state distributed supersteps allocated on the submitting \
+         thread"
+    );
 }
 
 #[test]

@@ -21,9 +21,12 @@
 
 use alb_graph::apps::engine::{run, run_push_reference, EngineConfig};
 use alb_graph::apps::App;
-use alb_graph::coordinator::{run_distributed, ClusterConfig, ExecMode};
+use alb_graph::coordinator::{
+    run_distributed, run_distributed_reference, ClusterConfig, ExecMode,
+};
 use alb_graph::graph::inputs;
 use alb_graph::lb::{Balancer, Distribution};
+use alb_graph::partition::Policy;
 
 const DELTA: i32 = -4; // small but non-trivial inputs for CI
 
@@ -225,6 +228,109 @@ fn parallel_coordinator_actually_uses_threads() {
     )
     .unwrap();
     assert_eq!(seq.num_threads(), 1, "sequential reference must stay inline");
+}
+
+/// ISSUE 4 acceptance gate: the rebuilt exchange (precomputed mirror
+/// schedules + updated-only bitmask) must reproduce the preserved
+/// pre-rebuild coordinator — central master array + per-round g2l HashMap
+/// reconciliation — across `ALL_INPUTS` × {oec, iec, cvc} × all five apps:
+/// bit-identical labels everywhere; for the push apps the per-round records
+/// (compute cycles, comm cycles, byte counts) are identical too; and no
+/// round ever exchanges more bytes than the old reconciliation did.
+#[test]
+fn exchange_bit_identical_to_pre_rebuild_coordinator() {
+    for input in inputs::ALL_INPUTS {
+        let g = inputs::build(input, DELTA, 43).unwrap();
+        let src = inputs::source_vertex(input, &g);
+        for policy in [Policy::Oec, Policy::Iec, Policy::Cvc] {
+            for app in [App::Bfs, App::Sssp, App::Cc, App::Pr, App::Kcore] {
+                let cfg = EngineConfig {
+                    max_rounds: if app == App::Pr { 50 } else { 1_000_000 },
+                    ..EngineConfig::default()
+                };
+                let cluster = ClusterConfig {
+                    policy,
+                    ..ClusterConfig::single_host(4)
+                };
+                let ctx = format!("{input} {} {policy:?}", app.name());
+                let new =
+                    run_distributed(app, &g, src, &cfg, &cluster, None)
+                        .unwrap();
+                let old = run_distributed_reference(
+                    app, &g, src, &cfg, &cluster,
+                )
+                .unwrap();
+                assert_eq!(new.labels, old.labels, "{ctx}: labels");
+                assert_eq!(
+                    new.rounds.len(),
+                    old.rounds.len(),
+                    "{ctx}: round count"
+                );
+                for (a, b) in new.rounds.iter().zip(&old.rounds) {
+                    assert_eq!(a.active, b.active, "{ctx}: active");
+                    assert_eq!(
+                        a.comp_cycles, b.comp_cycles,
+                        "{ctx}: comp cycles"
+                    );
+                    assert!(
+                        a.comm_bytes <= b.comm_bytes,
+                        "{ctx} round {}: exchanged {} bytes > the old \
+                         reconciliation's {}",
+                        a.round,
+                        a.comm_bytes,
+                        b.comm_bytes
+                    );
+                }
+                if matches!(app, App::Bfs | App::Sssp | App::Cc) {
+                    // The min-reduce apps flow through the schedules with
+                    // exactly the old volumes and pairings.
+                    assert_eq!(new.rounds, old.rounds, "{ctx}: rounds");
+                    assert_eq!(
+                        new.total_cycles, old.total_cycles,
+                        "{ctx}: total cycles"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Exchange-schedule parity, pooled vs sequential, for every policy and
+/// app: the plan-driven sync must stay bit-identical whichever way the
+/// superstep executes its per-GPU tasks.
+#[test]
+fn exchange_parallel_bit_identical_to_sequential_every_policy() {
+    let g = inputs::build("rmat18", DELTA, 47).unwrap();
+    let src = inputs::source_vertex("rmat18", &g);
+    for policy in [Policy::Oec, Policy::Iec, Policy::Cvc] {
+        for app in [App::Bfs, App::Sssp, App::Cc, App::Pr, App::Kcore] {
+            let cfg = EngineConfig {
+                max_rounds: if app == App::Pr { 50 } else { 1_000_000 },
+                ..EngineConfig::default()
+            };
+            let cluster = ClusterConfig {
+                policy,
+                ..ClusterConfig::single_host(3)
+            };
+            let par =
+                run_distributed(app, &g, src, &cfg, &cluster, None).unwrap();
+            let seq = run_distributed(
+                app,
+                &g,
+                src,
+                &cfg,
+                &cluster.clone().with_exec(ExecMode::Sequential),
+                None,
+            )
+            .unwrap();
+            let ctx = format!("{} {policy:?}", app.name());
+            assert_eq!(par.labels, seq.labels, "{ctx}: labels");
+            assert_eq!(par.total_cycles, seq.total_cycles, "{ctx}: cycles");
+            assert_eq!(par.rounds, seq.rounds, "{ctx}: rounds");
+            assert_eq!(par.per_gpu_comp, seq.per_gpu_comp, "{ctx}: per-gpu");
+            assert_eq!(par.comm_bytes, seq.comm_bytes, "{ctx}: bytes");
+        }
+    }
 }
 
 #[test]
