@@ -26,13 +26,29 @@
 //!                          comm bytes (total / intra / inter) as metrics.
 //!
 //! Flags (after `--` under `cargo bench --bench hotpath`):
+//! * `--check-ratios <path>`    THE CI GATE (armed day one): compare this
+//!                              run's machine-independent in-binary ratios
+//!                              against the committed thresholds in
+//!                              `<path>` (`BENCH_hotpath.json` at the repo
+//!                              root): `min_speedup_engine_bfs`,
+//!                              `min_speedup_engine_sssp`,
+//!                              `min_speedup_sim_parallel`,
+//!                              `max_dist_comm_bytes_per_round`, and
+//!                              `max_dist_comm_bytes_inter_per_round`.
+//!                              Thresholds are requirements, not recorded
+//!                              timings, so the gate needs no seeding run;
+//!                              a missing threshold key is a LOUD failure.
 //! * `--out <path>`             write the results as BENCH-json.
-//! * `--check <baseline.json>`  fail if `engine-bfs` mean regresses more
-//!                              than `--max-regress` percent vs the file.
-//!                              A baseline with an empty `cases` array is a
-//!                              LOUD failure (the gate must never silently
-//!                              skip): seed it from the bench-smoke CI
-//!                              artifact (`BENCH_hotpath.ci.json`).
+//! * `--check <baseline.json>`  optional *absolute* comparison: fail if
+//!                              `engine-bfs` mean regresses more than
+//!                              `--max-regress` percent vs the file.
+//!                              Absolute ms are machine-dependent, so this
+//!                              stays opt-in for same-machine trend
+//!                              tracking; a baseline with an empty `cases`
+//!                              array is a LOUD failure (the gate must
+//!                              never silently skip): seed it from the
+//!                              bench-smoke CI artifact
+//!                              (`BENCH_hotpath.ci.json`).
 //! * `--max-regress <pct>`      regression tolerance (default 25).
 //! * `--require-speedup <x>`    fail unless both engine speedups >= x AND
 //!                              `speedup_sim_parallel` >= min(x, 1.5) —
@@ -50,7 +66,7 @@ use alb_graph::graph::gen::rmat::{self, RmatConfig};
 use alb_graph::graph::{inputs, CsrGraph};
 use alb_graph::lb::{alb, Direction, Distribution};
 use alb_graph::metrics::bench::{
-    mean_of, read_json, speedup, time_runs, write_json, BenchStats,
+    mean_of, read_json, read_metric, speedup, time_runs, write_json, BenchStats,
 };
 use alb_graph::partition::{partition, Policy};
 
@@ -62,6 +78,7 @@ fn main() {
     let args: Vec<String> = std::env::args().collect();
     let out_path = arg_value(&args, "--out");
     let check_path = arg_value(&args, "--check");
+    let ratios_path = arg_value(&args, "--check-ratios");
     let max_regress: f64 = arg_value(&args, "--max-regress")
         .and_then(|s| s.parse().ok())
         .unwrap_or(25.0);
@@ -288,6 +305,59 @@ fn main() {
     }
 
     let mut failed = false;
+    if let Some(thr_path) = &ratios_path {
+        // The machine-independent gate (ISSUE 5): every compared quantity
+        // is either a same-binary speedup ratio or a deterministic
+        // simulation byte count, so the committed thresholds are
+        // *requirements* that hold on any runner — no seeding run needed,
+        // armed from day one. (min, measured-must-be-at-least) vs
+        // (max, measured-must-be-at-most):
+        let checks: [(&str, f64, bool); 5] = [
+            ("min_speedup_engine_bfs", ratio("engine-bfs"), true),
+            ("min_speedup_engine_sssp", ratio("engine-sssp"), true),
+            ("min_speedup_sim_parallel", speedup_sim_parallel, true),
+            ("max_dist_comm_bytes_per_round", dist_bytes_per_round, false),
+            ("max_dist_comm_bytes_inter_per_round", dist_inter_per_round, false),
+        ];
+        let mut missing: Vec<&str> = Vec::new();
+        for (key, measured, is_min) in checks {
+            match read_metric(thr_path, key) {
+                None => missing.push(key),
+                Some(threshold) => {
+                    // NaN measurements (missing case) must fail, not pass.
+                    let ok = if is_min {
+                        measured >= threshold
+                    } else {
+                        measured <= threshold
+                    };
+                    if ok {
+                        println!(
+                            "ratio gate ok: {key:<38} measured {measured:.2} \
+                             vs threshold {threshold:.2}"
+                        );
+                    } else {
+                        eprintln!(
+                            "RATIO GATE: {key}: measured {measured:.2} violates \
+                             the committed threshold {threshold:.2} ({thr_path}). \
+                             If this is an accepted trade-off, update the \
+                             threshold in the same PR with the artifact as \
+                             evidence; otherwise fix the regression."
+                        );
+                        failed = true;
+                    }
+                }
+            }
+        }
+        if !missing.is_empty() {
+            eprintln!(
+                "MISSING THRESHOLDS: {thr_path} lacks {} — the ratio gate \
+                 must never silently skip. Add the keys with the required \
+                 bounds (see the committed BENCH_hotpath.json).",
+                missing.join(", ")
+            );
+            failed = true;
+        }
+    }
     if let Some(base_path) = &check_path {
         match read_json(base_path) {
             Ok(base) if base.is_empty() => {

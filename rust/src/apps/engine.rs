@@ -76,6 +76,23 @@ pub struct EngineConfig {
     pub sim_threads: usize,
 }
 
+impl EngineConfig {
+    /// Builder-style balancer swap — the thin entry the campaign runner
+    /// and CLI use to derive a cell's config from the defaults without
+    /// re-spelling the whole struct.
+    pub fn with_balancer(mut self, balancer: Balancer) -> Self {
+        self.balancer = balancer;
+        self
+    }
+
+    /// Builder-style pool-width override (see
+    /// [`sim_threads`](Self::sim_threads)).
+    pub fn with_sim_threads(mut self, sim_threads: usize) -> Self {
+        self.sim_threads = sim_threads;
+        self
+    }
+}
+
 impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {

@@ -1,0 +1,334 @@
+//! The `CAMPAIGN.json` artifact: deterministic writer, resumable reader,
+//! and the golden comparison behind CI's `sweep-smoke` gate.
+//!
+//! Schema (version 1) — all keys sorted (the [`Json`] writer uses a
+//! BTreeMap), so output is byte-deterministic given the same results:
+//!
+//! ```json
+//! {
+//!   "campaign": "sweep",
+//!   "cells": [
+//!     {
+//!       "app": "bfs", "balancer": "alb",
+//!       "comm_bytes": 0, "comm_bytes_inter": 0, "comm_bytes_intra": 0,
+//!       "gpus": 1, "host_ms": 12.5, "id": "bfs/rmat18/alb/-/1",
+//!       "imbalance_factor": 3.5, "input": "rmat18",
+//!       "labels_hash": "0123456789abcdef", "policy": "-",
+//!       "rounds": 17, "simulated_ms": 1.25, "total_cycles": 123456
+//!     }
+//!   ],
+//!   "scale_delta": 0, "schema_version": 1, "seed": 42, "smoke": true
+//! }
+//! ```
+//!
+//! The reader is a line scanner matched to our own writer (same approach
+//! as [`crate::metrics::bench::read_json`]): within a cell object the
+//! sorted keys end at `total_cycles`, which closes the record. Top-level
+//! and cell key sets are disjoint, so no nesting state is needed.
+//!
+//! Every numeric field except `host_ms` is a simulation output and
+//! bit-deterministic; `labels_hash` is the golden-comparison key. Cycle
+//! counts are stored through f64 (exact below 2^53 — far above any
+//! simulated run).
+
+use std::io;
+use std::path::Path;
+
+use crate::metrics::Json;
+
+use super::runner::CellResult;
+use super::spec::CampaignSpec;
+
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// A parsed `CAMPAIGN.json` (artifact or golden).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CampaignFile {
+    pub schema_version: u64,
+    pub seed: u64,
+    pub scale_delta: i64,
+    pub smoke: bool,
+    pub cells: Vec<CellResult>,
+}
+
+impl CampaignFile {
+    /// Resume compatibility: an artifact written under a different seed,
+    /// scale, or smoke flag must not silently seed a resume.
+    pub fn matches_spec(&self, spec: &CampaignSpec) -> bool {
+        self.schema_version == SCHEMA_VERSION
+            && self.seed == spec.seed
+            && self.scale_delta == spec.scale_delta as i64
+            && self.smoke == spec.smoke
+    }
+}
+
+fn cell_json(c: &CellResult) -> Json {
+    Json::obj()
+        .set("app", c.app.as_str())
+        .set("balancer", c.balancer.as_str())
+        .set("comm_bytes", c.comm_bytes)
+        .set("comm_bytes_inter", c.comm_bytes_inter)
+        .set("comm_bytes_intra", c.comm_bytes_intra)
+        .set("gpus", c.gpus)
+        .set("host_ms", c.host_ms)
+        .set("id", c.id.as_str())
+        .set("imbalance_factor", c.imbalance_factor)
+        .set("input", c.input.as_str())
+        .set("labels_hash", c.labels_hash.as_str())
+        .set("policy", c.policy.as_str())
+        .set("rounds", c.rounds)
+        .set("simulated_ms", c.simulated_ms)
+        .set("total_cycles", c.total_cycles)
+}
+
+/// Build the artifact document.
+pub fn to_json(spec: &CampaignSpec, cells: &[CellResult]) -> Json {
+    Json::obj()
+        .set("campaign", "sweep")
+        .set("cells", Json::Arr(cells.iter().map(cell_json).collect()))
+        .set("scale_delta", spec.scale_delta as i64)
+        .set("schema_version", SCHEMA_VERSION)
+        .set("seed", spec.seed)
+        .set("smoke", spec.smoke)
+}
+
+/// Write the artifact (pretty-printed, trailing newline).
+pub fn write(path: &Path, spec: &CampaignSpec, cells: &[CellResult]) -> io::Result<()> {
+    let mut s = to_json(spec, cells).to_string_pretty();
+    s.push('\n');
+    std::fs::write(path, s)
+}
+
+/// Read an artifact back. Unknown keys are ignored; a malformed file
+/// yields a `CampaignFile` that fails [`CampaignFile::matches_spec`].
+pub fn read(path: &Path) -> io::Result<CampaignFile> {
+    Ok(parse(&std::fs::read_to_string(path)?))
+}
+
+/// Parse the writer's output (line scanner; see module docs).
+pub fn parse(text: &str) -> CampaignFile {
+    let mut file = CampaignFile::default();
+    let mut cur = CellResult::default();
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        let Some((key, value)) = line.split_once(':') else { continue };
+        let key = key.trim().trim_matches('"');
+        let value = value.trim();
+        let unquoted = || value.trim_matches('"').to_string();
+        match key {
+            // top level
+            "schema_version" => file.schema_version = value.parse().unwrap_or(0),
+            "seed" => file.seed = value.parse().unwrap_or(0),
+            "scale_delta" => file.scale_delta = value.parse().unwrap_or(0),
+            "smoke" => file.smoke = value == "true",
+            // cell fields (sorted; total_cycles closes the record)
+            "app" => cur.app = unquoted(),
+            "balancer" => cur.balancer = unquoted(),
+            "comm_bytes" => cur.comm_bytes = value.parse().unwrap_or(0),
+            "comm_bytes_inter" => cur.comm_bytes_inter = value.parse().unwrap_or(0),
+            "comm_bytes_intra" => cur.comm_bytes_intra = value.parse().unwrap_or(0),
+            "gpus" => cur.gpus = value.parse().unwrap_or(0),
+            "host_ms" => cur.host_ms = value.parse().unwrap_or(0.0),
+            "id" => cur.id = unquoted(),
+            "imbalance_factor" => cur.imbalance_factor = value.parse().unwrap_or(0.0),
+            "input" => cur.input = unquoted(),
+            "labels_hash" => cur.labels_hash = unquoted(),
+            "policy" => cur.policy = unquoted(),
+            "rounds" => cur.rounds = value.parse().unwrap_or(0),
+            "simulated_ms" => cur.simulated_ms = value.parse().unwrap_or(0.0),
+            "total_cycles" => {
+                cur.total_cycles = value.parse().unwrap_or(0);
+                file.cells.push(std::mem::take(&mut cur));
+            }
+            _ => {}
+        }
+    }
+    file
+}
+
+/// What a golden comparison found.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GoldenReport {
+    /// Cells whose non-empty golden hash was compared (and matched).
+    pub seeded: usize,
+    /// Golden cells whose `labels_hash` is still empty.
+    pub unseeded: usize,
+}
+
+/// Compare sweep results against a golden artifact.
+///
+/// * the ordered cell-id lists must match exactly (the golden pins the
+///   matrix enumeration itself);
+/// * every golden cell with a non-empty `labels_hash` must match the
+///   produced hash;
+/// * a golden with *zero* seeded hashes is a LOUD error (the gate must
+///   never silently pass unarmed) — the message carries the seeding
+///   recipe, mirroring the bench gate's empty-baseline policy.
+pub fn check_golden(
+    results: &[CellResult],
+    golden: &CampaignFile,
+    golden_path: &str,
+) -> Result<GoldenReport, String> {
+    let got: Vec<&str> = results.iter().map(|c| c.id.as_str()).collect();
+    let want: Vec<&str> = golden.cells.iter().map(|c| c.id.as_str()).collect();
+    if got != want {
+        let diverge = got
+            .iter()
+            .zip(&want)
+            .position(|(a, b)| a != b)
+            .unwrap_or(got.len().min(want.len()));
+        return Err(format!(
+            "GOLDEN MATRIX MISMATCH: produced {} cells, {golden_path} lists {} \
+             (first divergence at index {diverge}: produced {:?}, golden {:?}). \
+             The golden pins the smoke enumeration — regenerate it from a fresh \
+             `alb sweep --smoke` artifact if the matrix changed intentionally.",
+            got.len(),
+            want.len(),
+            got.get(diverge).copied().unwrap_or("<none>"),
+            want.get(diverge).copied().unwrap_or("<none>"),
+        ));
+    }
+    let mut report = GoldenReport { seeded: 0, unseeded: 0 };
+    let mut mismatches = Vec::new();
+    for (r, g) in results.iter().zip(&golden.cells) {
+        if g.labels_hash.is_empty() {
+            report.unseeded += 1;
+        } else if g.labels_hash == r.labels_hash {
+            report.seeded += 1;
+        } else {
+            mismatches.push(format!(
+                "  {}: produced {} vs golden {}",
+                r.id, r.labels_hash, g.labels_hash
+            ));
+        }
+    }
+    if !mismatches.is_empty() {
+        return Err(format!(
+            "GOLDEN HASH MISMATCH ({} cells):\n{}",
+            mismatches.len(),
+            mismatches.join("\n")
+        ));
+    }
+    if report.seeded == 0 {
+        return Err(format!(
+            "UNSEEDED GOLDEN: {golden_path} lists the matrix but no \
+             labels-hashes, so the value gate cannot run. To seed it, commit \
+             exactly one artifact:\n\
+             1. open any CI run's `sweep-smoke` job and download the \
+             `CAMPAIGN` artifact (it contains `CAMPAIGN.ci.json`);\n\
+             2. `cp CAMPAIGN.ci.json {golden_path}`\n\
+             3. `git add {golden_path}` and commit.\n\
+             (Equivalently, run `alb sweep --smoke --resume false --out \
+             {golden_path}` anywhere — hashes are machine-independent.)"
+        ));
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_cells() -> Vec<CellResult> {
+        vec![
+            CellResult {
+                id: "bfs/rmat18/twc/-/1".into(),
+                app: "bfs".into(),
+                input: "rmat18".into(),
+                balancer: "twc".into(),
+                policy: "-".into(),
+                gpus: 1,
+                labels_hash: "00112233aabbccdd".into(),
+                rounds: 9,
+                total_cycles: 123_456,
+                imbalance_factor: 2.5,
+                comm_bytes: 0,
+                comm_bytes_intra: 0,
+                comm_bytes_inter: 0,
+                simulated_ms: 0.75,
+                host_ms: 10.25,
+            },
+            CellResult {
+                id: "bfs/rmat18/twc/cvc/4".into(),
+                app: "bfs".into(),
+                input: "rmat18".into(),
+                balancer: "twc".into(),
+                policy: "cvc".into(),
+                gpus: 4,
+                labels_hash: "00112233aabbccdd".into(),
+                rounds: 11,
+                total_cycles: 98_765,
+                imbalance_factor: 1.25,
+                comm_bytes: 4096,
+                comm_bytes_intra: 4096,
+                comm_bytes_inter: 0,
+                simulated_ms: 0.5,
+                host_ms: 20.5,
+            },
+        ]
+    }
+
+    #[test]
+    fn roundtrip_is_lossless() {
+        let spec = CampaignSpec::smoke();
+        let cells = sample_cells();
+        let text = to_json(&spec, &cells).to_string_pretty();
+        let parsed = parse(&text);
+        assert_eq!(parsed.schema_version, SCHEMA_VERSION);
+        assert_eq!(parsed.seed, spec.seed);
+        assert_eq!(parsed.scale_delta, spec.scale_delta as i64);
+        assert!(parsed.smoke);
+        assert_eq!(parsed.cells, cells);
+        assert!(parsed.matches_spec(&spec));
+        // Reserialization is byte-identical (determinism backbone).
+        assert_eq!(to_json(&spec, &parsed.cells).to_string_pretty(), text);
+    }
+
+    #[test]
+    fn spec_fingerprint_guards_resume() {
+        let spec = CampaignSpec::smoke();
+        let parsed = parse(&to_json(&spec, &[]).to_string_pretty());
+        let mut other = spec.clone();
+        other.seed = 7;
+        assert!(!parsed.matches_spec(&other));
+        let mut other = spec.clone();
+        other.scale_delta = -2;
+        assert!(!parsed.matches_spec(&other));
+        let mut other = spec.clone();
+        other.smoke = false;
+        assert!(!parsed.matches_spec(&other));
+    }
+
+    #[test]
+    fn golden_check_modes() {
+        let cells = sample_cells();
+        let mut golden = CampaignFile {
+            schema_version: SCHEMA_VERSION,
+            seed: 42,
+            scale_delta: 0,
+            smoke: true,
+            cells: cells.clone(),
+        };
+        // Fully seeded: both compared, no unseeded.
+        let rep = check_golden(&cells, &golden, "G").unwrap();
+        assert_eq!(rep, GoldenReport { seeded: 2, unseeded: 0 });
+        // Partially seeded still passes.
+        golden.cells[1].labels_hash = String::new();
+        let rep = check_golden(&cells, &golden, "G").unwrap();
+        assert_eq!(rep, GoldenReport { seeded: 1, unseeded: 1 });
+        // Entirely unseeded is a loud error with the seeding recipe.
+        golden.cells[0].labels_hash = String::new();
+        let err = check_golden(&cells, &golden, "G").unwrap_err();
+        assert!(err.contains("UNSEEDED GOLDEN"), "{err}");
+        assert!(err.contains("CAMPAIGN.ci.json"), "{err}");
+        // Hash mismatch names the cell.
+        golden.cells[0].labels_hash = "ffffffffffffffff".into();
+        let err = check_golden(&cells, &golden, "G").unwrap_err();
+        assert!(err.contains("GOLDEN HASH MISMATCH"), "{err}");
+        assert!(err.contains("bfs/rmat18/twc/-/1"), "{err}");
+        // Matrix drift names the first divergence.
+        golden.cells.pop();
+        let err = check_golden(&cells, &golden, "G").unwrap_err();
+        assert!(err.contains("GOLDEN MATRIX MISMATCH"), "{err}");
+    }
+}

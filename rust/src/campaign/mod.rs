@@ -1,0 +1,33 @@
+//! The scenario-matrix campaign runner (`alb sweep`, DESIGN.md §11).
+//!
+//! The paper's contribution is validated by an evaluation *matrix* — five
+//! application variants × the Table 1 inputs × every load-balancing
+//! strategy × partition policy × GPU count (§6) — and this module turns
+//! that matrix into a first-class enumerable surface instead of a pile of
+//! ad-hoc `alb run` invocations:
+//!
+//! * [`spec`] — the declarative [`CampaignSpec`]: which values each
+//!   dimension takes, CLI-grade filters, the `--smoke` subset, and the
+//!   deterministic [`Cell`] enumeration order;
+//! * [`runner`] — executes cells on the shared [`crate::exec::Pool`]
+//!   machinery (single-GPU cells through [`crate::apps::engine::run`],
+//!   multi-GPU cells through [`crate::coordinator::run_distributed`]) and
+//!   captures each cell's labels-hash, total cycles, imbalance factor and
+//!   communication volume into a [`CellResult`];
+//! * [`artifact`] — the machine-readable `CAMPAIGN.json` schema
+//!   (deterministic sorted-key output, resumable line-scanner reader, and
+//!   the golden-comparison used by CI's `sweep-smoke` gate).
+//!
+//! Every recorded quantity except `host_ms` is a simulation output —
+//! bit-deterministic for any pool width and exec mode — so campaign
+//! artifacts are comparable across machines, and the committed
+//! `CAMPAIGN.golden.json` plus [`crate::repro::check_campaign_invariants`]
+//! give every future PR a whole-matrix regression oracle.
+
+pub mod artifact;
+pub mod runner;
+pub mod spec;
+
+pub use artifact::{check_golden, CampaignFile, GoldenReport};
+pub use runner::{run_sweep, CellResult, SweepOutcome};
+pub use spec::{AppVariant, CampaignSpec, Cell, ALL_VARIANTS};

@@ -1,0 +1,300 @@
+//! Campaign execution: run matrix cells through the engine/coordinator
+//! entry points and capture per-cell metrics.
+//!
+//! Cells are executed in the spec's canonical order (input-major, so each
+//! input graph is generated once and reused); cells whose id already
+//! appears in the `prior` map — loaded from an existing `CAMPAIGN.json` —
+//! are skipped and their recorded result carried over verbatim, which is
+//! what makes a sweep resumable (DESIGN.md §11 resume rules). After every
+//! executed cell the whole artifact is rewritten to the checkpoint path,
+//! so an interrupted sweep loses at most one cell.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::apps::engine::{self, EngineConfig};
+use crate::coordinator::{run_distributed, ClusterConfig};
+use crate::graph::{inputs, CsrGraph};
+use crate::metrics::labels_hash;
+
+use super::artifact;
+use super::spec::{CampaignSpec, Cell};
+
+/// One executed (or resumed) cell's record — exactly the fields the
+/// `CAMPAIGN.json` artifact stores. All dimension fields are plain strings
+/// so resumed results roundtrip bit-for-bit through the artifact.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CellResult {
+    /// `app/input/balancer/policy/gpus` (see [`Cell::id`]).
+    pub id: String,
+    pub app: String,
+    pub input: String,
+    pub balancer: String,
+    /// Partition policy name, `-` for single-GPU cells.
+    pub policy: String,
+    pub gpus: u32,
+    /// FNV-1a over the final labels' f32 bit patterns, 16 hex digits —
+    /// machine-independent (labels are bit-deterministic).
+    pub labels_hash: String,
+    pub rounds: u64,
+    pub total_cycles: u64,
+    /// Single-GPU cells: peak per-kernel thread-block imbalance (the
+    /// paper's Figure 1/5 quantity). Multi-GPU cells: max/mean of per-GPU
+    /// compute cycles.
+    pub imbalance_factor: f64,
+    /// Total / intra-host / inter-host exchanged bytes (0 for single-GPU).
+    pub comm_bytes: u64,
+    pub comm_bytes_intra: u64,
+    pub comm_bytes_inter: u64,
+    pub simulated_ms: f64,
+    /// Host wall-clock for the cell — the one machine-dependent field
+    /// (excluded from golden comparison; carried verbatim on resume).
+    pub host_ms: f64,
+}
+
+/// The outcome of one sweep invocation.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    /// All cells in canonical order (executed and resumed alike).
+    pub results: Vec<CellResult>,
+    pub executed: usize,
+    pub skipped: usize,
+}
+
+/// Execute one cell on `g` (the already-built input graph).
+pub fn run_cell(cell: &Cell, spec: &CampaignSpec, g: &mut CsrGraph) -> Result<CellResult> {
+    let t0 = Instant::now();
+    let mut cfg = EngineConfig::default()
+        .with_balancer(cell.balancer.clone())
+        .with_sim_threads(spec.sim_threads);
+    cfg.max_rounds = 1_000_000; // converge on every input scale
+    cell.app.configure(&mut cfg, spec.sssp_delta);
+    let src = inputs::source_vertex(cell.input, g);
+
+    let mut r = CellResult {
+        id: cell.id(),
+        app: cell.app.name().to_string(),
+        input: cell.input.to_string(),
+        balancer: cell.balancer.name().to_string(),
+        policy: cell.policy.map(|p| p.name()).unwrap_or("-").to_string(),
+        gpus: cell.gpus,
+        ..CellResult::default()
+    };
+
+    if cell.gpus <= 1 {
+        // Per-block kernel stats feed the imbalance factor.
+        cfg.record_blocks = true;
+        let run = engine::run(cell.app.app(), g, src, &cfg, None)?;
+        r.labels_hash = format!("{:016x}", labels_hash(&run.labels));
+        r.rounds = run.rounds.len() as u64;
+        r.total_cycles = run.total_cycles;
+        r.simulated_ms = run.ms(&cfg.spec);
+        r.imbalance_factor = run
+            .rounds
+            .iter()
+            .flat_map(|rec| rec.kernels.iter().flatten())
+            .map(|k| k.imbalance_factor())
+            .fold(1.0f64, f64::max);
+    } else {
+        let policy = cell
+            .policy
+            .ok_or_else(|| anyhow!("multi-GPU cell {} without a policy", r.id))?;
+        let cluster = ClusterConfig::new(cell.gpus, policy, None, spec.exec);
+        let run = run_distributed(cell.app.app(), g, src, &cfg, &cluster, None)?;
+        r.labels_hash = format!("{:016x}", labels_hash(&run.labels));
+        r.rounds = run.rounds.len() as u64;
+        r.total_cycles = run.total_cycles;
+        r.simulated_ms = run.ms(&cfg.spec);
+        r.comm_bytes = run.comm_bytes;
+        r.comm_bytes_intra = run.comm_bytes_intra;
+        r.comm_bytes_inter = run.comm_bytes_inter;
+        let max = run.per_gpu_comp.iter().copied().max().unwrap_or(0) as f64;
+        let sum: u64 = run.per_gpu_comp.iter().sum();
+        let mean = sum as f64 / run.per_gpu_comp.len().max(1) as f64;
+        r.imbalance_factor = if mean > 0.0 { max / mean } else { 1.0 };
+    }
+    r.host_ms = t0.elapsed().as_secs_f64() * 1e3;
+    Ok(r)
+}
+
+/// Run the whole sweep. `prior` maps cell id → previously recorded result
+/// (resume); `checkpoint` is rewritten after every executed cell and once
+/// at the end; `each(result, executed)` is called per cell in order
+/// (`executed = false` for resumed cells).
+///
+/// Prior cells *outside* this spec's enumeration (e.g. a full-matrix
+/// artifact resumed with a narrower `--apps` filter) are never dropped:
+/// every checkpoint rewrite re-appends them after the enumerated cells,
+/// sorted by id, so a filtered continuation cannot destroy recorded
+/// results. The returned [`SweepOutcome::results`] holds the enumerated
+/// cells only.
+pub fn run_sweep(
+    spec: &CampaignSpec,
+    prior: &HashMap<String, CellResult>,
+    checkpoint: Option<&Path>,
+    mut each: impl FnMut(&CellResult, bool),
+) -> Result<SweepOutcome> {
+    let cells = spec.cells();
+    // Recorded results that this (possibly filtered) enumeration does not
+    // cover — preserved verbatim in every artifact rewrite.
+    let extras: Vec<CellResult> = {
+        let ids: std::collections::HashSet<String> =
+            cells.iter().map(|c| c.id()).collect();
+        let mut keep: Vec<CellResult> = prior
+            .values()
+            .filter(|c| !ids.contains(&c.id))
+            .cloned()
+            .collect();
+        keep.sort_by(|a, b| a.id.cmp(&b.id));
+        keep
+    };
+    let write_checkpoint = |results: &[CellResult]| -> Result<()> {
+        let Some(path) = checkpoint else { return Ok(()) };
+        if extras.is_empty() {
+            artifact::write(path, spec, results)?;
+        } else {
+            let mut all = Vec::with_capacity(results.len() + extras.len());
+            all.extend_from_slice(results);
+            all.extend_from_slice(&extras);
+            artifact::write(path, spec, &all)?;
+        }
+        Ok(())
+    };
+
+    let mut results: Vec<CellResult> = Vec::with_capacity(cells.len());
+    let (mut executed, mut skipped) = (0usize, 0usize);
+    // One built graph at a time; cells are input-major so this is at most
+    // one generation per input.
+    let mut cache: Option<(&'static str, CsrGraph)> = None;
+
+    for cell in &cells {
+        let id = cell.id();
+        if let Some(prev) = prior.get(&id) {
+            skipped += 1;
+            results.push(prev.clone());
+            each(results.last().unwrap(), false);
+            continue;
+        }
+        let needs_build = !matches!(&cache, Some((name, _)) if *name == cell.input);
+        if needs_build {
+            let g = inputs::build(cell.input, spec.scale_delta, spec.seed)
+                .ok_or_else(|| anyhow!("unknown input preset {}", cell.input))?;
+            cache = Some((cell.input, g));
+        }
+        let (_, g) = cache.as_mut().unwrap();
+        let r = run_cell(cell, spec, g)?;
+        executed += 1;
+        results.push(r);
+        each(results.last().unwrap(), true);
+        write_checkpoint(&results)?;
+    }
+    write_checkpoint(&results)?;
+    Ok(SweepOutcome { results, executed, skipped })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::spec::AppVariant;
+    use crate::lb::Balancer;
+    use crate::partition::Policy;
+
+    fn tiny_spec() -> CampaignSpec {
+        let mut s = CampaignSpec::smoke();
+        s.scale_delta = -5;
+        s.sim_threads = 2;
+        s
+    }
+
+    #[test]
+    fn single_and_distributed_cells_capture_metrics() {
+        let spec = tiny_spec();
+        let mut g = inputs::build("rmat18", spec.scale_delta, spec.seed).unwrap();
+        let single = Cell {
+            app: AppVariant::Bfs,
+            input: "rmat18",
+            balancer: Balancer::Twc,
+            policy: None,
+            gpus: 1,
+        };
+        let r = run_cell(&single, &spec, &mut g).unwrap();
+        assert_eq!(r.id, "bfs/rmat18/twc/-/1");
+        assert_eq!(r.labels_hash.len(), 16);
+        assert!(r.rounds > 0 && r.total_cycles > 0);
+        assert!(r.imbalance_factor >= 1.0);
+        assert_eq!(r.comm_bytes, 0);
+
+        let dist = Cell { policy: Some(Policy::Cvc), gpus: 4, ..single.clone() };
+        let d = run_cell(&dist, &spec, &mut g).unwrap();
+        assert_eq!(d.id, "bfs/rmat18/twc/cvc/4");
+        assert!(d.comm_bytes > 0, "4-GPU bfs must exchange bytes");
+        assert_eq!(d.comm_bytes, d.comm_bytes_intra + d.comm_bytes_inter);
+        assert_eq!(d.comm_bytes_inter, 0, "single-host cluster is all intra");
+        // Labels agree between single and distributed bfs (same fixpoint).
+        assert_eq!(r.labels_hash, d.labels_hash);
+    }
+
+    #[test]
+    fn resume_skips_prior_cells() {
+        let mut spec = tiny_spec();
+        spec.filter_inputs("road-s").unwrap();
+        spec.filter_apps("kcore").unwrap();
+        let full = run_sweep(&spec, &HashMap::new(), None, |_, _| {}).unwrap();
+        assert_eq!(full.executed, spec.cells().len());
+        assert_eq!(full.skipped, 0);
+
+        let prior: HashMap<String, CellResult> = full
+            .results
+            .iter()
+            .map(|r| (r.id.clone(), r.clone()))
+            .collect();
+        let mut seen_exec = 0;
+        let again = run_sweep(&spec, &prior, None, |_, executed| {
+            if executed {
+                seen_exec += 1;
+            }
+        })
+        .unwrap();
+        assert_eq!(again.executed, 0);
+        assert_eq!(seen_exec, 0);
+        assert_eq!(again.skipped, full.results.len());
+        assert_eq!(again.results, full.results, "resume carries results verbatim");
+    }
+
+    #[test]
+    fn narrowed_resume_preserves_out_of_filter_cells() {
+        // Regression: resuming a recorded artifact with a NARROWER filter
+        // must not rewrite away the cells outside the filter.
+        let mut spec = tiny_spec();
+        spec.filter_inputs("road-s").unwrap();
+        spec.filter_apps("kcore").unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("alb-runner-narrow-{}.json", std::process::id()));
+        let full = run_sweep(&spec, &HashMap::new(), Some(&path), |_, _| {}).unwrap();
+        let n_all = full.results.len();
+
+        let prior: HashMap<String, CellResult> = full
+            .results
+            .iter()
+            .map(|r| (r.id.clone(), r.clone()))
+            .collect();
+        let mut narrow = spec.clone();
+        narrow.filter_balancers("twc").unwrap();
+        let n_narrow = narrow.cells().len();
+        assert!(n_narrow < n_all);
+        let out = run_sweep(&narrow, &prior, Some(&path), |_, _| {}).unwrap();
+        assert_eq!(out.results.len(), n_narrow);
+
+        let reread = artifact::read(&path).unwrap();
+        assert_eq!(reread.cells.len(), n_all, "out-of-filter cells were dropped");
+        let mut want: Vec<String> = full.results.iter().map(|r| r.id.clone()).collect();
+        let mut got: Vec<String> = reread.cells.iter().map(|c| c.id.clone()).collect();
+        want.sort();
+        got.sort();
+        assert_eq!(got, want);
+        let _ = std::fs::remove_file(&path);
+    }
+}

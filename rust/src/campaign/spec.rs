@@ -1,0 +1,429 @@
+//! Declarative campaign specification and deterministic cell enumeration.
+//!
+//! A [`CampaignSpec`] names the values each matrix dimension takes; its
+//! [`cells`](CampaignSpec::cells) enumeration is the single source of truth
+//! for cell ordering — the runner, the artifact, the committed golden, and
+//! the resume logic all follow it. Matrix semantics (DESIGN.md §11):
+//!
+//! * single-GPU cells carry no partition-policy dimension (`policy: None`,
+//!   rendered `-` in ids), so the 1-GPU column is not multiplied by the
+//!   policy list;
+//! * the direction-optimizing bfs and delta-stepping sssp variants are
+//!   single-GPU engines (the coordinator's push driver implements the plain
+//!   chaotic relaxation), so their multi-GPU cells are skipped rather than
+//!   silently running a different algorithm.
+
+use crate::coordinator::ExecMode;
+use crate::exec;
+use crate::graph::inputs;
+use crate::lb::{Balancer, Distribution};
+use crate::partition::Policy;
+
+const APPS_HELP: &str = "bfs, bfs-dopt, sssp-delta, pr, kcore";
+const BALANCERS_HELP: &str = "vertex, twc, edge-lb, alb, enterprise";
+const POLICIES_HELP: &str = "oec, iec, cvc";
+
+/// One application *variant*: an [`crate::apps::App`] plus the engine
+/// options that change its algorithm (direction-optimizing bfs,
+/// delta-stepping sssp). These are the five columns of the campaign
+/// matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AppVariant {
+    Bfs,
+    BfsDopt,
+    SsspDelta,
+    Pr,
+    Kcore,
+}
+
+/// All variants, in matrix order.
+pub const ALL_VARIANTS: [AppVariant; 5] = [
+    AppVariant::Bfs,
+    AppVariant::BfsDopt,
+    AppVariant::SsspDelta,
+    AppVariant::Pr,
+    AppVariant::Kcore,
+];
+
+/// PageRank cells cap their round count like the repro harness does (the
+/// tolerance stop usually fires much earlier).
+pub const PR_MAX_ROUNDS: u32 = 100;
+
+impl AppVariant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AppVariant::Bfs => "bfs",
+            AppVariant::BfsDopt => "bfs-dopt",
+            AppVariant::SsspDelta => "sssp-delta",
+            AppVariant::Pr => "pr",
+            AppVariant::Kcore => "kcore",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AppVariant> {
+        match s {
+            "bfs" => Some(AppVariant::Bfs),
+            "bfs-dopt" => Some(AppVariant::BfsDopt),
+            "sssp-delta" => Some(AppVariant::SsspDelta),
+            "pr" => Some(AppVariant::Pr),
+            "kcore" => Some(AppVariant::Kcore),
+            _ => None,
+        }
+    }
+
+    /// The underlying application.
+    pub fn app(&self) -> crate::apps::App {
+        match self {
+            AppVariant::Bfs | AppVariant::BfsDopt => crate::apps::App::Bfs,
+            AppVariant::SsspDelta => crate::apps::App::Sssp,
+            AppVariant::Pr => crate::apps::App::Pr,
+            AppVariant::Kcore => crate::apps::App::Kcore,
+        }
+    }
+
+    /// Whether the multi-GPU coordinator implements this variant; the
+    /// matrix skips multi-GPU cells for the single-GPU-only variants.
+    pub fn distributed(&self) -> bool {
+        matches!(self, AppVariant::Bfs | AppVariant::Pr | AppVariant::Kcore)
+    }
+
+    /// Apply the variant's engine options to `cfg`.
+    pub fn configure(&self, cfg: &mut crate::apps::engine::EngineConfig, sssp_delta: f32) {
+        match self {
+            AppVariant::Bfs | AppVariant::Kcore => {}
+            AppVariant::BfsDopt => cfg.bfs_direction_opt = true,
+            AppVariant::SsspDelta => cfg.sssp_delta = Some(sssp_delta),
+            AppVariant::Pr => cfg.max_rounds = PR_MAX_ROUNDS,
+        }
+    }
+}
+
+/// One cell of the campaign matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cell {
+    pub app: AppVariant,
+    pub input: &'static str,
+    pub balancer: Balancer,
+    /// `None` for single-GPU cells (no partitioning dimension).
+    pub policy: Option<Policy>,
+    pub gpus: u32,
+}
+
+impl Cell {
+    /// The cell's stable identifier: `app/input/balancer/policy/gpus`
+    /// (policy is `-` for single-GPU cells). Ids key the artifact's resume
+    /// logic and the golden comparison.
+    pub fn id(&self) -> String {
+        format!(
+            "{}/{}/{}/{}/{}",
+            self.app.name(),
+            self.input,
+            self.balancer.name(),
+            self.policy.map(|p| p.name()).unwrap_or("-"),
+            self.gpus
+        )
+    }
+}
+
+/// Declarative sweep specification: dimension values + run parameters.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    pub apps: Vec<AppVariant>,
+    pub inputs: Vec<&'static str>,
+    pub balancers: Vec<Balancer>,
+    /// Partition policies for multi-GPU cells.
+    pub policies: Vec<Policy>,
+    pub gpu_counts: Vec<u32>,
+    pub scale_delta: i32,
+    pub seed: u64,
+    /// Delta-stepping bucket width for the `sssp-delta` variant.
+    pub sssp_delta: f32,
+    pub sim_threads: usize,
+    pub exec: ExecMode,
+    /// Whether this is the smoke subset (recorded in the artifact; resume
+    /// refuses to mix smoke and full artifacts).
+    pub smoke: bool,
+}
+
+/// Largest accepted simulated-GPU count (matrix filters reject more).
+pub const MAX_GPUS: u32 = 64;
+
+impl CampaignSpec {
+    /// The paper's full evaluation matrix (PAPER.md §6): every variant ×
+    /// every Table 1 input × every balancer × {oec, iec, cvc} × {1, 4, 8,
+    /// 16} GPUs.
+    pub fn full() -> CampaignSpec {
+        CampaignSpec {
+            apps: ALL_VARIANTS.to_vec(),
+            inputs: inputs::ALL_INPUTS.to_vec(),
+            balancers: all_balancers(),
+            policies: vec![Policy::Oec, Policy::Iec, Policy::Cvc],
+            gpu_counts: vec![1, 4, 8, 16],
+            scale_delta: 0,
+            seed: 42,
+            sssp_delta: 25.0,
+            sim_threads: exec::default_threads(),
+            exec: ExecMode::Parallel,
+            smoke: false,
+        }
+    }
+
+    /// The CI smoke subset: one power-law and one road input, the paper's
+    /// headline strategies (TWC vs ALB), CVC at 4 GPUs. Small enough for a
+    /// release-mode CI job, diverse enough to pin every engine driver and
+    /// the coordinator. The committed `CAMPAIGN.golden.json` mirrors this
+    /// enumeration exactly.
+    pub fn smoke() -> CampaignSpec {
+        let alb = Balancer::Alb { distribution: Distribution::Cyclic, threshold: None };
+        CampaignSpec {
+            apps: ALL_VARIANTS.to_vec(),
+            inputs: vec!["rmat18", "road-s"],
+            balancers: vec![Balancer::Twc, alb],
+            policies: vec![Policy::Cvc],
+            gpu_counts: vec![1, 4],
+            smoke: true,
+            ..CampaignSpec::full()
+        }
+    }
+
+    /// Enumerate the matrix in the canonical deterministic order:
+    /// input-major (so the runner builds each graph once), then app,
+    /// balancer, GPU count, and policy innermost.
+    pub fn cells(&self) -> Vec<Cell> {
+        let mut out = Vec::new();
+        for &input in &self.inputs {
+            for &app in &self.apps {
+                for b in &self.balancers {
+                    for &gpus in &self.gpu_counts {
+                        self.push_cells(&mut out, app, input, b, gpus);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// One (app, input, balancer, gpus) point expanded into cells
+    /// (single-GPU: no policy dimension; multi-GPU: one per policy,
+    /// skipped entirely for single-GPU-only variants).
+    fn push_cells(
+        &self,
+        out: &mut Vec<Cell>,
+        app: AppVariant,
+        input: &'static str,
+        b: &Balancer,
+        gpus: u32,
+    ) {
+        if gpus <= 1 {
+            let balancer = b.clone();
+            out.push(Cell { app, input, balancer, policy: None, gpus: 1 });
+            return;
+        }
+        if !app.distributed() {
+            return;
+        }
+        for &p in &self.policies {
+            let (balancer, policy) = (b.clone(), Some(p));
+            out.push(Cell { app, input, balancer, policy, gpus });
+        }
+    }
+
+    /// Restrict the app dimension to a comma-separated list of variant
+    /// names. Unknown names are a CLI-grade error listing the valid set.
+    pub fn filter_apps(&mut self, csv: &str) -> Result<(), String> {
+        let mut keep = Vec::new();
+        for name in csv.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let v = AppVariant::parse(name).ok_or_else(|| {
+                format!("unknown app {name:?} in --apps; valid values: {APPS_HELP}")
+            })?;
+            if !keep.contains(&v) {
+                keep.push(v);
+            }
+        }
+        if keep.is_empty() {
+            return Err(format!("--apps selected nothing; valid values: {APPS_HELP}"));
+        }
+        self.apps = keep;
+        Ok(())
+    }
+
+    /// Restrict the input dimension (values must be Table 1 presets).
+    pub fn filter_inputs(&mut self, csv: &str) -> Result<(), String> {
+        let mut keep: Vec<&'static str> = Vec::new();
+        for name in csv.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let preset = inputs::ALL_INPUTS
+                .iter()
+                .find(|&&p| p == name)
+                .copied()
+                .ok_or_else(|| {
+                    format!(
+                        "unknown input {name:?} in --inputs; valid values: {}",
+                        inputs::ALL_INPUTS.join(", ")
+                    )
+                })?;
+            if !keep.contains(&preset) {
+                keep.push(preset);
+            }
+        }
+        if keep.is_empty() {
+            return Err(format!(
+                "--inputs selected nothing; valid values: {}",
+                inputs::ALL_INPUTS.join(", ")
+            ));
+        }
+        self.inputs = keep;
+        Ok(())
+    }
+
+    /// Restrict the balancer dimension by strategy name.
+    pub fn filter_balancers(&mut self, csv: &str) -> Result<(), String> {
+        let mut keep: Vec<Balancer> = Vec::new();
+        for name in csv.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let b = Balancer::parse(name).ok_or_else(|| {
+                format!(
+                    "unknown balancer {name:?} in --balancers; valid values: \
+                     {BALANCERS_HELP}"
+                )
+            })?;
+            if !keep.contains(&b) {
+                keep.push(b);
+            }
+        }
+        if keep.is_empty() {
+            return Err(format!("--balancers selected nothing; valid values: {BALANCERS_HELP}"));
+        }
+        self.balancers = keep;
+        Ok(())
+    }
+
+    /// Restrict the partition-policy dimension (multi-GPU cells only).
+    pub fn filter_policies(&mut self, csv: &str) -> Result<(), String> {
+        let mut keep: Vec<Policy> = Vec::new();
+        for name in csv.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let p = Policy::parse(name).ok_or_else(|| {
+                format!("unknown policy {name:?} in --policies; valid values: {POLICIES_HELP}")
+            })?;
+            if !keep.contains(&p) {
+                keep.push(p);
+            }
+        }
+        if keep.is_empty() {
+            return Err(format!("--policies selected nothing; valid values: {POLICIES_HELP}"));
+        }
+        self.policies = keep;
+        Ok(())
+    }
+
+    /// Restrict the GPU-count dimension. Values must be in `1..=`
+    /// [`MAX_GPUS`].
+    pub fn filter_gpus(&mut self, csv: &str) -> Result<(), String> {
+        let mut keep: Vec<u32> = Vec::new();
+        for tok in csv.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let k: u32 = tok.parse().map_err(|_| {
+                format!("invalid GPU count {tok:?} in --gpus; valid range: 1..={MAX_GPUS}")
+            })?;
+            if k == 0 || k > MAX_GPUS {
+                return Err(format!("invalid GPU count {k} in --gpus; range: 1..={MAX_GPUS}"));
+            }
+            if !keep.contains(&k) {
+                keep.push(k);
+            }
+        }
+        if keep.is_empty() {
+            return Err(format!("--gpus selected nothing; valid range: 1..={MAX_GPUS}"));
+        }
+        self.gpu_counts = keep;
+        Ok(())
+    }
+}
+
+/// Every `Balancer` variant, cyclic defaults, in CLI order.
+pub fn all_balancers() -> Vec<Balancer> {
+    vec![
+        Balancer::Vertex,
+        Balancer::Twc,
+        Balancer::EdgeLb { distribution: Distribution::Cyclic },
+        Balancer::Alb { distribution: Distribution::Cyclic, threshold: None },
+        Balancer::Enterprise,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn smoke_matrix_shape() {
+        let cells = CampaignSpec::smoke().cells();
+        // Per input: bfs/pr/kcore get 2 balancers x (1 single + 1x cvc@4)
+        // = 4 cells each; bfs-dopt and sssp-delta are single-GPU only
+        // = 2 cells each. 3*4 + 2*2 = 16 per input, two inputs.
+        assert_eq!(cells.len(), 32);
+        let ids: HashSet<String> = cells.iter().map(|c| c.id()).collect();
+        assert_eq!(ids.len(), cells.len(), "cell ids must be unique");
+        assert!(ids.contains("bfs/rmat18/alb/cvc/4"));
+        assert!(ids.contains("bfs/rmat18/alb/-/1"));
+        assert!(!ids.contains("bfs-dopt/rmat18/alb/cvc/4"), "dopt is single-GPU only");
+    }
+
+    #[test]
+    fn full_matrix_shape() {
+        let cells = CampaignSpec::full().cells();
+        // Per input: distributed-capable variants (bfs, pr, kcore) get
+        // 5 balancers x (1 + 3 gpu counts x 3 policies) = 50; the two
+        // single-GPU variants get 5 each. (3*50 + 2*5) * 8 inputs.
+        assert_eq!(cells.len(), (3 * 50 + 2 * 5) * 8);
+    }
+
+    #[test]
+    fn enumeration_is_deterministic() {
+        let a = CampaignSpec::smoke().cells();
+        let b = CampaignSpec::smoke().cells();
+        assert_eq!(a, b);
+        // Input-major ordering: all rmat18 cells precede all road-s cells.
+        let last_rmat = a.iter().rposition(|c| c.input == "rmat18").unwrap();
+        let first_road = a.iter().position(|c| c.input == "road-s").unwrap();
+        assert!(last_rmat < first_road);
+    }
+
+    #[test]
+    fn filters_narrow_and_reject() {
+        let mut s = CampaignSpec::smoke();
+        s.filter_apps("bfs, kcore").unwrap();
+        assert_eq!(s.apps, vec![AppVariant::Bfs, AppVariant::Kcore]);
+        s.filter_inputs("road-s").unwrap();
+        assert_eq!(s.inputs, vec!["road-s"]);
+        s.filter_balancers("alb").unwrap();
+        assert_eq!(s.balancers.len(), 1);
+        s.filter_policies("oec,cvc").unwrap();
+        assert_eq!(s.policies.len(), 2);
+        s.filter_gpus("1,4,4").unwrap();
+        assert_eq!(s.gpu_counts, vec![1, 4]);
+
+        assert!(s.filter_apps("bogus").unwrap_err().contains("bfs-dopt"));
+        assert!(s.filter_inputs("nope").unwrap_err().contains("rmat18"));
+        assert!(s.filter_balancers("nope").unwrap_err().contains("enterprise"));
+        assert!(s.filter_policies("nope").unwrap_err().contains("cvc"));
+        assert!(s.filter_gpus("0").unwrap_err().contains("1..="));
+        assert!(s.filter_gpus("abc").unwrap_err().contains("1..="));
+        assert!(s.filter_gpus("65").unwrap_err().contains("1..="));
+    }
+
+    #[test]
+    fn variant_wiring() {
+        assert_eq!(AppVariant::parse("bfs-dopt"), Some(AppVariant::BfsDopt));
+        assert_eq!(AppVariant::parse("cc"), None);
+        assert!(AppVariant::Bfs.distributed());
+        assert!(!AppVariant::SsspDelta.distributed());
+        let mut cfg = crate::apps::engine::EngineConfig::default();
+        AppVariant::SsspDelta.configure(&mut cfg, 25.0);
+        assert_eq!(cfg.sssp_delta, Some(25.0));
+        let mut cfg = crate::apps::engine::EngineConfig::default();
+        AppVariant::BfsDopt.configure(&mut cfg, 25.0);
+        assert!(cfg.bfs_direction_opt);
+        let mut cfg = crate::apps::engine::EngineConfig::default();
+        AppVariant::Pr.configure(&mut cfg, 25.0);
+        assert_eq!(cfg.max_rounds, PR_MAX_ROUNDS);
+    }
+}

@@ -68,6 +68,26 @@ pub struct ClusterConfig {
 }
 
 impl ClusterConfig {
+    /// Thin constructor for campaign/CLI cells: `gpus_per_host = None`
+    /// models one big host (every link intra-host), `Some(k)` a cluster of
+    /// `k`-GPU hosts.
+    pub fn new(
+        num_gpus: u32,
+        policy: Policy,
+        gpus_per_host: Option<u32>,
+        exec: ExecMode,
+    ) -> Self {
+        ClusterConfig {
+            num_gpus,
+            policy,
+            net: match gpus_per_host {
+                None => NetworkModel::single_host(),
+                Some(k) => NetworkModel::cluster(k),
+            },
+            exec,
+        }
+    }
+
     /// Momentum-like single host with `k` GPUs, CVC partitioning (§5).
     pub fn single_host(k: u32) -> Self {
         ClusterConfig {

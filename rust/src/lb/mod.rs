@@ -61,6 +61,23 @@ pub enum Balancer {
 }
 
 impl Balancer {
+    /// Parse a strategy name (CLI `--balancer`, campaign `--balancers`):
+    /// the inverse of [`name`](Self::name), with cyclic distribution and
+    /// the default ALB threshold. `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Balancer> {
+        match s {
+            "vertex" => Some(Balancer::Vertex),
+            "twc" => Some(Balancer::Twc),
+            "edge-lb" => Some(Balancer::EdgeLb { distribution: Distribution::Cyclic }),
+            "alb" => Some(Balancer::Alb {
+                distribution: Distribution::Cyclic,
+                threshold: None,
+            }),
+            "enterprise" => Some(Balancer::Enterprise),
+            _ => None,
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             Balancer::Vertex => "vertex",
@@ -186,6 +203,19 @@ mod tests {
         assert_eq!(
             Balancer::Alb { distribution: Distribution::Cyclic, threshold: None }.name(),
             "alb"
+        );
+    }
+
+    #[test]
+    fn balancer_parse_inverts_name() {
+        for name in ["vertex", "twc", "edge-lb", "alb", "enterprise"] {
+            let b = Balancer::parse(name).unwrap();
+            assert_eq!(b.name(), name);
+        }
+        assert_eq!(Balancer::parse("bogus"), None);
+        assert_eq!(
+            Balancer::parse("alb"),
+            Some(Balancer::Alb { distribution: Distribution::Cyclic, threshold: None })
         );
     }
 

@@ -16,6 +16,9 @@
 //! * [`lb`] — every load-balancing strategy the paper evaluates (vertex,
 //!   edge, TWC, Gunrock-style static LB) plus ALB itself;
 //! * [`apps`] — bfs, sssp, cc, pagerank, k-core with the round engine;
+//! * [`campaign`] — the scenario-matrix campaign runner behind `alb sweep`:
+//!   declarative spec, deterministic cell enumeration, resumable execution,
+//!   and the `CAMPAIGN.json` artifact with per-cell labels-hashes;
 //! * [`partition`] — CuSP-like OEC / IEC / CVC partitioning;
 //! * [`exec`] — the shared worker pool (std-only) that parallelizes the
 //!   simulation itself: kernel block/warp walks, the ALB inspector's probe
@@ -42,6 +45,7 @@
 //! figure is regenerated and recorded.
 
 pub mod apps;
+pub mod campaign;
 pub mod comm;
 pub mod config;
 pub mod coordinator;

@@ -16,6 +16,11 @@
 //!            [--scale-delta D] [--seed S] [--json <out.json>]
 //! alb repro  <table1|fig1|table2|fig5|fig6|fig7|fig8|fig9|fig10|fig11|all>
 //!            [--out results] [--scale-delta D] [--quick]
+//! alb sweep  [--smoke] [--list] [--apps a,b] [--inputs x,y]
+//!            [--balancers b1,b2] [--policies p1,p2] [--gpus 1,4,8]
+//!            [--scale-delta D] [--seed S] [--delta W] [--sim-threads N]
+//!            [--exec <parallel|sequential>] [--out CAMPAIGN.json]
+//!            [--resume true|false] [--check-golden CAMPAIGN.golden.json]
 //! ```
 //!
 //! Argument parsing is hand-rolled on std (the offline vendored crate set
@@ -29,7 +34,6 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use alb_graph::apps::engine::{self, ComputeMode, EngineConfig};
 use alb_graph::apps::App;
-use alb_graph::comm::NetworkModel;
 use alb_graph::config::Framework;
 use alb_graph::coordinator::{run_distributed, ClusterConfig, ExecMode};
 use alb_graph::gpu::GpuSpec;
@@ -54,8 +58,9 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
-                if key == "quick" {
-                    flags.insert("quick".into(), "true".into());
+                // Value-less boolean flags.
+                if matches!(key, "quick" | "smoke" | "list") {
+                    flags.insert(key.to_string(), "true".into());
                     i += 1;
                     continue;
                 }
@@ -196,14 +201,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.kcore_k = k.parse()?;
     }
     if let Some(b) = args.get("balancer") {
-        cfg.balancer = match b {
-            "vertex" => Balancer::Vertex,
-            "twc" => Balancer::Twc,
-            "edge-lb" => Balancer::EdgeLb { distribution: Distribution::Cyclic },
-            "alb" => Balancer::Alb { distribution: Distribution::Cyclic, threshold: None },
-            "enterprise" => Balancer::Enterprise,
-            other => bail!("unknown --balancer {other}"),
-        };
+        cfg.balancer = Balancer::parse(b).ok_or_else(|| {
+            anyhow!(
+                "unknown --balancer {b}; valid values: \
+                 vertex, twc, edge-lb, alb, enterprise"
+            )
+        })?;
     }
     if args.get("direction-opt").map(|v| v == "true" || v == "1") == Some(true) {
         cfg.bfs_direction_opt = true;
@@ -263,16 +266,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         // The PJRT client is not Sync: the coordinator runs partitions
         // sequentially whenever a runtime is attached, whatever --exec says.
         let effective_exec = if pjrt.is_some() { ExecMode::Sequential } else { exec };
-        let cluster = ClusterConfig {
-            num_gpus: gpus,
+        let cluster = ClusterConfig::new(
+            gpus,
             policy,
-            net: if gpus_per_host == u32::MAX {
-                NetworkModel::single_host()
-            } else {
-                NetworkModel::cluster(gpus_per_host)
-            },
-            exec: effective_exec,
-        };
+            (gpus_per_host != u32::MAX).then_some(gpus_per_host),
+            effective_exec,
+        );
         let r = run_distributed(app, &g, src, &cfg, &cluster, pjrt)?;
         println!(
             "{} on {} [{}] x{} GPUs ({}, {} exec on {} threads): {:.1} simulated ms (comp {:.1} + comm {:.1}), {} rounds ({} host ms)",
@@ -402,10 +401,144 @@ fn cmd_repro(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `alb sweep` — enumerate and execute the scenario matrix (DESIGN.md §11).
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use alb_graph::campaign::{self, artifact, CampaignSpec};
+
+    let mut spec = if args.get("smoke").is_some() {
+        CampaignSpec::smoke()
+    } else {
+        CampaignSpec::full()
+    };
+    spec.scale_delta = args.get_i32("scale-delta", spec.scale_delta)?;
+    spec.seed = args.get_u64("seed", spec.seed)?;
+    spec.sim_threads =
+        alb_graph::exec::parse_threads(args.get("sim-threads")).map_err(|e| anyhow!(e))?;
+    if let Some(e) = args.get("exec") {
+        spec.exec = ExecMode::parse_or_usage(e).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(d) = args.get("delta") {
+        spec.sssp_delta = d.parse().with_context(|| format!("--delta {d}"))?;
+    }
+    // Dimension filters; each rejects unknown values with the valid set.
+    if let Some(v) = args.get("apps") {
+        spec.filter_apps(v).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(v) = args.get("inputs") {
+        spec.filter_inputs(v).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(v) = args.get("balancers") {
+        spec.filter_balancers(v).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(v) = args.get("policies") {
+        spec.filter_policies(v).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(v) = args.get("gpus") {
+        spec.filter_gpus(v).map_err(|e| anyhow!(e))?;
+    }
+
+    let cells = spec.cells();
+    if args.get("list").is_some() {
+        for c in &cells {
+            println!("{}", c.id());
+        }
+        println!("{} cells", cells.len());
+        return Ok(());
+    }
+
+    let out = PathBuf::from(args.get_or("out", "CAMPAIGN.json"));
+    let resume = match args.get("resume") {
+        None | Some("true") | Some("1") => true,
+        Some("false") | Some("0") => false,
+        Some(other) => bail!("--resume true|false (got {other})"),
+    };
+    let mut prior = HashMap::new();
+    if resume && out.exists() {
+        let prev = artifact::read(&out).with_context(|| format!("read {}", out.display()))?;
+        if !prev.matches_spec(&spec) {
+            bail!(
+                "refusing to resume into {}: it records seed {} / scale-delta {} \
+                 / smoke {}, this sweep uses {} / {} / {}; pass --resume false \
+                 to overwrite, or --out for a fresh artifact",
+                out.display(),
+                prev.seed,
+                prev.scale_delta,
+                prev.smoke,
+                spec.seed,
+                spec.scale_delta,
+                spec.smoke,
+            );
+        }
+        for c in prev.cells {
+            prior.insert(c.id.clone(), c);
+        }
+    }
+
+    // Load the golden up front: a mistyped path must fail before the
+    // sweep, not after hours of cell execution.
+    let golden = match args.get("check-golden") {
+        Some(gpath) => {
+            let file = artifact::read(Path::new(gpath))
+                .with_context(|| format!("read golden {gpath}"))?;
+            Some((gpath.to_string(), file))
+        }
+        None => None,
+    };
+
+    let total = cells.len();
+    let started = std::time::Instant::now();
+    let mut done = 0usize;
+    let outcome = campaign::run_sweep(&spec, &prior, Some(&out), |r, executed| {
+        done += 1;
+        println!(
+            "[{done:>4}/{total}] {:<44} {:>6} rounds {:>14} cycles{}",
+            r.id,
+            r.rounds,
+            r.total_cycles,
+            if executed { "" } else { "  (cached)" },
+        );
+    })?;
+
+    // Whole-matrix golden expectations that hold on any machine
+    // (balancer-independence, scale-out label consistency).
+    repro::check_campaign_invariants(&outcome.results).map_err(|e| anyhow!(e))?;
+
+    let mut t = Table::new(&["cell", "rounds", "cycles", "imb", "comm(B)", "inter(B)", "sim ms"]);
+    for r in &outcome.results {
+        t.row(vec![
+            r.id.clone(),
+            r.rounds.to_string(),
+            r.total_cycles.to_string(),
+            format!("{:.2}", r.imbalance_factor),
+            r.comm_bytes.to_string(),
+            r.comm_bytes_inter.to_string(),
+            alb_graph::metrics::table::ms(r.simulated_ms),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "{total} cells ({} executed, {} resumed) in {} host ms -> {}",
+        outcome.executed,
+        outcome.skipped,
+        started.elapsed().as_millis(),
+        out.display(),
+    );
+
+    if let Some((gpath, file)) = &golden {
+        let rep = artifact::check_golden(&outcome.results, file, gpath)
+            .map_err(|e| anyhow!(e))?;
+        println!(
+            "golden ok: {} labels-hashes matched, {} cells await seeding",
+            rep.seeded, rep.unseeded
+        );
+    }
+    Ok(())
+}
+
 fn usage() {
     eprintln!(
         "alb — Adaptive Load Balancer for graph analytics (paper reproduction)\n\
-         usage: alb <props|gen|run|repro> [flags]\n\
+         usage: alb <props|gen|run|sweep|repro> [flags]\n\
          see `rust/src/main.rs` header or README.md for full flag lists"
     );
 }
@@ -427,6 +560,7 @@ fn main() -> ExitCode {
         "props" => cmd_props(&args),
         "gen" => cmd_gen(&args),
         "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
         "repro" => cmd_repro(&args),
         _ => {
             usage();

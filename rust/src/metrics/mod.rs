@@ -8,6 +8,26 @@ pub mod table;
 pub use json::Json;
 pub use table::Table;
 
+/// FNV-1a offset basis (the hash of an empty label array).
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over the little-endian bit patterns of `labels` — the
+/// machine-independent per-cell fingerprint the campaign artifacts record.
+/// Labels are bit-deterministic for any pool width / exec mode
+/// (`rust/tests/parity.rs`), so hashes computed on different machines are
+/// directly comparable.
+pub fn labels_hash(labels: &[f32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &x in labels {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
 /// Load-imbalance summary over per-block edge counts (the quantity the
 /// paper's Figures 1 and 5 plot).
 #[derive(Debug, Clone)]
@@ -73,6 +93,16 @@ mod tests {
         let i = imbalance(&[]);
         assert_eq!(i.max, 0);
         assert!((i.factor - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn labels_hash_is_stable_and_discriminating() {
+        assert_eq!(labels_hash(&[]), FNV_OFFSET);
+        assert_eq!(labels_hash(&[1.0, 2.0]), labels_hash(&[1.0, 2.0]));
+        assert_ne!(labels_hash(&[1.0, 2.0]), labels_hash(&[2.0, 1.0]));
+        assert_ne!(labels_hash(&[0.0]), labels_hash(&[]));
+        // Bit-pattern sensitive: -0.0 and 0.0 differ.
+        assert_ne!(labels_hash(&[-0.0]), labels_hash(&[0.0]));
     }
 
     #[test]

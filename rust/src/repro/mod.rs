@@ -483,6 +483,79 @@ pub fn ablation_gpu(rc: &ReproConfig, apps: &[App]) -> Result<Table> {
     Ok(t)
 }
 
+// ------------------------------------------- campaign golden expectations
+
+/// Repository path of the committed smoke-campaign golden (see
+/// DESIGN.md §11 for the seeding story).
+pub const CAMPAIGN_GOLDEN: &str = "CAMPAIGN.golden.json";
+
+/// Whole-matrix golden expectations for campaign results — the structural
+/// invariants that hold on *any* machine, so they are armed from day one
+/// even before `CAMPAIGN.golden.json` is seeded with exact hashes:
+///
+/// 1. **Balancer independence** (the paper's correctness baseline, §3):
+///    cells that differ only in the balancer produce identical labels, so
+///    their labels-hashes must be equal.
+/// 2. **Scale-out label consistency**: bfs (and its direction-optimizing
+///    variant), delta-stepping sssp, and k-core converge to a unique
+///    fixpoint, so every cell of the same (family, input) — across GPU
+///    counts, policies, and balancers — shares one hash. PageRank is
+///    excluded: its float summation order legitimately depends on the
+///    partition layout (DESIGN.md §10), so only invariant 1 applies to it.
+pub fn check_campaign_invariants(
+    cells: &[crate::campaign::CellResult],
+) -> Result<(), String> {
+    use std::collections::HashMap;
+
+    // 1. Same (app, input, policy, gpus), different balancer => same hash.
+    let mut by_cfg: HashMap<(&str, &str, &str, u32), (&str, &str)> = HashMap::new();
+    for c in cells {
+        let key = (c.app.as_str(), c.input.as_str(), c.policy.as_str(), c.gpus);
+        match by_cfg.get(&key) {
+            None => {
+                by_cfg.insert(key, (c.labels_hash.as_str(), c.id.as_str()));
+            }
+            Some((hash, first_id)) if *hash != c.labels_hash => {
+                return Err(format!(
+                    "balancer-independence violated: {} hashed {} but {} hashed \
+                     {} — balancers must converge to identical labels",
+                    first_id, hash, c.id, c.labels_hash
+                ));
+            }
+            Some(_) => {}
+        }
+    }
+
+    // 2. Unique-fixpoint families agree across balancers, policies, GPUs.
+    let family = |app: &str| -> Option<&'static str> {
+        match app {
+            "bfs" | "bfs-dopt" => Some("bfs"),
+            "sssp-delta" => Some("sssp"),
+            "kcore" => Some("kcore"),
+            _ => None, // pr: partition-dependent float summation order
+        }
+    };
+    let mut by_family: HashMap<(&'static str, &str), (&str, &str)> = HashMap::new();
+    for c in cells {
+        let Some(fam) = family(&c.app) else { continue };
+        let key = (fam, c.input.as_str());
+        match by_family.get(&key) {
+            None => {
+                by_family.insert(key, (c.labels_hash.as_str(), c.id.as_str()));
+            }
+            Some((hash, first_id)) if *hash != c.labels_hash => {
+                return Err(format!(
+                    "scale-out label consistency violated for {fam} on {}: {} \
+                     hashed {} but {} hashed {}",
+                    c.input, first_id, hash, c.id, c.labels_hash
+                ));
+            }
+            Some(_) => {}
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

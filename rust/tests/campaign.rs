@@ -1,0 +1,160 @@
+//! Campaign-runner integration: determinism, resume, golden structure.
+//!
+//! These run the real smoke matrix in-process at a reduced scale
+//! (`scale_delta = -4`, like the other integration suites) so the whole
+//! pipeline — spec enumeration, engine/coordinator execution, artifact
+//! write/read, golden comparison, and the repro invariants — is exercised
+//! by tier-1 `cargo test`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use alb_graph::campaign::{artifact, run_sweep, CampaignSpec, CellResult};
+use alb_graph::repro;
+
+const DELTA: i32 = -4; // small but non-trivial inputs for CI
+
+fn tiny_smoke() -> CampaignSpec {
+    let mut s = CampaignSpec::smoke();
+    s.scale_delta = DELTA;
+    s.sim_threads = 2;
+    s
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("alb-campaign-{}-{name}", std::process::id()))
+}
+
+/// Everything but the machine-dependent wall clock.
+fn deterministic_view(r: &CellResult) -> CellResult {
+    CellResult { host_ms: 0.0, ..r.clone() }
+}
+
+#[test]
+fn smoke_sweep_is_deterministic_resumable_and_invariant() {
+    let spec = tiny_smoke();
+    let n_cells = spec.cells().len();
+    assert_eq!(n_cells, 32, "smoke matrix size is pinned by the golden");
+
+    // Fresh run, checkpointed to disk.
+    let p = tmp("fresh.json");
+    let first = run_sweep(&spec, &HashMap::new(), Some(&p), |_, _| {}).unwrap();
+    assert_eq!(first.executed, n_cells);
+    assert_eq!(first.skipped, 0);
+
+    // The paper's golden expectations hold on any machine.
+    repro::check_campaign_invariants(&first.results).unwrap();
+
+    // A second fresh run reproduces every deterministic field bit-for-bit.
+    let second = run_sweep(&spec, &HashMap::new(), None, |_, _| {}).unwrap();
+    for (a, b) in first.results.iter().zip(&second.results) {
+        assert_eq!(deterministic_view(a), deterministic_view(b), "{}", a.id);
+    }
+
+    // Resuming from the artifact skips every cell and rewrites the file
+    // byte-identically (host_ms is carried verbatim).
+    let before = std::fs::read_to_string(&p).unwrap();
+    let prev = artifact::read(&p).unwrap();
+    assert!(prev.matches_spec(&spec));
+    let prior: HashMap<String, CellResult> =
+        prev.cells.into_iter().map(|c| (c.id.clone(), c)).collect();
+    let resumed = run_sweep(&spec, &prior, Some(&p), |_, _| {}).unwrap();
+    assert_eq!(resumed.executed, 0);
+    assert_eq!(resumed.skipped, n_cells);
+    assert_eq!(resumed.results, first.results);
+    assert_eq!(std::fs::read_to_string(&p).unwrap(), before);
+
+    // A fully-seeded golden (the first artifact itself) passes the check.
+    let golden = artifact::parse(&before);
+    let rep = artifact::check_golden(&first.results, &golden, "first-run").unwrap();
+    assert_eq!(rep.seeded, n_cells);
+    assert_eq!(rep.unseeded, 0);
+
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn partial_artifact_resumes_only_missing_cells() {
+    let spec = tiny_smoke();
+    let mut bfs_only = tiny_smoke();
+    bfs_only.filter_apps("bfs").unwrap();
+    let n_bfs = bfs_only.cells().len();
+    let n_all = spec.cells().len();
+    assert!(n_bfs > 0 && n_bfs < n_all);
+
+    // Seed an artifact with just the bfs cells...
+    let p = tmp("partial.json");
+    run_sweep(&bfs_only, &HashMap::new(), Some(&p), |_, _| {}).unwrap();
+
+    // ...then run the full smoke spec resuming from it: only the missing
+    // cells execute, and the merged result equals a fresh full run on
+    // every deterministic field.
+    let prior: HashMap<String, CellResult> = artifact::read(&p)
+        .unwrap()
+        .cells
+        .into_iter()
+        .map(|c| (c.id.clone(), c))
+        .collect();
+    assert_eq!(prior.len(), n_bfs);
+    let merged = run_sweep(&spec, &prior, Some(&p), |_, _| {}).unwrap();
+    assert_eq!(merged.skipped, n_bfs);
+    assert_eq!(merged.executed, n_all - n_bfs);
+
+    let fresh = run_sweep(&spec, &HashMap::new(), None, |_, _| {}).unwrap();
+    for (a, b) in merged.results.iter().zip(&fresh.results) {
+        assert_eq!(deterministic_view(a), deterministic_view(b), "{}", a.id);
+    }
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn committed_golden_pins_the_smoke_matrix() {
+    // The committed CAMPAIGN.golden.json must list exactly the smoke
+    // enumeration, in order — this arms the structural half of the CI
+    // golden gate inside tier-1 itself (the hash half is seeded from the
+    // first sweep-smoke artifact; see DESIGN.md §11).
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join(repro::CAMPAIGN_GOLDEN);
+    let golden = artifact::read(&path).unwrap();
+    assert_eq!(golden.schema_version, artifact::SCHEMA_VERSION);
+    assert!(golden.smoke, "golden must record the smoke subset");
+
+    let spec = CampaignSpec::smoke();
+    assert_eq!(golden.seed, spec.seed);
+    assert_eq!(golden.scale_delta, spec.scale_delta as i64);
+    let want: Vec<String> = spec.cells().iter().map(|c| c.id()).collect();
+    let got: Vec<String> = golden.cells.iter().map(|c| c.id.clone()).collect();
+    assert_eq!(got, want, "golden cell ids must match the smoke enumeration");
+}
+
+#[test]
+fn invariant_checker_rejects_divergent_labels() {
+    // Two cells differing only in balancer but hashing differently must
+    // trip the balancer-independence invariant.
+    let mk = |balancer: &str, hash: &str| CellResult {
+        id: format!("bfs/rmat18/{balancer}/-/1"),
+        app: "bfs".into(),
+        input: "rmat18".into(),
+        balancer: balancer.into(),
+        policy: "-".into(),
+        gpus: 1,
+        labels_hash: hash.into(),
+        ..CellResult::default()
+    };
+    let ok = vec![mk("twc", "aa"), mk("alb", "aa")];
+    repro::check_campaign_invariants(&ok).unwrap();
+    let bad = vec![mk("twc", "aa"), mk("alb", "bb")];
+    let err = repro::check_campaign_invariants(&bad).unwrap_err();
+    assert!(err.contains("balancer-independence"), "{err}");
+
+    // And bfs cells of the same input must agree across GPU counts.
+    let dist = CellResult {
+        id: "bfs/rmat18/twc/cvc/4".into(),
+        policy: "cvc".into(),
+        gpus: 4,
+        labels_hash: "cc".into(),
+        ..mk("twc", "cc")
+    };
+    let bad = vec![mk("twc", "aa"), dist];
+    let err = repro::check_campaign_invariants(&bad).unwrap_err();
+    assert!(err.contains("scale-out"), "{err}");
+}

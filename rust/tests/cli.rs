@@ -1,0 +1,182 @@
+//! CLI contract: `alb run` / `alb sweep` emit stable JSON key sets
+//! (schema snapshots — consumers parse these artifacts, so key drift is a
+//! breaking change that must be deliberate), and invalid flag values exit
+//! nonzero with the valid range on stderr.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn alb_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_alb"))
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("alb-cli-{}-{name}", std::process::id()))
+}
+
+/// Keys of a pretty-printed `metrics::Json` object at `indent` levels
+/// (2 spaces per level), in file order (== sorted: BTreeMap writer).
+fn keys_at(json: &str, indent: usize) -> Vec<String> {
+    let pad = "  ".repeat(indent);
+    let mut out = Vec::new();
+    for line in json.lines() {
+        let Some(rest) = line.strip_prefix(&pad) else { continue };
+        if rest.starts_with(' ') || !rest.starts_with('"') {
+            continue; // deeper level or not a key line
+        }
+        if let Some((key, _)) = rest[1..].split_once('"') {
+            out.push(key.to_string());
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------ run schema
+
+#[test]
+fn run_single_gpu_json_schema() {
+    let path = tmp("run1.json");
+    let out = alb_bin()
+        .args([
+            "run", "--app", "bfs", "--input", "road-s", "--scale-delta", "-4",
+            "--json", path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let json = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        keys_at(&json, 1),
+        [
+            "app", "edges", "framework", "gpu_spec", "gpus", "input",
+            "lb_rounds", "rounds", "seed", "sim_threads", "simulated_ms",
+        ],
+        "single-GPU `alb run --json` schema drifted"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn run_multi_gpu_json_schema() {
+    let path = tmp("run4.json");
+    let out = alb_bin()
+        .args([
+            "run", "--app", "bfs", "--input", "road-s", "--scale-delta", "-4",
+            "--gpus", "4", "--policy", "cvc", "--json", path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let json = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        keys_at(&json, 1),
+        [
+            "app", "comm_bytes", "comm_bytes_inter", "comm_bytes_intra",
+            "comm_ms", "comp_ms", "exec", "framework", "gpu_spec", "gpus",
+            "input", "os_threads", "per_gpu_wall_ms", "policy", "rounds",
+            "seed", "sim_threads", "simulated_ms",
+        ],
+        "multi-GPU `alb run --json` schema drifted"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------- sweep schema
+
+#[test]
+fn sweep_artifact_json_schema_and_list() {
+    // --list enumerates without running.
+    let out = alb_bin()
+        .args(["sweep", "--smoke", "--list", "--apps", "bfs", "--inputs", "road-s"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("bfs/road-s/twc/-/1"), "{stdout}");
+    assert!(stdout.contains("bfs/road-s/alb/cvc/4"), "{stdout}");
+    assert!(stdout.contains("4 cells"), "{stdout}");
+
+    // A filtered tiny sweep writes the stable artifact schema.
+    let path = tmp("sweep.json");
+    let out = alb_bin()
+        .args([
+            "sweep", "--smoke", "--apps", "bfs", "--inputs", "road-s",
+            "--scale-delta", "-4", "--sim-threads", "2", "--resume", "false",
+            "--out", path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let json = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        keys_at(&json, 1),
+        ["campaign", "cells", "scale_delta", "schema_version", "seed", "smoke"],
+        "CAMPAIGN.json top-level schema drifted"
+    );
+    let mut cell_keys = keys_at(&json, 3);
+    let per_cell = 15;
+    assert_eq!(cell_keys.len() % per_cell, 0, "ragged cell objects");
+    cell_keys.truncate(per_cell);
+    assert_eq!(
+        cell_keys,
+        [
+            "app", "balancer", "comm_bytes", "comm_bytes_inter",
+            "comm_bytes_intra", "gpus", "host_ms", "id", "imbalance_factor",
+            "input", "labels_hash", "policy", "rounds", "simulated_ms",
+            "total_cycles",
+        ],
+        "CAMPAIGN.json cell schema drifted"
+    );
+    // The human summary table is printed alongside the artifact.
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("cell"), "{stdout}");
+    assert!(stdout.contains("4 cells (4 executed, 0 resumed)"), "{stdout}");
+    let _ = std::fs::remove_file(&path);
+}
+
+// -------------------------------------------------- invalid-value errors
+
+fn expect_failure(args: &[&str], needle: &str) {
+    let out = alb_bin().args(args).output().unwrap();
+    assert!(
+        !out.status.success(),
+        "`alb {}` should exit nonzero",
+        args.join(" ")
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains(needle),
+        "`alb {}` stderr should name the valid values ({needle:?}), got: {stderr}",
+        args.join(" ")
+    );
+}
+
+#[test]
+fn invalid_values_exit_nonzero_with_valid_range() {
+    // --exec lists every accepted spelling.
+    expect_failure(
+        &["run", "--app", "bfs", "--input", "road-s", "--scale-delta", "-4",
+          "--gpus", "2", "--exec", "bogus"],
+        "parallel, par, sequential, seq",
+    );
+    // --sim-threads names the 1..=512 range (run and sweep alike).
+    expect_failure(
+        &["run", "--app", "bfs", "--input", "road-s", "--scale-delta", "-4",
+          "--sim-threads", "0"],
+        "1..=512",
+    );
+    expect_failure(&["sweep", "--smoke", "--sim-threads", "abc"], "1..=512");
+    // Sweep dimension filters list the valid sets.
+    expect_failure(&["sweep", "--smoke", "--apps", "bogus"], "sssp-delta");
+    expect_failure(&["sweep", "--smoke", "--inputs", "bogus"], "rmat18");
+    expect_failure(&["sweep", "--smoke", "--balancers", "bogus"], "enterprise");
+    expect_failure(&["sweep", "--smoke", "--policies", "bogus"], "oec, iec, cvc");
+    expect_failure(&["sweep", "--smoke", "--gpus", "0"], "1..=64");
+    expect_failure(&["sweep", "--smoke", "--resume", "maybe"], "--resume true|false");
+    // `alb run --balancer` names the strategy list too.
+    expect_failure(
+        &["run", "--app", "bfs", "--input", "road-s", "--scale-delta", "-4",
+          "--balancer", "bogus"],
+        "vertex, twc, edge-lb, alb, enterprise",
+    );
+}
