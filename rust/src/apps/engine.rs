@@ -35,6 +35,7 @@ use crate::apps::{bfs, cc, kcore, pr, sssp, App, INF};
 use crate::exec::{self, Pool};
 use crate::gpu::{CostModel, GpuSpec, KernelStats, SimScratch, Simulator};
 use crate::graph::CsrGraph;
+use crate::lb::adaptive::{AdaptiveController, AdaptiveRound, RoundSignal};
 use crate::lb::{Balancer, Direction, Distribution, ScheduleScratch};
 use crate::runtime::PjrtRuntime;
 
@@ -126,6 +127,11 @@ pub struct RoundRecord {
     pub lb_triggered: bool,
     /// Per-block stats, when `record_blocks` is set.
     pub kernels: Option<Vec<KernelStats>>,
+    /// Feedback-controller trace ([`Balancer::Adaptive`]/[`Balancer::Auto`]
+    /// runs only): the threshold and sampling budget this round ran with,
+    /// and the imbalance it measured. `None` under static balancers, so
+    /// record-equality checks between static strategies are unaffected.
+    pub adaptive: Option<AdaptiveRound>,
 }
 
 /// A completed run.
@@ -166,6 +172,10 @@ pub struct RoundScratch {
     pub next: NextWorklist,
     /// Current frontier, refilled from `next`'s drain each round.
     pub active: Vec<u32>,
+    /// The per-run feedback controller, armed by [`arm_adaptive`]
+    /// (Self::arm_adaptive) when the balancer is adaptive; `None` keeps
+    /// every static strategy on the exact pre-controller code path.
+    pub adaptive: Option<AdaptiveController>,
 }
 
 impl RoundScratch {
@@ -179,6 +189,92 @@ impl RoundScratch {
         s.next.resize_for(n);
         s
     }
+
+    /// Arm the feedback controller when `cfg.balancer` is adaptive
+    /// ([`AdaptiveController::for_balancer`]); static balancers leave it
+    /// `None` and are untouched by the controller plumbing.
+    pub fn arm_adaptive(&mut self, cfg: &EngineConfig) {
+        self.adaptive =
+            AdaptiveController::for_balancer(&cfg.balancer, &cfg.spec, &cfg.cost);
+    }
+
+    /// [`for_vertices`](Self::for_vertices) + [`arm_adaptive`]
+    /// (Self::arm_adaptive): the per-GPU constructor the multi-GPU
+    /// coordinator uses — each simulated GPU gets its *own* controller,
+    /// steering from its own partition's measured imbalance.
+    pub fn for_run(n: usize, cfg: &EngineConfig) -> Self {
+        let mut s = Self::for_vertices(n);
+        s.arm_adaptive(cfg);
+        s
+    }
+}
+
+/// One schedule + simulate step under the (optionally adaptive) balancer:
+/// the controller's current threshold and sampled-warp budget when armed,
+/// the configured balancer and cost-model default otherwise. Shared by
+/// every driver loop and the multi-GPU coordinator's per-GPU rounds.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sim_round(
+    cfg: &EngineConfig,
+    sim: &Simulator,
+    g: &CsrGraph,
+    dir: Direction,
+    active: &[u32],
+    scan_vertices: u64,
+    atomics: bool,
+    adaptive: &Option<AdaptiveController>,
+    sched: &mut ScheduleScratch,
+    sim_scratch: &mut SimScratch,
+    pool: &Pool,
+) {
+    // `Balancer` clones are heap-free (enum of Copy payloads), so the
+    // dispatch below costs nothing on the zero-allocation hot path (§8).
+    let balancer = match adaptive {
+        Some(ctl) => ctl.balancer(),
+        None => cfg.balancer.clone(),
+    };
+    balancer.schedule_into_pooled(active, g, dir, &cfg.spec, scan_vertices, sched, pool);
+    sim.simulate_into_pooled_capped(
+        &sched.sched,
+        atomics,
+        sim_scratch,
+        pool,
+        adaptive.as_ref().map(|c| c.sample_cap()),
+    );
+}
+
+/// Feed the round's measured kernel signal to the controller (when armed)
+/// and return the trace for this round's [`RoundRecord`]. Must run *before*
+/// [`record_kernels`] moves the kernel stats out of the scratch.
+pub(crate) fn observe_adaptive(
+    adaptive: &mut Option<AdaptiveController>,
+    sched: &ScheduleScratch,
+    sim_scratch: &SimScratch,
+) -> Option<AdaptiveRound> {
+    let ctl = adaptive.as_mut()?;
+    let mut imbalance = 1.0f64;
+    let mut twc_cycles = 0u64;
+    let mut lb_cycles = 0u64;
+    for k in &sim_scratch.round.kernels {
+        imbalance = imbalance.max(k.imbalance_factor());
+        match k.label {
+            "twc" => twc_cycles = k.kernel_cycles,
+            "lb" => lb_cycles = k.kernel_cycles,
+            _ => {}
+        }
+    }
+    let trace = AdaptiveRound {
+        threshold: ctl.threshold(),
+        sample_cap: ctl.sample_cap(),
+        imbalance,
+    };
+    ctl.observe(&RoundSignal {
+        imbalance,
+        twc_cycles,
+        lb_cycles,
+        lb_triggered: sched.sched.lb.is_some(),
+    });
+    Some(trace)
 }
 
 /// Run `app` on `g` under `cfg`. `source` is used by bfs/sssp; `pjrt` must
@@ -237,6 +333,7 @@ fn run_push(
         _ => unreachable!(),
     };
     let mut scratch = RoundScratch::for_vertices(n);
+    scratch.arm_adaptive(cfg);
     scratch.active = match app {
         App::Bfs | App::Sssp => vec![source],
         App::Cc => (0..n as u32).collect(),
@@ -250,13 +347,14 @@ fn run_push(
             break;
         }
         let scan = cfg.worklist.scan_cost(n as u64, scratch.active.len() as u64);
-        cfg.balancer.schedule_into_pooled(
-            &scratch.active, g, Direction::Push, &cfg.spec, scan,
-            &mut scratch.sched, pool,
+        sim_round(
+            cfg, &sim, g, Direction::Push, &scratch.active, scan, true,
+            &scratch.adaptive, &mut scratch.sched, &mut scratch.sim, pool,
         );
-        sim.simulate_into_pooled(&scratch.sched.sched, true, &mut scratch.sim, pool);
         let cycles = scratch.sim.round.total_cycles;
         total_cycles += cycles;
+        let adaptive =
+            observe_adaptive(&mut scratch.adaptive, &scratch.sched, &scratch.sim);
         rounds.push(RoundRecord {
             round,
             active: scratch.active.len() as u64,
@@ -264,6 +362,7 @@ fn run_push(
             cycles,
             lb_triggered: scratch.sched.sched.lb.is_some(),
             kernels: record_kernels(cfg, &mut scratch.sim),
+            adaptive,
         });
 
         // --- operator application ---
@@ -423,6 +522,7 @@ pub fn run_push_reference(
             cycles: simr.total_cycles,
             lb_triggered: sched.lb.is_some(),
             kernels: cfg.record_blocks.then(|| simr.kernels.clone()),
+            adaptive: None,
         });
 
         // Operator application with push-time flag dedup (the bitmap drain
@@ -477,6 +577,7 @@ fn run_bfs_dopt(
     let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
     let mut labels = bfs::init_labels(n, source);
     let mut scratch = RoundScratch::for_vertices(n);
+    scratch.arm_adaptive(cfg);
     scratch.active = vec![source];
     let mut rounds = Vec::new();
     let mut total_cycles = 0u64;
@@ -533,11 +634,10 @@ fn run_bfs_dopt(
         } else {
             let scan =
                 cfg.worklist.scan_cost(n as u64, scratch.active.len() as u64);
-            cfg.balancer.schedule_into_pooled(
-                &scratch.active, g, Direction::Push, &cfg.spec, scan,
-                &mut scratch.sched, pool,
+            sim_round(
+                cfg, &sim, g, Direction::Push, &scratch.active, scan, true,
+                &scratch.adaptive, &mut scratch.sched, &mut scratch.sim, pool,
             );
-            sim.simulate_into_pooled(&scratch.sched.sched, true, &mut scratch.sim, pool);
             for &v in &scratch.active {
                 relax_native(g, App::Bfs, v, &mut labels, &mut scratch.next);
             }
@@ -545,6 +645,11 @@ fn run_bfs_dopt(
         }
         let cycles = scratch.sim.round.total_cycles;
         total_cycles += cycles;
+        // Pull rounds feed the controller too: the schedule is built by the
+        // direction-optimizer rather than the balancer, but the measured
+        // imbalance is real and the recovery rule needs idle-LB rounds.
+        let adaptive =
+            observe_adaptive(&mut scratch.adaptive, &scratch.sched, &scratch.sim);
         rounds.push(RoundRecord {
             round,
             active: scratch.active.len() as u64,
@@ -552,6 +657,7 @@ fn run_bfs_dopt(
             cycles,
             lb_triggered: scratch.sched.sched.lb.is_some(),
             kernels: record_kernels(cfg, &mut scratch.sim),
+            adaptive,
         });
         scratch.next.take_sorted_into(&mut scratch.active);
     }
@@ -594,6 +700,7 @@ fn run_sssp_delta(
     let mut buckets: Vec<Vec<u32>> = vec![Vec::new()];
     buckets[0].push(source);
     let mut scratch = RoundScratch::for_vertices(n);
+    scratch.arm_adaptive(cfg);
     let mut rounds = Vec::new();
     let mut total_cycles = 0u64;
     let mut round = 0u32;
@@ -622,13 +729,14 @@ fn run_sssp_delta(
                 break;
             }
             let scan = cfg.worklist.scan_cost(n as u64, active.len() as u64);
-            cfg.balancer.schedule_into_pooled(
-                &active, g, Direction::Push, &cfg.spec, scan, &mut scratch.sched,
-                pool,
+            sim_round(
+                cfg, &sim, g, Direction::Push, &active, scan, true,
+                &scratch.adaptive, &mut scratch.sched, &mut scratch.sim, pool,
             );
-            sim.simulate_into_pooled(&scratch.sched.sched, true, &mut scratch.sim, pool);
             let cycles = scratch.sim.round.total_cycles;
             total_cycles += cycles;
+            let adaptive =
+                observe_adaptive(&mut scratch.adaptive, &scratch.sched, &scratch.sim);
             rounds.push(RoundRecord {
                 round,
                 active: active.len() as u64,
@@ -636,6 +744,7 @@ fn run_sssp_delta(
                 cycles,
                 lb_triggered: scratch.sched.sched.lb.is_some(),
                 kernels: record_kernels(cfg, &mut scratch.sim),
+                adaptive,
             });
             round += 1;
             for &v in &active {
@@ -661,13 +770,14 @@ fn run_sssp_delta(
         settled.dedup();
         if !settled.is_empty() && round < cfg.max_rounds {
             let scan = cfg.worklist.scan_cost(n as u64, settled.len() as u64);
-            cfg.balancer.schedule_into_pooled(
-                &settled, g, Direction::Push, &cfg.spec, scan, &mut scratch.sched,
-                pool,
+            sim_round(
+                cfg, &sim, g, Direction::Push, &settled, scan, true,
+                &scratch.adaptive, &mut scratch.sched, &mut scratch.sim, pool,
             );
-            sim.simulate_into_pooled(&scratch.sched.sched, true, &mut scratch.sim, pool);
             let cycles = scratch.sim.round.total_cycles;
             total_cycles += cycles;
+            let adaptive =
+                observe_adaptive(&mut scratch.adaptive, &scratch.sched, &scratch.sim);
             rounds.push(RoundRecord {
                 round,
                 active: settled.len() as u64,
@@ -675,6 +785,7 @@ fn run_sssp_delta(
                 cycles,
                 lb_triggered: scratch.sched.sched.lb.is_some(),
                 kernels: record_kernels(cfg, &mut scratch.sim),
+                adaptive,
             });
             round += 1;
             for &v in &settled {
@@ -725,18 +836,21 @@ fn run_pr(
         (0..n as u32).map(|v| g.out_degree(v) as u32).collect();
     let mut ranks = pr::init_ranks(n);
     let mut scratch = RoundScratch::for_vertices(n);
+    scratch.arm_adaptive(cfg);
     let mut rounds = Vec::new();
     let mut total_cycles = 0u64;
 
     for round in 0..cfg.max_rounds {
         // Topology-driven: all vertices active, pull direction.
         let scan = cfg.worklist.scan_cost(n as u64, n as u64);
-        cfg.balancer.schedule_into_pooled(
-            &all, g, Direction::Pull, &cfg.spec, scan, &mut scratch.sched, pool,
+        sim_round(
+            cfg, &sim, g, Direction::Pull, &all, scan, false,
+            &scratch.adaptive, &mut scratch.sched, &mut scratch.sim, pool,
         );
-        sim.simulate_into_pooled(&scratch.sched.sched, false, &mut scratch.sim, pool);
         let cycles = scratch.sim.round.total_cycles;
         total_cycles += cycles;
+        let adaptive =
+            observe_adaptive(&mut scratch.adaptive, &scratch.sched, &scratch.sim);
         rounds.push(RoundRecord {
             round,
             active: n as u64,
@@ -744,6 +858,7 @@ fn run_pr(
             cycles,
             lb_triggered: scratch.sched.sched.lb.is_some(),
             kernels: record_kernels(cfg, &mut scratch.sim),
+            adaptive,
         });
 
         let contrib = match (cfg.compute, pjrt) {
@@ -787,6 +902,7 @@ fn run_kcore(
     let mut deg: Vec<u32> = (0..n as u32).map(|v| g.in_degree(v) as u32).collect();
     let mut alive = vec![true; n];
     let mut scratch = RoundScratch::for_vertices(n);
+    scratch.arm_adaptive(cfg);
     let mut rounds = Vec::new();
     let mut total_cycles = 0u64;
 
@@ -804,6 +920,8 @@ fn run_kcore(
     sim.simulate_into_pooled(&scratch.sched.sched, false, &mut scratch.sim, pool);
     let cycles0 = scratch.sim.round.total_cycles;
     total_cycles += cycles0;
+    let adaptive0 =
+        observe_adaptive(&mut scratch.adaptive, &scratch.sched, &scratch.sim);
     rounds.push(RoundRecord {
         round: 0,
         active: n as u64,
@@ -811,19 +929,22 @@ fn run_kcore(
         cycles: cycles0,
         lb_triggered: false,
         kernels: record_kernels(cfg, &mut scratch.sim),
+        adaptive: adaptive0,
     });
 
     let mut round = 1;
     while !dying.is_empty() && round < cfg.max_rounds {
         // Work this round: the dying vertices' out-edges (decrement push).
         let scan = cfg.worklist.scan_cost(n as u64, dying.len() as u64);
-        cfg.balancer.schedule_into_pooled(
-            &dying, g, Direction::Push, &cfg.spec, scan, &mut scratch.sched, pool,
-        );
         // atomicSub per decrement
-        sim.simulate_into_pooled(&scratch.sched.sched, true, &mut scratch.sim, pool);
+        sim_round(
+            cfg, &sim, g, Direction::Push, &dying, scan, true,
+            &scratch.adaptive, &mut scratch.sched, &mut scratch.sim, pool,
+        );
         let cycles = scratch.sim.round.total_cycles;
         total_cycles += cycles;
+        let adaptive =
+            observe_adaptive(&mut scratch.adaptive, &scratch.sched, &scratch.sim);
         rounds.push(RoundRecord {
             round,
             active: dying.len() as u64,
@@ -831,6 +952,7 @@ fn run_kcore(
             cycles,
             lb_triggered: scratch.sched.sched.lb.is_some(),
             kernels: record_kernels(cfg, &mut scratch.sim),
+            adaptive,
         });
 
         // Decrement successors; collect candidates whose degree dropped.
@@ -1219,5 +1341,118 @@ mod tests {
         assert_eq!(r.total_cycles, r.rounds.iter().map(|x| x.cycles).sum::<u64>());
         assert!(r.ms(&GpuSpec::default_sim()) > 0.0);
         assert!(r.total_edges() > 0);
+    }
+
+    // ------------------------------- runtime-adaptive controller wiring
+
+    fn adaptive_cfg() -> EngineConfig {
+        cfg_with(Balancer::Adaptive {
+            distribution: Distribution::Cyclic,
+            threshold: None,
+        })
+    }
+
+    fn plain_alb_cfg() -> EngineConfig {
+        cfg_with(Balancer::Alb {
+            distribution: Distribution::Cyclic,
+            threshold: None,
+        })
+    }
+
+    #[test]
+    fn adaptive_round_zero_matches_plain_alb() {
+        // The controller starts at ALB's threshold and only moves *after*
+        // observing a round, so round 0 must be bit-identical to plain ALB
+        // (and static runs must carry no controller trace at all).
+        let mut g = rmat(12, 6);
+        let src = g.max_out_degree_vertex();
+        let alb = run(App::Bfs, &mut g, src, &plain_alb_cfg(), None).unwrap();
+        let ada = run(App::Bfs, &mut g, src, &adaptive_cfg(), None).unwrap();
+        assert_eq!(ada.labels, alb.labels);
+        let (a0, b0) = (&ada.rounds[0], &alb.rounds[0]);
+        assert_eq!(a0.cycles, b0.cycles, "round 0 must be plain ALB");
+        assert_eq!(a0.edges, b0.edges);
+        assert_eq!(a0.lb_triggered, b0.lb_triggered);
+        let trace = a0.adaptive.as_ref().expect("adaptive rounds carry a trace");
+        assert_eq!(trace.threshold, GpuSpec::default_sim().huge_threshold());
+        assert_eq!(trace.sample_cap, CostModel::default().lb_warp_step_sample_cap);
+        assert!(ada.rounds.iter().all(|r| r.adaptive.is_some()));
+        assert!(alb.rounds.iter().all(|r| r.adaptive.is_none()));
+    }
+
+    #[test]
+    fn adaptive_is_deterministic_across_sim_threads() {
+        // The signal the controller consumes is itself deterministic
+        // (DESIGN.md §9), so the whole feedback trajectory — thresholds,
+        // sampling budgets, cycles — is bit-identical for any pool width.
+        let mut g = rmat(12, 6);
+        let src = g.max_out_degree_vertex();
+        let base = run(
+            App::Bfs,
+            &mut g.clone(),
+            src,
+            &EngineConfig { sim_threads: 1, ..adaptive_cfg() },
+            None,
+        )
+        .unwrap();
+        for threads in [2usize, 4, 7] {
+            let cfg = EngineConfig { sim_threads: threads, ..adaptive_cfg() };
+            let r = run(App::Bfs, &mut g.clone(), src, &cfg, None).unwrap();
+            assert_eq!(r, base, "sim_threads={threads}");
+        }
+    }
+
+    #[test]
+    fn adaptive_never_loses_to_plain_alb_on_skewed_input() {
+        // The CI adaptive-gate's property at unit scale: starting as ALB
+        // and shifting work only off a dominant, imbalanced TWC kernel must
+        // not cost cycles on the skewed inputs ALB targets.
+        let mut g = rmat(12, 6);
+        let src = g.max_out_degree_vertex();
+        let alb = run(App::Bfs, &mut g, src, &plain_alb_cfg(), None).unwrap();
+        let ada = run(App::Bfs, &mut g, src, &adaptive_cfg(), None).unwrap();
+        assert_eq!(ada.labels, alb.labels);
+        assert!(
+            ada.total_cycles <= alb.total_cycles,
+            "adaptive {} vs alb {}",
+            ada.total_cycles,
+            alb.total_cycles
+        );
+    }
+
+    #[test]
+    fn adaptive_covers_every_app_driver() {
+        // Each driver loop (push, dopt, delta, pr, kcore) threads the
+        // controller: every simulated round must carry a trace and labels
+        // must match the static-ALB run.
+        let mut g = rmat(10, 19);
+        let src = g.max_out_degree_vertex();
+        let cfgs: Vec<(App, EngineConfig)> = vec![
+            (App::Bfs, EngineConfig { bfs_direction_opt: true, ..adaptive_cfg() }),
+            (App::Sssp, EngineConfig {
+                sssp_delta: Some(25.0),
+                max_rounds: 1_000_000,
+                ..adaptive_cfg()
+            }),
+            (App::Pr, EngineConfig { max_rounds: 100, ..adaptive_cfg() }),
+            (App::Kcore, adaptive_cfg()),
+        ];
+        for (app, cfg) in cfgs {
+            let ada = run(app, &mut g.clone(), src, &cfg, None).unwrap();
+            let alb = run(
+                app,
+                &mut g.clone(),
+                src,
+                &EngineConfig { balancer: plain_alb_cfg().balancer, ..cfg.clone() },
+                None,
+            )
+            .unwrap();
+            assert_eq!(ada.labels, alb.labels, "{}", app.name());
+            assert!(
+                ada.rounds.iter().all(|r| r.adaptive.is_some()),
+                "{} rounds must carry the controller trace",
+                app.name()
+            );
+        }
     }
 }

@@ -9,11 +9,11 @@
 //!   "campaign": "sweep",
 //!   "cells": [
 //!     {
-//!       "app": "bfs", "balancer": "alb",
+//!       "adaptive_threshold_final": 0, "app": "bfs", "balancer": "alb",
 //!       "comm_bytes": 0, "comm_bytes_inter": 0, "comm_bytes_intra": 0,
 //!       "gpus": 1, "host_ms": 12.5, "id": "bfs/rmat18/alb/-/1",
 //!       "imbalance_factor": 3.5, "input": "rmat18",
-//!       "labels_hash": "0123456789abcdef", "policy": "-",
+//!       "labels_hash": "0123456789abcdef", "lb_rounds": 2, "policy": "-",
 //!       "rounds": 17, "simulated_ms": 1.25, "total_cycles": 123456
 //!     }
 //!   ],
@@ -64,6 +64,7 @@ impl CampaignFile {
 
 fn cell_json(c: &CellResult) -> Json {
     Json::obj()
+        .set("adaptive_threshold_final", c.adaptive_threshold_final)
         .set("app", c.app.as_str())
         .set("balancer", c.balancer.as_str())
         .set("comm_bytes", c.comm_bytes)
@@ -75,6 +76,7 @@ fn cell_json(c: &CellResult) -> Json {
         .set("imbalance_factor", c.imbalance_factor)
         .set("input", c.input.as_str())
         .set("labels_hash", c.labels_hash.as_str())
+        .set("lb_rounds", c.lb_rounds)
         .set("policy", c.policy.as_str())
         .set("rounds", c.rounds)
         .set("simulated_ms", c.simulated_ms)
@@ -122,6 +124,9 @@ pub fn parse(text: &str) -> CampaignFile {
             "scale_delta" => file.scale_delta = value.parse().unwrap_or(0),
             "smoke" => file.smoke = value == "true",
             // cell fields (sorted; total_cycles closes the record)
+            "adaptive_threshold_final" => {
+                cur.adaptive_threshold_final = value.parse().unwrap_or(0)
+            }
             "app" => cur.app = unquoted(),
             "balancer" => cur.balancer = unquoted(),
             "comm_bytes" => cur.comm_bytes = value.parse().unwrap_or(0),
@@ -133,6 +138,7 @@ pub fn parse(text: &str) -> CampaignFile {
             "imbalance_factor" => cur.imbalance_factor = value.parse().unwrap_or(0.0),
             "input" => cur.input = unquoted(),
             "labels_hash" => cur.labels_hash = unquoted(),
+            "lb_rounds" => cur.lb_rounds = value.parse().unwrap_or(0),
             "policy" => cur.policy = unquoted(),
             "rounds" => cur.rounds = value.parse().unwrap_or(0),
             "simulated_ms" => cur.simulated_ms = value.parse().unwrap_or(0.0),
@@ -247,6 +253,8 @@ mod tests {
                 comm_bytes_inter: 0,
                 simulated_ms: 0.75,
                 host_ms: 10.25,
+                adaptive_threshold_final: 3072,
+                lb_rounds: 2,
             },
             CellResult {
                 id: "bfs/rmat18/twc/cvc/4".into(),
@@ -264,6 +272,8 @@ mod tests {
                 comm_bytes_inter: 0,
                 simulated_ms: 0.5,
                 host_ms: 20.5,
+                adaptive_threshold_final: 0,
+                lb_rounds: 0,
             },
         ]
     }

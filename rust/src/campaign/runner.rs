@@ -18,6 +18,7 @@ use anyhow::{anyhow, Result};
 use crate::apps::engine::{self, EngineConfig};
 use crate::coordinator::{run_distributed, ClusterConfig};
 use crate::graph::{inputs, CsrGraph};
+use crate::lb::{adaptive, Balancer};
 use crate::metrics::labels_hash;
 
 use super::artifact;
@@ -53,6 +54,12 @@ pub struct CellResult {
     /// Host wall-clock for the cell — the one machine-dependent field
     /// (excluded from golden comparison; carried verbatim on resume).
     pub host_ms: f64,
+    /// Inspector threshold after the last round (adaptive/auto single-GPU
+    /// cells; 0 for static balancers and for multi-GPU cells, whose per-GPU
+    /// controllers have no single final value).
+    pub adaptive_threshold_final: u64,
+    /// Rounds whose LB kernel launched (multi-GPU: on at least one GPU).
+    pub lb_rounds: u64,
 }
 
 /// The outcome of one sweep invocation.
@@ -67,8 +74,14 @@ pub struct SweepOutcome {
 /// Execute one cell on `g` (the already-built input graph).
 pub fn run_cell(cell: &Cell, spec: &CampaignSpec, g: &mut CsrGraph) -> Result<CellResult> {
     let t0 = Instant::now();
+    // `auto` resolves to a concrete strategy here, where (app, input) are
+    // known; the cell id and recorded balancer keep the name "auto".
+    let balancer = match &cell.balancer {
+        Balancer::Auto => adaptive::auto_balancer(cell.app.name(), cell.input),
+        b => b.clone(),
+    };
     let mut cfg = EngineConfig::default()
-        .with_balancer(cell.balancer.clone())
+        .with_balancer(balancer)
         .with_sim_threads(spec.sim_threads);
     cfg.max_rounds = 1_000_000; // converge on every input scale
     cell.app.configure(&mut cfg, spec.sssp_delta);
@@ -98,6 +111,13 @@ pub fn run_cell(cell: &Cell, spec: &CampaignSpec, g: &mut CsrGraph) -> Result<Ce
             .flat_map(|rec| rec.kernels.iter().flatten())
             .map(|k| k.imbalance_factor())
             .fold(1.0f64, f64::max);
+        r.lb_rounds = run.rounds_with_lb() as u64;
+        r.adaptive_threshold_final = run
+            .rounds
+            .last()
+            .and_then(|rec| rec.adaptive.as_ref())
+            .map(|a| a.threshold)
+            .unwrap_or(0);
     } else {
         let policy = cell
             .policy
@@ -115,6 +135,7 @@ pub fn run_cell(cell: &Cell, spec: &CampaignSpec, g: &mut CsrGraph) -> Result<Ce
         let sum: u64 = run.per_gpu_comp.iter().sum();
         let mean = sum as f64 / run.per_gpu_comp.len().max(1) as f64;
         r.imbalance_factor = if mean > 0.0 { max / mean } else { 1.0 };
+        r.lb_rounds = run.rounds.iter().filter(|rec| rec.lb_gpus > 0).count() as u64;
     }
     r.host_ms = t0.elapsed().as_secs_f64() * 1e3;
     Ok(r)
@@ -235,6 +256,46 @@ mod tests {
         assert_eq!(d.comm_bytes_inter, 0, "single-host cluster is all intra");
         // Labels agree between single and distributed bfs (same fixpoint).
         assert_eq!(r.labels_hash, d.labels_hash);
+    }
+
+    #[test]
+    fn adaptive_cell_records_controller_columns() {
+        let spec = tiny_spec();
+        let mut g = inputs::build("rmat18", spec.scale_delta, spec.seed).unwrap();
+        let cell = Cell {
+            app: AppVariant::Bfs,
+            input: "rmat18",
+            balancer: Balancer::Adaptive {
+                distribution: crate::lb::Distribution::Cyclic,
+                threshold: None,
+            },
+            policy: None,
+            gpus: 1,
+        };
+        let ada = run_cell(&cell, &spec, &mut g).unwrap();
+        assert_eq!(ada.id, "bfs/rmat18/adaptive/-/1");
+        assert!(ada.adaptive_threshold_final > 0, "adaptive cells record the final threshold");
+
+        let twc = run_cell(
+            &Cell { balancer: Balancer::Twc, ..cell.clone() },
+            &spec,
+            &mut g,
+        )
+        .unwrap();
+        assert_eq!(twc.adaptive_threshold_final, 0, "static cells record 0");
+        assert_eq!(twc.lb_rounds, 0, "TWC never launches the LB kernel");
+
+        // `auto` keeps its id/name but resolves to a concrete strategy —
+        // the labels must match any other balancer's fixpoint.
+        let auto = run_cell(
+            &Cell { balancer: Balancer::Auto, ..cell },
+            &spec,
+            &mut g,
+        )
+        .unwrap();
+        assert_eq!(auto.id, "bfs/rmat18/auto/-/1");
+        assert_eq!(auto.balancer, "auto");
+        assert_eq!(auto.labels_hash, twc.labels_hash);
     }
 
     #[test]

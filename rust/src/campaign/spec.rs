@@ -20,7 +20,9 @@ use crate::lb::{Balancer, Distribution};
 use crate::partition::Policy;
 
 const APPS_HELP: &str = "bfs, bfs-dopt, sssp-delta, pr, kcore";
-const BALANCERS_HELP: &str = "vertex, twc, edge-lb, alb, enterprise";
+/// Keep in sync with [`crate::lb::BALANCER_NAMES`] (pinned by a test).
+const BALANCERS_HELP: &str =
+    "vertex, twc, edge-lb, alb, enterprise, adaptive, auto";
 const POLICIES_HELP: &str = "oec, iec, cvc";
 
 /// One application *variant*: an [`crate::apps::App`] plus the engine
@@ -337,7 +339,10 @@ impl CampaignSpec {
     }
 }
 
-/// Every `Balancer` variant, cyclic defaults, in CLI order.
+/// Every campaign-enumerable `Balancer`, cyclic defaults, in CLI order.
+/// `auto` is deliberately absent: it is a meta-strategy that *resolves to*
+/// one of these per (app, input) — putting it in the matrix would duplicate
+/// whichever cell it resolves to under a second id.
 pub fn all_balancers() -> Vec<Balancer> {
     vec![
         Balancer::Vertex,
@@ -345,6 +350,7 @@ pub fn all_balancers() -> Vec<Balancer> {
         Balancer::EdgeLb { distribution: Distribution::Cyclic },
         Balancer::Alb { distribution: Distribution::Cyclic, threshold: None },
         Balancer::Enterprise,
+        Balancer::Adaptive { distribution: Distribution::Cyclic, threshold: None },
     ]
 }
 
@@ -371,9 +377,29 @@ mod tests {
     fn full_matrix_shape() {
         let cells = CampaignSpec::full().cells();
         // Per input: distributed-capable variants (bfs, pr, kcore) get
-        // 5 balancers x (1 + 3 gpu counts x 3 policies) = 50; the two
-        // single-GPU variants get 5 each. (3*50 + 2*5) * 8 inputs.
-        assert_eq!(cells.len(), (3 * 50 + 2 * 5) * 8);
+        // 6 balancers x (1 + 3 gpu counts x 3 policies) = 60; the two
+        // single-GPU variants get 6 each. (3*60 + 2*6) * 8 inputs.
+        assert_eq!(cells.len(), (3 * 60 + 2 * 6) * 8);
+    }
+
+    #[test]
+    fn balancers_help_matches_parseable_names() {
+        // The CLI error text must list exactly what Balancer::parse accepts.
+        assert_eq!(BALANCERS_HELP, crate::lb::BALANCER_NAMES.join(", "));
+    }
+
+    #[test]
+    fn auto_is_filterable_but_not_enumerated() {
+        // `auto` parses (so --balancers auto works) but never appears in
+        // the default matrix axes — it resolves to a concrete strategy.
+        let mut s = CampaignSpec::smoke();
+        s.filter_balancers("auto").unwrap();
+        assert_eq!(s.balancers, vec![Balancer::Auto]);
+        assert!(!all_balancers().contains(&Balancer::Auto));
+        assert!(all_balancers().contains(&Balancer::Adaptive {
+            distribution: Distribution::Cyclic,
+            threshold: None,
+        }));
     }
 
     #[test]
@@ -404,6 +430,8 @@ mod tests {
         assert!(s.filter_apps("bogus").unwrap_err().contains("bfs-dopt"));
         assert!(s.filter_inputs("nope").unwrap_err().contains("rmat18"));
         assert!(s.filter_balancers("nope").unwrap_err().contains("enterprise"));
+        assert!(s.filter_balancers("nope").unwrap_err().contains("adaptive"));
+        assert!(s.filter_balancers("nope").unwrap_err().contains("auto"));
         assert!(s.filter_policies("nope").unwrap_err().contains("cvc"));
         assert!(s.filter_gpus("0").unwrap_err().contains("1..="));
         assert!(s.filter_gpus("abc").unwrap_err().contains("1..="));

@@ -334,16 +334,22 @@ fn local_push_round(
     let t0 = Instant::now();
     let n = part.num_vertices();
     let scan = cfg.worklist.scan_cost(n as u64, s.st.active.len() as u64);
-    cfg.balancer.schedule_into_pooled(
-        &s.st.active,
+    engine::sim_round(
+        cfg,
+        sim,
         part,
         Direction::Push,
-        &cfg.spec,
+        &s.st.active,
         scan,
+        true,
+        &s.scratch.adaptive,
         &mut s.scratch.sched,
+        &mut s.scratch.sim,
         pool,
     );
-    sim.simulate_into_pooled(&s.scratch.sched.sched, true, &mut s.scratch.sim, pool);
+    // This GPU's controller steps on its own partition's signal; the trace
+    // itself is dropped (per-GPU round records carry plain outputs only).
+    let _ = engine::observe_adaptive(&mut s.scratch.adaptive, &s.scratch.sched, &s.scratch.sim);
 
     if let (ComputeMode::Pjrt, Some(rt), Some(lb)) =
         (cfg.compute, pjrt, &s.scratch.sched.sched.lb)
@@ -416,7 +422,7 @@ fn run_push_dist(
             }
             GpuPush {
                 st,
-                scratch: RoundScratch::for_vertices(p.graph.num_vertices()),
+                scratch: RoundScratch::for_run(p.graph.num_vertices(), cfg),
                 out: RoundOut::idle(),
             }
         })
@@ -542,16 +548,20 @@ fn local_pr_round(
     let t0 = Instant::now();
     let nl = lg.num_vertices();
     let scan = cfg.worklist.scan_cost(nl as u64, nl as u64);
-    cfg.balancer.schedule_into_pooled(
-        all,
+    engine::sim_round(
+        cfg,
+        sim,
         lg,
         Direction::Pull,
-        &cfg.spec,
+        all,
         scan,
+        false,
+        &s.scratch.adaptive,
         &mut s.scratch.sched,
+        &mut s.scratch.sim,
         pool,
     );
-    sim.simulate_into_pooled(&s.scratch.sched.sched, false, &mut s.scratch.sim, pool);
+    let _ = engine::observe_adaptive(&mut s.scratch.adaptive, &s.scratch.sched, &s.scratch.sim);
 
     // Contributions of local src copies (kernel in Pjrt mode), into the
     // persistent buffer.
@@ -639,7 +649,7 @@ fn run_pr_dist(
         .parts
         .iter()
         .map(|p| GpuPr {
-            scratch: RoundScratch::for_vertices(p.graph.num_vertices()),
+            scratch: RoundScratch::for_run(p.graph.num_vertices(), cfg),
             out: RoundOut::idle(),
             acc: Vec::new(),
             contrib: Vec::new(),
@@ -773,17 +783,21 @@ fn local_kcore_round(
     let scan = cfg
         .worklist
         .scan_cost(lg.num_vertices() as u64, dying_local.len() as u64);
-    cfg.balancer.schedule_into_pooled(
-        dying_local,
+    // atomicSub per decrement
+    engine::sim_round(
+        cfg,
+        sim,
         lg,
         Direction::Push,
-        &cfg.spec,
+        dying_local,
         scan,
+        true,
+        &s.scratch.adaptive,
         &mut s.scratch.sched,
+        &mut s.scratch.sim,
         pool,
     );
-    // atomicSub per decrement
-    sim.simulate_into_pooled(&s.scratch.sched.sched, true, &mut s.scratch.sim, pool);
+    let _ = engine::observe_adaptive(&mut s.scratch.adaptive, &s.scratch.sched, &s.scratch.sim);
 
     for &lv in dying_local {
         let (dsts, _) = lg.out_edges(lv);
@@ -835,7 +849,7 @@ fn run_kcore_dist(
         .parts
         .iter()
         .map(|p| GpuKcore {
-            scratch: RoundScratch::for_vertices(p.graph.num_vertices()),
+            scratch: RoundScratch::for_run(p.graph.num_vertices(), cfg),
             out: RoundOut::idle(),
             hits: Vec::new(),
             peer_updates: vec![0; k_parts],

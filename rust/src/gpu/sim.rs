@@ -234,12 +234,28 @@ impl Simulator {
     /// the previous round. `push` charges atomic-update cost per edge
     /// (push-style operators write remote labels; pull-style do not).
     pub fn simulate_into(&self, sched: &Schedule, push: bool, scratch: &mut SimScratch) {
+        self.simulate_into_capped(sched, push, scratch, None);
+    }
+
+    /// [`simulate_into`](Self::simulate_into) with a per-round override of
+    /// the LB kernel's sampled-warp budget
+    /// ([`CostModel::lb_warp_step_sample_cap`]) — the adaptive controller's
+    /// fidelity knob. `None` keeps the configured cap; the override leaves
+    /// the (possibly shared) `Simulator` untouched, so per-GPU controllers
+    /// can steer independent budgets through one simulator.
+    pub fn simulate_into_capped(
+        &self,
+        sched: &Schedule,
+        push: bool,
+        scratch: &mut SimScratch,
+        sample_cap: Option<u64>,
+    ) {
         scratch.recycle();
         let twc = self.sim_twc_into(&sched.twc, push, scratch);
         scratch.round.kernels.push(twc);
         if let Some(lb) = &sched.lb {
             if lb.total_edges() > 0 {
-                let k = self.sim_lb_into(lb, push, scratch);
+                let k = self.sim_lb_into(lb, push, scratch, sample_cap);
                 scratch.round.kernels.push(k);
             }
         }
@@ -261,8 +277,22 @@ impl Simulator {
         scratch: &mut SimScratch,
         pool: &Pool,
     ) {
+        self.simulate_into_pooled_capped(sched, push, scratch, pool, None);
+    }
+
+    /// [`simulate_into_pooled`](Self::simulate_into_pooled) with the
+    /// adaptive controller's sampled-warp budget override (see
+    /// [`simulate_into_capped`](Self::simulate_into_capped)).
+    pub fn simulate_into_pooled_capped(
+        &self,
+        sched: &Schedule,
+        push: bool,
+        scratch: &mut SimScratch,
+        pool: &Pool,
+        sample_cap: Option<u64>,
+    ) {
         if pool.threads() <= 1 {
-            self.simulate_into(sched, push, scratch);
+            self.simulate_into_capped(sched, push, scratch, sample_cap);
             return;
         }
         scratch.recycle();
@@ -270,7 +300,7 @@ impl Simulator {
         scratch.round.kernels.push(twc);
         if let Some(lb) = &sched.lb {
             if lb.total_edges() > 0 {
-                let k = self.sim_lb_pooled(lb, push, scratch, pool);
+                let k = self.sim_lb_pooled(lb, push, scratch, pool, sample_cap);
                 scratch.round.kernels.push(k);
             }
         }
@@ -475,12 +505,14 @@ impl Simulator {
     /// `(w, warp_stride, n_sampled)` — edges per thread (paper line 15),
     /// stride between sampled warps, and how many warps the walk simulates
     /// (whole warps, so intra-warp cache state stays faithful).
-    fn lb_sampling(&self, total: u64) -> (u64, u64, u64) {
+    /// `sample_cap` overrides [`CostModel::lb_warp_step_sample_cap`] for
+    /// this launch (the adaptive controller's per-round budget).
+    fn lb_sampling(&self, total: u64, sample_cap: Option<u64>) -> (u64, u64, u64) {
         let p = self.spec.total_threads();
         let w = total.div_ceil(p);
         let nwarps = self.spec.total_warps();
         let total_warp_steps = nwarps.saturating_mul(w);
-        let cap = self.cost.lb_warp_step_sample_cap.max(1);
+        let cap = sample_cap.unwrap_or(self.cost.lb_warp_step_sample_cap).max(1);
         let warps_to_sim = if total_warp_steps <= cap {
             nwarps
         } else {
@@ -692,10 +724,16 @@ impl Simulator {
     /// LB kernel: even edge split + cache-modeled binary search, into the
     /// scratch's reused buffers (the per-warp body lives in
     /// [`lb_warp`](Self::lb_warp)).
-    fn sim_lb_into(&self, lb: &LbLaunch, push: bool, scratch: &mut SimScratch) -> KernelStats {
+    fn sim_lb_into(
+        &self,
+        lb: &LbLaunch,
+        push: bool,
+        scratch: &mut SimScratch,
+        sample_cap: Option<u64>,
+    ) -> KernelStats {
         let s = &self.spec;
         let nb = s.num_blocks as usize;
-        let (w, warp_stride, n_sampled) = self.lb_sampling(lb.total_edges());
+        let (w, warp_stride, n_sampled) = self.lb_sampling(lb.total_edges(), sample_cap);
         let ec = self.edge_cost(push);
 
         let mut k = scratch.fresh_kernel("lb");
@@ -727,10 +765,11 @@ impl Simulator {
         push: bool,
         scratch: &mut SimScratch,
         pool: &Pool,
+        sample_cap: Option<u64>,
     ) -> KernelStats {
         let s = &self.spec;
         let nb = s.num_blocks as usize;
-        let (w, warp_stride, n_sampled) = self.lb_sampling(lb.total_edges());
+        let (w, warp_stride, n_sampled) = self.lb_sampling(lb.total_edges(), sample_cap);
         let ec = self.edge_cost(push);
         let mut k = scratch.fresh_kernel("lb");
 

@@ -35,6 +35,15 @@ pub const SINGLE_HOST_INPUTS: [&str; 4] = ["rmat18", "rmat20", "orkut-s", "road-
 /// Multi-host (Bridges / Fig 10) inputs.
 pub const MULTI_HOST_INPUTS: [&str; 4] = ["rmat21", "rmat22", "twitter-s", "uk-s"];
 
+/// Presets whose hubs exceed THRESHOLD so the ALB inspector actually
+/// fires — the regime the paper targets (Fig. 1), the inputs CI's
+/// `adaptive-gate` sweeps, and the scope of the adaptive-dominance
+/// campaign invariant. `orkut-s`, `road-s`, and `uk-s` are deliberately
+/// excluded: their max degree sits below THRESHOLD, so adaptive-vs-static
+/// there is a tie the invariant must not over-constrain.
+pub const HIGH_IMBALANCE_INPUTS: [&str; 5] =
+    ["rmat18", "rmat20", "rmat21", "rmat22", "twitter-s"];
+
 /// The paper input each preset stands in for.
 pub fn paper_name(preset: &str) -> &'static str {
     match preset {

@@ -1,0 +1,330 @@
+//! The runtime-adaptive ALB controller (ROADMAP "adaptivity at runtime";
+//! cf. the per-round feedback loops of arXiv 1711.00231).
+//!
+//! `Balancer::Adaptive` starts as plain ALB (round 0 is bit-identical to
+//! `Balancer::Alb` at the same starting threshold) and then steers two
+//! knobs from the previous round's *measured* block imbalance:
+//!
+//! * the **inspector threshold** — lowered (bounded multiplicative step)
+//!   while the TWC kernel dominates the round with high imbalance, routing
+//!   more of the skewed tail through the evenly-distributed LB kernel, and
+//!   raised back toward the starting point only on rounds where the LB
+//!   kernel did not trigger (so recovery can never perturb a schedule the
+//!   controller is actively shaping);
+//! * the **sampled-warp budget** of the LB cost model
+//!   ([`crate::gpu::CostModel::lb_warp_step_sample_cap`]) — doubled while
+//!   the controller is actively re-balancing (more simulation fidelity
+//!   exactly when the LB kernel is load-bearing), decayed back to the
+//!   configured cap once the round is balanced.
+//!
+//! The law is a pure function of `(state, RoundSignal)` — no clocks, no
+//! randomness — so runs are bit-identical across `sim_threads` (the signal
+//! itself is deterministic, DESIGN.md §9), and on a *fixed* signal every
+//! knob moves monotonically until it hits a bound: the controller cannot
+//! oscillate (pinned by unit tests here and in `apps::engine`).
+
+use crate::gpu::{CostModel, GpuSpec};
+use crate::lb::schedule::Distribution;
+use crate::lb::Balancer;
+
+/// Block imbalance above which the round is considered skewed enough to
+/// pay for re-balancing (paper Fig. 1 territory).
+pub const IMBALANCE_HIGH: f64 = 2.0;
+/// Block imbalance below which the round counts as balanced and the
+/// sampling budget decays back to the configured cap.
+pub const IMBALANCE_LOW: f64 = 1.25;
+
+/// What the controller observes after each simulated round — distilled
+/// from the round's [`crate::gpu::KernelStats`] by the engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoundSignal {
+    /// Max per-kernel block imbalance factor this round (1.0 = perfect).
+    pub imbalance: f64,
+    /// Cycles of the TWC kernel.
+    pub twc_cycles: u64,
+    /// Cycles of the LB kernel (0 when not launched).
+    pub lb_cycles: u64,
+    /// Whether the round's schedule triggered the LB kernel.
+    pub lb_triggered: bool,
+}
+
+/// Per-round controller trace, recorded in
+/// [`crate::apps::RoundRecord::adaptive`] for static balancers this is
+/// `None`, so record equality checks between static strategies are
+/// unaffected.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptiveRound {
+    /// Inspector threshold the round was scheduled with.
+    pub threshold: u64,
+    /// Sampled-warp budget the round was simulated with.
+    pub sample_cap: u64,
+    /// Imbalance measured from the round's kernels (fed to the controller).
+    pub imbalance: f64,
+}
+
+/// The feedback controller: one per engine run, one per simulated GPU in
+/// the coordinator (each partition sees its own imbalance).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptiveController {
+    distribution: Distribution,
+    threshold: u64,
+    base_threshold: u64,
+    min_threshold: u64,
+    sample_cap: u64,
+    base_sample_cap: u64,
+    max_sample_cap: u64,
+}
+
+impl AdaptiveController {
+    pub fn new(
+        distribution: Distribution,
+        start_threshold: u64,
+        spec: &GpuSpec,
+        cost: &CostModel,
+    ) -> Self {
+        let base_threshold = start_threshold.max(1);
+        let base_cap = cost.lb_warp_step_sample_cap.max(1);
+        AdaptiveController {
+            distribution,
+            threshold: base_threshold,
+            base_threshold,
+            // Below a warp's worth of edges the LB kernel's search overhead
+            // can never pay for itself — but a user-chosen start below the
+            // warp floor wins: the floor must never *raise* the threshold
+            // past the starting point (threshold stays in [min, base]).
+            min_threshold: (spec.warp_size as u64).max(1).min(base_threshold),
+            sample_cap: base_cap,
+            base_sample_cap: base_cap,
+            max_sample_cap: base_cap.saturating_mul(4),
+        }
+    }
+
+    /// The controller for `b`, or `None` for static balancers. `Auto`
+    /// reaching the engine unresolved falls back to the adaptive default
+    /// (resolution normally happens at the CLI/campaign layer, see
+    /// [`auto_balancer`]).
+    pub fn for_balancer(b: &Balancer, spec: &GpuSpec, cost: &CostModel) -> Option<Self> {
+        match b {
+            Balancer::Adaptive { distribution, threshold } => Some(Self::new(
+                *distribution,
+                threshold.unwrap_or_else(|| spec.huge_threshold()),
+                spec,
+                cost,
+            )),
+            Balancer::Auto => Some(Self::new(
+                Distribution::Cyclic,
+                spec.huge_threshold(),
+                spec,
+                cost,
+            )),
+            _ => None,
+        }
+    }
+
+    /// Inspector threshold for the next round.
+    pub fn threshold(&self) -> u64 {
+        self.threshold
+    }
+
+    /// Sampled-warp budget for the next round's LB cost model.
+    pub fn sample_cap(&self) -> u64 {
+        self.sample_cap
+    }
+
+    /// The effective balancer for the next round: plain ALB at the current
+    /// threshold — which is why round 0 *is* plain ALB.
+    pub fn balancer(&self) -> Balancer {
+        Balancer::Alb {
+            distribution: self.distribution,
+            threshold: Some(self.threshold),
+        }
+    }
+
+    /// Apply one bounded, deterministic controller step.
+    ///
+    /// * Skewed round dominated by the TWC kernel → lower the threshold by
+    ///   a quarter (floor: one warp) and double the sampling budget.
+    /// * LB kernel idle while below the starting threshold → recover
+    ///   halfway back toward it, decaying the budget.
+    /// * Balanced round → decay the budget toward the configured cap.
+    ///
+    /// Every branch moves each knob monotonically toward a bound for a
+    /// fixed signal, so a static signal converges without oscillation.
+    pub fn observe(&mut self, sig: &RoundSignal) {
+        if sig.imbalance > IMBALANCE_HIGH && sig.twc_cycles >= sig.lb_cycles {
+            self.threshold = (self.threshold - self.threshold / 4).max(self.min_threshold);
+            self.sample_cap = self.sample_cap.saturating_mul(2).min(self.max_sample_cap);
+        } else if !sig.lb_triggered && self.threshold < self.base_threshold {
+            self.threshold =
+                (self.threshold + self.threshold / 2 + 1).min(self.base_threshold);
+            self.sample_cap = (self.sample_cap / 2).max(self.base_sample_cap);
+        } else if sig.imbalance < IMBALANCE_LOW {
+            self.sample_cap = (self.sample_cap / 2).max(self.base_sample_cap);
+        }
+    }
+}
+
+/// The committed auto-mode table: fastest *starting* strategy per
+/// `(input, app)`, distilled from the campaign history behind
+/// `CAMPAIGN.golden.json` (see DESIGN.md §12 for the update recipe).
+/// Pairs not listed fall back to the adaptive default, which is never
+/// worse than plain ALB on the measured matrix.
+const AUTO_TABLE: &[(&str, &str, &str)] = &[
+    // Balanced, low-degree inputs: the inspector never fires; plain TWC
+    // avoids even the threshold probe's bookkeeping.
+    ("road-s", "bfs", "twc"),
+    ("road-s", "pr", "twc"),
+    ("road-s", "kcore", "twc"),
+    ("uk-s", "bfs", "twc"),
+    // Skewed rmat/twitter inputs: adaptive (== ALB at round 0, lowering
+    // the threshold on hub rounds) wins or ties everywhere measured.
+];
+
+/// Resolve `auto` for a concrete `(app, input)` pair.
+pub fn auto_balancer(app: &str, input: &str) -> Balancer {
+    for &(inp, a, strat) in AUTO_TABLE {
+        if inp == input && a == app {
+            return Balancer::parse(strat)
+                .expect("AUTO_TABLE names a known strategy");
+        }
+    }
+    Balancer::Adaptive { distribution: Distribution::Cyclic, threshold: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl() -> AdaptiveController {
+        let spec = GpuSpec::default_sim();
+        let cost = CostModel::default();
+        AdaptiveController::new(
+            Distribution::Cyclic,
+            spec.huge_threshold(),
+            &spec,
+            &cost,
+        )
+    }
+
+    fn skewed_signal() -> RoundSignal {
+        RoundSignal { imbalance: 8.0, twc_cycles: 10_000, lb_cycles: 100, lb_triggered: true }
+    }
+
+    #[test]
+    fn round_zero_is_plain_alb() {
+        let spec = GpuSpec::default_sim();
+        let c = ctl();
+        assert_eq!(
+            c.balancer(),
+            Balancer::Alb {
+                distribution: Distribution::Cyclic,
+                threshold: Some(spec.huge_threshold()),
+            }
+        );
+        assert_eq!(c.sample_cap(), CostModel::default().lb_warp_step_sample_cap);
+    }
+
+    #[test]
+    fn skewed_rounds_lower_threshold_boundedly() {
+        let mut c = ctl();
+        let mut prev = c.threshold();
+        for _ in 0..64 {
+            c.observe(&skewed_signal());
+            let t = c.threshold();
+            assert!(t <= prev, "monotone under a fixed skewed signal");
+            assert!(prev - t <= prev / 4 + 1, "step bounded to a quarter");
+            prev = t;
+        }
+        assert_eq!(
+            c.threshold(),
+            GpuSpec::default_sim().warp_size as u64,
+            "converges to the warp-size floor"
+        );
+    }
+
+    #[test]
+    fn static_signal_converges_without_oscillation() {
+        // Whatever the fixed signal, the threshold trajectory must be
+        // monotone and eventually constant.
+        let signals = [
+            skewed_signal(),
+            RoundSignal { imbalance: 1.0, twc_cycles: 50, lb_cycles: 0, lb_triggered: false },
+            RoundSignal { imbalance: 1.5, twc_cycles: 500, lb_cycles: 400, lb_triggered: true },
+            RoundSignal { imbalance: 3.0, twc_cycles: 10, lb_cycles: 5_000, lb_triggered: true },
+        ];
+        for sig in signals {
+            let mut c = ctl();
+            // Pre-skew so recovery rules have room to move upward.
+            for _ in 0..10 {
+                c.observe(&skewed_signal());
+            }
+            let mut trace = vec![c.threshold()];
+            for _ in 0..64 {
+                c.observe(&sig);
+                trace.push(c.threshold());
+            }
+            let increasing = trace.windows(2).all(|w| w[1] >= w[0]);
+            let decreasing = trace.windows(2).all(|w| w[1] <= w[0]);
+            assert!(increasing || decreasing, "monotone for {sig:?}: {trace:?}");
+            let tail = &trace[trace.len() - 8..];
+            assert!(
+                tail.windows(2).all(|w| w[0] == w[1]),
+                "settles to a fixed point for {sig:?}: {trace:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn recovery_never_exceeds_base_and_caps_decay() {
+        let mut c = ctl();
+        for _ in 0..6 {
+            c.observe(&skewed_signal());
+        }
+        assert!(c.threshold() < c.base_threshold);
+        assert!(c.sample_cap() > c.base_sample_cap);
+        let idle = RoundSignal { imbalance: 1.0, twc_cycles: 10, lb_cycles: 0, lb_triggered: false };
+        for _ in 0..64 {
+            c.observe(&idle);
+        }
+        assert_eq!(c.threshold(), c.base_threshold);
+        assert_eq!(c.sample_cap(), c.base_sample_cap);
+    }
+
+    #[test]
+    fn lb_dominated_rounds_hold_the_threshold() {
+        // When the LB kernel already dominates, lowering further would only
+        // grow the dominant side: the controller must hold.
+        let mut c = ctl();
+        let sig = RoundSignal { imbalance: 4.0, twc_cycles: 10, lb_cycles: 100_000, lb_triggered: true };
+        let before = c.threshold();
+        c.observe(&sig);
+        assert_eq!(c.threshold(), before);
+    }
+
+    #[test]
+    fn sub_warp_start_is_never_raised() {
+        // A user-chosen threshold below the warp floor: the floor clamps
+        // to the start, so the "lower" rule can never push the threshold
+        // above round 0's.
+        let spec = GpuSpec::default_sim();
+        let mut c =
+            AdaptiveController::new(Distribution::Cyclic, 2, &spec, &CostModel::default());
+        for _ in 0..16 {
+            c.observe(&skewed_signal());
+            assert_eq!(c.threshold(), 2);
+        }
+    }
+
+    #[test]
+    fn auto_table_resolves_or_defaults() {
+        assert_eq!(auto_balancer("bfs", "road-s"), Balancer::Twc);
+        assert_eq!(
+            auto_balancer("bfs", "rmat18"),
+            Balancer::Adaptive { distribution: Distribution::Cyclic, threshold: None }
+        );
+        // Every table row must name a parseable strategy.
+        for &(_, _, strat) in AUTO_TABLE {
+            assert!(Balancer::parse(strat).is_some(), "{strat}");
+        }
+    }
+}

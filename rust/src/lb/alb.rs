@@ -19,14 +19,9 @@
 use crate::exec::Pool;
 use crate::graph::CsrGraph;
 use crate::gpu::GpuSpec;
-use crate::lb::schedule::{
-    Distribution, LbLaunch, Schedule, ScheduleScratch, SplitChunk, VertexItem,
-};
-use crate::lb::{degree, twc, Direction};
-
-/// Below this many active vertices the pooled split falls back to the
-/// sequential walk — the threshold probe is too cheap to farm out.
-const PAR_SPLIT_MIN: usize = 2048;
+use crate::lb::schedule::{Distribution, Schedule, ScheduleScratch, VertexItem};
+use crate::lb::segment::{self, Bucket, Composition};
+use crate::lb::Direction;
 
 /// Outcome of the inspector phase — exposed for tests and metrics.
 #[derive(Debug, Clone, Default)]
@@ -34,33 +29,6 @@ pub struct Inspection {
     pub huge: Vec<u32>,
     pub prefix: Vec<u64>,
     pub rest: Vec<VertexItem>,
-}
-
-/// The threshold split itself, writing into caller-owned buffers (cleared
-/// first) — shared by [`inspect_into`] and [`schedule_into`] so the two
-/// stay semantically identical.
-#[allow(clippy::too_many_arguments)]
-fn split_into(
-    active: &[u32],
-    g: &CsrGraph,
-    dir: Direction,
-    spec: &GpuSpec,
-    threshold: u64,
-    huge: &mut Vec<u32>,
-    prefix: &mut Vec<u64>,
-    rest: &mut Vec<VertexItem>,
-) {
-    let mut run = 0u64;
-    for &v in active {
-        let d = degree(g, v, dir);
-        if d >= threshold {
-            run += d;
-            huge.push(v);
-            prefix.push(run);
-        } else {
-            rest.push(VertexItem { vertex: v, degree: d, unit: twc::bin(d, spec) });
-        }
-    }
 }
 
 /// Split the active set at `threshold` (paper Fig. 3 lines 3–9 + line 31).
@@ -89,8 +57,8 @@ pub fn inspect_into(
     ins.huge.clear();
     ins.prefix.clear();
     ins.rest.clear();
-    split_into(
-        active, g, dir, spec, threshold,
+    segment::split_into(
+        active, g, dir, spec, threshold, Bucket::Twc,
         &mut ins.huge, &mut ins.prefix, &mut ins.rest,
     );
 }
@@ -113,6 +81,9 @@ pub fn schedule(
     scratch.sched
 }
 
+/// Build the round schedule: a [`Composition::alb`] over the shared
+/// segment core — the benefit check (§4: only pay the LB launch when the
+/// huge bin is non-empty) is the composition's `NonEmptyHuge` gate.
 #[allow(clippy::too_many_arguments)]
 pub fn schedule_into(
     active: &[u32],
@@ -124,31 +95,16 @@ pub fn schedule_into(
     scan_vertices: u64,
     out: &mut ScheduleScratch,
 ) {
-    out.reset();
-    let (mut huge, mut prefix) = out.lb_buffers();
-    split_into(
-        active, g, dir, spec, threshold,
-        &mut huge, &mut prefix, &mut out.sched.twc,
+    segment::schedule_into(
+        &Composition::alb(distribution, threshold),
+        active, g, dir, spec, scan_vertices, out,
     );
-    out.sched.prefix_items = huge.len() as u64;
-    out.sched.scan_vertices = scan_vertices;
-    // Benefit check (§4): only pay the LB launch when the huge bin is
-    // non-empty; otherwise this degenerates to plain TWC.
-    if huge.is_empty() {
-        out.restore_lb_buffers(huge, prefix);
-    } else {
-        out.sched.lb =
-            Some(LbLaunch { vertices: huge, prefix, distribution, search: true });
-    }
 }
 
 /// [`schedule_into`] with the inspector's threshold probe pass split into
-/// fixed contiguous chunks of the active set on `pool` (DESIGN.md §9).
-/// Each chunk probes degrees into its own [`SplitChunk`] buffers; the fold
-/// appends huge/rest lists in chunk (= active) order and rebases each
-/// chunk's local degree prefix by the running total, so the schedule is
-/// bit-identical to the sequential split for any pool width. Small active
-/// sets and 1-thread pools take the sequential path unchanged.
+/// fixed contiguous chunks of the active set on `pool` (DESIGN.md §9,
+/// [`segment::schedule_into_pooled`]): bit-identical to the sequential
+/// split for any pool width.
 #[allow(clippy::too_many_arguments)]
 pub fn schedule_into_pooled(
     active: &[u32],
@@ -161,53 +117,10 @@ pub fn schedule_into_pooled(
     out: &mut ScheduleScratch,
     pool: &Pool,
 ) {
-    if pool.threads() <= 1 || active.len() < PAR_SPLIT_MIN {
-        schedule_into(
-            active, g, dir, spec, distribution, threshold, scan_vertices, out,
-        );
-        return;
-    }
-    out.reset();
-    let nchunks = pool.threads().min(active.len()).max(1);
-    let per = active.len().div_ceil(nchunks);
-    out.ensure_split_chunks(nchunks);
-    {
-        let chunks = &out.split_chunks[..nchunks];
-        pool.run(nchunks, &|ci| {
-            let lo = (ci * per).min(active.len());
-            let hi = ((ci + 1) * per).min(active.len());
-            let mut c = chunks[ci].lock().unwrap();
-            let c: &mut SplitChunk = &mut c;
-            c.huge.clear();
-            c.prefix.clear();
-            c.rest.clear();
-            split_into(
-                &active[lo..hi], g, dir, spec, threshold,
-                &mut c.huge, &mut c.prefix, &mut c.rest,
-            );
-        });
-    }
-    // Fold in chunk (= active) order, rebasing each chunk's local prefix.
-    let (mut huge, mut prefix) = out.lb_buffers();
-    let ScheduleScratch { sched, split_chunks, .. } = out;
-    let mut offset = 0u64;
-    for m in &split_chunks[..nchunks] {
-        let c = m.lock().unwrap();
-        huge.extend_from_slice(&c.huge);
-        for &p in &c.prefix {
-            prefix.push(p + offset);
-        }
-        offset += c.prefix.last().copied().unwrap_or(0);
-        sched.twc.extend_from_slice(&c.rest);
-    }
-    sched.prefix_items = huge.len() as u64;
-    sched.scan_vertices = scan_vertices;
-    if huge.is_empty() {
-        out.restore_lb_buffers(huge, prefix);
-    } else {
-        out.sched.lb =
-            Some(LbLaunch { vertices: huge, prefix, distribution, search: true });
-    }
+    segment::schedule_into_pooled(
+        &Composition::alb(distribution, threshold),
+        active, g, dir, spec, scan_vertices, out, pool,
+    );
 }
 
 #[cfg(test)]
@@ -349,7 +262,7 @@ mod tests {
         let g = skewed();
         let spec = GpuSpec::default_sim();
         let active: Vec<u32> = (0..g.num_vertices() as u32).collect();
-        assert!(active.len() >= super::PAR_SPLIT_MIN);
+        assert!(active.len() >= segment::PAR_SPLIT_MIN);
         for threshold in [1u64, 150, spec.huge_threshold(), u64::MAX] {
             let mut want = ScheduleScratch::new();
             schedule_into(

@@ -8,45 +8,41 @@
 //! only the huge bin).
 
 use crate::graph::CsrGraph;
-use crate::lb::schedule::{Distribution, LbLaunch, Schedule, ScheduleScratch};
-use crate::lb::{degree, Direction};
+use crate::gpu::GpuSpec;
+use crate::lb::schedule::{Distribution, Schedule, ScheduleScratch};
+use crate::lb::segment::{self, Composition};
+use crate::lb::Direction;
 
 pub fn schedule(
     active: &[u32],
     g: &CsrGraph,
     dir: Direction,
+    spec: &GpuSpec,
     distribution: Distribution,
     scan_vertices: u64,
 ) -> Schedule {
     let mut scratch = ScheduleScratch::new();
-    schedule_into(active, g, dir, distribution, scan_vertices, &mut scratch);
+    schedule_into(active, g, dir, spec, distribution, scan_vertices, &mut scratch);
     scratch.sched
 }
 
+/// A threshold-0 [`Composition`]: every active vertex (zero-degree ones
+/// included — they still get prefix entries) lands in the LB segment; the
+/// `PositiveEdges` gate skips the launch on edgeless frontiers. `spec`
+/// only feeds the (unreachable) small-vertex bucket policy.
 pub fn schedule_into(
     active: &[u32],
     g: &CsrGraph,
     dir: Direction,
+    spec: &GpuSpec,
     distribution: Distribution,
     scan_vertices: u64,
     out: &mut ScheduleScratch,
 ) {
-    out.reset();
-    let (mut vertices, mut prefix) = out.lb_buffers();
-    let mut run = 0u64;
-    for &v in active {
-        run += degree(g, v, dir);
-        prefix.push(run);
-    }
-    if run > 0 {
-        vertices.extend_from_slice(active);
-        out.sched.lb =
-            Some(LbLaunch { vertices, prefix, distribution, search: true });
-    } else {
-        out.restore_lb_buffers(vertices, prefix);
-    }
-    out.sched.scan_vertices = scan_vertices;
-    out.sched.prefix_items = active.len() as u64;
+    segment::schedule_into(
+        &Composition::edge_lb(distribution),
+        active, g, dir, spec, scan_vertices, out,
+    );
 }
 
 #[cfg(test)]
@@ -67,7 +63,7 @@ mod tests {
     #[test]
     fn prefix_covers_all_active_edges() {
         let g = chain_with_hub();
-        let s = schedule(&[0, 1], &g, Direction::Push, Distribution::Cyclic, 2);
+        let s = schedule(&[0, 1], &g, Direction::Push, &GpuSpec::default_sim(), Distribution::Cyclic, 2);
         let lb = s.lb.as_ref().unwrap();
         assert_eq!(lb.prefix, vec![50_000, 50_001]);
         assert_eq!(s.total_edges(), 50_001);
@@ -79,7 +75,7 @@ mod tests {
         let mut el = EdgeList::new(4);
         el.push(0, 1, 1.0);
         let g = CsrGraph::from_edge_list(&el);
-        let s = schedule(&[2, 3], &g, Direction::Push, Distribution::Cyclic, 2);
+        let s = schedule(&[2, 3], &g, Direction::Push, &GpuSpec::default_sim(), Distribution::Cyclic, 2);
         assert!(s.lb.is_none());
     }
 
@@ -87,7 +83,7 @@ mod tests {
     fn always_balanced_even_on_hub() {
         let g = chain_with_hub();
         let spec = GpuSpec::default_sim();
-        let s = schedule(&[0, 1], &g, Direction::Push, Distribution::Cyclic, 0);
+        let s = schedule(&[0, 1], &g, Direction::Push, &spec, Distribution::Cyclic, 0);
         let sim = Simulator::new(spec, CostModel::default());
         let r = sim.simulate(&s, true);
         let k = r.kernels.iter().find(|k| k.label == "lb").unwrap();
@@ -104,7 +100,7 @@ mod tests {
         }
         let g = CsrGraph::from_edge_list(&el);
         let active: Vec<u32> = (0..9_999).collect();
-        let s = schedule(&active, &g, Direction::Push, Distribution::Cyclic, 0);
+        let s = schedule(&active, &g, Direction::Push, &GpuSpec::default_sim(), Distribution::Cyclic, 0);
         assert_eq!(s.prefix_items, 9_999);
     }
 }

@@ -13,10 +13,9 @@
 
 use crate::graph::CsrGraph;
 use crate::gpu::GpuSpec;
-use crate::lb::schedule::{
-    Distribution, LbLaunch, Schedule, ScheduleScratch, VertexItem,
-};
-use crate::lb::{degree, twc, Direction};
+use crate::lb::schedule::{Schedule, ScheduleScratch};
+use crate::lb::segment::{self, Composition};
+use crate::lb::Direction;
 
 /// Degree bound for the "extremely large" bin. Enterprise used a fixed
 /// multiple of the block size; we follow ALB's convention (launched
@@ -34,6 +33,9 @@ pub fn schedule(
     scratch.sched
 }
 
+/// The ALB threshold split re-composed with grid-launch execution: blocked
+/// distribution, one launch per hub, no edge-id search (single known
+/// source per launch) and no prefix-sum kernel.
 pub fn schedule_into(
     active: &[u32],
     g: &CsrGraph,
@@ -42,36 +44,10 @@ pub fn schedule_into(
     scan_vertices: u64,
     out: &mut ScheduleScratch,
 ) {
-    out.reset();
-    let threshold = spec.huge_threshold();
-    let (mut huge, mut prefix) = out.lb_buffers();
-    let mut run = 0u64;
-    for &v in active {
-        let d = degree(g, v, dir);
-        if d >= threshold {
-            run += d;
-            huge.push(v);
-            prefix.push(run);
-        } else {
-            out.sched.twc.push(VertexItem {
-                vertex: v,
-                degree: d,
-                unit: twc::bin(d, spec),
-            });
-        }
-    }
-    if huge.is_empty() {
-        out.restore_lb_buffers(huge, prefix);
-    } else {
-        out.sched.lb = Some(LbLaunch {
-            vertices: huge,
-            prefix,
-            distribution: Distribution::Blocked,
-            // One launch per hub, no edge-id search (single known source).
-            search: false,
-        });
-    }
-    out.sched.scan_vertices = scan_vertices;
+    segment::schedule_into(
+        &Composition::enterprise(spec.huge_threshold()),
+        active, g, dir, spec, scan_vertices, out,
+    );
 }
 
 #[cfg(test)]
@@ -79,6 +55,8 @@ mod tests {
     use super::*;
     use crate::gpu::{CostModel, Simulator};
     use crate::graph::EdgeList;
+    use crate::lb::schedule::Distribution;
+    use crate::lb::twc;
 
     fn two_hubs() -> CsrGraph {
         let n = 20_000u32;

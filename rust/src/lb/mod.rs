@@ -12,10 +12,12 @@
 //!                  launched threads) to an even, cyclic edge distribution
 //!                  across all thread blocks (§4).
 
+pub mod adaptive;
 pub mod alb;
 pub mod edge;
 pub mod enterprise;
 pub mod schedule;
+pub mod segment;
 pub mod twc;
 pub mod vertex;
 
@@ -58,7 +60,22 @@ pub enum Balancer {
     /// Enterprise-style (§3.3, [18]): TWC + an "extremely large" bin
     /// processed by all CTAs, one launch per hub, no search.
     Enterprise,
+    /// ALB plus a per-round feedback controller that steers the inspector
+    /// threshold and the LB cost model's sampled-warp budget from the
+    /// previous round's measured imbalance ([`adaptive`]). `threshold` is
+    /// the controller's *starting* point (round 0 == plain ALB).
+    Adaptive { distribution: Distribution, threshold: Option<u64> },
+    /// Pick the starting strategy per (input, app) from committed campaign
+    /// history ([`adaptive::auto_balancer`]); resolved at the CLI/campaign
+    /// layer, and treated as default [`Balancer::Adaptive`] by the engine
+    /// if it ever arrives unresolved.
+    Auto,
 }
+
+/// Every strategy name [`Balancer::parse`] accepts, in display order —
+/// keep CLI error messages and help text in sync with this one list.
+pub const BALANCER_NAMES: &[&str] =
+    &["vertex", "twc", "edge-lb", "alb", "enterprise", "adaptive", "auto"];
 
 impl Balancer {
     /// Parse a strategy name (CLI `--balancer`, campaign `--balancers`):
@@ -74,6 +91,11 @@ impl Balancer {
                 threshold: None,
             }),
             "enterprise" => Some(Balancer::Enterprise),
+            "adaptive" => Some(Balancer::Adaptive {
+                distribution: Distribution::Cyclic,
+                threshold: None,
+            }),
+            "auto" => Some(Balancer::Auto),
             _ => None,
         }
     }
@@ -85,6 +107,30 @@ impl Balancer {
             Balancer::EdgeLb { .. } => "edge-lb",
             Balancer::Alb { .. } => "alb",
             Balancer::Enterprise => "enterprise",
+            Balancer::Adaptive { .. } => "adaptive",
+            Balancer::Auto => "auto",
+        }
+    }
+
+    /// The strategy's [`segment::Composition`] — how it parameterizes the
+    /// shared segment-assignment core. For [`Balancer::Adaptive`] this is
+    /// the starting (round-0) composition; the engine swaps in the
+    /// controller's current threshold each round.
+    pub fn composition(&self, spec: &GpuSpec) -> segment::Composition {
+        use segment::Composition;
+        match self {
+            Balancer::Vertex => Composition::vertex(),
+            Balancer::Twc => Composition::twc(),
+            Balancer::EdgeLb { distribution } => Composition::edge_lb(*distribution),
+            Balancer::Alb { distribution, threshold }
+            | Balancer::Adaptive { distribution, threshold } => Composition::alb(
+                *distribution,
+                threshold.unwrap_or_else(|| spec.huge_threshold()),
+            ),
+            Balancer::Enterprise => Composition::enterprise(spec.huge_threshold()),
+            Balancer::Auto => {
+                Composition::alb(Distribution::Cyclic, spec.huge_threshold())
+            }
         }
     }
 
@@ -105,10 +151,10 @@ impl Balancer {
         scratch.sched
     }
 
-    /// [`schedule_into`](Self::schedule_into) with the ALB inspector's
-    /// threshold probe pass chunked onto the shared worker pool
-    /// (DESIGN.md §9); every other strategy delegates to the sequential
-    /// walk unchanged. Output is bit-identical for any pool width.
+    /// [`schedule_into`](Self::schedule_into) with the segment-assignment
+    /// walk chunked onto the shared worker pool (DESIGN.md §9,
+    /// [`segment::schedule_into_pooled`]). Output is bit-identical to the
+    /// sequential walk for any pool width.
     #[allow(clippy::too_many_arguments)]
     pub fn schedule_into_pooled(
         &self,
@@ -120,20 +166,10 @@ impl Balancer {
         out: &mut ScheduleScratch,
         pool: &crate::exec::Pool,
     ) {
-        match self {
-            Balancer::Alb { distribution, threshold } => alb::schedule_into_pooled(
-                active,
-                g,
-                dir,
-                spec,
-                *distribution,
-                threshold.unwrap_or_else(|| spec.huge_threshold()),
-                scan_vertices,
-                out,
-                pool,
-            ),
-            _ => self.schedule_into(active, g, dir, spec, scan_vertices, out),
-        }
+        segment::schedule_into_pooled(
+            &self.composition(spec),
+            active, g, dir, spec, scan_vertices, out, pool,
+        );
     }
 
     /// Build the round schedule into caller-owned buffers (`out` is reset
@@ -148,30 +184,10 @@ impl Balancer {
         scan_vertices: u64,
         out: &mut ScheduleScratch,
     ) {
-        match self {
-            Balancer::Vertex => {
-                vertex::schedule_into(active, g, dir, scan_vertices, out)
-            }
-            Balancer::Twc => {
-                twc::schedule_into(active, g, dir, spec, scan_vertices, out)
-            }
-            Balancer::EdgeLb { distribution } => {
-                edge::schedule_into(active, g, dir, *distribution, scan_vertices, out)
-            }
-            Balancer::Alb { distribution, threshold } => alb::schedule_into(
-                active,
-                g,
-                dir,
-                spec,
-                *distribution,
-                threshold.unwrap_or_else(|| spec.huge_threshold()),
-                scan_vertices,
-                out,
-            ),
-            Balancer::Enterprise => {
-                enterprise::schedule_into(active, g, dir, spec, scan_vertices, out)
-            }
-        }
+        segment::schedule_into(
+            &self.composition(spec),
+            active, g, dir, spec, scan_vertices, out,
+        );
     }
 }
 
@@ -208,7 +224,7 @@ mod tests {
 
     #[test]
     fn balancer_parse_inverts_name() {
-        for name in ["vertex", "twc", "edge-lb", "alb", "enterprise"] {
+        for &name in BALANCER_NAMES {
             let b = Balancer::parse(name).unwrap();
             assert_eq!(b.name(), name);
         }

@@ -1,0 +1,427 @@
+//! The work-segmentation core all load-balancing strategies compose over.
+//!
+//! Every strategy in this crate answers the same two questions for each
+//! active vertex: *which segment* does it belong to (the TWC kernel's
+//! per-vertex bins, or the flat edge-parallel LB launch), and *how is the
+//! LB segment executed* (searched cyclic/blocked distribution vs. one grid
+//! launch per vertex). Following the segment-assignment formulation of
+//! Osama et al. (arXiv 2301.04792), a strategy is just a [`Composition`]:
+//!
+//! * a **threshold** routing degree-`>= t` vertices to the LB segment
+//!   (`u64::MAX` = never, `0` = always — the vertex/twc and edge-lb
+//!   extremes);
+//! * a **bucket policy** for the per-vertex segment ([`Bucket::Twc`]
+//!   degree binning or [`Bucket::Thread`] one-thread-per-vertex);
+//! * an **LB policy**: edge distribution, whether threads binary-search
+//!   their source ([`LbLaunch::search`]), the launch gate, and whether the
+//!   huge bin is charged a prefix-sum pass.
+//!
+//! The split walk itself ([`split_into`]) and its pooled variant are shared
+//! verbatim by every composition, so the strategies stay bit-identical to
+//! their historical hand-rolled forms (pinned by `tests/parity.rs`) while
+//! the adaptive controller ([`crate::lb::adaptive`]) can re-parameterize
+//! the threshold per round without touching any strategy code.
+
+use crate::exec::Pool;
+use crate::graph::CsrGraph;
+use crate::gpu::GpuSpec;
+use crate::lb::schedule::{
+    Distribution, LbLaunch, ScheduleScratch, SplitChunk, Unit, VertexItem,
+};
+use crate::lb::{degree, twc, Direction};
+
+/// Below this many active vertices the pooled split falls back to the
+/// sequential walk — the threshold probe is too cheap to farm out.
+pub(crate) const PAR_SPLIT_MIN: usize = 2048;
+
+/// How vertices below the threshold are binned for the TWC kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bucket {
+    /// Thread/Warp/CTA by degree ([`twc::bin`]).
+    Twc,
+    /// Always one thread per vertex (vertex-based baseline, §3.1).
+    Thread,
+}
+
+impl Bucket {
+    #[inline]
+    pub fn bin(self, deg: u64, spec: &GpuSpec) -> Unit {
+        match self {
+            Bucket::Twc => twc::bin(deg, spec),
+            Bucket::Thread => Unit::Thread,
+        }
+    }
+}
+
+/// When the LB segment actually launches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaunchGate {
+    /// ALB/Enterprise benefit check (§4): launch iff the huge bin is
+    /// non-empty.
+    NonEmptyHuge,
+    /// Gunrock-style edge LB: launch iff the segment holds at least one
+    /// edge (zero-degree vertices still get prefix entries but never
+    /// justify a launch on their own).
+    PositiveEdges,
+}
+
+/// How the huge bin's shared prefix sum is charged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefixAccounting {
+    /// One prefix item per huge vertex (ALB Fig. 3 line 31; edge-lb spans
+    /// the whole active set, which *is* its huge bin).
+    HugeItems,
+    /// No prefix-sum kernel: each launch knows its single source
+    /// (Enterprise grid launches).
+    None,
+}
+
+/// Execution policy for the LB segment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LbPolicy {
+    pub distribution: Distribution,
+    /// Threads recover their source vertex by binary search (ALB,
+    /// edge-lb); `false` models one grid launch per vertex (Enterprise).
+    pub search: bool,
+    pub gate: LaunchGate,
+    pub prefix: PrefixAccounting,
+}
+
+/// A load-balancing strategy expressed as segment assignment + policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Composition {
+    /// Degree bound for the LB segment (`d >= threshold` routes there).
+    pub threshold: u64,
+    pub bucket: Bucket,
+    pub lb: LbPolicy,
+}
+
+impl Composition {
+    /// Vertex-based baseline: no LB segment, one thread per vertex.
+    pub fn vertex() -> Self {
+        Composition {
+            threshold: u64::MAX,
+            bucket: Bucket::Thread,
+            lb: LbPolicy {
+                distribution: Distribution::Cyclic,
+                search: true,
+                gate: LaunchGate::NonEmptyHuge,
+                prefix: PrefixAccounting::HugeItems,
+            },
+        }
+    }
+
+    /// Plain TWC: no LB segment, degree binning.
+    pub fn twc() -> Self {
+        Composition { bucket: Bucket::Twc, ..Self::vertex() }
+    }
+
+    /// The paper's ALB: TWC below the threshold, searched distribution
+    /// above it, prefix sum over the huge bin.
+    pub fn alb(distribution: Distribution, threshold: u64) -> Self {
+        Composition {
+            threshold,
+            bucket: Bucket::Twc,
+            lb: LbPolicy {
+                distribution,
+                search: true,
+                gate: LaunchGate::NonEmptyHuge,
+                prefix: PrefixAccounting::HugeItems,
+            },
+        }
+    }
+
+    /// Gunrock-style static edge LB: *everything* (zero-degree vertices
+    /// included) lands in the LB segment every round.
+    pub fn edge_lb(distribution: Distribution) -> Self {
+        Composition {
+            threshold: 0,
+            bucket: Bucket::Twc, // unreachable: every degree >= 0
+            lb: LbPolicy {
+                distribution,
+                search: true,
+                gate: LaunchGate::PositiveEdges,
+                prefix: PrefixAccounting::HugeItems,
+            },
+        }
+    }
+
+    /// Enterprise's extremely-large bin: blocked grid launches, one per
+    /// hub, no search and no prefix-sum kernel.
+    pub fn enterprise(threshold: u64) -> Self {
+        Composition {
+            threshold,
+            bucket: Bucket::Twc,
+            lb: LbPolicy {
+                distribution: Distribution::Blocked,
+                search: false,
+                gate: LaunchGate::NonEmptyHuge,
+                prefix: PrefixAccounting::None,
+            },
+        }
+    }
+}
+
+/// The shared segment-assignment walk (paper Fig. 3 lines 3–9 + 31):
+/// vertices at or above `threshold` accumulate into the huge list with an
+/// inclusive degree prefix; the rest are binned per `bucket`. Callers own
+/// (and pre-clear) the output buffers.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn split_into(
+    active: &[u32],
+    g: &CsrGraph,
+    dir: Direction,
+    spec: &GpuSpec,
+    threshold: u64,
+    bucket: Bucket,
+    huge: &mut Vec<u32>,
+    prefix: &mut Vec<u64>,
+    rest: &mut Vec<VertexItem>,
+) {
+    let mut run = 0u64;
+    for &v in active {
+        let d = degree(g, v, dir);
+        if d >= threshold {
+            run += d;
+            huge.push(v);
+            prefix.push(run);
+        } else {
+            rest.push(VertexItem { vertex: v, degree: d, unit: bucket.bin(d, spec) });
+        }
+    }
+}
+
+/// Apply the composition's launch gate + prefix accounting to a completed
+/// split, installing (or returning) the LB buffers.
+fn finish(
+    comp: &Composition,
+    huge: Vec<u32>,
+    prefix: Vec<u64>,
+    scan_vertices: u64,
+    out: &mut ScheduleScratch,
+) {
+    out.sched.prefix_items = match comp.lb.prefix {
+        PrefixAccounting::HugeItems => huge.len() as u64,
+        PrefixAccounting::None => 0,
+    };
+    out.sched.scan_vertices = scan_vertices;
+    let launch = match comp.lb.gate {
+        LaunchGate::NonEmptyHuge => !huge.is_empty(),
+        LaunchGate::PositiveEdges => prefix.last().copied().unwrap_or(0) > 0,
+    };
+    if launch {
+        out.sched.lb = Some(LbLaunch {
+            vertices: huge,
+            prefix,
+            distribution: comp.lb.distribution,
+            search: comp.lb.search,
+        });
+    } else {
+        out.restore_lb_buffers(huge, prefix);
+    }
+}
+
+/// Build the round schedule for `comp` into caller-owned buffers (`out` is
+/// reset first).
+pub fn schedule_into(
+    comp: &Composition,
+    active: &[u32],
+    g: &CsrGraph,
+    dir: Direction,
+    spec: &GpuSpec,
+    scan_vertices: u64,
+    out: &mut ScheduleScratch,
+) {
+    out.reset();
+    let (mut huge, mut prefix) = out.lb_buffers();
+    split_into(
+        active, g, dir, spec, comp.threshold, comp.bucket,
+        &mut huge, &mut prefix, &mut out.sched.twc,
+    );
+    finish(comp, huge, prefix, scan_vertices, out);
+}
+
+/// [`schedule_into`] with the segment-assignment walk split into fixed
+/// contiguous chunks of the active set on `pool` (DESIGN.md §9). Each
+/// chunk probes degrees into its own [`SplitChunk`] buffers; the fold
+/// appends huge/rest lists in chunk (= active) order and rebases each
+/// chunk's local degree prefix by the running total, so the schedule is
+/// bit-identical to the sequential split for any pool width. Small active
+/// sets and 1-thread pools take the sequential path unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn schedule_into_pooled(
+    comp: &Composition,
+    active: &[u32],
+    g: &CsrGraph,
+    dir: Direction,
+    spec: &GpuSpec,
+    scan_vertices: u64,
+    out: &mut ScheduleScratch,
+    pool: &Pool,
+) {
+    if pool.threads() <= 1 || active.len() < PAR_SPLIT_MIN {
+        schedule_into(comp, active, g, dir, spec, scan_vertices, out);
+        return;
+    }
+    out.reset();
+    let nchunks = pool.threads().min(active.len()).max(1);
+    let per = active.len().div_ceil(nchunks);
+    out.ensure_split_chunks(nchunks);
+    {
+        let chunks = &out.split_chunks[..nchunks];
+        pool.run(nchunks, &|ci| {
+            let lo = (ci * per).min(active.len());
+            let hi = ((ci + 1) * per).min(active.len());
+            let mut c = chunks[ci].lock().unwrap();
+            let c: &mut SplitChunk = &mut c;
+            c.huge.clear();
+            c.prefix.clear();
+            c.rest.clear();
+            split_into(
+                &active[lo..hi], g, dir, spec, comp.threshold, comp.bucket,
+                &mut c.huge, &mut c.prefix, &mut c.rest,
+            );
+        });
+    }
+    // Fold in chunk (= active) order, rebasing each chunk's local prefix.
+    let (mut huge, mut prefix) = out.lb_buffers();
+    let ScheduleScratch { sched, split_chunks, .. } = out;
+    let mut offset = 0u64;
+    for m in &split_chunks[..nchunks] {
+        let c = m.lock().unwrap();
+        huge.extend_from_slice(&c.huge);
+        for &p in &c.prefix {
+            prefix.push(p + offset);
+        }
+        offset += c.prefix.last().copied().unwrap_or(0);
+        sched.twc.extend_from_slice(&c.rest);
+    }
+    finish(comp, huge, prefix, scan_vertices, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::EdgeList;
+    use crate::lb::{alb, edge, enterprise, vertex, Balancer};
+
+    /// hub (500k) + mid (200) + leaves (1) + isolated tail vertices.
+    fn skewed() -> CsrGraph {
+        let n = 10_000u32;
+        let mut el = EdgeList::new(n);
+        for i in 0..500_000u32 {
+            el.push(0, 2 + (i % (n - 2)), 1.0);
+        }
+        for i in 0..200u32 {
+            el.push(1, 2 + i, 1.0);
+        }
+        for v in 2..1_002u32 {
+            el.push(v, 0, 1.0);
+        }
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn compositions_reproduce_every_strategy() {
+        // The refactor's contract: each hand-rolled strategy equals its
+        // composition, field for field.
+        let g = skewed();
+        let spec = GpuSpec::default_sim();
+        let active: Vec<u32> = (0..g.num_vertices() as u32).collect();
+        let t = spec.huge_threshold();
+        let cases: Vec<(Composition, crate::lb::Schedule)> = vec![
+            (
+                Composition::vertex(),
+                vertex::schedule(&active, &g, Direction::Push, 7),
+            ),
+            (
+                Composition::twc(),
+                twc::schedule(&active, &g, Direction::Push, &spec, 7),
+            ),
+            (
+                Composition::alb(Distribution::Cyclic, t),
+                alb::schedule(
+                    &active, &g, Direction::Push, &spec,
+                    Distribution::Cyclic, t, 7,
+                ),
+            ),
+            (
+                Composition::edge_lb(Distribution::Cyclic),
+                edge::schedule(&active, &g, Direction::Push, &spec, Distribution::Cyclic, 7),
+            ),
+            (
+                Composition::enterprise(t),
+                enterprise::schedule(&active, &g, Direction::Push, &spec, 7),
+            ),
+        ];
+        for (comp, want) in cases {
+            let mut got = ScheduleScratch::new();
+            schedule_into(&comp, &active, &g, Direction::Push, &spec, 7, &mut got);
+            assert_eq!(got.sched, want, "{comp:?}");
+        }
+    }
+
+    #[test]
+    fn edge_gate_skips_edgeless_frontiers() {
+        // PositiveEdges: zero-degree-only frontier builds prefix entries
+        // but must not launch.
+        let g = skewed();
+        let spec = GpuSpec::default_sim();
+        let comp = Composition::edge_lb(Distribution::Cyclic);
+        let mut s = ScheduleScratch::new();
+        schedule_into(&comp, &[5_000, 5_001], &g, Direction::Push, &spec, 2, &mut s);
+        assert!(s.sched.lb.is_none());
+        assert_eq!(s.sched.prefix_items, 2, "prefix pass still spans the frontier");
+    }
+
+    #[test]
+    fn pooled_matches_sequential_for_every_composition() {
+        let g = skewed();
+        let spec = GpuSpec::default_sim();
+        let active: Vec<u32> = (0..g.num_vertices() as u32).collect();
+        assert!(active.len() >= PAR_SPLIT_MIN);
+        let comps = [
+            Composition::vertex(),
+            Composition::twc(),
+            Composition::alb(Distribution::Cyclic, 150),
+            Composition::edge_lb(Distribution::Blocked),
+            Composition::enterprise(spec.huge_threshold()),
+        ];
+        for comp in comps {
+            let mut want = ScheduleScratch::new();
+            schedule_into(&comp, &active, &g, Direction::Push, &spec, 3, &mut want);
+            for threads in [1usize, 2, 3, 7] {
+                let pool = Pool::new(threads);
+                let mut got = ScheduleScratch::new();
+                schedule_into_pooled(
+                    &comp, &active, &g, Direction::Push, &spec, 3, &mut got, &pool,
+                );
+                assert_eq!(got.sched, want.sched, "{comp:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn balancer_compositions_match_dispatch() {
+        // Balancer::schedule routes through the composition core; spot
+        // check the mapping stays the inverse of Composition constructors.
+        let spec = GpuSpec::default_sim();
+        let t = spec.huge_threshold();
+        let cases = [
+            (Balancer::Vertex, Composition::vertex()),
+            (Balancer::Twc, Composition::twc()),
+            (
+                Balancer::Alb { distribution: Distribution::Cyclic, threshold: None },
+                Composition::alb(Distribution::Cyclic, t),
+            ),
+            (
+                Balancer::EdgeLb { distribution: Distribution::Blocked },
+                Composition::edge_lb(Distribution::Blocked),
+            ),
+            (Balancer::Enterprise, Composition::enterprise(t)),
+        ];
+        for (b, comp) in cases {
+            assert_eq!(b.composition(&spec), comp, "{}", b.name());
+        }
+    }
+}

@@ -8,8 +8,8 @@
 
 use crate::graph::CsrGraph;
 use crate::gpu::GpuSpec;
-use crate::lb::schedule::{Schedule, ScheduleScratch, Unit, VertexItem};
-use crate::lb::{degree, Direction};
+use crate::lb::schedule::{Schedule, ScheduleScratch, Unit};
+use crate::lb::Direction;
 
 /// Bin one degree per the TWC thresholds.
 #[inline]
@@ -35,6 +35,8 @@ pub fn schedule(
     scratch.sched
 }
 
+/// A no-LB-segment [`Composition`][crate::lb::segment::Composition]:
+/// threshold `u64::MAX` keeps every vertex in the binned TWC kernel.
 pub fn schedule_into(
     active: &[u32],
     g: &CsrGraph,
@@ -43,12 +45,10 @@ pub fn schedule_into(
     scan_vertices: u64,
     out: &mut ScheduleScratch,
 ) {
-    out.reset();
-    out.sched.twc.extend(active.iter().map(|&v| {
-        let d = degree(g, v, dir);
-        VertexItem { vertex: v, degree: d, unit: bin(d, spec) }
-    }));
-    out.sched.scan_vertices = scan_vertices;
+    crate::lb::segment::schedule_into(
+        &crate::lb::segment::Composition::twc(),
+        active, g, dir, spec, scan_vertices, out,
+    );
 }
 
 #[cfg(test)]

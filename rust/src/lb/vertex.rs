@@ -4,8 +4,10 @@
 //! frameworks approximate at the intra-GPU level).
 
 use crate::graph::CsrGraph;
-use crate::lb::schedule::{Schedule, ScheduleScratch, Unit, VertexItem};
-use crate::lb::{degree, Direction};
+use crate::gpu::GpuSpec;
+use crate::lb::schedule::{Schedule, ScheduleScratch};
+use crate::lb::segment::{self, Composition};
+use crate::lb::Direction;
 
 pub fn schedule(
     active: &[u32],
@@ -14,31 +16,32 @@ pub fn schedule(
     scan_vertices: u64,
 ) -> Schedule {
     let mut scratch = ScheduleScratch::new();
-    schedule_into(active, g, dir, scan_vertices, &mut scratch);
+    schedule_into(active, g, dir, &GpuSpec::default_sim(), scan_vertices, &mut scratch);
     scratch.sched
 }
 
+/// A no-LB-segment [`Composition`] with the uniform `Thread` bucket: every
+/// active vertex is one thread's serial work, whatever its degree.
 pub fn schedule_into(
     active: &[u32],
     g: &CsrGraph,
     dir: Direction,
+    spec: &GpuSpec,
     scan_vertices: u64,
     out: &mut ScheduleScratch,
 ) {
-    out.reset();
-    out.sched.twc.extend(active.iter().map(|&v| VertexItem {
-        vertex: v,
-        degree: degree(g, v, dir),
-        unit: Unit::Thread,
-    }));
-    out.sched.scan_vertices = scan_vertices;
+    segment::schedule_into(
+        &Composition::vertex(),
+        active, g, dir, spec, scan_vertices, out,
+    );
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gpu::{CostModel, GpuSpec, Simulator};
+    use crate::gpu::{CostModel, Simulator};
     use crate::graph::EdgeList;
+    use crate::lb::schedule::Unit;
 
     fn hub_plus_leaves() -> CsrGraph {
         // vertex 0: degree 10_000; vertices 1..=100: degree 1

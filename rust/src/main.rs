@@ -11,7 +11,7 @@
 //!            [--exec <parallel|sequential>] [--sim-threads N]
 //!            [--gpu-spec <sim-default|k80-like|gtx1080-like|p100-like>]
 //!            [--distribution <cyclic|blocked>] [--threshold T]
-//!            [--balancer <vertex|twc|edge-lb|alb|enterprise>]
+//!            [--balancer <vertex|twc|edge-lb|alb|enterprise|adaptive|auto>]
 //!            [--direction-opt true] [--delta W] [--kcore-k K]
 //!            [--scale-delta D] [--seed S] [--json <out.json>]
 //! alb repro  <table1|fig1|table2|fig5|fig6|fig7|fig8|fig9|fig10|fig11|all>
@@ -21,6 +21,7 @@
 //!            [--scale-delta D] [--seed S] [--delta W] [--sim-threads N]
 //!            [--exec <parallel|sequential>] [--out CAMPAIGN.json]
 //!            [--resume true|false] [--check-golden CAMPAIGN.golden.json]
+//!            [--check-adaptive]
 //! ```
 //!
 //! Argument parsing is hand-rolled on std (the offline vendored crate set
@@ -38,7 +39,7 @@ use alb_graph::config::Framework;
 use alb_graph::coordinator::{run_distributed, ClusterConfig, ExecMode};
 use alb_graph::gpu::GpuSpec;
 use alb_graph::graph::{inputs, io, props, CsrGraph};
-use alb_graph::lb::{Balancer, Distribution};
+use alb_graph::lb::{adaptive, Balancer, Distribution};
 use alb_graph::metrics::{Json, Table};
 use alb_graph::partition::Policy;
 use alb_graph::repro::{self, ReproConfig};
@@ -59,7 +60,7 @@ impl Args {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
                 // Value-less boolean flags.
-                if matches!(key, "quick" | "smoke" | "list") {
+                if matches!(key, "quick" | "smoke" | "list" | "check-adaptive") {
                     flags.insert(key.to_string(), "true".into());
                     i += 1;
                     continue;
@@ -177,6 +178,22 @@ fn cmd_run(args: &Args) -> Result<()> {
 
     let mut cfg: EngineConfig = fw.engine_config(spec.clone());
     cfg.sim_threads = sim_threads;
+    // --balancer first, so --distribution / --threshold below refine the
+    // chosen strategy rather than the framework default it replaces.
+    if let Some(b) = args.get("balancer") {
+        cfg.balancer = Balancer::parse(b).ok_or_else(|| {
+            anyhow!(
+                "unknown --balancer {b}; valid values: {}",
+                alb_graph::lb::BALANCER_NAMES.join(", ")
+            )
+        })?;
+    }
+    // `auto` is a meta-strategy: resolve it here, where app and input are
+    // both known, exactly as the campaign runner does per cell.
+    if matches!(cfg.balancer, Balancer::Auto) {
+        cfg.balancer = adaptive::auto_balancer(app.name(), input);
+        eprintln!("auto: resolved to {}", cfg.balancer.name());
+    }
     if let Some(d) = args.get("distribution") {
         let dist = match d {
             "cyclic" => Distribution::Cyclic,
@@ -187,26 +204,27 @@ fn cmd_run(args: &Args) -> Result<()> {
             Balancer::Alb { threshold, .. } => {
                 Balancer::Alb { distribution: dist, threshold }
             }
+            Balancer::Adaptive { threshold, .. } => {
+                Balancer::Adaptive { distribution: dist, threshold }
+            }
             Balancer::EdgeLb { .. } => Balancer::EdgeLb { distribution: dist },
             other => other,
         };
     }
     if let Some(t) = args.get("threshold") {
         let th: u64 = t.parse()?;
-        if let Balancer::Alb { distribution, .. } = cfg.balancer {
-            cfg.balancer = Balancer::Alb { distribution, threshold: Some(th) };
-        }
+        cfg.balancer = match cfg.balancer {
+            Balancer::Alb { distribution, .. } => {
+                Balancer::Alb { distribution, threshold: Some(th) }
+            }
+            Balancer::Adaptive { distribution, .. } => {
+                Balancer::Adaptive { distribution, threshold: Some(th) }
+            }
+            other => other,
+        };
     }
     if let Some(k) = args.get("kcore-k") {
         cfg.kcore_k = k.parse()?;
-    }
-    if let Some(b) = args.get("balancer") {
-        cfg.balancer = Balancer::parse(b).ok_or_else(|| {
-            anyhow!(
-                "unknown --balancer {b}; valid values: \
-                 vertex, twc, edge-lb, alb, enterprise"
-            )
-        })?;
     }
     if args.get("direction-opt").map(|v| v == "true" || v == "1") == Some(true) {
         cfg.bfs_direction_opt = true;
@@ -531,6 +549,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             "golden ok: {} labels-hashes matched, {} cells await seeding",
             rep.seeded, rep.unseeded
         );
+    }
+
+    // CI's adaptive-gate: the strict, all-inputs form of the dominance
+    // invariant — adaptive must match or beat every static strategy in
+    // every (app, input, policy, gpus) group this sweep covered.
+    if args.get("check-adaptive").is_some() {
+        repro::check_adaptive_dominance(&outcome.results).map_err(|e| anyhow!(e))?;
+        println!("adaptive gate ok: adaptive matched or beat every static strategy");
     }
     Ok(())
 }

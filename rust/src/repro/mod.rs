@@ -502,6 +502,12 @@ pub const CAMPAIGN_GOLDEN: &str = "CAMPAIGN.golden.json";
 ///    counts, policies, and balancers — shares one hash. PageRank is
 ///    excluded: its float summation order legitimately depends on the
 ///    partition layout (DESIGN.md §10), so only invariant 1 applies to it.
+/// 3. **Adaptive dominance on skewed inputs**: on the
+///    [`inputs::HIGH_IMBALANCE_INPUTS`] presets (the regime the controller
+///    targets), an `adaptive` cell must not spend more cycles than any
+///    static strategy of the same (app, input, policy, gpus). Balanced
+///    inputs are exempt here — the strict all-inputs form is the opt-in
+///    [`check_adaptive_dominance`] behind `alb sweep --check-adaptive`.
 pub fn check_campaign_invariants(
     cells: &[crate::campaign::CellResult],
 ) -> Result<(), String> {
@@ -553,7 +559,80 @@ pub fn check_campaign_invariants(
             Some(_) => {}
         }
     }
+
+    // 3. Adaptive beats (or ties) every static strategy on skewed inputs.
+    let violations = adaptive_dominance_violations(cells, |input| {
+        inputs::HIGH_IMBALANCE_INPUTS.contains(&input)
+    });
+    if let Some(v) = violations.first() {
+        return Err(format!(
+            "adaptive-dominance violated on a high-imbalance input ({} group{}):\n{}",
+            violations.len(),
+            if violations.len() == 1 { "" } else { "s" },
+            v
+        ));
+    }
     Ok(())
+}
+
+/// The cycle comparisons behind the adaptive-beats-static gate: for every
+/// (app, input, policy, gpus) group that ran both an `adaptive` cell and at
+/// least one static strategy, adaptive's `total_cycles` must be <= each
+/// static cell's. Returns one formatted line per losing comparison, sorted
+/// for deterministic output. `input_filter` scopes which inputs count.
+fn adaptive_dominance_violations(
+    cells: &[crate::campaign::CellResult],
+    input_filter: impl Fn(&str) -> bool,
+) -> Vec<String> {
+    use std::collections::HashMap;
+    let mut adaptive: HashMap<(&str, &str, &str, u32), (&str, u64)> = HashMap::new();
+    for c in cells {
+        if c.balancer == "adaptive" && input_filter(&c.input) {
+            let key = (c.app.as_str(), c.input.as_str(), c.policy.as_str(), c.gpus);
+            adaptive.insert(key, (c.id.as_str(), c.total_cycles));
+        }
+    }
+    let mut out = Vec::new();
+    for c in cells {
+        // `auto` is excluded from the static side: it may itself resolve
+        // to the adaptive controller.
+        if c.balancer == "adaptive" || c.balancer == "auto" {
+            continue;
+        }
+        let key = (c.app.as_str(), c.input.as_str(), c.policy.as_str(), c.gpus);
+        if let Some(&(aid, acycles)) = adaptive.get(&key) {
+            if acycles > c.total_cycles {
+                out.push(format!(
+                    "  {aid}: {acycles} cycles, loses to {} at {} cycles",
+                    c.id, c.total_cycles
+                ));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// The strict, all-inputs form of campaign invariant 3, behind `alb sweep
+/// --check-adaptive` and CI's `adaptive-gate` job: adaptive must not lose
+/// to *any* static strategy in *any* (app, input, policy, gpus) group the
+/// sweep ran — the sweep's input filter is the scoping mechanism.
+pub fn check_adaptive_dominance(
+    cells: &[crate::campaign::CellResult],
+) -> Result<(), String> {
+    let violations = adaptive_dominance_violations(cells, |_| true);
+    if violations.is_empty() {
+        return Ok(());
+    }
+    Err(format!(
+        "ADAPTIVE GATE FAILED ({} comparison{} lost):\n{}\n\
+         The runtime controller must never cost cycles against the static \
+         strategies it starts from; a regression here means a controller-law \
+         change made some round's re-balancing unprofitable.",
+        violations.len(),
+        if violations.len() == 1 { "" } else { "s" },
+        violations.join("\n")
+    ))
 }
 
 #[cfg(test)]

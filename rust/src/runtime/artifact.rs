@@ -1,8 +1,9 @@
 //! Artifact discovery: map the AOT outputs in `artifacts/` to typed kernel
 //! variants the runtime can select by shape.
 //!
-//! Shape metadata is encoded in the artifact file names by `aot.py`
-//! (`edge_relax_h{H}_b{B}.hlo.txt`, `prefix_sum_h{H}.hlo.txt`,
+//! Shape metadata is encoded in the artifact file names by the exporter
+//! (the retired AOT pipeline, DESIGN.md §7 — any tool emitting these names
+//! works: `edge_relax_h{H}_b{B}.hlo.txt`, `prefix_sum_h{H}.hlo.txt`,
 //! `pr_pull_n{N}.hlo.txt`, `kcore_n{N}.hlo.txt`,
 //! `relax_merge_h{H}_b{B}_s{S}.hlo.txt`), which keeps the Rust side free of
 //! a JSON dependency; `manifest.json` stays the human-readable description.

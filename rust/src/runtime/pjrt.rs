@@ -1,10 +1,12 @@
-//! The real PJRT-backed runtime (requires the `xla` feature **and** the
-//! unvendored `xla` bindings crate added to `[dependencies]`).
+//! The real PJRT-backed runtime (requires the `xla` feature; compiles
+//! against the offline `vendor/xla` shim until the real bindings crate is
+//! swapped in — see DESIGN.md §7).
 //!
-//! HLO *text* (not serialized protos — see `python/compile/aot.py`) is parsed
-//! by `HloModuleProto::from_text_file`, compiled once per variant on the PJRT
-//! CPU client, and cached. The engine calls [`PjrtRuntime::edge_relax`] with
-//! whatever batch it has; the runtime pads to the smallest compiled variant.
+//! HLO *text* (not serialized protos — emitted by the retired AOT export
+//! pipeline, DESIGN.md §7) is parsed by `HloModuleProto::from_text_file`,
+//! compiled once per variant on the PJRT CPU client, and cached. The engine
+//! calls [`PjrtRuntime::edge_relax`] with whatever batch it has; the
+//! runtime pads to the smallest compiled variant.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -94,8 +96,8 @@ impl PjrtRuntime {
     /// * `edge_ids`: edge ids in `[0, prefix.last())`, any schedule order.
     /// * `weights`: per-edge relax weight.
     ///
-    /// Returns `(src_idx, candidate)` per edge, exactly
-    /// `python/compile/kernels/ref.py::edge_relax`.
+    /// Returns `(src_idx, candidate)` per edge, exactly the reference
+    /// semantics the HLO artifacts were exported against (DESIGN.md §7).
     pub fn edge_relax(
         &self,
         prefix: &[u32],

@@ -85,6 +85,9 @@ fn steady_state_engine_round_loop_is_allocation_free() {
         Balancer::EdgeLb { distribution: Distribution::Cyclic },
         Balancer::Vertex,
         Balancer::Enterprise,
+        // The controller's starting composition — identical schedule to
+        // plain ALB, and its schedule path must stay allocation-free too.
+        Balancer::Adaptive { distribution: Distribution::Cyclic, threshold: None },
     ] {
         let mut scratch = RoundScratch::for_vertices(n);
         let mut labels = vec![f32::INFINITY; n];
@@ -164,6 +167,9 @@ fn steady_state_pooled_round_loop_is_allocation_free() {
         Balancer::EdgeLb { distribution: Distribution::Cyclic },
         Balancer::Vertex,
         Balancer::Enterprise,
+        // The controller's starting composition — identical schedule to
+        // plain ALB, and its schedule path must stay allocation-free too.
+        Balancer::Adaptive { distribution: Distribution::Cyclic, threshold: None },
     ] {
         let mut scratch = RoundScratch::for_vertices(n);
         let mut labels = vec![f32::INFINITY; n];

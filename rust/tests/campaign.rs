@@ -158,3 +158,66 @@ fn invariant_checker_rejects_divergent_labels() {
     let err = repro::check_campaign_invariants(&bad).unwrap_err();
     assert!(err.contains("scale-out"), "{err}");
 }
+
+#[test]
+fn adaptive_dominance_invariant_and_strict_gate() {
+    let mk = |balancer: &str, input: &str, cycles: u64| CellResult {
+        id: format!("bfs/{input}/{balancer}/-/1"),
+        app: "bfs".into(),
+        input: input.into(),
+        balancer: balancer.into(),
+        policy: "-".into(),
+        gpus: 1,
+        labels_hash: "aa".into(),
+        total_cycles: cycles,
+        ..CellResult::default()
+    };
+
+    // Adaptive tying one static strategy and beating another passes both
+    // the always-on invariant and the strict gate.
+    let winning = vec![
+        mk("twc", "rmat18", 100),
+        mk("alb", "rmat18", 90),
+        mk("adaptive", "rmat18", 90),
+    ];
+    repro::check_campaign_invariants(&winning).unwrap();
+    repro::check_adaptive_dominance(&winning).unwrap();
+
+    // Losing on a high-imbalance input trips the always-on invariant, and
+    // the error names both cells.
+    let losing_hub = vec![mk("twc", "rmat18", 100), mk("adaptive", "rmat18", 101)];
+    let err = repro::check_campaign_invariants(&losing_hub).unwrap_err();
+    assert!(err.contains("adaptive-dominance"), "{err}");
+    assert!(err.contains("bfs/rmat18/adaptive/-/1"), "{err}");
+
+    // Losing on a balanced input is out of the invariant's scope (the
+    // controller targets skew) but fails the opt-in strict gate.
+    let losing_flat = vec![mk("twc", "orkut-s", 100), mk("adaptive", "orkut-s", 101)];
+    repro::check_campaign_invariants(&losing_flat).unwrap();
+    let err = repro::check_adaptive_dominance(&losing_flat).unwrap_err();
+    assert!(err.contains("ADAPTIVE GATE FAILED"), "{err}");
+
+    // `auto` cells never count as a static side: auto may itself resolve
+    // to adaptive, so comparing the two would be self-referential.
+    let auto = vec![mk("auto", "rmat18", 1), mk("adaptive", "rmat18", 2)];
+    repro::check_campaign_invariants(&auto).unwrap();
+    repro::check_adaptive_dominance(&auto).unwrap();
+}
+
+#[test]
+fn adaptive_gate_passes_on_a_real_high_imbalance_sweep() {
+    // The in-process twin of CI's adaptive-gate job: every balancer on a
+    // hub preset at default scale — the regime where the LB kernel fires
+    // and the controller earns its keep (at reduced scale the inspector is
+    // dormant and the comparison is vacuous). Adaptive must match or beat
+    // each static strategy in cycles while producing identical labels.
+    let mut spec = CampaignSpec::full();
+    spec.sim_threads = 2;
+    spec.filter_apps("bfs").unwrap();
+    spec.filter_inputs("rmat18").unwrap();
+    spec.filter_gpus("1").unwrap();
+    let out = run_sweep(&spec, &HashMap::new(), None, |_, _| {}).unwrap();
+    assert_eq!(out.results.len(), spec.cells().len());
+    repro::check_campaign_invariants(&out.results).unwrap();
+    repro::check_adaptive_dominance(&out.results).unwrap();
+}

@@ -114,16 +114,16 @@ fn sweep_artifact_json_schema_and_list() {
         "CAMPAIGN.json top-level schema drifted"
     );
     let mut cell_keys = keys_at(&json, 3);
-    let per_cell = 15;
+    let per_cell = 17;
     assert_eq!(cell_keys.len() % per_cell, 0, "ragged cell objects");
     cell_keys.truncate(per_cell);
     assert_eq!(
         cell_keys,
         [
-            "app", "balancer", "comm_bytes", "comm_bytes_inter",
-            "comm_bytes_intra", "gpus", "host_ms", "id", "imbalance_factor",
-            "input", "labels_hash", "policy", "rounds", "simulated_ms",
-            "total_cycles",
+            "adaptive_threshold_final", "app", "balancer", "comm_bytes",
+            "comm_bytes_inter", "comm_bytes_intra", "gpus", "host_ms", "id",
+            "imbalance_factor", "input", "labels_hash", "lb_rounds", "policy",
+            "rounds", "simulated_ms", "total_cycles",
         ],
         "CAMPAIGN.json cell schema drifted"
     );
@@ -169,7 +169,10 @@ fn invalid_values_exit_nonzero_with_valid_range() {
     // Sweep dimension filters list the valid sets.
     expect_failure(&["sweep", "--smoke", "--apps", "bogus"], "sssp-delta");
     expect_failure(&["sweep", "--smoke", "--inputs", "bogus"], "rmat18");
-    expect_failure(&["sweep", "--smoke", "--balancers", "bogus"], "enterprise");
+    expect_failure(
+        &["sweep", "--smoke", "--balancers", "bogus"],
+        "vertex, twc, edge-lb, alb, enterprise, adaptive, auto",
+    );
     expect_failure(&["sweep", "--smoke", "--policies", "bogus"], "oec, iec, cvc");
     expect_failure(&["sweep", "--smoke", "--gpus", "0"], "1..=64");
     expect_failure(&["sweep", "--smoke", "--resume", "maybe"], "--resume true|false");
@@ -177,6 +180,29 @@ fn invalid_values_exit_nonzero_with_valid_range() {
     expect_failure(
         &["run", "--app", "bfs", "--input", "road-s", "--scale-delta", "-4",
           "--balancer", "bogus"],
-        "vertex, twc, edge-lb, alb, enterprise",
+        "vertex, twc, edge-lb, alb, enterprise, adaptive, auto",
     );
+}
+
+// ------------------------------------------------------- adaptive gate
+
+#[test]
+fn sweep_check_adaptive_gates_end_to_end() {
+    // The CLI path CI's adaptive-gate job drives: a default-scale sweep on
+    // a hub preset (where the LB kernel actually fires) with the runtime
+    // controller racing a static strategy, strict gate on.
+    let path = tmp("adaptive-gate.json");
+    let out = alb_bin()
+        .args([
+            "sweep", "--apps", "bfs", "--inputs", "rmat18", "--gpus", "1",
+            "--balancers", "twc,adaptive", "--sim-threads", "2",
+            "--resume", "false", "--check-adaptive",
+            "--out", path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("adaptive gate ok"), "{stdout}");
+    let _ = std::fs::remove_file(&path);
 }
