@@ -13,6 +13,15 @@
 //! * `twc-sim[-ref]`      — per-thread TWC kernel accounting.
 //! * `lb-sim-*[-ref]`     — LB kernel cache-model simulation.
 //! * `frontier[-ref]`     — bitmap drain vs sort+dedup next-worklist.
+//! * `frontier-drain[-ref]` — SWAR word-walk drain (4-word zero-skip +
+//!                          byte-table decode) vs the preserved scalar
+//!                          word walk, on a sparse 4M-vertex worklist.
+//! * `degree-tally[-ref]` — warp-hoisted 8-wide per-block bottleneck
+//!                          reduction vs the scalar per-thread tally on
+//!                          the k80-like grid. The bench also records the
+//!                          deterministic `reorder_*` locality metrics: a
+//!                          label-gather cache trace of the rmat graph
+//!                          under `--reorder none|degree|rcm`.
 //! * `engine-bfs[-ref]`   — whole bfs run on rmat (end-to-end single GPU).
 //! * `engine-sssp[-ref]`  — whole sssp run on rmat.
 //! * `sim-par-*` / `sim-1t-*` — the pooled (DESIGN.md §9) vs 1-thread
@@ -33,6 +42,9 @@
 //!                              root): `min_speedup_engine_bfs`,
 //!                              `min_speedup_engine_sssp`,
 //!                              `min_speedup_sim_parallel`,
+//!                              `min_speedup_frontier_drain`,
+//!                              `min_speedup_degree_tally`,
+//!                              `max_reorder_cache_miss_ratio`,
 //!                              `max_dist_comm_bytes_per_round`, and
 //!                              `max_dist_comm_bytes_inter_per_round`.
 //!                              Thresholds are requirements, not recorded
@@ -61,8 +73,9 @@ use alb_graph::apps::App;
 use alb_graph::config::Framework;
 use alb_graph::coordinator::{run_distributed, ClusterConfig};
 use alb_graph::exec::Pool;
-use alb_graph::gpu::{CostModel, GpuSpec, SimScratch, Simulator};
+use alb_graph::gpu::{CacheSim, CostModel, GpuSpec, SimScratch, Simulator};
 use alb_graph::graph::gen::rmat::{self, RmatConfig};
+use alb_graph::graph::reorder::{self, Reorder};
 use alb_graph::graph::{inputs, CsrGraph};
 use alb_graph::lb::{alb, Direction, Distribution};
 use alb_graph::metrics::bench::{
@@ -180,6 +193,111 @@ fn main() {
         next.len()
     }));
 
+    // --- SWAR frontier drain (ISSUE 7) ---
+    // The mid-traversal regime: a sparse frontier over a large vertex
+    // range, where the drain's cost is the word walk itself. The SWAR
+    // path's 4-word zero-skip and byte-table decode are timed against the
+    // preserved scalar word walk on the same worklist type, asserted
+    // bit-identical first.
+    let drain_n = 1usize << 22;
+    let sparse: Vec<u32> = {
+        let mut x = 2862933555777941757u64;
+        (0..4096)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                (x % drain_n as u64) as u32
+            })
+            .collect()
+    };
+    let mut wl_opt = NextWorklist::new(drain_n);
+    let mut wl_ref = NextWorklist::new(drain_n);
+    {
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for &v in &sparse {
+            wl_opt.push(v);
+            wl_ref.push(v);
+        }
+        wl_opt.take_sorted_into(&mut a);
+        wl_ref.take_sorted_into_ref(&mut b);
+        assert_eq!(a, b, "SWAR drain diverges from the scalar reference");
+    }
+    push(time_runs("hotpath/frontier-drain", 10, || {
+        for &v in &sparse {
+            wl_opt.push(v);
+        }
+        wl_opt.take_sorted_into(&mut drained);
+        drained.len()
+    }));
+    push(time_runs("hotpath/frontier-drain-ref", 10, || {
+        for &v in &sparse {
+            wl_ref.push(v);
+        }
+        wl_ref.take_sorted_into_ref(&mut drained);
+        drained.len()
+    }));
+
+    // --- SWAR degree tally (ISSUE 7) ---
+    // The per-block bottleneck reduction over the full k80-like grid
+    // (26,624 threads), warp-hoisted 8-wide max vs the scalar
+    // thread-at-a-time walk (which re-divides t / warp_size per lane).
+    // Both entry points are the exact chunk walks `sim_twc_into` uses.
+    let k80 = Simulator::new(GpuSpec::k80_like(), CostModel::default());
+    let (tally_t, tally_w, tally_c) = {
+        let mut x = 0x243f6a8885a308d3u64;
+        let mut rng = move || {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            x >> 40
+        };
+        let t: Vec<u64> = (0..26_624).map(|_| rng()).collect();
+        let w: Vec<u64> = (0..832).map(|_| rng()).collect();
+        let c: Vec<u64> = (0..104).map(|_| rng()).collect();
+        (t, w, c)
+    };
+    let (mut tally_out, mut tally_out_ref) = (Vec::new(), Vec::new());
+    k80.bench_degree_tally(&tally_t, &tally_w, &tally_c, &mut tally_out);
+    k80.bench_degree_tally_ref(&tally_t, &tally_w, &tally_c, &mut tally_out_ref);
+    assert_eq!(tally_out, tally_out_ref, "SWAR tally diverges from reference");
+    push(time_runs("hotpath/degree-tally", 10, || {
+        let mut acc = 0u64;
+        for _ in 0..64 {
+            k80.bench_degree_tally(&tally_t, &tally_w, &tally_c, &mut tally_out);
+            acc = acc.wrapping_add(tally_out[0]);
+        }
+        acc
+    }));
+    push(time_runs("hotpath/degree-tally-ref", 10, || {
+        let mut acc = 0u64;
+        for _ in 0..64 {
+            k80.bench_degree_tally_ref(&tally_t, &tally_w, &tally_c, &mut tally_out_ref);
+            acc = acc.wrapping_add(tally_out_ref[0]);
+        }
+        acc
+    }));
+
+    // --- reorder locality (ISSUE 7) ---
+    // Deterministic label-gather trace: walk every out-edge in vertex
+    // order and touch the destination's 4-byte label through a fresh
+    // default-spec cache. Pure simulation — the miss counts are
+    // bit-deterministic, so their ratio gates on any machine. The gate
+    // takes the best reordering (the run-time `--reorder` choice is the
+    // user's), which must not lose to generator order.
+    let label_gather_misses = |gr: &CsrGraph| -> u64 {
+        let mut c = CacheSim::new(spec.l1_kb, spec.cache_line_bytes, spec.cache_assoc);
+        for v in 0..gr.num_vertices() as u32 {
+            for &d in gr.out_edges(v).0 {
+                c.access(d as u64 * 4);
+            }
+        }
+        c.misses()
+    };
+    let misses_none = label_gather_misses(&g);
+    let misses_degree = label_gather_misses(&reorder::reorder(&g, Reorder::Degree).0);
+    let misses_rcm = label_gather_misses(&reorder::reorder(&g, Reorder::Rcm).0);
+    let reorder_miss_ratio =
+        misses_degree.min(misses_rcm) as f64 / misses_none.max(1) as f64;
+
     // --- end-to-end engines ---
     let src = g.max_out_degree_vertex();
     let cfg: EngineConfig = Framework::DIrglAlb.engine_config(spec.clone());
@@ -281,6 +399,20 @@ fn main() {
         ("speedup_engine_sssp", ratio("engine-sssp")),
         ("speedup_lb_sim_cyclic", ratio("lb-sim-Cyclic")),
         ("speedup_frontier", ratio("frontier")),
+        ("speedup_frontier_drain", ratio("frontier-drain")),
+        ("speedup_degree_tally", ratio("degree-tally")),
+        ("reorder_cache_miss_ratio", reorder_miss_ratio),
+        (
+            "reorder_cache_miss_ratio_degree",
+            misses_degree as f64 / misses_none.max(1) as f64,
+        ),
+        (
+            "reorder_cache_miss_ratio_rcm",
+            misses_rcm as f64 / misses_none.max(1) as f64,
+        ),
+        ("reorder_gather_misses_none", misses_none as f64),
+        ("reorder_gather_misses_degree", misses_degree as f64),
+        ("reorder_gather_misses_rcm", misses_rcm as f64),
         ("speedup_sim_parallel_rmat20", sim_par("rmat20")),
         ("speedup_sim_parallel_rmat22", sim_par("rmat22")),
         ("speedup_sim_parallel", speedup_sim_parallel),
@@ -312,10 +444,13 @@ fn main() {
         // *requirements* that hold on any runner — no seeding run needed,
         // armed from day one. (min, measured-must-be-at-least) vs
         // (max, measured-must-be-at-most):
-        let checks: [(&str, f64, bool); 5] = [
+        let checks: [(&str, f64, bool); 8] = [
             ("min_speedup_engine_bfs", ratio("engine-bfs"), true),
             ("min_speedup_engine_sssp", ratio("engine-sssp"), true),
             ("min_speedup_sim_parallel", speedup_sim_parallel, true),
+            ("min_speedup_frontier_drain", ratio("frontier-drain"), true),
+            ("min_speedup_degree_tally", ratio("degree-tally"), true),
+            ("max_reorder_cache_miss_ratio", reorder_miss_ratio, false),
             ("max_dist_comm_bytes_per_round", dist_bytes_per_round, false),
             ("max_dist_comm_bytes_inter_per_round", dist_inter_per_round, false),
         ];

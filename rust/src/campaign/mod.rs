@@ -29,5 +29,5 @@ pub mod runner;
 pub mod spec;
 
 pub use artifact::{check_golden, CampaignFile, GoldenReport};
-pub use runner::{run_sweep, CellResult, SweepOutcome};
+pub use runner::{run_sweep, run_sweep_cached, CellResult, SweepOutcome};
 pub use spec::{AppVariant, CampaignSpec, Cell, ALL_VARIANTS};

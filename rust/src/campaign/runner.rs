@@ -156,6 +156,23 @@ pub fn run_sweep(
     spec: &CampaignSpec,
     prior: &HashMap<String, CellResult>,
     checkpoint: Option<&Path>,
+    each: impl FnMut(&CellResult, bool),
+) -> Result<SweepOutcome> {
+    run_sweep_cached(spec, prior, checkpoint, None, each)
+}
+
+/// [`run_sweep`] with an optional on-disk CSR cache (`--graph-cache DIR`):
+/// input graphs load from `graph_cache` when a valid entry exists and are
+/// generated-and-saved otherwise. The cache key is the exact generator
+/// inputs `(input, scale_delta, seed)`, so a hit is definitionally the
+/// graph [`inputs::build`] would produce — results, and therefore the
+/// artifact, are byte-identical with or without a cache directory (the
+/// cache never enters [`artifact`] state or resume matching).
+pub fn run_sweep_cached(
+    spec: &CampaignSpec,
+    prior: &HashMap<String, CellResult>,
+    checkpoint: Option<&Path>,
+    graph_cache: Option<&Path>,
     mut each: impl FnMut(&CellResult, bool),
 ) -> Result<SweepOutcome> {
     let cells = spec.cells();
@@ -201,8 +218,15 @@ pub fn run_sweep(
         }
         let needs_build = !matches!(&cache, Some((name, _)) if *name == cell.input);
         if needs_build {
-            let g = inputs::build(cell.input, spec.scale_delta, spec.seed)
-                .ok_or_else(|| anyhow!("unknown input preset {}", cell.input))?;
+            let g = match graph_cache {
+                Some(dir) => {
+                    let (g, _hit) = crate::graph::disk::GraphCache::new(dir)?
+                        .load_or_build(cell.input, spec.scale_delta, spec.seed)?;
+                    g
+                }
+                None => inputs::build(cell.input, spec.scale_delta, spec.seed)
+                    .ok_or_else(|| anyhow!("unknown input preset {}", cell.input))?,
+            };
             cache = Some((cell.input, g));
         }
         let (_, g) = cache.as_mut().unwrap();
@@ -357,5 +381,34 @@ mod tests {
         got.sort();
         assert_eq!(got, want);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cached_sweep_matches_uncached_bit_for_bit() {
+        // Cold (build + save) and warm (load) cache passes must both match
+        // the cache-less sweep on every deterministic field — the CI
+        // sweep-smoke byte-diff in miniature.
+        let mut spec = tiny_spec();
+        spec.filter_inputs("road-s").unwrap();
+        spec.filter_apps("bfs").unwrap();
+        spec.filter_gpus("1").unwrap();
+        let dir = std::env::temp_dir()
+            .join(format!("alb-runner-gcache-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let plain = run_sweep(&spec, &HashMap::new(), None, |_, _| {}).unwrap();
+        let cold =
+            run_sweep_cached(&spec, &HashMap::new(), None, Some(&dir), |_, _| {})
+                .unwrap();
+        let warm =
+            run_sweep_cached(&spec, &HashMap::new(), None, Some(&dir), |_, _| {})
+                .unwrap();
+        let strip = |rs: &[CellResult]| -> Vec<CellResult> {
+            rs.iter()
+                .map(|r| CellResult { host_ms: 0.0, ..r.clone() })
+                .collect()
+        };
+        assert_eq!(strip(&plain.results), strip(&cold.results));
+        assert_eq!(strip(&plain.results), strip(&warm.results));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

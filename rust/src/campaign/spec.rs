@@ -249,18 +249,29 @@ impl CampaignSpec {
         Ok(())
     }
 
-    /// Restrict the input dimension (values must be Table 1 presets).
+    /// Restrict the input dimension (Table 1 presets, plus the opt-in
+    /// oversize [`inputs::EXTRA_INPUTS`] — accepted here so `--inputs
+    /// rmat24` works, but never part of the default matrix).
     pub fn filter_inputs(&mut self, csv: &str) -> Result<(), String> {
+        let valid = || {
+            inputs::ALL_INPUTS
+                .iter()
+                .chain(inputs::EXTRA_INPUTS.iter())
+                .copied()
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
         let mut keep: Vec<&'static str> = Vec::new();
         for name in csv.split(',').map(str::trim).filter(|s| !s.is_empty()) {
             let preset = inputs::ALL_INPUTS
                 .iter()
+                .chain(inputs::EXTRA_INPUTS.iter())
                 .find(|&&p| p == name)
                 .copied()
                 .ok_or_else(|| {
                     format!(
                         "unknown input {name:?} in --inputs; valid values: {}",
-                        inputs::ALL_INPUTS.join(", ")
+                        valid()
                     )
                 })?;
             if !keep.contains(&preset) {
@@ -270,7 +281,7 @@ impl CampaignSpec {
         if keep.is_empty() {
             return Err(format!(
                 "--inputs selected nothing; valid values: {}",
-                inputs::ALL_INPUTS.join(", ")
+                valid()
             ));
         }
         self.inputs = keep;
@@ -429,6 +440,13 @@ mod tests {
 
         assert!(s.filter_apps("bogus").unwrap_err().contains("bfs-dopt"));
         assert!(s.filter_inputs("nope").unwrap_err().contains("rmat18"));
+        assert!(
+            s.filter_inputs("nope").unwrap_err().contains("rmat24"),
+            "error must list the opt-in extras too"
+        );
+        s.filter_inputs("rmat24").unwrap();
+        assert_eq!(s.inputs, vec!["rmat24"]);
+        s.filter_inputs("road-s").unwrap();
         assert!(s.filter_balancers("nope").unwrap_err().contains("enterprise"));
         assert!(s.filter_balancers("nope").unwrap_err().contains("adaptive"));
         assert!(s.filter_balancers("nope").unwrap_err().contains("auto"));

@@ -21,6 +21,12 @@ pub struct CacheSim {
     num_sets: u64,
     assoc: usize,
     line_bytes: u64,
+    /// Line tag of the most recent [`access`](Self::access) (§Perf,
+    /// DESIGN.md §13): probe trajectories touch long runs of same-line
+    /// addresses, and a repeat of the last line is always a hit that leaves
+    /// the LRU state unchanged — the line is already MRU in its set, so the
+    /// hit-rotate the slow path would perform is a no-op.
+    last_line: u64,
     hits: u64,
     misses: u64,
 }
@@ -44,15 +50,32 @@ impl CacheSim {
             num_sets,
             assoc,
             line_bytes,
+            last_line: EMPTY,
             hits: 0,
             misses: 0,
         }
     }
 
     /// Access a byte address; returns `true` on hit. Updates LRU state.
+    ///
+    /// Same-line runs short-circuit through the `last_line` tag: the
+    /// previous access left that line MRU in its set, so counting the hit
+    /// without touching the ways is bit-identical to the full walk
+    /// ([`access_ref`](Self::access_ref) is the pre-fast-path twin).
     #[inline]
     pub fn access(&mut self, addr: u64) -> bool {
         let line = addr / self.line_bytes;
+        if line == self.last_line {
+            self.hits += 1;
+            return true;
+        }
+        self.last_line = line;
+        self.access_line(line)
+    }
+
+    /// The set scan + LRU rotate shared by both access paths.
+    #[inline]
+    fn access_line(&mut self, line: u64) -> bool {
         let set = (line % self.num_sets) as usize * self.assoc;
         let ways = &mut self.slots[set..set + self.assoc];
         // MRU is the last slot; scan backwards so the hot line hits first.
@@ -68,6 +91,16 @@ impl CacheSim {
         ways[self.assoc - 1] = line;
         self.misses += 1;
         false
+    }
+
+    /// The pre-fast-path access — the full set scan on every call, no
+    /// `last_line` involvement — kept in-binary as the `-ref` twin for the
+    /// oracle tests and the reference LB simulation. Do not interleave with
+    /// [`access`](Self::access) on one instance: this path does not
+    /// maintain the tag.
+    #[doc(hidden)]
+    pub fn access_ref(&mut self, addr: u64) -> bool {
+        self.access_line(addr / self.line_bytes)
     }
 
     pub fn hits(&self) -> u64 {
@@ -89,6 +122,7 @@ impl CacheSim {
     /// warp (§Perf).
     pub fn reset_all(&mut self) {
         self.slots.fill(EMPTY);
+        self.last_line = EMPTY;
         self.hits = 0;
         self.misses = 0;
     }
@@ -182,6 +216,33 @@ mod tests {
         c.reset_stats();
         assert_eq!(c.misses(), 0);
         assert!(c.access(0), "cached line survives stats reset");
+    }
+
+    #[test]
+    fn fast_path_oracle_matches_full_walk() {
+        // Random address stream with heavy same-line runs (the access
+        // pattern the tag targets) through two same-geometry instances:
+        // the fast path must agree with the full walk on every return
+        // value and on the final counters.
+        let mut opt = CacheSim::new(4, 64, 2);
+        let mut rf = CacheSim::new(4, 64, 2);
+        let mut x = 0x243f6a8885a308d3u64;
+        let mut addr = 0u64;
+        for _ in 0..20_000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            match (x >> 60) & 3 {
+                0 => addr = (x >> 33) % (1 << 20), // far jump
+                1 => addr += 64,                   // next line
+                _ => addr += (x >> 50) & 63,       // same-line run
+            }
+            assert_eq!(opt.access(addr), rf.access_ref(addr), "addr {addr}");
+        }
+        assert_eq!(opt.hits(), rf.hits());
+        assert_eq!(opt.misses(), rf.misses());
+        // Invalidation clears the tag: the next same-line access must miss.
+        opt.access(0);
+        opt.reset_all();
+        assert!(!opt.access(0));
     }
 
     #[test]

@@ -425,7 +425,53 @@ impl Simulator {
     /// into `out` (cleared first). Pure per-block arithmetic — shared by
     /// the sequential walk (one chunk covering every block) and the pooled
     /// chunks, so the two cannot drift.
+    /// §Perf (DESIGN.md §13): the walk hoists the per-warp and per-block
+    /// invariants out of the thread loop — `warp_c[w]` is constant across a
+    /// warp's lanes and `cta_c[b]` across the block, so the reduction is
+    /// `cta + max over warps (warp + max over lanes thread)` — and runs the
+    /// lane max 8 threads per iteration through a `[u64; 8]` accumulator
+    /// block (branch-free max lanes the compiler can keep in registers).
+    /// `max` over u64 is order-independent, so the output is bit-identical
+    /// to [`twc_block_chunk_ref`](Self::twc_block_chunk_ref).
     fn twc_block_chunk(
+        &self,
+        thread_c: &[u64],
+        warp_c: &[u64],
+        cta_c: &[u64],
+        b0: usize,
+        b1: usize,
+        out: &mut Vec<u64>,
+    ) {
+        let tpb = self.spec.threads_per_block as usize;
+        let ws = self.spec.warp_size as usize;
+        out.clear();
+        for b in b0..b1 {
+            let block = &thread_c[b * tpb..(b + 1) * tpb];
+            let mut worst = 0u64;
+            for (wo, lanes) in block.chunks(ws).enumerate() {
+                let w = (b * tpb + wo * ws) / ws;
+                let mut m = [0u64; 8];
+                let mut groups = lanes.chunks_exact(8);
+                for g in groups.by_ref() {
+                    for (slot, &c) in m.iter_mut().zip(g) {
+                        *slot = (*slot).max(c);
+                    }
+                }
+                let mut wmax =
+                    groups.remainder().iter().copied().fold(0u64, u64::max);
+                for &c in &m {
+                    wmax = wmax.max(c);
+                }
+                worst = worst.max(wmax + warp_c[w]);
+            }
+            out.push(worst + cta_c[b]);
+        }
+    }
+
+    /// The pre-SWAR scalar tally (one thread per iteration, the invariant
+    /// re-added on every lane), kept in-binary as the `-ref` twin for the
+    /// oracle tests and `benches/hotpath.rs`. Not a hot path.
+    fn twc_block_chunk_ref(
         &self,
         thread_c: &[u64],
         warp_c: &[u64],
@@ -446,6 +492,35 @@ impl Simulator {
             }
             out.push(worst);
         }
+    }
+
+    /// Bench entry point for the degree-tally SWAR path: the full-grid
+    /// per-block bottleneck reduction over caller-supplied accounting
+    /// arrays (`benches/hotpath.rs` `degree-tally` case).
+    #[doc(hidden)]
+    pub fn bench_degree_tally(
+        &self,
+        thread_c: &[u64],
+        warp_c: &[u64],
+        cta_c: &[u64],
+        out: &mut Vec<u64>,
+    ) {
+        let nb = self.spec.num_blocks as usize;
+        self.twc_block_chunk(thread_c, warp_c, cta_c, 0, nb, out);
+    }
+
+    /// [`bench_degree_tally`](Self::bench_degree_tally)'s scalar `-ref`
+    /// twin.
+    #[doc(hidden)]
+    pub fn bench_degree_tally_ref(
+        &self,
+        thread_c: &[u64],
+        warp_c: &[u64],
+        cta_c: &[u64],
+        out: &mut Vec<u64>,
+    ) {
+        let nb = self.spec.num_blocks as usize;
+        self.twc_block_chunk_ref(thread_c, warp_c, cta_c, 0, nb, out);
     }
 
     /// TWC kernel: exact per-thread accounting of the three bins, into the
@@ -644,7 +719,67 @@ impl Simulator {
     /// `simulate_chunk`'s LB per-block edge tally for blocks `[b0, b1)`:
     /// pure per-block arithmetic, one value per block in block order into
     /// `out` (cleared first).
+    ///
+    /// §Perf (DESIGN.md §13): the thread loop runs 8 threads per iteration
+    /// into a `[u64; 8]` accumulator block summed once at the end — u64
+    /// addition is exact and commutative, so the per-block total is
+    /// bit-identical to the scalar
+    /// [`lb_block_edges_chunk_ref`](Self::lb_block_edges_chunk_ref).
     fn lb_block_edges_chunk(
+        &self,
+        lb: &LbLaunch,
+        w: u64,
+        b0: usize,
+        b1: usize,
+        out: &mut Vec<u64>,
+    ) {
+        let tpb = self.spec.threads_per_block as u64;
+        let p = self.spec.total_threads();
+        let total = lb.total_edges();
+        let per_thread = |t: u64| -> u64 {
+            match lb.distribution {
+                Distribution::Cyclic => {
+                    if t < total {
+                        (total - t).div_ceil(p)
+                    } else {
+                        0
+                    }
+                }
+                Distribution::Blocked => {
+                    let lo = t * w;
+                    if lo < total {
+                        w.min(total - lo)
+                    } else {
+                        0
+                    }
+                }
+            }
+        };
+        out.clear();
+        for b in b0 as u64..b1 as u64 {
+            let t1 = (b + 1) * tpb;
+            let mut acc = [0u64; 8];
+            let mut t = b * tpb;
+            while t + 8 <= t1 {
+                for (k, slot) in acc.iter_mut().enumerate() {
+                    *slot += per_thread(t + k as u64);
+                }
+                t += 8;
+            }
+            let mut edges: u64 = acc.iter().sum();
+            while t < t1 {
+                edges += per_thread(t);
+                t += 1;
+            }
+            out.push(edges);
+        }
+    }
+
+    /// The pre-SWAR scalar tally (one thread per iteration, single
+    /// accumulator), kept in-binary as the `-ref` twin for the oracle
+    /// tests. Not a hot path.
+    #[cfg_attr(not(test), allow(dead_code))]
+    fn lb_block_edges_chunk_ref(
         &self,
         lb: &LbLaunch,
         w: u64,
@@ -959,7 +1094,7 @@ impl Simulator {
                 line_buf.dedup();
                 let mut first_edge = true;
                 for &line in &line_buf {
-                    let hit = cache.access(line * line_bytes);
+                    let hit = cache.access_ref(line * line_bytes);
                     if line >= EDGE_REGION && first_edge {
                         first_edge = false;
                         continue;
@@ -1262,6 +1397,76 @@ mod tests {
         );
         let k = r.kernels.iter().find(|k| k.label == "lb").unwrap();
         assert_eq!(k.block_edges.iter().sum::<u64>(), total);
+    }
+
+    #[test]
+    fn swar_degree_tally_oracle_matches_scalar_reference() {
+        // Random per-thread/warp/block accounting arrays on both
+        // geometries: the warp-hoisted 8-wide tally must reproduce the
+        // scalar reference walk bit-for-bit, including all-zero and
+        // single-hot-lane extremes.
+        let mut x = 0x9e3779b97f4a7c15u64;
+        let mut rng = move || {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            x >> 33
+        };
+        for spec in [GpuSpec::default_sim(), GpuSpec::k80_like()] {
+            let s = Simulator::new(spec, CostModel::default());
+            let nt = s.spec.total_threads() as usize;
+            let nw = s.spec.total_warps() as usize;
+            let nb = s.spec.num_blocks as usize;
+            let mut cases: Vec<(Vec<u64>, Vec<u64>, Vec<u64>)> = vec![
+                (vec![0; nt], vec![0; nw], vec![0; nb]),
+                (
+                    (0..nt).map(|_| rng()).collect(),
+                    (0..nw).map(|_| rng()).collect(),
+                    (0..nb).map(|_| rng()).collect(),
+                ),
+            ];
+            // Single hot lane in an otherwise-zero grid (the max must be
+            // found regardless of which 8-lane group it lands in).
+            let mut hot = vec![0u64; nt];
+            hot[nt - 3] = u64::MAX / 4;
+            cases.push((hot, vec![1; nw], vec![2; nb]));
+            for (thread_c, warp_c, cta_c) in &cases {
+                let (mut opt, mut rf) = (Vec::new(), Vec::new());
+                s.bench_degree_tally(thread_c, warp_c, cta_c, &mut opt);
+                s.bench_degree_tally_ref(thread_c, warp_c, cta_c, &mut rf);
+                assert_eq!(opt, rf);
+                // Partial block ranges go through the same chunk walk.
+                s.twc_block_chunk(thread_c, warp_c, cta_c, 1, nb - 1, &mut opt);
+                s.twc_block_chunk_ref(thread_c, warp_c, cta_c, 1, nb - 1, &mut rf);
+                assert_eq!(opt, rf);
+            }
+        }
+    }
+
+    #[test]
+    fn swar_lb_block_edges_oracle_matches_scalar_reference() {
+        // Both distributions over totals hitting every tail shape: empty,
+        // single edge, fewer edges than threads, exact multiples, ragged
+        // remainders, and far beyond the grid.
+        for spec in [GpuSpec::default_sim(), GpuSpec::k80_like()] {
+            let s = Simulator::new(spec, CostModel::default());
+            let p = s.spec.total_threads();
+            let nb = s.spec.num_blocks as usize;
+            for dist in [Distribution::Cyclic, Distribution::Blocked] {
+                for total in [0, 1, 7, p - 1, p, p + 1, p * 3, p * 3 + 17, p * 40 + 5] {
+                    let lb = LbLaunch {
+                        vertices: vec![0],
+                        prefix: vec![total],
+                        distribution: dist,
+                        search: true,
+                    };
+                    let w = total.div_ceil(p);
+                    let (mut opt, mut rf) = (Vec::new(), Vec::new());
+                    s.lb_block_edges_chunk(&lb, w, 0, nb, &mut opt);
+                    s.lb_block_edges_chunk_ref(&lb, w, 0, nb, &mut rf);
+                    assert_eq!(opt, rf, "dist={dist:?} total={total}");
+                    assert_eq!(opt.iter().sum::<u64>(), total, "tally must be exact");
+                }
+            }
+        }
     }
 
     #[test]

@@ -62,8 +62,14 @@ pub fn generate(cfg: &PowerLawConfig) -> EdgeList {
         m += s as u64;
     }
 
+    // Reservation arithmetic stays in u64 until the final checked cast: at
+    // the sc >= 24 analogue (|V| in the millions, avg degree in the tens)
+    // `2 * m` no longer fits in u32, and a wrapping cast would
+    // under-reserve or, on a 32-bit host, truncate.
+    let reserve = if cfg.symmetric { 2 * m } else { m };
     let mut el = EdgeList::new(cfg.num_vertices);
-    el.edges.reserve(if cfg.symmetric { 2 * m as usize } else { m as usize });
+    el.edges
+        .reserve(usize::try_from(reserve).expect("edge count overflows usize"));
     for (v, &d) in degrees.iter().enumerate() {
         for _ in 0..d {
             let dst = rng.gen_range(n) as u32;

@@ -50,12 +50,23 @@ impl RmatConfig {
 }
 
 /// Generate a directed R-MAT multigraph.
+///
+/// All size arithmetic is u64 before any narrowing: at sc >= 24 the edge
+/// count (`n * edge_factor`) no longer fits in u32, and a silent `as u32`
+/// on the vertex count would truncate at sc >= 32 — both are checked here
+/// instead of wrapping.
 pub fn generate(cfg: &RmatConfig) -> EdgeList {
+    assert!(
+        cfg.scale < 32,
+        "rmat scale {} overflows u32 vertex ids",
+        cfg.scale
+    );
     let n = 1u64 << cfg.scale;
     let m = n * cfg.edge_factor as u64;
     let mut rng = Rng::new(cfg.seed);
-    let mut el = EdgeList::new(n as u32);
-    el.edges.reserve(m as usize);
+    let mut el = EdgeList::new(u32::try_from(n).expect("scale < 32"));
+    el.edges
+        .reserve(usize::try_from(m).expect("edge count overflows usize"));
     for _ in 0..m {
         let (src, dst) = sample_edge(cfg, &mut rng);
         let w = (1 + rng.gen_range(cfg.max_weight as u64)) as f32;
@@ -138,6 +149,12 @@ mod tests {
         let el = generate(&RmatConfig::paper(12, 3));
         let g = CsrGraph::from_edge_list(&el);
         assert_eq!(g.max_out_degree_vertex(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows u32 vertex ids")]
+    fn scale_32_is_rejected_not_truncated() {
+        generate(&RmatConfig::paper(32, 1));
     }
 
     #[test]

@@ -29,6 +29,13 @@ pub const ALL_INPUTS: [&str; 8] = [
     "uk-s",
 ];
 
+/// Opt-in oversize presets: accepted by [`generate`]/[`build`] and by
+/// `--inputs` filters, but *not* part of [`ALL_INPUTS`] — they are far too
+/// large for the full campaign matrix (rmat24 at delta 0 is 1 M vertices /
+/// 16.7 M edges) and exist for the disk-CSR cache path (`--graph-cache`)
+/// and scaling studies.
+pub const EXTRA_INPUTS: [&str; 1] = ["rmat24"];
+
 /// Single-host (Momentum / Table 2) inputs.
 pub const SINGLE_HOST_INPUTS: [&str; 4] = ["rmat18", "rmat20", "orkut-s", "road-s"];
 
@@ -53,6 +60,7 @@ pub fn paper_name(preset: &str) -> &'static str {
         "road-s" => "road-USA",
         "rmat21" => "rmat26",
         "rmat22" => "rmat27",
+        "rmat24" => "rmat29",
         "twitter-s" => "twitter40",
         "uk-s" => "uk2007",
         _ => "?",
@@ -72,6 +80,7 @@ pub fn generate(name: &str, scale_delta: i32, seed: u64) -> Option<EdgeList> {
         "rmat20" => rmat::generate(&rmat::RmatConfig::paper(sc(16), seed ^ 1)),
         "rmat21" => rmat::generate(&rmat::RmatConfig::paper(sc(17), seed ^ 2)),
         "rmat22" => rmat::generate(&rmat::RmatConfig::paper(sc(18), seed ^ 3)),
+        "rmat24" => rmat::generate(&rmat::RmatConfig::paper(sc(20), seed ^ 8)),
         "orkut-s" => powerlaw::generate(&powerlaw::PowerLawConfig {
             num_vertices: nv(40_000),
             avg_degree: 60,
@@ -194,5 +203,32 @@ mod tests {
         for name in ALL_INPUTS {
             assert_ne!(paper_name(name), "?");
         }
+        for name in EXTRA_INPUTS {
+            assert_ne!(paper_name(name), "?");
+        }
+    }
+
+    #[test]
+    fn extra_presets_generate_but_stay_out_of_the_matrix() {
+        for name in EXTRA_INPUTS {
+            assert!(generate(name, -6, 1).unwrap().num_edges() > 0, "{name}");
+            assert!(!ALL_INPUTS.contains(&name), "{name} must stay opt-in");
+        }
+    }
+
+    #[test]
+    fn rmat24_counts_and_hub_pinned() {
+        // The sc>=20 regime the u64 generator guards exist for: exact
+        // vertex/edge counts at delta 0, and a hub that clears the
+        // sim-default THRESHOLD (3072 launched threads).
+        let el = generate("rmat24", 0, 1).unwrap();
+        assert_eq!(el.num_vertices, 1 << 20);
+        assert_eq!(el.num_edges(), 16 << 20);
+        let mut deg = vec![0u32; el.num_vertices as usize];
+        for e in &el.edges {
+            deg[e.src as usize] += 1;
+        }
+        let hub = deg.iter().copied().max().unwrap() as u64;
+        assert!(hub >= 3072, "rmat24 hub {hub} must exceed THRESHOLD");
     }
 }

@@ -4,10 +4,12 @@
 
 pub mod coo;
 pub mod csr;
+pub mod disk;
 pub mod gen;
 pub mod inputs;
 pub mod io;
 pub mod props;
+pub mod reorder;
 pub mod rng;
 
 pub use coo::{Edge, EdgeList};

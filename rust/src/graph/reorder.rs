@@ -1,0 +1,296 @@
+//! Cache-aware vertex reordering (DESIGN.md §13).
+//!
+//! Osama et al. (arXiv:2212.08964) treat locality-oriented reordering as a
+//! preprocessing dimension orthogonal to the load balancer: renaming
+//! vertices so that vertices referenced together sit close in memory cuts
+//! cache misses without touching the schedule. This module applies a
+//! permutation at build time and keeps the old<->new mapping so results are
+//! always reported in original vertex ids.
+//!
+//! Legality (DESIGN.md §13): relabeling is a graph isomorphism, so any
+//! per-vertex quantity that does not *encode* vertex ids is bit-identical
+//! after mapping back — BFS depths, delta-stepping SSSP distances (the
+//! bucket order is distance-driven), and k-core flags. CC labels (min
+//! vertex id in component) and PageRank (f32 summation order) are not; the
+//! parity suite pins the invariant apps only.
+
+use super::coo::EdgeList;
+use super::csr::CsrGraph;
+
+/// Which permutation to apply at graph-build time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Reorder {
+    /// Identity: keep generator order.
+    #[default]
+    None,
+    /// Sort by (out-degree descending, id ascending): hubs — exactly the
+    /// vertices the LB kernel's prefix array and the frontier touch most —
+    /// share leading cache lines.
+    Degree,
+    /// Reverse Cuthill-McKee-style BFS ordering: min-(degree, id) seeds,
+    /// neighbors enqueued in (degree, id) order, final order reversed.
+    /// Clusters each BFS level's vertices, shrinking label-array stride.
+    Rcm,
+}
+
+/// Valid `--reorder` values, in the order [`Reorder::parse`] accepts them.
+pub const REORDER_NAMES: &[&str] = &["none", "degree", "rcm"];
+
+impl Reorder {
+    pub fn parse(s: &str) -> Option<Reorder> {
+        match s {
+            "none" => Some(Reorder::None),
+            "degree" => Some(Reorder::Degree),
+            "rcm" => Some(Reorder::Rcm),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Reorder::None => "none",
+            Reorder::Degree => "degree",
+            Reorder::Rcm => "rcm",
+        }
+    }
+}
+
+/// Old<->new vertex-id mapping produced by [`reorder`]. Kept alongside the
+/// renamed graph so sources map forward and labels map back.
+#[derive(Debug, Clone)]
+pub struct Permutation {
+    /// `order[new] = old`: the vertex placed at each new id.
+    order: Vec<u32>,
+    /// `rank[old] = new`: inverse of `order`.
+    rank: Vec<u32>,
+}
+
+impl Permutation {
+    /// Identity permutation over `n` vertices (the `Reorder::None` case).
+    pub fn identity(n: usize) -> Permutation {
+        let order: Vec<u32> = (0..n as u32).collect();
+        Permutation { rank: order.clone(), order }
+    }
+
+    fn from_order(order: Vec<u32>) -> Permutation {
+        let mut rank = vec![0u32; order.len()];
+        for (new, &old) in order.iter().enumerate() {
+            rank[old as usize] = new as u32;
+        }
+        Permutation { order, rank }
+    }
+
+    /// New id of original vertex `old` (forward map, e.g. for the source).
+    #[inline]
+    pub fn to_new(&self, old: u32) -> u32 {
+        self.rank[old as usize]
+    }
+
+    /// Original id of renamed vertex `new`.
+    #[inline]
+    pub fn to_old(&self, new: u32) -> u32 {
+        self.order[new as usize]
+    }
+
+    /// Map per-vertex labels from renamed ids back to original ids:
+    /// `out[old] = new_labels[rank[old]]`.
+    pub fn labels_to_original(&self, new_labels: &[f32], out: &mut Vec<f32>) {
+        assert_eq!(new_labels.len(), self.rank.len());
+        out.clear();
+        out.extend(self.rank.iter().map(|&new| new_labels[new as usize]));
+    }
+}
+
+/// Rename `g`'s vertices per `kind`, returning the renamed graph and the
+/// permutation. Deterministic: all orderings break ties by vertex id, and
+/// per-vertex adjacency keeps its relative order (only endpoints are
+/// renamed), so the result is a pure function of `(g, kind)`.
+pub fn reorder(g: &CsrGraph, kind: Reorder) -> (CsrGraph, Permutation) {
+    let n = g.num_vertices();
+    let perm = match kind {
+        Reorder::None => return (g.clone(), Permutation::identity(n)),
+        Reorder::Degree => Permutation::from_order(degree_order(g)),
+        Reorder::Rcm => Permutation::from_order(rcm_order(g)),
+    };
+    let mut el = EdgeList::new(n as u32);
+    el.edges.reserve(g.num_edges());
+    for new_u in 0..n as u32 {
+        let (dsts, ws) = g.out_edges(perm.to_old(new_u));
+        for (&old_v, &w) in dsts.iter().zip(ws) {
+            el.push(new_u, perm.to_new(old_v), w);
+        }
+    }
+    (CsrGraph::from_edge_list(&el), perm)
+}
+
+fn degree_order(g: &CsrGraph) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    order.sort_by_key(|&v| (std::cmp::Reverse(g.out_degree(v)), v));
+    order
+}
+
+fn rcm_order(g: &CsrGraph) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut seeds: Vec<u32> = (0..n as u32).collect();
+    seeds.sort_by_key(|&v| (g.out_degree(v), v));
+    let mut visited = vec![false; n];
+    let mut order: Vec<u32> = Vec::with_capacity(n);
+    let mut nbrs: Vec<u32> = Vec::new();
+    for &seed in &seeds {
+        if visited[seed as usize] {
+            continue;
+        }
+        // BFS from this component's min-(degree, id) seed; `order` doubles
+        // as the queue (cursor walks it as vertices are appended).
+        let cursor0 = order.len();
+        visited[seed as usize] = true;
+        order.push(seed);
+        let mut cursor = cursor0;
+        while cursor < order.len() {
+            let u = order[cursor];
+            cursor += 1;
+            nbrs.clear();
+            nbrs.extend_from_slice(g.out_edges(u).0);
+            nbrs.sort_by_key(|&v| (g.out_degree(v), v));
+            for &v in &nbrs {
+                if !visited[v as usize] {
+                    visited[v as usize] = true;
+                    order.push(v);
+                }
+            }
+        }
+    }
+    order.reverse();
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain_with_hub() -> CsrGraph {
+        // 0-1-2-3 path plus hub 4 -> {0,1,2,3}.
+        let mut el = EdgeList::new(5);
+        for v in 0..3u32 {
+            el.push(v, v + 1, 1.0);
+            el.push(v + 1, v, 1.0);
+        }
+        for v in 0..4u32 {
+            el.push(4, v, 1.0);
+        }
+        CsrGraph::from_edge_list(&el)
+    }
+
+    fn is_permutation(p: &Permutation, n: usize) -> bool {
+        let mut seen = vec![false; n];
+        for new in 0..n as u32 {
+            let old = p.to_old(new);
+            if seen[old as usize] || p.to_new(old) != new {
+                return false;
+            }
+            seen[old as usize] = true;
+        }
+        seen.iter().all(|&s| s)
+    }
+
+    /// Edge multiset in original ids, sorted — the isomorphism invariant.
+    fn canonical_edges(g: &CsrGraph, p: &Permutation) -> Vec<(u32, u32, u32)> {
+        let mut out = Vec::with_capacity(g.num_edges());
+        for u in 0..g.num_vertices() as u32 {
+            let (dsts, ws) = g.out_edges(u);
+            for (&v, &w) in dsts.iter().zip(ws) {
+                out.push((p.to_old(u), p.to_old(v), w.to_bits()));
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn every_kind_is_an_isomorphism() {
+        let g = chain_with_hub();
+        let id = Permutation::identity(g.num_vertices());
+        let want = canonical_edges(&g, &id);
+        for kind in [Reorder::None, Reorder::Degree, Reorder::Rcm] {
+            let (rg, p) = reorder(&g, kind);
+            assert!(is_permutation(&p, g.num_vertices()), "{kind:?}");
+            assert_eq!(rg.num_vertices(), g.num_vertices());
+            assert_eq!(rg.num_edges(), g.num_edges());
+            assert_eq!(canonical_edges(&rg, &p), want, "{kind:?}");
+            assert_eq!(rg.out_degree(p.to_new(4)), g.out_degree(4), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let g = chain_with_hub();
+        let (rg, p) = reorder(&g, Reorder::None);
+        assert_eq!(rg.row_offsets, g.row_offsets);
+        assert_eq!(rg.col_idx, g.col_idx);
+        for v in 0..5 {
+            assert_eq!(p.to_new(v), v);
+        }
+    }
+
+    #[test]
+    fn degree_puts_hub_first() {
+        let g = chain_with_hub();
+        let (rg, p) = reorder(&g, Reorder::Degree);
+        assert_eq!(p.to_new(4), 0, "hub gets new id 0");
+        assert_eq!(rg.out_degree(0), 4);
+        let degs: Vec<u64> =
+            (0..rg.num_vertices() as u32).map(|v| rg.out_degree(v)).collect();
+        assert!(degs.windows(2).all(|w| w[0] >= w[1]), "{degs:?}");
+    }
+
+    #[test]
+    fn rcm_covers_disconnected_components() {
+        // Two components: an isolated pair {5,6} plus the chain+hub.
+        let mut el = EdgeList::new(7);
+        for v in 0..3u32 {
+            el.push(v, v + 1, 1.0);
+            el.push(v + 1, v, 1.0);
+        }
+        for v in 0..4u32 {
+            el.push(4, v, 1.0);
+        }
+        el.push(5, 6, 1.0);
+        el.push(6, 5, 1.0);
+        let g = CsrGraph::from_edge_list(&el);
+        let (_, p) = reorder(&g, Reorder::Rcm);
+        assert!(is_permutation(&p, 7));
+    }
+
+    #[test]
+    fn labels_round_trip_through_permutation() {
+        let g = chain_with_hub();
+        let (_, p) = reorder(&g, Reorder::Degree);
+        // Label each renamed vertex with its original id; mapping back must
+        // give out[old] = old.
+        let new_labels: Vec<f32> =
+            (0..5u32).map(|new| p.to_old(new) as f32).collect();
+        let mut out = Vec::new();
+        p.labels_to_original(&new_labels, &mut out);
+        assert_eq!(out, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn reorder_is_deterministic() {
+        let g = chain_with_hub();
+        for kind in [Reorder::Degree, Reorder::Rcm] {
+            let (a, pa) = reorder(&g, kind);
+            let (b, pb) = reorder(&g, kind);
+            assert_eq!(a.col_idx, b.col_idx);
+            assert_eq!(pa.order, pb.order);
+        }
+    }
+
+    #[test]
+    fn parse_and_names_agree() {
+        for &name in REORDER_NAMES {
+            assert_eq!(Reorder::parse(name).unwrap().name(), name);
+        }
+        assert!(Reorder::parse("bogus").is_none());
+        assert_eq!(Reorder::default(), Reorder::None);
+    }
+}

@@ -166,8 +166,61 @@ impl Composition {
 /// vertices at or above `threshold` accumulate into the huge list with an
 /// inclusive degree prefix; the rest are binned per `bucket`. Callers own
 /// (and pre-clear) the output buffers.
+///
+/// §Perf (DESIGN.md §13): the walk is batched 8 vertices per iteration —
+/// the degree gather (two `row_offsets` loads per vertex, the pass's only
+/// memory traffic) fills a `[u64; 8]` accumulator block first, then the
+/// branchy routing consumes it in order. Separating the gather from the
+/// routing keeps the loads pipelined across the unpredictable
+/// huge-vs-rest branch. Output order and the running inclusive prefix are
+/// untouched, so the schedule is bit-identical to
+/// [`split_into_ref`](split_into_ref).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn split_into(
+    active: &[u32],
+    g: &CsrGraph,
+    dir: Direction,
+    spec: &GpuSpec,
+    threshold: u64,
+    bucket: Bucket,
+    huge: &mut Vec<u32>,
+    prefix: &mut Vec<u64>,
+    rest: &mut Vec<VertexItem>,
+) {
+    let mut run = 0u64;
+    let mut degs = [0u64; 8];
+    let mut batch = active.chunks_exact(8);
+    for vs in batch.by_ref() {
+        for (slot, &v) in degs.iter_mut().zip(vs) {
+            *slot = degree(g, v, dir);
+        }
+        for (&v, &d) in vs.iter().zip(&degs) {
+            if d >= threshold {
+                run += d;
+                huge.push(v);
+                prefix.push(run);
+            } else {
+                rest.push(VertexItem { vertex: v, degree: d, unit: bucket.bin(d, spec) });
+            }
+        }
+    }
+    for &v in batch.remainder() {
+        let d = degree(g, v, dir);
+        if d >= threshold {
+            run += d;
+            huge.push(v);
+            prefix.push(run);
+        } else {
+            rest.push(VertexItem { vertex: v, degree: d, unit: bucket.bin(d, spec) });
+        }
+    }
+}
+
+/// The pre-batching scalar walk (one degree probe + route per iteration),
+/// kept in-binary as the `-ref` twin for the oracle tests. Not a hot path.
+#[doc(hidden)]
+#[allow(clippy::too_many_arguments)]
+pub fn split_into_ref(
     active: &[u32],
     g: &CsrGraph,
     dir: Direction,
@@ -397,6 +450,34 @@ mod tests {
                     &comp, &active, &g, Direction::Push, &spec, 3, &mut got, &pool,
                 );
                 assert_eq!(got.sched, want.sched, "{comp:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_split_matches_scalar_reference() {
+        // Oracle for the 8-wide probe batch: the skewed graph supplies
+        // hub/mid/leaf/zero degrees; thresholds cover never/always/middle;
+        // lengths exercise every chunk remainder 0..=7 plus the full set.
+        let g = skewed();
+        let spec = GpuSpec::default_sim();
+        let all: Vec<u32> = (0..g.num_vertices() as u32).collect();
+        for threshold in [0u64, 1, 150, 500_000, u64::MAX] {
+            for len in [0usize, 1, 5, 7, 8, 9, 15, 1_000, 9_999, 10_000] {
+                let active = &all[..len];
+                let (mut h, mut p, mut r) = (Vec::new(), Vec::new(), Vec::new());
+                split_into(
+                    active, &g, Direction::Push, &spec, threshold, Bucket::Twc,
+                    &mut h, &mut p, &mut r,
+                );
+                let (mut hr, mut pr, mut rr) = (Vec::new(), Vec::new(), Vec::new());
+                split_into_ref(
+                    active, &g, Direction::Push, &spec, threshold, Bucket::Twc,
+                    &mut hr, &mut pr, &mut rr,
+                );
+                assert_eq!(h, hr, "huge t={threshold} len={len}");
+                assert_eq!(p, pr, "prefix t={threshold} len={len}");
+                assert_eq!(r, rr, "rest t={threshold} len={len}");
             }
         }
     }

@@ -13,6 +13,7 @@
 //!            [--distribution <cyclic|blocked>] [--threshold T]
 //!            [--balancer <vertex|twc|edge-lb|alb|enterprise|adaptive|auto>]
 //!            [--direction-opt true] [--delta W] [--kcore-k K]
+//!            [--reorder <none|degree|rcm>] [--graph-cache DIR]
 //!            [--scale-delta D] [--seed S] [--json <out.json>]
 //! alb repro  <table1|fig1|table2|fig5|fig6|fig7|fig8|fig9|fig10|fig11|all>
 //!            [--out results] [--scale-delta D] [--quick]
@@ -21,7 +22,7 @@
 //!            [--scale-delta D] [--seed S] [--delta W] [--sim-threads N]
 //!            [--exec <parallel|sequential>] [--out CAMPAIGN.json]
 //!            [--resume true|false] [--check-golden CAMPAIGN.golden.json]
-//!            [--check-adaptive]
+//!            [--check-adaptive] [--graph-cache DIR]
 //! ```
 //!
 //! Argument parsing is hand-rolled on std (the offline vendored crate set
@@ -38,7 +39,8 @@ use alb_graph::apps::App;
 use alb_graph::config::Framework;
 use alb_graph::coordinator::{run_distributed, ClusterConfig, ExecMode};
 use alb_graph::gpu::GpuSpec;
-use alb_graph::graph::{inputs, io, props, CsrGraph};
+use alb_graph::graph::reorder::{self, Reorder};
+use alb_graph::graph::{disk, inputs, io, props, CsrGraph};
 use alb_graph::lb::{adaptive, Balancer, Distribution};
 use alb_graph::metrics::{Json, Table};
 use alb_graph::partition::Policy;
@@ -249,8 +251,32 @@ fn cmd_run(args: &Args) -> Result<()> {
         other => bail!("--engine native|pjrt (got {other})"),
     };
 
-    let mut g = load_graph(input, delta, seed)?;
-    let src = inputs::source_vertex(input, &g);
+    let reorder_kind = match args.get("reorder") {
+        Some(r) => Reorder::parse(r).ok_or_else(|| {
+            anyhow!(
+                "unknown --reorder {r}; valid values: {}",
+                reorder::REORDER_NAMES.join(", ")
+            )
+        })?,
+        None => Reorder::None,
+    };
+
+    let (mut g, cache_hit) = match args.get("graph-cache") {
+        Some(dir) if !input.ends_with(".albg") => {
+            disk::GraphCache::new(Path::new(dir))?.load_or_build(input, delta, seed)?
+        }
+        Some(_) => bail!("--graph-cache applies to named input presets, not .albg files"),
+        None => (load_graph(input, delta, seed)?, false),
+    };
+    // Source selection always runs on original ids; reordering then renames
+    // it through the permutation so the run is the same traversal
+    // (DESIGN.md §13).
+    let mut src = inputs::source_vertex(input, &g);
+    if reorder_kind != Reorder::None {
+        let (renamed, perm) = reorder::reorder(&g, reorder_kind);
+        g = renamed;
+        src = perm.to_new(src);
+    }
     let started = std::time::Instant::now();
 
     let mut report = Json::obj()
@@ -259,6 +285,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         .set("framework", fw.name())
         .set("gpu_spec", spec.name.as_str())
         .set("gpus", gpus)
+        .set("graph_cache_hit", cache_hit)
+        .set("reorder", reorder_kind.name())
         .set("seed", seed)
         .set("sim_threads", cfg.sim_threads);
 
@@ -503,19 +531,26 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         None => None,
     };
 
+    let graph_cache = args.get("graph-cache").map(PathBuf::from);
     let total = cells.len();
     let started = std::time::Instant::now();
     let mut done = 0usize;
-    let outcome = campaign::run_sweep(&spec, &prior, Some(&out), |r, executed| {
-        done += 1;
-        println!(
-            "[{done:>4}/{total}] {:<44} {:>6} rounds {:>14} cycles{}",
-            r.id,
-            r.rounds,
-            r.total_cycles,
-            if executed { "" } else { "  (cached)" },
-        );
-    })?;
+    let outcome = campaign::run_sweep_cached(
+        &spec,
+        &prior,
+        Some(&out),
+        graph_cache.as_deref(),
+        |r, executed| {
+            done += 1;
+            println!(
+                "[{done:>4}/{total}] {:<44} {:>6} rounds {:>14} cycles{}",
+                r.id,
+                r.rounds,
+                r.total_cycles,
+                if executed { "" } else { "  (cached)" },
+            );
+        },
+    )?;
 
     // Whole-matrix golden expectations that hold on any machine
     // (balancer-independence, scale-out label consistency).

@@ -17,6 +17,7 @@ use alb_graph::comm::exchange::{ExchangePlan, Flow, HasPartState, PartState};
 use alb_graph::comm::{superstep_mut, ExecMode};
 use alb_graph::exec::Pool;
 use alb_graph::gpu::{CostModel, GpuSpec, Simulator};
+use alb_graph::graph::reorder::{self, Reorder};
 use alb_graph::graph::{CsrGraph, EdgeList};
 use alb_graph::lb::{Balancer, Direction, Distribution};
 use alb_graph::partition::{partition, Policy};
@@ -139,6 +140,68 @@ fn steady_state_engine_round_loop_is_allocation_free() {
             0,
             "steady-state rounds allocated under {}",
             balancer.name()
+        );
+    }
+}
+
+#[test]
+fn steady_state_round_loop_on_reordered_graph_is_allocation_free() {
+    // ISSUE 7: reordering happens once at build time and hands the engine
+    // an ordinary CsrGraph — the steady-state round loop must stay
+    // allocation-free on it. Degree ordering renames the hub to vertex 0,
+    // so the 0..4000 active set still drives the full ALB split.
+    let g0 = hub_graph();
+    for kind in [Reorder::Degree, Reorder::Rcm] {
+        let (g, _perm) = reorder::reorder(&g0, kind);
+        let n = g.num_vertices();
+        let spec = GpuSpec::default_sim();
+        let sim = Simulator::new(spec.clone(), CostModel::default());
+        let active: Vec<u32> = (0..4_000).collect();
+        let balancer =
+            Balancer::Alb { distribution: Distribution::Cyclic, threshold: None };
+        let mut scratch = RoundScratch::for_vertices(n);
+        let mut labels = vec![f32::INFINITY; n];
+
+        let round = |labels: &mut Vec<f32>, scratch: &mut RoundScratch| {
+            labels.fill(f32::INFINITY);
+            for &v in &active {
+                labels[v as usize] = 0.0;
+            }
+            balancer.schedule_into(
+                &active, &g, Direction::Push, &spec, n as u64,
+                &mut scratch.sched,
+            );
+            sim.simulate_into(&scratch.sched.sched, true, &mut scratch.sim);
+            for &v in &active {
+                let dv = labels[v as usize];
+                let (dsts, ws) = g.out_edges(v);
+                for (&dst, &w) in dsts.iter().zip(ws) {
+                    let cand = dv + w;
+                    if cand < labels[dst as usize] {
+                        labels[dst as usize] = cand;
+                        scratch.next.push(dst);
+                    }
+                }
+            }
+            scratch.next.take_sorted_into(&mut scratch.active);
+            scratch.active.len()
+        };
+
+        let warm = round(&mut labels, &mut scratch);
+        assert!(warm > 0, "warmup must produce a frontier ({kind:?})");
+        for _ in 0..2 {
+            round(&mut labels, &mut scratch);
+        }
+
+        let before = allocs_on_this_thread();
+        for _ in 0..10 {
+            round(&mut labels, &mut scratch);
+        }
+        let after = allocs_on_this_thread();
+        assert_eq!(
+            after - before,
+            0,
+            "steady-state rounds on the {kind:?}-reordered graph allocated"
         );
     }
 }

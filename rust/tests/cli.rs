@@ -48,8 +48,9 @@ fn run_single_gpu_json_schema() {
     assert_eq!(
         keys_at(&json, 1),
         [
-            "app", "edges", "framework", "gpu_spec", "gpus", "input",
-            "lb_rounds", "rounds", "seed", "sim_threads", "simulated_ms",
+            "app", "edges", "framework", "gpu_spec", "gpus", "graph_cache_hit",
+            "input", "lb_rounds", "reorder", "rounds", "seed", "sim_threads",
+            "simulated_ms",
         ],
         "single-GPU `alb run --json` schema drifted"
     );
@@ -73,8 +74,9 @@ fn run_multi_gpu_json_schema() {
         [
             "app", "comm_bytes", "comm_bytes_inter", "comm_bytes_intra",
             "comm_ms", "comp_ms", "exec", "framework", "gpu_spec", "gpus",
-            "input", "os_threads", "per_gpu_wall_ms", "policy", "rounds",
-            "seed", "sim_threads", "simulated_ms",
+            "graph_cache_hit", "input", "os_threads", "per_gpu_wall_ms",
+            "policy", "reorder", "rounds", "seed", "sim_threads",
+            "simulated_ms",
         ],
         "multi-GPU `alb run --json` schema drifted"
     );
@@ -181,6 +183,17 @@ fn invalid_values_exit_nonzero_with_valid_range() {
         &["run", "--app", "bfs", "--input", "road-s", "--scale-delta", "-4",
           "--balancer", "bogus"],
         "vertex, twc, edge-lb, alb, enterprise, adaptive, auto",
+    );
+    // --reorder lists the ordering set; --graph-cache rejects .albg files.
+    expect_failure(
+        &["run", "--app", "bfs", "--input", "road-s", "--scale-delta", "-4",
+          "--reorder", "bogus"],
+        "none, degree, rcm",
+    );
+    expect_failure(
+        &["run", "--app", "bfs", "--input", "fake.albg", "--graph-cache",
+          "/tmp/alb-cli-nocache"],
+        "named input presets",
     );
 }
 

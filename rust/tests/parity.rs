@@ -18,6 +18,10 @@
 //!    worker-pool simulation must be bit-identical — labels, cycles,
 //!    per-round records, and `DistRunResult` — across
 //!    `sim_threads ∈ {1, 2, 4, 7}` on every input preset and balancer.
+//! 5. **Reordering parity (DESIGN.md §13)**: running on a `--reorder`ed
+//!    graph and mapping the labels back through the permutation must be
+//!    bit-identical to the unreordered run for the order-invariant apps
+//!    (bfs, sssp), on every input preset and balancer.
 
 use alb_graph::apps::engine::{run, run_push_reference, EngineConfig};
 use alb_graph::apps::App;
@@ -25,6 +29,7 @@ use alb_graph::coordinator::{
     run_distributed, run_distributed_reference, ClusterConfig, ExecMode,
 };
 use alb_graph::graph::inputs;
+use alb_graph::graph::reorder::{self, Reorder};
 use alb_graph::lb::{Balancer, Distribution};
 use alb_graph::partition::Policy;
 
@@ -153,6 +158,52 @@ fn scratch_reuse_bit_identical_to_fresh_alloc_reference() {
                      fresh-allocation reference",
                     app.name()
                 );
+            }
+        }
+    }
+}
+
+#[test]
+fn reordered_runs_produce_bit_identical_original_id_labels() {
+    // ISSUE 7 acceptance gate: reordering is a *layout* change, never an
+    // answer change. For the vertex-order-invariant apps, run the renamed
+    // graph from the forward-mapped source, map the labels back through
+    // the inverse permutation, and require the exact bits of the
+    // unreordered run — same round count too (level sets are sets).
+    // cc (min-id labels) and pr (f32 summation order) are excluded by
+    // design; DESIGN.md §13 has the legality table.
+    let mut back = Vec::new();
+    for input in inputs::ALL_INPUTS {
+        let g0 = inputs::build(input, DELTA, 31).unwrap();
+        let src = inputs::source_vertex(input, &g0);
+        for app in [App::Bfs, App::Sssp] {
+            for balancer in all_balancers() {
+                let name = balancer.name();
+                let cfg = EngineConfig {
+                    balancer,
+                    max_rounds: 1_000_000,
+                    ..EngineConfig::default()
+                };
+                let base = run(app, &mut g0.clone(), src, &cfg, None).unwrap();
+                for kind in [Reorder::Degree, Reorder::Rcm] {
+                    let (rg, perm) = reorder::reorder(&g0, kind);
+                    let r = run(app, &mut rg.clone(), perm.to_new(src), &cfg, None)
+                        .unwrap();
+                    perm.labels_to_original(&r.labels, &mut back);
+                    let ctx = format!(
+                        "{} under {name} on {input} reorder={}",
+                        app.name(),
+                        kind.name()
+                    );
+                    let bits =
+                        |l: &[f32]| l.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                    assert_eq!(bits(&back), bits(&base.labels), "{ctx}: labels");
+                    assert_eq!(
+                        r.rounds.len(),
+                        base.rounds.len(),
+                        "{ctx}: round count"
+                    );
+                }
             }
         }
     }
