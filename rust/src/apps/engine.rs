@@ -141,6 +141,23 @@ pub struct RunResult {
     pub labels: Vec<f32>,
     pub rounds: Vec<RoundRecord>,
     pub total_cycles: u64,
+    /// Did the run reach its fixpoint, or did it exhaust `max_rounds`?
+    /// Surfaced in the CLI JSON and per campaign cell (ISSUE 8).
+    pub converged: bool,
+}
+
+/// Record the loop-exit condition, warning loudly on round exhaustion — a
+/// run that silently stops at `max_rounds` reads as a converged answer when
+/// it is not one.
+fn warn_exhausted(app: App, converged: bool, max_rounds: u32) -> bool {
+    if !converged {
+        eprintln!(
+            "warning: {} exhausted --max-rounds ({max_rounds}) before \
+             converging; labels are a partial fixpoint",
+            app.name()
+        );
+    }
+    converged
 }
 
 impl RunResult {
@@ -382,7 +399,9 @@ fn run_push(
         }
         scratch.next.take_sorted_into(&mut scratch.active);
     }
-    Ok(RunResult { app, labels, rounds, total_cycles })
+    let converged =
+        warn_exhausted(app, scratch.active.is_empty(), cfg.max_rounds);
+    Ok(RunResult { app, labels, rounds, total_cycles, converged })
 }
 
 /// Take the round's kernel stats out of the scratch when `record_blocks` is
@@ -551,7 +570,8 @@ pub fn run_push_reference(
         next.sort_unstable();
         active = next;
     }
-    Ok(RunResult { app, labels, rounds, total_cycles })
+    let converged = warn_exhausted(app, active.is_empty(), cfg.max_rounds);
+    Ok(RunResult { app, labels, rounds, total_cycles, converged })
 }
 
 
@@ -661,7 +681,9 @@ fn run_bfs_dopt(
         });
         scratch.next.take_sorted_into(&mut scratch.active);
     }
-    Ok(RunResult { app: App::Bfs, labels, rounds, total_cycles })
+    let converged =
+        warn_exhausted(App::Bfs, scratch.active.is_empty(), cfg.max_rounds);
+    Ok(RunResult { app: App::Bfs, labels, rounds, total_cycles, converged })
 }
 
 // --------------------------------------------------- delta-stepping sssp
@@ -817,7 +839,11 @@ fn run_sssp_delta(
         }
         k += 1;
     }
-    Ok(RunResult { app: App::Sssp, labels, rounds, total_cycles })
+    // Converged = every distance bucket drained (the loop's natural exit);
+    // breaking on `max_rounds` leaves buckets unsettled.
+    let converged =
+        warn_exhausted(App::Sssp, k >= buckets.len(), cfg.max_rounds);
+    Ok(RunResult { app: App::Sssp, labels, rounds, total_cycles, converged })
 }
 
 // --------------------------------------------------------------------- pr
@@ -839,6 +865,7 @@ fn run_pr(
     scratch.arm_adaptive(cfg);
     let mut rounds = Vec::new();
     let mut total_cycles = 0u64;
+    let mut converged = false;
 
     for round in 0..cfg.max_rounds {
         // Topology-driven: all vertices active, pull direction.
@@ -881,10 +908,12 @@ fn run_pr(
         let (new_ranks, delta) = pr::pull_round(g, &ranks, &contrib);
         ranks = new_ranks;
         if delta < cfg.pr_tol {
+            converged = true;
             break;
         }
     }
-    Ok(RunResult { app: App::Pr, labels: ranks, rounds, total_cycles })
+    let converged = warn_exhausted(App::Pr, converged, cfg.max_rounds);
+    Ok(RunResult { app: App::Pr, labels: ranks, rounds, total_cycles, converged })
 }
 
 // ------------------------------------------------------------------ kcore
@@ -981,8 +1010,10 @@ fn run_kcore(
         dying = next;
         round += 1;
     }
+    let converged =
+        warn_exhausted(App::Kcore, dying.is_empty(), cfg.max_rounds);
     let labels = alive.iter().map(|&a| if a { 1.0 } else { 0.0 }).collect();
-    Ok(RunResult { app: App::Kcore, labels, rounds, total_cycles })
+    Ok(RunResult { app: App::Kcore, labels, rounds, total_cycles, converged })
 }
 
 /// Survival flags for a full degree array.

@@ -11,10 +11,12 @@
 //!     {
 //!       "adaptive_threshold_final": 0, "app": "bfs", "balancer": "alb",
 //!       "comm_bytes": 0, "comm_bytes_inter": 0, "comm_bytes_intra": 0,
-//!       "gpus": 1, "host_ms": 12.5, "id": "bfs/rmat18/alb/-/1",
-//!       "imbalance_factor": 3.5, "input": "rmat18",
-//!       "labels_hash": "0123456789abcdef", "lb_rounds": 2, "policy": "-",
-//!       "rounds": 17, "simulated_ms": 1.25, "total_cycles": 123456
+//!       "converged": true, "fault": "none", "gpus": 1, "host_ms": 12.5,
+//!       "id": "bfs/rmat18/alb/-/1", "imbalance_factor": 3.5,
+//!       "input": "rmat18", "labels_hash": "0123456789abcdef",
+//!       "lb_rounds": 2, "policy": "-", "recoveries": 0,
+//!       "replayed_rounds": 0, "retry_count": 0, "rounds": 17,
+//!       "simulated_ms": 1.25, "total_cycles": 123456
 //!     }
 //!   ],
 //!   "scale_delta": 0, "schema_version": 1, "seed": 42, "smoke": true
@@ -70,6 +72,8 @@ fn cell_json(c: &CellResult) -> Json {
         .set("comm_bytes", c.comm_bytes)
         .set("comm_bytes_inter", c.comm_bytes_inter)
         .set("comm_bytes_intra", c.comm_bytes_intra)
+        .set("converged", c.converged)
+        .set("fault", c.fault.as_str())
         .set("gpus", c.gpus)
         .set("host_ms", c.host_ms)
         .set("id", c.id.as_str())
@@ -78,6 +82,9 @@ fn cell_json(c: &CellResult) -> Json {
         .set("labels_hash", c.labels_hash.as_str())
         .set("lb_rounds", c.lb_rounds)
         .set("policy", c.policy.as_str())
+        .set("recoveries", c.recoveries)
+        .set("replayed_rounds", c.replayed_rounds)
+        .set("retry_count", c.retry_count)
         .set("rounds", c.rounds)
         .set("simulated_ms", c.simulated_ms)
         .set("total_cycles", c.total_cycles)
@@ -132,6 +139,8 @@ pub fn parse(text: &str) -> CampaignFile {
             "comm_bytes" => cur.comm_bytes = value.parse().unwrap_or(0),
             "comm_bytes_inter" => cur.comm_bytes_inter = value.parse().unwrap_or(0),
             "comm_bytes_intra" => cur.comm_bytes_intra = value.parse().unwrap_or(0),
+            "converged" => cur.converged = value == "true",
+            "fault" => cur.fault = unquoted(),
             "gpus" => cur.gpus = value.parse().unwrap_or(0),
             "host_ms" => cur.host_ms = value.parse().unwrap_or(0.0),
             "id" => cur.id = unquoted(),
@@ -140,6 +149,9 @@ pub fn parse(text: &str) -> CampaignFile {
             "labels_hash" => cur.labels_hash = unquoted(),
             "lb_rounds" => cur.lb_rounds = value.parse().unwrap_or(0),
             "policy" => cur.policy = unquoted(),
+            "recoveries" => cur.recoveries = value.parse().unwrap_or(0),
+            "replayed_rounds" => cur.replayed_rounds = value.parse().unwrap_or(0),
+            "retry_count" => cur.retry_count = value.parse().unwrap_or(0),
             "rounds" => cur.rounds = value.parse().unwrap_or(0),
             "simulated_ms" => cur.simulated_ms = value.parse().unwrap_or(0.0),
             "total_cycles" => {
@@ -255,9 +267,12 @@ mod tests {
                 host_ms: 10.25,
                 adaptive_threshold_final: 3072,
                 lb_rounds: 2,
+                ..CellResult::default()
             },
+            // A fault-injected cell: every recovery field non-default so
+            // the roundtrip test covers the fault columns.
             CellResult {
-                id: "bfs/rmat18/twc/cvc/4".into(),
+                id: "bfs/rmat18/twc/cvc/4/chaos".into(),
                 app: "bfs".into(),
                 input: "rmat18".into(),
                 balancer: "twc".into(),
@@ -274,6 +289,11 @@ mod tests {
                 host_ms: 20.5,
                 adaptive_threshold_final: 0,
                 lb_rounds: 0,
+                converged: false,
+                fault: "chaos".into(),
+                recoveries: 1,
+                replayed_rounds: 2,
+                retry_count: 3,
             },
         ]
     }

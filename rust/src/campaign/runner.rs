@@ -16,7 +16,8 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::apps::engine::{self, EngineConfig};
-use crate::coordinator::{run_distributed, ClusterConfig};
+use crate::comm::fault::FaultPlan;
+use crate::coordinator::{run_distributed, run_distributed_faulty, ClusterConfig, FaultConfig};
 use crate::graph::{inputs, CsrGraph};
 use crate::lb::{adaptive, Balancer};
 use crate::metrics::labels_hash;
@@ -27,7 +28,7 @@ use super::spec::{CampaignSpec, Cell};
 /// One executed (or resumed) cell's record — exactly the fields the
 /// `CAMPAIGN.json` artifact stores. All dimension fields are plain strings
 /// so resumed results roundtrip bit-for-bit through the artifact.
-#[derive(Debug, Clone, Default, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CellResult {
     /// `app/input/balancer/policy/gpus` (see [`Cell::id`]).
     pub id: String,
@@ -60,6 +61,46 @@ pub struct CellResult {
     pub adaptive_threshold_final: u64,
     /// Rounds whose LB kernel launched (multi-GPU: on at least one GPU).
     pub lb_rounds: u64,
+    /// Did the run reach its fixpoint, or stop on the round cap?
+    pub converged: bool,
+    /// Fault-plan preset for this cell (`"none"` for the fault-free matrix).
+    pub fault: String,
+    /// Recovery metrics (all 0 for fault-free cells; DESIGN.md §14).
+    pub recoveries: u32,
+    pub replayed_rounds: u64,
+    pub retry_count: u64,
+}
+
+impl Default for CellResult {
+    fn default() -> CellResult {
+        CellResult {
+            id: String::new(),
+            app: String::new(),
+            input: String::new(),
+            balancer: String::new(),
+            policy: String::new(),
+            gpus: 0,
+            labels_hash: String::new(),
+            rounds: 0,
+            total_cycles: 0,
+            imbalance_factor: 0.0,
+            comm_bytes: 0,
+            comm_bytes_intra: 0,
+            comm_bytes_inter: 0,
+            simulated_ms: 0.0,
+            host_ms: 0.0,
+            adaptive_threshold_final: 0,
+            lb_rounds: 0,
+            // Pre-fault-axis artifacts carry neither key: such cells all
+            // converged (the campaign round cap is effectively unbounded)
+            // and are fault-free, so the defaults say so rather than "".
+            converged: true,
+            fault: "none".to_string(),
+            recoveries: 0,
+            replayed_rounds: 0,
+            retry_count: 0,
+        }
+    }
 }
 
 /// The outcome of one sweep invocation.
@@ -94,6 +135,7 @@ pub fn run_cell(cell: &Cell, spec: &CampaignSpec, g: &mut CsrGraph) -> Result<Ce
         balancer: cell.balancer.name().to_string(),
         policy: cell.policy.map(|p| p.name()).unwrap_or("-").to_string(),
         gpus: cell.gpus,
+        fault: cell.fault.to_string(),
         ..CellResult::default()
     };
 
@@ -112,6 +154,7 @@ pub fn run_cell(cell: &Cell, spec: &CampaignSpec, g: &mut CsrGraph) -> Result<Ce
             .map(|k| k.imbalance_factor())
             .fold(1.0f64, f64::max);
         r.lb_rounds = run.rounds_with_lb() as u64;
+        r.converged = run.converged;
         r.adaptive_threshold_final = run
             .rounds
             .last()
@@ -123,7 +166,17 @@ pub fn run_cell(cell: &Cell, spec: &CampaignSpec, g: &mut CsrGraph) -> Result<Ce
             .policy
             .ok_or_else(|| anyhow!("multi-GPU cell {} without a policy", r.id))?;
         let cluster = ClusterConfig::new(cell.gpus, policy, None, spec.exec);
-        let run = run_distributed(cell.app.app(), g, src, &cfg, &cluster, None)?;
+        let run = if cell.fault == "none" {
+            run_distributed(cell.app.app(), g, src, &cfg, &cluster, None)?
+        } else {
+            // Fault cells replay the plan the CLI preset of the same name
+            // would build from the sweep's seed, checkpointing every other
+            // round in memory so a GPU death replays at most one round.
+            let plan =
+                FaultPlan::parse(cell.fault, cell.gpus, spec.seed).map_err(|e| anyhow!(e))?;
+            let fc = FaultConfig { plan, checkpoint_every: 2, checkpoint_dir: None };
+            run_distributed_faulty(cell.app.app(), g, src, &cfg, &cluster, None, &fc)?
+        };
         r.labels_hash = format!("{:016x}", labels_hash(&run.labels));
         r.rounds = run.rounds.len() as u64;
         r.total_cycles = run.total_cycles;
@@ -136,6 +189,10 @@ pub fn run_cell(cell: &Cell, spec: &CampaignSpec, g: &mut CsrGraph) -> Result<Ce
         let mean = sum as f64 / run.per_gpu_comp.len().max(1) as f64;
         r.imbalance_factor = if mean > 0.0 { max / mean } else { 1.0 };
         r.lb_rounds = run.rounds.iter().filter(|rec| rec.lb_gpus > 0).count() as u64;
+        r.converged = run.converged;
+        r.recoveries = run.recoveries;
+        r.replayed_rounds = run.replayed_rounds;
+        r.retry_count = run.retry_count;
     }
     r.host_ms = t0.elapsed().as_secs_f64() * 1e3;
     Ok(r)
@@ -264,6 +321,7 @@ mod tests {
             balancer: Balancer::Twc,
             policy: None,
             gpus: 1,
+            fault: "none",
         };
         let r = run_cell(&single, &spec, &mut g).unwrap();
         assert_eq!(r.id, "bfs/rmat18/twc/-/1");
@@ -295,6 +353,7 @@ mod tests {
             },
             policy: None,
             gpus: 1,
+            fault: "none",
         };
         let ada = run_cell(&cell, &spec, &mut g).unwrap();
         assert_eq!(ada.id, "bfs/rmat18/adaptive/-/1");
@@ -381,6 +440,35 @@ mod tests {
         got.sort();
         assert_eq!(got, want);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fault_cells_recover_to_the_fault_free_labels() {
+        let spec = tiny_spec();
+        let mut g = inputs::build("road-s", spec.scale_delta, spec.seed).unwrap();
+        let clean = Cell {
+            app: AppVariant::Bfs,
+            input: "road-s",
+            balancer: Balancer::Twc,
+            policy: Some(Policy::Cvc),
+            gpus: 4,
+            fault: "none",
+        };
+        let base = run_cell(&clean, &spec, &mut g).unwrap();
+        assert!(base.converged);
+        assert_eq!((base.fault.as_str(), base.recoveries, base.retry_count), ("none", 0, 0));
+
+        for fault in ["gpu-death", "chaos"] {
+            let faulty = run_cell(&Cell { fault, ..clean.clone() }, &spec, &mut g).unwrap();
+            assert_eq!(faulty.id, format!("{}/{fault}", base.id));
+            assert_eq!(faulty.fault, fault);
+            assert!(faulty.converged);
+            assert!(faulty.recoveries >= 1, "{fault} must kill a GPU");
+            assert_eq!(
+                faulty.labels_hash, base.labels_hash,
+                "{fault}: recovered labels must be bit-identical to fault-free"
+            );
+        }
     }
 
     #[test]

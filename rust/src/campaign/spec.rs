@@ -24,6 +24,13 @@ const APPS_HELP: &str = "bfs, bfs-dopt, sssp-delta, pr, kcore";
 const BALANCERS_HELP: &str =
     "vertex, twc, edge-lb, alb, enterprise, adaptive, auto";
 const POLICIES_HELP: &str = "oec, iec, cvc";
+const FAULTS_HELP: &str = "none, gpu-death, corrupt, drop, slow, chaos";
+
+/// The fault-plan presets the campaign matrix can enumerate (DESIGN.md
+/// §14). Explicit `gpu-death@R:G`-style specs stay a CLI-only affair —
+/// axis values must be preset names so cell ids are stable across runs.
+pub const FAULT_PRESETS: [&str; 6] =
+    ["none", "gpu-death", "corrupt", "drop", "slow", "chaos"];
 
 /// One application *variant*: an [`crate::apps::App`] plus the engine
 /// options that change its algorithm (direction-optimizing bfs,
@@ -89,6 +96,14 @@ impl AppVariant {
         matches!(self, AppVariant::Bfs | AppVariant::Pr | AppVariant::Kcore)
     }
 
+    /// Whether the fault-tolerant driver accepts this variant. PageRank is
+    /// excluded: its floating-point partial-sum fold is partition-layout-
+    /// dependent, so a post-recovery replay is not bit-comparable
+    /// (DESIGN.md §14).
+    pub fn fault_injectable(&self) -> bool {
+        matches!(self, AppVariant::Bfs | AppVariant::Kcore)
+    }
+
     /// Apply the variant's engine options to `cfg`.
     pub fn configure(&self, cfg: &mut crate::apps::engine::EngineConfig, sssp_delta: f32) {
         match self {
@@ -109,21 +124,36 @@ pub struct Cell {
     /// `None` for single-GPU cells (no partitioning dimension).
     pub policy: Option<Policy>,
     pub gpus: u32,
+    /// Fault-plan preset ([`FAULT_PRESETS`]); `"none"` for the fault-free
+    /// matrix, which keeps legacy ids unchanged.
+    pub fault: &'static str,
 }
 
 impl Cell {
     /// The cell's stable identifier: `app/input/balancer/policy/gpus`
-    /// (policy is `-` for single-GPU cells). Ids key the artifact's resume
-    /// logic and the golden comparison.
+    /// (policy is `-` for single-GPU cells), with `/fault` appended for
+    /// fault-injected cells. Ids key the artifact's resume logic and the
+    /// golden comparison; fault-free cells keep their pre-fault-axis ids.
     pub fn id(&self) -> String {
-        format!(
+        let base = format!(
             "{}/{}/{}/{}/{}",
             self.app.name(),
             self.input,
             self.balancer.name(),
             self.policy.map(|p| p.name()).unwrap_or("-"),
             self.gpus
-        )
+        );
+        if self.fault == "none" {
+            base
+        } else {
+            format!("{base}/{}", self.fault)
+        }
+    }
+
+    /// Id of this cell's fault-free twin — the cell the fault gate compares
+    /// labels against. Identity for fault-free cells.
+    pub fn fault_free_id(&self) -> String {
+        Cell { fault: "none", ..self.clone() }.id()
     }
 }
 
@@ -145,6 +175,11 @@ pub struct CampaignSpec {
     /// Whether this is the smoke subset (recorded in the artifact; resume
     /// refuses to mix smoke and full artifacts).
     pub smoke: bool,
+    /// Fault-plan presets ([`FAULT_PRESETS`]). Defaults to `["none"]`, so
+    /// the matrix shape is unchanged unless `--faults` opts in; non-"none"
+    /// presets expand only the multi-GPU cells of fault-injectable
+    /// variants.
+    pub faults: Vec<&'static str>,
 }
 
 /// Largest accepted simulated-GPU count (matrix filters reject more).
@@ -167,6 +202,7 @@ impl CampaignSpec {
             sim_threads: exec::default_threads(),
             exec: ExecMode::Parallel,
             smoke: false,
+            faults: vec!["none"],
         }
     }
 
@@ -218,15 +254,23 @@ impl CampaignSpec {
     ) {
         if gpus <= 1 {
             let balancer = b.clone();
-            out.push(Cell { app, input, balancer, policy: None, gpus: 1 });
+            out.push(Cell { app, input, balancer, policy: None, gpus: 1, fault: "none" });
             return;
         }
         if !app.distributed() {
             return;
         }
         for &p in &self.policies {
-            let (balancer, policy) = (b.clone(), Some(p));
-            out.push(Cell { app, input, balancer, policy, gpus });
+            for &fault in &self.faults {
+                // The fault axis only multiplies cells the fault-tolerant
+                // driver accepts; other (app, fault) points are skipped, not
+                // errors, so `--faults none,chaos` still covers pr fault-free.
+                if fault != "none" && !app.fault_injectable() {
+                    continue;
+                }
+                let (balancer, policy) = (b.clone(), Some(p));
+                out.push(Cell { app, input, balancer, policy, gpus, fault });
+            }
         }
     }
 
@@ -348,6 +392,29 @@ impl CampaignSpec {
         self.gpu_counts = keep;
         Ok(())
     }
+
+    /// Restrict (or expand) the fault-plan axis to a comma-separated list
+    /// of [`FAULT_PRESETS`] names.
+    pub fn filter_faults(&mut self, csv: &str) -> Result<(), String> {
+        let mut keep: Vec<&'static str> = Vec::new();
+        for name in csv.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let preset = FAULT_PRESETS
+                .iter()
+                .find(|&&p| p == name)
+                .copied()
+                .ok_or_else(|| {
+                    format!("unknown fault {name:?} in --faults; valid values: {FAULTS_HELP}")
+                })?;
+            if !keep.contains(&preset) {
+                keep.push(preset);
+            }
+        }
+        if keep.is_empty() {
+            return Err(format!("--faults selected nothing; valid values: {FAULTS_HELP}"));
+        }
+        self.faults = keep;
+        Ok(())
+    }
 }
 
 /// Every campaign-enumerable `Balancer`, cyclic defaults, in CLI order.
@@ -454,6 +521,41 @@ mod tests {
         assert!(s.filter_gpus("0").unwrap_err().contains("1..="));
         assert!(s.filter_gpus("abc").unwrap_err().contains("1..="));
         assert!(s.filter_gpus("65").unwrap_err().contains("1..="));
+    }
+
+    #[test]
+    fn fault_axis_expands_only_injectable_multi_gpu_cells() {
+        let mut s = CampaignSpec::smoke();
+        let base = s.cells().len();
+        s.filter_faults("none,chaos").unwrap();
+        let cells = s.cells();
+        // Per input: chaos twins exist only for bfs and kcore at cvc@4 with
+        // each of the 2 balancers = 4 extra cells per input.
+        assert_eq!(cells.len(), base + 2 * 4);
+        let ids: HashSet<String> = cells.iter().map(|c| c.id()).collect();
+        assert!(ids.contains("bfs/rmat18/alb/cvc/4/chaos"));
+        assert!(ids.contains("kcore/road-s/twc/cvc/4/chaos"));
+        assert!(!ids.contains("pr/rmat18/alb/cvc/4/chaos"), "pr is fault-excluded");
+        assert!(!ids.contains("bfs/rmat18/alb/-/1/chaos"), "single-GPU cells stay fault-free");
+        // Fault-free ids are unchanged, and each faulty cell knows its twin.
+        assert!(ids.contains("bfs/rmat18/alb/cvc/4"));
+        let chaos = cells.iter().find(|c| c.fault == "chaos").unwrap();
+        assert_eq!(chaos.fault_free_id(), chaos.id().trim_end_matches("/chaos"));
+    }
+
+    #[test]
+    fn fault_filter_rejects_unknown_and_presets_all_parse() {
+        let mut s = CampaignSpec::smoke();
+        assert!(s.filter_faults("bogus").unwrap_err().contains("gpu-death"));
+        assert!(s.filter_faults("").unwrap_err().contains("selected nothing"));
+        s.filter_faults("gpu-death, gpu-death,drop").unwrap();
+        assert_eq!(s.faults, vec!["gpu-death", "drop"]);
+        // Every enumerable preset must be accepted by the CLI-level parser
+        // the runner hands it to.
+        for p in FAULT_PRESETS {
+            crate::comm::fault::FaultPlan::parse(p, 4, 42)
+                .unwrap_or_else(|e| panic!("preset {p} must parse: {e}"));
+        }
     }
 
     #[test]

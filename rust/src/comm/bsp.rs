@@ -113,6 +113,40 @@ pub fn superstep_mut<S: Send>(
     });
 }
 
+/// [`superstep_mut`] with a liveness mask (ISSUE 8): task `i` runs only
+/// when `alive[i]` — a dead simulated GPU's slot is skipped entirely, its
+/// state untouched. With every GPU alive this is exactly `superstep_mut`.
+/// The fault-tolerant coordinator drives the death round through this and
+/// then discards the round, so the masked superstep is where a GPU death
+/// is "threaded into" the BSP structure.
+pub fn superstep_mut_masked<S: Send>(
+    mode: ExecMode,
+    pool: &Pool,
+    states: &mut [S],
+    alive: &[bool],
+    f: &(dyn Fn(usize, &mut S) + Sync),
+) {
+    let n = states.len();
+    assert_eq!(n, alive.len(), "mask must cover every partition");
+    if mode == ExecMode::Sequential || n <= 1 || pool.threads() <= 1 {
+        for (i, s) in states.iter_mut().enumerate() {
+            if alive[i] {
+                f(i, s);
+            }
+        }
+        return;
+    }
+    let base = DisjointMut(states.as_mut_ptr());
+    pool.run(n, &|i| {
+        if !alive[i] {
+            return;
+        }
+        // SAFETY: identical to `superstep_mut` — each index claimed once.
+        let s = unsafe { &mut *base.0.add(i) };
+        f(i, s);
+    });
+}
+
 /// One result slot of an in-flight superstep: the not-yet-run task, then
 /// its output. Each slot's mutex is taken by exactly one pool task.
 struct Slot<F, T> {
@@ -296,6 +330,38 @@ mod tests {
             counter.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn masked_superstep_skips_dead_slots_only() {
+        let pool = Pool::new(4);
+        for mode in [ExecMode::Parallel, ExecMode::Sequential] {
+            let mut states: Vec<usize> = vec![0; 16];
+            let alive: Vec<bool> = (0..16).map(|i| i != 3 && i != 11).collect();
+            superstep_mut_masked(mode, &pool, &mut states, &alive, &|i, s| {
+                *s = i + 1;
+            });
+            for (i, &v) in states.iter().enumerate() {
+                if alive[i] {
+                    assert_eq!(v, i + 1, "{mode:?}");
+                } else {
+                    assert_eq!(v, 0, "{mode:?}: dead slot {i} must stay untouched");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masked_superstep_all_alive_matches_plain() {
+        let pool = Pool::new(4);
+        let mut a: Vec<usize> = vec![0; 8];
+        let mut b: Vec<usize> = vec![0; 8];
+        superstep_mut(ExecMode::Parallel, &pool, &mut a, &|i, s| *s = i * 7);
+        let alive = vec![true; 8];
+        superstep_mut_masked(ExecMode::Parallel, &pool, &mut b, &alive, &|i, s| {
+            *s = i * 7;
+        });
+        assert_eq!(a, b);
     }
 
     #[test]

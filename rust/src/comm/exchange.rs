@@ -403,6 +403,42 @@ impl ExchangePlan {
         total
     }
 
+    /// Stage the reduce phase's per-pair messages **read-only** (ISSUE 8):
+    /// for every (holder, owner) pair with traffic this round, the batch of
+    /// `(mirror local id, label bits)` updates [`reduce_min`] would ship,
+    /// serialized little-endian at [`BYTES_PER_UPDATE`] bytes per update.
+    /// Partition state is untouched — `changed` is sorted (the compute
+    /// task's bitmap-frontier drain), so membership is a binary search
+    /// instead of seeding the `updated` bitmask. The guarded exchange
+    /// checksums these payloads, injects link faults into scratch copies,
+    /// and only after a clean attempt applies the real `reduce_min` /
+    /// `broadcast_min` — which is why faulty runs stay bit-identical to
+    /// fault-free ones.
+    pub fn stage_reduce_messages<S: HasPartState>(
+        &self,
+        states: &mut [S],
+    ) -> Vec<(u32, u32, Vec<u8>)> {
+        let mut staged = Vec::new();
+        for i in 0..states.len() {
+            for sched in &self.parts[i].mirrors {
+                let st = states[i].part_state();
+                let mut payload = Vec::new();
+                for &ml in &sched.mirror_locals {
+                    if st.changed.binary_search(&ml).is_ok() {
+                        payload.extend_from_slice(&ml.to_le_bytes());
+                        payload.extend_from_slice(
+                            &st.labels[ml as usize].to_bits().to_le_bytes(),
+                        );
+                    }
+                }
+                if !payload.is_empty() {
+                    staged.push((i as u32, sched.peer, payload));
+                }
+            }
+        }
+        staged
+    }
+
     /// Scatter a master-side event list (ascending global ids) to every
     /// local copy: the owner's master local plus each fan-out mirror.
     /// `out[i]` receives partition `i`'s local ids in `gids` order — the
@@ -616,6 +652,53 @@ mod tests {
         // Per-phase traffic stays under the full-refresh volume.
         let full = plan.total_mirrors() as u64 * BYTES_PER_UPDATE;
         assert!(reduced <= full && bcast <= full);
+    }
+
+    #[test]
+    fn staged_messages_mirror_reduce_flows_without_touching_state() {
+        // The read-only staging pass must name exactly the pairs and byte
+        // counts reduce_min will ship, and leave labels/frontiers alone.
+        let g = test_graph();
+        for policy in policies() {
+            let dg = partition(&g, 3, policy);
+            let plan = ExchangePlan::new(&dg);
+            let mut states = plan.new_states();
+            for (pi, st) in states.iter_mut().enumerate() {
+                for (l, &gid) in dg.parts[pi].l2g.iter().enumerate() {
+                    st.labels[l] = 50.0 + gid as f32;
+                }
+                // Mark every 5th local changed (sorted by construction).
+                st.changed =
+                    (0..dg.parts[pi].l2g.len() as u32).filter(|l| l % 5 == 0).collect();
+            }
+            let before: Vec<Vec<f32>> =
+                states.iter().map(|s| s.labels.clone()).collect();
+            let staged = plan.stage_reduce_messages(&mut states);
+            for (pi, s) in states.iter().enumerate() {
+                assert_eq!(s.labels, before[pi], "{policy:?}: staging mutated");
+            }
+            let mut flows = Vec::new();
+            plan.reduce_min(&mut states, &mut flows);
+            let reduce_pairs: Vec<(u32, u32, u64)> = flows.clone();
+            let staged_pairs: Vec<(u32, u32, u64)> = staged
+                .iter()
+                .map(|(s, d, p)| (*s, *d, p.len() as u64))
+                .collect();
+            assert_eq!(staged_pairs, reduce_pairs, "{policy:?}");
+            // Payloads decode back to the exact (local, label) updates.
+            for (src, _, payload) in &staged {
+                assert_eq!(payload.len() % BYTES_PER_UPDATE as usize, 0);
+                for upd in payload.chunks_exact(8) {
+                    let ml = u32::from_le_bytes(upd[..4].try_into().unwrap());
+                    let bits = u32::from_le_bytes(upd[4..].try_into().unwrap());
+                    assert_eq!(
+                        f32::from_bits(bits),
+                        before[*src as usize][ml as usize],
+                        "{policy:?}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

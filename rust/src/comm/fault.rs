@@ -1,0 +1,701 @@
+//! Deterministic fault injection for distributed BSP rounds (ISSUE 8).
+//!
+//! A [`FaultPlan`] is a pure, seedable schedule of injected events — GPU
+//! death at a given round, transient per-message corruption or drop on an
+//! exchange link, and slow-link stalls — parsed once from `--faults` and
+//! replayed by a [`FaultSession`] threaded through the coordinator's round
+//! loop. Nothing here consults a clock or an RNG at run time: preset
+//! placement is derived from the run seed through splitmix64 at parse time,
+//! so every faulty run is bit-reproducible (the ISSUE 8 determinism gate
+//! asserts identical recovery metrics across `sim_threads` ∈ {1, 2, 4}).
+//!
+//! Event timing is keyed on **wall rounds** — a monotone count of executed
+//! supersteps including replayed ones — not on logical (algorithm) rounds:
+//! replaying rounds after a recovery must not re-fire the events that
+//! caused the recovery. An event fires at the first wall round `>=` its
+//! scheduled round and is consumed exactly once; events scheduled past
+//! convergence simply never fire.
+//!
+//! Corruption and drops are *detected*, not silently tolerated: the
+//! exchange stages its per-pair reduce messages read-only
+//! ([`super::exchange::ExchangePlan::stage_reduce_messages`]), hashes each
+//! payload with FNV-1a ([`fnv64`]), injects the round's link faults into
+//! scratch copies, and verifies on the receive side (checksum per message,
+//! expected message count). A failed attempt never touches partition state
+//! — the retry re-ships the same staged bytes (re-priced on the wire) —
+//! so the clean attempt applies through the unchanged
+//! `reduce_min`/`broadcast_min` walk and fault-free label parity is
+//! automatic. After [`MAX_EXCHANGE_ATTEMPTS`] failures the run aborts
+//! loudly rather than spin.
+
+use super::exchange::Flow;
+use super::NetworkModel;
+
+/// Attempt budget for one guarded exchange; exceeding it is a hard error.
+pub const MAX_EXCHANGE_ATTEMPTS: u32 = 8;
+
+/// FNV-1a (64-bit) over a byte slice — the same hash family the `.albc`
+/// trailer and the campaign label hashes use. Single-byte changes always
+/// change the hash (xor + odd multiply are bijective mod 2^64), which is
+/// what makes it a sound per-message corruption detector.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// splitmix64 — the seed mixer used for preset event placement.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// One kind of injected fault. GPU ids and link endpoints are taken modulo
+/// the live partition count at fire time, so a plan written for 4 GPUs
+/// stays meaningful after a death shrinks the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// GPU `gpu` dies at the start of the round: its superstep slot is
+    /// masked out, the round is discarded, and the coordinator recovers by
+    /// re-partitioning across survivors and replaying from the checkpoint.
+    GpuDeath { gpu: u32 },
+    /// Corrupt one staged exchange message on link (src, dst) — detected by
+    /// the per-message FNV-1a checksum — on `times` consecutive attempts.
+    Corrupt { src: u32, dst: u32, times: u32 },
+    /// Drop one staged exchange message on link (src, dst) — detected by
+    /// the expected-message-count check — on `times` consecutive attempts.
+    Drop { src: u32, dst: u32, times: u32 },
+    /// Multiply link (src, dst)'s transfer time by `factor` for one round
+    /// (priced through [`NetworkModel::stall_cycles`]).
+    Slow { src: u32, dst: u32, factor: u32 },
+}
+
+/// One scheduled event: `kind` fires at the first wall round `>= round`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// 1-based wall round (the first executed superstep is round 1).
+    pub round: u64,
+    pub kind: FaultKind,
+}
+
+/// A parsed, immutable fault schedule.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+/// The `--faults` usage string, shared by the parser's errors and the CLI.
+pub const FAULTS_USAGE: &str = "none, gpu-death, corrupt, drop, slow, chaos, \
+     or explicit gpu-death@R:G, corrupt@R:S-D[xN], drop@R:S-D[xN], \
+     slow@R:S-D[xF]";
+
+fn bad_item(item: &str) -> String {
+    format!("unknown --faults item '{item}' (valid: {FAULTS_USAGE})")
+}
+
+/// Preset link endpoints: distinct when more than one partition exists.
+fn preset_link(h: u64, k: u32) -> (u32, u32) {
+    if k <= 1 {
+        return (0, 0);
+    }
+    let s = (h % k as u64) as u32;
+    let d = (s + 1 + ((h >> 16) % (k as u64 - 1)) as u32) % k;
+    (s, d)
+}
+
+impl FaultPlan {
+    /// The empty plan (also what `--faults none` parses to).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Does the plan schedule any GPU death? (Re-partition legality checks
+    /// key on this — DESIGN.md §14.)
+    pub fn has_death(&self) -> bool {
+        self.events
+            .iter()
+            .any(|e| matches!(e.kind, FaultKind::GpuDeath { .. }))
+    }
+
+    /// Parse a comma-separated `--faults` spec. Items are either presets
+    /// (`none`, `gpu-death`, `corrupt`, `drop`, `slow`, `chaos`) whose
+    /// placement is derived deterministically from `seed`, or explicit
+    /// events (`gpu-death@R:G`, `corrupt@R:S-D[xN]`, `drop@R:S-D[xN]`,
+    /// `slow@R:S-D[xF]`). Rounds are 1-based wall rounds.
+    pub fn parse(spec: &str, num_gpus: u32, seed: u64) -> Result<FaultPlan, String> {
+        let mut events = Vec::new();
+        for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            match item {
+                "none" => {}
+                "gpu-death" => {
+                    let h = splitmix64(seed ^ 0xdead);
+                    events.push(FaultEvent {
+                        round: 2,
+                        kind: FaultKind::GpuDeath {
+                            gpu: (h % num_gpus.max(1) as u64) as u32,
+                        },
+                    });
+                }
+                "corrupt" => {
+                    let (s, d) = preset_link(splitmix64(seed ^ 0xc0), num_gpus);
+                    events.push(FaultEvent {
+                        round: 1,
+                        kind: FaultKind::Corrupt { src: s, dst: d, times: 2 },
+                    });
+                    events.push(FaultEvent {
+                        round: 3,
+                        kind: FaultKind::Corrupt { src: d, dst: s, times: 1 },
+                    });
+                }
+                "drop" => {
+                    let (s, d) = preset_link(splitmix64(seed ^ 0xd0), num_gpus);
+                    events.push(FaultEvent {
+                        round: 2,
+                        kind: FaultKind::Drop { src: s, dst: d, times: 3 },
+                    });
+                }
+                "slow" => {
+                    let (s, d) = preset_link(splitmix64(seed ^ 0x510), num_gpus);
+                    events.push(FaultEvent {
+                        round: 1,
+                        kind: FaultKind::Slow { src: s, dst: d, factor: 4 },
+                    });
+                    events.push(FaultEvent {
+                        round: 3,
+                        kind: FaultKind::Slow { src: d, dst: s, factor: 2 },
+                    });
+                }
+                "chaos" => {
+                    // Every fault class in one plan: corruption, drops, a
+                    // stall, then a death — the soak-test scenario.
+                    let (s, d) = preset_link(splitmix64(seed ^ 0xc4a0), num_gpus);
+                    events.push(FaultEvent {
+                        round: 1,
+                        kind: FaultKind::Corrupt { src: s, dst: d, times: 2 },
+                    });
+                    events.push(FaultEvent {
+                        round: 2,
+                        kind: FaultKind::Drop { src: d, dst: s, times: 2 },
+                    });
+                    events.push(FaultEvent {
+                        round: 3,
+                        kind: FaultKind::Slow { src: s, dst: d, factor: 3 },
+                    });
+                    let h = splitmix64(seed ^ 0xc4a05);
+                    events.push(FaultEvent {
+                        round: 4,
+                        kind: FaultKind::GpuDeath {
+                            gpu: (h % num_gpus.max(1) as u64) as u32,
+                        },
+                    });
+                }
+                _ => events.push(Self::parse_explicit(item)?),
+            }
+        }
+        events.sort_by_key(|e| e.round);
+        Ok(FaultPlan { events })
+    }
+
+    /// Parse one explicit `kind@round:args` event.
+    fn parse_explicit(item: &str) -> Result<FaultEvent, String> {
+        let (name, rest) = item.split_once('@').ok_or_else(|| bad_item(item))?;
+        let (round_s, args) = rest.split_once(':').ok_or_else(|| bad_item(item))?;
+        let round: u64 = round_s.parse().map_err(|_| bad_item(item))?;
+        if round == 0 {
+            return Err(format!(
+                "--faults rounds are 1-based; '{item}' schedules round 0 \
+                 (valid: {FAULTS_USAGE})"
+            ));
+        }
+        if name == "gpu-death" {
+            let gpu: u32 = args.parse().map_err(|_| bad_item(item))?;
+            return Ok(FaultEvent { round, kind: FaultKind::GpuDeath { gpu } });
+        }
+        // Link kinds: S-D with an optional xN / xF suffix.
+        let (link, x) = match args.split_once('x') {
+            Some((l, n)) => (l, Some(n)),
+            None => (args, None),
+        };
+        let (src_s, dst_s) = link.split_once('-').ok_or_else(|| bad_item(item))?;
+        let src: u32 = src_s.parse().map_err(|_| bad_item(item))?;
+        let dst: u32 = dst_s.parse().map_err(|_| bad_item(item))?;
+        let xval: u32 = match x {
+            Some(n) => n.parse().map_err(|_| bad_item(item))?,
+            None => 0,
+        };
+        let kind = match name {
+            "corrupt" => FaultKind::Corrupt { src, dst, times: xval.max(1) },
+            "drop" => FaultKind::Drop { src, dst, times: xval.max(1) },
+            "slow" => FaultKind::Slow { src, dst, factor: xval.max(2) },
+            _ => return Err(bad_item(item)),
+        };
+        Ok(FaultEvent { round, kind })
+    }
+}
+
+impl NetworkModel {
+    /// Extra cycles a slow-link stall adds to a round: the stalled link
+    /// re-pays its transfer time `factor - 1` more times. Zero when the
+    /// link carries no bytes this round or the factor is degenerate.
+    pub fn stall_cycles(
+        &self,
+        flows: &[Flow],
+        src: u32,
+        dst: u32,
+        factor: u32,
+    ) -> u64 {
+        if factor <= 1 || src == dst {
+            return 0;
+        }
+        let bytes: u64 = flows
+            .iter()
+            .filter(|&&(s, d, b)| s == src && d == dst && b > 0)
+            .map(|&(_, _, b)| b)
+            .sum();
+        if bytes == 0 {
+            return 0;
+        }
+        let (alpha, bpc) = if self.same_host(src, dst) {
+            (self.intra_alpha_cycles, self.intra_bytes_per_cycle)
+        } else {
+            (self.inter_alpha_cycles, self.inter_bytes_per_cycle)
+        };
+        (alpha + (bytes as f64 / bpc) as u64) * (factor as u64 - 1)
+    }
+}
+
+/// One in-flight link fault taken for the current exchange.
+struct LinkFault {
+    drop: bool,
+    src: u32,
+    dst: u32,
+    times: u32,
+}
+
+/// The runtime side of a fault plan: tracks the wall round, which events
+/// have been consumed, and the exchange retry counter.
+#[derive(Debug, Clone)]
+pub struct FaultSession {
+    events: Vec<FaultEvent>,
+    consumed: Vec<bool>,
+    /// Total failed exchange attempts across the run.
+    pub retry_count: u64,
+    wall_round: u64,
+}
+
+impl FaultSession {
+    pub fn new(plan: &FaultPlan) -> FaultSession {
+        FaultSession {
+            events: plan.events.clone(),
+            consumed: vec![false; plan.events.len()],
+            retry_count: 0,
+            wall_round: 0,
+        }
+    }
+
+    /// Advance to the next wall round (call once at the top of every
+    /// executed superstep, replays included) and return its number.
+    pub fn advance_round(&mut self) -> u64 {
+        self.wall_round += 1;
+        self.wall_round
+    }
+
+    pub fn wall_round(&self) -> u64 {
+        self.wall_round
+    }
+
+    /// Consume one due GPU-death event, if any, returning the dead GPU id
+    /// reduced modulo `live` (a plan written for the original cluster size
+    /// stays meaningful after earlier deaths).
+    pub fn take_death(&mut self, live: u32) -> Option<u32> {
+        for (i, e) in self.events.iter().enumerate() {
+            if self.consumed[i] || e.round > self.wall_round {
+                continue;
+            }
+            if let FaultKind::GpuDeath { gpu } = e.kind {
+                self.consumed[i] = true;
+                return Some(gpu % live.max(1));
+            }
+        }
+        None
+    }
+
+    /// Consume every due slow-link event and price its stall against this
+    /// round's flows (link endpoints taken modulo `num_parts`).
+    pub fn take_stalls(
+        &mut self,
+        net: &NetworkModel,
+        num_parts: u32,
+        flows: &[Flow],
+    ) -> u64 {
+        let k = num_parts.max(1);
+        let mut extra = 0u64;
+        for (i, e) in self.events.iter().enumerate() {
+            if self.consumed[i] || e.round > self.wall_round {
+                continue;
+            }
+            if let FaultKind::Slow { src, dst, factor } = e.kind {
+                self.consumed[i] = true;
+                extra += net.stall_cycles(flows, src % k, dst % k, factor);
+            }
+        }
+        extra
+    }
+
+    /// Consume every due corrupt/drop event for this exchange.
+    fn take_link_faults(&mut self) -> Vec<LinkFault> {
+        let mut out = Vec::new();
+        for (i, e) in self.events.iter().enumerate() {
+            if self.consumed[i] || e.round > self.wall_round {
+                continue;
+            }
+            match e.kind {
+                FaultKind::Corrupt { src, dst, times } => {
+                    self.consumed[i] = true;
+                    out.push(LinkFault { drop: false, src, dst, times });
+                }
+                FaultKind::Drop { src, dst, times } => {
+                    self.consumed[i] = true;
+                    out.push(LinkFault { drop: true, src, dst, times });
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Run the verification/retry protocol over one round's staged exchange
+    /// messages (`(src, dst, payload)` per traffic-bearing pair).
+    ///
+    /// Each attempt injects the due link faults into scratch copies, then
+    /// verifies receive-side: every expected message present (drop check)
+    /// and every payload re-hashing to its staged FNV-1a checksum
+    /// (corruption check). Failed attempts bump `retry_count` and re-price
+    /// the staged bytes into `flows` (the wire carried them either way);
+    /// partition state is untouched, so the caller applies the real
+    /// reduce/broadcast only after a clean attempt. A fault scheduled on a
+    /// link with no traffic redirects to the round's first staged message,
+    /// so a scheduled fault always fires when any traffic exists; an empty
+    /// exchange consumes the events as harmless no-ops.
+    ///
+    /// Returns the number of attempts taken (1 = clean first try), or an
+    /// error once [`MAX_EXCHANGE_ATTEMPTS`] attempts all failed.
+    pub fn exchange_guarded(
+        &mut self,
+        num_parts: u32,
+        staged: &[(u32, u32, Vec<u8>)],
+        flows: &mut Vec<Flow>,
+    ) -> Result<u32, String> {
+        let sums: Vec<u64> = staged.iter().map(|(_, _, p)| fnv64(p)).collect();
+        let mut faults = self.take_link_faults();
+        let k = num_parts.max(1);
+        for attempt in 1..=MAX_EXCHANGE_ATTEMPTS {
+            let mut dropped = vec![false; staged.len()];
+            let mut scratch: Vec<Option<Vec<u8>>> = vec![None; staged.len()];
+            for f in faults.iter_mut() {
+                if f.times == 0 || staged.is_empty() {
+                    continue;
+                }
+                f.times -= 1;
+                let (s, d) = (f.src % k, f.dst % k);
+                let idx = staged
+                    .iter()
+                    .position(|&(a, b, _)| a == s && b == d)
+                    .unwrap_or(0);
+                if f.drop {
+                    dropped[idx] = true;
+                } else {
+                    let copy = scratch[idx]
+                        .get_or_insert_with(|| staged[idx].2.clone());
+                    if !copy.is_empty() {
+                        let pos = (self.wall_round as usize + attempt as usize)
+                            % copy.len();
+                        copy[pos] ^= 0xA5;
+                    }
+                }
+            }
+            let mut clean = true;
+            for (i, (_, _, payload)) in staged.iter().enumerate() {
+                if dropped[i] {
+                    clean = false;
+                    continue;
+                }
+                let got = match &scratch[i] {
+                    Some(c) => fnv64(c),
+                    None => fnv64(payload),
+                };
+                if got != sums[i] {
+                    clean = false;
+                }
+            }
+            if clean {
+                return Ok(attempt);
+            }
+            self.retry_count += 1;
+            for (s, d, p) in staged {
+                flows.push((*s, *d, p.len() as u64));
+            }
+        }
+        Err(format!(
+            "exchange failed verification {MAX_EXCHANGE_ATTEMPTS} times at \
+             wall round {} — the fault plan exceeds the retry budget",
+            self.wall_round
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_detects_every_single_byte_change() {
+        let base = b"exchange payload bytes".to_vec();
+        let h0 = fnv64(&base);
+        for i in 0..base.len() {
+            for flip in [0x01u8, 0xA5, 0xFF] {
+                let mut m = base.clone();
+                m[i] ^= flip;
+                assert_ne!(fnv64(&m), h0, "byte {i} flip {flip:#x} undetected");
+            }
+        }
+    }
+
+    #[test]
+    fn parse_presets_are_deterministic_and_seed_sensitive() {
+        let a = FaultPlan::parse("chaos", 4, 42).unwrap();
+        let b = FaultPlan::parse("chaos", 4, 42).unwrap();
+        assert_eq!(a, b, "same spec + seed must parse identically");
+        assert!(!a.is_empty() && a.has_death());
+        let c = FaultPlan::parse("gpu-death", 4, 1).unwrap();
+        let d = FaultPlan::parse("gpu-death", 4, 2).unwrap();
+        assert_eq!(c.events.len(), 1);
+        assert_eq!(d.events.len(), 1);
+        // Seeds place the death on a (generally) different GPU; both valid.
+        for p in [&c, &d] {
+            match p.events[0].kind {
+                FaultKind::GpuDeath { gpu } => assert!(gpu < 4),
+                k => panic!("expected GpuDeath, got {k:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn parse_none_is_empty_and_combos_concatenate() {
+        assert!(FaultPlan::parse("none", 4, 0).unwrap().is_empty());
+        assert!(FaultPlan::parse("", 4, 0).unwrap().is_empty());
+        let p = FaultPlan::parse("corrupt,drop,slow", 4, 7).unwrap();
+        assert_eq!(p.events.len(), 5);
+        assert!(!p.has_death());
+        // Events come out sorted by round.
+        for w in p.events.windows(2) {
+            assert!(w[0].round <= w[1].round);
+        }
+    }
+
+    #[test]
+    fn parse_explicit_grammar() {
+        let p = FaultPlan::parse(
+            "gpu-death@3:1,corrupt@1:0-2x2,drop@2:1-3,slow@4:0-1x8",
+            4,
+            0,
+        )
+        .unwrap();
+        assert_eq!(p.events.len(), 4);
+        assert_eq!(
+            p.events[0],
+            FaultEvent { round: 1, kind: FaultKind::Corrupt { src: 0, dst: 2, times: 2 } }
+        );
+        assert_eq!(
+            p.events[1],
+            FaultEvent { round: 2, kind: FaultKind::Drop { src: 1, dst: 3, times: 1 } }
+        );
+        assert_eq!(
+            p.events[2],
+            FaultEvent { round: 3, kind: FaultKind::GpuDeath { gpu: 1 } }
+        );
+        assert_eq!(
+            p.events[3],
+            FaultEvent { round: 4, kind: FaultKind::Slow { src: 0, dst: 1, factor: 8 } }
+        );
+    }
+
+    #[test]
+    fn parse_errors_name_the_valid_forms() {
+        for bad in ["bogus", "gpu-death@x:1", "corrupt@1:nope", "drop@1", "corrupt@0:0-1"] {
+            let e = FaultPlan::parse(bad, 4, 0).unwrap_err();
+            assert!(e.contains("gpu-death@R:G"), "{bad}: {e}");
+            assert!(e.contains("chaos"), "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn events_fire_at_or_after_their_round_exactly_once() {
+        let plan = FaultPlan::parse("gpu-death@3:2", 4, 0).unwrap();
+        let mut s = FaultSession::new(&plan);
+        s.advance_round(); // 1
+        assert_eq!(s.take_death(4), None);
+        s.advance_round(); // 2
+        assert_eq!(s.take_death(4), None);
+        s.advance_round(); // 3
+        assert_eq!(s.take_death(4), Some(2));
+        assert_eq!(s.take_death(4), None, "consumed exactly once");
+        s.advance_round();
+        assert_eq!(s.take_death(4), None);
+    }
+
+    #[test]
+    fn death_fires_late_if_its_round_was_skipped() {
+        // A recovery can jump the wall round past an event's schedule; the
+        // `>=` rule fires it at the next opportunity instead of losing it.
+        let plan = FaultPlan::parse("gpu-death@2:0", 4, 0).unwrap();
+        let mut s = FaultSession::new(&plan);
+        s.advance_round();
+        s.advance_round();
+        s.advance_round(); // round 3, event scheduled at 2
+        assert_eq!(s.take_death(4), Some(0));
+    }
+
+    #[test]
+    fn dead_gpu_id_wraps_to_live_count() {
+        let plan = FaultPlan::parse("gpu-death@1:7", 4, 0).unwrap();
+        let mut s = FaultSession::new(&plan);
+        s.advance_round();
+        assert_eq!(s.take_death(3), Some(7 % 3));
+    }
+
+    fn staged_pair() -> Vec<(u32, u32, Vec<u8>)> {
+        vec![
+            (0, 1, vec![1, 2, 3, 4, 5, 6, 7, 8]),
+            (2, 3, vec![9, 10, 11, 12]),
+        ]
+    }
+
+    #[test]
+    fn clean_exchange_takes_one_attempt_and_no_retries() {
+        let mut s = FaultSession::new(&FaultPlan::none());
+        s.advance_round();
+        let mut flows = Vec::new();
+        let attempts = s.exchange_guarded(4, &staged_pair(), &mut flows).unwrap();
+        assert_eq!(attempts, 1);
+        assert_eq!(s.retry_count, 0);
+        assert!(flows.is_empty(), "no failed attempts, no extra flows");
+    }
+
+    #[test]
+    fn corruption_is_detected_and_retried_off() {
+        let plan = FaultPlan::parse("corrupt@1:0-1x2", 4, 0).unwrap();
+        let mut s = FaultSession::new(&plan);
+        s.advance_round();
+        let mut flows = Vec::new();
+        let attempts = s.exchange_guarded(4, &staged_pair(), &mut flows).unwrap();
+        assert_eq!(attempts, 3, "2 corrupted attempts then a clean one");
+        assert_eq!(s.retry_count, 2);
+        // Each failed attempt re-priced both staged messages.
+        assert_eq!(flows.len(), 4);
+        assert_eq!(flows[0], (0, 1, 8));
+        assert_eq!(flows[1], (2, 3, 4));
+    }
+
+    #[test]
+    fn drops_are_detected_by_message_count() {
+        let plan = FaultPlan::parse("drop@1:2-3x1", 4, 0).unwrap();
+        let mut s = FaultSession::new(&plan);
+        s.advance_round();
+        let mut flows = Vec::new();
+        let attempts = s.exchange_guarded(4, &staged_pair(), &mut flows).unwrap();
+        assert_eq!(attempts, 2);
+        assert_eq!(s.retry_count, 1);
+    }
+
+    #[test]
+    fn fault_on_idle_link_redirects_to_first_message() {
+        // Link 3->0 carries nothing this round; the fault must still fire.
+        let plan = FaultPlan::parse("drop@1:3-0x1", 4, 0).unwrap();
+        let mut s = FaultSession::new(&plan);
+        s.advance_round();
+        let mut flows = Vec::new();
+        let attempts = s.exchange_guarded(4, &staged_pair(), &mut flows).unwrap();
+        assert_eq!(attempts, 2, "redirected fault must cost a retry");
+        assert_eq!(s.retry_count, 1);
+    }
+
+    #[test]
+    fn empty_exchange_consumes_events_harmlessly() {
+        let plan = FaultPlan::parse("corrupt@1:0-1x2,drop@1:0-1x9", 4, 0).unwrap();
+        let mut s = FaultSession::new(&plan);
+        s.advance_round();
+        let mut flows = Vec::new();
+        let attempts = s.exchange_guarded(4, &[], &mut flows).unwrap();
+        assert_eq!(attempts, 1);
+        assert_eq!(s.retry_count, 0);
+        // Consumed: a later exchange with traffic sees no faults.
+        s.advance_round();
+        let attempts = s.exchange_guarded(4, &staged_pair(), &mut flows).unwrap();
+        assert_eq!(attempts, 1);
+    }
+
+    #[test]
+    fn unbounded_drop_exhausts_the_retry_budget_loudly() {
+        let plan =
+            FaultPlan::parse(&format!("drop@1:0-1x{}", MAX_EXCHANGE_ATTEMPTS), 4, 0)
+                .unwrap();
+        let mut s = FaultSession::new(&plan);
+        s.advance_round();
+        let mut flows = Vec::new();
+        let err = s.exchange_guarded(4, &staged_pair(), &mut flows).unwrap_err();
+        assert!(err.contains("retry budget"), "{err}");
+        assert_eq!(s.retry_count, MAX_EXCHANGE_ATTEMPTS as u64);
+    }
+
+    #[test]
+    fn exchange_is_deterministic_across_replays() {
+        let plan = FaultPlan::parse("corrupt@1:0-1x1", 4, 9).unwrap();
+        let run = || {
+            let mut s = FaultSession::new(&plan);
+            s.advance_round();
+            let mut flows = Vec::new();
+            let a = s.exchange_guarded(4, &staged_pair(), &mut flows).unwrap();
+            (a, s.retry_count, flows)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn stall_cycles_price_only_loaded_links() {
+        let net = NetworkModel::cluster(2);
+        let flows = vec![(0u32, 1u32, 1 << 20), (0, 2, 1 << 20)];
+        // Intra-host link, 4x slowdown: 3 extra transfer times.
+        let intra = net.stall_cycles(&flows, 0, 1, 4);
+        let expect =
+            (net.intra_alpha_cycles + ((1u64 << 20) as f64 / net.intra_bytes_per_cycle) as u64) * 3;
+        assert_eq!(intra, expect);
+        // Inter-host stalls cost more than intra for the same bytes/factor.
+        assert!(net.stall_cycles(&flows, 0, 2, 4) > intra);
+        // Idle link, degenerate factor, self link: all free.
+        assert_eq!(net.stall_cycles(&flows, 1, 0, 4), 0);
+        assert_eq!(net.stall_cycles(&flows, 0, 1, 1), 0);
+        assert_eq!(net.stall_cycles(&flows, 0, 0, 4), 0);
+    }
+
+    #[test]
+    fn slow_events_consume_through_take_stalls() {
+        let plan = FaultPlan::parse("slow@1:0-1x4", 4, 0).unwrap();
+        let mut s = FaultSession::new(&plan);
+        s.advance_round();
+        let net = NetworkModel::single_host();
+        let flows = vec![(0u32, 1u32, 4096)];
+        let extra = s.take_stalls(&net, 4, &flows);
+        assert!(extra > 0);
+        assert_eq!(s.take_stalls(&net, 4, &flows), 0, "consumed once");
+    }
+}

@@ -19,11 +19,18 @@
 //! reduce / broadcast phases through persistent buffers and an
 //! updated-only bitmask — no per-round `g2l` HashMap lookups, no per-round
 //! payload allocation, and only touched boundary vertices on the wire.
+//!
+//! [`fault`] holds the deterministic fault-injection layer (ISSUE 8): a
+//! seedable schedule of GPU deaths, checksummed-and-retried message
+//! corruption/drops, and slow-link stalls, threaded through the
+//! coordinator's faulty round loop.
 
 pub mod bsp;
 pub mod exchange;
+pub mod fault;
 
-pub use bsp::{superstep, superstep_mut, ExecMode};
+pub use bsp::{superstep, superstep_mut, superstep_mut_masked, ExecMode};
+pub use fault::{FaultEvent, FaultKind, FaultPlan, FaultSession};
 
 /// Reduction operator applied at the master.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

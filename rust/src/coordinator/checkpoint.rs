@@ -1,0 +1,350 @@
+//! Round checkpoints for fault-tolerant distributed runs (ISSUE 8).
+//!
+//! Every `k` rounds the faulty coordinator snapshots the *global* view of
+//! the run — per-partition master labels reassembled into one global array,
+//! plus the frontier / iteration state the app needs to resume — under a
+//! monotonically increasing **consistency epoch**. The snapshot is taken at
+//! the BSP barrier after broadcast, where every copy of every vertex equals
+//! its master value, so restoring master labels restores every local copy
+//! exactly no matter how the survivors are re-partitioned.
+//!
+//! Checkpoints live in memory (recovery never touches the disk on the hot
+//! path); `--checkpoint-dir` additionally persists each epoch as an
+//! `.albk` file with the same discipline as the `.albc` graph cache
+//! ([`crate::graph::disk`]): little-endian payload, trailing FNV-1a
+//! checksum, atomic temp-file + rename writes, validation before trust.
+//!
+//! Format:
+//!
+//! ```text
+//! magic "ALBK" | u32 version | u32 aux tag (0 push, 1 kcore)
+//! u64 epoch | u64 round | u64 n_labels | u64 n_frontier
+//! [tag 1: u64 n_deg | u64 n_alive | u64 n_dying]
+//! payload arrays (labels as f32 bits, alive as bytes)
+//! u64 FNV-1a checksum over every header+payload byte after the magic
+//! ```
+
+use std::fs::{self, File};
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::comm::fault::fnv64;
+
+const MAGIC: &[u8; 4] = b"ALBK";
+const VERSION: u32 = 1;
+
+/// App-specific resume state carried alongside labels and frontier.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CheckpointAux {
+    /// Push apps (bfs / sssp / cc): labels + frontier are the whole state.
+    Push,
+    /// K-core's central peeling state: in-degrees, liveness, and the dying
+    /// list entering the checkpointed round. All three are global (owned by
+    /// the coordinator, not the partitions), which is what makes k-core
+    /// recovery exact under any survivor re-partitioning.
+    Kcore {
+        deg: Vec<u32>,
+        alive: Vec<bool>,
+        dying: Vec<u32>,
+    },
+}
+
+/// One consistent snapshot of a distributed run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Consistency epoch: 0 is the implicit initial-state checkpoint taken
+    /// before round 0; every later snapshot increments it.
+    pub epoch: u64,
+    /// Logical round the snapshot resumes at (rounds `0..round` are done).
+    pub round: u64,
+    /// Global master labels after round `round - 1` (or initial values).
+    pub labels: Vec<f32>,
+    /// Sorted global ids active entering round `round` (push apps; k-core
+    /// keeps its dying list in [`CheckpointAux::Kcore`] instead).
+    pub frontier: Vec<u32>,
+    pub aux: CheckpointAux,
+}
+
+impl Checkpoint {
+    /// In-memory snapshot size in bytes — what `checkpoint_bytes`
+    /// accumulates per snapshot in `DistRunResult`.
+    pub fn bytes(&self) -> u64 {
+        let aux = match &self.aux {
+            CheckpointAux::Push => 0,
+            CheckpointAux::Kcore { deg, alive, dying } => {
+                (deg.len() * 4 + alive.len() + dying.len() * 4) as u64
+            }
+        };
+        16 + (self.labels.len() * 4 + self.frontier.len() * 4) as u64 + aux
+    }
+
+    /// The on-disk file name of this epoch under a checkpoint directory.
+    pub fn entry_path(dir: &Path, epoch: u64) -> PathBuf {
+        dir.join(format!("epoch-{epoch:06}.v{VERSION}.albk"))
+    }
+
+    /// Serialize header (post-magic) + payload into one buffer — the byte
+    /// range the trailing checksum covers.
+    fn body(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&VERSION.to_le_bytes());
+        let tag: u32 = match self.aux {
+            CheckpointAux::Push => 0,
+            CheckpointAux::Kcore { .. } => 1,
+        };
+        b.extend_from_slice(&tag.to_le_bytes());
+        b.extend_from_slice(&self.epoch.to_le_bytes());
+        b.extend_from_slice(&self.round.to_le_bytes());
+        b.extend_from_slice(&(self.labels.len() as u64).to_le_bytes());
+        b.extend_from_slice(&(self.frontier.len() as u64).to_le_bytes());
+        if let CheckpointAux::Kcore { deg, alive, dying } = &self.aux {
+            b.extend_from_slice(&(deg.len() as u64).to_le_bytes());
+            b.extend_from_slice(&(alive.len() as u64).to_le_bytes());
+            b.extend_from_slice(&(dying.len() as u64).to_le_bytes());
+        }
+        for x in &self.labels {
+            b.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+        for x in &self.frontier {
+            b.extend_from_slice(&x.to_le_bytes());
+        }
+        if let CheckpointAux::Kcore { deg, alive, dying } = &self.aux {
+            for x in deg {
+                b.extend_from_slice(&x.to_le_bytes());
+            }
+            for &a in alive {
+                b.push(a as u8);
+            }
+            for x in dying {
+                b.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        b
+    }
+
+    /// Write atomically (temp file + rename), trailing checksum last.
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        let body = self.body();
+        let mut w = File::create(&tmp)?;
+        w.write_all(MAGIC)?;
+        w.write_all(&body)?;
+        w.write_all(&fnv64(&body).to_le_bytes())?;
+        w.flush()?;
+        drop(w);
+        fs::rename(&tmp, path)
+    }
+
+    /// Load and validate: magic, version, tag, plausible sizes, checksum.
+    pub fn load(path: &Path) -> io::Result<Checkpoint> {
+        let mut bytes = Vec::new();
+        File::open(path)?.read_to_end(&mut bytes)?;
+        if bytes.len() < 4 + 8 || &bytes[..4] != MAGIC {
+            return Err(bad("bad magic"));
+        }
+        let body = &bytes[4..bytes.len() - 8];
+        let stored = u64::from_le_bytes(
+            bytes[bytes.len() - 8..].try_into().expect("8-byte trailer"),
+        );
+        if stored != fnv64(body) {
+            return Err(bad("checksum mismatch"));
+        }
+        let mut cur = Cursor { b: body, at: 0 };
+        let version = cur.u32()?;
+        if version != VERSION {
+            return Err(bad(&format!("unsupported version {version}")));
+        }
+        let tag = cur.u32()?;
+        let epoch = cur.u64()?;
+        let round = cur.u64()?;
+        let n_labels = cur.u64()? as usize;
+        let n_frontier = cur.u64()? as usize;
+        if n_labels > (1 << 33) || n_frontier > (1 << 33) {
+            return Err(bad("implausible header sizes"));
+        }
+        let aux_sizes = if tag == 1 {
+            let nd = cur.u64()? as usize;
+            let na = cur.u64()? as usize;
+            let ny = cur.u64()? as usize;
+            if nd > (1 << 33) || na > (1 << 33) || ny > (1 << 33) {
+                return Err(bad("implausible aux sizes"));
+            }
+            Some((nd, na, ny))
+        } else if tag == 0 {
+            None
+        } else {
+            return Err(bad(&format!("unknown aux tag {tag}")));
+        };
+        let labels: Vec<f32> =
+            (0..n_labels).map(|_| cur.u32().map(f32::from_bits)).collect::<io::Result<_>>()?;
+        let frontier: Vec<u32> =
+            (0..n_frontier).map(|_| cur.u32()).collect::<io::Result<_>>()?;
+        let aux = match aux_sizes {
+            None => CheckpointAux::Push,
+            Some((nd, na, ny)) => {
+                let deg: Vec<u32> =
+                    (0..nd).map(|_| cur.u32()).collect::<io::Result<_>>()?;
+                let mut alive = Vec::with_capacity(na);
+                for _ in 0..na {
+                    alive.push(cur.u8()? != 0);
+                }
+                let dying: Vec<u32> =
+                    (0..ny).map(|_| cur.u32()).collect::<io::Result<_>>()?;
+                CheckpointAux::Kcore { deg, alive, dying }
+            }
+        };
+        if cur.at != body.len() {
+            return Err(bad("trailing bytes after payload"));
+        }
+        Ok(Checkpoint { epoch, round, labels, frontier, aux })
+    }
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Bounds-checked little-endian reader over the body slice.
+struct Cursor<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl Cursor<'_> {
+    fn take(&mut self, n: usize) -> io::Result<&[u8]> {
+        if self.at + n > self.b.len() {
+            return Err(bad("truncated payload"));
+        }
+        let s = &self.b[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct TmpDir(PathBuf);
+    impl TmpDir {
+        fn new(tag: &str) -> Self {
+            let p = std::env::temp_dir().join(format!(
+                "albk-test-{tag}-{}-{:?}",
+                std::process::id(),
+                std::thread::current().id()
+            ));
+            let _ = fs::remove_dir_all(&p);
+            fs::create_dir_all(&p).unwrap();
+            TmpDir(p)
+        }
+        fn path(&self) -> &Path {
+            &self.0
+        }
+    }
+    impl Drop for TmpDir {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.0);
+        }
+    }
+
+    fn push_ckpt() -> Checkpoint {
+        Checkpoint {
+            epoch: 3,
+            round: 12,
+            labels: vec![0.0, 1.5, f32::INFINITY, -0.0, 7.25],
+            frontier: vec![1, 3, 4],
+            aux: CheckpointAux::Push,
+        }
+    }
+
+    fn kcore_ckpt() -> Checkpoint {
+        Checkpoint {
+            epoch: 1,
+            round: 4,
+            labels: vec![1.0, 0.0, 1.0],
+            frontier: Vec::new(),
+            aux: CheckpointAux::Kcore {
+                deg: vec![5, 0, 9],
+                alive: vec![true, false, true],
+                dying: vec![2],
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact_for_both_aux_kinds() {
+        let tmp = TmpDir::new("rt");
+        for (name, ck) in [("p", push_ckpt()), ("k", kcore_ckpt())] {
+            let path = tmp.path().join(format!("{name}.albk"));
+            ck.save(&path).unwrap();
+            let got = Checkpoint::load(&path).unwrap();
+            // PartialEq on f32 misses NaN/-0.0 bit identity; compare bits.
+            let bits =
+                |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&got.labels), bits(&ck.labels));
+            assert_eq!(got, ck);
+        }
+    }
+
+    #[test]
+    fn every_truncation_fails_validation() {
+        let tmp = TmpDir::new("trunc");
+        let path = tmp.path().join("t.albk");
+        kcore_ckpt().save(&path).unwrap();
+        let bytes = fs::read(&path).unwrap();
+        for len in 0..bytes.len() {
+            fs::write(&path, &bytes[..len]).unwrap();
+            assert!(
+                Checkpoint::load(&path).is_err(),
+                "truncation at {len}/{} must be detected",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn every_bit_flip_fails_validation() {
+        let tmp = TmpDir::new("flip");
+        let path = tmp.path().join("f.albk");
+        push_ckpt().save(&path).unwrap();
+        let bytes = fs::read(&path).unwrap();
+        for i in 0..bytes.len() {
+            let mut m = bytes.clone();
+            m[i] ^= 0x40;
+            fs::write(&path, &m).unwrap();
+            assert!(
+                Checkpoint::load(&path).is_err(),
+                "bit flip at byte {i} must be detected"
+            );
+        }
+    }
+
+    #[test]
+    fn epoch_paths_are_distinct_and_versioned() {
+        let dir = Path::new("/tmp/ck");
+        let a = Checkpoint::entry_path(dir, 1);
+        let b = Checkpoint::entry_path(dir, 2);
+        assert_ne!(a, b);
+        assert!(a.to_str().unwrap().contains(".albk"));
+    }
+
+    #[test]
+    fn bytes_reflect_payload_size() {
+        let p = push_ckpt();
+        assert_eq!(p.bytes(), 16 + 5 * 4 + 3 * 4);
+        let k = kcore_ckpt();
+        assert_eq!(k.bytes(), 16 + 3 * 4 + 3 * 4 + 3 + 1 * 4);
+    }
+}

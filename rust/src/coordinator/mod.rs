@@ -35,6 +35,7 @@
 //! submitting thread (`rust/tests/alloc.rs`).
 
 use std::collections::HashSet;
+use std::path::PathBuf;
 use std::thread::ThreadId;
 use std::time::Instant;
 
@@ -43,17 +44,24 @@ use anyhow::{anyhow, Result};
 use crate::apps::engine::{self, ComputeMode, EngineConfig, RoundScratch};
 use crate::apps::{pr, App, INF};
 use crate::comm::exchange::{ExchangePlan, Flow, HasPartState, PartState};
-use crate::comm::{superstep_mut, NetworkModel, BYTES_PER_UPDATE};
+use crate::comm::fault::{FaultPlan, FaultSession};
+use crate::comm::{
+    superstep_mut, superstep_mut_masked, NetworkModel, BYTES_PER_UPDATE,
+};
 use crate::exec::Pool;
 use crate::gpu::Simulator;
 use crate::graph::CsrGraph;
 use crate::lb::Direction;
-use crate::partition::{partition, DistGraph, Partition, Policy};
+use crate::partition::{
+    partition, repartition_survivors, DistGraph, Partition, Policy,
+};
 use crate::runtime::PjrtRuntime;
 
+mod checkpoint;
 mod reference;
 
 pub use crate::comm::bsp::ExecMode;
+pub use checkpoint::{Checkpoint, CheckpointAux};
 pub use reference::run_distributed_reference;
 
 /// Cluster-level configuration.
@@ -160,6 +168,17 @@ pub struct DistRunResult {
     /// with a multi-lane pool this reaches >= 2 distinct ids, and may
     /// include the coordinating thread (the pool submitter participates).
     pub threads: HashSet<ThreadId>,
+    /// Did the run reach its fixpoint, or did it exhaust `max_rounds`?
+    pub converged: bool,
+    /// GPU-death recoveries performed (ISSUE 8 fault layer; 0 without
+    /// `--faults`).
+    pub recoveries: u32,
+    /// Logical rounds replayed after checkpoint restores.
+    pub replayed_rounds: u64,
+    /// Failed exchange attempts re-shipped by the guarded exchange.
+    pub retry_count: u64,
+    /// Total bytes snapshotted into round checkpoints (epoch 0 included).
+    pub checkpoint_bytes: u64,
 }
 
 impl DistRunResult {
@@ -193,6 +212,11 @@ struct RunAccounting {
     per_gpu_comp: Vec<u64>,
     per_gpu_wall_ns: Vec<u64>,
     threads: HashSet<ThreadId>,
+    converged: bool,
+    recoveries: u32,
+    replayed_rounds: u64,
+    retry_count: u64,
+    checkpoint_bytes: u64,
 }
 
 impl RunAccounting {
@@ -208,6 +232,13 @@ impl RunAccounting {
             per_gpu_comp: vec![0; k],
             per_gpu_wall_ns: vec![0; k],
             threads: HashSet::new(),
+            // Degenerate runs (empty graph) converge trivially; real drivers
+            // overwrite this from their loop-exit condition.
+            converged: true,
+            recoveries: 0,
+            replayed_rounds: 0,
+            retry_count: 0,
+            checkpoint_bytes: 0,
         }
     }
 
@@ -235,6 +266,25 @@ impl RunAccounting {
             per_gpu_comp: self.per_gpu_comp,
             per_gpu_wall_ns: self.per_gpu_wall_ns,
             threads: self.threads,
+            converged: self.converged,
+            recoveries: self.recoveries,
+            replayed_rounds: self.replayed_rounds,
+            retry_count: self.retry_count,
+            checkpoint_bytes: self.checkpoint_bytes,
+        }
+    }
+
+    /// Record the loop-exit condition; warn loudly on round exhaustion — a
+    /// run that silently stops at `max_rounds` reads as a converged answer
+    /// when it is not one.
+    fn set_converged(&mut self, app: App, converged: bool, max_rounds: u32) {
+        self.converged = converged;
+        if !converged {
+            eprintln!(
+                "warning: {} exhausted --max-rounds ({max_rounds}) before \
+                 converging; labels are a partial fixpoint",
+                app.name()
+            );
         }
     }
 }
@@ -448,10 +498,12 @@ fn run_push_dist(
     let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
     let mut flows: Vec<Flow> = Vec::new();
 
+    let mut converged = false;
     for round in 0..cfg.max_rounds {
         let global_active: u64 =
             gpus.iter().map(|s| s.st.active.len() as u64).sum();
         if global_active == 0 {
+            converged = true;
             break;
         }
         // --- local compute (one pool task per GPU; the return of
@@ -502,6 +554,11 @@ fn run_push_dist(
             lb_gpus,
         });
     }
+    // The loop may also end by draining the frontier on its very last
+    // permitted round — that still counts as convergence.
+    let converged =
+        converged || gpus.iter().all(|s| s.st.active.is_empty());
+    acct.set_converged(app, converged, cfg.max_rounds);
     // Assemble the global answer from the authoritative master values.
     let mut labels = vec![0f32; n];
     for (s, p) in gpus.iter().zip(&dg.parts) {
@@ -666,6 +723,7 @@ fn run_pr_dist(
         .collect();
     let mut acc_global = vec![0f32; n];
     let mut flows: Vec<Flow> = Vec::new();
+    let mut converged = false;
 
     for round in 0..cfg.max_rounds {
         // Topology-driven broadcast: every mirror refreshes its rank copy
@@ -735,9 +793,11 @@ fn run_pr_dist(
             lb_gpus,
         });
         if delta < cfg.pr_tol {
+            converged = true;
             break;
         }
     }
+    acct.set_converged(App::Pr, converged, cfg.max_rounds);
     Ok(acct.finish(App::Pr, ranks))
 }
 
@@ -921,8 +981,579 @@ fn run_kcore_dist(
         dying = next;
         round += 1;
     }
+    acct.set_converged(App::Kcore, dying.is_empty(), cfg.max_rounds);
     let labels = alive.iter().map(|&a| if a { 1.0 } else { 0.0 }).collect();
     Ok(acct.finish(App::Kcore, labels))
+}
+
+// --------------------------------------------- fault tolerance (ISSUE 8)
+
+/// Fault-tolerance configuration for [`run_distributed_faulty`].
+#[derive(Debug, Clone, Default)]
+pub struct FaultConfig {
+    /// The deterministic fault schedule (empty = no injected faults; the
+    /// driver still checkpoints on cadence and verifies every exchange).
+    pub plan: FaultPlan,
+    /// Snapshot cadence in logical rounds; 0 keeps only the implicit
+    /// initial (epoch 0) checkpoint, so a death replays the whole run.
+    pub checkpoint_every: u64,
+    /// Optionally persist every epoch as an `.albk` file in this directory
+    /// (recovery itself always restores from the in-memory copy).
+    pub checkpoint_dir: Option<PathBuf>,
+}
+
+/// Persist a checkpoint if a directory was configured.
+fn persist_checkpoint(ck: &Checkpoint, faults: &FaultConfig) -> Result<()> {
+    if let Some(dir) = &faults.checkpoint_dir {
+        std::fs::create_dir_all(dir)?;
+        ck.save(&Checkpoint::entry_path(dir, ck.epoch))?;
+    }
+    Ok(())
+}
+
+/// Run `app` under a deterministic fault plan with round checkpoints and
+/// replay-based recovery (DESIGN.md §14).
+///
+/// The headline invariant — gated by `rust/tests/chaos.rs` and CI's
+/// chaos-gate — is that the recovered run's final labels are bit-identical
+/// to the fault-free run's, for every supported (app, input, policy, fault
+/// plan) cell, with exact-deterministic recovery metrics across
+/// `sim_threads`. Legality: `pr` is rejected outright (its floating-point
+/// partial-sum fold is partition-layout-dependent, mirroring §13's reorder
+/// exclusions) and `cc` is rejected under `gpu-death` (replay re-activates
+/// whole components on the new layout); bfs/sssp/kcore support every fault
+/// kind because their reductions are idempotent-min or
+/// partition-invariant-sum over a central state.
+pub fn run_distributed_faulty(
+    app: App,
+    g: &CsrGraph,
+    source: u32,
+    cfg: &EngineConfig,
+    cluster: &ClusterConfig,
+    pjrt: Option<&PjrtRuntime>,
+    faults: &FaultConfig,
+) -> Result<DistRunResult> {
+    if cfg.compute == ComputeMode::Pjrt || pjrt.is_some() {
+        return Err(anyhow!(
+            "fault injection requires the native engine: drop --pjrt (the \
+             guarded exchange stages and replays native exchange buffers)"
+        ));
+    }
+    match app {
+        App::Pr => {
+            return Err(anyhow!(
+                "--faults does not support pr: its floating-point \
+                 partial-sum fold is partition-layout-dependent, so a \
+                 post-death re-partition cannot be bit-identical \
+                 (DESIGN.md §14; valid apps: bfs, sssp, kcore, and cc \
+                 without gpu-death)"
+            ));
+        }
+        App::Cc if faults.plan.has_death() => {
+            return Err(anyhow!(
+                "--faults with gpu-death does not support cc: replay \
+                 re-activates every component's full frontier on the new \
+                 layout, which DESIGN.md §14's legality table conservatively \
+                 excludes (valid gpu-death apps: bfs, sssp, kcore)"
+            ));
+        }
+        _ => {}
+    }
+    if g.num_vertices() == 0 {
+        let dg = partition(g, cluster.num_gpus, cluster.policy);
+        return Ok(RunAccounting::new(dg.num_parts()).finish(app, Vec::new()));
+    }
+    let pool = Pool::new(cfg.sim_threads.max(1));
+    match app {
+        App::Bfs | App::Sssp | App::Cc => {
+            run_push_dist_ft(app, g, source, cfg, cluster, &pool, faults)
+        }
+        App::Kcore => run_kcore_dist_ft(g, cfg, cluster, &pool, faults),
+        App::Pr => unreachable!("rejected above"),
+    }
+}
+
+/// Snapshot a push-app run at the BSP barrier: global master labels (equal
+/// to every copy after broadcast) plus the sorted global frontier.
+fn snapshot_push(
+    epoch: u64,
+    round: u64,
+    n: usize,
+    gpus: &[GpuPush],
+    dg: &DistGraph,
+) -> Checkpoint {
+    let mut labels = vec![0f32; n];
+    let mut frontier: Vec<u32> = Vec::new();
+    for (s, p) in gpus.iter().zip(&dg.parts) {
+        for (l, &gid) in p.l2g[..p.num_masters].iter().enumerate() {
+            labels[gid as usize] = s.st.labels[l];
+        }
+        frontier.extend(s.st.active.iter().map(|&lv| p.l2g[lv as usize]));
+    }
+    frontier.sort_unstable();
+    frontier.dedup();
+    Checkpoint { epoch, round, labels, frontier, aux: CheckpointAux::Push }
+}
+
+/// Rebuild per-GPU push state on a (possibly re-partitioned) layout from a
+/// checkpoint: every local copy gets its master label, and every copy of a
+/// frontier vertex re-activates — a superset of the fault-free frontier,
+/// safe because min-relaxation is idempotent and monotone (the fixpoint is
+/// unique, so the recovered labels stay bit-identical).
+fn restore_push_gpus(
+    dg: &DistGraph,
+    plan: &ExchangePlan,
+    cfg: &EngineConfig,
+    ck: &Checkpoint,
+) -> Vec<GpuPush> {
+    let mut gpus: Vec<GpuPush> = dg
+        .parts
+        .iter()
+        .zip(plan.new_states())
+        .map(|(p, mut st)| {
+            for (l, &gid) in p.l2g.iter().enumerate() {
+                st.labels[l] = ck.labels[gid as usize];
+            }
+            GpuPush {
+                st,
+                scratch: RoundScratch::for_run(p.graph.num_vertices(), cfg),
+                out: RoundOut::idle(),
+            }
+        })
+        .collect();
+    let mut seed: Vec<Vec<u32>> = vec![Vec::new(); dg.num_parts()];
+    plan.scatter_globals(&ck.frontier, &mut seed);
+    for (s, locs) in gpus.iter_mut().zip(seed) {
+        s.st.active = locs;
+    }
+    gpus
+}
+
+/// [`run_push_dist`] under a fault session: same round shape (superstep →
+/// exchange → price → record), with the exchange staged and verified
+/// first, slow-link stalls priced in, and GPU deaths recovered by
+/// re-partitioning survivors and replaying from the last checkpoint.
+#[allow(clippy::too_many_arguments)]
+fn run_push_dist_ft(
+    app: App,
+    g: &CsrGraph,
+    source: u32,
+    cfg: &EngineConfig,
+    cluster: &ClusterConfig,
+    pool: &Pool,
+    faults: &FaultConfig,
+) -> Result<DistRunResult> {
+    let n = g.num_vertices();
+    let mut k_alive = cluster.num_gpus.max(1);
+    let mut dg = partition(g, k_alive, cluster.policy);
+    let mut plan = ExchangePlan::new(&dg);
+    let init: Vec<f32> = match app {
+        App::Cc => (0..n).map(|v| v as f32).collect(),
+        _ => {
+            let mut m = vec![INF; n];
+            m[source as usize] = 0.0;
+            m
+        }
+    };
+    let mut gpus: Vec<GpuPush> = dg
+        .parts
+        .iter()
+        .zip(plan.new_states())
+        .map(|(p, mut st)| {
+            for (l, &gid) in p.l2g.iter().enumerate() {
+                st.labels[l] = init[gid as usize];
+            }
+            GpuPush {
+                st,
+                scratch: RoundScratch::for_run(p.graph.num_vertices(), cfg),
+                out: RoundOut::idle(),
+            }
+        })
+        .collect();
+    match app {
+        App::Cc => {
+            for (s, p) in gpus.iter_mut().zip(&dg.parts) {
+                s.st.active = (0..p.graph.num_vertices() as u32).collect();
+            }
+        }
+        _ => {
+            let mut seed: Vec<Vec<u32>> = vec![Vec::new(); dg.num_parts()];
+            plan.scatter_globals(&[source], &mut seed);
+            for (s, locs) in gpus.iter_mut().zip(seed) {
+                s.st.active = locs;
+            }
+        }
+    }
+
+    let mut acct = RunAccounting::new(k_alive as usize);
+    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+    let mut flows: Vec<Flow> = Vec::new();
+    let mut session = FaultSession::new(&faults.plan);
+
+    // Epoch 0: the initial state is itself a checkpoint, so a death before
+    // the first snapshot replays from round 0.
+    let initial_frontier: Vec<u32> = match app {
+        App::Cc => (0..n as u32).collect(),
+        _ => vec![source],
+    };
+    let mut ck = Checkpoint {
+        epoch: 0,
+        round: 0,
+        labels: init,
+        frontier: initial_frontier,
+        aux: CheckpointAux::Push,
+    };
+    acct.checkpoint_bytes += ck.bytes();
+    persist_checkpoint(&ck, faults)?;
+
+    let mut logical: u64 = 0;
+    let mut converged = false;
+    while logical < cfg.max_rounds as u64 {
+        session.advance_round();
+        if let Some(dead) = session.take_death(k_alive) {
+            // The failing round: the dead GPU's superstep slot is masked
+            // out; survivors' partial work is discarded with the round.
+            let mut mask = vec![true; gpus.len()];
+            mask[dead as usize] = false;
+            {
+                let (parts, sim_ref) = (&dg.parts, &sim);
+                superstep_mut_masked(
+                    cluster.exec,
+                    pool,
+                    &mut gpus,
+                    &mask,
+                    &|pi, s: &mut GpuPush| {
+                        local_push_round(
+                            app, &parts[pi].graph, cfg, sim_ref, None, pool, s,
+                        )
+                        .expect("native round cannot fail");
+                    },
+                );
+            }
+            if k_alive == 1 {
+                return Err(anyhow!(
+                    "gpu 0 died at wall round {} with no survivors left to \
+                     re-partition onto — cannot recover",
+                    session.wall_round()
+                ));
+            }
+            eprintln!(
+                "warning: gpu {dead} died at wall round {}; re-partitioning \
+                 onto {} survivors and replaying from checkpoint epoch {} \
+                 (logical round {})",
+                session.wall_round(),
+                k_alive - 1,
+                ck.epoch,
+                ck.round
+            );
+            k_alive -= 1;
+            dg = repartition_survivors(g, k_alive, cluster.policy);
+            plan = ExchangePlan::new(&dg);
+            gpus = restore_push_gpus(&dg, &plan, cfg, &ck);
+            acct.recoveries += 1;
+            acct.replayed_rounds += logical - ck.round;
+            logical = ck.round;
+            continue;
+        }
+
+        let global_active: u64 =
+            gpus.iter().map(|s| s.st.active.len() as u64).sum();
+        if global_active == 0 {
+            converged = true;
+            break;
+        }
+        {
+            let (parts, sim_ref) = (&dg.parts, &sim);
+            superstep_mut(cluster.exec, pool, &mut gpus, &|pi, s: &mut GpuPush| {
+                local_push_round(
+                    app, &parts[pi].graph, cfg, sim_ref, None, pool, s,
+                )
+                .expect("native round cannot fail");
+            });
+        }
+        let mut comp = 0u64;
+        let mut lb_gpus = 0u32;
+        for (pi, s) in gpus.iter().enumerate() {
+            comp = comp.max(s.out.cycles);
+            acct.per_gpu_comp[pi] += s.out.cycles;
+            acct.per_gpu_wall_ns[pi] += s.out.wall_ns;
+            acct.threads.insert(s.out.thread);
+            lb_gpus += s.out.lb as u32;
+        }
+
+        // Guarded exchange: stage the reduce messages read-only, verify
+        // under this round's injected link faults (failed attempts re-price
+        // the staged bytes into `flows`), then apply through the unchanged
+        // reduce/broadcast walk — fault-free label parity is automatic.
+        let staged = plan.stage_reduce_messages(&mut gpus);
+        flows.clear();
+        session
+            .exchange_guarded(k_alive, &staged, &mut flows)
+            .map_err(|e| anyhow!(e))?;
+        plan.reduce_min(&mut gpus, &mut flows);
+        plan.broadcast_min(&mut gpus, &mut flows);
+
+        let (mut comm, bytes_intra, bytes_inter) = price(&cluster.net, &flows);
+        comm += session.take_stalls(&cluster.net, k_alive, &flows);
+        acct.record_round(DistRoundRecord {
+            round: logical as u32,
+            active: global_active,
+            comp_cycles: comp,
+            comm_cycles: comm,
+            comm_bytes: bytes_intra + bytes_inter,
+            comm_bytes_intra: bytes_intra,
+            comm_bytes_inter: bytes_inter,
+            lb_gpus,
+        });
+        logical += 1;
+
+        if faults.checkpoint_every > 0 && logical % faults.checkpoint_every == 0
+        {
+            ck = snapshot_push(ck.epoch + 1, logical, n, &gpus, &dg);
+            acct.checkpoint_bytes += ck.bytes();
+            persist_checkpoint(&ck, faults)?;
+        }
+    }
+    let converged = converged || gpus.iter().all(|s| s.st.active.is_empty());
+    acct.set_converged(app, converged, cfg.max_rounds);
+    acct.retry_count = session.retry_count;
+    let mut labels = vec![0f32; n];
+    for (s, p) in gpus.iter().zip(&dg.parts) {
+        for (l, &gid) in p.l2g[..p.num_masters].iter().enumerate() {
+            labels[gid as usize] = s.st.labels[l];
+        }
+    }
+    Ok(acct.finish(app, labels))
+}
+
+/// [`run_kcore_dist`] under a fault session. The peeling state (`deg`,
+/// `alive`, `dying`) is central — owned by the coordinator, not the
+/// partitions — so checkpoints capture it exactly and recovery is
+/// partition-layout-invariant by construction.
+fn run_kcore_dist_ft(
+    g: &CsrGraph,
+    cfg: &EngineConfig,
+    cluster: &ClusterConfig,
+    pool: &Pool,
+    faults: &FaultConfig,
+) -> Result<DistRunResult> {
+    let n = g.num_vertices();
+    let mut k_alive = cluster.num_gpus.max(1);
+    let mut dg = partition(g, k_alive, cluster.policy);
+    let mut plan = ExchangePlan::new(&dg);
+    let k = cfg.kcore_k;
+    let mut g2 = g.clone();
+    g2.build_csc();
+    let mut deg: Vec<u32> =
+        (0..n as u32).map(|v| g2.in_degree(v) as u32).collect();
+    let mut alive = vec![true; n];
+    let mut dying: Vec<u32> =
+        (0..n as u32).filter(|&v| deg[v as usize] < k).collect();
+    for &v in &dying {
+        alive[v as usize] = false;
+    }
+
+    let mut acct = RunAccounting::new(k_alive as usize);
+    let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
+    let new_gpus = |dg: &DistGraph, k_alive: u32| -> Vec<GpuKcore> {
+        dg.parts
+            .iter()
+            .map(|p| GpuKcore {
+                scratch: RoundScratch::for_run(p.graph.num_vertices(), cfg),
+                out: RoundOut::idle(),
+                hits: Vec::new(),
+                peer_updates: vec![0; k_alive as usize],
+            })
+            .collect()
+    };
+    let mut gpus = new_gpus(&dg, k_alive);
+    let mut dying_locals: Vec<Vec<u32>> = vec![Vec::new(); k_alive as usize];
+    let mut decr = vec![0u32; n];
+    let mut flows: Vec<Flow> = Vec::new();
+    let mut session = FaultSession::new(&faults.plan);
+
+    let kcore_labels = |alive: &[bool]| -> Vec<f32> {
+        alive.iter().map(|&a| if a { 1.0 } else { 0.0 }).collect()
+    };
+    let mut ck = Checkpoint {
+        epoch: 0,
+        round: 0,
+        labels: kcore_labels(&alive),
+        frontier: Vec::new(),
+        aux: CheckpointAux::Kcore {
+            deg: deg.clone(),
+            alive: alive.clone(),
+            dying: dying.clone(),
+        },
+    };
+    acct.checkpoint_bytes += ck.bytes();
+    persist_checkpoint(&ck, faults)?;
+
+    let mut logical: u64 = 0;
+    while logical < cfg.max_rounds as u64 {
+        if dying.is_empty() {
+            break;
+        }
+        session.advance_round();
+        if let Some(dead) = session.take_death(k_alive) {
+            plan.scatter_globals(&dying, &mut dying_locals);
+            let mut mask = vec![true; gpus.len()];
+            mask[dead as usize] = false;
+            {
+                let (parts, sim_ref) = (&dg.parts, &sim);
+                let (alive_ref, owner_ref) = (&alive, &dg.owner);
+                let dying_ref = &dying_locals;
+                superstep_mut_masked(
+                    cluster.exec,
+                    pool,
+                    &mut gpus,
+                    &mask,
+                    &|pi, s: &mut GpuKcore| {
+                        local_kcore_round(
+                            &parts[pi], &dying_ref[pi], alive_ref, owner_ref,
+                            cfg, sim_ref, pool, s,
+                        );
+                    },
+                );
+            }
+            if k_alive == 1 {
+                return Err(anyhow!(
+                    "gpu 0 died at wall round {} with no survivors left to \
+                     re-partition onto — cannot recover",
+                    session.wall_round()
+                ));
+            }
+            eprintln!(
+                "warning: gpu {dead} died at wall round {}; re-partitioning \
+                 onto {} survivors and replaying from checkpoint epoch {} \
+                 (logical round {})",
+                session.wall_round(),
+                k_alive - 1,
+                ck.epoch,
+                ck.round
+            );
+            k_alive -= 1;
+            dg = repartition_survivors(g, k_alive, cluster.policy);
+            plan = ExchangePlan::new(&dg);
+            gpus = new_gpus(&dg, k_alive);
+            dying_locals = vec![Vec::new(); k_alive as usize];
+            if let CheckpointAux::Kcore { deg: d, alive: a, dying: y } = &ck.aux
+            {
+                deg = d.clone();
+                alive = a.clone();
+                dying = y.clone();
+            }
+            acct.recoveries += 1;
+            acct.replayed_rounds += logical - ck.round;
+            logical = ck.round;
+            continue;
+        }
+
+        plan.scatter_globals(&dying, &mut dying_locals);
+        {
+            let (parts, sim_ref) = (&dg.parts, &sim);
+            let (alive_ref, owner_ref) = (&alive, &dg.owner);
+            let dying_ref = &dying_locals;
+            superstep_mut(cluster.exec, pool, &mut gpus, &|pi, s: &mut GpuKcore| {
+                local_kcore_round(
+                    &parts[pi], &dying_ref[pi], alive_ref, owner_ref, cfg,
+                    sim_ref, pool, s,
+                );
+            });
+        }
+
+        // Stage the decrement messages (global id + unit decrement per
+        // mirror hit, BYTES_PER_UPDATE each) for the guarded verification.
+        let mut staged: Vec<(u32, u32, Vec<u8>)> = Vec::new();
+        for (pi, s) in gpus.iter().enumerate() {
+            let part = &dg.parts[pi];
+            let mut per_peer: Vec<Vec<u8>> =
+                vec![Vec::new(); k_alive as usize];
+            for &lu in &s.hits {
+                if (lu as usize) >= part.num_masters {
+                    let gid = part.l2g[lu as usize];
+                    let peer = dg.owner[gid as usize] as usize;
+                    per_peer[peer].extend_from_slice(&gid.to_le_bytes());
+                    per_peer[peer]
+                        .extend_from_slice(&1f32.to_bits().to_le_bytes());
+                }
+            }
+            for (peer, payload) in per_peer.into_iter().enumerate() {
+                if peer != pi && !payload.is_empty() {
+                    staged.push((pi as u32, peer as u32, payload));
+                }
+            }
+        }
+        flows.clear();
+        session
+            .exchange_guarded(k_alive, &staged, &mut flows)
+            .map_err(|e| anyhow!(e))?;
+
+        let mut comp = 0u64;
+        let mut lb_gpus = 0u32;
+        decr.fill(0);
+        for (pi, s) in gpus.iter().enumerate() {
+            comp = comp.max(s.out.cycles);
+            acct.per_gpu_comp[pi] += s.out.cycles;
+            acct.per_gpu_wall_ns[pi] += s.out.wall_ns;
+            acct.threads.insert(s.out.thread);
+            lb_gpus += s.out.lb as u32;
+            let l2g = &dg.parts[pi].l2g;
+            for &lu in &s.hits {
+                decr[l2g[lu as usize] as usize] += 1;
+            }
+            for (peer, &cnt) in s.peer_updates.iter().enumerate() {
+                if cnt > 0 {
+                    flows.push((pi as u32, peer as u32, cnt * BYTES_PER_UPDATE));
+                }
+            }
+        }
+
+        let mut next = Vec::new();
+        for v in 0..n {
+            if alive[v] && decr[v] > 0 {
+                deg[v] -= decr[v].min(deg[v]);
+                if deg[v] < k {
+                    alive[v] = false;
+                    next.push(v as u32);
+                }
+            }
+        }
+        let (mut comm, bytes_intra, bytes_inter) = price(&cluster.net, &flows);
+        comm += session.take_stalls(&cluster.net, k_alive, &flows);
+        acct.record_round(DistRoundRecord {
+            round: logical as u32,
+            active: dying.len() as u64,
+            comp_cycles: comp,
+            comm_cycles: comm,
+            comm_bytes: bytes_intra + bytes_inter,
+            comm_bytes_intra: bytes_intra,
+            comm_bytes_inter: bytes_inter,
+            lb_gpus,
+        });
+        dying = next;
+        logical += 1;
+
+        if faults.checkpoint_every > 0 && logical % faults.checkpoint_every == 0
+        {
+            ck = Checkpoint {
+                epoch: ck.epoch + 1,
+                round: logical,
+                labels: kcore_labels(&alive),
+                frontier: Vec::new(),
+                aux: CheckpointAux::Kcore {
+                    deg: deg.clone(),
+                    alive: alive.clone(),
+                    dying: dying.clone(),
+                },
+            };
+            acct.checkpoint_bytes += ck.bytes();
+            persist_checkpoint(&ck, faults)?;
+        }
+    }
+    acct.set_converged(App::Kcore, dying.is_empty(), cfg.max_rounds);
+    acct.retry_count = session.retry_count;
+    Ok(acct.finish(App::Kcore, kcore_labels(&alive)))
 }
 
 #[cfg(test)]
@@ -1245,5 +1876,204 @@ mod tests {
             assert_eq!(new.rounds, old.rounds, "{}", app.name());
             assert_eq!(new.total_cycles, old.total_cycles, "{}", app.name());
         }
+    }
+
+    // -------------------------------------------- fault layer (ISSUE 8)
+
+    fn faults(spec: &str, gpus: u32, seed: u64, every: u64) -> FaultConfig {
+        FaultConfig {
+            plan: FaultPlan::parse(spec, gpus, seed).unwrap(),
+            checkpoint_every: every,
+            checkpoint_dir: None,
+        }
+    }
+
+    #[test]
+    fn fault_free_faulty_run_matches_run_distributed() {
+        // The zero-fault path through the faulty driver is bit-identical to
+        // the plain coordinator: same labels, same round records, same
+        // cycles — checkpointing and exchange verification are free of
+        // observable side effects.
+        let g = test_graph(9, 40);
+        let src = g.max_out_degree_vertex();
+        let cluster = ClusterConfig::single_host(4);
+        for app in [App::Bfs, App::Sssp, App::Cc, App::Kcore] {
+            let base =
+                run_distributed(app, &g, src, &cfg(), &cluster, None).unwrap();
+            let ft = run_distributed_faulty(
+                app, &g, src, &cfg(), &cluster, None,
+                &faults("none", 4, 0, 2),
+            )
+            .unwrap();
+            assert_eq!(ft.labels, base.labels, "{}", app.name());
+            assert_eq!(ft.rounds, base.rounds, "{}", app.name());
+            assert_eq!(ft.total_cycles, base.total_cycles, "{}", app.name());
+            assert!(ft.converged && base.converged, "{}", app.name());
+            assert_eq!(ft.recoveries, 0);
+            assert_eq!(ft.retry_count, 0);
+            assert!(ft.checkpoint_bytes > 0, "epoch 0 always counts");
+        }
+    }
+
+    #[test]
+    fn transient_faults_keep_labels_and_cost_retries() {
+        let g = test_graph(9, 41);
+        let src = g.max_out_degree_vertex();
+        let cluster = ClusterConfig::single_host(4);
+        let base = run_distributed(App::Bfs, &g, src, &cfg(), &cluster, None)
+            .unwrap();
+        let ft = run_distributed_faulty(
+            App::Bfs, &g, src, &cfg(), &cluster, None,
+            &faults("corrupt@2:0-1x2,drop@3:1-2x2", 4, 41, 2),
+        )
+        .unwrap();
+        assert_eq!(ft.labels, base.labels);
+        assert_eq!(ft.recoveries, 0);
+        assert!(ft.retry_count >= 4, "2 corruptions + 2 drops = 4 retries");
+        assert!(
+            ft.comm_bytes > base.comm_bytes,
+            "failed attempts re-price the staged bytes on the wire"
+        );
+        assert!(ft.converged);
+    }
+
+    #[test]
+    fn gpu_death_recovers_bit_identical_labels() {
+        let g = test_graph(9, 42);
+        let src = g.max_out_degree_vertex();
+        let cluster = ClusterConfig::single_host(4);
+        let base = run_distributed(App::Bfs, &g, src, &cfg(), &cluster, None)
+            .unwrap();
+        // Death at wall round 2 with no snapshots yet: replay everything
+        // from the implicit epoch-0 checkpoint on 3 survivors.
+        let ft = run_distributed_faulty(
+            App::Bfs, &g, src, &cfg(), &cluster, None,
+            &faults("gpu-death@2:1", 4, 0, 0),
+        )
+        .unwrap();
+        assert_eq!(ft.labels, base.labels);
+        assert_eq!(ft.recoveries, 1);
+        assert_eq!(ft.replayed_rounds, 1, "one logical round was redone");
+        assert!(ft.converged);
+    }
+
+    #[test]
+    fn kcore_death_recovers_from_central_checkpoint() {
+        let mut g = test_graph(8, 25);
+        let c = EngineConfig {
+            kcore_k: 8,
+            max_rounds: 100_000,
+            ..EngineConfig::default()
+        };
+        let cluster = ClusterConfig::single_host(4);
+        let base =
+            run_distributed(App::Kcore, &g, 0, &c, &cluster, None).unwrap();
+        let ft = run_distributed_faulty(
+            App::Kcore, &g, 0, &c, &cluster, None,
+            &faults("gpu-death@1:0", 4, 0, 1),
+        )
+        .unwrap();
+        assert_eq!(ft.labels, base.labels);
+        assert_eq!(ft.recoveries, 1);
+        assert_eq!(ft.replayed_rounds, 0, "death struck before any round");
+        let (want, _) = kcore::oracle(&mut g, 8);
+        let got: Vec<bool> = ft.labels.iter().map(|&x| x > 0.5).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn faulty_runs_are_deterministic_across_sim_threads() {
+        // The ISSUE 8 determinism gate, in miniature: identical labels AND
+        // identical recovery metrics for sim_threads in {1, 2, 4}.
+        let g = test_graph(9, 43);
+        let src = g.max_out_degree_vertex();
+        let run = |threads: usize| {
+            let c = EngineConfig { sim_threads: threads, ..cfg() };
+            let r = run_distributed_faulty(
+                App::Bfs, &g, src, &c, &ClusterConfig::single_host(4), None,
+                &faults("chaos", 4, 43, 2),
+            )
+            .unwrap();
+            (
+                r.labels, r.rounds, r.recoveries, r.replayed_rounds,
+                r.retry_count, r.checkpoint_bytes, r.total_cycles, r.converged,
+            )
+        };
+        let one = run(1);
+        assert_eq!(one, run(2));
+        assert_eq!(one, run(4));
+    }
+
+    #[test]
+    fn fault_legality_is_enforced_loudly() {
+        let g = test_graph(8, 44);
+        let cluster = ClusterConfig::single_host(4);
+        let e = run_distributed_faulty(
+            App::Pr, &g, 0, &cfg(), &cluster, None, &FaultConfig::default(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("pr"), "{e}");
+        let e = run_distributed_faulty(
+            App::Cc, &g, 0, &cfg(), &cluster, None,
+            &faults("gpu-death", 4, 0, 2),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("cc"), "{e}");
+        // Transient faults remain legal for cc.
+        assert!(run_distributed_faulty(
+            App::Cc, &g, 0, &cfg(), &cluster, None,
+            &faults("corrupt@2:0-1x1", 4, 0, 2),
+        )
+        .is_ok());
+        let c = EngineConfig { compute: ComputeMode::Pjrt, ..cfg() };
+        let e = run_distributed_faulty(
+            App::Bfs, &g, 0, &c, &cluster, None, &FaultConfig::default(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("native engine"), "{e}");
+    }
+
+    #[test]
+    fn checkpoint_dir_persists_loadable_epochs() {
+        let g = test_graph(9, 45);
+        let src = g.max_out_degree_vertex();
+        let dir = std::env::temp_dir().join(format!(
+            "albk-coord-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let fc = FaultConfig {
+            plan: FaultPlan::none(),
+            checkpoint_every: 2,
+            checkpoint_dir: Some(dir.clone()),
+        };
+        let r = run_distributed_faulty(
+            App::Bfs, &g, src, &cfg(), &ClusterConfig::single_host(4), None,
+            &fc,
+        )
+        .unwrap();
+        let ck0 = Checkpoint::load(&Checkpoint::entry_path(&dir, 0)).unwrap();
+        assert_eq!(ck0.epoch, 0);
+        assert_eq!(ck0.round, 0);
+        let ck1 = Checkpoint::load(&Checkpoint::entry_path(&dir, 1)).unwrap();
+        assert_eq!(ck1.round, 2, "epoch 1 snapshots after round cadence");
+        assert!(r.checkpoint_bytes >= ck0.bytes() + ck1.bytes());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn round_exhaustion_reports_not_converged() {
+        let g = test_graph(9, 46);
+        let src = g.max_out_degree_vertex();
+        let c = EngineConfig { max_rounds: 1, ..EngineConfig::default() };
+        let r = run_distributed(
+            App::Bfs, &g, src, &c, &ClusterConfig::single_host(2), None,
+        )
+        .unwrap();
+        assert!(!r.converged, "one round cannot finish a multi-hop bfs");
     }
 }

@@ -136,9 +136,11 @@ fn ref_push(
         .collect();
     let me = std::thread::current().id();
 
+    let mut converged = false;
     for round in 0..cfg.max_rounds {
         let global_active: u64 = active.iter().map(|a| a.len() as u64).sum();
         if global_active == 0 {
+            converged = true;
             break;
         }
         let mut results = Vec::with_capacity(k);
@@ -235,6 +237,8 @@ fn ref_push(
             lb_gpus,
         });
     }
+    let converged = converged || active.iter().all(|a| a.is_empty());
+    acct.set_converged(app, converged, cfg.max_rounds);
     Ok(acct.finish(app, master))
 }
 
@@ -332,6 +336,7 @@ fn ref_pr(
         .map(|p| (0..p.graph.num_vertices() as u32).collect())
         .collect();
     let me = std::thread::current().id();
+    let mut converged = false;
 
     for round in 0..cfg.max_rounds {
         // Mirror-refresh broadcast with the historical coarse attribution.
@@ -394,9 +399,11 @@ fn ref_pr(
             lb_gpus,
         });
         if delta < cfg.pr_tol {
+            converged = true;
             break;
         }
     }
+    acct.set_converged(App::Pr, converged, cfg.max_rounds);
     Ok(acct.finish(App::Pr, ranks))
 }
 
@@ -556,6 +563,7 @@ fn ref_kcore(
         dying = next;
         round += 1;
     }
+    acct.set_converged(App::Kcore, dying.is_empty(), cfg.max_rounds);
     let labels = alive.iter().map(|&a| if a { 1.0 } else { 0.0 }).collect();
     Ok(acct.finish(App::Kcore, labels))
 }

@@ -14,15 +14,18 @@
 //!            [--balancer <vertex|twc|edge-lb|alb|enterprise|adaptive|auto>]
 //!            [--direction-opt true] [--delta W] [--kcore-k K]
 //!            [--reorder <none|degree|rcm>] [--graph-cache DIR]
+//!            [--faults <none|gpu-death|corrupt|drop|slow|chaos|spec,...>]
+//!            [--checkpoint-every K] [--checkpoint-dir DIR]
 //!            [--scale-delta D] [--seed S] [--json <out.json>]
 //! alb repro  <table1|fig1|table2|fig5|fig6|fig7|fig8|fig9|fig10|fig11|all>
 //!            [--out results] [--scale-delta D] [--quick]
 //! alb sweep  [--smoke] [--list] [--apps a,b] [--inputs x,y]
 //!            [--balancers b1,b2] [--policies p1,p2] [--gpus 1,4,8]
-//!            [--scale-delta D] [--seed S] [--delta W] [--sim-threads N]
-//!            [--exec <parallel|sequential>] [--out CAMPAIGN.json]
-//!            [--resume true|false] [--check-golden CAMPAIGN.golden.json]
-//!            [--check-adaptive] [--graph-cache DIR]
+//!            [--faults f1,f2] [--scale-delta D] [--seed S] [--delta W]
+//!            [--sim-threads N] [--exec <parallel|sequential>]
+//!            [--out CAMPAIGN.json] [--resume true|false]
+//!            [--check-golden CAMPAIGN.golden.json] [--check-adaptive]
+//!            [--check-faults] [--graph-cache DIR]
 //! ```
 //!
 //! Argument parsing is hand-rolled on std (the offline vendored crate set
@@ -36,8 +39,11 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use alb_graph::apps::engine::{self, ComputeMode, EngineConfig};
 use alb_graph::apps::App;
+use alb_graph::comm::fault::{FaultPlan, FAULTS_USAGE};
 use alb_graph::config::Framework;
-use alb_graph::coordinator::{run_distributed, ClusterConfig, ExecMode};
+use alb_graph::coordinator::{
+    run_distributed, run_distributed_faulty, ClusterConfig, ExecMode, FaultConfig,
+};
 use alb_graph::gpu::GpuSpec;
 use alb_graph::graph::reorder::{self, Reorder};
 use alb_graph::graph::{disk, inputs, io, props, CsrGraph};
@@ -62,7 +68,7 @@ impl Args {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
                 // Value-less boolean flags.
-                if matches!(key, "quick" | "smoke" | "list" | "check-adaptive") {
+                if matches!(key, "quick" | "smoke" | "list" | "check-adaptive" | "check-faults") {
                     flags.insert(key.to_string(), "true".into());
                     i += 1;
                     continue;
@@ -261,12 +267,48 @@ fn cmd_run(args: &Args) -> Result<()> {
         None => Reorder::None,
     };
 
-    let (mut g, cache_hit) = match args.get("graph-cache") {
+    // Fault injection / checkpointing (DESIGN.md §14). Any of these flags
+    // routes the distributed run through the fault-tolerant driver; all are
+    // rejected on a single GPU, where there is no exchange to fault and no
+    // survivor to re-partition onto.
+    let fault_cfg = {
+        let plan = match args.get("faults") {
+            Some(spec) => Some(FaultPlan::parse(spec, gpus, seed).map_err(|e| anyhow!(e))?),
+            None => None,
+        };
+        let every = match args.get("checkpoint-every") {
+            Some(v) => Some(v.parse::<u64>().map_err(|_| {
+                anyhow!(
+                    "bad --checkpoint-every {v}; valid values: a round interval >= 1, \
+                     or 0 for the initial checkpoint only"
+                )
+            })?),
+            None => None,
+        };
+        let dir = args.get("checkpoint-dir").map(PathBuf::from);
+        if plan.is_none() && every.is_none() && dir.is_none() {
+            None
+        } else {
+            Some(FaultConfig {
+                plan: plan.unwrap_or_else(FaultPlan::none),
+                checkpoint_every: every.unwrap_or(0),
+                checkpoint_dir: dir,
+            })
+        }
+    };
+    if fault_cfg.is_some() && gpus <= 1 {
+        bail!(
+            "--faults/--checkpoint-every/--checkpoint-dir require --gpus > 1; \
+             the fault model covers the distributed exchange (valid --faults: {FAULTS_USAGE})"
+        );
+    }
+
+    let (mut g, cache_outcome) = match args.get("graph-cache") {
         Some(dir) if !input.ends_with(".albg") => {
             disk::GraphCache::new(Path::new(dir))?.load_or_build(input, delta, seed)?
         }
         Some(_) => bail!("--graph-cache applies to named input presets, not .albg files"),
-        None => (load_graph(input, delta, seed)?, false),
+        None => (load_graph(input, delta, seed)?, disk::CacheOutcome::Miss),
     };
     // Source selection always runs on original ids; reordering then renames
     // it through the permutation so the run is the same traversal
@@ -285,7 +327,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         .set("framework", fw.name())
         .set("gpu_spec", spec.name.as_str())
         .set("gpus", gpus)
-        .set("graph_cache_hit", cache_hit)
+        .set("graph_cache_hit", cache_outcome.name())
         .set("reorder", reorder_kind.name())
         .set("seed", seed)
         .set("sim_threads", cfg.sim_threads);
@@ -307,7 +349,8 @@ fn cmd_run(args: &Args) -> Result<()> {
             .set("simulated_ms", r.ms(&spec))
             .set("rounds", r.rounds.len())
             .set("edges", r.total_edges())
-            .set("lb_rounds", r.rounds_with_lb());
+            .set("lb_rounds", r.rounds_with_lb())
+            .set("converged", r.converged);
     } else {
         // The PJRT client is not Sync: the coordinator runs partitions
         // sequentially whenever a runtime is attached, whatever --exec says.
@@ -318,7 +361,10 @@ fn cmd_run(args: &Args) -> Result<()> {
             (gpus_per_host != u32::MAX).then_some(gpus_per_host),
             effective_exec,
         );
-        let r = run_distributed(app, &g, src, &cfg, &cluster, pjrt)?;
+        let r = match &fault_cfg {
+            Some(fc) => run_distributed_faulty(app, &g, src, &cfg, &cluster, pjrt, fc)?,
+            None => run_distributed(app, &g, src, &cfg, &cluster, pjrt)?,
+        };
         println!(
             "{} on {} [{}] x{} GPUs ({}, {} exec on {} threads): {:.1} simulated ms (comp {:.1} + comm {:.1}), {} rounds ({} host ms)",
             app.name(),
@@ -350,7 +396,12 @@ fn cmd_run(args: &Args) -> Result<()> {
             .set("policy", policy.name())
             .set("exec", effective_exec.name())
             .set("os_threads", r.num_threads())
-            .set("per_gpu_wall_ms", Json::Arr(wall_ms));
+            .set("per_gpu_wall_ms", Json::Arr(wall_ms))
+            .set("converged", r.converged)
+            .set("recoveries", r.recoveries)
+            .set("replayed_rounds", r.replayed_rounds)
+            .set("retry_count", r.retry_count)
+            .set("checkpoint_bytes", r.checkpoint_bytes);
     }
 
     if let Some(path) = args.get("json") {
@@ -482,6 +533,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if let Some(v) = args.get("gpus") {
         spec.filter_gpus(v).map_err(|e| anyhow!(e))?;
     }
+    if let Some(v) = args.get("faults") {
+        spec.filter_faults(v).map_err(|e| anyhow!(e))?;
+    }
 
     let cells = spec.cells();
     if args.get("list").is_some() {
@@ -592,6 +646,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if args.get("check-adaptive").is_some() {
         repro::check_adaptive_dominance(&outcome.results).map_err(|e| anyhow!(e))?;
         println!("adaptive gate ok: adaptive matched or beat every static strategy");
+    }
+
+    // CI's chaos-gate: every faulty cell must have recovered to labels
+    // bit-identical to its fault-free twin, with bounded retries.
+    if args.get("check-faults").is_some() {
+        repro::check_fault_recovery(&outcome.results).map_err(|e| anyhow!(e))?;
+        println!("fault gate ok: every faulty cell recovered to its fault-free labels");
     }
     Ok(())
 }

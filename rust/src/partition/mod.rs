@@ -249,6 +249,19 @@ pub fn partition(g: &CsrGraph, k: u32, policy: Policy) -> DistGraph {
     DistGraph { policy, num_global: n as u32, owner, parts, g2l: g2l_all }
 }
 
+/// Re-partition after a GPU loss (ISSUE 8): the dead GPU's vertices are
+/// redistributed across the `k_alive` survivors by running the full CuSP
+/// streaming split at the new width. A fresh k-way split costs the same one
+/// pass as any incremental patch-up would (the partitioner streams edges
+/// once either way) and keeps the survivor layout identical to what a
+/// fresh `k_alive`-GPU run would build — which is what lets the recovery
+/// path reuse `ExchangePlan::new` wholesale and keeps replayed rounds
+/// bit-deterministic.
+pub fn repartition_survivors(g: &CsrGraph, k_alive: u32, policy: Policy) -> DistGraph {
+    assert!(k_alive >= 1, "cannot re-partition onto zero survivors");
+    partition(g, k_alive, policy)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -505,6 +518,21 @@ mod tests {
             // Owners monotone non-decreasing (contiguous ranges).
             for w in dg.owner.windows(2) {
                 assert!(w[0] <= w[1], "{policy:?}: owners not contiguous");
+            }
+        }
+    }
+
+    #[test]
+    fn repartition_survivors_matches_fresh_partition() {
+        let g = test_graph();
+        for policy in [Policy::Oec, Policy::Iec, Policy::Cvc] {
+            let survivors = repartition_survivors(&g, 3, policy);
+            check_invariants(&g, &survivors);
+            let fresh = partition(&g, 3, policy);
+            assert_eq!(survivors.owner, fresh.owner, "{policy:?}");
+            for (a, b) in survivors.parts.iter().zip(&fresh.parts) {
+                assert_eq!(a.l2g, b.l2g, "{policy:?}");
+                assert_eq!(a.num_masters, b.num_masters, "{policy:?}");
             }
         }
     }

@@ -635,6 +635,86 @@ pub fn check_adaptive_dominance(
     ))
 }
 
+/// The fault-recovery gate behind `alb sweep --check-faults` and CI's
+/// `chaos-gate` job (DESIGN.md §14): every fault-injected cell must have
+///
+/// 1. a fault-free twin in the same sweep (same app/input/balancer/policy/
+///    gpus, `fault = "none"`) — the gate refuses to run unarmed;
+/// 2. a `labels_hash` bit-identical to that twin's (recovery restores the
+///    exact fixpoint, not an approximation);
+/// 3. `converged = true` (a recovery that burns the round budget is a
+///    failure, not a pass); and
+/// 4. a retry count within the per-exchange budget summed over its rounds.
+pub fn check_fault_recovery(
+    cells: &[crate::campaign::CellResult],
+) -> Result<(), String> {
+    use std::collections::HashMap;
+    let budget = crate::comm::fault::MAX_EXCHANGE_ATTEMPTS as u64;
+
+    let mut fault_free: HashMap<(&str, &str, &str, &str, u32), &crate::campaign::CellResult> =
+        HashMap::new();
+    for c in cells {
+        if c.fault == "none" {
+            let key =
+                (c.app.as_str(), c.input.as_str(), c.balancer.as_str(), c.policy.as_str(), c.gpus);
+            fault_free.insert(key, c);
+        }
+    }
+
+    let mut checked = 0usize;
+    let mut failures = Vec::new();
+    for c in cells {
+        if c.fault == "none" {
+            continue;
+        }
+        let key =
+            (c.app.as_str(), c.input.as_str(), c.balancer.as_str(), c.policy.as_str(), c.gpus);
+        let Some(twin) = fault_free.get(&key) else {
+            failures.push(format!(
+                "  {}: no fault-free twin in this sweep — include \"none\" in --faults",
+                c.id
+            ));
+            continue;
+        };
+        checked += 1;
+        if c.labels_hash != twin.labels_hash {
+            failures.push(format!(
+                "  {}: recovered labels hashed {} but fault-free twin {} hashed {}",
+                c.id, c.labels_hash, twin.id, twin.labels_hash
+            ));
+        }
+        if !c.converged {
+            failures.push(format!("  {}: did not converge after recovery", c.id));
+        }
+        if c.retry_count > budget * c.rounds.max(1) {
+            failures.push(format!(
+                "  {}: {} exchange retries exceeds the budget of {} per round over {} rounds",
+                c.id, c.retry_count, budget, c.rounds
+            ));
+        }
+    }
+    if !failures.is_empty() {
+        return Err(format!(
+            "FAULT GATE FAILED ({} problem{}):\n{}\n\
+             Recovery must restore the exact fault-free fixpoint: a hash \
+             mismatch means replay-from-checkpoint or survivor re-partitioning \
+             diverged from the clean run (DESIGN.md §14).",
+            failures.len(),
+            if failures.len() == 1 { "" } else { "s" },
+            failures.join("\n")
+        ));
+    }
+    if checked == 0 {
+        return Err(
+            "UNARMED FAULT GATE: the sweep ran no fault-injected cells, so \
+             --check-faults cannot verify anything. Pass --faults with at \
+             least one non-\"none\" preset (e.g. --faults none,gpu-death,chaos)."
+                .to_string(),
+        );
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -685,5 +765,55 @@ mod tests {
         let rc = quick();
         let ms = run_cell(&rc, "rmat18", App::Bfs, Framework::DIrglAlb).unwrap();
         assert!(ms > 0.0);
+    }
+
+    #[test]
+    fn fault_gate_verdicts() {
+        use crate::campaign::CellResult;
+        let cell = |fault: &str, hash: &str, converged: bool| CellResult {
+            id: if fault == "none" {
+                "bfs/rmat18/twc/cvc/4".into()
+            } else {
+                format!("bfs/rmat18/twc/cvc/4/{fault}")
+            },
+            app: "bfs".into(),
+            input: "rmat18".into(),
+            balancer: "twc".into(),
+            policy: "cvc".into(),
+            gpus: 4,
+            labels_hash: hash.into(),
+            rounds: 10,
+            fault: fault.to_string(),
+            converged,
+            ..CellResult::default()
+        };
+
+        // Armed and matching: passes.
+        let ok = vec![cell("none", "aaaa", true), cell("chaos", "aaaa", true)];
+        check_fault_recovery(&ok).unwrap();
+
+        // Hash divergence names both cells.
+        let bad = vec![cell("none", "aaaa", true), cell("chaos", "bbbb", true)];
+        let e = check_fault_recovery(&bad).unwrap_err();
+        assert!(e.contains("FAULT GATE FAILED"), "{e}");
+        assert!(e.contains("bfs/rmat18/twc/cvc/4/chaos"), "{e}");
+
+        // Non-convergence after recovery fails.
+        let stuck = vec![cell("none", "aaaa", true), cell("chaos", "aaaa", false)];
+        assert!(check_fault_recovery(&stuck).unwrap_err().contains("converge"));
+
+        // Missing twin fails loudly.
+        let orphan = vec![cell("gpu-death", "aaaa", true)];
+        assert!(check_fault_recovery(&orphan).unwrap_err().contains("twin"));
+
+        // A fault-free-only sweep must not silently pass the gate.
+        let unarmed = vec![cell("none", "aaaa", true)];
+        assert!(check_fault_recovery(&unarmed).unwrap_err().contains("UNARMED"));
+
+        // Retry counts beyond the per-round budget fail.
+        let mut retries = vec![cell("none", "aaaa", true), cell("drop", "aaaa", true)];
+        retries[1].retry_count =
+            crate::comm::fault::MAX_EXCHANGE_ATTEMPTS as u64 * 10 + 1;
+        assert!(check_fault_recovery(&retries).unwrap_err().contains("budget"));
     }
 }

@@ -1,0 +1,115 @@
+//! Systematic `.albc` corruption fuzz (ISSUE 8 satellite c).
+//!
+//! The on-disk CSR cache must never trust damaged bytes: this test saves a
+//! real entry, then (1) truncates it at **every** possible length and
+//! (2) flips a bit in **every** byte — header, sizes, offsets, columns,
+//! weights, and the checksum trailer — asserting each mutation fails
+//! validation, and that `GraphCache::load_or_build` reports the entry as
+//! `Corrupt` and silently regenerates a valid one.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use alb_graph::graph::disk::{self, CacheOutcome, GraphCache};
+use alb_graph::graph::inputs;
+
+/// Unique temp dir that cleans itself up on drop.
+struct TmpDir(PathBuf);
+impl TmpDir {
+    fn new(tag: &str) -> Self {
+        let p = std::env::temp_dir().join(format!(
+            "albc-fuzz-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&p);
+        fs::create_dir_all(&p).unwrap();
+        TmpDir(p)
+    }
+    fn path(&self) -> &Path {
+        &self.0
+    }
+}
+impl Drop for TmpDir {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.0);
+    }
+}
+
+// A tiny but real preset entry: a few hundred vertices keeps the
+// every-byte sweep (2 x file-size loads) CI-friendly while exercising all
+// sections, staging-buffer chunking included.
+const INPUT: &str = "rmat18";
+const DELTA: i32 = -10;
+const SEED: u64 = 3;
+
+fn pristine(dir: &Path) -> (PathBuf, Vec<u8>) {
+    let g = inputs::build(INPUT, DELTA, SEED).unwrap();
+    let path = dir.join("fuzz.albc");
+    disk::save(&g, &path).unwrap();
+    let bytes = fs::read(&path).unwrap();
+    assert!(disk::load(&path).is_ok(), "pristine entry must load");
+    // Sanity on the layout the fuzz below walks: 28-byte header (magic,
+    // version, flags, n, m), offsets + cols + weights payload, u64 trailer.
+    let n = (g.row_offsets.len() - 1) as usize;
+    let m = g.col_idx.len();
+    assert_eq!(bytes.len(), 28 + (n + 1) * 8 + m * 8 + 8);
+    (path, bytes)
+}
+
+#[test]
+fn every_truncation_fails_validation() {
+    let tmp = TmpDir::new("trunc");
+    let (path, bytes) = pristine(tmp.path());
+    for len in 0..bytes.len() {
+        fs::write(&path, &bytes[..len]).unwrap();
+        assert!(
+            disk::load(&path).is_err(),
+            "truncation to {len}/{} bytes must fail validation",
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn every_byte_flip_fails_validation() {
+    let tmp = TmpDir::new("flip");
+    let (path, bytes) = pristine(tmp.path());
+    for i in 0..bytes.len() {
+        let mut mutated = bytes.clone();
+        mutated[i] ^= 0x40;
+        fs::write(&path, &mutated).unwrap();
+        assert!(
+            disk::load(&path).is_err(),
+            "bit flip at byte {i}/{} must fail validation",
+            bytes.len()
+        );
+    }
+    // The pristine bytes still load — the loop above really was testing
+    // the mutations, not a broken fixture.
+    fs::write(&path, &bytes).unwrap();
+    assert!(disk::load(&path).is_ok());
+}
+
+#[test]
+fn cache_reports_corrupt_and_regenerates() {
+    let tmp = TmpDir::new("regen");
+    let cache = GraphCache::new(tmp.path()).unwrap();
+    let (g0, o) = cache.load_or_build(INPUT, DELTA, SEED).unwrap();
+    assert_eq!(o, CacheOutcome::Miss);
+    let entry = cache.entry_path(INPUT, DELTA, SEED);
+
+    // Corrupt a mid-payload byte: the next load_or_build must say so,
+    // rebuild the same graph, and leave a valid entry behind.
+    let mut bytes = fs::read(&entry).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    fs::write(&entry, &bytes).unwrap();
+    let (g1, o1) = cache.load_or_build(INPUT, DELTA, SEED).unwrap();
+    assert_eq!(o1, CacheOutcome::Corrupt);
+    assert_eq!(g0.row_offsets, g1.row_offsets);
+    assert_eq!(g0.col_idx, g1.col_idx);
+
+    let (_, o2) = cache.load_or_build(INPUT, DELTA, SEED).unwrap();
+    assert_eq!(o2, CacheOutcome::Hit, "regenerated entry must be valid");
+}

@@ -1,0 +1,226 @@
+//! Fault-tolerance gates (DESIGN.md §14).
+//!
+//! 1. **Recovery parity matrix**: for every (app ∈ {bfs, sssp, kcore},
+//!    policy ∈ {oec, iec, cvc}, fault plan) cell on a high-imbalance
+//!    input, the recovered run's final labels must be bit-identical to the
+//!    fault-free run's — GPU death replays from checkpoint onto a
+//!    re-partitioned survivor set, corruption/drops retry the exchange,
+//!    and none of it may change a single label bit.
+//! 2. **Recovery-metric determinism**: recoveries, replayed rounds, retry
+//!    counts, checkpoint bytes, and modeled cycles are simulation outputs,
+//!    so they must be exactly reproducible across `sim_threads ∈ {1,2,4}`.
+//! 3. **Elastic soak**: a long-running high-diameter run survives a
+//!    cascade of deaths (8 → 5 GPUs) interleaved with transient faults,
+//!    across checkpoint cadences, and still lands on the fault-free
+//!    fixpoint every time.
+//! 4. **Legality**: pr (always) and cc (under gpu-death) are rejected
+//!    loudly, not silently mis-recovered.
+
+use alb_graph::apps::engine::EngineConfig;
+use alb_graph::apps::App;
+use alb_graph::comm::fault::FaultPlan;
+use alb_graph::coordinator::{
+    run_distributed, run_distributed_faulty, ClusterConfig, DistRunResult, FaultConfig,
+};
+use alb_graph::graph::inputs;
+use alb_graph::partition::Policy;
+
+const DELTA: i32 = -4; // small but non-trivial inputs for CI
+const SEED: u64 = 42;
+
+fn cfg() -> EngineConfig {
+    EngineConfig { max_rounds: 1_000_000, ..EngineConfig::default() }
+}
+
+fn faults(spec: &str, gpus: u32, every: u64) -> FaultConfig {
+    FaultConfig {
+        plan: FaultPlan::parse(spec, gpus, SEED).unwrap(),
+        checkpoint_every: every,
+        checkpoint_dir: None,
+    }
+}
+
+fn bits(labels: &[f32]) -> Vec<u32> {
+    labels.iter().map(|x| x.to_bits()).collect()
+}
+
+fn run_faulty(
+    app: App,
+    input: &str,
+    policy: Policy,
+    gpus: u32,
+    fc: &FaultConfig,
+) -> DistRunResult {
+    let g = inputs::build(input, DELTA, SEED).unwrap();
+    let src = inputs::source_vertex(input, &g);
+    let cluster = ClusterConfig { policy, ..ClusterConfig::single_host(gpus) };
+    run_distributed_faulty(app, &g, src, &cfg(), &cluster, None, fc).unwrap()
+}
+
+/// Gate 1: the full recovery parity matrix. Plans are explicit (fixed
+/// rounds and links) so every fault demonstrably fires mid-run.
+#[test]
+fn recovered_labels_are_bit_identical_across_the_matrix() {
+    let plans = [
+        "gpu-death@2:1",
+        "corrupt@1:0-1x2,corrupt@3:2-3x1",
+        "drop@2:1-2x2,slow@1:0-2x3",
+        "chaos",
+    ];
+    let input = "rmat18";
+    let (mut total_recoveries, mut total_retries) = (0u64, 0u64);
+    for app in [App::Bfs, App::Sssp, App::Kcore] {
+        for policy in [Policy::Oec, Policy::Iec, Policy::Cvc] {
+            let g = inputs::build(input, DELTA, SEED).unwrap();
+            let src = inputs::source_vertex(input, &g);
+            let cluster = ClusterConfig { policy, ..ClusterConfig::single_host(4) };
+            let base = run_distributed(app, &g, src, &cfg(), &cluster, None).unwrap();
+            for plan in plans {
+                let fc = faults(plan, 4, 2);
+                let r = run_faulty(app, input, policy, 4, &fc);
+                assert_eq!(
+                    bits(&r.labels),
+                    bits(&base.labels),
+                    "{}/{}/{plan}: recovered labels diverged from fault-free",
+                    app.name(),
+                    policy.name(),
+                );
+                assert!(r.converged, "{}/{}/{plan}: must still converge", app.name(), policy.name());
+                assert!(r.checkpoint_bytes > 0, "checkpointing was on");
+                total_recoveries += r.recoveries as u64;
+                total_retries += r.retry_count;
+            }
+        }
+    }
+    // The matrix as a whole must actually have exercised both recovery
+    // mechanisms, or the parity assertions above were vacuous.
+    assert!(total_recoveries > 0, "no plan killed a GPU — fault injection is dead code");
+    assert!(total_retries > 0, "no plan forced an exchange retry");
+}
+
+/// Targeted: a mid-run GPU death on each app re-partitions onto survivors,
+/// replays, and reports it in the metrics.
+#[test]
+fn gpu_death_recovers_and_reports_metrics() {
+    for app in [App::Bfs, App::Sssp] {
+        let g = inputs::build("rmat18", DELTA, SEED).unwrap();
+        let src = inputs::source_vertex("rmat18", &g);
+        let cluster = ClusterConfig::single_host(4);
+        let base = run_distributed(app, &g, src, &cfg(), &cluster, None).unwrap();
+        let r = run_faulty(app, "rmat18", Policy::Cvc, 4, &faults("gpu-death@2:1", 4, 2));
+        assert_eq!(bits(&r.labels), bits(&base.labels), "{}", app.name());
+        assert_eq!(r.recoveries, 1, "{}", app.name());
+        assert!(r.replayed_rounds <= 2, "checkpoint cadence 2 bounds the replay");
+        assert_eq!(r.retry_count, 0, "death is not an exchange retry");
+    }
+}
+
+/// Gate 2: every recovery metric is bit-deterministic across the intra-GPU
+/// simulation pool width.
+#[test]
+fn recovery_metrics_are_deterministic_across_sim_threads() {
+    for app in [App::Bfs, App::Kcore] {
+        let fingerprint = |threads: usize| {
+            let g = inputs::build("rmat18", DELTA, SEED).unwrap();
+            let src = inputs::source_vertex("rmat18", &g);
+            let mut c = cfg();
+            c.sim_threads = threads;
+            let fc = faults("chaos", 4, 2);
+            let r = run_distributed_faulty(
+                app, &g, src, &c, &ClusterConfig::single_host(4), None, &fc,
+            )
+            .unwrap();
+            (
+                bits(&r.labels),
+                r.rounds.len(),
+                r.total_cycles,
+                r.recoveries,
+                r.replayed_rounds,
+                r.retry_count,
+                r.checkpoint_bytes,
+                r.converged,
+            )
+        };
+        let one = fingerprint(1);
+        assert_eq!(one, fingerprint(2), "{}: sim_threads 2 diverged", app.name());
+        assert_eq!(one, fingerprint(4), "{}: sim_threads 4 diverged", app.name());
+    }
+}
+
+/// Gate 3: the elastic soak. A high-diameter run on 8 GPUs loses three of
+/// them at different rounds (8 -> 7 -> 6 -> 5 survivors) with corruption
+/// and drops in between; for every checkpoint cadence the survivors must
+/// land on the fault-free fixpoint with all three deaths recovered.
+#[test]
+fn elastic_soak_survives_cascading_deaths() {
+    let input = "road-s";
+    let g = inputs::build(input, DELTA, SEED).unwrap();
+    let src = inputs::source_vertex(input, &g);
+    let base =
+        run_distributed(App::Bfs, &g, src, &cfg(), &ClusterConfig::single_host(8), None).unwrap();
+    let plan = "gpu-death@3:0,corrupt@4:1-2x2,gpu-death@6:4,drop@8:0-3x2,gpu-death@10:2";
+    for every in [1, 2, 5] {
+        let r = run_faulty(App::Bfs, input, Policy::Cvc, 8, &faults(plan, 8, every));
+        assert_eq!(
+            bits(&r.labels),
+            bits(&base.labels),
+            "cadence {every}: soak diverged from fault-free"
+        );
+        assert!(r.converged, "cadence {every}");
+        assert_eq!(r.recoveries, 3, "cadence {every}: all three deaths must fire");
+        assert!(r.retry_count >= 4, "cadence {every}: corrupt x2 + drop x2 retries");
+        assert!(
+            r.replayed_rounds <= 3 * every,
+            "cadence {every}: replay is bounded by the checkpoint interval per death"
+        );
+    }
+}
+
+/// Zero-fault faulty runs cost nothing they shouldn't: same labels, rounds,
+/// and cycles as `run_distributed`, zero recovery metrics.
+#[test]
+fn empty_plan_matches_run_distributed_bit_for_bit() {
+    for app in [App::Bfs, App::Sssp, App::Cc, App::Kcore] {
+        let g = inputs::build("rmat18", DELTA, SEED).unwrap();
+        let src = inputs::source_vertex("rmat18", &g);
+        let cluster = ClusterConfig::single_host(4);
+        let base = run_distributed(app, &g, src, &cfg(), &cluster, None).unwrap();
+        let r = run_faulty(app, "rmat18", Policy::Cvc, 4, &faults("none", 4, 0));
+        assert_eq!(bits(&r.labels), bits(&base.labels), "{}", app.name());
+        assert_eq!(r.rounds.len(), base.rounds.len(), "{}", app.name());
+        assert_eq!(r.total_cycles, base.total_cycles, "{}", app.name());
+        assert_eq!(
+            (r.recoveries, r.replayed_rounds, r.retry_count),
+            (0, 0, 0),
+            "{}",
+            app.name()
+        );
+    }
+}
+
+/// Gate 4: legality. The fault driver refuses the apps whose recovery
+/// cannot be bit-exact, with errors that say why and what is valid.
+#[test]
+fn illegal_fault_configs_are_rejected_loudly() {
+    let g = inputs::build("rmat18", DELTA, SEED).unwrap();
+    let src = inputs::source_vertex("rmat18", &g);
+    let cluster = ClusterConfig::single_host(4);
+
+    let pr_err =
+        run_distributed_faulty(App::Pr, &g, src, &cfg(), &cluster, None, &faults("drop", 4, 0))
+            .unwrap_err()
+            .to_string();
+    assert!(pr_err.contains("pr"), "{pr_err}");
+    assert!(pr_err.contains("bfs"), "error must list valid apps: {pr_err}");
+
+    let cc_err = run_distributed_faulty(
+        App::Cc, &g, src, &cfg(), &cluster, None, &faults("gpu-death", 4, 0),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(cc_err.contains("cc"), "{cc_err}");
+
+    // cc without a death-bearing plan is legal.
+    run_distributed_faulty(App::Cc, &g, src, &cfg(), &cluster, None, &faults("drop", 4, 0))
+        .unwrap();
+}

@@ -48,9 +48,9 @@ fn run_single_gpu_json_schema() {
     assert_eq!(
         keys_at(&json, 1),
         [
-            "app", "edges", "framework", "gpu_spec", "gpus", "graph_cache_hit",
-            "input", "lb_rounds", "reorder", "rounds", "seed", "sim_threads",
-            "simulated_ms",
+            "app", "converged", "edges", "framework", "gpu_spec", "gpus",
+            "graph_cache_hit", "input", "lb_rounds", "reorder", "rounds",
+            "seed", "sim_threads", "simulated_ms",
         ],
         "single-GPU `alb run --json` schema drifted"
     );
@@ -72,11 +72,12 @@ fn run_multi_gpu_json_schema() {
     assert_eq!(
         keys_at(&json, 1),
         [
-            "app", "comm_bytes", "comm_bytes_inter", "comm_bytes_intra",
-            "comm_ms", "comp_ms", "exec", "framework", "gpu_spec", "gpus",
-            "graph_cache_hit", "input", "os_threads", "per_gpu_wall_ms",
-            "policy", "reorder", "rounds", "seed", "sim_threads",
-            "simulated_ms",
+            "app", "checkpoint_bytes", "comm_bytes", "comm_bytes_inter",
+            "comm_bytes_intra", "comm_ms", "comp_ms", "converged", "exec",
+            "framework", "gpu_spec", "gpus", "graph_cache_hit", "input",
+            "os_threads", "per_gpu_wall_ms", "policy", "recoveries",
+            "reorder", "replayed_rounds", "retry_count", "rounds", "seed",
+            "sim_threads", "simulated_ms",
         ],
         "multi-GPU `alb run --json` schema drifted"
     );
@@ -116,16 +117,18 @@ fn sweep_artifact_json_schema_and_list() {
         "CAMPAIGN.json top-level schema drifted"
     );
     let mut cell_keys = keys_at(&json, 3);
-    let per_cell = 17;
+    let per_cell = 22;
     assert_eq!(cell_keys.len() % per_cell, 0, "ragged cell objects");
     cell_keys.truncate(per_cell);
     assert_eq!(
         cell_keys,
         [
             "adaptive_threshold_final", "app", "balancer", "comm_bytes",
-            "comm_bytes_inter", "comm_bytes_intra", "gpus", "host_ms", "id",
-            "imbalance_factor", "input", "labels_hash", "lb_rounds", "policy",
-            "rounds", "simulated_ms", "total_cycles",
+            "comm_bytes_inter", "comm_bytes_intra", "converged", "fault",
+            "gpus", "host_ms", "id", "imbalance_factor", "input",
+            "labels_hash", "lb_rounds", "policy", "recoveries",
+            "replayed_rounds", "retry_count", "rounds", "simulated_ms",
+            "total_cycles",
         ],
         "CAMPAIGN.json cell schema drifted"
     );
@@ -195,6 +198,25 @@ fn invalid_values_exit_nonzero_with_valid_range() {
           "/tmp/alb-cli-nocache"],
         "named input presets",
     );
+    // --faults names the plan grammar and presets; --checkpoint-every names
+    // the accepted interval; both are distributed-only flags.
+    expect_failure(
+        &["run", "--app", "bfs", "--input", "road-s", "--scale-delta", "-4",
+          "--gpus", "4", "--faults", "bogus"],
+        "gpu-death@R:G",
+    );
+    expect_failure(
+        &["run", "--app", "bfs", "--input", "road-s", "--scale-delta", "-4",
+          "--gpus", "4", "--checkpoint-every", "abc"],
+        "bad --checkpoint-every",
+    );
+    expect_failure(
+        &["run", "--app", "bfs", "--input", "road-s", "--scale-delta", "-4",
+          "--faults", "chaos"],
+        "--gpus > 1",
+    );
+    // The sweep fault axis only takes named presets (ids must stay stable).
+    expect_failure(&["sweep", "--smoke", "--faults", "bogus"], "gpu-death");
 }
 
 // ------------------------------------------------------- adaptive gate
@@ -217,5 +239,32 @@ fn sweep_check_adaptive_gates_end_to_end() {
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let stdout = String::from_utf8_lossy(&out.stdout);
     assert!(stdout.contains("adaptive gate ok"), "{stdout}");
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------- chaos gate
+
+#[test]
+fn sweep_check_faults_gates_end_to_end() {
+    // The CLI path CI's chaos-gate job drives: a faulted sweep whose every
+    // faulty cell must recover to its fault-free twin's labels, strict
+    // gate on. `none` rides along to supply the twins.
+    let path = tmp("chaos-gate.json");
+    let out = alb_bin()
+        .args([
+            "sweep", "--apps", "bfs", "--inputs", "rmat18",
+            "--balancers", "alb", "--policies", "cvc", "--gpus", "4",
+            "--faults", "none,gpu-death", "--scale-delta", "-4",
+            "--sim-threads", "2", "--resume", "false", "--check-faults",
+            "--out", path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("fault gate ok"), "{stdout}");
+    // The faulty cell is a first-class row with its own id.
+    let json = std::fs::read_to_string(&path).unwrap();
+    assert!(json.contains("bfs/rmat18/alb/cvc/4/gpu-death"), "{json}");
     let _ = std::fs::remove_file(&path);
 }
