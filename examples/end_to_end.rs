@@ -34,6 +34,8 @@ fn check_close(a: &[f32], b: &[f32], app: App) {
 }
 
 fn main() -> anyhow::Result<()> {
+    // Example-local wall clock for the printed summary only.
+    #[allow(clippy::disallowed_methods)]
     let started = std::time::Instant::now();
     // Layer 1/2: the AOT artifacts, compiled once onto the PJRT CPU client.
     let rt = PjrtRuntime::load_default()?;

@@ -1,0 +1,207 @@
+//! The committed lint allowlist, `LINT_ALLOW.txt` (DESIGN.md §15).
+//!
+//! A rule that is right 99% of the time still needs an escape hatch for
+//! the intentional 1% — but an escape hatch that rots silently is worse
+//! than none. Three properties keep this one honest:
+//!
+//! 1. **Every suppression carries a justification.** An entry without a
+//!    non-empty `why:` field is a parse error, and parse errors fail the
+//!    lint run exactly like diagnostics do.
+//! 2. **Entries go stale-and-fail.** An entry is matched against the
+//!    diagnostics of the current run; if it suppresses nothing (the
+//!    offending line was fixed, moved, or rewritten) the entry itself
+//!    becomes an error until it is deleted. The allowlist can only ever
+//!    shrink ahead of the tree, never lag behind it.
+//! 3. **Matching is by content, not by line number.** An entry names the
+//!    rule, the file, and a substring of the offending *line text*, so
+//!    unrelated edits shifting line numbers do not detach it — but any
+//!    rewrite of the line itself does.
+//!
+//! Format, one entry per line (`#` comments and blank lines ignored):
+//!
+//! ```text
+//! RULE | repo/relative/path.rs | line-text substring | why: justification
+//! ```
+//!
+//! The substring field cannot contain `|` (it delimits fields) and must be
+//! non-empty (an empty substring would match every diagnostic in the
+//! file).
+
+use super::rules::Diagnostic;
+
+/// One parsed suppression.
+pub struct AllowEntry {
+    pub rule: String,
+    pub file: String,
+    pub substring: String,
+    pub why: String,
+    /// 1-based line in LINT_ALLOW.txt, for stale-entry reporting.
+    pub line_no: usize,
+}
+
+/// The parsed allowlist: valid entries plus parse errors (which fail the
+/// run — see [`Allowlist::apply`] callers).
+pub struct Allowlist {
+    pub entries: Vec<AllowEntry>,
+    pub errors: Vec<String>,
+}
+
+/// The result of filtering diagnostics through the allowlist.
+pub struct Applied {
+    /// Diagnostics no entry matched — these fail the run.
+    pub kept: Vec<Diagnostic>,
+    /// How many diagnostics were suppressed by a justified entry.
+    pub suppressed: usize,
+    /// Entries that matched nothing this run — stale, and fail the run.
+    pub stale: Vec<String>,
+}
+
+pub fn parse(text: &str) -> Allowlist {
+    let mut entries = Vec::new();
+    let mut errors = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = t.splitn(4, '|').map(str::trim).collect();
+        if parts.len() != 4 {
+            errors.push(format!(
+                "LINT_ALLOW.txt:{}: want `RULE | file | substring | why: ...`, got `{t}`",
+                i + 1
+            ));
+            continue;
+        }
+        let (rule, file, substring, why_field) = (parts[0], parts[1], parts[2], parts[3]);
+        if rule.is_empty() || file.is_empty() {
+            errors.push(format!("LINT_ALLOW.txt:{}: empty rule or file field", i + 1));
+            continue;
+        }
+        if substring.is_empty() {
+            errors.push(format!(
+                "LINT_ALLOW.txt:{}: empty substring would match every {rule} \
+                 diagnostic in {file}",
+                i + 1
+            ));
+            continue;
+        }
+        let why = why_field.strip_prefix("why:").map(str::trim);
+        match why {
+            Some(w) if !w.is_empty() => entries.push(AllowEntry {
+                rule: rule.to_string(),
+                file: file.to_string(),
+                substring: substring.to_string(),
+                why: w.to_string(),
+                line_no: i + 1,
+            }),
+            _ => errors.push(format!(
+                "LINT_ALLOW.txt:{}: suppression of {rule} in {file} has no \
+                 `why:` justification",
+                i + 1
+            )),
+        }
+    }
+    Allowlist { entries, errors }
+}
+
+impl Allowlist {
+    /// Partition diagnostics into kept (unmatched) and suppressed, and
+    /// report entries that matched nothing as stale.
+    pub fn apply(&self, diags: Vec<Diagnostic>) -> Applied {
+        let mut matched = vec![0usize; self.entries.len()];
+        let mut kept = Vec::new();
+        let mut suppressed = 0usize;
+        for d in diags {
+            let mut hit = false;
+            for (idx, e) in self.entries.iter().enumerate() {
+                if e.rule == d.rule && e.file == d.file && d.text.contains(&e.substring) {
+                    matched[idx] += 1;
+                    hit = true;
+                }
+            }
+            if hit {
+                suppressed += 1;
+            } else {
+                kept.push(d);
+            }
+        }
+        let stale = self
+            .entries
+            .iter()
+            .zip(&matched)
+            .filter(|(_, &m)| m == 0)
+            .map(|(e, _)| {
+                format!(
+                    "LINT_ALLOW.txt:{}: stale entry `{} | {} | {}` — it suppresses \
+                     nothing; the violation it covered is gone, delete the entry",
+                    e.line_no, e.rule, e.file, e.substring
+                )
+            })
+            .collect();
+        Applied { kept, suppressed, stale }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(rule: &'static str, file: &str, text: &str) -> Diagnostic {
+        Diagnostic {
+            rule,
+            file: file.to_string(),
+            line: 7,
+            message: "m".into(),
+            text: text.to_string(),
+        }
+    }
+
+    #[test]
+    fn entry_without_why_is_an_error() {
+        let a = parse("D002 | rust/src/x.rs | .values() | because\n");
+        assert!(a.entries.is_empty());
+        assert_eq!(a.errors.len(), 1);
+        assert!(a.errors[0].contains("why:"), "{}", a.errors[0]);
+    }
+
+    #[test]
+    fn empty_substring_is_an_error() {
+        let a = parse("D002 | rust/src/x.rs |  | why: too broad\n");
+        assert!(a.entries.is_empty());
+        assert_eq!(a.errors.len(), 1);
+    }
+
+    #[test]
+    fn comments_and_blanks_are_skipped() {
+        let a = parse("# header\n\nD002 | rust/src/x.rs | .values() | why: sorted after\n");
+        assert_eq!(a.entries.len(), 1);
+        assert!(a.errors.is_empty());
+        assert_eq!(a.entries[0].why, "sorted after");
+    }
+
+    #[test]
+    fn matching_suppresses_and_nonmatching_goes_stale() {
+        let a = parse(
+            "D002 | rust/src/x.rs | .values() | why: sorted after\n\
+             U001 | rust/src/y.rs | transmute | why: covered elsewhere\n",
+        );
+        let out = a.apply(vec![
+            d("D002", "rust/src/x.rs", "let v = prior.values()"),
+            d("D002", "rust/src/z.rs", "let v = other.values()"),
+        ]);
+        assert_eq!(out.suppressed, 1);
+        assert_eq!(out.kept.len(), 1);
+        assert_eq!(out.kept[0].file, "rust/src/z.rs");
+        assert_eq!(out.stale.len(), 1);
+        assert!(out.stale[0].contains("U001"), "{}", out.stale[0]);
+    }
+
+    #[test]
+    fn rule_and_file_must_both_match() {
+        let a = parse("D002 | rust/src/x.rs | .values() | why: sorted\n");
+        let out = a.apply(vec![d("D003", "rust/src/x.rs", "prior.values()")]);
+        assert_eq!(out.suppressed, 0);
+        assert_eq!(out.kept.len(), 1);
+        assert_eq!(out.stale.len(), 1);
+    }
+}

@@ -1,0 +1,428 @@
+//! A lightweight line-model lexer for Rust sources (DESIGN.md §15).
+//!
+//! `alb lint` does not need a parse tree — every rule it enforces is a
+//! property of *lines*: "this line reads the wall clock", "the line above
+//! this `unsafe` is a `// SAFETY:` comment", "this string literal names a
+//! flag but no valid set". What the rules *do* need, and what a plain
+//! substring grep cannot give them, is to know which bytes of a line are
+//! code, which are comment, and which sit inside a string/char literal.
+//!
+//! [`FileModel::parse`] walks the source once with a six-state machine
+//! (code, line comment, nested block comment, string, raw string, char
+//! literal) and emits, per line:
+//!
+//! - `code`: the line with comments removed and literal *contents* blanked
+//!   to spaces (the delimiting quotes survive, so column positions are
+//!   stable). Rules that match identifiers (`unsafe`, `Instant::now`,
+//!   `HashMap`) run against this view and cannot be fooled by occurrences
+//!   inside strings or comments — which matters, because the linter lints
+//!   its own sources and its own test fixtures.
+//! - `comment`: the comment text of the line (`// SAFETY:` lives here).
+//! - `raw`: the verbatim line, for diagnostics and for rules that scan
+//!   prose (`DESIGN.md §N` references appear in comments).
+//!
+//! Literal contents are not discarded: they are recorded per start line in
+//! [`FileModel::literals`] so the C-rules can inspect error-message text.
+//!
+//! The model also records where `#[cfg(test)]` first appears. This
+//! repository keeps each file's test module at the end of the file, so
+//! "everything from that line on" is a faithful test region — rules that
+//! only govern product code (the D-rules, C001) stop there.
+//!
+//! Known, accepted approximations: a lifetime is distinguished from a char
+//! literal by lookahead (`'a` vs `'x'`), raw strings support any `#` depth,
+//! block comments nest, and a backslash-newline continues a string across
+//! lines. Exotic shapes the tree does not contain (e.g. `'\u{…}'` spanning
+//! a newline) are out of scope; the fixture corpus in `rust/tests/lint.rs`
+//! pins everything the rules rely on.
+
+/// One source line, split into its code, comment, and verbatim views.
+#[derive(Debug, Clone, Default)]
+pub struct Line {
+    /// Code view: comments stripped, literal contents blanked to spaces.
+    pub code: String,
+    /// Comment text appearing on this line (both `//` and `/* */`).
+    pub comment: String,
+    /// The verbatim line, for diagnostics and prose scans.
+    pub raw: String,
+}
+
+/// The per-line model of one source file.
+#[derive(Debug, Default)]
+pub struct FileModel {
+    /// 0-indexed storage; use [`FileModel::line`] for 1-based access.
+    pub lines: Vec<Line>,
+    /// String-literal contents, recorded at the literal's *start* line.
+    pub literals: Vec<(usize, String)>,
+    /// 1-based line of the first `#[cfg(test)]`; the test region runs from
+    /// there to end of file (repo convention: tests module last).
+    pub test_start: Option<usize>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    LineComment,
+    Block,
+    Str,
+    RawStr,
+    Char,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+impl FileModel {
+    pub fn parse(src: &str) -> FileModel {
+        let chars: Vec<char> = src.chars().collect();
+        let n = chars.len();
+        let mut i = 0usize;
+        let mut state = State::Code;
+        let mut depth = 0usize; // block-comment nesting
+        let mut hashes = 0usize; // raw-string `#` count
+        let mut code = String::new();
+        let mut cmt = String::new();
+        let mut raw = String::new();
+        let mut lit = String::new();
+        let mut lit_start = 0usize;
+        let mut line_no = 1usize;
+        let mut lines: Vec<Line> = Vec::new();
+        let mut literals: Vec<(usize, String)> = Vec::new();
+
+        macro_rules! endline {
+            () => {{
+                lines.push(Line {
+                    code: std::mem::take(&mut code),
+                    comment: std::mem::take(&mut cmt),
+                    raw: std::mem::take(&mut raw),
+                });
+            }};
+        }
+
+        while i < n {
+            let c = chars[i];
+            if c == '\n' {
+                if state == State::LineComment {
+                    state = State::Code;
+                }
+                endline!();
+                line_no += 1;
+                i += 1;
+                continue;
+            }
+            raw.push(c);
+            match state {
+                State::Code => {
+                    let nxt = if i + 1 < n { chars[i + 1] } else { '\0' };
+                    if c == '/' && nxt == '/' {
+                        state = State::LineComment;
+                        cmt.push_str("//");
+                        raw.push(nxt);
+                        i += 2;
+                        continue;
+                    }
+                    if c == '/' && nxt == '*' {
+                        state = State::Block;
+                        depth = 1;
+                        cmt.push_str("/*");
+                        raw.push(nxt);
+                        i += 2;
+                        continue;
+                    }
+                    if c == '"' {
+                        state = State::Str;
+                        code.push('"');
+                        lit.clear();
+                        lit_start = line_no;
+                        i += 1;
+                        continue;
+                    }
+                    let prev = if i > 0 { chars[i - 1] } else { '\0' };
+                    if c == 'r' && (nxt == '"' || nxt == '#') && !is_ident(prev) {
+                        let mut j = i + 1;
+                        let mut h = 0usize;
+                        while j < n && chars[j] == '#' {
+                            h += 1;
+                            j += 1;
+                        }
+                        if j < n && chars[j] == '"' {
+                            state = State::RawStr;
+                            hashes = h;
+                            code.push('r');
+                            for _ in 0..h {
+                                code.push('#');
+                            }
+                            code.push('"');
+                            for k in chars.iter().take(j + 1).skip(i + 1) {
+                                raw.push(*k);
+                            }
+                            lit.clear();
+                            lit_start = line_no;
+                            i = j + 1;
+                            continue;
+                        }
+                    }
+                    if c == 'b' && nxt == '"' && !is_ident(prev) {
+                        state = State::Str;
+                        code.push_str("b\"");
+                        raw.push(nxt);
+                        lit.clear();
+                        lit_start = line_no;
+                        i += 2;
+                        continue;
+                    }
+                    if c == '\'' {
+                        if nxt == '\\' {
+                            // escaped char literal: '\n', '\'', '\u{..}'
+                            state = State::Char;
+                            code.push('\'');
+                            i += 1;
+                            continue;
+                        }
+                        let nxt2 = if i + 2 < n { chars[i + 2] } else { '\0' };
+                        if nxt != '\0' && nxt2 == '\'' {
+                            // plain char literal 'x' (including '"')
+                            code.push_str("' '");
+                            raw.push(nxt);
+                            raw.push(nxt2);
+                            i += 3;
+                            continue;
+                        }
+                        // lifetime: leave the tick in the code view
+                        code.push('\'');
+                        i += 1;
+                        continue;
+                    }
+                    code.push(c);
+                    i += 1;
+                }
+                State::LineComment => {
+                    cmt.push(c);
+                    i += 1;
+                }
+                State::Block => {
+                    let nxt = if i + 1 < n { chars[i + 1] } else { '\0' };
+                    if c == '/' && nxt == '*' {
+                        depth += 1;
+                        cmt.push_str("/*");
+                        raw.push(nxt);
+                        i += 2;
+                        continue;
+                    }
+                    if c == '*' && nxt == '/' {
+                        depth -= 1;
+                        cmt.push_str("*/");
+                        raw.push(nxt);
+                        i += 2;
+                        if depth == 0 {
+                            state = State::Code;
+                        }
+                        continue;
+                    }
+                    cmt.push(c);
+                    i += 1;
+                }
+                State::Str => {
+                    if c == '\\' {
+                        let nxt = if i + 1 < n { chars[i + 1] } else { '\0' };
+                        lit.push(c);
+                        lit.push(nxt);
+                        if nxt == '\n' {
+                            endline!();
+                            line_no += 1;
+                        } else {
+                            raw.push(nxt);
+                            code.push_str("  ");
+                        }
+                        i += 2;
+                        continue;
+                    }
+                    if c == '"' {
+                        state = State::Code;
+                        code.push('"');
+                        literals.push((lit_start, std::mem::take(&mut lit)));
+                        i += 1;
+                        continue;
+                    }
+                    lit.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+                State::RawStr => {
+                    if c == '"' {
+                        let mut j = i + 1;
+                        let mut h = 0usize;
+                        while j < n && chars[j] == '#' && h < hashes {
+                            h += 1;
+                            j += 1;
+                        }
+                        if h == hashes {
+                            state = State::Code;
+                            code.push('"');
+                            for _ in 0..h {
+                                code.push('#');
+                            }
+                            for k in chars.iter().take(j).skip(i + 1) {
+                                raw.push(*k);
+                            }
+                            literals.push((lit_start, std::mem::take(&mut lit)));
+                            i = j;
+                            continue;
+                        }
+                    }
+                    lit.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+                State::Char => {
+                    if c == '\\' {
+                        let nxt = if i + 1 < n { chars[i + 1] } else { '\0' };
+                        raw.push(nxt);
+                        code.push_str("  ");
+                        i += 2;
+                        continue;
+                    }
+                    if c == '\'' {
+                        state = State::Code;
+                        code.push('\'');
+                        i += 1;
+                        continue;
+                    }
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+        if !code.is_empty() || !cmt.is_empty() || !raw.is_empty() || lines.is_empty() {
+            lines.push(Line { code, comment: cmt, raw });
+        }
+
+        let test_start = lines
+            .iter()
+            .position(|l| l.code.contains("#[cfg(test)]"))
+            .map(|idx| idx + 1);
+        FileModel { lines, literals, test_start }
+    }
+
+    /// 1-based line access.
+    pub fn line(&self, no: usize) -> &Line {
+        &self.lines[no - 1]
+    }
+
+    /// Is this 1-based line inside the trailing test region?
+    pub fn is_test_line(&self, no: usize) -> bool {
+        matches!(self.test_start, Some(t) if no >= t)
+    }
+
+    /// Does this 1-based line hold only comment text (no code)?
+    pub fn is_comment_only(&self, no: usize) -> bool {
+        let l = self.line(no);
+        l.code.trim().is_empty() && !l.comment.trim().is_empty()
+    }
+}
+
+/// All start offsets where `word` occurs in `hay` with non-identifier
+/// characters (or the string boundary) on both sides.
+pub fn find_word(hay: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    if word.is_empty() {
+        return out;
+    }
+    let hb = hay.as_bytes();
+    let wlen = word.len();
+    let mut start = 0usize;
+    while let Some(k) = hay[start..].find(word) {
+        let at = start + k;
+        let before_ok = at == 0 || !is_ident(hb[at - 1] as char);
+        let after_ok = at + wlen >= hb.len() || !is_ident(hb[at + wlen] as char);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        start = at + 1;
+    }
+    out
+}
+
+/// Whole-word containment (see [`find_word`]).
+pub fn contains_word(hay: &str, word: &str) -> bool {
+    !find_word(hay, word).is_empty()
+}
+
+/// Is `c` an identifier character (`XID`-ish: alphanumeric or `_`)?
+pub fn ident_char(c: char) -> bool {
+    is_ident(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_leave_the_code_view() {
+        let fm = FileModel::parse(
+            "let a = \"text in string\"; // trailing words\nlet b = 2;\n",
+        );
+        assert_eq!(fm.lines.len(), 2);
+        assert!(!fm.lines[0].code.contains("text"));
+        assert!(!fm.lines[0].code.contains("trailing"));
+        assert!(fm.lines[0].comment.contains("trailing words"));
+        assert_eq!(fm.literals.len(), 1);
+        assert_eq!(fm.literals[0], (1, "text in string".to_string()));
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let fm = FileModel::parse("/* a /* b */ c */ let x = 1;\n");
+        assert_eq!(fm.lines[0].code.trim(), "let x = 1;");
+        assert!(fm.lines[0].comment.contains('b'));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let fm = FileModel::parse("fn f<'a>(x: &'a str) -> &'a str { x }\n");
+        // the body brace survives: the tick did not swallow code
+        assert!(fm.lines[0].code.contains("{ x }"));
+    }
+
+    #[test]
+    fn char_literals_are_blanked() {
+        let fm = FileModel::parse("let q = '\\''; let d = '\"'; let z = 'u';\n");
+        let code = &fm.lines[0].code;
+        assert!(!code.contains('u') || code.contains("let"), "{code}");
+        assert!(!code.contains('"'), "double quote must be blanked: {code}");
+    }
+
+    #[test]
+    fn raw_strings_record_contents_and_blank_code() {
+        let fm = FileModel::parse("let s = r#\"has \"quotes\" inside\"#;\nlet t = 1;\n");
+        assert!(!fm.lines[0].code.contains("quotes"));
+        assert_eq!(fm.literals.len(), 1);
+        assert!(fm.literals[0].1.contains("has \"quotes\" inside"));
+        assert_eq!(fm.lines[1].code.trim(), "let t = 1;");
+    }
+
+    #[test]
+    fn test_region_starts_at_cfg_test() {
+        let fm = FileModel::parse("fn a() {}\n#[cfg(test)]\nmod tests {}\n");
+        assert_eq!(fm.test_start, Some(2));
+        assert!(!fm.is_test_line(1));
+        assert!(fm.is_test_line(2));
+        assert!(fm.is_test_line(3));
+    }
+
+    #[test]
+    fn comment_only_detection() {
+        let fm = FileModel::parse("// just words\nlet x = 1; // tail\n\n");
+        assert!(fm.is_comment_only(1));
+        assert!(!fm.is_comment_only(2));
+        assert!(!fm.is_comment_only(3));
+    }
+
+    #[test]
+    fn find_word_respects_boundaries() {
+        assert_eq!(find_word("foo unsafely", "unsafe"), Vec::<usize>::new());
+        assert_eq!(find_word("an unsafe block", "unsafe"), vec![3]);
+        assert_eq!(find_word("unsafe", "unsafe"), vec![0]);
+    }
+}

@@ -1,0 +1,188 @@
+//! `alb lint` — repo-invariant static analysis (DESIGN.md §15).
+//!
+//! The determinism story of this reproduction (bit-identical results
+//! across thread counts, GPU counts, and fault plans) rests on coding
+//! conventions that no compiler checks: wall-clock reads stay out of
+//! result paths, hash-ordered iteration never feeds ordered output,
+//! `unsafe` lives in two audited modules with written safety arguments,
+//! and every SWAR hot path keeps a scalar twin wired into a parity test.
+//! This module turns those conventions into machine-checked rules, in the
+//! spirit of the IrGL compiler the source paper builds on: *check* the
+//! program, don't trust it.
+//!
+//! Layout:
+//!
+//! - [`lexer`]: a per-line code/comment/literal model of Rust source — no
+//!   parse tree, just enough structure that rules cannot be fooled by
+//!   strings or comments.
+//! - [`rules`]: the rule engine — stable IDs (D/U/T/C families),
+//!   `file:line` diagnostics. See its module docs for the full table.
+//! - [`allowlist`]: the committed suppression file `LINT_ALLOW.txt`;
+//!   every entry carries a justification and goes stale-and-fails when
+//!   the line it covered disappears.
+//!
+//! Entry points: [`run_lint`] (walk a repo root, apply the allowlist,
+//! produce a [`LintReport`]) drives the `alb lint` CLI verb and the tier-1
+//! gate in `rust/tests/lint.rs`; [`rules::lint_source`] runs the
+//! file-scoped rules on one in-memory source (the fixture corpus);
+//! [`load_tree`]/[`rules::lint_tree`] expose the tree level for tests that
+//! mutate a loaded tree and assert the gate trips.
+
+pub mod allowlist;
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::Json;
+pub use rules::{lint_source, lint_tree, Diagnostic, SourceFile, Tree};
+
+/// The committed twin manifest (see `twins.list` and the T-rules).
+pub const TWINS_MANIFEST: &str = include_str!("twins.list");
+
+/// Allowlist filename, resolved relative to the lint root.
+pub const ALLOWLIST_FILE: &str = "LINT_ALLOW.txt";
+
+/// Directories scanned for `.rs` sources, relative to the lint root.
+pub const SCAN_DIRS: [&str; 4] = ["rust/src", "rust/tests", "benches", "examples"];
+
+/// The outcome of one lint run.
+pub struct LintReport {
+    /// Unsuppressed diagnostics, sorted by (file, line, rule).
+    pub diagnostics: Vec<Diagnostic>,
+    /// Diagnostics suppressed by a justified allowlist entry.
+    pub suppressed: usize,
+    /// Stale or malformed allowlist entries — these fail the run too.
+    pub stale: Vec<String>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// A run is clean only if nothing fired *and* the allowlist is tight.
+    pub fn clean(&self) -> bool {
+        self.diagnostics.is_empty() && self.stale.is_empty()
+    }
+
+    /// Machine-readable form (the CI `lint-invariants` artifact).
+    pub fn to_json(&self) -> Json {
+        let diags: Vec<Json> = self
+            .diagnostics
+            .iter()
+            .map(|d| {
+                Json::obj()
+                    .set("rule", d.rule)
+                    .set("file", d.file.as_str())
+                    .set("line", d.line as u64)
+                    .set("message", d.message.as_str())
+                    .set("text", d.text.as_str())
+            })
+            .collect();
+        let stale: Vec<Json> = self.stale.iter().map(|s| Json::from(s.as_str())).collect();
+        Json::obj()
+            .set("clean", self.clean())
+            .set("diagnostics", diags)
+            .set("files_scanned", self.files_scanned as u64)
+            .set("stale_allowlist", stale)
+            .set("suppressed", self.suppressed as u64)
+    }
+
+    /// Human-readable form (the default CLI output).
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        for d in &self.diagnostics {
+            s.push_str(&d.render());
+            s.push('\n');
+        }
+        for e in &self.stale {
+            s.push_str(e);
+            s.push('\n');
+        }
+        s.push_str(&format!(
+            "lint: {} file(s) scanned, {} diagnostic(s), {} suppressed, {} stale \
+             allowlist entr{}\n",
+            self.files_scanned,
+            self.diagnostics.len(),
+            self.suppressed,
+            self.stale.len(),
+            if self.stale.len() == 1 { "y" } else { "ies" },
+        ));
+        s
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for determinism.
+fn walk_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)
+        .with_context(|| format!("read_dir {}", dir.display()))?
+        .collect::<std::io::Result<Vec<_>>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Parse every source under the [`SCAN_DIRS`] of `root` plus DESIGN.md's
+/// section list into a [`Tree`] ready for [`rules::lint_tree`].
+pub fn load_tree(root: &Path) -> Result<Tree> {
+    let mut paths = Vec::new();
+    for sub in SCAN_DIRS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            walk_rs(&dir, &mut paths)?;
+        }
+    }
+    if paths.is_empty() {
+        bail!(
+            "no .rs sources under {} — pass the repository root via --root",
+            root.display()
+        );
+    }
+    let mut files = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let src =
+            fs::read_to_string(p).with_context(|| format!("read {}", p.display()))?;
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push(SourceFile::new(rel, &src));
+    }
+    let design_path = root.join("DESIGN.md");
+    let design = fs::read_to_string(&design_path)
+        .with_context(|| format!("read {} (needed for the C002 rule)", design_path.display()))?;
+    let design_sections: BTreeSet<u32> = rules::design_sections(&design);
+    Ok(Tree { files, design_sections, manifest: TWINS_MANIFEST.to_string() })
+}
+
+/// Lint the repo at `root`: load the tree, run every rule, filter through
+/// `LINT_ALLOW.txt`. Errors are environmental (unreadable files); rule
+/// findings land in the report, whose [`LintReport::clean`] decides the
+/// process exit.
+pub fn run_lint(root: &Path) -> Result<LintReport> {
+    let tree = load_tree(root)?;
+    let diags = rules::lint_tree(&tree);
+    let allow_text = fs::read_to_string(root.join(ALLOWLIST_FILE)).unwrap_or_default();
+    let list = allowlist::parse(&allow_text);
+    let applied = list.apply(diags);
+    let mut stale = list.errors;
+    stale.extend(applied.stale);
+    Ok(LintReport {
+        diagnostics: applied.kept,
+        suppressed: applied.suppressed,
+        stale,
+        files_scanned: tree.files.len(),
+    })
+}

@@ -1,0 +1,740 @@
+//! The `alb lint` rule engine (DESIGN.md §15).
+//!
+//! Every rule has a stable ID and a one-line contract:
+//!
+//! | ID   | family      | contract                                                        |
+//! |------|-------------|-----------------------------------------------------------------|
+//! | D001 | determinism | no wall-clock reads outside the allowlisted host-timing sites   |
+//! | D002 | determinism | no iteration over hash-ordered collections in product code      |
+//! | D003 | determinism | no ambient randomness (`RandomState`, `thread_rng`, `rand::`)   |
+//! | U001 | unsafe      | every `unsafe` is immediately preceded by a `// SAFETY:` comment |
+//! | U002 | unsafe      | `unsafe` is confined to `exec/mod.rs` and `comm/bsp.rs`         |
+//! | T001 | twins       | every manifest hot path and its `*_ref` twin still exist        |
+//! | T002 | twins       | every `*_ref` twin is referenced from a parity/oracle test      |
+//! | C001 | consistency | flag-parse error messages name the valid set                    |
+//! | C002 | consistency | `DESIGN.md §N` references resolve to an existing section        |
+//!
+//! D-rules and C001 govern product code only: they stop at the file's
+//! trailing `#[cfg(test)]` region and skip `rust/tests/`, `benches/`, and
+//! `examples/`. U-rules scan everything — an unsound test is still
+//! unsound. The rules are deliberately syntactic (no type information), so
+//! each one is tuned to the shapes this tree actually contains and is
+//! pinned by the fixture corpus in `rust/tests/lint.rs`; intentional
+//! violations are suppressed via `LINT_ALLOW.txt` (see
+//! [`super::allowlist`]), never by weakening a rule.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{contains_word, find_word, ident_char, FileModel};
+
+/// Wall-clock reads are allowed only at these host-timing sites: the bench
+/// harness, the campaign runner's per-cell `host_ms`, the coordinator's
+/// advisory timings, and the CLI's end-to-end report. All are measurement
+/// channels; none feed results, hashes, or artifacts bytes.
+const D001_ALLOWED_FILES: [&str; 3] =
+    ["rust/src/metrics/bench.rs", "rust/src/campaign/runner.rs", "rust/src/main.rs"];
+const D001_ALLOWED_PREFIXES: [&str; 1] = ["rust/src/coordinator/"];
+
+/// The only modules allowed to contain `unsafe` (DESIGN.md §9): the
+/// caller-participating job pool and the per-index exclusive exchange view.
+const U002_ALLOWED_FILES: [&str; 2] = ["rust/src/exec/mod.rs", "rust/src/comm/bsp.rs"];
+
+/// Iterator methods whose order is the hash order of the receiver.
+const D002_METHODS: [&str; 9] = [
+    "iter", "iter_mut", "keys", "values", "values_mut", "into_iter", "into_keys",
+    "into_values", "drain",
+];
+
+/// One `file:line` finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Stable rule ID (`D001`, `U002`, ...).
+    pub rule: &'static str,
+    /// Repo-relative path with `/` separators.
+    pub file: String,
+    /// 1-based line (0 for file-level findings like a missing twin).
+    pub line: usize,
+    pub message: String,
+    /// The offending line, trimmed — also the allowlist match target.
+    pub text: String,
+}
+
+impl Diagnostic {
+    pub fn render(&self) -> String {
+        format!("{} {}:{} {} | {}", self.rule, self.file, self.line, self.message, self.text)
+    }
+}
+
+/// A parsed source file plus its repo-relative path.
+pub struct SourceFile {
+    pub path: String,
+    pub model: FileModel,
+}
+
+impl SourceFile {
+    pub fn new(path: impl Into<String>, src: &str) -> SourceFile {
+        SourceFile { path: path.into(), model: FileModel::parse(src) }
+    }
+}
+
+/// Everything tree-scoped rules need: the parsed sources, the set of
+/// `## §N` sections in DESIGN.md, and the twin manifest text.
+pub struct Tree {
+    pub files: Vec<SourceFile>,
+    pub design_sections: BTreeSet<u32>,
+    pub manifest: String,
+}
+
+/// Section numbers declared as `## §N ...` headings in DESIGN.md.
+pub fn design_sections(md: &str) -> BTreeSet<u32> {
+    md.lines()
+        .filter_map(|l| {
+            let rest = l.strip_prefix("##")?.trim_start();
+            let rest = rest.strip_prefix('§')?;
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            digits.parse().ok()
+        })
+        .collect()
+}
+
+/// Run the file-scoped rules (D001–D003, U001, U002, C001) on one source.
+/// This is the fixture-corpus entry point; [`lint_tree`] adds the
+/// tree-scoped rules (T001, T002, C002) on top.
+pub fn lint_source(path: &str, src: &str) -> Vec<Diagnostic> {
+    let f = SourceFile::new(path, src);
+    let mut out = Vec::new();
+    lint_file(&f, &mut out);
+    sort(&mut out);
+    out
+}
+
+/// Run every rule over a loaded tree.
+pub fn lint_tree(tree: &Tree) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for f in &tree.files {
+        lint_file(f, &mut out);
+        rule_c002(f, &tree.design_sections, &mut out);
+    }
+    check_twins(&tree.manifest, &tree.files, &mut out);
+    sort(&mut out);
+    out
+}
+
+fn sort(out: &mut [Diagnostic]) {
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+}
+
+fn lint_file(f: &SourceFile, out: &mut Vec<Diagnostic>) {
+    rule_d001(f, out);
+    rule_d002(f, out);
+    rule_d003(f, out);
+    rule_u001(f, out);
+    rule_u002(f, out);
+    rule_c001(f, out);
+}
+
+fn diag(
+    out: &mut Vec<Diagnostic>,
+    rule: &'static str,
+    f: &SourceFile,
+    line: usize,
+    message: impl Into<String>,
+) {
+    let text = if line >= 1 && line <= f.model.lines.len() {
+        f.model.line(line).raw.trim().to_string()
+    } else {
+        String::new()
+    };
+    out.push(Diagnostic { rule, file: f.path.clone(), line, message: message.into(), text });
+}
+
+/// Last 1-based product-code line + 1 (i.e. iterate `1..limit`).
+fn product_limit(fm: &FileModel) -> usize {
+    fm.test_start.unwrap_or(fm.lines.len() + 1)
+}
+
+fn in_src(path: &str) -> bool {
+    path.starts_with("rust/src/")
+}
+
+// ---------------------------------------------------------------- D-rules
+
+fn rule_d001(f: &SourceFile, out: &mut Vec<Diagnostic>) {
+    if !in_src(&f.path)
+        || D001_ALLOWED_FILES.contains(&f.path.as_str())
+        || D001_ALLOWED_PREFIXES.iter().any(|p| f.path.starts_with(p))
+    {
+        return;
+    }
+    for no in 1..product_limit(&f.model) {
+        let code = &f.model.line(no).code;
+        if code.contains("Instant::now") || contains_word(code, "SystemTime") {
+            diag(
+                out,
+                "D001",
+                f,
+                no,
+                "wall-clock read outside the allowlisted host-timing sites \
+                 (bench.rs, campaign/runner.rs, coordinator/, main.rs)",
+            );
+        }
+    }
+}
+
+fn rule_d002(f: &SourceFile, out: &mut Vec<Diagnostic>) {
+    if !in_src(&f.path) {
+        return;
+    }
+    let fm = &f.model;
+    let limit = product_limit(fm);
+    let mut idents: BTreeSet<String> = BTreeSet::new();
+    for no in 1..limit {
+        collect_hash_idents(&fm.line(no).code, &mut idents);
+    }
+    if idents.is_empty() {
+        return;
+    }
+
+    // One flat code-view text so receiver and method may sit on different
+    // lines (`prior\n    .values()`).
+    let mut text = String::new();
+    let mut starts: Vec<usize> = Vec::with_capacity(fm.lines.len());
+    for l in &fm.lines {
+        starts.push(text.len());
+        text.push_str(&l.code);
+        text.push('\n');
+    }
+    let line_of = |pos: usize| -> usize {
+        match starts.binary_search(&pos) {
+            Ok(i) => i + 1,
+            Err(i) => i, // i >= 1: starts[0] == 0
+        }
+    };
+
+    for meth in D002_METHODS {
+        for p in find_word(&text, meth) {
+            let after = text[p + meth.len()..].trim_start();
+            if !after.starts_with('(') {
+                continue;
+            }
+            let Some(name) = receiver_before(&text, p) else { continue };
+            if !idents.contains(&name) {
+                continue;
+            }
+            let no = line_of(p);
+            if no >= limit {
+                continue;
+            }
+            diag(
+                out,
+                "D002",
+                f,
+                no,
+                format!(
+                    "iteration over hash-ordered collection `{name}` — sort \
+                     before iterating or use a BTree collection"
+                ),
+            );
+        }
+    }
+
+    for no in 1..limit {
+        let code = &fm.line(no).code;
+        for name in for_loop_receivers(code) {
+            if idents.contains(&name) {
+                diag(
+                    out,
+                    "D002",
+                    f,
+                    no,
+                    format!(
+                        "for-loop over hash-ordered collection `{name}` — sort \
+                         before iterating or use a BTree collection"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+fn rule_d003(f: &SourceFile, out: &mut Vec<Diagnostic>) {
+    if !in_src(&f.path) {
+        return;
+    }
+    for no in 1..product_limit(&f.model) {
+        let code = &f.model.line(no).code;
+        if contains_word(code, "RandomState")
+            || contains_word(code, "thread_rng")
+            || code.contains("rand::")
+        {
+            diag(
+                out,
+                "D003",
+                f,
+                no,
+                "ambient randomness in src/ — all randomness must flow from \
+                 an explicit seed",
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- U-rules
+
+fn rule_u001(f: &SourceFile, out: &mut Vec<Diagnostic>) {
+    let fm = &f.model;
+    for no in 1..=fm.lines.len() {
+        let l = fm.line(no);
+        if !contains_word(&l.code, "unsafe") {
+            continue;
+        }
+        if l.comment.contains("SAFETY:") {
+            continue;
+        }
+        let mut ok = false;
+        let mut j = no;
+        while j > 1 && fm.is_comment_only(j - 1) {
+            j -= 1;
+            if fm.line(j).comment.contains("SAFETY:") {
+                ok = true;
+                break;
+            }
+        }
+        if !ok {
+            diag(
+                out,
+                "U001",
+                f,
+                no,
+                "`unsafe` without an immediately preceding `// SAFETY:` comment",
+            );
+        }
+    }
+}
+
+fn rule_u002(f: &SourceFile, out: &mut Vec<Diagnostic>) {
+    if U002_ALLOWED_FILES.contains(&f.path.as_str()) {
+        return;
+    }
+    for no in 1..=f.model.lines.len() {
+        if contains_word(&f.model.line(no).code, "unsafe") {
+            diag(
+                out,
+                "U002",
+                f,
+                no,
+                "`unsafe` outside rust/src/exec/mod.rs and rust/src/comm/bsp.rs",
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- C-rules
+
+fn rule_c001(f: &SourceFile, out: &mut Vec<Diagnostic>) {
+    if !in_src(&f.path) {
+        return;
+    }
+    for (no, lit) in &f.model.literals {
+        if f.model.is_test_line(*no) || !lit.contains("--") {
+            continue;
+        }
+        let low = lit.to_ascii_lowercase();
+        if !(low.contains("unknown") || low.contains("invalid") || low.contains("bad ")) {
+            continue;
+        }
+        // "invalid" alone must not satisfy the "names the valid set" check.
+        let stripped = low.replace("invalid", "");
+        if stripped.contains("valid") || lit.contains('|') || lit.contains("..=") {
+            continue;
+        }
+        diag(
+            out,
+            "C001",
+            f,
+            *no,
+            "flag-parse error message does not name the valid set \
+             (list the accepted values, a `a|b` alternation, or a `..=` range)",
+        );
+    }
+}
+
+fn rule_c002(f: &SourceFile, sections: &BTreeSet<u32>, out: &mut Vec<Diagnostic>) {
+    for no in 1..=f.model.lines.len() {
+        let l = f.model.line(no);
+        // Scan the code and comment views, not the raw line: references
+        // live in comments (and occasionally code paths), while string
+        // literals may quote section numbers as data — e.g. the lint
+        // fixture corpus itself.
+        let hay = format!("{} {}", l.code, l.comment);
+        let mut start = 0usize;
+        while let Some(k) = hay[start..].find("DESIGN.md") {
+            let at = start + k + "DESIGN.md".len();
+            start = at;
+            let rest = hay[at..].trim_start();
+            let Some(rest) = rest.strip_prefix('§') else { continue };
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            let Ok(nref) = digits.parse::<u32>() else { continue };
+            if !sections.contains(&nref) {
+                diag(
+                    out,
+                    "C002",
+                    f,
+                    no,
+                    format!("reference to DESIGN.md §{nref}, which has no `## §{nref}` section"),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- T-rules
+
+/// One line of the committed twin manifest:
+/// `name | optimized_fn | file | twin_fn`.
+pub struct TwinEntry {
+    pub name: String,
+    pub optimized: String,
+    pub file: String,
+    pub twin: String,
+}
+
+/// Parse the manifest; malformed lines become T001 diagnostics against the
+/// manifest itself.
+pub fn parse_manifest(text: &str) -> (Vec<TwinEntry>, Vec<Diagnostic>) {
+    let mut entries = Vec::new();
+    let mut diags = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = t.splitn(4, '|').map(str::trim).collect();
+        if parts.len() != 4 || parts.iter().any(|p| p.is_empty()) {
+            diags.push(Diagnostic {
+                rule: "T001",
+                file: "rust/src/analysis/twins.list".into(),
+                line: i + 1,
+                message: "malformed manifest line: want `name | optimized_fn | file | twin_fn`"
+                    .into(),
+                text: t.to_string(),
+            });
+            continue;
+        }
+        entries.push(TwinEntry {
+            name: parts[0].into(),
+            optimized: parts[1].into(),
+            file: parts[2].into(),
+            twin: parts[3].into(),
+        });
+    }
+    (entries, diags)
+}
+
+/// T001/T002 over a parsed tree: each manifest entry's optimized path and
+/// `*_ref` twin must exist, and the twin must be exercised from a test —
+/// either the defining file's `#[cfg(test)]` region, or any file under
+/// `rust/tests/` or `benches/`.
+pub fn check_twins(manifest: &str, files: &[SourceFile], out: &mut Vec<Diagnostic>) {
+    let (entries, mut parse_diags) = parse_manifest(manifest);
+    out.append(&mut parse_diags);
+    for e in &entries {
+        let Some(f) = files.iter().find(|f| f.path == e.file) else {
+            out.push(Diagnostic {
+                rule: "T001",
+                file: e.file.clone(),
+                line: 0,
+                message: format!("manifest entry `{}`: file not found in tree", e.name),
+                text: String::new(),
+            });
+            continue;
+        };
+        let def_line = fn_def_line(&f.model, &e.twin);
+        let Some(def_line) = def_line else {
+            out.push(Diagnostic {
+                rule: "T001",
+                file: e.file.clone(),
+                line: 0,
+                message: format!(
+                    "twin `{}` for hot path `{}` is not defined in this file",
+                    e.twin, e.name
+                ),
+                text: String::new(),
+            });
+            continue;
+        };
+        if fn_def_line(&f.model, &e.optimized).is_none() {
+            out.push(Diagnostic {
+                rule: "T001",
+                file: e.file.clone(),
+                line: 0,
+                message: format!(
+                    "optimized path `{}` for `{}` is not defined in this file — \
+                     update twins.list",
+                    e.optimized, e.name
+                ),
+                text: String::new(),
+            });
+        }
+        let mut referenced = (1..=f.model.lines.len()).any(|no| {
+            no != def_line
+                && f.model.is_test_line(no)
+                && contains_word(&f.model.line(no).code, &e.twin)
+        });
+        if !referenced {
+            referenced = files.iter().any(|g| {
+                (g.path.starts_with("rust/tests/") || g.path.starts_with("benches/"))
+                    && g.model.lines.iter().any(|l| contains_word(&l.code, &e.twin))
+            });
+        }
+        if !referenced {
+            out.push(Diagnostic {
+                rule: "T002",
+                file: e.file.clone(),
+                line: def_line,
+                message: format!(
+                    "twin `{}` is not referenced from any parity/oracle test \
+                     (same-file test region, rust/tests/, or benches/)",
+                    e.twin
+                ),
+                text: f.model.line(def_line).raw.trim().to_string(),
+            });
+        }
+    }
+}
+
+/// 1-based line where `fn <name>` is defined (whole-word, `fn` immediately
+/// before), or None.
+fn fn_def_line(fm: &FileModel, name: &str) -> Option<usize> {
+    for no in 1..=fm.lines.len() {
+        let code = &fm.line(no).code;
+        for p in find_word(code, name) {
+            let pre = code[..p].trim_end();
+            if pre.ends_with("fn")
+                && (pre.len() == 2 || !ident_char(pre.as_bytes()[pre.len() - 3] as char))
+            {
+                return Some(no);
+            }
+        }
+    }
+    None
+}
+
+// ------------------------------------------------- D002 textual helpers
+
+fn ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_' || b >= 0x80
+}
+
+fn skip_spaces_back(b: &[u8], mut j: isize) -> isize {
+    while j >= 0 && (b[j as usize] == b' ' || b[j as usize] == b'\t') {
+        j -= 1;
+    }
+    j
+}
+
+/// The identifier ending at byte `j` (inclusive); returns (index before the
+/// identifier, identifier).
+fn word_ending_at(b: &[u8], j: isize) -> (isize, String) {
+    let end = j;
+    let mut k = j;
+    while k >= 0 && ident_byte(b[k as usize]) {
+        k -= 1;
+    }
+    if end < 0 || k == end {
+        return (k, String::new());
+    }
+    let w = String::from_utf8_lossy(&b[(k + 1) as usize..=(end as usize)]).into_owned();
+    (k, w)
+}
+
+/// Collect names bound to `HashMap`/`HashSet` on this code line, from both
+/// shapes the tree contains: a typed binding/field/param
+/// (`name: [&][mut] [path::]HashMap<...>`) and a `let` initialisation
+/// (`let [mut] name = HashMap::new/with_capacity/default/from(...)`).
+fn collect_hash_idents(code: &str, idents: &mut BTreeSet<String>) {
+    let b = code.as_bytes();
+    for word in ["HashMap", "HashSet"] {
+        for p in find_word(code, word) {
+            let after = code[p + word.len()..].trim_start();
+            if after.starts_with('<') {
+                if let Some(name) = typed_decl_name(b, p) {
+                    idents.insert(name);
+                }
+            } else if let Some(rest) = after.strip_prefix("::") {
+                let rest = rest.trim_start();
+                let is_ctor = ["new", "with_capacity", "default", "from"]
+                    .iter()
+                    .any(|c| {
+                        rest.strip_prefix(c).is_some_and(|r| {
+                            !r.starts_with(|ch: char| ident_char(ch))
+                        })
+                    });
+                if is_ctor {
+                    if let Some(name) = let_binding_name(code, p) {
+                        idents.insert(name);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// For `name: [&][mut] [path::]Hash...` with the type word starting at
+/// byte `p`, walk backwards to the declared name.
+fn typed_decl_name(b: &[u8], p: usize) -> Option<String> {
+    let mut j = p as isize - 1;
+    // strip a `path::segment::` chain
+    loop {
+        if j >= 1 && b[j as usize] == b':' && b[(j - 1) as usize] == b':' {
+            j -= 2;
+            while j >= 0 && ident_byte(b[j as usize]) {
+                j -= 1;
+            }
+        } else {
+            break;
+        }
+    }
+    j = skip_spaces_back(b, j);
+    let (k, w) = word_ending_at(b, j);
+    if w == "mut" {
+        j = skip_spaces_back(b, k);
+    }
+    if j >= 0 && b[j as usize] == b'&' {
+        j = skip_spaces_back(b, j - 1);
+    }
+    if j < 0 || b[j as usize] != b':' {
+        return None;
+    }
+    if j >= 1 && b[(j - 1) as usize] == b':' {
+        return None; // `::` — a path, not a declaration colon
+    }
+    j = skip_spaces_back(b, j - 1);
+    let (_, name) = word_ending_at(b, j);
+    let first = name.chars().next()?;
+    if first.is_lowercase() || first == '_' {
+        Some(name)
+    } else {
+        None
+    }
+}
+
+/// For `let [mut] name = Hash...::ctor(...)` with the type word at byte
+/// `p`, read the binding name after the `let`.
+fn let_binding_name(code: &str, p: usize) -> Option<String> {
+    let let_pos = find_word(code, "let").into_iter().find(|&l| l < p)?;
+    let rest = code[let_pos + 3..].trim_start();
+    let rest = rest.strip_prefix("mut").map_or(rest, |r| r.trim_start());
+    let name: String = rest.chars().take_while(|&c| ident_char(c)).collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// The receiver identifier of `.method(` at byte `p` (start of the method
+/// name), skipping whitespace — so a receiver on the previous line is
+/// still found.
+fn receiver_before(text: &str, p: usize) -> Option<String> {
+    let b = text.as_bytes();
+    let mut j = p as isize - 1;
+    while j >= 0 && (b[j as usize] as char).is_whitespace() {
+        j -= 1;
+    }
+    if j < 0 || b[j as usize] != b'.' {
+        return None;
+    }
+    j -= 1;
+    while j >= 0 && (b[j as usize] as char).is_whitespace() {
+        j -= 1;
+    }
+    let (_, name) = word_ending_at(b, j);
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// Receivers of `for ... in [&][mut ]name {` loops on this code line.
+fn for_loop_receivers(code: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for fp in find_word(code, "for") {
+        for ip in find_word(code, "in") {
+            if ip <= fp {
+                continue;
+            }
+            let mut rest = code[ip + 2..].trim_start();
+            rest = rest.strip_prefix('&').unwrap_or(rest).trim_start();
+            rest = rest
+                .strip_prefix("mut ")
+                .map_or(rest, |r| r.trim_start());
+            let name: String = rest.chars().take_while(|&c| ident_char(c)).collect();
+            if name.is_empty() {
+                continue;
+            }
+            let tail = rest[name.len()..].trim_start();
+            if tail.starts_with('{') {
+                out.push(name);
+            }
+            break; // only the first `in` after this `for`
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(path: &str, src: &str) -> Vec<String> {
+        lint_source(path, src)
+            .into_iter()
+            .map(|d| format!("{}:{}", d.rule, d.line))
+            .collect()
+    }
+
+    #[test]
+    fn d002_sees_receiver_on_previous_line() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f(prior: &HashMap<String, u32>) -> Vec<u32> {\n\
+                       let keep: Vec<u32> = prior\n\
+                           .values()\n\
+                           .cloned()\n\
+                           .collect();\n\
+                       keep\n\
+                   }\n";
+        assert_eq!(rules_of("rust/src/x.rs", src), vec!["D002:4"]);
+    }
+
+    #[test]
+    fn d002_ignores_lookups_and_btree() {
+        let src = "use std::collections::{BTreeMap, HashMap};\n\
+                   fn f(m: &HashMap<String, u32>, b: &BTreeMap<String, u32>) -> u32 {\n\
+                       let mut s = 0;\n\
+                       for (_k, v) in b.iter() {\n\
+                           s += v;\n\
+                       }\n\
+                       s + m.get(\"x\").copied().unwrap_or(0)\n\
+                   }\n";
+        assert!(rules_of("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn design_section_parse() {
+        let md = "# title\n## §1 First\ntext\n## §12 Twelfth\n";
+        let s = design_sections(md);
+        assert!(s.contains(&1) && s.contains(&12) && !s.contains(&2));
+    }
+
+    #[test]
+    fn fn_def_line_requires_fn_keyword() {
+        let fm =
+            FileModel::parse("pub fn access_ref(x: u64) -> u64 { x }\nlet y = access_ref(1);\n");
+        assert_eq!(fn_def_line(&fm, "access_ref"), Some(1));
+        assert_eq!(fn_def_line(&fm, "access"), None);
+    }
+}

@@ -35,6 +35,10 @@ pub enum App {
 /// All apps, in the paper's table order.
 pub const ALL_APPS: [App; 5] = [App::Bfs, App::Cc, App::Kcore, App::Pr, App::Sssp];
 
+/// Every spelling [`App::parse`] accepts, for error messages that name the
+/// valid set (the C001 lint rule).
+pub const APP_NAMES: &str = "bfs, sssp, cc, pr|pagerank, kcore|k-core";
+
 impl App {
     pub fn name(&self) -> &'static str {
         match self {

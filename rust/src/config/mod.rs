@@ -54,6 +54,12 @@ impl Framework {
         }
     }
 
+    /// Every spelling [`Framework::parse`] accepts, for error messages
+    /// that name the valid set (the C001 lint rule).
+    pub const NAMES: &'static str =
+        "d-irgl-twc|dirgl-twc|twc, d-irgl-alb|dirgl-alb|alb, gunrock-twc, \
+         gunrock-lb|gunrock, lux";
+
     /// The balancer/worklist combination this framework stands for.
     pub fn engine_config(&self, spec: GpuSpec) -> EngineConfig {
         let (balancer, worklist) = match self {

@@ -381,6 +381,8 @@ fn local_push_round(
     pool: &Pool,
     s: &mut GpuPush,
 ) -> Result<()> {
+    // Allowlisted D001 host-timing site: advisory wall-clock only.
+    #[allow(clippy::disallowed_methods)]
     let t0 = Instant::now();
     let n = part.num_vertices();
     let scan = cfg.worklist.scan_cost(n as u64, s.st.active.len() as u64);
@@ -602,6 +604,8 @@ fn local_pr_round(
     pool: &Pool,
     s: &mut GpuPr,
 ) -> Result<()> {
+    // Allowlisted D001 host-timing site: advisory wall-clock only.
+    #[allow(clippy::disallowed_methods)]
     let t0 = Instant::now();
     let nl = lg.num_vertices();
     let scan = cfg.worklist.scan_cost(nl as u64, nl as u64);
@@ -825,6 +829,8 @@ fn local_kcore_round(
     pool: &Pool,
     s: &mut GpuKcore,
 ) {
+    // Allowlisted D001 host-timing site: advisory wall-clock only.
+    #[allow(clippy::disallowed_methods)]
     let t0 = Instant::now();
     let thread = std::thread::current().id();
     s.hits.clear();

@@ -67,6 +67,8 @@ fn local_push_round(
     sim: &Simulator,
     scratch: &mut RoundScratch,
 ) -> LocalRound {
+    // Allowlisted D001 host-timing site: advisory wall-clock only.
+    #[allow(clippy::disallowed_methods)]
     let t0 = Instant::now();
     let n = part.num_vertices();
     let scan = cfg.worklist.scan_cost(n as u64, active.len() as u64);
@@ -264,6 +266,8 @@ fn local_pr_round(
     sim: &Simulator,
     scratch: &mut RoundScratch,
 ) -> PrLocal {
+    // Allowlisted D001 host-timing site: advisory wall-clock only.
+    #[allow(clippy::disallowed_methods)]
     let t0 = Instant::now();
     let nl = lg.num_vertices();
     let scan = cfg.worklist.scan_cost(nl as u64, nl as u64);
@@ -428,6 +432,8 @@ fn local_kcore_round(
     sim: &Simulator,
     scratch: &mut RoundScratch,
 ) -> KcoreLocal {
+    // Allowlisted D001 host-timing site: advisory wall-clock only.
+    #[allow(clippy::disallowed_methods)]
     let t0 = Instant::now();
     let lg = &part.graph;
     scratch.active.clear();

@@ -162,8 +162,11 @@ impl Pool {
             }
             return;
         }
-        // Erase the borrow's lifetime for storage in the queue; sound per
-        // the protocol above.
+        // SAFETY: the transmute erases the borrow's lifetime so the closure
+        // can sit in the queue as a raw pointer. Sound per the liveness
+        // protocol above (invariants 1-3): the job is deregistered under
+        // the queue lock before this frame — and thus `f` — dies, so no
+        // worker dereference outlives the borrow.
         let f_ptr: *const (dyn Fn(usize) + Sync) = unsafe {
             std::mem::transmute::<
                 &(dyn Fn(usize) + Sync),
@@ -305,6 +308,10 @@ fn worker_loop(shared: &Shared) {
             // submitter is still blocked and the job + closure are alive
             // (invariant 2).
             let job = unsafe { &*p };
+            // SAFETY: the same invariant 2 covers the closure pointer: it
+            // was erased from a borrow that `Pool::run` keeps alive until
+            // `pending` drains, which cannot happen before this task's
+            // completion decrement below.
             let f = unsafe { &*job.f };
             if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
                 job.panicked.store(true, Ordering::Release);
@@ -495,5 +502,114 @@ mod tests {
     #[test]
     fn default_threads_is_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    // ---------------------------------------------- race-freedom stress
+    //
+    // The claim protocol (`job.next.fetch_add`) must hand every index to
+    // exactly one lane under contention, across pool widths, nesting,
+    // and mid-job panics. These hammer the schedule rather than mock it:
+    // many short rounds maximize overlap between submission, stealing,
+    // and teardown.
+
+    #[test]
+    fn stress_exactly_once_across_worker_counts() {
+        for threads in [2usize, 4, 7] {
+            let pool = Pool::new(threads);
+            let n = 331usize;
+            let rounds = 20u64;
+            let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            for r in 1..=rounds {
+                pool.run(n, &|i| {
+                    counts[i].fetch_add(1, Ordering::Relaxed);
+                });
+                // `run` is a barrier, so per-round totals are exact —
+                // a lost or double-claimed job shows up immediately.
+                let total: u64 = counts.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+                assert_eq!(total, r * n as u64, "threads={threads} round={r}");
+            }
+            for (i, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), rounds, "threads={threads} index={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn stress_nested_submit_no_lost_or_double_claims() {
+        for threads in [2usize, 4, 7] {
+            let pool = Pool::new(threads);
+            let outer = 7usize;
+            let inner = 23usize;
+            let grid: Vec<AtomicU64> =
+                (0..outer * inner).map(|_| AtomicU64::new(0)).collect();
+            pool.run(outer, &|o| {
+                pool.run(inner, &|i| {
+                    grid[o * inner + i].fetch_add(1, Ordering::Relaxed);
+                });
+            });
+            for (k, c) in grid.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), 1, "threads={threads} cell={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn stress_panic_mid_job_keeps_claims_exact() {
+        for threads in [2usize, 4, 7] {
+            let pool = Pool::new(threads);
+            let n = 64usize;
+            let ran: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                pool.run(n, &|i| {
+                    ran[i].fetch_add(1, Ordering::Relaxed);
+                    if i == 5 {
+                        panic!("mid-job failure");
+                    }
+                });
+            }));
+            assert!(r.is_err(), "panic must reach the submitter (threads={threads})");
+            assert_eq!(ran[5].load(Ordering::Relaxed), 1, "threads={threads}");
+            for (i, c) in ran.iter().enumerate() {
+                assert!(
+                    c.load(Ordering::Relaxed) <= 1,
+                    "double claim at index {i} (threads={threads})"
+                );
+            }
+            // The pool stays usable afterwards, with exact counts.
+            let again: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.run(n, &|i| {
+                again[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                again.iter().all(|c| c.load(Ordering::Relaxed) == 1),
+                "pool lost exactness after a panic (threads={threads})"
+            );
+        }
+    }
+
+    #[test]
+    fn forced_overlap_submitter_and_workers_share_one_job() {
+        // Pin an overlap window: the lane that claims index 0 spins until
+        // some other lane finishes the last index, proving lanes drain
+        // one job concurrently. The spin is bounded, and with >= 2
+        // executors the remaining indices always get claimed, so this
+        // cannot deadlock.
+        let pool = Pool::new(4);
+        let n = 8usize;
+        let ran: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let last_done = AtomicUsize::new(0);
+        pool.run(n, &|i| {
+            if i == n - 1 {
+                last_done.store(1, Ordering::SeqCst);
+            } else if i == 0 {
+                let mut spins = 0u32;
+                while last_done.load(Ordering::SeqCst) == 0 && spins < 5_000_000 {
+                    std::thread::yield_now();
+                    spins += 1;
+                }
+            }
+            ran[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(ran.iter().all(|c| c.load(Ordering::Relaxed) == 1));
     }
 }

@@ -93,6 +93,10 @@ impl GpuSpec {
         }
     }
 
+    /// Every name [`GpuSpec::by_name`] accepts, for error messages that
+    /// name the valid set (the C001 lint rule).
+    pub const NAMES: &'static str = "sim-default, k80-like, gtx1080-like, p100-like";
+
     #[inline]
     pub fn total_threads(&self) -> u64 {
         self.num_blocks as u64 * self.threads_per_block as u64

@@ -36,6 +36,15 @@ pub const ALL_INPUTS: [&str; 8] = [
 /// and scaling studies.
 pub const EXTRA_INPUTS: [&str; 1] = ["rmat24"];
 
+/// Every preset name accepted by [`generate`]/[`build`] — [`ALL_INPUTS`]
+/// plus the opt-in [`EXTRA_INPUTS`] — joined for error messages that name
+/// the valid set (the C001 lint rule).
+pub fn preset_names() -> String {
+    let mut names: Vec<&str> = ALL_INPUTS.to_vec();
+    names.extend(EXTRA_INPUTS);
+    names.join(", ")
+}
+
 /// Single-host (Momentum / Table 2) inputs.
 pub const SINGLE_HOST_INPUTS: [&str; 4] = ["rmat18", "rmat20", "orkut-s", "road-s"];
 

@@ -34,6 +34,9 @@
 //! * [`runtime`] — the PJRT client that loads the AOT-compiled JAX/Pallas
 //!   kernels (`artifacts/*.hlo.txt`) onto the request path (behind the
 //!   `xla` cargo feature; an API-identical stub is built otherwise);
+//! * [`analysis`] — the `alb lint` static analyzer: machine-checked repo
+//!   invariants (determinism, unsafe discipline, twin coverage, message
+//!   consistency) enforced in tier-1 and in CI;
 //! * [`metrics`], [`config`] — reporting and run configuration.
 //!
 //! The crate builds from the repository-root `Cargo.toml` (library and
@@ -44,6 +47,7 @@
 //! build/run instructions, and `EXPERIMENTS.md` for how every table and
 //! figure is regenerated and recorded.
 
+pub mod analysis;
 pub mod apps;
 pub mod campaign;
 pub mod comm;

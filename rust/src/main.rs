@@ -26,6 +26,7 @@
 //!            [--out CAMPAIGN.json] [--resume true|false]
 //!            [--check-golden CAMPAIGN.golden.json] [--check-adaptive]
 //!            [--check-faults] [--graph-cache DIR]
+//! alb lint   [--root DIR] [--format <text|json>] [--out report.json]
 //! ```
 //!
 //! Argument parsing is hand-rolled on std (the offline vendored crate set
@@ -113,8 +114,12 @@ fn load_graph(input: &str, scale_delta: i32, seed: u64) -> Result<CsrGraph> {
     if input.ends_with(".albg") {
         return io::load(Path::new(input)).with_context(|| format!("load {input}"));
     }
-    inputs::build(input, scale_delta, seed)
-        .ok_or_else(|| anyhow!("unknown input preset {input} (and not a .albg file)"))
+    inputs::build(input, scale_delta, seed).ok_or_else(|| {
+        anyhow!(
+            "unknown input preset {input} (and not a .albg file); valid presets: {}",
+            inputs::preset_names()
+        )
+    })
 }
 
 fn cmd_props(args: &Args) -> Result<()> {
@@ -163,18 +168,29 @@ fn cmd_gen(args: &Args) -> Result<()> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let app = App::parse(args.get("app").ok_or_else(|| anyhow!("--app required"))?)
-        .ok_or_else(|| anyhow!("unknown app"))?;
+    let app_name = args.get("app").ok_or_else(|| anyhow!("--app required"))?;
+    let app = App::parse(app_name).ok_or_else(|| {
+        anyhow!("unknown --app {app_name}; valid values: {}", alb_graph::apps::APP_NAMES)
+    })?;
     let input = args.get("input").ok_or_else(|| anyhow!("--input required"))?;
     let delta = args.get_i32("scale-delta", 0)?;
     let seed = args.get_u64("seed", 42)?;
-    let spec = GpuSpec::by_name(&args.get_or("gpu-spec", "sim-default"))
-        .ok_or_else(|| anyhow!("unknown --gpu-spec"))?;
-    let fw = Framework::parse(&args.get_or("framework", "dirgl-alb"))
-        .ok_or_else(|| anyhow!("unknown --framework"))?;
+    let spec_name = args.get_or("gpu-spec", "sim-default");
+    let spec = GpuSpec::by_name(&spec_name).ok_or_else(|| {
+        anyhow!("unknown --gpu-spec {spec_name}; valid values: {}", GpuSpec::NAMES)
+    })?;
+    let fw_name = args.get_or("framework", "dirgl-alb");
+    let fw = Framework::parse(&fw_name).ok_or_else(|| {
+        anyhow!("unknown --framework {fw_name}; valid values: {}", Framework::NAMES)
+    })?;
     let gpus = args.get_u64("gpus", 1)? as u32;
-    let policy = Policy::parse(&args.get_or("policy", "cvc"))
-        .ok_or_else(|| anyhow!("unknown --policy"))?;
+    let policy_name = args.get_or("policy", "cvc");
+    let policy = Policy::parse(&policy_name).ok_or_else(|| {
+        anyhow!(
+            "unknown --policy {policy_name}; valid values: {}",
+            alb_graph::partition::POLICY_NAMES
+        )
+    })?;
     let gpus_per_host = args.get_u64("gpus-per-host", u32::MAX as u64)? as u32;
     let exec = ExecMode::parse_or_usage(&args.get_or("exec", "parallel"))
         .map_err(|e| anyhow!(e))?;
@@ -319,6 +335,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         g = renamed;
         src = perm.to_new(src);
     }
+    // Host-side wall clock for the progress report only — an allowlisted
+    // D001 site; never feeds deterministic outputs.
+    #[allow(clippy::disallowed_methods)]
     let started = std::time::Instant::now();
 
     let mut report = Json::obj()
@@ -493,7 +512,11 @@ fn cmd_repro(args: &Args) -> Result<()> {
         matched = true;
     }
     if !matched {
-        bail!("unknown experiment {what}");
+        bail!(
+            "unknown experiment {what}; valid values: table1, fig1, table2, fig5, \
+             fig6, fig7, fig8, fig9, fig10, fig11, ablation-gpu, \
+             ablation-threshold, all"
+        );
     }
     Ok(())
 }
@@ -587,6 +610,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     let graph_cache = args.get("graph-cache").map(PathBuf::from);
     let total = cells.len();
+    // Host-side wall clock for the progress report only — an allowlisted
+    // D001 site; never feeds deterministic outputs.
+    #[allow(clippy::disallowed_methods)]
     let started = std::time::Instant::now();
     let mut done = 0usize;
     let outcome = campaign::run_sweep_cached(
@@ -657,10 +683,45 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `alb lint`: run the repo-invariant static analyzer (DESIGN.md §15) over
+/// the tree at `--root` (default: the current directory). `--format json`
+/// emits the machine-readable report (the CI artifact); `--out FILE`
+/// additionally writes the rendered report to a file. Exits nonzero on any
+/// unsuppressed diagnostic or stale allowlist entry.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = PathBuf::from(args.get_or("root", "."));
+    let format = args.get_or("format", "text");
+    if format != "text" && format != "json" {
+        bail!("unknown --format {format}; valid values: text, json");
+    }
+    let report = alb_graph::analysis::run_lint(&root)?;
+    let rendered = if format == "json" {
+        report.to_json().to_string_pretty()
+    } else {
+        report.render_text()
+    };
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &rendered).with_context(|| format!("write {out}"))?;
+    }
+    print!("{rendered}");
+    if format == "json" {
+        println!();
+    }
+    if !report.clean() {
+        bail!(
+            "lint failed: {} diagnostic(s), {} stale allowlist entr{}",
+            report.diagnostics.len(),
+            report.stale.len(),
+            if report.stale.len() == 1 { "y" } else { "ies" }
+        );
+    }
+    Ok(())
+}
+
 fn usage() {
     eprintln!(
         "alb — Adaptive Load Balancer for graph analytics (paper reproduction)\n\
-         usage: alb <props|gen|run|sweep|repro> [flags]\n\
+         usage: alb <props|gen|run|sweep|repro|lint> [flags]\n\
          see `rust/src/main.rs` header or README.md for full flag lists"
     );
 }
@@ -684,6 +745,7 @@ fn main() -> ExitCode {
         "run" => cmd_run(&args),
         "sweep" => cmd_sweep(&args),
         "repro" => cmd_repro(&args),
+        "lint" => cmd_lint(&args),
         _ => {
             usage();
             return ExitCode::FAILURE;

@@ -49,6 +49,10 @@ impl Policy {
     }
 }
 
+/// Every name [`Policy::parse`] accepts, for error messages that name the
+/// valid set (the C001 lint rule).
+pub const POLICY_NAMES: &str = "oec, iec, cvc";
+
 /// One GPU's partition.
 #[derive(Debug, Clone)]
 pub struct Partition {

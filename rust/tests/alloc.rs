@@ -28,22 +28,34 @@ thread_local! {
     static ALLOCS: Cell<u64> = const { Cell::new(0) };
 }
 
+// SAFETY: a pure pass-through wrapper — every method forwards its exact
+// arguments to the std `System` allocator and upholds `GlobalAlloc`'s
+// contract by inheritance; the only added work is a thread-local counter
+// bump, which cannot allocate (`Cell<u64>`) or unwind.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: caller obligations (valid layout) are forwarded unchanged
+    // to `System.alloc`.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
         System.alloc(layout)
     }
 
+    // SAFETY: caller obligations are forwarded unchanged to
+    // `System.alloc_zeroed`.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: caller obligations (ptr from this allocator, matching
+    // layout) are forwarded unchanged to `System.realloc`.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: caller obligations (ptr from this allocator, matching
+    // layout) are forwarded unchanged to `System.dealloc`.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }

@@ -221,3 +221,57 @@ fn adaptive_gate_passes_on_a_real_high_imbalance_sweep() {
     repro::check_campaign_invariants(&out.results).unwrap();
     repro::check_adaptive_dominance(&out.results).unwrap();
 }
+
+/// Adversarial insertion-order determinism: the resume map handed to
+/// `run_sweep` is a `HashMap`, whose iteration order depends on the
+/// per-instance hasher seed and insertion history. Feed the same cells in
+/// two opposite insertion orders and the checkpoint artifacts must still
+/// be byte-identical — the sorted writer, not the map, owns the output
+/// ordering. (The static side of this invariant is lint rule D002; see
+/// DESIGN.md §15.)
+#[test]
+fn artifact_bytes_are_independent_of_resume_map_insertion_order() {
+    let mut spec = tiny_smoke();
+    spec.filter_apps("bfs").unwrap();
+    let n_cells = spec.cells().len();
+
+    let p0 = tmp("order-seed.json");
+    let fresh = run_sweep(&spec, &HashMap::new(), Some(&p0), |_, _| {}).unwrap();
+    assert_eq!(fresh.executed, n_cells);
+    let seed_bytes = std::fs::read_to_string(&p0).unwrap();
+
+    let cells = artifact::read(&p0).unwrap().cells;
+    assert_eq!(cells.len(), n_cells);
+
+    let mut fwd: HashMap<String, CellResult> = HashMap::new();
+    for c in &cells {
+        fwd.insert(c.id.clone(), c.clone());
+    }
+    let mut rev: HashMap<String, CellResult> = HashMap::new();
+    for c in cells.iter().rev() {
+        rev.insert(c.id.clone(), c.clone());
+    }
+
+    let pa = tmp("order-fwd.json");
+    let a = run_sweep(&spec, &fwd, Some(&pa), |_, _| {}).unwrap();
+    assert_eq!(a.skipped, n_cells);
+
+    let pb = tmp("order-rev.json");
+    let b = run_sweep(&spec, &rev, Some(&pb), |_, _| {}).unwrap();
+    assert_eq!(b.skipped, n_cells);
+
+    let bytes_a = std::fs::read_to_string(&pa).unwrap();
+    let bytes_b = std::fs::read_to_string(&pb).unwrap();
+    assert_eq!(
+        bytes_a, bytes_b,
+        "resume-map insertion order leaked into the artifact"
+    );
+    assert_eq!(
+        bytes_a, seed_bytes,
+        "resumed artifact drifted from the fresh artifact"
+    );
+
+    for p in [&p0, &pa, &pb] {
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -1,0 +1,499 @@
+//! Tier-1 gate for `alb lint` (DESIGN.md §15).
+//!
+//! Three layers:
+//!
+//! 1. the real tree must lint clean, with every suppression justified and
+//!    no stale allowlist entries;
+//! 2. a bad-snippet fixture corpus proves each rule ID fires exactly once
+//!    on its fixture and stays silent on the matching clean variant;
+//! 3. mutation tests on *real* files prove the gate is armed: stripping a
+//!    single `SAFETY:` comment or renaming a single `*_ref` twin makes
+//!    this test binary — and therefore tier-1 — fail.
+
+use std::fs;
+use std::path::PathBuf;
+
+use alb_graph::analysis::rules;
+use alb_graph::analysis::{self, allowlist, lint_source, Diagnostic, SourceFile, Tree};
+
+fn root() -> PathBuf {
+    // Cargo.toml lives at the repository root, so the manifest dir is the
+    // lint root.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Run the file-scoped rules and flatten to comparable (rule, line) pairs.
+fn fired(path: &str, src: &str) -> Vec<(String, usize)> {
+    lint_source(path, src)
+        .into_iter()
+        .map(|d| (d.rule.to_string(), d.line))
+        .collect()
+}
+
+fn pairs(diags: &[Diagnostic]) -> Vec<(String, usize)> {
+    diags.iter().map(|d| (d.rule.to_string(), d.line)).collect()
+}
+
+fn mini_tree(files: &[(&str, &str)], design: &str, manifest: &str) -> Tree {
+    Tree {
+        files: files.iter().map(|(p, s)| SourceFile::new(*p, *s)).collect(),
+        design_sections: rules::design_sections(design),
+        manifest: manifest.to_string(),
+    }
+}
+
+// ------------------------------------------------------------ real tree
+
+/// The headline invariant: `alb lint` passes on this repository.
+#[test]
+fn real_tree_is_lint_clean() {
+    let report = analysis::run_lint(&root()).expect("lint walk failed");
+    if !report.clean() {
+        for d in &report.diagnostics {
+            eprintln!("{}", d.render());
+        }
+        for s in &report.stale {
+            eprintln!("{s}");
+        }
+    }
+    assert!(report.clean(), "alb lint found violations (see stderr)");
+    assert!(
+        report.files_scanned > 50,
+        "suspiciously few files scanned: {}",
+        report.files_scanned
+    );
+}
+
+/// The raw (pre-allowlist) diagnostics are exactly the six documented
+/// suppressions: one D002 in campaign/runner.rs and five U002 in
+/// rust/tests/alloc.rs. Anything else is a new violation; anything fewer
+/// means an allowlist entry just went stale.
+#[test]
+fn real_tree_raw_diagnostics_match_the_allowlist() {
+    let tree = analysis::load_tree(&root()).expect("load tree");
+    let diags = rules::lint_tree(&tree);
+    let d002: Vec<_> = diags.iter().filter(|d| d.rule == "D002").collect();
+    let u002: Vec<_> = diags.iter().filter(|d| d.rule == "U002").collect();
+    assert_eq!(d002.len(), 1, "D002 sites drifted: {:?}", pairs(&diags));
+    assert_eq!(d002[0].file, "rust/src/campaign/runner.rs");
+    assert_eq!(u002.len(), 5, "U002 sites drifted: {:?}", pairs(&diags));
+    assert!(u002.iter().all(|d| d.file == "rust/tests/alloc.rs"));
+    assert_eq!(diags.len(), 6, "unexpected raw diagnostics: {:?}", pairs(&diags));
+
+    let report = analysis::run_lint(&root()).expect("lint walk failed");
+    assert_eq!(report.suppressed, 6);
+}
+
+/// Every committed allowlist entry parses and carries a justification.
+#[test]
+fn committed_allowlist_is_well_formed_and_justified() {
+    let text = fs::read_to_string(root().join(analysis::ALLOWLIST_FILE)).unwrap();
+    let list = allowlist::parse(&text);
+    assert!(list.errors.is_empty(), "allowlist errors: {:?}", list.errors);
+    assert_eq!(list.entries.len(), 2);
+    assert!(list.entries.iter().all(|e| !e.why.is_empty()));
+}
+
+/// If the code an entry covers disappears, the entry goes stale and the
+/// run fails — the allowlist cannot silently outlive the tree.
+#[test]
+fn stale_allowlist_entries_fail_the_run() {
+    let text = fs::read_to_string(root().join(analysis::ALLOWLIST_FILE)).unwrap();
+    let applied = allowlist::parse(&text).apply(Vec::new());
+    assert_eq!(applied.stale.len(), 2, "stale detection is not armed");
+    assert_eq!(applied.suppressed, 0);
+}
+
+/// The committed twin manifest parses cleanly and covers the five SWAR
+/// hot paths.
+#[test]
+fn committed_twin_manifest_is_well_formed() {
+    let (entries, diags) = rules::parse_manifest(analysis::TWINS_MANIFEST);
+    assert!(diags.is_empty(), "{:?}", pairs(&diags));
+    assert_eq!(entries.len(), 5);
+    assert!(entries.iter().all(|e| e.twin.ends_with("_ref")));
+}
+
+// ----------------------------------------------- armed-gate mutation tests
+
+/// Stripping one `SAFETY:` comment from the real exec pool makes U001
+/// fire — the acceptance criterion that tier-1 notices a lost safety
+/// argument.
+#[test]
+fn removing_a_safety_comment_from_exec_fails_lint() {
+    let path = "rust/src/exec/mod.rs";
+    let src = fs::read_to_string(root().join(path)).unwrap();
+    assert!(src.contains("SAFETY:"), "exec/mod.rs lost its safety comments");
+    assert!(
+        fired(path, &src).is_empty(),
+        "exec/mod.rs no longer lints clean as-is"
+    );
+    let broken = src.replacen("SAFETY:", "NOTE:", 1);
+    let diags = lint_source(path, &broken);
+    assert!(
+        diags.iter().any(|d| d.rule == "U001"),
+        "U001 did not fire after stripping a SAFETY comment: {:?}",
+        pairs(&diags)
+    );
+}
+
+/// Same arming check for the counting-allocator test shim: its five
+/// suppressed U002 sites still demand SAFETY comments (U001 applies).
+#[test]
+fn removing_a_safety_comment_from_alloc_shim_fails_lint() {
+    let path = "rust/tests/alloc.rs";
+    let src = fs::read_to_string(root().join(path)).unwrap();
+    let before = lint_source(path, &src);
+    assert!(
+        before.iter().all(|d| d.rule == "U002"),
+        "alloc.rs should only carry allowlisted U002: {:?}",
+        pairs(&before)
+    );
+    let broken = src.replacen("SAFETY:", "NOTE:", 1);
+    let diags = lint_source(path, &broken);
+    assert!(
+        diags.iter().any(|d| d.rule == "U001"),
+        "U001 did not fire after stripping a SAFETY comment: {:?}",
+        pairs(&diags)
+    );
+}
+
+/// Renaming a `*_ref` twin in the loaded tree makes T001 fire — the
+/// acceptance criterion that tier-1 notices a lost scalar twin.
+#[test]
+fn removing_a_ref_twin_fails_lint() {
+    let mut tree = analysis::load_tree(&root()).expect("load tree");
+    let path = "rust/src/apps/worklist.rs";
+    let idx = tree
+        .files
+        .iter()
+        .position(|f| f.path == path)
+        .expect("worklist.rs missing from tree");
+    let src = fs::read_to_string(root().join(path)).unwrap();
+    let renamed = src.replace("take_sorted_into_ref", "take_sorted_into_gone");
+    assert_ne!(src, renamed, "twin name not found in worklist.rs");
+    tree.files[idx] = SourceFile::new(path, &renamed);
+    let diags = rules::lint_tree(&tree);
+    assert!(
+        diags
+            .iter()
+            .any(|d| d.rule == "T001" && d.file == path),
+        "T001 did not fire after renaming a twin: {:?}",
+        pairs(&diags)
+    );
+}
+
+// ------------------------------------------------------- fixture corpus
+//
+// Each bad fixture fires its rule exactly once; each clean variant is
+// silent. Paths are synthetic — `lint_source` never touches the disk.
+
+#[test]
+fn d001_fires_once_on_wall_clock_in_result_code() {
+    let src = "use std::time::Instant;\n\
+               \n\
+               pub fn probe() -> u128 {\n\
+               \x20   let t0 = Instant::now();\n\
+               \x20   t0.elapsed().as_nanos()\n\
+               }\n";
+    assert_eq!(fired("rust/src/apps/probe.rs", src), vec![("D001".into(), 4)]);
+    // The same code is fine at the allowlisted host-timing sites...
+    assert!(fired("rust/src/metrics/bench.rs", src).is_empty());
+    assert!(fired("rust/src/coordinator/elastic.rs", src).is_empty());
+    // ...outside rust/src/ ...
+    assert!(fired("rust/tests/probe.rs", src).is_empty());
+    // ...and inside a #[cfg(test)] region.
+    let in_tests = format!("#[cfg(test)]\nmod tests {{\n{src}}}\n");
+    assert!(fired("rust/src/apps/probe.rs", &in_tests).is_empty());
+}
+
+#[test]
+fn d001_fires_once_on_system_time() {
+    let src = "pub fn stamp() -> u64 {\n\
+               \x20   let _t = std::time::SystemTime::now();\n\
+               \x20   0\n\
+               }\n";
+    assert_eq!(fired("rust/src/gpu/stamp.rs", src), vec![("D001".into(), 2)]);
+}
+
+#[test]
+fn d002_fires_once_on_for_loop_over_hash_map() {
+    let src = "use std::collections::HashMap;\n\
+               pub fn tally(xs: &[(String, u32)]) -> u32 {\n\
+               \x20   let mut m = HashMap::new();\n\
+               \x20   for (k, v) in xs { m.insert(k.clone(), *v); }\n\
+               \x20   let mut sum = 0;\n\
+               \x20   for (_k, v) in &m {\n\
+               \x20       sum += v;\n\
+               \x20   }\n\
+               \x20   sum\n\
+               }\n";
+    assert_eq!(fired("rust/src/apps/tally.rs", src), vec![("D002".into(), 6)]);
+}
+
+#[test]
+fn d002_fires_once_on_multiline_method_chain() {
+    // Mirrors the campaign/runner.rs shape the allowlist covers: the
+    // receiver sits on the line before the hash-ordered method call.
+    let src = "use std::collections::HashMap;\n\
+               pub fn drain(prior: HashMap<String, u32>) -> Vec<(String, u32)> {\n\
+               \x20   let mut keep: Vec<(String, u32)> = prior\n\
+               \x20       .into_iter()\n\
+               \x20       .collect();\n\
+               \x20   keep.sort();\n\
+               \x20   keep\n\
+               }\n";
+    assert_eq!(fired("rust/src/apps/drain.rs", src), vec![("D002".into(), 4)]);
+}
+
+#[test]
+fn d002_is_silent_on_btree_iteration_and_hash_lookups() {
+    let src = "use std::collections::{BTreeMap, HashMap};\n\
+               pub fn ok(m: &BTreeMap<String, u32>, h: &HashMap<String, u32>) -> u32 {\n\
+               \x20   let mut s = 0;\n\
+               \x20   for (_k, v) in m {\n\
+               \x20       s += v;\n\
+               \x20   }\n\
+               \x20   s + h.get(\"x\").copied().unwrap_or(0)\n\
+               }\n";
+    assert!(fired("rust/src/apps/ok.rs", src).is_empty());
+}
+
+#[test]
+fn d003_fires_once_on_random_state() {
+    let src = "pub fn hasher_state() -> u64 {\n\
+               \x20   let s = std::collections::hash_map::RandomState::new();\n\
+               \x20   let _ = s;\n\
+               \x20   0\n\
+               }\n";
+    assert_eq!(fired("rust/src/lb/seed.rs", src), vec![("D003".into(), 2)]);
+    // Test-region and non-src uses stay legal.
+    let in_tests = format!("#[cfg(test)]\nmod tests {{\n{src}}}\n");
+    assert!(fired("rust/src/lb/seed.rs", &in_tests).is_empty());
+    assert!(fired("rust/tests/seed.rs", src).is_empty());
+}
+
+#[test]
+fn d003_fires_once_on_rand_crate_paths() {
+    let src = "pub fn roll() -> u32 {\n\
+               \x20   rand::random()\n\
+               }\n";
+    assert_eq!(fired("rust/src/gpu/roll.rs", src), vec![("D003".into(), 2)]);
+}
+
+#[test]
+fn u001_fires_once_without_a_safety_comment() {
+    // comm/bsp.rs is U002-exempt, so only the missing comment fires.
+    let src = "pub fn read_raw(p: *const u32) -> u32 {\n\
+               \x20   unsafe { *p }\n\
+               }\n";
+    assert_eq!(fired("rust/src/comm/bsp.rs", src), vec![("U001".into(), 2)]);
+}
+
+#[test]
+fn u001_accepts_same_line_and_preceding_block_comments() {
+    let same_line = "pub fn read_raw(p: *const u32) -> u32 {\n\
+                     \x20   unsafe { *p } // SAFETY: caller guarantees p is valid\n\
+                     }\n";
+    assert!(fired("rust/src/comm/bsp.rs", same_line).is_empty());
+    let block = "pub fn read_raw(p: *const u32) -> u32 {\n\
+                 \x20   // SAFETY: caller guarantees p is valid and aligned\n\
+                 \x20   // (checked at both call sites).\n\
+                 \x20   unsafe { *p }\n\
+                 }\n";
+    assert!(fired("rust/src/comm/bsp.rs", block).is_empty());
+}
+
+#[test]
+fn u001_rejects_a_blank_line_between_comment_and_block() {
+    // "Immediately preceding" means contiguous: a blank line breaks the
+    // comment block.
+    let src = "pub fn read_raw(p: *const u32) -> u32 {\n\
+               \x20   // SAFETY: caller guarantees p is valid\n\
+               \n\
+               \x20   unsafe { *p }\n\
+               }\n";
+    assert_eq!(fired("rust/src/comm/bsp.rs", src), vec![("U001".into(), 4)]);
+}
+
+#[test]
+fn u001_is_not_fooled_by_identifiers_or_strings() {
+    let src = "pub fn unsafe_count() -> usize {\n\
+               \x20   let tag = \"unsafe\";\n\
+               \x20   tag.len()\n\
+               }\n";
+    assert!(fired("rust/src/comm/bsp.rs", src).is_empty());
+}
+
+#[test]
+fn u002_fires_once_outside_the_audited_modules() {
+    // A SAFETY comment is present, so confinement is the only violation.
+    let src = "pub fn read_raw(p: *const u32) -> u32 {\n\
+               \x20   // SAFETY: caller guarantees p is valid\n\
+               \x20   unsafe { *p }\n\
+               }\n";
+    assert_eq!(fired("rust/src/gpu/sim_x.rs", src), vec![("U002".into(), 3)]);
+    assert!(fired("rust/src/exec/mod.rs", src).is_empty());
+    assert!(fired("rust/src/comm/bsp.rs", src).is_empty());
+}
+
+#[test]
+fn c001_fires_once_when_the_valid_set_is_missing() {
+    let src = "pub fn parse_mode(v: &str) -> String {\n\
+               \x20   format!(\"unknown --mode {v}\")\n\
+               }\n";
+    assert_eq!(fired("rust/src/config/mode.rs", src), vec![("C001".into(), 2)]);
+    // Outside rust/src/ the rule does not apply.
+    assert!(fired("rust/tests/mode.rs", src).is_empty());
+}
+
+#[test]
+fn c001_accepts_messages_that_name_the_valid_set() {
+    let listed = "pub fn parse_mode(v: &str) -> String {\n\
+                  \x20   format!(\"unknown --mode {v}; valid values: oec, iec, cvc\")\n\
+                  }\n";
+    assert!(fired("rust/src/config/mode.rs", listed).is_empty());
+    let alternation = "pub fn parse_mode(v: &str) -> String {\n\
+                       \x20   format!(\"unknown --mode {v}: want oec|iec|cvc\")\n\
+                       }\n";
+    assert!(fired("rust/src/config/mode.rs", alternation).is_empty());
+    let range = "pub fn parse_scale(v: &str) -> String {\n\
+                 \x20   format!(\"bad --scale {v}: want 1..=24\")\n\
+                 }\n";
+    assert!(fired("rust/src/config/mode.rs", range).is_empty());
+}
+
+#[test]
+fn c001_is_not_satisfied_by_the_word_invalid_alone() {
+    let src = "pub fn parse_mode(v: &str) -> String {\n\
+               \x20   format!(\"invalid --mode {v}\")\n\
+               }\n";
+    assert_eq!(fired("rust/src/config/mode.rs", src), vec![("C001".into(), 2)]);
+}
+
+#[test]
+fn c002_fires_once_on_a_dangling_design_reference() {
+    let design = "# design\n\n## §1 One\n\nbody\n\n## §2 Two\n";
+    let good = "// Invariants pinned in DESIGN.md \u{a7}2.\npub fn f() {}\n";
+    let tree = mini_tree(&[("rust/src/x.rs", good)], design, "");
+    assert!(rules::lint_tree(&tree).is_empty());
+
+    let bad = "// Invariants pinned in DESIGN.md \u{a7}2.\n\
+               pub fn f() {}\n\
+               // Stale pointer: DESIGN.md \u{a7}9.\n";
+    let tree = mini_tree(&[("rust/src/x.rs", bad)], design, "");
+    let diags = rules::lint_tree(&tree);
+    assert_eq!(pairs(&diags), vec![("C002".into(), 3)]);
+}
+
+#[test]
+fn t_rules_pass_on_a_complete_twin() {
+    let src = "pub fn fast(x: u32) -> u32 { x }\n\
+               pub fn fast_ref(x: u32) -> u32 { x }\n\
+               #[cfg(test)]\n\
+               mod tests {\n\
+               \x20   #[test]\n\
+               \x20   fn parity() {\n\
+               \x20       assert_eq!(super::fast(3), super::fast_ref(3));\n\
+               \x20   }\n\
+               }\n";
+    let manifest = "hot-path | fast | rust/src/x.rs | fast_ref\n";
+    let tree = mini_tree(&[("rust/src/x.rs", src)], "", manifest);
+    assert!(rules::lint_tree(&tree).is_empty());
+}
+
+#[test]
+fn t001_fires_once_when_the_twin_is_missing() {
+    let src = "pub fn fast(x: u32) -> u32 { x }\n";
+    let manifest = "hot-path | fast | rust/src/x.rs | fast_ref\n";
+    let tree = mini_tree(&[("rust/src/x.rs", src)], "", manifest);
+    let diags = rules::lint_tree(&tree);
+    assert_eq!(pairs(&diags), vec![("T001".into(), 0)]);
+}
+
+#[test]
+fn t001_fires_when_the_optimized_path_or_file_is_missing() {
+    // Optimized fn gone but twin present and referenced.
+    let src = "pub fn fast_ref(x: u32) -> u32 { x }\n\
+               #[cfg(test)]\n\
+               mod tests {\n\
+               \x20   #[test]\n\
+               \x20   fn parity() { assert_eq!(super::fast_ref(3), 3); }\n\
+               }\n";
+    let manifest = "hot-path | fast | rust/src/x.rs | fast_ref\n";
+    let tree = mini_tree(&[("rust/src/x.rs", src)], "", manifest);
+    let diags = rules::lint_tree(&tree);
+    assert_eq!(diags.len(), 1);
+    assert_eq!(diags[0].rule, "T001");
+
+    // Whole file gone from the tree.
+    let tree = mini_tree(&[("rust/src/y.rs", "pub fn g() {}\n")], "", manifest);
+    let diags = rules::lint_tree(&tree);
+    assert_eq!(diags.len(), 1);
+    assert_eq!(diags[0].rule, "T001");
+    assert_eq!(diags[0].file, "rust/src/x.rs");
+}
+
+#[test]
+fn t001_fires_on_a_malformed_manifest_line() {
+    let manifest = "just-two | fields\n";
+    let tree = mini_tree(&[("rust/src/x.rs", "pub fn f() {}\n")], "", manifest);
+    let diags = rules::lint_tree(&tree);
+    assert_eq!(diags.len(), 1);
+    assert_eq!(diags[0].rule, "T001");
+    assert_eq!(diags[0].file, "rust/src/analysis/twins.list");
+    assert_eq!(diags[0].line, 1);
+}
+
+#[test]
+fn t002_fires_once_when_the_twin_is_never_tested() {
+    let src = "pub fn fast(x: u32) -> u32 { x }\n\
+               pub fn fast_ref(x: u32) -> u32 { x }\n";
+    let manifest = "hot-path | fast | rust/src/x.rs | fast_ref\n";
+    let tree = mini_tree(&[("rust/src/x.rs", src)], "", manifest);
+    let diags = rules::lint_tree(&tree);
+    assert_eq!(pairs(&diags), vec![("T002".into(), 2)]);
+
+    // A reference from rust/tests/ satisfies it.
+    let parity = "#[test]\nfn parity() { assert_eq!(x::fast(1), x::fast_ref(1)); }\n";
+    let tree = mini_tree(
+        &[("rust/src/x.rs", src), ("rust/tests/parity.rs", parity)],
+        "",
+        manifest,
+    );
+    assert!(rules::lint_tree(&tree).is_empty());
+}
+
+// ------------------------------------------------------------- reporting
+
+#[test]
+fn json_report_carries_the_diagnostics_and_verdict() {
+    let clean = analysis::LintReport {
+        diagnostics: Vec::new(),
+        suppressed: 3,
+        stale: Vec::new(),
+        files_scanned: 12,
+    };
+    let js = clean.to_json().to_string_pretty();
+    assert!(js.contains("\"clean\": true"), "{js}");
+    assert!(js.contains("\"suppressed\": 3"), "{js}");
+
+    let dirty = analysis::LintReport {
+        diagnostics: vec![Diagnostic {
+            rule: "D001",
+            file: "rust/src/x.rs".into(),
+            line: 7,
+            message: "wall-clock read".into(),
+            text: "let t0 = Instant::now();".into(),
+        }],
+        suppressed: 0,
+        stale: vec!["stale entry".into()],
+        files_scanned: 12,
+    };
+    let js = dirty.to_json().to_string_pretty();
+    assert!(js.contains("\"clean\": false"), "{js}");
+    assert!(js.contains("\"D001\""), "{js}");
+    assert!(js.contains("stale entry"), "{js}");
+    let text = dirty.render_text();
+    assert!(text.contains("D001 rust/src/x.rs:7"), "{text}");
+}
