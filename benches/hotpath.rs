@@ -33,6 +33,12 @@
 //! * `dist-superstep`     — whole 4-GPU CVC bfs through the coordinator's
 //!                          schedule-driven exchange; records per-round
 //!                          comm bytes (total / intra / inter) as metrics.
+//! * `serve-cold` / `serve-hit` — queries through the whole `alb serve`
+//!                          stack (TCP loopback framing, protocol parse,
+//!                          identity resolution) with the result cache
+//!                          disabled (every query executes) vs warm (every
+//!                          query served from the LRU); their ratio is
+//!                          `speedup_serve_cache`.
 //!
 //! Flags (after `--` under `cargo bench --bench hotpath`):
 //! * `--check-ratios <path>`    THE CI GATE (armed day one): compare this
@@ -44,6 +50,7 @@
 //!                              `min_speedup_sim_parallel`,
 //!                              `min_speedup_frontier_drain`,
 //!                              `min_speedup_degree_tally`,
+//!                              `min_speedup_serve_cache`,
 //!                              `max_reorder_cache_miss_ratio`,
 //!                              `max_dist_comm_bytes_per_round`, and
 //!                              `max_dist_comm_bytes_inter_per_round`.
@@ -82,6 +89,10 @@ use alb_graph::metrics::bench::{
     mean_of, read_json, read_metric, speedup, time_runs, write_json, BenchStats,
 };
 use alb_graph::partition::{partition, Policy};
+use alb_graph::serve::{ServeOpts, Server};
+use alb_graph::session::Session;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 
 fn arg_value(args: &[String], flag: &str) -> Option<String> {
     args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
@@ -319,6 +330,57 @@ fn main() {
 
     push(time_runs("hotpath/partition-cvc-8", 5, || partition(&g, 8, Policy::Cvc)));
 
+    // --- serve query path (ISSUE 10) ---
+    // The daemon's two regimes through the full stack — TCP loopback
+    // framing, protocol parse, identity resolution — on the bench graph.
+    // Cold: the result cache disabled, so every query runs bfs on the
+    // session. Hit: a warm LRU, so every query is rendered from the cached
+    // reply. Both time the same client loop against a live listener, so
+    // the ratio is the cache's end-to-end win, gated machine-independently
+    // as `min_speedup_serve_cache`.
+    let spawn_serve = |cache_entries: usize| {
+        Server::spawn(
+            Session::new(g.clone(), "rmat16", cfg.clone()),
+            ServeOpts { max_inflight: 4, cache_entries, max_rounds: 1_000_000 },
+            0,
+        )
+        .unwrap()
+    };
+    let serve_round =
+        |rd: &mut BufReader<TcpStream>, wr: &mut TcpStream, line: &str| -> usize {
+            writeln!(wr, "{line}").unwrap();
+            wr.flush().unwrap();
+            let mut reply = String::new();
+            rd.read_line(&mut reply).unwrap();
+            assert!(reply.contains("\"status\":\"ok\""), "{reply}");
+            reply.len()
+        };
+    let bfs_line = format!(r#"{{"app":"bfs","source":{src}}}"#);
+    const SERVE_QUERIES: usize = 16;
+    {
+        let cold = spawn_serve(0);
+        let s = TcpStream::connect(cold.addr()).unwrap();
+        let (mut rd, mut wr) = (BufReader::new(s.try_clone().unwrap()), s);
+        push(time_runs("hotpath/serve-cold", 5, || {
+            (0..SERVE_QUERIES)
+                .map(|_| serve_round(&mut rd, &mut wr, &bfs_line))
+                .sum::<usize>()
+        }));
+        cold.stop();
+    }
+    {
+        let hot = spawn_serve(64);
+        let s = TcpStream::connect(hot.addr()).unwrap();
+        let (mut rd, mut wr) = (BufReader::new(s.try_clone().unwrap()), s);
+        serve_round(&mut rd, &mut wr, &bfs_line); // warm the cache
+        push(time_runs("hotpath/serve-hit", 5, || {
+            (0..SERVE_QUERIES)
+                .map(|_| serve_round(&mut rd, &mut wr, &bfs_line))
+                .sum::<usize>()
+        }));
+        hot.stop();
+    }
+
     // --- distributed superstep (ISSUE 4: schedule-driven exchange) ---
     // A whole 4-GPU CVC bfs through the coordinator: per-GPU supersteps on
     // the shared pool plus the plan-driven reduce/broadcast. The recorded
@@ -394,6 +456,8 @@ fn main() {
     // The headline §9 metric: the worst of the two presets, so it cannot be
     // carried by one favorable input.
     let speedup_sim_parallel = sim_par("rmat20").min(sim_par("rmat22"));
+    let speedup_serve_cache =
+        speedup(&cases, "hotpath/serve-hit", "hotpath/serve-cold");
     let metrics: Vec<(&str, f64)> = vec![
         ("speedup_engine_bfs", ratio("engine-bfs")),
         ("speedup_engine_sssp", ratio("engine-sssp")),
@@ -416,6 +480,7 @@ fn main() {
         ("speedup_sim_parallel_rmat20", sim_par("rmat20")),
         ("speedup_sim_parallel_rmat22", sim_par("rmat22")),
         ("speedup_sim_parallel", speedup_sim_parallel),
+        ("speedup_serve_cache", speedup_serve_cache),
         ("sim_parallel_threads", par_threads as f64),
         ("dist_comm_bytes_per_round", dist_bytes_per_round),
         ("dist_comm_bytes_intra_per_round", dist_intra_per_round),
@@ -444,12 +509,13 @@ fn main() {
         // *requirements* that hold on any runner — no seeding run needed,
         // armed from day one. (min, measured-must-be-at-least) vs
         // (max, measured-must-be-at-most):
-        let checks: [(&str, f64, bool); 8] = [
+        let checks: [(&str, f64, bool); 9] = [
             ("min_speedup_engine_bfs", ratio("engine-bfs"), true),
             ("min_speedup_engine_sssp", ratio("engine-sssp"), true),
             ("min_speedup_sim_parallel", speedup_sim_parallel, true),
             ("min_speedup_frontier_drain", ratio("frontier-drain"), true),
             ("min_speedup_degree_tally", ratio("degree-tally"), true),
+            ("min_speedup_serve_cache", speedup_serve_cache, true),
             ("max_reorder_cache_miss_ratio", reorder_miss_ratio, false),
             ("max_dist_comm_bytes_per_round", dist_bytes_per_round, false),
             ("max_dist_comm_bytes_inter_per_round", dist_inter_per_round, false),

@@ -92,6 +92,51 @@ impl EngineConfig {
         self.sim_threads = sim_threads;
         self
     }
+
+    /// Builder-style direction-optimizing-bfs toggle (see
+    /// [`bfs_direction_opt`](Self::bfs_direction_opt)).
+    pub fn with_direction_opt(mut self, on: bool) -> Self {
+        self.bfs_direction_opt = on;
+        self
+    }
+
+    /// Builder-style delta-stepping bucket width (see
+    /// [`sssp_delta`](Self::sssp_delta)); `None` = chaotic relaxation.
+    pub fn with_sssp_delta(mut self, delta: Option<f32>) -> Self {
+        self.sssp_delta = delta;
+        self
+    }
+
+    /// Builder-style PageRank convergence tolerance.
+    pub fn with_pr_tol(mut self, tol: f32) -> Self {
+        self.pr_tol = tol;
+        self
+    }
+
+    /// Builder-style k-core threshold.
+    pub fn with_kcore_k(mut self, k: u32) -> Self {
+        self.kcore_k = k;
+        self
+    }
+
+    /// Builder-style round budget.
+    pub fn with_max_rounds(mut self, max_rounds: u32) -> Self {
+        self.max_rounds = max_rounds;
+        self
+    }
+
+    /// Builder-style per-block kernel-stat retention toggle (see
+    /// [`record_blocks`](Self::record_blocks)).
+    pub fn with_record_blocks(mut self, on: bool) -> Self {
+        self.record_blocks = on;
+        self
+    }
+
+    /// Builder-style compute-mode switch (native vs PJRT artifacts).
+    pub fn with_compute(mut self, compute: ComputeMode) -> Self {
+        self.compute = compute;
+        self
+    }
 }
 
 impl Default for EngineConfig {
@@ -224,6 +269,20 @@ impl RoundScratch {
         s.arm_adaptive(cfg);
         s
     }
+
+    /// Re-arm a (possibly used) scratch for a fresh run on an `n`-vertex
+    /// graph under `cfg`: grow the frontier bitmap, drop any leftover
+    /// frontier, and rebuild the feedback controller. This is what lets
+    /// [`crate::session::Session`] keep one checkout pool of arenas and
+    /// reuse them across queries instead of allocating per run;
+    /// [`run_prepared`] calls it unconditionally, so a fresh scratch pays
+    /// only the (empty) clears.
+    pub fn reset_for(&mut self, n: usize, cfg: &EngineConfig) {
+        self.next.resize_for(n);
+        self.next.clear();
+        self.active.clear();
+        self.arm_adaptive(cfg);
+    }
 }
 
 /// One schedule + simulate step under the (optionally adaptive) balancer:
@@ -294,8 +353,21 @@ pub(crate) fn observe_adaptive(
     Some(trace)
 }
 
+/// Does running `app` under `cfg` read in-edges (and therefore need
+/// [`CsrGraph::build_csc`] to have run)?
+pub fn needs_csc(app: App, cfg: &EngineConfig) -> bool {
+    matches!(app, App::Pr | App::Kcore) || (app == App::Bfs && cfg.bfs_direction_opt)
+}
+
 /// Run `app` on `g` under `cfg`. `source` is used by bfs/sssp; `pjrt` must
 /// be `Some` when `cfg.compute == Pjrt`.
+///
+/// This is the one-shot entry: it builds the CSC view when the driver pulls
+/// in-edges, allocates a fresh [`Pool`] and [`RoundScratch`], and delegates
+/// to [`run_prepared`]. Long-lived callers (the serve daemon's
+/// [`crate::session::Session`]) prepare the graph once and call
+/// [`run_prepared`] directly so concurrent queries share `&CsrGraph`, one
+/// pool, and recycled arenas.
 pub fn run(
     app: App,
     g: &mut CsrGraph,
@@ -303,20 +375,56 @@ pub fn run(
     cfg: &EngineConfig,
     pjrt: Option<&PjrtRuntime>,
 ) -> Result<RunResult> {
-    if cfg.compute == ComputeMode::Pjrt && pjrt.is_none() {
-        return Err(anyhow!("compute=Pjrt requires a loaded PjrtRuntime"));
+    if needs_csc(app, cfg) {
+        g.build_csc();
     }
     // One worker pool per run (DESIGN.md §9); `sim_threads = 1` spawns
     // nothing and every pooled entry point takes the sequential path.
     let pool = Pool::new(cfg.sim_threads.max(1));
+    let mut scratch = RoundScratch::for_run(g.num_vertices(), cfg);
+    run_prepared(app, g, source, cfg, pjrt, &pool, &mut scratch)
+}
+
+/// Run `app` on an immutable, already-prepared graph with caller-owned
+/// execution resources — the [`crate::session::Session`] hot path
+/// (DESIGN.md §16). `scratch` is [`RoundScratch::reset_for`]-armed here, so
+/// any (possibly used) arena is accepted. Results are bit-identical to
+/// [`run`] for the same `(app, g, source, cfg)`: the two differ only in who
+/// owns the pool and scratch.
+///
+/// Preconditions: `g.csc` must be built when [`needs_csc`] holds (a loud
+/// error, not a panic, otherwise), and `pjrt` must be `Some` under
+/// `ComputeMode::Pjrt`.
+pub fn run_prepared(
+    app: App,
+    g: &CsrGraph,
+    source: u32,
+    cfg: &EngineConfig,
+    pjrt: Option<&PjrtRuntime>,
+    pool: &Pool,
+    scratch: &mut RoundScratch,
+) -> Result<RunResult> {
+    if cfg.compute == ComputeMode::Pjrt && pjrt.is_none() {
+        return Err(anyhow!("compute=Pjrt requires a loaded PjrtRuntime"));
+    }
+    if needs_csc(app, cfg) && g.csc.is_none() {
+        return Err(anyhow!(
+            "{} pulls in-edges: call CsrGraph::build_csc() before \
+             run_prepared (engine::run and session::Session do this for you)",
+            app.name()
+        ));
+    }
+    scratch.reset_for(g.num_vertices(), cfg);
     match app {
-        App::Bfs if cfg.bfs_direction_opt => run_bfs_dopt(g, source, cfg, &pool),
+        App::Bfs if cfg.bfs_direction_opt => run_bfs_dopt(g, source, cfg, pool, scratch),
         App::Sssp if cfg.sssp_delta.is_some() => {
-            run_sssp_delta(g, source, cfg, cfg.sssp_delta.unwrap(), &pool)
+            run_sssp_delta(g, source, cfg, cfg.sssp_delta.unwrap(), pool, scratch)
         }
-        App::Bfs | App::Sssp | App::Cc => run_push(app, g, source, cfg, pjrt, &pool),
-        App::Pr => run_pr(g, cfg, pjrt, &pool),
-        App::Kcore => run_kcore(g, cfg, pjrt, &pool),
+        App::Bfs | App::Sssp | App::Cc => {
+            run_push(app, g, source, cfg, pjrt, pool, scratch)
+        }
+        App::Pr => run_pr(g, cfg, pjrt, pool, scratch),
+        App::Kcore => run_kcore(g, cfg, pjrt, pool, scratch),
     }
 }
 
@@ -335,11 +443,12 @@ pub(crate) fn relax_weight(app: App, w: f32) -> f32 {
 
 fn run_push(
     app: App,
-    g: &mut CsrGraph,
+    g: &CsrGraph,
     source: u32,
     cfg: &EngineConfig,
     pjrt: Option<&PjrtRuntime>,
     pool: &Pool,
+    scratch: &mut RoundScratch,
 ) -> Result<RunResult> {
     let n = g.num_vertices();
     let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
@@ -349,8 +458,6 @@ fn run_push(
         App::Cc => cc::init_labels(n),
         _ => unreachable!(),
     };
-    let mut scratch = RoundScratch::for_vertices(n);
-    scratch.arm_adaptive(cfg);
     scratch.active = match app {
         App::Bfs | App::Sssp => vec![source],
         App::Cc => (0..n as u32).collect(),
@@ -583,21 +690,19 @@ pub fn run_push_reference(
 /// a fraction of the unexplored edges. This is Gunrock's bfs variant that
 /// the paper quotes in Table 2's parentheses.
 fn run_bfs_dopt(
-    g: &mut CsrGraph,
+    g: &CsrGraph,
     source: u32,
     cfg: &EngineConfig,
     pool: &Pool,
+    scratch: &mut RoundScratch,
 ) -> Result<RunResult> {
     const ALPHA: u64 = 14; // Beamer's push->pull switch factor
     const BETA: u64 = 24; //  pull->push switch factor
 
-    g.build_csc();
     let n = g.num_vertices();
     let m = g.num_edges() as u64;
     let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
     let mut labels = bfs::init_labels(n, source);
-    let mut scratch = RoundScratch::for_vertices(n);
-    scratch.arm_adaptive(cfg);
     scratch.active = vec![source];
     let mut rounds = Vec::new();
     let mut total_cycles = 0u64;
@@ -693,11 +798,12 @@ fn run_bfs_dopt(
 /// edges (w <= delta) relax iteratively within the bucket, heavy edges once
 /// when it settles. Each inner iteration is one simulated round.
 fn run_sssp_delta(
-    g: &mut CsrGraph,
+    g: &CsrGraph,
     source: u32,
     cfg: &EngineConfig,
     delta: f32,
     pool: &Pool,
+    scratch: &mut RoundScratch,
 ) -> Result<RunResult> {
     assert!(
         delta > 0.0 && delta.is_finite(),
@@ -721,8 +827,6 @@ fn run_sssp_delta(
     };
     let mut buckets: Vec<Vec<u32>> = vec![Vec::new()];
     buckets[0].push(source);
-    let mut scratch = RoundScratch::for_vertices(n);
-    scratch.arm_adaptive(cfg);
     let mut rounds = Vec::new();
     let mut total_cycles = 0u64;
     let mut round = 0u32;
@@ -849,20 +953,18 @@ fn run_sssp_delta(
 // --------------------------------------------------------------------- pr
 
 fn run_pr(
-    g: &mut CsrGraph,
+    g: &CsrGraph,
     cfg: &EngineConfig,
     pjrt: Option<&PjrtRuntime>,
     pool: &Pool,
+    scratch: &mut RoundScratch,
 ) -> Result<RunResult> {
-    g.build_csc();
     let n = g.num_vertices();
     let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
     let all: Vec<u32> = (0..n as u32).collect();
     let out_deg: Vec<u32> =
         (0..n as u32).map(|v| g.out_degree(v) as u32).collect();
     let mut ranks = pr::init_ranks(n);
-    let mut scratch = RoundScratch::for_vertices(n);
-    scratch.arm_adaptive(cfg);
     let mut rounds = Vec::new();
     let mut total_cycles = 0u64;
     let mut converged = false;
@@ -919,19 +1021,17 @@ fn run_pr(
 // ------------------------------------------------------------------ kcore
 
 fn run_kcore(
-    g: &mut CsrGraph,
+    g: &CsrGraph,
     cfg: &EngineConfig,
     pjrt: Option<&PjrtRuntime>,
     pool: &Pool,
+    scratch: &mut RoundScratch,
 ) -> Result<RunResult> {
-    g.build_csc();
     let n = g.num_vertices();
     let k = cfg.kcore_k;
     let sim = Simulator::new(cfg.spec.clone(), cfg.cost.clone());
     let mut deg: Vec<u32> = (0..n as u32).map(|v| g.in_degree(v) as u32).collect();
     let mut alive = vec![true; n];
-    let mut scratch = RoundScratch::for_vertices(n);
-    scratch.arm_adaptive(cfg);
     let mut rounds = Vec::new();
     let mut total_cycles = 0u64;
 

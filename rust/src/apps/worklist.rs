@@ -104,6 +104,22 @@ impl NextWorklist {
         self.words[(v >> 6) as usize] & (1u64 << (v & 63)) != 0
     }
 
+    /// Drop every queued vertex without decoding, restoring the empty
+    /// sentinel. Zeroes only the touched word range, so recycling a bitmap
+    /// across runs ([`RoundScratch::reset_for`]
+    /// (crate::apps::engine::RoundScratch::reset_for)) costs nothing when
+    /// the previous run drained cleanly.
+    pub fn clear(&mut self) {
+        if self.lo != usize::MAX {
+            for w in &mut self.words[self.lo..self.hi] {
+                *w = 0;
+            }
+        }
+        self.len = 0;
+        self.lo = usize::MAX;
+        self.hi = 0;
+    }
+
     /// Drain into a sorted active list, resetting for reuse.
     pub fn take_sorted(&mut self) -> Vec<u32> {
         let mut out = Vec::with_capacity(self.len);

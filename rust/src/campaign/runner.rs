@@ -15,12 +15,11 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::apps::engine::{self, EngineConfig};
+use crate::apps::engine::EngineConfig;
 use crate::comm::fault::FaultPlan;
-use crate::coordinator::{run_distributed, run_distributed_faulty, ClusterConfig, FaultConfig};
-use crate::graph::{inputs, CsrGraph};
-use crate::lb::{adaptive, Balancer};
-use crate::metrics::labels_hash;
+use crate::coordinator::FaultConfig;
+use crate::graph::inputs;
+use crate::session::{ClusterRequest, Session};
 
 use super::artifact;
 use super::spec::{CampaignSpec, Cell};
@@ -112,25 +111,58 @@ pub struct SweepOutcome {
     pub skipped: usize,
 }
 
-/// Execute one cell on `g` (the already-built input graph).
-pub fn run_cell(cell: &Cell, spec: &CampaignSpec, g: &mut CsrGraph) -> Result<CellResult> {
+/// The campaign-wide base [`EngineConfig`] a per-input [`Session`] is built
+/// with; per-cell variation rides in the [`crate::session::RunRequest`].
+/// The round cap is effectively unbounded so every cell converges on every
+/// input scale (PageRank cells override it to [`super::spec::PR_MAX_ROUNDS`]
+/// via [`super::spec::AppVariant::to_request`]).
+pub fn base_config(spec: &CampaignSpec) -> EngineConfig {
+    EngineConfig::default()
+        .with_sim_threads(spec.sim_threads)
+        .with_max_rounds(1_000_000)
+}
+
+/// Execute one cell against `session` (the already-prepared input graph).
+/// The session's input name must be the cell's input: default-source
+/// selection and `auto`-balancer resolution both key on it.
+pub fn run_cell(cell: &Cell, spec: &CampaignSpec, session: &Session) -> Result<CellResult> {
     // Allowlisted D001 host-timing site: feeds only `host_ms`, which the
     // artifact writer and golden checks treat as machine-dependent.
     #[allow(clippy::disallowed_methods)]
     let t0 = Instant::now();
-    // `auto` resolves to a concrete strategy here, where (app, input) are
-    // known; the cell id and recorded balancer keep the name "auto".
-    let balancer = match &cell.balancer {
-        Balancer::Auto => adaptive::auto_balancer(cell.app.name(), cell.input),
-        b => b.clone(),
-    };
-    let mut cfg = EngineConfig::default()
-        .with_balancer(balancer)
-        .with_sim_threads(spec.sim_threads);
-    cfg.max_rounds = 1_000_000; // converge on every input scale
-    cell.app.configure(&mut cfg, spec.sssp_delta);
-    let src = inputs::source_vertex(cell.input, g);
+    debug_assert_eq!(session.input(), cell.input);
 
+    let mut req = cell
+        .app
+        .to_request(spec.sssp_delta)
+        // `auto` is forwarded unresolved: the session resolves it against
+        // (app, input) exactly as the CLI does; the cell id and recorded
+        // balancer keep the name "auto".
+        .with_balancer(cell.balancer.clone());
+    // Per-block kernel stats feed the single-GPU imbalance factor.
+    req.record_blocks = cell.gpus <= 1;
+    if cell.gpus > 1 {
+        let policy = cell
+            .policy
+            .ok_or_else(|| anyhow!("multi-GPU cell {} without a policy", cell.id()))?;
+        req.cluster = Some(ClusterRequest {
+            gpus: cell.gpus,
+            policy,
+            gpus_per_host: None,
+            exec: spec.exec,
+        });
+        if cell.fault != "none" {
+            // Fault cells replay the plan the CLI preset of the same name
+            // would build from the sweep's seed, checkpointing every other
+            // round in memory so a GPU death replays at most one round.
+            let plan =
+                FaultPlan::parse(cell.fault, cell.gpus, spec.seed).map_err(|e| anyhow!(e))?;
+            req.fault =
+                Some(FaultConfig { plan, checkpoint_every: 2, checkpoint_dir: None });
+        }
+    }
+
+    let reply = session.run(&req, None)?;
     let mut r = CellResult {
         id: cell.id(),
         app: cell.app.name().to_string(),
@@ -139,63 +171,23 @@ pub fn run_cell(cell: &Cell, spec: &CampaignSpec, g: &mut CsrGraph) -> Result<Ce
         policy: cell.policy.map(|p| p.name()).unwrap_or("-").to_string(),
         gpus: cell.gpus,
         fault: cell.fault.to_string(),
+        labels_hash: reply.labels_hash.clone(),
+        rounds: reply.rounds,
+        total_cycles: reply.total_cycles,
+        simulated_ms: reply.simulated_ms,
+        imbalance_factor: reply.imbalance_factor,
+        lb_rounds: reply.lb_rounds,
+        converged: reply.converged,
+        adaptive_threshold_final: reply.adaptive_threshold_final,
         ..CellResult::default()
     };
-
-    if cell.gpus <= 1 {
-        // Per-block kernel stats feed the imbalance factor.
-        cfg.record_blocks = true;
-        let run = engine::run(cell.app.app(), g, src, &cfg, None)?;
-        r.labels_hash = format!("{:016x}", labels_hash(&run.labels));
-        r.rounds = run.rounds.len() as u64;
-        r.total_cycles = run.total_cycles;
-        r.simulated_ms = run.ms(&cfg.spec);
-        r.imbalance_factor = run
-            .rounds
-            .iter()
-            .flat_map(|rec| rec.kernels.iter().flatten())
-            .map(|k| k.imbalance_factor())
-            .fold(1.0f64, f64::max);
-        r.lb_rounds = run.rounds_with_lb() as u64;
-        r.converged = run.converged;
-        r.adaptive_threshold_final = run
-            .rounds
-            .last()
-            .and_then(|rec| rec.adaptive.as_ref())
-            .map(|a| a.threshold)
-            .unwrap_or(0);
-    } else {
-        let policy = cell
-            .policy
-            .ok_or_else(|| anyhow!("multi-GPU cell {} without a policy", r.id))?;
-        let cluster = ClusterConfig::new(cell.gpus, policy, None, spec.exec);
-        let run = if cell.fault == "none" {
-            run_distributed(cell.app.app(), g, src, &cfg, &cluster, None)?
-        } else {
-            // Fault cells replay the plan the CLI preset of the same name
-            // would build from the sweep's seed, checkpointing every other
-            // round in memory so a GPU death replays at most one round.
-            let plan =
-                FaultPlan::parse(cell.fault, cell.gpus, spec.seed).map_err(|e| anyhow!(e))?;
-            let fc = FaultConfig { plan, checkpoint_every: 2, checkpoint_dir: None };
-            run_distributed_faulty(cell.app.app(), g, src, &cfg, &cluster, None, &fc)?
-        };
-        r.labels_hash = format!("{:016x}", labels_hash(&run.labels));
-        r.rounds = run.rounds.len() as u64;
-        r.total_cycles = run.total_cycles;
-        r.simulated_ms = run.ms(&cfg.spec);
-        r.comm_bytes = run.comm_bytes;
-        r.comm_bytes_intra = run.comm_bytes_intra;
-        r.comm_bytes_inter = run.comm_bytes_inter;
-        let max = run.per_gpu_comp.iter().copied().max().unwrap_or(0) as f64;
-        let sum: u64 = run.per_gpu_comp.iter().sum();
-        let mean = sum as f64 / run.per_gpu_comp.len().max(1) as f64;
-        r.imbalance_factor = if mean > 0.0 { max / mean } else { 1.0 };
-        r.lb_rounds = run.rounds.iter().filter(|rec| rec.lb_gpus > 0).count() as u64;
-        r.converged = run.converged;
-        r.recoveries = run.recoveries;
-        r.replayed_rounds = run.replayed_rounds;
-        r.retry_count = run.retry_count;
+    if let Some(d) = &reply.dist {
+        r.comm_bytes = d.comm_bytes;
+        r.comm_bytes_intra = d.comm_bytes_intra;
+        r.comm_bytes_inter = d.comm_bytes_inter;
+        r.recoveries = d.recoveries;
+        r.replayed_rounds = d.replayed_rounds;
+        r.retry_count = d.retry_count;
     }
     r.host_ms = t0.elapsed().as_secs_f64() * 1e3;
     Ok(r)
@@ -264,9 +256,10 @@ pub fn run_sweep_cached(
 
     let mut results: Vec<CellResult> = Vec::with_capacity(cells.len());
     let (mut executed, mut skipped) = (0usize, 0usize);
-    // One built graph at a time; cells are input-major so this is at most
-    // one generation per input.
-    let mut cache: Option<(&'static str, CsrGraph)> = None;
+    // One prepared session at a time; cells are input-major so this is at
+    // most one graph generation (and one CSC build + pool spin-up) per
+    // input.
+    let mut cache: Option<(&'static str, Session)> = None;
 
     for cell in &cells {
         let id = cell.id();
@@ -293,10 +286,10 @@ pub fn run_sweep_cached(
                         )
                     })?,
             };
-            cache = Some((cell.input, g));
+            cache = Some((cell.input, Session::new(g, cell.input, base_config(spec))));
         }
-        let (_, g) = cache.as_mut().unwrap();
-        let r = run_cell(cell, spec, g)?;
+        let (_, session) = cache.as_ref().unwrap();
+        let r = run_cell(cell, spec, session)?;
         executed += 1;
         results.push(r);
         each(results.last().unwrap(), true);
@@ -320,10 +313,16 @@ mod tests {
         s
     }
 
+    /// Build the per-input session exactly as `run_sweep_cached` does.
+    fn session_for(spec: &CampaignSpec, input: &'static str) -> Session {
+        let g = inputs::build(input, spec.scale_delta, spec.seed).unwrap();
+        Session::new(g, input, base_config(spec))
+    }
+
     #[test]
     fn single_and_distributed_cells_capture_metrics() {
         let spec = tiny_spec();
-        let mut g = inputs::build("rmat18", spec.scale_delta, spec.seed).unwrap();
+        let sess = session_for(&spec, "rmat18");
         let single = Cell {
             app: AppVariant::Bfs,
             input: "rmat18",
@@ -332,7 +331,7 @@ mod tests {
             gpus: 1,
             fault: "none",
         };
-        let r = run_cell(&single, &spec, &mut g).unwrap();
+        let r = run_cell(&single, &spec, &sess).unwrap();
         assert_eq!(r.id, "bfs/rmat18/twc/-/1");
         assert_eq!(r.labels_hash.len(), 16);
         assert!(r.rounds > 0 && r.total_cycles > 0);
@@ -340,7 +339,7 @@ mod tests {
         assert_eq!(r.comm_bytes, 0);
 
         let dist = Cell { policy: Some(Policy::Cvc), gpus: 4, ..single.clone() };
-        let d = run_cell(&dist, &spec, &mut g).unwrap();
+        let d = run_cell(&dist, &spec, &sess).unwrap();
         assert_eq!(d.id, "bfs/rmat18/twc/cvc/4");
         assert!(d.comm_bytes > 0, "4-GPU bfs must exchange bytes");
         assert_eq!(d.comm_bytes, d.comm_bytes_intra + d.comm_bytes_inter);
@@ -352,7 +351,7 @@ mod tests {
     #[test]
     fn adaptive_cell_records_controller_columns() {
         let spec = tiny_spec();
-        let mut g = inputs::build("rmat18", spec.scale_delta, spec.seed).unwrap();
+        let sess = session_for(&spec, "rmat18");
         let cell = Cell {
             app: AppVariant::Bfs,
             input: "rmat18",
@@ -364,14 +363,14 @@ mod tests {
             gpus: 1,
             fault: "none",
         };
-        let ada = run_cell(&cell, &spec, &mut g).unwrap();
+        let ada = run_cell(&cell, &spec, &sess).unwrap();
         assert_eq!(ada.id, "bfs/rmat18/adaptive/-/1");
         assert!(ada.adaptive_threshold_final > 0, "adaptive cells record the final threshold");
 
         let twc = run_cell(
             &Cell { balancer: Balancer::Twc, ..cell.clone() },
             &spec,
-            &mut g,
+            &sess,
         )
         .unwrap();
         assert_eq!(twc.adaptive_threshold_final, 0, "static cells record 0");
@@ -382,7 +381,7 @@ mod tests {
         let auto = run_cell(
             &Cell { balancer: Balancer::Auto, ..cell },
             &spec,
-            &mut g,
+            &sess,
         )
         .unwrap();
         assert_eq!(auto.id, "bfs/rmat18/auto/-/1");
@@ -454,7 +453,7 @@ mod tests {
     #[test]
     fn fault_cells_recover_to_the_fault_free_labels() {
         let spec = tiny_spec();
-        let mut g = inputs::build("road-s", spec.scale_delta, spec.seed).unwrap();
+        let sess = session_for(&spec, "road-s");
         let clean = Cell {
             app: AppVariant::Bfs,
             input: "road-s",
@@ -463,12 +462,12 @@ mod tests {
             gpus: 4,
             fault: "none",
         };
-        let base = run_cell(&clean, &spec, &mut g).unwrap();
+        let base = run_cell(&clean, &spec, &sess).unwrap();
         assert!(base.converged);
         assert_eq!((base.fault.as_str(), base.recoveries, base.retry_count), ("none", 0, 0));
 
         for fault in ["gpu-death", "chaos"] {
-            let faulty = run_cell(&Cell { fault, ..clean.clone() }, &spec, &mut g).unwrap();
+            let faulty = run_cell(&Cell { fault, ..clean.clone() }, &spec, &sess).unwrap();
             assert_eq!(faulty.id, format!("{}/{fault}", base.id));
             assert_eq!(faulty.fault, fault);
             assert!(faulty.converged);

@@ -104,14 +104,20 @@ impl AppVariant {
         matches!(self, AppVariant::Bfs | AppVariant::Kcore)
     }
 
-    /// Apply the variant's engine options to `cfg`.
-    pub fn configure(&self, cfg: &mut crate::apps::engine::EngineConfig, sssp_delta: f32) {
+    /// The variant's engine options as a typed [`crate::session::RunRequest`]
+    /// — the runner layers balancer / cluster / fault fields on top and
+    /// executes it through a [`crate::session::Session`], so a campaign
+    /// cell and an `alb run` of the same variant resolve their configs
+    /// through the identical seam.
+    pub fn to_request(&self, sssp_delta: f32) -> crate::session::RunRequest {
+        let mut req = crate::session::RunRequest::new(self.app());
         match self {
             AppVariant::Bfs | AppVariant::Kcore => {}
-            AppVariant::BfsDopt => cfg.bfs_direction_opt = true,
-            AppVariant::SsspDelta => cfg.sssp_delta = Some(sssp_delta),
-            AppVariant::Pr => cfg.max_rounds = PR_MAX_ROUNDS,
+            AppVariant::BfsDopt => req.direction_opt = Some(true),
+            AppVariant::SsspDelta => req.sssp_delta = Some(sssp_delta),
+            AppVariant::Pr => req.max_rounds = Some(PR_MAX_ROUNDS),
         }
+        req
     }
 }
 
@@ -564,14 +570,13 @@ mod tests {
         assert_eq!(AppVariant::parse("cc"), None);
         assert!(AppVariant::Bfs.distributed());
         assert!(!AppVariant::SsspDelta.distributed());
-        let mut cfg = crate::apps::engine::EngineConfig::default();
-        AppVariant::SsspDelta.configure(&mut cfg, 25.0);
-        assert_eq!(cfg.sssp_delta, Some(25.0));
-        let mut cfg = crate::apps::engine::EngineConfig::default();
-        AppVariant::BfsDopt.configure(&mut cfg, 25.0);
-        assert!(cfg.bfs_direction_opt);
-        let mut cfg = crate::apps::engine::EngineConfig::default();
-        AppVariant::Pr.configure(&mut cfg, 25.0);
-        assert_eq!(cfg.max_rounds, PR_MAX_ROUNDS);
+        let req = AppVariant::SsspDelta.to_request(25.0);
+        assert_eq!(req.sssp_delta, Some(25.0));
+        assert_eq!(req.app, crate::apps::App::Sssp);
+        let req = AppVariant::BfsDopt.to_request(25.0);
+        assert_eq!(req.direction_opt, Some(true));
+        let req = AppVariant::Pr.to_request(25.0);
+        assert_eq!(req.max_rounds, Some(PR_MAX_ROUNDS));
+        assert_eq!(AppVariant::Kcore.to_request(25.0).max_rounds, None);
     }
 }

@@ -34,6 +34,13 @@
 //! * [`runtime`] — the PJRT client that loads the AOT-compiled JAX/Pallas
 //!   kernels (`artifacts/*.hlo.txt`) onto the request path (behind the
 //!   `xla` cargo feature; an API-identical stub is built otherwise);
+//! * [`session`] — the unified execution API: a [`Session`] owns graph +
+//!   pool + scratch arenas and serves typed [`RunRequest`]/[`RunReply`]
+//!   queries; the CLI, the campaign runner, and the serve daemon all
+//!   execute through it (DESIGN.md §16);
+//! * [`serve`] — the `alb serve` daemon: concurrent analytics queries over
+//!   line-delimited JSON on TCP, with admission control, same-key request
+//!   coalescing, and an LRU result cache;
 //! * [`analysis`] — the `alb lint` static analyzer: machine-checked repo
 //!   invariants (determinism, unsafe discipline, twin coverage, message
 //!   consistency) enforced in tier-1 and in CI;
@@ -61,3 +68,11 @@ pub mod metrics;
 pub mod partition;
 pub mod repro;
 pub mod runtime;
+pub mod serve;
+pub mod session;
+
+// The documented public request surface (DESIGN.md §16): construct a
+// `Session`, describe a query as a `RunRequest`, get a `RunReply` whose
+// `labels_hash` is bit-identical across transports (library call, `alb
+// run`, `alb serve`).
+pub use session::{ClusterRequest, DistReply, RunReply, RunRequest, Session};

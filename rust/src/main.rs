@@ -16,7 +16,7 @@
 //!            [--reorder <none|degree|rcm>] [--graph-cache DIR]
 //!            [--faults <none|gpu-death|corrupt|drop|slow|chaos|spec,...>]
 //!            [--checkpoint-every K] [--checkpoint-dir DIR]
-//!            [--scale-delta D] [--seed S] [--json <out.json>]
+//!            [--max-rounds N] [--scale-delta D] [--seed S] [--json <out.json>]
 //! alb repro  <table1|fig1|table2|fig5|fig6|fig7|fig8|fig9|fig10|fig11|all>
 //!            [--out results] [--scale-delta D] [--quick]
 //! alb sweep  [--smoke] [--list] [--apps a,b] [--inputs x,y]
@@ -26,6 +26,10 @@
 //!            [--out CAMPAIGN.json] [--resume true|false]
 //!            [--check-golden CAMPAIGN.golden.json] [--check-adaptive]
 //!            [--check-faults] [--graph-cache DIR]
+//! alb serve  --graph <name|file.albg> [--port N] [--max-inflight K]
+//!            [--cache-entries N] [--max-rounds N] [--balancer B]
+//!            [--framework F] [--gpu-spec S] [--sim-threads N]
+//!            [--scale-delta D] [--seed S] [--graph-cache DIR]
 //! alb lint   [--root DIR] [--format <text|json>] [--out report.json]
 //! ```
 //!
@@ -38,13 +42,11 @@ use std::process::ExitCode;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use alb_graph::apps::engine::{self, ComputeMode, EngineConfig};
+use alb_graph::apps::engine::{ComputeMode, EngineConfig};
 use alb_graph::apps::App;
 use alb_graph::comm::fault::{FaultPlan, FAULTS_USAGE};
 use alb_graph::config::Framework;
-use alb_graph::coordinator::{
-    run_distributed, run_distributed_faulty, ClusterConfig, ExecMode, FaultConfig,
-};
+use alb_graph::coordinator::{ExecMode, FaultConfig};
 use alb_graph::gpu::GpuSpec;
 use alb_graph::graph::reorder::{self, Reorder};
 use alb_graph::graph::{disk, inputs, io, props, CsrGraph};
@@ -53,6 +55,8 @@ use alb_graph::metrics::{Json, Table};
 use alb_graph::partition::Policy;
 use alb_graph::repro::{self, ReproConfig};
 use alb_graph::runtime::PjrtRuntime;
+use alb_graph::serve::{ServeOpts, Server};
+use alb_graph::session::{ClusterRequest, RunRequest, Session, SCHEMA_VERSION};
 
 /// Tiny std-only flag parser: `--key value` pairs plus positionals.
 struct Args {
@@ -200,23 +204,27 @@ fn cmd_run(args: &Args) -> Result<()> {
     let sim_threads =
         alb_graph::exec::parse_threads(args.get("sim-threads")).map_err(|e| anyhow!(e))?;
 
-    let mut cfg: EngineConfig = fw.engine_config(spec.clone());
-    cfg.sim_threads = sim_threads;
+    // Everything below layers onto the framework defaults through the
+    // `EngineConfig` builders — the same surface `Session::effective_config`
+    // uses, so a CLI run and a serve query derive their configs identically.
+    let mut cfg: EngineConfig =
+        fw.engine_config(spec.clone()).with_sim_threads(sim_threads);
     // --balancer first, so --distribution / --threshold below refine the
     // chosen strategy rather than the framework default it replaces.
     if let Some(b) = args.get("balancer") {
-        cfg.balancer = Balancer::parse(b).ok_or_else(|| {
+        cfg = cfg.with_balancer(Balancer::parse(b).ok_or_else(|| {
             anyhow!(
                 "unknown --balancer {b}; valid values: {}",
                 alb_graph::lb::BALANCER_NAMES.join(", ")
             )
-        })?;
+        })?);
     }
     // `auto` is a meta-strategy: resolve it here, where app and input are
     // both known, exactly as the campaign runner does per cell.
     if matches!(cfg.balancer, Balancer::Auto) {
-        cfg.balancer = adaptive::auto_balancer(app.name(), input);
-        eprintln!("auto: resolved to {}", cfg.balancer.name());
+        let resolved = adaptive::auto_balancer(app.name(), input);
+        eprintln!("auto: resolved to {}", resolved.name());
+        cfg = cfg.with_balancer(resolved);
     }
     if let Some(d) = args.get("distribution") {
         let dist = match d {
@@ -224,7 +232,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             "blocked" => Distribution::Blocked,
             _ => bail!("--distribution cyclic|blocked"),
         };
-        cfg.balancer = match cfg.balancer {
+        cfg = cfg.with_balancer(match cfg.balancer.clone() {
             Balancer::Alb { threshold, .. } => {
                 Balancer::Alb { distribution: dist, threshold }
             }
@@ -233,11 +241,11 @@ fn cmd_run(args: &Args) -> Result<()> {
             }
             Balancer::EdgeLb { .. } => Balancer::EdgeLb { distribution: dist },
             other => other,
-        };
+        });
     }
     if let Some(t) = args.get("threshold") {
         let th: u64 = t.parse()?;
-        cfg.balancer = match cfg.balancer {
+        cfg = cfg.with_balancer(match cfg.balancer.clone() {
             Balancer::Alb { distribution, .. } => {
                 Balancer::Alb { distribution, threshold: Some(th) }
             }
@@ -245,23 +253,29 @@ fn cmd_run(args: &Args) -> Result<()> {
                 Balancer::Adaptive { distribution, threshold: Some(th) }
             }
             other => other,
-        };
+        });
     }
     if let Some(k) = args.get("kcore-k") {
-        cfg.kcore_k = k.parse()?;
+        cfg = cfg.with_kcore_k(k.parse()?);
     }
     if args.get("direction-opt").map(|v| v == "true" || v == "1") == Some(true) {
-        cfg.bfs_direction_opt = true;
+        cfg = cfg.with_direction_opt(true);
     }
     if let Some(d) = args.get("delta") {
-        cfg.sssp_delta = Some(d.parse()?);
+        cfg = cfg.with_sssp_delta(Some(d.parse()?));
+    }
+    if let Some(m) = args.get("max-rounds") {
+        match m.parse::<u32>() {
+            Ok(n) if n >= 1 => cfg = cfg.with_max_rounds(n),
+            _ => bail!("bad --max-rounds {m}; valid values: 1..=4294967295"),
+        }
     }
 
     let pjrt_runtime;
     let pjrt = match args.get_or("engine", "native").as_str() {
         "native" => None,
         "pjrt" => {
-            cfg.compute = ComputeMode::Pjrt;
+            cfg = cfg.with_compute(ComputeMode::Pjrt);
             pjrt_runtime = PjrtRuntime::load_default()?;
             eprintln!(
                 "pjrt: {} kernels on {}",
@@ -341,6 +355,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let started = std::time::Instant::now();
 
     let mut report = Json::obj()
+        .set("schema_version", SCHEMA_VERSION)
         .set("app", app.name())
         .set("input", input)
         .set("framework", fw.name())
@@ -351,82 +366,187 @@ fn cmd_run(args: &Args) -> Result<()> {
         .set("seed", seed)
         .set("sim_threads", cfg.sim_threads);
 
-    if gpus <= 1 {
-        let r = engine::run(app, &mut g, src, &cfg, pjrt)?;
-        println!(
-            "{} on {} [{}]: {:.1} simulated ms, {} rounds, {} edges, LB in {} rounds ({} host ms)",
-            app.name(),
-            input,
-            fw.name(),
-            r.ms(&spec),
-            r.rounds.len(),
-            r.total_edges(),
-            r.rounds_with_lb(),
-            started.elapsed().as_millis(),
-        );
-        report = report
-            .set("simulated_ms", r.ms(&spec))
-            .set("rounds", r.rounds.len())
-            .set("edges", r.total_edges())
-            .set("lb_rounds", r.rounds_with_lb())
-            .set("converged", r.converged);
-    } else {
-        // The PJRT client is not Sync: the coordinator runs partitions
-        // sequentially whenever a runtime is attached, whatever --exec says.
-        let effective_exec = if pjrt.is_some() { ExecMode::Sequential } else { exec };
-        let cluster = ClusterConfig::new(
+    // Single- and multi-GPU runs both execute through the Session API —
+    // the exact code path an `alb serve` query takes, which is what makes
+    // the serve parity gate (labels_hash equality across transports) a
+    // meaningful check rather than a coincidence of two implementations.
+    // The PJRT client is not Sync: the coordinator runs partitions
+    // sequentially whenever a runtime is attached, whatever --exec says.
+    let effective_exec = if pjrt.is_some() { ExecMode::Sequential } else { exec };
+    let session = Session::new(g, input, cfg.clone());
+    let req = RunRequest {
+        source: Some(src),
+        cluster: (gpus > 1).then(|| ClusterRequest {
             gpus,
             policy,
-            (gpus_per_host != u32::MAX).then_some(gpus_per_host),
-            effective_exec,
-        );
-        let r = match &fault_cfg {
-            Some(fc) => run_distributed_faulty(app, &g, src, &cfg, &cluster, pjrt, fc)?,
-            None => run_distributed(app, &g, src, &cfg, &cluster, pjrt)?,
-        };
-        println!(
-            "{} on {} [{}] x{} GPUs ({}, {} exec on {} threads): {:.1} simulated ms (comp {:.1} + comm {:.1}), {} rounds ({} host ms)",
-            app.name(),
-            input,
-            fw.name(),
-            gpus,
-            policy.name(),
-            effective_exec.name(),
-            r.num_threads(),
-            r.ms(&spec),
-            r.comp_ms(&spec),
-            r.comm_ms(&spec),
-            r.rounds.len(),
-            started.elapsed().as_millis(),
-        );
-        let wall_ms: Vec<Json> = r
-            .per_gpu_wall_ns
-            .iter()
-            .map(|&ns| Json::Num(ns as f64 / 1e6))
-            .collect();
-        report = report
-            .set("simulated_ms", r.ms(&spec))
-            .set("comp_ms", r.comp_ms(&spec))
-            .set("comm_ms", r.comm_ms(&spec))
-            .set("comm_bytes", r.comm_bytes)
-            .set("comm_bytes_intra", r.comm_bytes_intra)
-            .set("comm_bytes_inter", r.comm_bytes_inter)
-            .set("rounds", r.rounds.len())
-            .set("policy", policy.name())
-            .set("exec", effective_exec.name())
-            .set("os_threads", r.num_threads())
-            .set("per_gpu_wall_ms", Json::Arr(wall_ms))
-            .set("converged", r.converged)
-            .set("recoveries", r.recoveries)
-            .set("replayed_rounds", r.replayed_rounds)
-            .set("retry_count", r.retry_count)
-            .set("checkpoint_bytes", r.checkpoint_bytes);
+            gpus_per_host: (gpus_per_host != u32::MAX).then_some(gpus_per_host),
+            exec: effective_exec,
+        }),
+        fault: fault_cfg,
+        ..RunRequest::new(app)
+    };
+    let r = session.run(&req, pjrt)?;
+    report = report
+        .set("labels_hash", r.labels_hash.as_str())
+        .set("source", r.source)
+        .set("simulated_ms", r.simulated_ms)
+        .set("rounds", r.rounds)
+        .set("converged", r.converged);
+
+    match &r.dist {
+        None => {
+            println!(
+                "{} on {} [{}]: {:.1} simulated ms, {} rounds, {} edges, LB in {} rounds ({} host ms)",
+                app.name(),
+                input,
+                fw.name(),
+                r.simulated_ms,
+                r.rounds,
+                r.total_edges,
+                r.lb_rounds,
+                started.elapsed().as_millis(),
+            );
+            report = report
+                .set("edges", r.total_edges)
+                .set("lb_rounds", r.lb_rounds);
+        }
+        Some(d) => {
+            println!(
+                "{} on {} [{}] x{} GPUs ({}, {} exec on {} threads): {:.1} simulated ms (comp {:.1} + comm {:.1}), {} rounds ({} host ms)",
+                app.name(),
+                input,
+                fw.name(),
+                gpus,
+                policy.name(),
+                effective_exec.name(),
+                d.os_threads,
+                r.simulated_ms,
+                d.comp_ms,
+                d.comm_ms,
+                r.rounds,
+                started.elapsed().as_millis(),
+            );
+            let wall_ms: Vec<Json> = d
+                .per_gpu_wall_ns
+                .iter()
+                .map(|&ns| Json::Num(ns as f64 / 1e6))
+                .collect();
+            report = report
+                .set("comp_ms", d.comp_ms)
+                .set("comm_ms", d.comm_ms)
+                .set("comm_bytes", d.comm_bytes)
+                .set("comm_bytes_intra", d.comm_bytes_intra)
+                .set("comm_bytes_inter", d.comm_bytes_inter)
+                .set("policy", policy.name())
+                .set("exec", effective_exec.name())
+                .set("os_threads", d.os_threads)
+                .set("per_gpu_wall_ms", Json::Arr(wall_ms))
+                .set("recoveries", d.recoveries)
+                .set("replayed_rounds", d.replayed_rounds)
+                .set("retry_count", d.retry_count)
+                .set("checkpoint_bytes", d.checkpoint_bytes);
+        }
     }
 
     if let Some(path) = args.get("json") {
         std::fs::write(path, report.to_string_pretty())?;
         eprintln!("wrote {path}");
     }
+    Ok(())
+}
+
+/// `alb serve` — the multi-tenant graph-query daemon (DESIGN.md §16): load
+/// one graph into a [`Session`], then answer concurrent line-delimited JSON
+/// queries over TCP with admission control, same-key coalescing, and an LRU
+/// result cache.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let input = args.get("graph").ok_or_else(|| {
+        anyhow!(
+            "--graph required (name or .albg file); valid presets: {}",
+            inputs::preset_names()
+        )
+    })?;
+    let delta = args.get_i32("scale-delta", 0)?;
+    let seed = args.get_u64("seed", 42)?;
+    let port = match args.get("port") {
+        None => 7411u16,
+        Some(v) => match v.parse::<u16>() {
+            Ok(p) => p,
+            Err(_) => bail!(
+                "bad --port {v}; valid values: 0..=65535 (0 binds an ephemeral port)"
+            ),
+        },
+    };
+    let max_inflight = match args.get("max-inflight") {
+        None => 4usize,
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if (1..=1024).contains(&n) => n,
+            _ => bail!("bad --max-inflight {v}; valid values: 1..=1024"),
+        },
+    };
+    let cache_entries = match args.get("cache-entries") {
+        None => 64usize,
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n <= 1_048_576 => n,
+            _ => bail!(
+                "bad --cache-entries {v}; valid values: 0..=1048576 \
+                 (0 disables the result cache)"
+            ),
+        },
+    };
+    let spec_name = args.get_or("gpu-spec", "sim-default");
+    let spec = GpuSpec::by_name(&spec_name).ok_or_else(|| {
+        anyhow!("unknown --gpu-spec {spec_name}; valid values: {}", GpuSpec::NAMES)
+    })?;
+    let fw_name = args.get_or("framework", "dirgl-alb");
+    let fw = Framework::parse(&fw_name).ok_or_else(|| {
+        anyhow!("unknown --framework {fw_name}; valid values: {}", Framework::NAMES)
+    })?;
+    let sim_threads =
+        alb_graph::exec::parse_threads(args.get("sim-threads")).map_err(|e| anyhow!(e))?;
+    let mut cfg = fw.engine_config(spec).with_sim_threads(sim_threads);
+    if let Some(b) = args.get("balancer") {
+        // `auto` stays unresolved here: the session resolves it per query
+        // app, exactly as the campaign does per cell.
+        cfg = cfg.with_balancer(Balancer::parse(b).ok_or_else(|| {
+            anyhow!(
+                "unknown --balancer {b}; valid values: {}",
+                alb_graph::lb::BALANCER_NAMES.join(", ")
+            )
+        })?);
+    }
+    if let Some(m) = args.get("max-rounds") {
+        match m.parse::<u32>() {
+            Ok(n) if n >= 1 => cfg = cfg.with_max_rounds(n),
+            _ => bail!("bad --max-rounds {m}; valid values: 1..=4294967295"),
+        }
+    }
+    // The serve-side admission budget is the same number a query's omitted
+    // `max_rounds` resolves to, so default queries match `alb run` exactly.
+    let max_rounds = cfg.max_rounds;
+
+    let (g, cache_outcome) = match args.get("graph-cache") {
+        Some(dir) if !input.ends_with(".albg") => {
+            disk::GraphCache::new(Path::new(dir))?.load_or_build(input, delta, seed)?
+        }
+        Some(_) => bail!("--graph-cache applies to named input presets, not .albg files"),
+        None => (load_graph(input, delta, seed)?, disk::CacheOutcome::Miss),
+    };
+    let session = Session::new(g, input, cfg);
+    let (nv, ne) = (session.num_vertices(), session.graph().num_edges());
+    let handle = Server::spawn(
+        session,
+        ServeOpts { max_inflight, cache_entries, max_rounds },
+        port,
+    )?;
+    println!(
+        "alb serve: {input} ({nv} vertices, {ne} edges, graph cache {}) on {} — \
+         max-inflight {max_inflight}, cache {cache_entries} entries, \
+         round budget {max_rounds}",
+        cache_outcome.name(),
+        handle.addr(),
+    );
+    handle.join();
     Ok(())
 }
 
@@ -721,7 +841,7 @@ fn cmd_lint(args: &Args) -> Result<()> {
 fn usage() {
     eprintln!(
         "alb — Adaptive Load Balancer for graph analytics (paper reproduction)\n\
-         usage: alb <props|gen|run|sweep|repro|lint> [flags]\n\
+         usage: alb <props|gen|run|sweep|serve|repro|lint> [flags]\n\
          see `rust/src/main.rs` header or README.md for full flag lists"
     );
 }
@@ -744,6 +864,7 @@ fn main() -> ExitCode {
         "gen" => cmd_gen(&args),
         "run" => cmd_run(&args),
         "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args),
         "repro" => cmd_repro(&args),
         "lint" => cmd_lint(&args),
         _ => {

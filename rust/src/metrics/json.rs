@@ -39,6 +39,44 @@ impl Json {
         s
     }
 
+    /// One-line rendering for line-delimited protocols (`alb serve`): same
+    /// sorted-key determinism as [`to_string_pretty`]
+    /// (Self::to_string_pretty), no interior newlines ever (strings escape
+    /// them), so one reply is always exactly one line.
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write_compact(&mut s);
+        s
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    let _ = write!(out, "\"{k}\":");
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+            // Scalars render identically in both modes.
+            scalar => scalar.write(out, 0),
+        }
+    }
+
     fn write(&self, out: &mut String, indent: usize) {
         let pad = "  ".repeat(indent);
         match self {
@@ -190,5 +228,16 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::Arr(vec![]).to_string_pretty(), "[]");
         assert_eq!(Json::obj().to_string_pretty(), "{}");
+    }
+
+    #[test]
+    fn compact_is_one_line_and_sorted() {
+        let j = Json::obj()
+            .set("b", vec![1u64, 2])
+            .set("a", Json::obj().set("x", "line\nbreak"))
+            .set("c", Json::Null);
+        let out = j.to_string_compact();
+        assert!(!out.contains('\n'), "compact output must be newline-free");
+        assert_eq!(out, r#"{"a":{"x":"line\nbreak"},"b":[1,2],"c":null}"#);
     }
 }

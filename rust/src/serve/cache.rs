@@ -1,0 +1,120 @@
+//! The serve-layer result cache (DESIGN.md §16): a small LRU keyed by the
+//! canonical query identity string, storing `Arc`-shared [`RunReply`]s
+//! (crate::session::RunReply).
+//!
+//! std has no LRU container, so this one is built on a `BTreeMap` plus a
+//! logical tick counter: every hit/insert stamps the entry with the next
+//! tick, and eviction removes the minimum-tick entry. `BTreeMap` keeps
+//! iteration order deterministic (lint rule D002 bans `HashMap` iteration
+//! in `rust/src/`), and the tick is logical time, not wall time — rule D001
+//! bans `Instant` here, and the cache stays bit-deterministic under replay.
+
+use std::collections::BTreeMap;
+
+/// LRU with a fixed capacity. `capacity == 0` disables caching entirely
+/// (every `get` misses, every `insert` is dropped) — the serve flag
+/// `--cache-entries 0` maps to this.
+#[derive(Debug)]
+pub struct LruCache<V> {
+    capacity: usize,
+    tick: u64,
+    map: BTreeMap<String, (u64, V)>,
+}
+
+impl<V: Clone> LruCache<V> {
+    pub fn new(capacity: usize) -> LruCache<V> {
+        LruCache { capacity, tick: 0, map: BTreeMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look up `key`, refreshing its recency on a hit.
+    pub fn get(&mut self, key: &str) -> Option<V> {
+        let entry = self.map.get_mut(key)?;
+        self.tick += 1;
+        entry.0 = self.tick;
+        Some(entry.1.clone())
+    }
+
+    /// Insert (or refresh) `key`, evicting the least-recently-used entry if
+    /// the cache is full.
+    pub fn insert(&mut self, key: &str, value: V) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.tick += 1;
+        if let Some(entry) = self.map.get_mut(key) {
+            *entry = (self.tick, value);
+            return;
+        }
+        if self.map.len() >= self.capacity {
+            // Evict the stalest entry. Ties are impossible: ticks are
+            // unique per stamp.
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, (t, _))| *t)
+                .map(|(k, _)| k.clone());
+            if let Some(k) = victim {
+                self.map.remove(&k);
+            }
+        }
+        self.map.insert(key.to_string(), (self.tick, value));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_refreshes_recency() {
+        let mut c = LruCache::new(2);
+        c.insert("a", 1);
+        c.insert("b", 2);
+        assert_eq!(c.get("a"), Some(1)); // a is now fresher than b
+        c.insert("c", 3); // evicts b
+        assert_eq!(c.get("b"), None);
+        assert_eq!(c.get("a"), Some(1));
+        assert_eq!(c.get("c"), Some(3));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn insert_existing_key_updates_value_without_evicting() {
+        let mut c = LruCache::new(2);
+        c.insert("a", 1);
+        c.insert("b", 2);
+        c.insert("a", 10);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get("a"), Some(10));
+        assert_eq!(c.get("b"), Some(2));
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let mut c = LruCache::new(0);
+        c.insert("a", 1);
+        assert!(c.is_empty());
+        assert_eq!(c.get("a"), None::<i32>);
+    }
+
+    #[test]
+    fn eviction_order_is_strict_lru() {
+        let mut c = LruCache::new(3);
+        for (k, v) in [("a", 1), ("b", 2), ("c", 3)] {
+            c.insert(k, v);
+        }
+        c.get("a");
+        c.get("b");
+        c.insert("d", 4); // c is stalest
+        assert_eq!(c.get("c"), None);
+        assert_eq!(c.len(), 3);
+    }
+}

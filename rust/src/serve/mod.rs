@@ -1,0 +1,657 @@
+//! `alb serve` — a multi-tenant graph-query daemon (DESIGN.md §16).
+//!
+//! One [`Server`] owns one [`Session`] (one immutable prepared graph + the
+//! shared worker pool) and answers concurrent analytics queries — BFS/SSSP
+//! from arbitrary sources, PageRank top-k, k-core membership — over
+//! line-delimited JSON on TCP ([`protocol`]). Three mechanisms sit between
+//! the socket and the session:
+//!
+//! * **Admission control** — at most `max_inflight` queries execute at
+//!   once; later arrivals block on a condvar-guarded counter (a semaphore;
+//!   std has none). A per-query `max_rounds` budget bounds each admitted
+//!   run, so one runaway query cannot wedge a slot forever.
+//! * **Coalescing** — requests that resolve to the same canonical identity
+//!   while one is already executing join its in-flight *flight* and all
+//!   receive the one result, so a thundering herd on a hot source costs
+//!   one execution.
+//! * **Result cache** — an LRU ([`cache::LruCache`]) keyed by the same
+//!   identity string serves repeats without touching the pool at all.
+//!
+//! The identity key is derived from the *effective* engine configuration
+//! (after session defaults and `Balancer::Auto` resolution), never from the
+//! raw request text — two spellings of the same query share one cache line.
+//! Presentation fields (`k`, `vertex`, `id`) are rendered from the cached
+//! labels and are deliberately not part of the key.
+//!
+//! Determinism: replies are rendered with sorted-key compact JSON, so a
+//! cache hit is byte-identical to the cold reply except for the `cache`
+//! status field, and a served `labels_hash` is bit-identical to `alb run`
+//! on the same query — both properties are pinned by `rust/tests/serve.rs`.
+//! The module uses no wall clock and no `unsafe` (lint rules D001/U002).
+
+pub mod cache;
+pub mod protocol;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::apps::{App, INF};
+use crate::metrics::Json;
+use crate::session::{RunReply, RunRequest, Session, SCHEMA_VERSION};
+
+use cache::LruCache;
+use protocol::{QueryRequest, Request, Value, MAX_LINE_BYTES};
+
+/// Serving knobs; the graph itself arrives as a prepared [`Session`].
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Maximum queries executing concurrently (admission slots).
+    pub max_inflight: usize,
+    /// LRU result-cache capacity; 0 disables the cache.
+    pub cache_entries: usize,
+    /// Per-query round-budget ceiling: requests may ask for less, never
+    /// more, and requests that omit `max_rounds` get exactly this.
+    pub max_rounds: u32,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts { max_inflight: 4, cache_entries: 64, max_rounds: 1_000_000 }
+    }
+}
+
+/// Monotonic service counters, exposed on the `stats` op. `queries` counts
+/// well-formed query requests; exactly one of `executed` / `cache_hits` /
+/// `coalesced` is incremented per successful query, so
+/// `executed + cache_hits + coalesced == queries - failed` always holds —
+/// the soak test's core invariant.
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub queries: AtomicU64,
+    pub executed: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub coalesced: AtomicU64,
+    pub errors: AtomicU64,
+}
+
+/// One in-flight execution that same-key arrivals can join.
+struct Flight {
+    slot: Mutex<Option<Result<Arc<RunReply>, String>>>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn new() -> Flight {
+        Flight { slot: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn publish(&self, r: Result<Arc<RunReply>, String>) {
+        *self.slot.lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> Result<Arc<RunReply>, String> {
+        let mut slot = self.slot.lock().unwrap_or_else(|e| e.into_inner());
+        while slot.is_none() {
+            slot = self.cv.wait(slot).unwrap_or_else(|e| e.into_inner());
+        }
+        slot.clone().expect("flight published")
+    }
+}
+
+/// The daemon: session + cache + flights + admission state. All methods
+/// take `&self`; one `Server` is shared by every connection thread.
+pub struct Server {
+    session: Session,
+    opts: ServeOpts,
+    cache: Mutex<LruCache<Arc<RunReply>>>,
+    flights: Mutex<BTreeMap<String, Arc<Flight>>>,
+    inflight: Mutex<usize>,
+    admit_cv: Condvar,
+    counters: Counters,
+    stop: AtomicBool,
+}
+
+impl Server {
+    pub fn new(session: Session, opts: ServeOpts) -> Server {
+        let cache = Mutex::new(LruCache::new(opts.cache_entries));
+        Server {
+            session,
+            opts,
+            cache,
+            flights: Mutex::new(BTreeMap::new()),
+            inflight: Mutex::new(0),
+            admit_cv: Condvar::new(),
+            counters: Counters::default(),
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
+    pub fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    /// Bind `127.0.0.1:port` (0 = ephemeral) and serve on a background
+    /// accept thread. The returned handle owns shutdown.
+    pub fn spawn(session: Session, opts: ServeOpts, port: u16) -> Result<ServerHandle> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("failed to bind 127.0.0.1:{port}"))?;
+        let addr = listener.local_addr()?;
+        let server = Arc::new(Server::new(session, opts));
+        let srv = Arc::clone(&server);
+        let accept = std::thread::spawn(move || accept_loop(&srv, &listener));
+        Ok(ServerHandle { addr, server, accept: Some(accept) })
+    }
+
+    /// Process one request line into one reply line (no trailing newline).
+    /// This is the whole protocol: the TCP layer above only frames lines.
+    pub fn handle_line(&self, line: &str) -> String {
+        match protocol::parse_request(line) {
+            Err(e) => {
+                self.counters.errors.fetch_add(1, Ordering::SeqCst);
+                render_error(&e, None)
+            }
+            Ok(Request::Stats) => self.render_stats(),
+            Ok(Request::Query(q)) => {
+                self.counters.queries.fetch_add(1, Ordering::SeqCst);
+                match self.run_query(&q) {
+                    Ok((reply, status)) => self.render_reply(&q, &reply, status),
+                    Err(e) => {
+                        self.counters.errors.fetch_add(1, Ordering::SeqCst);
+                        render_error(&e, q.id.as_ref())
+                    }
+                }
+            }
+        }
+    }
+
+    /// Resolve, admit, and execute (or short-circuit) one query. The
+    /// returned status is the reply's `cache` field: `miss` | `hit` |
+    /// `coalesced`.
+    fn run_query(&self, q: &QueryRequest) -> Result<(Arc<RunReply>, &'static str), String> {
+        if let Some(m) = q.max_rounds {
+            if m > self.opts.max_rounds {
+                return Err(format!(
+                    "max_rounds {m} exceeds the per-query budget; \
+                     valid values: 1..={}",
+                    self.opts.max_rounds
+                ));
+            }
+        }
+        let n = self.session.num_vertices() as u32;
+        if let Some(v) = q.vertex {
+            if v >= n {
+                return Err(format!(
+                    "vertex {v} is out of range for {} ({n} vertices); \
+                     valid values: 0..={}",
+                    self.session.input(),
+                    n.saturating_sub(1)
+                ));
+            }
+        }
+        let req = self.to_run_request(q);
+        let source = self.session.resolve_source(&req).map_err(|e| e.to_string())?;
+        let key = self.query_key(&req, source);
+
+        if let Some(hit) =
+            self.cache.lock().unwrap_or_else(|e| e.into_inner()).get(&key)
+        {
+            self.counters.cache_hits.fetch_add(1, Ordering::SeqCst);
+            return Ok((hit, "hit"));
+        }
+
+        // Join or found the flight for this key. Registration happens
+        // *before* admission, so a blocked-at-admission leader still
+        // absorbs same-key arrivals.
+        let (flight, leader) = {
+            let mut fl = self.flights.lock().unwrap_or_else(|e| e.into_inner());
+            match fl.get(&key) {
+                Some(f) => (Arc::clone(f), false),
+                None => {
+                    let f = Arc::new(Flight::new());
+                    fl.insert(key.clone(), Arc::clone(&f));
+                    (f, true)
+                }
+            }
+        };
+        if !leader {
+            self.counters.coalesced.fetch_add(1, Ordering::SeqCst);
+            return flight.wait().map(|r| (r, "coalesced"));
+        }
+
+        // Admission: block until a slot frees.
+        {
+            let mut inflight = self.inflight.lock().unwrap_or_else(|e| e.into_inner());
+            while *inflight >= self.opts.max_inflight.max(1) {
+                inflight =
+                    self.admit_cv.wait(inflight).unwrap_or_else(|e| e.into_inner());
+            }
+            *inflight += 1;
+        }
+        let result = self.session.run(&req, None).map(Arc::new).map_err(|e| e.to_string());
+        {
+            let mut inflight = self.inflight.lock().unwrap_or_else(|e| e.into_inner());
+            *inflight -= 1;
+            self.admit_cv.notify_one();
+        }
+
+        if let Ok(r) = &result {
+            self.counters.executed.fetch_add(1, Ordering::SeqCst);
+            // Cache-insert strictly before retiring the flight: a new
+            // same-key arrival then either hits the cache or still finds
+            // the flight — never re-executes a just-finished query.
+            self.cache
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .insert(&key, Arc::clone(r));
+        }
+        flight.publish(result.clone());
+        self.flights.lock().unwrap_or_else(|e| e.into_inner()).remove(&key);
+        result.map(|r| (r, "miss"))
+    }
+
+    fn to_run_request(&self, q: &QueryRequest) -> RunRequest {
+        RunRequest {
+            app: q.app,
+            source: q.source,
+            balancer: q.balancer.clone(),
+            direction_opt: q.direction_opt,
+            sssp_delta: q.delta,
+            pr_tol: q.pr_tol,
+            kcore_k: q.kcore_k,
+            max_rounds: Some(q.max_rounds.unwrap_or(self.opts.max_rounds)),
+            record_blocks: false,
+            cluster: None,
+            fault: None,
+        }
+    }
+
+    /// The canonical cache/coalesce identity: app + resolved source + the
+    /// *effective* engine configuration, so requests that spell the same
+    /// run differently (e.g. omitted vs explicit default fields, or
+    /// `auto` vs its resolution) share one identity.
+    fn query_key(&self, req: &RunRequest, source: u32) -> String {
+        let cfg = self.session.effective_config(req);
+        format!(
+            "{}|s{source}|b{:?}|d{}|sd{:?}|pt{:08x}|kc{}|mr{}",
+            req.app.name(),
+            cfg.balancer,
+            cfg.bfs_direction_opt,
+            cfg.sssp_delta.map(f32::to_bits),
+            cfg.pr_tol.to_bits(),
+            cfg.kcore_k,
+            cfg.max_rounds,
+        )
+    }
+
+    fn render_reply(&self, q: &QueryRequest, r: &RunReply, status: &str) -> String {
+        let mut j = Json::obj()
+            .set("schema_version", SCHEMA_VERSION)
+            .set("status", "ok")
+            .set("graph", self.session.input())
+            .set("app", r.app.name())
+            .set("source", r.source)
+            .set("labels_hash", r.labels_hash.clone())
+            .set("rounds", r.rounds)
+            .set("total_cycles", r.total_cycles)
+            .set("simulated_ms", r.simulated_ms)
+            .set("converged", r.converged)
+            .set("cache", status)
+            .set("result", result_json(q, r));
+        if let Some(id) = &q.id {
+            j = j.set("id", id.to_json());
+        }
+        j.to_string_compact()
+    }
+
+    fn render_stats(&self) -> String {
+        let c = &self.counters;
+        Json::obj()
+            .set("schema_version", SCHEMA_VERSION)
+            .set("status", "ok")
+            .set("op", "stats")
+            .set("graph", self.session.input())
+            .set("vertices", self.session.num_vertices() as u64)
+            .set("edges", self.session.graph().num_edges() as u64)
+            .set("queries", c.queries.load(Ordering::SeqCst))
+            .set("executed", c.executed.load(Ordering::SeqCst))
+            .set("cache_hits", c.cache_hits.load(Ordering::SeqCst))
+            .set("coalesced", c.coalesced.load(Ordering::SeqCst))
+            .set("errors", c.errors.load(Ordering::SeqCst))
+            .set(
+                "pending",
+                self.flights.lock().unwrap_or_else(|e| e.into_inner()).len() as u64,
+            )
+            .set(
+                "cached",
+                self.cache.lock().unwrap_or_else(|e| e.into_inner()).len() as u64,
+            )
+            .set("max_inflight", self.opts.max_inflight as u64)
+            .to_string_compact()
+    }
+}
+
+/// App-specific result summary, rendered from the (possibly cached) labels.
+fn result_json(q: &QueryRequest, r: &RunReply) -> Json {
+    let mut res = Json::obj();
+    match r.app {
+        App::Bfs | App::Sssp => {
+            res = res.set(
+                "reached",
+                r.labels.iter().filter(|&&x| x < INF).count() as u64,
+            );
+        }
+        App::Cc => {
+            let comps: BTreeSet<u32> = r.labels.iter().map(|x| x.to_bits()).collect();
+            res = res.set("components", comps.len() as u64);
+        }
+        App::Pr => {
+            let mut idx: Vec<u32> = (0..r.labels.len() as u32).collect();
+            idx.sort_by(|&a, &b| {
+                r.labels[b as usize]
+                    .total_cmp(&r.labels[a as usize])
+                    .then(a.cmp(&b))
+            });
+            let top: Vec<Json> = idx
+                .iter()
+                .take(q.topk as usize)
+                .map(|&v| {
+                    Json::obj()
+                        .set("vertex", v)
+                        .set("rank", r.labels[v as usize] as f64)
+                })
+                .collect();
+            res = res.set("top", Json::Arr(top));
+        }
+        App::Kcore => {
+            res = res.set(
+                "members",
+                r.labels.iter().filter(|&&x| x > 0.5).count() as u64,
+            );
+        }
+    }
+    if let Some(v) = q.vertex {
+        let x = r.labels[v as usize];
+        let value = match r.app {
+            App::Kcore => Json::Bool(x > 0.5),
+            App::Bfs | App::Sssp if x >= INF => Json::Null,
+            _ => Json::Num(x as f64),
+        };
+        res = res.set("vertex", v).set("value", value);
+    }
+    res
+}
+
+fn render_error(msg: &str, id: Option<&Value>) -> String {
+    let mut j = Json::obj()
+        .set("schema_version", SCHEMA_VERSION)
+        .set("status", "error")
+        .set("error", msg);
+    if let Some(id) = id {
+        j = j.set("id", id.to_json());
+    }
+    j.to_string_compact()
+}
+
+/// Owns the accept thread; dropping (or [`stop`](ServerHandle::stop)-ping)
+/// shuts the listener down.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    server: Arc<Server>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn server(&self) -> &Server {
+        &self.server
+    }
+
+    /// Signal shutdown and join the accept thread. Connection threads for
+    /// already-open sockets drain on their own as clients disconnect.
+    pub fn stop(mut self) {
+        self.signal_stop();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Block on the accept thread forever (the CLI foreground mode).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    fn signal_stop(&self) {
+        self.server.stop.store(true, Ordering::SeqCst);
+        // Unblock the blocking accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.signal_stop();
+        }
+    }
+}
+
+fn accept_loop(server: &Arc<Server>, listener: &TcpListener) {
+    for stream in listener.incoming() {
+        if server.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if let Ok(s) = stream {
+            let srv = Arc::clone(server);
+            std::thread::spawn(move || handle_conn(&srv, s));
+        }
+    }
+}
+
+/// What one bounded line read produced.
+enum LineRead {
+    Line(Vec<u8>),
+    Eof,
+    Oversized,
+}
+
+/// Read one `\n`-terminated line of at most `max` bytes. EOF mid-line (a
+/// client that died mid-request) reports `Eof` — the partial line is
+/// dropped, never half-parsed. An over-limit line is discarded without
+/// buffering: the rest of it is consumed (up to its newline or EOF) before
+/// `Oversized` is reported, so the error reply reaches the client on a
+/// clean close instead of racing a connection reset from unread bytes.
+fn read_line_bounded(r: &mut impl BufRead, max: usize) -> std::io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut oversized = false;
+    loop {
+        let (found, used) = {
+            let chunk = r.fill_buf()?;
+            if chunk.is_empty() {
+                return Ok(if oversized { LineRead::Oversized } else { LineRead::Eof });
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(p) => {
+                    if !oversized {
+                        buf.extend_from_slice(&chunk[..p]);
+                    }
+                    (true, p + 1)
+                }
+                None => {
+                    if !oversized {
+                        buf.extend_from_slice(chunk);
+                    }
+                    (false, chunk.len())
+                }
+            }
+        };
+        r.consume(used);
+        if buf.len() > max {
+            oversized = true;
+            buf.clear();
+        }
+        if found {
+            if oversized {
+                return Ok(LineRead::Oversized);
+            }
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+            return Ok(LineRead::Line(buf));
+        }
+    }
+}
+
+fn handle_conn(server: &Server, stream: TcpStream) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut out = stream;
+    loop {
+        match read_line_bounded(&mut reader, MAX_LINE_BYTES) {
+            Ok(LineRead::Eof) | Err(_) => return,
+            Ok(LineRead::Oversized) => {
+                // The offending line was drained but its content is gone;
+                // treat the peer as misbehaving: reply, then close.
+                server.counters.errors.fetch_add(1, Ordering::SeqCst);
+                let msg = format!(
+                    "request line exceeds {MAX_LINE_BYTES} bytes; \
+                     requests are single-line JSON under that limit"
+                );
+                let _ = writeln!(out, "{}", render_error(&msg, None));
+                return;
+            }
+            Ok(LineRead::Line(bytes)) => {
+                let reply = match String::from_utf8(bytes) {
+                    Ok(line) if line.trim().is_empty() => continue,
+                    Ok(line) => server.handle_line(&line),
+                    Err(_) => {
+                        server.counters.errors.fetch_add(1, Ordering::SeqCst);
+                        render_error("request line is not valid UTF-8", None)
+                    }
+                };
+                if writeln!(out, "{reply}").is_err() {
+                    return;
+                }
+                let _ = out.flush();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::engine::EngineConfig;
+    use crate::graph::gen::rmat::{self, RmatConfig};
+    use crate::graph::CsrGraph;
+    use std::io::Cursor;
+
+    fn server(scale: u32, opts: ServeOpts) -> Server {
+        let g = CsrGraph::from_edge_list(&rmat::generate(&RmatConfig::paper(scale, 33)));
+        Server::new(Session::new(g, "rmat18", EngineConfig::default()), opts)
+    }
+
+    #[test]
+    fn query_then_hit_is_byte_identical_modulo_cache_field() {
+        let srv = server(8, ServeOpts::default());
+        let line = r#"{"app":"bfs","source":0}"#;
+        let cold = srv.handle_line(line);
+        let hit = srv.handle_line(line);
+        assert!(cold.contains("\"cache\":\"miss\""), "{cold}");
+        assert!(hit.contains("\"cache\":\"hit\""), "{hit}");
+        assert_eq!(
+            cold.replace("\"cache\":\"miss\"", "\"cache\":\"hit\""),
+            hit,
+            "cached reply must be byte-identical apart from cache status"
+        );
+        assert_eq!(srv.counters.executed.load(Ordering::SeqCst), 1);
+        assert_eq!(srv.counters.cache_hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn presentation_fields_share_the_cache_line() {
+        let srv = server(8, ServeOpts::default());
+        srv.handle_line(r#"{"app":"pr"}"#);
+        let with_k = srv.handle_line(r#"{"app":"pr","k":3,"vertex":0,"id":7}"#);
+        assert!(with_k.contains("\"cache\":\"hit\""), "{with_k}");
+        assert!(with_k.contains("\"id\":7"), "{with_k}");
+        assert!(with_k.contains("\"top\":["), "{with_k}");
+        assert_eq!(srv.counters.executed.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn errors_are_structured_and_do_not_poison_the_session() {
+        let srv = server(8, ServeOpts::default());
+        for bad in [
+            "{not json",
+            r#"{"app":"zzz"}"#,
+            r#"{"app":"bfs","source":999999999}"#,
+            r#"{"app":"bfs","vertex":999999999}"#,
+            r#"{"app":"bfs","max_rounds":2000000}"#,
+        ] {
+            let reply = srv.handle_line(bad);
+            assert!(reply.contains("\"status\":\"error\""), "{bad} -> {reply}");
+            assert!(reply.contains("\"schema_version\""), "{reply}");
+        }
+        assert_eq!(srv.counters.errors.load(Ordering::SeqCst), 5);
+        // The session still answers correctly afterwards.
+        let ok = srv.handle_line(r#"{"app":"bfs"}"#);
+        assert!(ok.contains("\"status\":\"ok\""), "{ok}");
+    }
+
+    #[test]
+    fn stats_reports_the_counter_invariant() {
+        let srv = server(8, ServeOpts::default());
+        srv.handle_line(r#"{"app":"bfs"}"#);
+        srv.handle_line(r#"{"app":"bfs"}"#);
+        srv.handle_line(r#"{"app":"kcore"}"#);
+        let stats = srv.handle_line(r#"{"op":"stats"}"#);
+        assert!(stats.contains("\"queries\":3"), "{stats}");
+        assert!(stats.contains("\"executed\":2"), "{stats}");
+        assert!(stats.contains("\"cache_hits\":1"), "{stats}");
+        assert!(stats.contains("\"coalesced\":0"), "{stats}");
+        assert!(stats.contains("\"pending\":0"), "{stats}");
+    }
+
+    #[test]
+    fn cache_disabled_reexecutes() {
+        let srv = server(8, ServeOpts { cache_entries: 0, ..ServeOpts::default() });
+        srv.handle_line(r#"{"app":"bfs"}"#);
+        srv.handle_line(r#"{"app":"bfs"}"#);
+        assert_eq!(srv.counters.executed.load(Ordering::SeqCst), 2);
+        assert_eq!(srv.counters.cache_hits.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn bounded_line_reader() {
+        let mut r = Cursor::new(b"short line\n".to_vec());
+        match read_line_bounded(&mut r, 64).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, b"short line"),
+            _ => panic!("expected a line"),
+        }
+        let mut r = Cursor::new(vec![b'x'; 100]);
+        assert!(matches!(read_line_bounded(&mut r, 64).unwrap(), LineRead::Oversized));
+        let mut r = Cursor::new(b"partial-then-eof".to_vec());
+        assert!(matches!(read_line_bounded(&mut r, 64).unwrap(), LineRead::Eof));
+        let mut r = Cursor::new(b"crlf\r\n".to_vec());
+        match read_line_bounded(&mut r, 64).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, b"crlf"),
+            _ => panic!("expected a line"),
+        }
+    }
+}

@@ -1,0 +1,485 @@
+//! The `alb serve` wire protocol: line-delimited JSON over TCP
+//! (DESIGN.md §16).
+//!
+//! Each request is one JSON object on one line; each reply is one JSON
+//! object on one line ([`crate::metrics::Json::to_string_compact`], whose
+//! sorted-key output makes replies byte-deterministic — the property the
+//! cache byte-identity test in `rust/tests/serve.rs` pins). The vendored
+//! crate set has no serde, so this module carries a small recursive-descent
+//! JSON reader for *inbound* text (the outbound side reuses
+//! [`crate::metrics::Json`]). Malformed input is a structured error reply,
+//! never a panic: the daemon's shared session must survive any byte
+//! sequence a client sends.
+
+use std::collections::BTreeMap;
+
+use crate::apps::{App, APP_NAMES};
+use crate::lb::{Balancer, BALANCER_NAMES};
+use crate::metrics::Json;
+
+/// Hard cap on one request line. Longer lines get a structured error and
+/// the connection is closed (the stream cannot be resynchronized once a
+/// line is abandoned mid-read).
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// Nesting depth cap for inbound JSON — requests are flat objects, so any
+/// deeply nested payload is hostile; the cap keeps the recursive reader off
+/// unbounded stacks.
+const MAX_DEPTH: usize = 16;
+
+/// Every field a query request may carry, for error messages that name the
+/// full valid set (lint rule C001's contract, applied to the wire).
+pub const REQUEST_FIELDS: &str =
+    "op, app, source, balancer, direction_opt, delta, pr_tol, kcore_k, \
+     max_rounds, k, vertex, id";
+
+/// A parsed JSON value (inbound only).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    /// Re-encode for echoing (request `id`s ride back on the reply).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Value::Null => Json::Null,
+            Value::Bool(b) => Json::Bool(*b),
+            Value::Num(x) => Json::Num(*x),
+            Value::Str(s) => Json::Str(s.clone()),
+            Value::Arr(xs) => Json::Arr(xs.iter().map(Value::to_json).collect()),
+            Value::Obj(m) => Json::Obj(
+                m.iter().map(|(k, v)| (k.clone(), v.to_json())).collect(),
+            ),
+        }
+    }
+}
+
+/// Parse one line of JSON. Errors are short human-readable strings that the
+/// server wraps into structured error replies.
+pub fn parse_json(s: &str) -> Result<Value, String> {
+    let b = s.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(b, &mut pos, 0)?;
+    skip_ws(b, &mut pos);
+    if pos != b.len() {
+        return Err(format!("trailing bytes after JSON value at offset {pos}"));
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\r' | b'\n') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize, depth: usize) -> Result<Value, String> {
+    if depth > MAX_DEPTH {
+        return Err(format!("JSON nested deeper than {MAX_DEPTH} levels"));
+    }
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => Err("unexpected end of input".to_string()),
+        Some(b'{') => {
+            *pos += 1;
+            let mut m = BTreeMap::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Value::Obj(m));
+            }
+            loop {
+                skip_ws(b, pos);
+                let Value::Str(key) = parse_value(b, pos, depth + 1)? else {
+                    return Err(format!("object key at offset {} is not a string", *pos));
+                };
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    return Err(format!("expected ':' at offset {}", *pos));
+                }
+                *pos += 1;
+                let v = parse_value(b, pos, depth + 1)?;
+                m.insert(key, v);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Value::Obj(m));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at offset {}", *pos)),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            let mut xs = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Value::Arr(xs));
+            }
+            loop {
+                xs.push(parse_value(b, pos, depth + 1)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Value::Arr(xs));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at offset {}", *pos)),
+                }
+            }
+        }
+        Some(b'"') => parse_string(b, pos).map(Value::Str),
+        Some(b't') if b[*pos..].starts_with(b"true") => {
+            *pos += 4;
+            Ok(Value::Bool(true))
+        }
+        Some(b'f') if b[*pos..].starts_with(b"false") => {
+            *pos += 5;
+            Ok(Value::Bool(false))
+        }
+        Some(b'n') if b[*pos..].starts_with(b"null") => {
+            *pos += 4;
+            Ok(Value::Null)
+        }
+        Some(_) => parse_number(b, pos).map(Value::Num),
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    debug_assert_eq!(b[*pos], b'"');
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        match b.get(*pos) {
+            None => return Err("unterminated string".to_string()),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let hex = b
+                            .get(*pos + 1..*pos + 5)
+                            .ok_or_else(|| "truncated \\u escape".to_string())?;
+                        let hex = std::str::from_utf8(hex)
+                            .map_err(|_| "non-ascii \\u escape".to_string())?;
+                        let cp = u32::from_str_radix(hex, 16)
+                            .map_err(|_| format!("bad \\u escape \\u{hex}"))?;
+                        // Surrogates are rejected rather than paired — no
+                        // request field legitimately needs astral-plane
+                        // escapes, and a wrong pairing would corrupt ids.
+                        let c = char::from_u32(cp)
+                            .ok_or_else(|| format!("invalid codepoint \\u{hex}"))?;
+                        out.push(c);
+                        *pos += 4;
+                    }
+                    _ => return Err("bad escape in string".to_string()),
+                }
+                *pos += 1;
+            }
+            Some(&c) if c < 0x20 => {
+                return Err("unescaped control byte in string".to_string())
+            }
+            Some(_) => {
+                // Multi-byte UTF-8 passes through verbatim; the line was
+                // already validated as UTF-8 before parsing.
+                let start = *pos;
+                while *pos < b.len()
+                    && b[*pos] != b'"'
+                    && b[*pos] != b'\\'
+                    && b[*pos] >= 0x20
+                {
+                    *pos += 1;
+                }
+                out.push_str(
+                    std::str::from_utf8(&b[start..*pos])
+                        .map_err(|_| "invalid UTF-8 in string".to_string())?,
+                );
+            }
+        }
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<f64, String> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    if start == *pos {
+        return Err(format!("expected a JSON value at offset {start}"));
+    }
+    let s = std::str::from_utf8(&b[start..*pos]).map_err(|_| "bad number".to_string())?;
+    let x: f64 = s.parse().map_err(|_| format!("bad number {s}"))?;
+    if !x.is_finite() {
+        return Err(format!("non-finite number {s}"));
+    }
+    Ok(x)
+}
+
+// ------------------------------------------------------------- requests
+
+/// One decoded request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Query(Box<QueryRequest>),
+    /// Server counter snapshot (`{"op":"stats"}`) — how the soak test
+    /// observes coalescing and cache hits.
+    Stats,
+}
+
+/// A decoded analytics query. `None` fields defer to the session defaults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryRequest {
+    pub app: App,
+    pub source: Option<u32>,
+    pub balancer: Option<Balancer>,
+    pub direction_opt: Option<bool>,
+    pub delta: Option<f32>,
+    pub pr_tol: Option<f32>,
+    pub kcore_k: Option<u32>,
+    pub max_rounds: Option<u32>,
+    /// PageRank top-k size (presentation only — not part of the result
+    /// cache key).
+    pub topk: u32,
+    /// Optional per-vertex lookup (distance / rank / membership).
+    pub vertex: Option<u32>,
+    /// Opaque client correlation id, echoed on the reply.
+    pub id: Option<Value>,
+}
+
+/// Default / maximum PageRank top-k sizes.
+pub const DEFAULT_TOPK: u32 = 10;
+pub const MAX_TOPK: u32 = 1024;
+
+fn get_u32(v: &Value, field: &str, max: u32) -> Result<u32, String> {
+    match v {
+        Value::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= max as f64 => {
+            Ok(*x as u32)
+        }
+        _ => Err(format!(
+            "bad {field} {}; valid values: integers in 0..={max}",
+            describe(v)
+        )),
+    }
+}
+
+fn get_f32_pos(v: &Value, field: &str) -> Result<f32, String> {
+    match v {
+        Value::Num(x) if *x > 0.0 && (*x as f32).is_finite() => Ok(*x as f32),
+        _ => Err(format!(
+            "bad {field} {}; valid values: finite numbers > 0",
+            describe(v)
+        )),
+    }
+}
+
+fn describe(v: &Value) -> String {
+    match v {
+        Value::Null => "null".to_string(),
+        Value::Bool(b) => b.to_string(),
+        Value::Num(x) => x.to_string(),
+        Value::Str(s) => format!("{s:?}"),
+        Value::Arr(_) => "<array>".to_string(),
+        Value::Obj(_) => "<object>".to_string(),
+    }
+}
+
+/// Decode one request line into a [`Request`]. Every rejection names the
+/// full valid set for the offending field.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let Value::Obj(m) = parse_json(line)? else {
+        return Err(format!(
+            "request must be a JSON object; valid fields: {REQUEST_FIELDS}"
+        ));
+    };
+    match m.get("op") {
+        None => {}
+        Some(Value::Str(op)) if op == "query" => {}
+        Some(Value::Str(op)) if op == "stats" => {
+            return Ok(Request::Stats);
+        }
+        Some(v) => {
+            return Err(format!(
+                "unknown op {}; valid values: query, stats",
+                describe(v)
+            ))
+        }
+    }
+    // Strict field set: a typo'd key must fail loudly, not silently run a
+    // different query than the client intended.
+    for key in m.keys() {
+        if !matches!(
+            key.as_str(),
+            "op" | "app"
+                | "source"
+                | "balancer"
+                | "direction_opt"
+                | "delta"
+                | "pr_tol"
+                | "kcore_k"
+                | "max_rounds"
+                | "k"
+                | "vertex"
+                | "id"
+        ) {
+            return Err(format!(
+                "unknown request field {key:?}; valid fields: {REQUEST_FIELDS}"
+            ));
+        }
+    }
+    let app = match m.get("app") {
+        Some(Value::Str(name)) => App::parse(name).ok_or_else(|| {
+            format!("unknown app {name:?}; valid values: {APP_NAMES}")
+        })?,
+        Some(v) => {
+            return Err(format!(
+                "bad app {}; valid values: {APP_NAMES}",
+                describe(v)
+            ))
+        }
+        None => return Err(format!("missing app; valid values: {APP_NAMES}")),
+    };
+    let balancer = match m.get("balancer") {
+        None => None,
+        Some(Value::Str(name)) => Some(Balancer::parse(name).ok_or_else(|| {
+            format!(
+                "unknown balancer {name:?}; valid values: {}",
+                BALANCER_NAMES.join(", ")
+            )
+        })?),
+        Some(v) => {
+            return Err(format!(
+                "bad balancer {}; valid values: {}",
+                describe(v),
+                BALANCER_NAMES.join(", ")
+            ))
+        }
+    };
+    let direction_opt = match m.get("direction_opt") {
+        None => None,
+        Some(Value::Bool(b)) => Some(*b),
+        Some(v) => {
+            return Err(format!(
+                "bad direction_opt {}; valid values: true, false",
+                describe(v)
+            ))
+        }
+    };
+    let q = QueryRequest {
+        app,
+        source: m.get("source").map(|v| get_u32(v, "source", u32::MAX - 1)).transpose()?,
+        balancer,
+        direction_opt,
+        delta: m.get("delta").map(|v| get_f32_pos(v, "delta")).transpose()?,
+        pr_tol: m.get("pr_tol").map(|v| get_f32_pos(v, "pr_tol")).transpose()?,
+        kcore_k: m.get("kcore_k").map(|v| get_u32(v, "kcore_k", u32::MAX - 1)).transpose()?,
+        max_rounds: m
+            .get("max_rounds")
+            .map(|v| get_u32(v, "max_rounds", u32::MAX - 1))
+            .transpose()?,
+        topk: match m.get("k") {
+            None => DEFAULT_TOPK,
+            Some(v) => {
+                let k = get_u32(v, "k", MAX_TOPK)?;
+                if k == 0 {
+                    return Err(format!(
+                        "bad k 0; valid values: integers in 1..={MAX_TOPK}"
+                    ));
+                }
+                k
+            }
+        },
+        vertex: m.get("vertex").map(|v| get_u32(v, "vertex", u32::MAX - 1)).transpose()?,
+        id: m.get("id").cloned(),
+    };
+    if q.max_rounds == Some(0) {
+        return Err("bad max_rounds 0; valid values: integers >= 1".to_string());
+    }
+    Ok(Request::Query(Box::new(q)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_query() {
+        let r = parse_request(r#"{"app":"bfs","source":5,"max_rounds":100}"#).unwrap();
+        let Request::Query(q) = r else { panic!("not a query") };
+        assert_eq!(q.app, App::Bfs);
+        assert_eq!(q.source, Some(5));
+        assert_eq!(q.max_rounds, Some(100));
+        assert_eq!(q.topk, DEFAULT_TOPK);
+    }
+
+    #[test]
+    fn stats_op() {
+        assert_eq!(parse_request(r#"{"op":"stats"}"#).unwrap(), Request::Stats);
+    }
+
+    #[test]
+    fn rejections_name_the_valid_set() {
+        for (line, needle) in [
+            (r#"{"app":"zzz"}"#, "valid values"),
+            (r#"{"source":1}"#, "missing app"),
+            (r#"{"app":"bfs","wat":1}"#, "valid fields"),
+            (r#"{"app":"bfs","source":-1}"#, "valid values"),
+            (r#"{"app":"bfs","balancer":"nope"}"#, "valid values"),
+            (r#"{"app":"pr","k":0}"#, "1..="),
+            (r#"{"app":"bfs","max_rounds":0}"#, ">= 1"),
+            (r#"[1,2]"#, "valid fields"),
+            (r#"{"op":"frobnicate"}"#, "query, stats"),
+        ] {
+            let err = parse_request(line).unwrap_err();
+            assert!(err.contains(needle), "{line} -> {err}");
+        }
+    }
+
+    #[test]
+    fn malformed_json_is_an_error_not_a_panic() {
+        for line in [
+            "",
+            "{",
+            "{\"a\"",
+            "nope",
+            "{\"a\":}",
+            "\u{1}",
+            "{\"s\":\"unterminated",
+            "[[[[[[[[[[[[[[[[[[[[[[[[[[[[[[[[[1]]]]]",
+            "{\"x\":1e999}",
+        ] {
+            assert!(parse_json(line).is_err(), "{line:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn value_roundtrips_to_json() {
+        let v = parse_json(r#"{"id":[1,"a",true,null]}"#).unwrap();
+        assert_eq!(
+            v.to_json().to_string_compact(),
+            r#"{"id":[1,"a",true,null]}"#
+        );
+    }
+}

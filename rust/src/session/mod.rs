@@ -1,0 +1,497 @@
+//! The unified execution API (DESIGN.md §16): one [`Session`] owns an
+//! immutable prepared graph, a shared [`exec::Pool`], and a checkout pool of
+//! recycled [`RoundScratch`] arenas; a typed [`RunRequest`] names everything
+//! a query varies (app variant, source, balancer, budgets, cluster shape,
+//! fault plan) and a [`RunReply`] carries the deterministic result summary.
+//!
+//! Before this layer existed, the CLI, the campaign runner, and any future
+//! daemon each dispatched directly into three divergent entrypoints
+//! ([`engine::run`], [`run_distributed`], [`run_distributed_faulty`]) and
+//! re-derived sources, auto-balancer resolution, and result aggregation on
+//! their own. [`Session::run`] is now the single seam: `alb run`,
+//! `alb sweep` cells, and `alb serve` queries all execute through it, which
+//! is what makes the serve layer's parity guarantee checkable — a daemon
+//! reply's `labels_hash` is bit-identical to the batch CLI's for the same
+//! `(app, input, source, config)` because it is literally the same code
+//! path under a different transport.
+//!
+//! Concurrency: [`Session::run`] takes `&self`. The CSC view is built once
+//! at construction (so pull-direction drivers never mutate the graph), the
+//! pool accepts concurrent submitters (DESIGN.md §9), and scratch arenas
+//! are checked out per query and recycled. Results are bit-identical to the
+//! one-shot entrypoints for any number of concurrent callers.
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::apps::engine::{self, EngineConfig, RoundScratch};
+use crate::apps::App;
+use crate::coordinator::{
+    run_distributed, run_distributed_faulty, ClusterConfig, ExecMode, FaultConfig,
+};
+use crate::exec::Pool;
+use crate::graph::{inputs, CsrGraph};
+use crate::lb::{adaptive, Balancer};
+use crate::metrics::labels_hash;
+use crate::partition::Policy;
+use crate::runtime::PjrtRuntime;
+
+/// Version of every machine-readable result this crate emits at request
+/// granularity: the `alb run --json` report and each `alb serve` reply
+/// carry it as `schema_version`. The compatibility rule (DESIGN.md §16):
+/// consumers parse unknown keys as ignorable and absent keys as their
+/// documented defaults, so the version only bumps when an existing key
+/// changes meaning or type. (`alb sweep` artifacts carry their own
+/// [`crate::campaign::artifact::SCHEMA_VERSION`] under the same rule.)
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// The multi-GPU shape of a request; `None` in [`RunRequest::cluster`]
+/// means single-GPU execution through the engine.
+#[derive(Debug, Clone)]
+pub struct ClusterRequest {
+    pub gpus: u32,
+    pub policy: Policy,
+    /// Host topology override; `None` = single host (every GPU intra).
+    pub gpus_per_host: Option<u32>,
+    pub exec: ExecMode,
+}
+
+/// One typed query against a [`Session`]. Every optional field defaults to
+/// the session's base [`EngineConfig`]; the setters below are conveniences
+/// over plain struct update syntax.
+#[derive(Debug, Clone)]
+pub struct RunRequest {
+    pub app: App,
+    /// Source vertex for bfs/sssp; `None` = the input's canonical source
+    /// ([`inputs::source_vertex`]). Ignored (and canonicalized to 0 in the
+    /// reply) for apps that take no source, so result-cache keys built from
+    /// replies collapse equivalent requests.
+    pub source: Option<u32>,
+    /// Balancer override; [`Balancer::Auto`] resolves against the
+    /// session's input name exactly as `alb run` and the campaign do.
+    pub balancer: Option<Balancer>,
+    pub direction_opt: Option<bool>,
+    pub sssp_delta: Option<f32>,
+    pub pr_tol: Option<f32>,
+    pub kcore_k: Option<u32>,
+    /// Per-query round budget (admission control for serve: a runaway
+    /// query stops at the budget with `converged = false`).
+    pub max_rounds: Option<u32>,
+    pub record_blocks: bool,
+    pub cluster: Option<ClusterRequest>,
+    /// Fault plan + checkpoint cadence; multi-GPU only.
+    pub fault: Option<FaultConfig>,
+}
+
+impl RunRequest {
+    pub fn new(app: App) -> RunRequest {
+        RunRequest {
+            app,
+            source: None,
+            balancer: None,
+            direction_opt: None,
+            sssp_delta: None,
+            pr_tol: None,
+            kcore_k: None,
+            max_rounds: None,
+            record_blocks: false,
+            cluster: None,
+            fault: None,
+        }
+    }
+
+    pub fn with_source(mut self, source: u32) -> Self {
+        self.source = Some(source);
+        self
+    }
+
+    pub fn with_balancer(mut self, balancer: Balancer) -> Self {
+        self.balancer = Some(balancer);
+        self
+    }
+
+    pub fn with_max_rounds(mut self, max_rounds: u32) -> Self {
+        self.max_rounds = Some(max_rounds);
+        self
+    }
+}
+
+/// Multi-GPU result fields, present on distributed replies only.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DistReply {
+    pub comp_ms: f64,
+    pub comm_ms: f64,
+    pub comm_bytes: u64,
+    pub comm_bytes_intra: u64,
+    pub comm_bytes_inter: u64,
+    /// Distinct OS threads that ran local compute.
+    pub os_threads: usize,
+    /// Per-GPU host wall-clock (ns) — the one machine-dependent field,
+    /// reported for operator visibility and excluded from every
+    /// deterministic comparison.
+    pub per_gpu_wall_ns: Vec<u64>,
+    pub recoveries: u32,
+    pub replayed_rounds: u64,
+    pub retry_count: u64,
+    pub checkpoint_bytes: u64,
+}
+
+/// A completed query. Everything except [`DistReply::per_gpu_wall_ns`] is
+/// deterministic and machine-independent; `labels_hash` (FNV-1a over the
+/// final labels' f32 bit patterns, 16 hex digits) is the parity gate
+/// between transports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunReply {
+    pub app: App,
+    /// The source the run actually used (resolved + canonicalized).
+    pub source: u32,
+    pub labels_hash: String,
+    pub rounds: u64,
+    pub total_cycles: u64,
+    /// Total edges processed across all rounds (single-GPU runs; 0 for
+    /// cluster runs, whose per-round records track cycles and bytes, not
+    /// edge counts).
+    pub total_edges: u64,
+    pub simulated_ms: f64,
+    pub lb_rounds: u64,
+    pub converged: bool,
+    /// Peak per-kernel thread-block imbalance when `record_blocks` was
+    /// requested (single-GPU), max/mean per-GPU compute cycles
+    /// (multi-GPU); 1.0 otherwise.
+    pub imbalance_factor: f64,
+    /// Inspector threshold after the last round (adaptive single-GPU runs;
+    /// 0 otherwise).
+    pub adaptive_threshold_final: u64,
+    pub dist: Option<DistReply>,
+    /// Final labels (distances / component ids / ranks / core membership).
+    /// Owned by the reply so serve-layer caches can answer top-k and
+    /// per-vertex lookups without re-running.
+    pub labels: Vec<f32>,
+}
+
+/// A loaded graph plus the execution resources every query shares.
+pub struct Session {
+    graph: CsrGraph,
+    input: String,
+    base: EngineConfig,
+    pool: Pool,
+    /// Recycled arenas, checked out per single-GPU query.
+    scratch: Mutex<Vec<RoundScratch>>,
+}
+
+impl Session {
+    /// Prepare `graph` for serving: build the CSC view once (pull-direction
+    /// drivers then never mutate the graph, which is what lets queries run
+    /// concurrently over `&CsrGraph`) and spin up the shared pool sized
+    /// from `base.sim_threads`. `input` is the preset name (or any tag for
+    /// `.albg` files): it drives default-source selection and
+    /// [`Balancer::Auto`] resolution.
+    pub fn new(mut graph: CsrGraph, input: impl Into<String>, base: EngineConfig) -> Session {
+        graph.build_csc();
+        let pool = Pool::new(base.sim_threads.max(1));
+        Session { graph, input: input.into(), base, pool, scratch: Mutex::new(Vec::new()) }
+    }
+
+    pub fn graph(&self) -> &CsrGraph {
+        &self.graph
+    }
+
+    pub fn input(&self) -> &str {
+        &self.input
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.graph.num_vertices()
+    }
+
+    /// The session's base configuration (what a request's `None` fields
+    /// resolve to).
+    pub fn base_config(&self) -> &EngineConfig {
+        &self.base
+    }
+
+    /// Resolve `req` against the session defaults into the exact
+    /// [`EngineConfig`] the run will use.
+    pub fn effective_config(&self, req: &RunRequest) -> EngineConfig {
+        let mut cfg = self.base.clone();
+        if let Some(b) = &req.balancer {
+            cfg = cfg.with_balancer(b.clone());
+        }
+        if matches!(cfg.balancer, Balancer::Auto) {
+            cfg = cfg.with_balancer(adaptive::auto_balancer(req.app.name(), &self.input));
+        }
+        if let Some(d) = req.direction_opt {
+            cfg = cfg.with_direction_opt(d);
+        }
+        if let Some(d) = req.sssp_delta {
+            cfg = cfg.with_sssp_delta(Some(d));
+        }
+        if let Some(t) = req.pr_tol {
+            cfg = cfg.with_pr_tol(t);
+        }
+        if let Some(k) = req.kcore_k {
+            cfg = cfg.with_kcore_k(k);
+        }
+        if let Some(m) = req.max_rounds {
+            cfg = cfg.with_max_rounds(m);
+        }
+        cfg.with_record_blocks(req.record_blocks)
+    }
+
+    /// Resolve and validate the request's source vertex. Apps that take no
+    /// source canonicalize to 0 so equivalent requests share one identity;
+    /// out-of-range explicit sources are a loud error naming the valid
+    /// range (the serve layer forwards it verbatim as a structured error).
+    pub fn resolve_source(&self, req: &RunRequest) -> Result<u32> {
+        let n = self.graph.num_vertices() as u32;
+        if !req.app.needs_source() {
+            return Ok(0);
+        }
+        match req.source {
+            Some(s) if s < n => Ok(s),
+            Some(s) => Err(anyhow!(
+                "source {s} is out of range for {} ({n} vertices); \
+                 valid values: 0..={}",
+                self.input,
+                n.saturating_sub(1)
+            )),
+            None => Ok(inputs::source_vertex(&self.input, &self.graph)),
+        }
+    }
+
+    /// Execute one query. Concurrent callers are safe and results are
+    /// bit-identical to the equivalent one-shot [`engine::run`] /
+    /// [`run_distributed`] / [`run_distributed_faulty`] call — asserted by
+    /// `rust/tests/serve.rs`'s parity matrix.
+    ///
+    /// `pjrt` is per-call (the PJRT client is not `Sync`, so a daemon
+    /// serving concurrent queries passes `None` and computes natively).
+    pub fn run(&self, req: &RunRequest, pjrt: Option<&PjrtRuntime>) -> Result<RunReply> {
+        let cfg = self.effective_config(req);
+        let source = self.resolve_source(req)?;
+        match &req.cluster {
+            None => {
+                if req.fault.is_some() {
+                    return Err(anyhow!(
+                        "fault injection requires a cluster request (gpus > 1); \
+                         the fault model covers the distributed exchange"
+                    ));
+                }
+                self.run_single(req.app, source, &cfg, pjrt)
+            }
+            Some(cluster) => self.run_cluster(req, cluster, source, &cfg, pjrt),
+        }
+    }
+
+    fn run_single(
+        &self,
+        app: App,
+        source: u32,
+        cfg: &EngineConfig,
+        pjrt: Option<&PjrtRuntime>,
+    ) -> Result<RunReply> {
+        let mut scratch =
+            self.scratch.lock().unwrap_or_else(|e| e.into_inner()).pop().unwrap_or_default();
+        let run = engine::run_prepared(
+            app, &self.graph, source, cfg, pjrt, &self.pool, &mut scratch,
+        )?;
+        // Recycle the arena only on success; an errored run's scratch is
+        // dropped so a poisoned buffer can never leak into the next query.
+        self.scratch.lock().unwrap_or_else(|e| e.into_inner()).push(scratch);
+
+        let imbalance_factor = run
+            .rounds
+            .iter()
+            .flat_map(|rec| rec.kernels.iter().flatten())
+            .map(|k| k.imbalance_factor())
+            .fold(1.0f64, f64::max);
+        let adaptive_threshold_final = run
+            .rounds
+            .last()
+            .and_then(|rec| rec.adaptive.as_ref())
+            .map(|a| a.threshold)
+            .unwrap_or(0);
+        Ok(RunReply {
+            app,
+            source,
+            labels_hash: format!("{:016x}", labels_hash(&run.labels)),
+            rounds: run.rounds.len() as u64,
+            total_cycles: run.total_cycles,
+            total_edges: run.total_edges(),
+            simulated_ms: run.ms(&cfg.spec),
+            lb_rounds: run.rounds_with_lb() as u64,
+            converged: run.converged,
+            imbalance_factor,
+            adaptive_threshold_final,
+            dist: None,
+            labels: run.labels,
+        })
+    }
+
+    fn run_cluster(
+        &self,
+        req: &RunRequest,
+        cluster: &ClusterRequest,
+        source: u32,
+        cfg: &EngineConfig,
+        pjrt: Option<&PjrtRuntime>,
+    ) -> Result<RunReply> {
+        let cc = ClusterConfig::new(
+            cluster.gpus,
+            cluster.policy,
+            cluster.gpus_per_host,
+            cluster.exec,
+        );
+        let run = match &req.fault {
+            Some(fc) => run_distributed_faulty(
+                req.app, &self.graph, source, cfg, &cc, pjrt, fc,
+            )?,
+            None => run_distributed(req.app, &self.graph, source, cfg, &cc, pjrt)?,
+        };
+        let max = run.per_gpu_comp.iter().copied().max().unwrap_or(0) as f64;
+        let sum: u64 = run.per_gpu_comp.iter().sum();
+        let mean = sum as f64 / run.per_gpu_comp.len().max(1) as f64;
+        Ok(RunReply {
+            app: req.app,
+            source,
+            labels_hash: format!("{:016x}", labels_hash(&run.labels)),
+            rounds: run.rounds.len() as u64,
+            total_cycles: run.total_cycles,
+            total_edges: 0,
+            simulated_ms: run.ms(&cfg.spec),
+            lb_rounds: run.rounds.iter().filter(|rec| rec.lb_gpus > 0).count() as u64,
+            converged: run.converged,
+            imbalance_factor: if mean > 0.0 { max / mean } else { 1.0 },
+            adaptive_threshold_final: 0,
+            dist: Some(DistReply {
+                comp_ms: run.comp_ms(&cfg.spec),
+                comm_ms: run.comm_ms(&cfg.spec),
+                comm_bytes: run.comm_bytes,
+                comm_bytes_intra: run.comm_bytes_intra,
+                comm_bytes_inter: run.comm_bytes_inter,
+                os_threads: run.num_threads(),
+                per_gpu_wall_ns: run.per_gpu_wall_ns.clone(),
+                recoveries: run.recoveries,
+                replayed_rounds: run.replayed_rounds,
+                retry_count: run.retry_count,
+                checkpoint_bytes: run.checkpoint_bytes,
+            }),
+            labels: run.labels,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::rmat::{self, RmatConfig};
+
+    fn rmat(scale: u32, seed: u64) -> CsrGraph {
+        CsrGraph::from_edge_list(&rmat::generate(&RmatConfig::paper(scale, seed)))
+    }
+
+    #[test]
+    fn session_matches_one_shot_engine() {
+        let g = rmat(10, 21);
+        let src = g.max_out_degree_vertex();
+        let sess = Session::new(g.clone(), "rmat18", EngineConfig::default());
+        for app in [App::Bfs, App::Sssp, App::Cc, App::Pr, App::Kcore] {
+            let reply = sess.run(&RunRequest::new(app).with_source(src), None).unwrap();
+            let direct =
+                engine::run(app, &mut g.clone(), src, &EngineConfig::default(), None)
+                    .unwrap();
+            assert_eq!(reply.labels, direct.labels, "{}", app.name());
+            assert_eq!(reply.rounds, direct.rounds.len() as u64);
+            assert_eq!(reply.total_cycles, direct.total_cycles);
+            assert_eq!(reply.converged, direct.converged);
+            assert_eq!(
+                reply.labels_hash,
+                format!("{:016x}", labels_hash(&direct.labels))
+            );
+        }
+    }
+
+    #[test]
+    fn scratch_recycles_across_queries() {
+        let g = rmat(9, 22);
+        let src = g.max_out_degree_vertex();
+        let sess = Session::new(g, "rmat18", EngineConfig::default());
+        let first = sess.run(&RunRequest::new(App::Bfs).with_source(src), None).unwrap();
+        assert_eq!(sess.scratch.lock().unwrap().len(), 1, "arena returned to pool");
+        let second = sess.run(&RunRequest::new(App::Bfs).with_source(src), None).unwrap();
+        assert_eq!(first, second, "recycled arena must not perturb results");
+        // A different app through the same arena.
+        let k1 = sess.run(&RunRequest::new(App::Kcore), None).unwrap();
+        let k2 = sess.run(&RunRequest::new(App::Kcore), None).unwrap();
+        assert_eq!(k1, k2);
+        assert_eq!(sess.scratch.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn out_of_range_source_is_a_loud_error() {
+        let g = rmat(8, 23);
+        let n = g.num_vertices() as u32;
+        let sess = Session::new(g, "rmat18", EngineConfig::default());
+        let err = sess
+            .run(&RunRequest::new(App::Bfs).with_source(n + 7), None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("valid values"), "error names the range: {err}");
+        // Non-source apps canonicalize any in-range-or-absent source to 0.
+        let r = sess.run(&RunRequest::new(App::Pr), None).unwrap();
+        assert_eq!(r.source, 0);
+    }
+
+    #[test]
+    fn cluster_request_matches_run_distributed() {
+        let g = rmat(9, 24);
+        let src = g.max_out_degree_vertex();
+        let sess = Session::new(g.clone(), "rmat18", EngineConfig::default());
+        let req = RunRequest {
+            cluster: Some(ClusterRequest {
+                gpus: 4,
+                policy: Policy::Cvc,
+                gpus_per_host: None,
+                exec: ExecMode::Parallel,
+            }),
+            ..RunRequest::new(App::Bfs).with_source(src)
+        };
+        let reply = sess.run(&req, None).unwrap();
+        let cc = ClusterConfig::new(4, Policy::Cvc, None, ExecMode::Parallel);
+        let direct =
+            run_distributed(App::Bfs, &g, src, &EngineConfig::default(), &cc, None)
+                .unwrap();
+        assert_eq!(reply.labels, direct.labels);
+        assert_eq!(reply.total_cycles, direct.total_cycles);
+        let d = reply.dist.expect("cluster replies carry dist stats");
+        assert_eq!(d.comm_bytes, direct.comm_bytes);
+        assert!(d.comm_bytes > 0);
+    }
+
+    #[test]
+    fn concurrent_queries_are_bit_identical_to_serial() {
+        let g = rmat(9, 25);
+        let src = g.max_out_degree_vertex();
+        let sess = Session::new(g, "rmat18", EngineConfig::default());
+        let apps = [App::Bfs, App::Sssp, App::Pr, App::Kcore];
+        let serial: Vec<RunReply> = apps
+            .iter()
+            .map(|&a| sess.run(&RunRequest::new(a).with_source(src), None).unwrap())
+            .collect();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|i| {
+                    let sess = &sess;
+                    s.spawn(move || {
+                        let app = apps[i % apps.len()];
+                        sess.run(&RunRequest::new(app).with_source(src), None).unwrap()
+                    })
+                })
+                .collect();
+            for (i, h) in handles.into_iter().enumerate() {
+                assert_eq!(h.join().unwrap(), serial[i % apps.len()]);
+            }
+        });
+    }
+}

@@ -49,8 +49,9 @@ fn run_single_gpu_json_schema() {
         keys_at(&json, 1),
         [
             "app", "converged", "edges", "framework", "gpu_spec", "gpus",
-            "graph_cache_hit", "input", "lb_rounds", "reorder", "rounds",
-            "seed", "sim_threads", "simulated_ms",
+            "graph_cache_hit", "input", "labels_hash", "lb_rounds", "reorder",
+            "rounds", "schema_version", "seed", "sim_threads", "simulated_ms",
+            "source",
         ],
         "single-GPU `alb run --json` schema drifted"
     );
@@ -75,9 +76,10 @@ fn run_multi_gpu_json_schema() {
             "app", "checkpoint_bytes", "comm_bytes", "comm_bytes_inter",
             "comm_bytes_intra", "comm_ms", "comp_ms", "converged", "exec",
             "framework", "gpu_spec", "gpus", "graph_cache_hit", "input",
-            "os_threads", "per_gpu_wall_ms", "policy", "recoveries",
-            "reorder", "replayed_rounds", "retry_count", "rounds", "seed",
-            "sim_threads", "simulated_ms",
+            "labels_hash", "os_threads", "per_gpu_wall_ms", "policy",
+            "recoveries", "reorder", "replayed_rounds", "retry_count",
+            "rounds", "schema_version", "seed", "sim_threads", "simulated_ms",
+            "source",
         ],
         "multi-GPU `alb run --json` schema drifted"
     );
@@ -217,6 +219,41 @@ fn invalid_values_exit_nonzero_with_valid_range() {
     );
     // The sweep fault axis only takes named presets (ids must stay stable).
     expect_failure(&["sweep", "--smoke", "--faults", "bogus"], "gpu-death");
+    // `alb run --max-rounds` names the accepted range.
+    expect_failure(
+        &["run", "--app", "bfs", "--input", "road-s", "--scale-delta", "-4",
+          "--max-rounds", "0"],
+        "1..=4294967295",
+    );
+}
+
+#[test]
+fn serve_invalid_values_exit_nonzero_with_valid_range() {
+    // Every serve flag fails CLI-grade: the error names the full valid set.
+    expect_failure(&["serve"], "valid presets");
+    expect_failure(
+        &["serve", "--graph", "road-s", "--port", "70000"],
+        "0..=65535",
+    );
+    expect_failure(
+        &["serve", "--graph", "road-s", "--max-inflight", "0"],
+        "1..=1024",
+    );
+    expect_failure(
+        &["serve", "--graph", "road-s", "--cache-entries", "9999999"],
+        "0..=1048576",
+    );
+    expect_failure(
+        &["serve", "--graph", "road-s", "--max-rounds", "abc"],
+        "1..=4294967295",
+    );
+    expect_failure(
+        &["serve", "--graph", "road-s", "--balancer", "bogus"],
+        "vertex, twc, edge-lb, alb, enterprise, adaptive, auto",
+    );
+    expect_failure(&["serve", "--graph", "road-s", "--gpu-spec", "bogus"], "sim-default");
+    expect_failure(&["serve", "--graph", "road-s", "--framework", "bogus"], "dirgl-alb");
+    expect_failure(&["serve", "--graph", "road-s", "--sim-threads", "0"], "1..=512");
 }
 
 // ------------------------------------------------------- adaptive gate

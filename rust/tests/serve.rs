@@ -1,0 +1,414 @@
+//! `alb serve` integration: protocol abuse over real TCP sockets, cache
+//! byte-identity, deterministic coalescing, the batch-vs-serve parity
+//! matrix (a served `labels_hash` must be bit-identical to `alb run` for
+//! the same query), and the multi-client soak (EXPERIMENTS.md, DESIGN.md
+//! §16). Everything runs against an ephemeral-port daemon per test, so
+//! tests parallelize freely.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::process::Command;
+
+use alb_graph::config::Framework;
+use alb_graph::gpu::GpuSpec;
+use alb_graph::graph::inputs;
+use alb_graph::serve::{ServeOpts, Server, ServerHandle};
+use alb_graph::session::Session;
+
+const DELTA: i32 = -4; // small but non-trivial inputs for CI
+const SEED: u64 = 42;
+
+/// The exact session `alb serve --graph <input> --scale-delta -4` builds:
+/// default framework + spec, pinned worker count so parity against the CLI
+/// is apples-to-apples.
+fn session(input: &'static str) -> Session {
+    let g = inputs::build(input, DELTA, SEED).unwrap();
+    let fw = Framework::parse("dirgl-alb").unwrap();
+    let spec = GpuSpec::by_name("sim-default").unwrap();
+    Session::new(g, input, fw.engine_config(spec).with_sim_threads(2))
+}
+
+fn spawn(input: &'static str, opts: ServeOpts) -> ServerHandle {
+    Server::spawn(session(input), opts, 0).unwrap()
+}
+
+/// One line-delimited-JSON client connection.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(h: &ServerHandle) -> Client {
+        let s = TcpStream::connect(h.addr()).unwrap();
+        Client { reader: BufReader::new(s.try_clone().unwrap()), writer: s }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.writer, "{line}").unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    /// Read one reply line; empty string on a closed connection.
+    fn recv(&mut self) -> String {
+        let mut s = String::new();
+        self.reader.read_line(&mut s).unwrap();
+        s.trim_end().to_string()
+    }
+
+    fn round_trip(&mut self, line: &str) -> String {
+        self.send(line);
+        self.recv()
+    }
+}
+
+/// Extract a scalar field from a compact reply. Only valid for
+/// non-object values (fine for everything but `result`).
+fn field(json: &str, key: &str) -> String {
+    let pat = format!("\"{key}\":");
+    let start = json
+        .find(&pat)
+        .unwrap_or_else(|| panic!("{key} missing in {json}"))
+        + pat.len();
+    let rest = &json[start..];
+    let end = rest
+        .find([',', '}'])
+        .unwrap_or_else(|| panic!("unterminated {key} in {json}"));
+    rest[..end].trim_matches('"').to_string()
+}
+
+fn field_u64(json: &str, key: &str) -> u64 {
+    field(json, key).parse().unwrap()
+}
+
+// --------------------------------------------------------- protocol abuse
+
+#[test]
+fn protocol_errors_are_structured_and_the_session_survives() {
+    let h = spawn("road-s", ServeOpts::default());
+    let mut c = Client::connect(&h);
+    for (bad, needle) in [
+        ("{not json", "error"),
+        (r#"{"app":"zzz"}"#, "valid values"),
+        (r#"{"op":"bogus","app":"bfs"}"#, "valid values"),
+        (r#"{"app":"bfs","frobnicate":1}"#, "valid fields"),
+        (r#"{"app":"bfs","source":4000000000}"#, "out of range"),
+        (r#"{"app":"bfs","vertex":4000000000}"#, "out of range"),
+        (r#"{"app":"bfs","k":0}"#, "valid values"),
+        (r#"{"app":"bfs","max_rounds":4000000000}"#, "budget"),
+        (r#"[1,2,3]"#, "object"),
+    ] {
+        let reply = c.round_trip(bad);
+        assert_eq!(field(&reply, "status"), "error", "{bad} -> {reply}");
+        assert!(reply.contains(needle), "{bad} -> {reply}");
+        assert!(reply.contains("\"schema_version\""), "{reply}");
+    }
+    // The same connection — and the shared session behind it — still
+    // answers correctly after every abuse above.
+    let ok = c.round_trip(r#"{"app":"bfs","source":0}"#);
+    assert_eq!(field(&ok, "status"), "ok", "{ok}");
+    assert_eq!(field(&ok, "cache"), "miss", "{ok}");
+    let stats = c.round_trip(r#"{"op":"stats"}"#);
+    assert_eq!(field_u64(&stats, "errors"), 9, "{stats}");
+    assert_eq!(field_u64(&stats, "executed"), 1, "{stats}");
+    h.stop();
+}
+
+#[test]
+fn oversized_line_gets_an_error_then_close() {
+    let h = spawn("road-s", ServeOpts::default());
+    let mut c = Client::connect(&h);
+    let huge = format!("{}{}", r#"{"app":"bfs","id":""#, "x".repeat(70 * 1024));
+    c.send(&huge);
+    let reply = c.recv();
+    assert_eq!(field(&reply, "status"), "error", "{reply}");
+    assert!(reply.contains("bytes"), "{reply}");
+    // The stream cannot be resynchronized: the server closes it.
+    assert_eq!(c.recv(), "", "connection should be closed after oversize");
+    // A fresh connection is unaffected.
+    let mut c2 = Client::connect(&h);
+    let ok = c2.round_trip(r#"{"app":"bfs","source":0}"#);
+    assert_eq!(field(&ok, "status"), "ok", "{ok}");
+    h.stop();
+}
+
+#[test]
+fn mid_request_disconnect_is_a_clean_drop() {
+    let h = spawn("road-s", ServeOpts::default());
+    {
+        let mut s = TcpStream::connect(h.addr()).unwrap();
+        // A partial request with no newline, then a dead client.
+        s.write_all(b"{\"app\":\"bfs\",\"sour").unwrap();
+        s.flush().unwrap();
+        let _ = s.shutdown(std::net::Shutdown::Both);
+    }
+    // The partial line is dropped, never half-parsed: no error is counted
+    // and the shared session still serves the next client.
+    let mut c = Client::connect(&h);
+    let ok = c.round_trip(r#"{"app":"bfs","source":0}"#);
+    assert_eq!(field(&ok, "status"), "ok", "{ok}");
+    let stats = c.round_trip(r#"{"op":"stats"}"#);
+    assert_eq!(field_u64(&stats, "errors"), 0, "{stats}");
+    h.stop();
+}
+
+// ------------------------------------------------------- cache byte-identity
+
+#[test]
+fn cache_hit_is_byte_identical_over_tcp() {
+    let h = spawn("road-s", ServeOpts::default());
+    let mut c = Client::connect(&h);
+    let line = r#"{"app":"sssp","source":0}"#;
+    let cold = c.round_trip(line);
+    let hit = c.round_trip(line);
+    assert_eq!(field(&cold, "cache"), "miss", "{cold}");
+    assert_eq!(field(&hit, "cache"), "hit", "{hit}");
+    assert_eq!(
+        cold.replace("\"cache\":\"miss\"", "\"cache\":\"hit\""),
+        hit,
+        "a cache hit must be byte-identical apart from the cache field"
+    );
+    // Equivalent spellings share one cache line: an explicit default is
+    // the same identity as an omitted field.
+    let respelled = c.round_trip(r#"{"app":"sssp","source":0,"op":"query"}"#);
+    assert_eq!(field(&respelled, "cache"), "hit", "{respelled}");
+    h.stop();
+}
+
+// ------------------------------------------------------------- parity gate
+
+/// The acceptance gate: a served query's `labels_hash` is bit-identical to
+/// `alb run` on the same graph/app/source, across every app. Both sides run
+/// the identical Session path; this pins the whole transport stack
+/// (protocol parse -> effective config -> execution -> render) to the
+/// batch CLI.
+#[test]
+fn serve_matches_alb_run_bit_for_bit() {
+    let h = spawn("road-s", ServeOpts::default());
+    let mut c = Client::connect(&h);
+    for app in ["bfs", "sssp", "cc", "pr", "kcore"] {
+        let path = std::env::temp_dir()
+            .join(format!("alb-serve-parity-{}-{app}.json", std::process::id()));
+        let out = Command::new(env!("CARGO_BIN_EXE_alb"))
+            .args([
+                "run", "--app", app, "--input", "road-s", "--scale-delta", "-4",
+                "--sim-threads", "2", "--json", path.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let run_json = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let want_hash = run_json
+            .lines()
+            .find_map(|l| l.trim().strip_prefix("\"labels_hash\": \""))
+            .and_then(|rest| rest.split('"').next())
+            .unwrap_or_else(|| panic!("no labels_hash in {run_json}"))
+            .to_string();
+        let want_source: u32 = run_json
+            .lines()
+            .find_map(|l| l.trim().strip_prefix("\"source\": "))
+            .map(|rest| rest.trim_end_matches(',').parse().unwrap())
+            .unwrap();
+
+        // An omitted source resolves to the same paper policy `alb run`
+        // uses, so the minimal query is already the parity twin.
+        let reply = c.round_trip(&format!(r#"{{"app":"{app}"}}"#));
+        assert_eq!(field(&reply, "status"), "ok", "{reply}");
+        assert_eq!(
+            field(&reply, "labels_hash"),
+            want_hash,
+            "{app}: serve hash != alb run hash ({reply})"
+        );
+        assert_eq!(field_u64(&reply, "source"), u64::from(want_source), "{reply}");
+    }
+    h.stop();
+}
+
+/// Source matrix: for arbitrary explicit sources the daemon must agree
+/// with a direct in-process `Session::run` (the same API `alb run` sits
+/// on), query after query on one long-lived server.
+#[test]
+fn serve_matches_session_across_sources() {
+    use alb_graph::apps::App;
+    use alb_graph::session::RunRequest;
+
+    let reference = session("rmat18");
+    let h = spawn("rmat18", ServeOpts::default());
+    let mut c = Client::connect(&h);
+    for app in [App::Bfs, App::Sssp] {
+        for src in [0u32, 5, 17, 1023] {
+            let req = RunRequest::new(app).with_source(src);
+            let want = reference.run(&req, None).unwrap();
+            let reply = c.round_trip(&format!(
+                r#"{{"app":"{}","source":{src}}}"#,
+                app.name()
+            ));
+            assert_eq!(field(&reply, "status"), "ok", "{reply}");
+            assert_eq!(
+                field(&reply, "labels_hash"),
+                want.labels_hash,
+                "{} source {src}: serve != session ({reply})",
+                app.name()
+            );
+        }
+    }
+    h.stop();
+}
+
+// ------------------------------------------------------------- coalescing
+
+/// Deterministic coalesce: with one admission slot and the cache disabled,
+/// a long query holds the slot, a second key's leader blocks at admission
+/// (its flight is registered *before* admission, which is the property
+/// under test), and a third same-key arrival joins that flight instead of
+/// executing.
+#[test]
+fn same_key_arrivals_coalesce_onto_a_blocked_leader() {
+    let h = spawn(
+        "rmat18",
+        ServeOpts { max_inflight: 1, cache_entries: 0, ..ServeOpts::default() },
+    );
+    let mut stats = Client::connect(&h);
+
+    // Qa: a full PageRank solve — long enough to hold the only slot for
+    // the whole (microsecond-scale) choreography below.
+    let mut ca = Client::connect(&h);
+    ca.send(r#"{"app":"pr","id":"qa"}"#);
+    while field_u64(&stats.round_trip(r#"{"op":"stats"}"#), "pending") < 1 {
+        std::thread::yield_now();
+    }
+
+    // Qb's leader: registers its flight, then blocks at admission.
+    let mut cb = Client::connect(&h);
+    cb.send(r#"{"app":"bfs","source":3,"id":"qb-leader"}"#);
+    while field_u64(&stats.round_trip(r#"{"op":"stats"}"#), "pending") < 2 {
+        std::thread::yield_now();
+    }
+
+    // Qb again: must join the blocked leader's flight — with the cache
+    // off, `coalesced` is the only way this reply avoids a third run.
+    let mut cc = Client::connect(&h);
+    let joined = cc.round_trip(r#"{"app":"bfs","source":3,"id":"qb-join"}"#);
+    assert_eq!(field(&joined, "cache"), "coalesced", "{joined}");
+    assert_eq!(field(&joined, "id"), "qb-join", "{joined}");
+
+    let lead = cb.recv();
+    assert_eq!(field(&lead, "cache"), "miss", "{lead}");
+    assert_eq!(
+        field(&lead, "labels_hash"),
+        field(&joined, "labels_hash"),
+        "coalesced reply must carry the leader's result"
+    );
+    let qa = ca.recv();
+    assert_eq!(field(&qa, "cache"), "miss", "{qa}");
+
+    let final_stats = stats.round_trip(r#"{"op":"stats"}"#);
+    assert_eq!(field_u64(&final_stats, "queries"), 3, "{final_stats}");
+    assert_eq!(field_u64(&final_stats, "executed"), 2, "{final_stats}");
+    assert_eq!(field_u64(&final_stats, "coalesced"), 1, "{final_stats}");
+    assert_eq!(field_u64(&final_stats, "cache_hits"), 0, "{final_stats}");
+    assert_eq!(field_u64(&final_stats, "pending"), 0, "{final_stats}");
+    h.stop();
+}
+
+// -------------------------------------------------------------------- soak
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The soak: 8 concurrent clients x 20 rounds each, a deterministic
+/// seeded schedule mixing all five apps over four sources. Asserts, from
+/// reply metadata and the stats counters alone:
+///
+/// * every reply is `ok` with a well-formed `cache` status and a
+///   round-tripped `id`;
+/// * `labels_hash` is consistent per (app, resolved source) across all
+///   160 replies — concurrency never changes an answer;
+/// * `executed` == the number of distinct query identities (the
+///   cache-before-flight-retire ordering makes this an equality, not a
+///   bound);
+/// * `executed + cache_hits + coalesced == queries` with zero errors;
+/// * the cache demonstrably served repeats (`cache_hits >= 1` — each
+///   sequential client repeats a key it already completed, which by then
+///   must be cached).
+#[test]
+fn soak_eight_clients_mixed_apps_and_sources() {
+    const CLIENTS: u64 = 8;
+    const ROUNDS: usize = 20;
+    const APPS: [&str; 5] = ["bfs", "sssp", "cc", "pr", "kcore"];
+    const SOURCES: [u32; 4] = [0, 3, 11, 29];
+
+    let h = spawn("rmat18", ServeOpts::default());
+    let addr = h.addr();
+    let mut workers = Vec::new();
+    for client in 0..CLIENTS {
+        workers.push(std::thread::spawn(move || {
+            let s = TcpStream::connect(addr).unwrap();
+            let mut c =
+                Client { reader: BufReader::new(s.try_clone().unwrap()), writer: s };
+            let mut rng = SEED ^ (client.wrapping_mul(0x9E37_79B9));
+            let mut hashes: BTreeMap<String, String> = BTreeMap::new();
+            for round in 0..ROUNDS {
+                let r = splitmix64(&mut rng);
+                let app = APPS[(r % 5) as usize];
+                let src = SOURCES[((r >> 8) % 4) as usize];
+                let id = format!("c{client}-r{round}");
+                let reply = c.round_trip(&format!(
+                    r#"{{"app":"{app}","source":{src},"id":"{id}"}}"#
+                ));
+                assert_eq!(field(&reply, "status"), "ok", "{reply}");
+                assert_eq!(field(&reply, "id"), id, "{reply}");
+                let cache = field(&reply, "cache");
+                assert!(
+                    ["miss", "hit", "coalesced"].contains(&cache.as_str()),
+                    "{reply}"
+                );
+                // Key by the *resolved* source: sourceless apps
+                // canonicalize, so their four spellings must land on one
+                // identity (and therefore one hash).
+                let key = format!("{app}|{}", field(&reply, "source"));
+                hashes.insert(key, field(&reply, "labels_hash"));
+            }
+            hashes
+        }));
+    }
+
+    let mut merged: BTreeMap<String, String> = BTreeMap::new();
+    for w in workers {
+        for (key, hash) in w.join().unwrap() {
+            if let Some(prev) = merged.get(&key) {
+                assert_eq!(prev, &hash, "{key}: hash diverged across clients");
+            }
+            merged.insert(key, hash);
+        }
+    }
+
+    let mut c = Client::connect(&h);
+    let stats = c.round_trip(r#"{"op":"stats"}"#);
+    let queries = field_u64(&stats, "queries");
+    let executed = field_u64(&stats, "executed");
+    let cache_hits = field_u64(&stats, "cache_hits");
+    let coalesced = field_u64(&stats, "coalesced");
+    assert_eq!(queries, CLIENTS * ROUNDS as u64, "{stats}");
+    assert_eq!(field_u64(&stats, "errors"), 0, "{stats}");
+    assert_eq!(field_u64(&stats, "pending"), 0, "{stats}");
+    assert_eq!(
+        executed,
+        merged.len() as u64,
+        "each distinct identity executes exactly once ({stats})"
+    );
+    assert_eq!(
+        executed + cache_hits + coalesced,
+        queries,
+        "counter invariant broken ({stats})"
+    );
+    assert!(cache_hits >= 1, "repeats never hit the cache ({stats})");
+    h.stop();
+}
